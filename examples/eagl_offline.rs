@@ -1,0 +1,69 @@
+//! EAGL offline (paper Fig. 2): weight-code histograms and entropies for
+//! three layers of a checkpoint — the "which layers compress further?"
+//! picture, computed without any training data (EAGL's headline property).
+//!
+//! ```bash
+//! cargo run --release --example eagl_offline            # init checkpoint
+//! MPQ_CKPT=results/qresnet20/base4.ckpt cargo run ...    # trained one
+//! ```
+
+use mpq::ckpt::Checkpoint;
+use mpq::eagl;
+use mpq::graph::Graph;
+use mpq::quant::weight_codes;
+use mpq::runtime::Runtime;
+
+fn ascii_hist(codes: &[i32], bits: u32) -> String {
+    let n_bins = 1usize << bits;
+    let qn = -(1i64 << (bits - 1)) as i32;
+    let mut hist = vec![0usize; n_bins];
+    for &c in codes {
+        hist[(c - qn) as usize] += 1;
+    }
+    let max = *hist.iter().max().unwrap_or(&1);
+    let mut s = String::new();
+    for (i, &h) in hist.iter().enumerate() {
+        let bar = "#".repeat((h * 40 / max.max(1)).max(usize::from(h > 0)));
+        s += &format!("  {:>4} | {:<40} {}\n", qn + i as i32, bar, h);
+    }
+    s
+}
+
+fn main() -> mpq::Result<()> {
+    let model = std::env::var("MPQ_MODEL").unwrap_or_else(|_| "qresnet20".into());
+    let artifacts = mpq::artifacts_dir();
+    let graph = Graph::load(&artifacts, &model)?;
+    let ck = match std::env::var("MPQ_CKPT") {
+        Ok(p) => Checkpoint::load(std::path::Path::new(&p))?,
+        Err(_) => Runtime::load(&artifacts, &model)?.init_checkpoint()?,
+    };
+
+    let t0 = std::time::Instant::now();
+    let ents = eagl::checkpoint_entropies(&graph, &ck, 4)?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    // Fig. 2 shows three layers spanning the entropy range: pick min,
+    // median, max among selectable layers.
+    let mut sel: Vec<&mpq::graph::Layer> =
+        graph.layers.iter().filter(|l| l.fixed_bits.is_none()).collect();
+    sel.sort_by(|a, b| ents[a.qindex].partial_cmp(&ents[b.qindex]).unwrap());
+    let picks = [sel[0], sel[sel.len() / 2], sel[sel.len() - 1]];
+
+    println!("EAGL on {model}: {} layers scored in {:.3} ms (Table 3's 'CPU seconds' scale)\n", graph.layers.len(), dt * 1e3);
+    for layer in picks {
+        let base = layer.name.replace('.', "/");
+        let w = ck.get(&format!("{base}/w")).unwrap();
+        let s = ck.get(&format!("{base}/sw")).unwrap().item();
+        let codes = weight_codes(w.f32s(), s.abs().max(1e-8), 4);
+        println!(
+            "layer {}  —  H = {:.4} bits (allocated 4)  →  {}",
+            layer.name,
+            ents[layer.qindex],
+            if ents[layer.qindex] < 2.5 { "good candidate for 2-bit" } else { "keep at 4-bit" }
+        );
+        print!("{}", ascii_hist(&codes, 4));
+        println!();
+    }
+    println!("EAGL prediction: quantize low-entropy layers first (paper §3.3).");
+    Ok(())
+}

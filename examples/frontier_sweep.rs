@@ -1,0 +1,62 @@
+//! Frontier sweep driver: the paper's Fig. 3/4/5 protocol as a
+//! configurable batch job with resume.
+//!
+//! Runs (methods × budgets × seeds) fine-tune+eval experiments for one
+//! model, appending to the JSONL store so interrupted sweeps pick up where
+//! they left off, then prints the frontier table, ASCII plot, and Wilcoxon
+//! significance of EAGL/ALPS vs the comparators.
+//!
+//! ```bash
+//! cargo run --release --example frontier_sweep -- \
+//!     --model qsegnet --budgets 0.95,0.85,0.75,0.65 --seeds 3 \
+//!     --methods eagl,alps,hawq_v3,first_to_last --ft-steps 120
+//! ```
+
+use mpq::cli::Args;
+use mpq::coordinator::{Coordinator, ResultStore};
+use mpq::methods::MethodKind;
+use mpq::report;
+use mpq::runtime::Task;
+
+fn main() -> mpq::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let model = args.str("model", "qsegnet");
+    let artifacts = mpq::artifacts_dir();
+    let mut co = Coordinator::new(&artifacts, &model, args.u64("data-seed", 7)?)?;
+    co.base_steps = args.usize("base-steps", 300)?;
+    co.ft_steps = args.usize("ft-steps", 100)?;
+    co.eval_batches = args.usize("eval-batches", 4)?;
+    co.mcfg.alps_steps = args.usize("alps-steps", 15)?;
+    co.mcfg.hawq_samples = args.usize("hawq-samples", 2)?;
+    co.mcfg.hawq_batches = args.usize("hawq-batches", 2)?;
+
+    let kinds: Vec<MethodKind> = args
+        .list("methods", &["eagl", "alps", "hawq_v3", "uniform", "first_to_last"])
+        .iter()
+        .map(|s| MethodKind::parse(s))
+        .collect::<mpq::Result<_>>()?;
+    let budgets = args.f64_list("budgets", &[0.95, 0.85, 0.75, 0.65])?;
+    let seeds: Vec<u64> = (0..args.u64("seeds", 3)?).collect();
+
+    let metric = match co.rt.manifest.task {
+        Task::Cls => "top-1",
+        Task::Seg => "mIoU",
+        Task::Span => "F1",
+    };
+
+    let store_path = co.results_dir.join("sweep.jsonl");
+    let mut store = ResultStore::open(&store_path)?;
+    let records = co.sweep(&kinds, &budgets, &seeds, &mut store)?;
+
+    let cells = report::frontier(&records);
+    println!("{}", report::frontier_table(&cells, metric));
+    println!("{}", report::frontier_plot(&cells, 64, 16));
+    for (a, b) in [("eagl", "hawq_v3"), ("alps", "hawq_v3"), ("eagl", "first_to_last")] {
+        let sig = report::significance(&cells, a, b);
+        for (budget, p) in sig {
+            println!("Wilcoxon {a} vs {b} @ {:>3.0}%: p = {:.4}", budget * 100.0, p);
+        }
+    }
+    report::write_csv(&cells, &co.results_dir.join("frontier.csv"))?;
+    Ok(())
+}

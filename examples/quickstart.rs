@@ -1,0 +1,61 @@
+//! Quickstart: the EAGL → knapsack pipeline in ~30 lines, no training.
+//!
+//! Loads the qresnet20 artifacts, scores every layer with the EAGL entropy
+//! metric (Algorithm 2 — needs only the checkpoint), and solves the 0-1
+//! knapsack at a 70% compute budget to choose per-layer 2/4-bit precisions.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use mpq::eagl;
+use mpq::graph::Graph;
+use mpq::knapsack;
+use mpq::quant::{self, BitsConfig};
+use mpq::runtime::Runtime;
+
+fn main() -> mpq::Result<()> {
+    let artifacts = mpq::artifacts_dir();
+    let model = "qresnet20";
+
+    // The layer table (costs, link groups, fixed-precision rules).
+    let graph = Graph::load(&artifacts, model)?;
+    let rt = Runtime::load(&artifacts, model)?;
+    let ckpt = rt.init_checkpoint()?; // or any trained checkpoint
+
+    // 1. EAGL gains: entropy of each layer's quantized weight distribution.
+    let gains = eagl::checkpoint_entropies(&graph, &ckpt, 4)?;
+
+    // 2. Knapsack at 70% of the all-4-bit budget.
+    let budget = graph.budget_at(0.70, 4);
+    let group_gains = graph.aggregate_by_group(&gains);
+    let weights = graph.group_weights(4, 2);
+    let sel = knapsack::select_layers(&group_gains, &weights, budget - graph.base_bmacs(2));
+    let bits = BitsConfig::from_selection(&graph, &sel.selected, 4, 2);
+
+    // 3. Inspect the result.
+    println!("{model} @ 70% budget — EAGL selection:\n");
+    println!("{:<16} {:>8} {:>6}", "layer", "H(bits)", "bits");
+    for l in &graph.layers {
+        println!(
+            "{:<16} {:>8.3} {:>6}",
+            l.name,
+            gains[l.qindex],
+            if l.fixed_bits.is_some() {
+                format!("{}*", bits.bits[l.qindex])
+            } else {
+                bits.bits[l.qindex].to_string()
+            }
+        );
+    }
+    println!("\n(* = fixed by §3.4.1 rules; not selectable)");
+    println!(
+        "compression {:.2}x  |  {:.4} GBOPs  |  {} of {} groups at 2-bit",
+        quant::compression_ratio(&graph, &bits),
+        quant::gbops(&graph, &bits),
+        bits.count_at(&graph, 2),
+        graph.groups.len(),
+    );
+    println!("\nNext: `mpq run --model {model} --method eagl --budget 0.7` fine-tunes this network.");
+    Ok(())
+}

@@ -1,0 +1,192 @@
+"""AOT compile path: lower every model entry point to HLO text + manifest.
+
+This is the ONLY place Python touches the system: ``make artifacts`` runs it
+once; afterwards the Rust binary is self-contained.  Per the image's
+interchange constraint we emit HLO **text**, not a serialized
+HloModuleProto — jax >= 0.5 emits protos with 64-bit instruction ids that
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Per model we emit:
+  artifacts/<model>_train_step.hlo.txt   (params, mom, x, y, lr, wd, bits)
+  artifacts/<model>_eval_step.hlo.txt    (params, x, y, bits)
+  artifacts/<model>_vhv_step.hlo.txt     (params, x, y, bits, seed)
+  artifacts/<model>_eagl_step.hlo.txt    (params)
+  artifacts/<model>.manifest.json        flat input/output order, layer table
+  artifacts/<model>_init.ckpt            seed-0 initial checkpoint (MPQCKPT1)
+
+Usage: python -m compile.aot --out ../artifacts [--models qresnet20,...]
+"""
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import MODELS
+
+CKPT_MAGIC = b"MPQCKPT1"
+
+
+# ---------------------------------------------------------------------------
+# HLO text lowering (the gen_hlo.py recipe)
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Naming / manifest helpers
+# ---------------------------------------------------------------------------
+
+def path_to_name(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def tensor_specs(tree):
+    """[{name, shape, dtype}] in jax flatten order."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        arr = np.asarray(leaf)
+        out.append({
+            "name": path_to_name(path),
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        })
+    return out
+
+
+def write_ckpt(path, tree):
+    """MPQCKPT1: magic, u32 count, then (name, dims, f32/i32 data) records."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    with open(path, "wb") as f:
+        f.write(CKPT_MAGIC)
+        f.write(struct.pack("<I", len(leaves)))
+        for p, leaf in leaves:
+            name = path_to_name(p).encode()
+            # NB: np.ascontiguousarray would promote 0-d arrays to 1-d and
+            # corrupt scalar step-size shapes; tobytes() below already
+            # yields a C-order copy.
+            arr = np.asarray(leaf, dtype=np.float32)
+            f.write(struct.pack("<I", len(name)))
+            f.write(name)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            data = arr.tobytes()
+            f.write(struct.pack("<Q", len(data)))
+            f.write(data)
+
+
+# ---------------------------------------------------------------------------
+# Per-model lowering
+# ---------------------------------------------------------------------------
+
+def lower_model(mdef, outdir):
+    name = mdef.name
+    params = mdef.init_params(seed=0)
+    mom = jax.tree_util.tree_map(jnp.zeros_like, params)
+    xt, yt = mdef.example_batch(mdef.train_batch)
+    xe, ye = mdef.example_batch(mdef.eval_batch)
+    nbits = mdef.n_bits()
+    bits = jnp.full((nbits,), 4.0, jnp.float32)
+    lr = jnp.asarray(0.01, jnp.float32)
+    wd = jnp.asarray(1e-4, jnp.float32)
+    seed = jnp.zeros((1,), jnp.int32)
+
+    entries = {}
+
+    def emit(entry, fn, args, order, outputs):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}_{entry}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        entries[entry] = {"file": fname, "order": order, "outputs": outputs}
+        print(f"  {fname}: {len(text) / 1e6:.2f} MB")
+
+    emit("train_step",
+         lambda p, m, x, y, l, w, b: mdef.train_step(p, m, x, y, l, w, b),
+         (params, mom, xt, yt, lr, wd, bits),
+         ["params", "mom", "x", "y", "lr", "wd", "bits"],
+         ["params", "mom", "loss", "metric"])
+    emit("eval_step",
+         lambda p, x, y, b: mdef.eval_step(p, x, y, b),
+         (params, xe, ye, bits),
+         ["params", "x", "y", "bits"],
+         ["loss", "evalout"])
+    emit("vhv_step",
+         lambda p, x, y, b, s: mdef.vhv_step(p, x, y, b, s),
+         (params, xt, yt, bits, seed),
+         ["params", "x", "y", "bits", "seed"],
+         ["vhv"])
+    emit("eagl_step",
+         lambda p: mdef.eagl_step(p),
+         (params,),
+         ["params"],
+         ["entropies"])
+
+    evalout = np.asarray(mdef.eval_step(params, xe, ye, bits)[1])
+    manifest = {
+        "model": name,
+        "params": tensor_specs(params),
+        "entries": entries,
+        "layers": mdef.layer_table(),
+        "meta": {
+            "n_bits": nbits,
+            "train_batch": mdef.train_batch,
+            "eval_batch": mdef.eval_batch,
+            "task": ("cls" if name.startswith("qresnet")
+                     else "seg" if name == "qsegnet" else "span"),
+            "x_train_shape": list(np.asarray(xt).shape),
+            "y_train_shape": list(np.asarray(yt).shape),
+            "x_eval_shape": list(np.asarray(xe).shape),
+            "y_eval_shape": list(np.asarray(ye).shape),
+            "x_dtype": str(np.asarray(xt).dtype),
+            "y_dtype": str(np.asarray(yt).dtype),
+            "evalout_shape": list(evalout.shape),
+            "cfg": mdef.cfg,
+        },
+    }
+    with open(os.path.join(outdir, f"{name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    write_ckpt(os.path.join(outdir, f"{name}_init.ckpt"), params)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated subset (default: all)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    names = args.models.split(",") if args.models else list(MODELS)
+    for name in names:
+        print(f"lowering {name} ...")
+        lower_model(MODELS[name], args.out)
+    # Build stamp so `make artifacts` is a no-op when inputs are unchanged.
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

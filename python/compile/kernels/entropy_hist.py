@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: histogram-of-codes + Shannon entropy — the EAGL metric.
+
+EAGL (paper Eq. 1-3, Algorithm 2) scores each layer by the entropy of the
+empirical distribution of its quantized weight codes.  This kernel fuses the
+bincount and the entropy reduction so the whole metric is one pass over the
+weights: for each of the ``n_bins`` codes it counts matches (VPU compare +
+reduce), normalizes, and accumulates -p*log2(p).
+
+The weight vector is tiled over a 1-D grid (``bs`` elements per step) with a
+VMEM-resident (n_bins,) histogram accumulator carried across grid steps —
+the standard Pallas reduction idiom (output revisited by every grid step).
+
+The Rust-native EAGL implementation (rust/src/eagl/) is cross-checked
+against this kernel through the ``eagl_step`` artifact and against
+``ref.entropy_ref`` in pytest.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(codes_ref, hist_ref):
+    """Accumulate counts of each code value in this tile into hist_ref."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    codes = codes_ref[...]                      # (bs,) f32 integer-valued
+    n_bins = hist_ref.shape[0]
+    # Bin index of each element; one-hot compare against all bins (VPU).
+    bins = jax.lax.iota(jnp.float32, n_bins)    # 0..n_bins-1
+    # codes are shifted to 0-based before the call.
+    onehot = (codes[:, None] == bins[None, :]).astype(jnp.float32)
+    hist_ref[...] += jnp.sum(onehot, axis=0)
+
+
+def histogram_pallas(codes0, n_bins: int, *, bs: int = 4096):
+    """Histogram of 0-based integer codes (f32), tiled over a 1-D grid."""
+    flat = codes0.reshape(-1)
+    n = flat.shape[0]
+    # Pad to a multiple of the block with an out-of-range sentinel that
+    # matches no bin.
+    pad = (-n) % bs
+    if pad:
+        flat = jnp.concatenate([flat, jnp.full((pad,), -1.0, jnp.float32)])
+    grid = (flat.shape[0] // bs,)
+    return pl.pallas_call(
+        _hist_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bs,), lambda i: (i,))],
+        # Accumulator revisited by every grid step.
+        out_specs=pl.BlockSpec((n_bins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_bins,), jnp.float32),
+        interpret=True,
+    )(flat)
+
+
+def entropy_pallas(w, s, bits_static: int, *, eps: float = 1e-10):
+    """EAGL entropy (bits) of a weight tensor quantized at ``bits_static``.
+
+    Unlike the matmul kernel, the bin count 2^b is a *shape*, so the
+    bit-width is static here; the eagl_step artifact is lowered per
+    candidate precision (the paper only ever needs b = the checkpoint's
+    precision, Algorithm 2).
+    """
+    n_bins = 1 << int(bits_static)
+    qp = float(n_bins // 2 - 1)
+    qn = -float(n_bins // 2)
+    codes = jnp.clip(jnp.round(w / s), qn, qp) - qn   # 0-based
+    hist = histogram_pallas(codes.astype(jnp.float32), n_bins)
+    p = hist / jnp.asarray(codes.size, jnp.float32) + eps
+    return -jnp.sum(p * jnp.log2(p))

@@ -1,0 +1,134 @@
+"""L1 Pallas kernel: LSQ fake-quantized matmul — the quantized-GEMM hot-spot.
+
+Every linear layer in the transformer path (q/k/v/o projections and both FFN
+matmuls) runs through this kernel, so it lowers into the same HLO artifact
+the Rust coordinator executes.
+
+TPU mapping (DESIGN.md §6 Hardware-Adaptation): the paper's deployment
+target (NorthPole) performs 2/4/8-bit integer MACs in dedicated silicon.  On
+the TPU-shaped Pallas model we express the same computation as
+
+  * VPU elementwise fake-quant of both operands (scale, round, clamp) —
+    bit-width dependent clamp bounds arrive as *scalars*, so one kernel
+    serves every per-layer precision the knapsack optimizer picks;
+  * an MXU matmul over the quantized tiles, f32 accumulate;
+  * a ``BlockSpec`` grid over (M/bm, N/bn) with the K dimension VMEM-resident
+    — the HBM↔VMEM schedule the paper's silicon does with near-compute SRAM.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is validated through the interpret path and TPU
+efficiency is estimated analytically (EXPERIMENTS.md §Perf).
+
+Backward pass: the kernel is wrapped in a ``custom_vjp`` whose bwd is pure
+jnp (STE for tensors, LSQ gradient for the step sizes), so fwd runs the
+Pallas kernel while training still differentiates through it.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_tile(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (grid must tile evenly)."""
+    t = min(dim, target)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _qmm_kernel(q_ref, x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile: fake-quant both operands, MXU matmul.
+
+    q_ref holds the 6 quantization scalars [sx, sw, qnx, qpx, qnw, qpw]
+    (scalar-prefetch-style operand — SMEM on real TPU).
+    """
+    sx, sw = q_ref[0], q_ref[1]
+    qnx, qpx = q_ref[2], q_ref[3]
+    qnw, qpw = q_ref[4], q_ref[5]
+    xq = jnp.clip(jnp.round(x_ref[...] / sx), qnx, qpx) * sx
+    wq = jnp.clip(jnp.round(w_ref[...] / sw), qnw, qpw) * sw
+    # f32 accumulate on the MXU (preferred_element_type pins the accumulator).
+    o_ref[...] = jax.lax.dot_general(
+        xq, wq,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def quant_matmul_pallas(x, w, sx, sw, qnx, qpx, qnw, qpw, *, bm=256, bn=128):
+    """Raw Pallas forward: y = fq(x; sx) @ fq(w; sw), tiled over (M, N).
+
+    x: (M, K) activations, w: (K, N) weights, scales/bounds: f32 scalars.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = _pick_tile(m, bm)
+    bn = _pick_tile(n, bn)
+    qparams = jnp.stack(
+        [jnp.asarray(v, jnp.float32).reshape(()) for v in
+         (sx, sw, qnx, qpx, qnw, qpw)]
+    )
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _qmm_kernel,
+        grid=grid,
+        in_specs=[
+            # Quantization scalars: replicated to every grid step.
+            pl.BlockSpec((6,), lambda i, j: (0,)),
+            # x tile: row block i, full K resident in VMEM.
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            # w tile: full K, column block j.
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(qparams, x, w)
+
+
+@jax.custom_vjp
+def quant_matmul(x, w, sx, sw, qnx, qpx, qnw, qpw):
+    """Differentiable LSQ-quantized matmul (Pallas fwd, jnp bwd).
+
+    Gradients: STE through both fake-quant ops for x and w; LSQ step-size
+    gradients for sx and sw; zero for the clamp bounds (precision is chosen
+    by the knapsack optimizer, not SGD).
+    """
+    return quant_matmul_pallas(x, w, sx, sw, qnx, qpx, qnw, qpw)
+
+
+def _qmm_fwd(x, w, sx, sw, qnx, qpx, qnw, qpw):
+    y = quant_matmul_pallas(x, w, sx, sw, qnx, qpx, qnw, qpw)
+    return y, (x, w, sx, sw, qnx, qpx, qnw, qpw)
+
+
+def _lsq_partials(v, s, qn, qp):
+    """(fake-quantized v, STE mask, elementwise d fq / d s)."""
+    vs = v / s
+    in_range = jnp.logical_and(vs >= qn, vs <= qp)
+    fq = jnp.clip(jnp.round(vs), qn, qp) * s
+    ds = jnp.where(vs < qn, qn, jnp.where(vs > qp, qp, jnp.round(vs) - vs))
+    return fq, in_range, ds
+
+
+def _qmm_bwd(res, gy):
+    x, w, sx, sw, qnx, qpx, qnw, qpw = res
+    xq, x_in, dsx_elem = _lsq_partials(x, sx, qnx, qpx)
+    wq, w_in, dsw_elem = _lsq_partials(w, sw, qnw, qpw)
+    gx_q = gy @ wq.T          # d y / d xq
+    gw_q = xq.T @ gy          # d y / d wq
+    gx = jnp.where(x_in, gx_q, 0.0)
+    gw = jnp.where(w_in, gw_q, 0.0)
+    gsx_scale = 1.0 / jnp.sqrt(jnp.asarray(x.size, jnp.float32) * jnp.maximum(qpx, 1.0))
+    gsw_scale = 1.0 / jnp.sqrt(jnp.asarray(w.size, jnp.float32) * jnp.maximum(qpw, 1.0))
+    gsx = jnp.sum(gx_q * dsx_elem) * gsx_scale
+    gsw = jnp.sum(gw_q * dsw_elem) * gsw_scale
+    z = jnp.zeros_like(qnx)
+    return gx, gw, gsx, gsw, z, z, z, z
+
+
+quant_matmul.defvjp(_qmm_fwd, _qmm_bwd)

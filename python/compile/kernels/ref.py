@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every L1 kernel has a reference here; pytest asserts allclose between the
+kernel (interpret=True) and these functions over swept shapes/precisions
+(python/tests/test_kernels.py).  The Rust EAGL implementation is *also*
+cross-checked against ``entropy_ref`` via the eagl_step artifact.
+"""
+
+import jax.numpy as jnp
+
+
+def fake_quant_ref(v, s, qn, qp):
+    """clamp(round(v/s), qn, qp) * s — the LSQ forward."""
+    return jnp.clip(jnp.round(v / s), qn, qp) * s
+
+
+def quant_matmul_ref(x, w, sx, sw, qnx, qpx, qnw, qpw):
+    """Fake-quantize both operands, then matmul, f32 accumulate."""
+    xq = fake_quant_ref(x, sx, qnx, qpx)
+    wq = fake_quant_ref(w, sw, qnw, qpw)
+    return jnp.matmul(xq, wq)
+
+
+def histogram_ref(codes, n_bins, code_min):
+    """Normalized histogram of integer codes (paper Appendix E bincount)."""
+    idx = (codes.reshape(-1) - code_min).astype(jnp.int32)
+    hist = jnp.zeros((n_bins,), jnp.float32).at[idx].add(1.0)
+    return hist / codes.size
+
+
+def entropy_ref(codes, n_bins, code_min, eps=1e-10):
+    """Shannon entropy (bits) of the empirical code distribution (Eq. 3).
+
+    Matches the paper's Appendix E: entropy of (p + eps) so empty bins
+    contribute ~0.
+    """
+    p = histogram_ref(codes, n_bins, code_min) + eps
+    return -jnp.sum(p * jnp.log2(p))

@@ -1,0 +1,206 @@
+"""L2 entry points: the jitted step functions the Rust coordinator executes.
+
+Four entry points per model, each AOT-lowered to one HLO artifact:
+
+  * ``train_step``  — fwd/bwd + SGD-momentum(+wd) update, returns
+                      (params', mom', loss, metric).  One fused graph; no
+                      per-layer host round-trips on the fine-tune hot path.
+  * ``eval_step``   — loss + model-specific evaluation outputs (correct
+                      count / IoU counts / span predictions).
+  * ``vhv_step``    — one Hutchinson sample: v ~ Rademacher(seed), returns
+                      per-selectable-layer v·(Hv) over the weight tensors —
+                      the HAWQ-v3 average-Hessian-trace estimator
+                      (Appendix C re-implementation).
+  * ``eagl_step``   — per-layer EAGL entropies via the L1 histogram kernel
+                      (cross-checks the Rust-native EAGL path).
+
+Per-layer precision is a runtime f32 ``bits`` vector, so a single artifact
+set serves the entire budget sweep.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.entropy_hist import entropy_pallas
+from .models import qbert, qresnet, qsegnet
+
+MOMENTUM = 0.9
+
+
+class ModelDef:
+    """Binds a model module + config to the generic step functions."""
+
+    def __init__(self, name, module, cfg, train_batch, eval_batch):
+        self.name = name
+        self.module = module
+        self.cfg = cfg
+        self.train_batch = train_batch
+        self.eval_batch = eval_batch
+
+    # -- shapes ------------------------------------------------------------
+    def example_batch(self, batch_size):
+        cfg = self.cfg
+        if self.name.startswith("qresnet"):
+            x = jnp.zeros((batch_size, cfg["image"], cfg["image"], 3), jnp.float32)
+            y = jnp.zeros((batch_size,), jnp.int32)
+        elif self.name == "qsegnet":
+            x = jnp.zeros((batch_size, cfg["image"], cfg["image"], 3), jnp.float32)
+            y = jnp.zeros((batch_size, cfg["image"], cfg["image"]), jnp.int32)
+        else:  # qbert
+            x = jnp.zeros((batch_size, cfg["seq"]), jnp.int32)
+            y = jnp.zeros((batch_size, 2), jnp.int32)
+        return x, y
+
+    def init_params(self, seed=0):
+        return self.module.init_params(jax.random.PRNGKey(seed), self.cfg)
+
+    def layer_table(self):
+        return self.module.layer_table(self.cfg)
+
+    def n_bits(self):
+        return self.module.num_bits_entries(self.cfg)
+
+    # -- steps ---------------------------------------------------------------
+    def loss_metric(self, params, batch, bits):
+        return self.module.loss_and_metric(params, batch, bits, self.cfg)
+
+    def train_step(self, params, mom, x, y, lr, wd, bits):
+        def loss_fn(p):
+            return self.loss_metric(p, (x, y), bits)
+
+        (loss, metric), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+        # SGD momentum; weight decay on weight tensors only (not step sizes,
+        # biases, or norm parameters) — standard LSQ practice.
+        flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+        treedef = jax.tree_util.tree_structure(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_m = jax.tree_util.tree_leaves(mom)
+        new_p, new_m = [], []
+        for (path, p), g, m in zip(flat_p, flat_g, flat_m):
+            keyname = jax.tree_util.keystr(path)
+            is_weight = keyname.endswith("['w']") or keyname.endswith("['embed']") \
+                or keyname.endswith("['pos']")
+            g_eff = g + wd * p if is_weight else g
+            m_new = MOMENTUM * m + g_eff
+            new_p.append(p - lr * m_new)
+            new_m.append(m_new)
+        params_new = jax.tree_util.tree_unflatten(treedef, new_p)
+        mom_new = jax.tree_util.tree_unflatten(treedef, new_m)
+        return params_new, mom_new, loss, metric
+
+    def eval_step(self, params, x, y, bits):
+        return self.module.eval_outputs(params, (x, y), bits, self.cfg)
+
+    def _weight_leaves(self, params):
+        """(path, leaf) for quantizable-layer weight tensors, qindex order."""
+        table = self.layer_table()
+        out = []
+        for row in table:
+            name = row["name"]
+            node = params
+            for part in name.split("."):
+                node = node[part]
+            out.append(node["w"])
+        return out
+
+    def vhv_step(self, params, x, y, bits, seed):
+        """One Hutchinson v·Hv per selectable layer (HAWQ-v3 trace est.).
+
+        Traced with the pure-jnp linear path (see models.common.REF_LINEAR):
+        second-order autodiff has no rule for the Pallas custom_vjp, and the
+        two paths are numerically identical.
+        """
+        from .models import common
+        common.REF_LINEAR = True
+        try:
+            return self._vhv_inner(params, x, y, bits, seed)
+        finally:
+            common.REF_LINEAR = False
+
+    def _vhv_inner(self, params, x, y, bits, seed):
+        ws = self._weight_leaves(params)
+
+        def loss_of_ws(ws_new):
+            p = _replace_weights(params, self.layer_table(), ws_new)
+            loss, _ = self.loss_metric(p, (x, y), bits)
+            return loss
+
+        key = jax.random.key(seed[0])
+        keys = jax.random.split(key, len(ws))
+        vs = [jax.random.rademacher(k, w.shape, jnp.float32)
+              for k, w in zip(keys, ws)]
+        grad_fn = jax.grad(loss_of_ws)
+
+        # Double-reverse HVP (custom_vjp ops have no JVP rule):
+        # Hv = grad_w <grad(loss)(w), v>.
+        def gdotv(ws_new):
+            g = grad_fn(ws_new)
+            return sum(jnp.vdot(gi, vi) for gi, vi in zip(g, vs))
+
+        hvs = jax.grad(gdotv)(ws)
+        return jnp.stack([jnp.sum(v * hv) for v, hv in zip(vs, hvs)])
+
+    def eagl_step(self, params, ckpt_bits=4):
+        """Per-layer EAGL entropy at the checkpoint precision (Alg. 2)."""
+        ents = []
+        table = self.layer_table()
+        for row in table:
+            node = params
+            for part in name_parts(row["name"]):
+                node = node[part]
+            s = jnp.abs(node["sw"]) + 1e-8
+            b = row["fixed_bits"] or ckpt_bits
+            ents.append(entropy_pallas(node["w"], s, b))
+        return jnp.stack(ents)
+
+
+def name_parts(name):
+    return name.split(".")
+
+
+def _replace_weights(params, table, new_ws):
+    """Functionally replace each quantizable layer's 'w' leaf."""
+
+    def set_in(d, parts, value):
+        node = d
+        for part in parts[:-1]:
+            node = node[part]
+        inner = dict(node[parts[-1]])
+        inner["w"] = value
+        node[parts[-1]] = inner
+
+    out = _deep_dict_copy(params)
+    for row, w in zip(table, new_ws):
+        set_in(out, name_parts(row["name"]), w)
+    return out
+
+
+def _deep_dict_copy(d):
+    if isinstance(d, dict):
+        return {k: _deep_dict_copy(v) for k, v in d.items()}
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Registry — sizes chosen for the single-CPU testbed (DESIGN.md §3).
+# ---------------------------------------------------------------------------
+
+def build_registry():
+    return {
+        "qresnet20": ModelDef("qresnet20", qresnet,
+                              qresnet.make_config(depth=20),
+                              train_batch=64, eval_batch=256),
+        "qresnet32": ModelDef("qresnet32", qresnet,
+                              qresnet.make_config(depth=32),
+                              train_batch=64, eval_batch=256),
+        "qsegnet": ModelDef("qsegnet", qsegnet, qsegnet.make_config(),
+                            train_batch=16, eval_batch=64),
+        "qbert": ModelDef("qbert", qbert, qbert.make_config(),
+                          train_batch=32, eval_batch=128),
+    }
+
+
+MODELS = build_registry()

@@ -1,0 +1,1 @@
+# L2 QAT model definitions (qresnet / qsegnet / qbert).

@@ -1,0 +1,140 @@
+"""Shared L2 building blocks: quantized conv / linear layers, norms, init.
+
+Every quantizable layer reads its bit-width from a runtime ``bits`` vector
+(one f32 entry per layer, indexed by the layer's ``qindex``), so one lowered
+artifact serves every precision configuration the knapsack optimizer
+produces.  Fixed-precision layers (stem / head at 8-bit, paper §3.4.1) go
+through the same code path — the Rust coordinator simply pins their ``bits``
+entries.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..quantizer import quantize_act, quantize_weight, qrange, init_step_size
+from ..kernels.quant_matmul import quant_matmul
+
+
+def _safe(s):
+    """Step sizes are learned; keep them strictly positive."""
+    return jnp.abs(s) + 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+def qconv(p, x, bits_l, stride=1, signed_act=False):
+    """LSQ-quantized 2-D convolution (NHWC · HWIO), SAME padding.
+
+    Activations are quantized unsigned (post-ReLU inputs) unless
+    ``signed_act``; weights signed symmetric.  Both at ``bits_l``
+    (weights and input activations of a layer share precision, §3.4.1).
+    """
+    sa, sw = _safe(p["sa"]), _safe(p["sw"])
+    xq = quantize_act(x, sa, bits_l, signed=signed_act)
+    wq = quantize_weight(p["w"], sw, bits_l)
+    y = jax.lax.conv_general_dilated(
+        xq, wq,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+# When True, qlinear uses the pure-jnp LSQ path instead of the Pallas
+# kernel.  Needed only while tracing vhv_step: grad-of-grad through the
+# Pallas custom_vjp has no autodiff rule, and the two paths are numerically
+# identical (pytest asserts allclose).  The train/eval hot paths always
+# trace the Pallas kernel.
+REF_LINEAR = False
+
+
+def qlinear(p, x, bits_l):
+    """LSQ-quantized linear layer through the L1 Pallas quant-matmul kernel.
+
+    x: (..., d_in) — flattened to 2-D for the kernel's (M, K)·(K, N) grid.
+    Transformer activations may be negative → signed range for both
+    operands.
+    """
+    sa, sw = _safe(p["sa"]), _safe(p["sw"])
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    if REF_LINEAR:
+        xq = quantize_act(x2, sa, bits_l, signed=True)
+        wq = quantize_weight(p["w"], sw, bits_l)
+        y = xq @ wq
+    else:
+        qna, qpa = qrange(bits_l, signed=True)
+        qnw, qpw = qrange(bits_l, signed=True)
+        y = quant_matmul(x2, p["w"], sa, sw, qna, qpa, qnw, qpw)
+    return y.reshape(lead + (p["w"].shape[1],)) + p["b"]
+
+
+def group_norm(p, x, groups=8, eps=1e-5):
+    """GroupNorm over NHWC (stateless — no running stats to checkpoint)."""
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g != 0:
+        g -= 1
+    xg = x.reshape(b, h, w, g, c // g)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(b, h, w, c) * p["gamma"] + p["beta"]
+
+
+def layer_norm(p, x, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * p["gamma"] + p["beta"]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def conv_params(rng, kh, kw, cin, cout, bits_init=4):
+    """He-init conv weights + LSQ step sizes at the checkpoint precision."""
+    w = jax.random.normal(rng, (kh, kw, cin, cout)) * jnp.sqrt(2.0 / (kh * kw * cin))
+    return {
+        "w": w.astype(jnp.float32),
+        "b": jnp.zeros((cout,), jnp.float32),
+        "sw": jnp.asarray(init_step_size(w, bits_init), jnp.float32).reshape(()),
+        "sa": jnp.asarray(0.35, jnp.float32),  # post-ReLU/GN range; learned
+    }
+
+
+def linear_params(rng, din, dout, bits_init=4):
+    w = jax.random.normal(rng, (din, dout)) * jnp.sqrt(1.0 / din)
+    return {
+        "w": w.astype(jnp.float32),
+        "b": jnp.zeros((dout,), jnp.float32),
+        "sw": jnp.asarray(init_step_size(w, bits_init), jnp.float32).reshape(()),
+        "sa": jnp.asarray(0.2, jnp.float32),
+    }
+
+
+def norm_params(c):
+    return {"gamma": jnp.ones((c,), jnp.float32), "beta": jnp.zeros((c,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Layer table
+# ---------------------------------------------------------------------------
+
+def layer_entry(name, kind, qindex, link_group, macs, weight_params,
+                fixed_bits=None, cin=None, cout=None):
+    """One row of the manifest layer table the Rust graph module consumes."""
+    return {
+        "name": name,
+        "kind": kind,
+        "qindex": qindex,
+        "link_group": link_group,
+        "macs": int(macs),
+        "weight_params": int(weight_params),
+        "fixed_bits": fixed_bits,
+        "cin": cin,
+        "cout": cout,
+    }

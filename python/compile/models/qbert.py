@@ -1,0 +1,131 @@
+"""qbert — small transformer encoder + span-extraction head (BERT/SQuAD
+analog, DESIGN.md §3).
+
+Every linear layer (q, k, v, o, ff1, ff2 per block) is quantized through the
+L1 Pallas ``quant_matmul`` kernel and is a selectable 2/4-bit knapsack item.
+Embeddings, LayerNorms, and the attention score/value matmuls stay full
+precision (standard BERT-quantization practice, matches the paper's W/A
+accounting).  The span head — the input to the softmax — is fixed at 8-bit
+(paper §4.3).
+
+Task: synthetic "needle" span QA — the answer span is positionally encoded
+by a marker motif in the token stream; the model predicts start and end
+indices; F1 is the SQuAD-style token-overlap F1 computed Rust-side from the
+predictions eval_outputs returns.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import layer_entry, linear_params, layer_norm, qlinear
+
+
+def make_config(vocab=32, seq=32, d=64, blocks=4, heads=4, ffn=128):
+    return {
+        "name": "qbert",
+        "vocab": vocab, "seq": seq, "d": d,
+        "blocks": blocks, "heads": heads, "ffn": ffn,
+    }
+
+
+_BLOCK_LINEARS = ["q", "k", "v", "o", "ff1", "ff2"]
+
+
+def init_params(rng, cfg):
+    d, ffn, v, s = cfg["d"], cfg["ffn"], cfg["vocab"], cfg["seq"]
+    nkeys = 3 + cfg["blocks"] * len(_BLOCK_LINEARS)
+    keys = iter(jax.random.split(rng, nkeys))
+    params = {
+        "embed": jax.random.normal(next(keys), (v, d)) * 0.02,
+        "pos": jax.random.normal(next(keys), (s, d)) * 0.02,
+    }
+    for bi in range(cfg["blocks"]):
+        blk = {}
+        for lin in _BLOCK_LINEARS:
+            din = d if lin != "ff2" else ffn
+            dout = d if lin not in ("ff1",) else ffn
+            blk[lin] = linear_params(next(keys), din, dout)
+        blk["ln1"] = {"gamma": jnp.ones((d,)), "beta": jnp.zeros((d,))}
+        blk["ln2"] = {"gamma": jnp.ones((d,)), "beta": jnp.zeros((d,))}
+        params[f"blk{bi}"] = blk
+    params["span"] = linear_params(next(keys), d, 2, bits_init=8)
+    params["ln_f"] = {"gamma": jnp.ones((d,)), "beta": jnp.zeros((d,))}
+    return params
+
+
+def layer_table(cfg):
+    d, ffn, s = cfg["d"], cfg["ffn"], cfg["seq"]
+    rows, qi = [], 0
+    dims = {"q": (d, d), "k": (d, d), "v": (d, d), "o": (d, d),
+            "ff1": (d, ffn), "ff2": (ffn, d)}
+    for bi in range(cfg["blocks"]):
+        for lin in _BLOCK_LINEARS:
+            din, dout = dims[lin]
+            rows.append(layer_entry(
+                f"blk{bi}.{lin}", "linear", qi, f"blk{bi}.{lin}",
+                s * din * dout, din * dout, None, din, dout))
+            qi += 1
+    rows.append(layer_entry("span", "linear", qi, "span", s * d * 2, d * 2,
+                            8, d, 2))
+    return rows
+
+
+def num_bits_entries(cfg):
+    return cfg["blocks"] * len(_BLOCK_LINEARS) + 1
+
+
+def forward(params, tokens, bits, cfg):
+    """tokens: (B, S) int32; returns (B, S, 2) start/end logits."""
+    d, nh = cfg["d"], cfg["heads"]
+    hd = d // nh
+    b, s = tokens.shape
+    h = params["embed"][tokens] + params["pos"][None, :, :]
+    qi = 0
+
+    def nb():
+        nonlocal qi
+        v = bits[qi]
+        qi += 1
+        return v
+
+    for bi in range(cfg["blocks"]):
+        blk = params[f"blk{bi}"]
+        x = layer_norm(blk["ln1"], h)
+        q = qlinear(blk["q"], x, nb()).reshape(b, s, nh, hd)
+        k = qlinear(blk["k"], x, nb()).reshape(b, s, nh, hd)
+        v = qlinear(blk["v"], x, nb()).reshape(b, s, nh, hd)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, d)
+        h = h + qlinear(blk["o"], ctx, nb())
+        x = layer_norm(blk["ln2"], h)
+        y = jax.nn.gelu(qlinear(blk["ff1"], x, nb()))
+        h = h + qlinear(blk["ff2"], y, nb())
+    h = layer_norm(params["ln_f"], h)
+    return qlinear(params["span"], h, nb())
+
+
+def loss_and_metric(params, batch, bits, cfg):
+    """CE over start + end positions; metric = mean start/end exact match."""
+    tokens, span = batch            # span: (B, 2) int32 [start, end]
+    logits = forward(params, tokens, bits, cfg)     # (B, S, 2)
+    logp = jax.nn.log_softmax(logits, axis=1)
+    ls = -jnp.mean(jnp.take_along_axis(logp[:, :, 0], span[:, :1], axis=1))
+    le = -jnp.mean(jnp.take_along_axis(logp[:, :, 1], span[:, 1:], axis=1))
+    pred_s = jnp.argmax(logits[:, :, 0], axis=1)
+    pred_e = jnp.argmax(logits[:, :, 1], axis=1)
+    em = 0.5 * (jnp.mean((pred_s == span[:, 0]).astype(jnp.float32))
+                + jnp.mean((pred_e == span[:, 1]).astype(jnp.float32)))
+    return ls + le, em
+
+
+def eval_outputs(params, batch, bits, cfg):
+    """(loss, predictions (B, 2) f32) — Rust computes token-overlap F1."""
+    tokens, span = batch
+    logits = forward(params, tokens, bits, cfg)
+    logp = jax.nn.log_softmax(logits, axis=1)
+    ls = -jnp.mean(jnp.take_along_axis(logp[:, :, 0], span[:, :1], axis=1))
+    le = -jnp.mean(jnp.take_along_axis(logp[:, :, 1], span[:, 1:], axis=1))
+    pred = jnp.stack([jnp.argmax(logits[:, :, 0], axis=1),
+                      jnp.argmax(logits[:, :, 1], axis=1)], axis=1)
+    return ls + le, pred.astype(jnp.float32)

@@ -1,0 +1,163 @@
+"""qresnet — CIFAR-style residual CNN, the ResNet-50/101 analog (DESIGN.md §3).
+
+depth = 6n+2 (He et al. CIFAR family): stem conv → 3 stages of n basic
+blocks at widths (16, 32, 64), strides (1, 2, 2) → global pool → FC head.
+
+Quantization layout (paper §3.4.1):
+  * stem conv and FC head are fixed at 8-bit (first/last-layer rule);
+  * every block conv and downsample conv is selectable (2- or 4-bit);
+  * a downsample conv is *linked* with the conv that feeds the same
+    residual ReLU (paper Fig. 9 caption) — same link_group, one knapsack
+    item;
+  * GroupNorm keeps the network stateless (no BN running stats in the
+    checkpoint).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import (conv_params, layer_entry, norm_params, group_norm,
+                     qconv, linear_params)
+from ..quantizer import quantize_act, quantize_weight
+from .common import _safe
+
+
+def make_config(depth=20, num_classes=10, image=32, width=(16, 32, 64)):
+    assert (depth - 2) % 6 == 0, "depth must be 6n+2"
+    return {
+        "name": f"qresnet{depth}",
+        "depth": depth,
+        "n": (depth - 2) // 6,
+        "num_classes": num_classes,
+        "image": image,
+        "width": list(width),
+    }
+
+
+def _block_names(cfg):
+    """Yield (stage, block, conv_idx) for every block conv, in forward order."""
+    for s in range(3):
+        for b in range(cfg["n"]):
+            yield s, b
+
+
+def init_params(rng, cfg):
+    n, w = cfg["n"], cfg["width"]
+    keys = iter(jax.random.split(rng, 4 + 3 * n * 3))
+    params = {"stem": conv_params(next(keys), 3, 3, 3, w[0], bits_init=8),
+              "stem_norm": norm_params(w[0])}
+    cin = w[0]
+    for s, b in _block_names(cfg):
+        cout = w[s]
+        blk = {
+            "conv1": conv_params(next(keys), 3, 3, cin, cout),
+            "norm1": norm_params(cout),
+            "conv2": conv_params(next(keys), 3, 3, cout, cout),
+            "norm2": norm_params(cout),
+        }
+        if b == 0 and s > 0:
+            blk["down"] = conv_params(next(keys), 1, 1, cin, cout)
+        params[f"s{s}b{b}"] = blk
+        cin = cout
+    params["head"] = linear_params(next(keys), w[2], cfg["num_classes"], bits_init=8)
+    return params
+
+
+def layer_table(cfg):
+    """Manifest rows, in qindex order (must match forward()'s bits indexing)."""
+    img, w, n = cfg["image"], cfg["width"], cfg["n"]
+    rows, qi = [], 0
+
+    def push(name, kind, link, macs, wp, fixed=None, cin=None, cout=None):
+        nonlocal qi
+        rows.append(layer_entry(name, kind, qi, link, macs, wp, fixed, cin, cout))
+        qi += 1
+
+    push("stem", "conv", "stem", img * img * 3 * w[0] * 9, 3 * w[0] * 9,
+         fixed=8, cin=3, cout=w[0])
+    hw = img
+    cin = w[0]
+    for s in range(3):
+        cout = w[s]
+        for b in range(n):
+            stride = 2 if (b == 0 and s > 0) else 1
+            hw_out = hw // stride
+            link2 = f"s{s}b{b}.out" if (b == 0 and s > 0) else f"s{s}b{b}.conv2"
+            push(f"s{s}b{b}.conv1", "conv", f"s{s}b{b}.conv1",
+                 hw_out * hw_out * cin * cout * 9, cin * cout * 9,
+                 cin=cin, cout=cout)
+            push(f"s{s}b{b}.conv2", "conv", link2,
+                 hw_out * hw_out * cout * cout * 9, cout * cout * 9,
+                 cin=cout, cout=cout)
+            if b == 0 and s > 0:
+                push(f"s{s}b{b}.down", "conv", link2,
+                     hw_out * hw_out * cin * cout, cin * cout,
+                     cin=cin, cout=cout)
+            hw = hw_out
+            cin = cout
+    push("head", "linear", "head", w[2] * cfg["num_classes"],
+         w[2] * cfg["num_classes"], fixed=8, cin=w[2], cout=cfg["num_classes"])
+    return rows
+
+
+def num_bits_entries(cfg):
+    return len(layer_table(cfg))
+
+
+def forward(params, x, bits, cfg):
+    """x: (B, H, W, 3) f32 in [0,1]; returns (B, num_classes) logits."""
+    qi = 0
+
+    def nb():
+        nonlocal qi
+        b = bits[qi]
+        qi += 1
+        return b
+
+    # Stem input is the raw image — signed=False fine ([0,1] range).
+    h = qconv(params["stem"], x, nb(), 1)
+    h = jax.nn.relu(group_norm(params["stem_norm"], h))
+    for s in range(3):
+        for b in range(cfg["n"]):
+            blk = params[f"s{s}b{b}"]
+            stride = 2 if (b == 0 and s > 0) else 1
+            b1 = nb()
+            y = qconv(blk["conv1"], h, b1, stride)
+            y = jax.nn.relu(group_norm(blk["norm1"], y))
+            b2 = nb()
+            y = qconv(blk["conv2"], y, b2, 1)
+            y = group_norm(blk["norm2"], y)
+            if "down" in blk:
+                bd = nb()
+                sc = qconv(blk["down"], h, bd, stride)
+            else:
+                sc = h
+            h = jax.nn.relu(y + sc)
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    # 8-bit head: quantize pooled features + weights via the linear path.
+    p = params["head"]
+    bh = nb()
+    sa, sw = _safe(p["sa"]), _safe(p["sw"])
+    hq = quantize_act(h, sa, bh, signed=False)
+    wq = quantize_weight(p["w"], sw, bh)
+    return hq @ wq + p["b"]
+
+
+def loss_and_metric(params, batch, bits, cfg):
+    """Cross-entropy loss + batch accuracy. batch = (x, y_int32)."""
+    x, y = batch
+    logits = forward(params, x, bits, cfg)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+def eval_outputs(params, batch, bits, cfg):
+    """(loss, correct_count) — Rust accumulates over eval batches."""
+    x, y = batch
+    logits = forward(params, x, bits, cfg)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    correct = jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+    return loss, correct

@@ -1,0 +1,147 @@
+"""qsegnet — small encoder–decoder segmentation CNN, the PSPNet analog.
+
+Encoder: stem → 2 strided stages; bottleneck context conv (the PSP-pyramid
+stand-in: a dilated 3x3 that enlarges the receptive field); decoder: 2
+nearest-upsample + conv stages; 1x1 classifier head.
+
+Stem and head fixed at 8-bit; everything else selectable.  ALPS uses the
+*loss* as the gain signal for this model (paper Algorithm 1's PSPNet
+branch); mIoU is accumulated Rust-side from the per-class
+intersection/union counts eval_outputs returns.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import conv_params, layer_entry, norm_params, group_norm, qconv
+
+
+def make_config(num_classes=5, image=32, widths=(16, 32, 64)):
+    return {
+        "name": "qsegnet",
+        "num_classes": num_classes,
+        "image": image,
+        "widths": list(widths),
+    }
+
+
+_LAYERS = [
+    # name,       kind,  k, stride, dilation
+    ("stem",      "conv", 3, 1, 1),
+    ("enc1",      "conv", 3, 2, 1),
+    ("enc2",      "conv", 3, 1, 1),
+    ("enc3",      "conv", 3, 2, 1),
+    ("context",   "conv", 3, 1, 2),
+    ("dec1",      "conv", 3, 1, 1),   # after 2x upsample
+    ("dec2",      "conv", 3, 1, 1),   # after 2x upsample
+    ("head",      "conv", 1, 1, 1),
+]
+
+
+def _channels(cfg):
+    w = cfg["widths"]
+    nc = cfg["num_classes"]
+    return {
+        "stem": (3, w[0]), "enc1": (w[0], w[1]), "enc2": (w[1], w[1]),
+        "enc3": (w[1], w[2]), "context": (w[2], w[2]),
+        "dec1": (w[2], w[1]), "dec2": (w[1], w[0]), "head": (w[0], nc),
+    }
+
+
+def init_params(rng, cfg):
+    ch = _channels(cfg)
+    keys = jax.random.split(rng, len(_LAYERS))
+    params = {}
+    for (name, _, k, _, _), key in zip(_LAYERS, keys):
+        cin, cout = ch[name]
+        bits0 = 8 if name in ("stem", "head") else 4
+        params[name] = conv_params(key, k, k, cin, cout, bits_init=bits0)
+        if name != "head":
+            params[name + "_norm"] = norm_params(cout)
+    return params
+
+
+def layer_table(cfg):
+    ch = _channels(cfg)
+    img = cfg["image"]
+    rows = []
+    hw = img
+    for qi, (name, kind, k, stride, _dil) in enumerate(_LAYERS):
+        cin, cout = ch[name]
+        if name == "dec1":
+            hw = img // 2       # upsampled before the conv
+        if name == "dec2":
+            hw = img
+        hw_out = hw // stride
+        fixed = 8 if name in ("stem", "head") else None
+        rows.append(layer_entry(
+            name, kind, qi, name, hw_out * hw_out * cin * cout * k * k,
+            cin * cout * k * k, fixed, cin, cout))
+        hw = hw_out
+    return rows
+
+
+def num_bits_entries(cfg):
+    return len(_LAYERS)
+
+
+def _upsample2(x):
+    b, h, w, c = x.shape
+    x = jnp.broadcast_to(x[:, :, None, :, None, :], (b, h, 2, w, 2, c))
+    return x.reshape(b, 2 * h, 2 * w, c)
+
+
+def forward(params, x, bits, cfg):
+    """x: (B, H, W, 3); returns per-pixel logits (B, H, W, num_classes)."""
+    dil = {name: d for name, _, _, _, d in _LAYERS}
+    stride = {name: s for name, _, _, s, _ in _LAYERS}
+    h = x
+    for qi, (name, _, _, _, _) in enumerate(_LAYERS):
+        if name in ("dec1", "dec2"):
+            h = _upsample2(h)
+        p = params[name]
+        if dil[name] > 1:
+            # Dilated context conv: same quantization path, dilated window.
+            from ..quantizer import quantize_act, quantize_weight
+            from .common import _safe
+            sa, sw = _safe(p["sa"]), _safe(p["sw"])
+            hq = quantize_act(h, sa, bits[qi], signed=False)
+            wq = quantize_weight(p["w"], sw, bits[qi])
+            h = jax.lax.conv_general_dilated(
+                hq, wq, (1, 1), "SAME", rhs_dilation=(dil[name],) * 2,
+                dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+        else:
+            h = qconv(p, h, bits[qi], stride[name])
+        if name != "head":
+            h = jax.nn.relu(group_norm(params[name + "_norm"], h))
+    return h
+
+
+def loss_and_metric(params, batch, bits, cfg):
+    """Pixel cross-entropy + pixel accuracy. batch = (x, y_int32 (B,H,W))."""
+    x, y = batch
+    logits = forward(params, x, bits, cfg)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+def eval_outputs(params, batch, bits, cfg):
+    """(loss, iu_counts (2, C)) — row 0 intersection, row 1 union, per class.
+
+    Rust sums these across eval batches and reports
+    mIoU = mean_c inter_c / union_c (paper Fig. 4 metric).
+    """
+    x, y = batch
+    nc = cfg["num_classes"]
+    logits = forward(params, x, bits, cfg)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+    pred = jnp.argmax(logits, axis=-1)
+    classes = jnp.arange(nc)[:, None, None, None]
+    pm = pred[None] == classes
+    ym = y[None] == classes
+    inter = jnp.sum(jnp.logical_and(pm, ym), axis=(1, 2, 3)).astype(jnp.float32)
+    union = jnp.sum(jnp.logical_or(pm, ym), axis=(1, 2, 3)).astype(jnp.float32)
+    return loss, jnp.stack([inter, union])

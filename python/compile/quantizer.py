@@ -1,0 +1,110 @@
+"""LSQ quantizer (Esser et al., 2020) as a JAX custom_vjp.
+
+The paper fine-tunes every mixed-precision network with LSQ (§3.4.3): both
+weights and activations are fake-quantized with a *learned* per-tensor step
+size.  The forward pass is
+
+    q(v; s) = clamp(round(v / s), qn, qp) * s
+
+and the backward pass uses the straight-through estimator for ``v`` and the
+LSQ gradient for ``s``:
+
+    dq/dv = 1                         if qn <= v/s <= qp else 0
+    dq/ds = round(v/s) - v/s          if qn <= v/s <= qp
+          = qn                        if v/s < qn
+          = qp                        if v/s > qp
+
+scaled by the LSQ gradient scale g = 1 / sqrt(numel * qp).
+
+Bit-widths enter as *traced* f32 scalars (qn/qp are computed from them), so
+a single lowered HLO artifact serves every per-layer precision
+configuration — the Rust coordinator feeds a per-layer bits vector at
+runtime (DESIGN.md §2).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def qrange(bits, signed: bool):
+    """(qn, qp) for a given (possibly traced) bit-width.
+
+    Signed symmetric: [-2^(b-1), 2^(b-1)-1]; unsigned: [0, 2^b - 1].
+    ``bits`` may be a traced f32 scalar.
+    """
+    bits = jnp.asarray(bits, jnp.float32)
+    if signed:
+        qp = jnp.exp2(bits - 1.0) - 1.0
+        qn = -jnp.exp2(bits - 1.0)
+    else:
+        qp = jnp.exp2(bits) - 1.0
+        qn = jnp.zeros_like(qp)
+    return qn, qp
+
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def lsq(v, s, qn, qp):
+    """LSQ fake-quantization. Differentiable in ``v`` (STE) and ``s`` (LSQ)."""
+    vs = v / s
+    return jnp.clip(jnp.round(vs), qn, qp) * s
+
+
+def _lsq_fwd(v, s, qn, qp):
+    return lsq(v, s, qn, qp), (v, s, qn, qp)
+
+
+def _lsq_bwd(res, g):
+    v, s, qn, qp = res
+    vs = v / s
+    in_range = jnp.logical_and(vs >= qn, vs <= qp)
+    # STE for the tensor.
+    dv = jnp.where(in_range, g, 0.0)
+    # LSQ gradient for the step size.
+    ds_elem = jnp.where(vs < qn, qn, jnp.where(vs > qp, qp, jnp.round(vs) - vs))
+    gscale = 1.0 / jnp.sqrt(jnp.asarray(v.size, jnp.float32) * jnp.maximum(qp, 1.0))
+    ds = jnp.sum(g * ds_elem) * gscale
+    # qn/qp come from the bits vector; precision choice is not optimized by
+    # SGD in this paper, so their cotangents are zero.
+    return (
+        dv,
+        ds.reshape(jnp.shape(s)),
+        jnp.zeros(jnp.shape(qn), jnp.float32),
+        jnp.zeros(jnp.shape(qp), jnp.float32),
+    )
+
+
+lsq.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+def quantize_weight(w, s, bits):
+    """Signed symmetric LSQ fake-quantization of a weight tensor."""
+    qn, qp = qrange(bits, signed=True)
+    return lsq(w, s, qn, qp)
+
+
+def quantize_act(a, s, bits, signed=False):
+    """LSQ fake-quantization of an activation tensor.
+
+    Post-ReLU activations use the unsigned range (LSQ practice); transformer
+    activations (which may be negative) use the signed range.
+    """
+    qn, qp = qrange(bits, signed=signed)
+    return lsq(a, s, qn, qp)
+
+
+def weight_codes(w, s, bits):
+    """Integer codes of a quantized weight tensor (no STE — analysis only).
+
+    These are the values whose empirical distribution EAGL (Eq. 1-3) takes
+    the entropy of.  Matches the paper's Appendix E snippet.
+    """
+    qn, qp = qrange(bits, signed=True)
+    return jnp.clip(jnp.round(w / s), qn, qp)
+
+
+def init_step_size(w, bits) -> float:
+    """LSQ step-size init: 2*mean(|w|)/sqrt(qp) (Esser et al., 2020)."""
+    _, qp = qrange(float(bits), signed=True)
+    return 2.0 * jnp.mean(jnp.abs(w)) / jnp.sqrt(qp)

@@ -1,0 +1,148 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+The CORE correctness signal for the compiled artifacts — everything the
+Rust runtime executes flows through these kernels.  Hypothesis sweeps
+shapes, scales, and precisions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.entropy_hist import entropy_pallas, histogram_pallas
+from compile.kernels.quant_matmul import quant_matmul, quant_matmul_pallas
+from compile.quantizer import qrange
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([1, 3, 16, 64, 200]),
+    k=st.sampled_from([4, 32, 64]),
+    n=st.sampled_from([2, 48, 128]),
+    bits_a=st.sampled_from([2, 4, 8]),
+    bits_w=st.sampled_from([2, 4, 8]),
+    sx=st.floats(0.01, 0.5),
+    sw=st.floats(0.01, 0.5),
+)
+def test_quant_matmul_matches_ref(m, k, n, bits_a, bits_w, sx, sw):
+    x = rand(m * 1000 + k, (m, k))
+    w = rand(n * 1000 + k + 1, (k, n))
+    qna, qpa = qrange(float(bits_a), signed=True)
+    qnw, qpw = qrange(float(bits_w), signed=True)
+    got = quant_matmul_pallas(x, w, sx, sw, qna, qpa, qnw, qpw)
+    want = ref.quant_matmul_ref(x, w, sx, sw, qna, qpa, qnw, qpw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_quant_matmul_various_tilings():
+    """Grid tiling must not change results (same math, different schedule)."""
+    x = rand(0, (128, 32))
+    w = rand(1, (32, 64))
+    outs = []
+    for bm, bn in [(32, 16), (64, 64), (128, 64), (128, 128)]:
+        outs.append(
+            np.asarray(
+                quant_matmul_pallas(x, w, 0.1, 0.05, 0.0, 15.0, -8.0, 7.0, bm=bm, bn=bn)
+            )
+        )
+    for o in outs[1:]:
+        # Tiles change the f32 accumulation order; equality is to float eps.
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+
+def test_quant_matmul_gradients_match_lsq_semantics():
+    """STE + LSQ gradients: compare against an autodiff-able jnp recreation."""
+    from compile.quantizer import lsq
+
+    x = rand(3, (16, 8))
+    w = rand(4, (8, 12))
+    sx, sw = jnp.asarray(0.11), jnp.asarray(0.07)
+
+    def with_kernel(x, w, sx, sw):
+        return jnp.sum(quant_matmul(x, w, sx, sw, 0.0, 15.0, -8.0, 7.0) ** 2)
+
+    def with_lsq(x, w, sx, sw):
+        xq = lsq(x, sx, 0.0, 15.0)
+        wq = lsq(w, sw, -8.0, 7.0)
+        return jnp.sum((xq @ wq) ** 2)
+
+    g1 = jax.grad(with_kernel, argnums=(0, 1, 2, 3))(x, w, sx, sw)
+    g2 = jax.grad(with_lsq, argnums=(0, 1, 2, 3))(x, w, sx, sw)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_quant_matmul_saturation():
+    """Everything clamps to the max code when |x| >> s * qp."""
+    x = jnp.full((4, 4), 100.0)
+    w = jnp.full((4, 4), 100.0)
+    out = quant_matmul_pallas(x, w, 0.1, 0.1, 0.0, 15.0, -8.0, 7.0)
+    np.testing.assert_allclose(np.asarray(out), 4 * 1.5 * 0.7, rtol=1e-6)
+
+
+def test_quant_matmul_2bit_code_granularity():
+    """At 2 bits, outputs only involve codes {-2,-1,0,1} * s."""
+    x = rand(7, (8, 8), scale=0.5)
+    w = rand(8, (8, 8), scale=0.5)
+    out = quant_matmul_pallas(x, w, 0.25, 0.25, -2.0, 1.0, -2.0, 1.0)
+    # Exact multiples of s*s = 0.0625 after f32 accumulation.
+    scaled = np.asarray(out) / 0.0625
+    np.testing.assert_allclose(scaled, np.round(scaled), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# entropy / histogram
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([17, 256, 1000, 5000]),
+    bits=st.sampled_from([2, 3, 4, 8]),
+    scale=st.floats(0.02, 0.5),
+)
+def test_entropy_matches_ref(n, bits, scale):
+    w = rand(n, (n,), scale=0.3)
+    e = entropy_pallas(w, scale, bits)
+    n_bins = 1 << bits
+    qp = n_bins // 2 - 1
+    qn = -(n_bins // 2)
+    codes = jnp.clip(jnp.round(w / scale), qn, qp)
+    want = ref.entropy_ref(codes, n_bins, qn)
+    np.testing.assert_allclose(float(e), float(want), rtol=1e-4, atol=1e-5)
+
+
+def test_histogram_counts_everything():
+    codes0 = jnp.asarray([0.0, 1.0, 1.0, 3.0, 3.0, 3.0])
+    hist = histogram_pallas(codes0, 4, bs=4)  # padding path exercised
+    np.testing.assert_allclose(np.asarray(hist), [1, 2, 0, 3])
+
+
+def test_entropy_uniform_and_constant():
+    # Uniform over 16 codes: H = 4 bits.
+    w = (jnp.arange(1600) % 16 - 8).astype(jnp.float32) * 0.1
+    e = entropy_pallas(w, 0.1, 4)
+    assert abs(float(e) - 4.0) < 1e-3
+    # Constant: H ≈ 0.
+    e0 = entropy_pallas(jnp.zeros(512), 0.1, 4)
+    assert float(e0) < 1e-3
+
+
+@settings(**SETTINGS)
+@given(bits=st.sampled_from([2, 4]), seed=st.integers(0, 10_000))
+def test_entropy_bounded(bits, seed):
+    w = rand(seed, (777,), scale=0.4)
+    e = float(entropy_pallas(w, 0.1, bits))
+    assert -1e-6 <= e <= bits + 1e-6

@@ -1,0 +1,135 @@
+"""L2 model semantics: shapes, bits plumbing, training signal, layer tables."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import MODELS
+
+
+@pytest.fixture(scope="module")
+def small_models():
+    # Smaller eval batches for test speed; same code paths.
+    return MODELS
+
+
+@pytest.mark.parametrize("name", ["qresnet20", "qsegnet", "qbert"])
+def test_layer_table_consistent(name):
+    mdef = MODELS[name]
+    table = mdef.layer_table()
+    assert len(table) == mdef.n_bits()
+    # qindex is 0..L-1 in order.
+    assert [row["qindex"] for row in table] == list(range(len(table)))
+    for row in table:
+        assert row["macs"] > 0
+        assert row["weight_params"] > 0
+    # First layer fixed at 8-bit (paper §3.4.1); head fixed too.
+    assert table[0]["fixed_bits"] == 8 or name == "qbert"
+    assert table[-1]["fixed_bits"] == 8
+
+
+@pytest.mark.parametrize("name", ["qresnet20", "qsegnet", "qbert"])
+def test_forward_shapes(name):
+    mdef = MODELS[name]
+    params = mdef.init_params(seed=0)
+    x, y = mdef.example_batch(4)
+    bits = jnp.full((mdef.n_bits(),), 4.0)
+    loss, metric = mdef.loss_metric(params, (x, y), bits)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    assert 0.0 <= float(metric) <= 1.0
+
+
+@pytest.mark.parametrize("name", ["qresnet20", "qsegnet", "qbert"])
+def test_bits_vector_changes_output(name):
+    """Dropping precision must actually change the computation."""
+    mdef = MODELS[name]
+    params = mdef.init_params(seed=0)
+    x, y = mdef.example_batch(2)
+    # Use real data-ish inputs so quantization bites.
+    if name == "qbert":
+        x = jnp.ones_like(x) * 3
+    else:
+        x = jnp.linspace(0, 1, x.size).reshape(x.shape)
+    l4, _ = mdef.loss_metric(params, (x, y), jnp.full((mdef.n_bits(),), 4.0))
+    l2, _ = mdef.loss_metric(params, (x, y), jnp.full((mdef.n_bits(),), 2.0))
+    assert abs(float(l4) - float(l2)) > 1e-6
+
+
+def test_train_step_reduces_loss_qresnet():
+    mdef = MODELS["qresnet20"]
+    params = mdef.init_params(seed=0)
+    mom = jax.tree_util.tree_map(jnp.zeros_like, params)
+    bits = jnp.full((mdef.n_bits(),), 8.0)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.uniform(key, (8, 32, 32, 3))
+    y = (jnp.arange(8) % 10).astype(jnp.int32)
+    step = jax.jit(lambda p, m: mdef.train_step(p, m, x, y, 0.05, 0.0, bits))
+    losses = []
+    for _ in range(20):
+        params, mom, loss, _ = step(params, mom)
+        losses.append(float(loss))
+    # Overfitting one batch must drive loss down (momentum causes an
+    # initial transient, hence the longer horizon).
+    assert losses[-1] < losses[0], losses
+
+
+def test_vhv_step_shape_and_determinism():
+    mdef = MODELS["qsegnet"]
+    params = mdef.init_params(seed=0)
+    x, y = mdef.example_batch(2)
+    x = jnp.linspace(0, 1, x.size).reshape(x.shape)
+    bits = jnp.full((mdef.n_bits(),), 4.0)
+    seed = jnp.asarray([3], jnp.int32)
+    v1 = mdef.vhv_step(params, x, y, bits, seed)
+    v2 = mdef.vhv_step(params, x, y, bits, seed)
+    assert v1.shape == (mdef.n_bits(),)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2))
+    v3 = mdef.vhv_step(params, x, y, bits, jnp.asarray([4], jnp.int32))
+    assert not np.allclose(np.asarray(v1), np.asarray(v3))
+
+
+def test_eagl_step_matches_host_formula():
+    from compile.kernels.ref import entropy_ref
+    from compile.quantizer import weight_codes
+
+    mdef = MODELS["qsegnet"]
+    params = mdef.init_params(seed=0)
+    ents = np.asarray(mdef.eagl_step(params))
+    table = mdef.layer_table()
+    assert ents.shape == (len(table),)
+    # Recompute layer 1 by hand.
+    row = table[1]
+    node = params
+    for part in row["name"].split("."):
+        node = node[part]
+    b = row["fixed_bits"] or 4
+    codes = weight_codes(node["w"], jnp.abs(node["sw"]) + 1e-8, float(b))
+    want = float(entropy_ref(codes, 1 << b, -(1 << (b - 1))))
+    np.testing.assert_allclose(ents[1], want, rtol=1e-4)
+
+
+def test_qbert_span_logits_cover_sequence():
+    mdef = MODELS["qbert"]
+    params = mdef.init_params(seed=0)
+    x, y = mdef.example_batch(2)
+    bits = jnp.full((mdef.n_bits(),), 4.0)
+    loss, pred = mdef.eval_step(params, x, y, bits)
+    assert pred.shape == (2, 2)
+    assert (np.asarray(pred) >= 0).all() and (np.asarray(pred) < 32).all()
+
+
+def test_qsegnet_iu_counts_sane():
+    mdef = MODELS["qsegnet"]
+    params = mdef.init_params(seed=0)
+    x, y = mdef.example_batch(2)
+    bits = jnp.full((mdef.n_bits(),), 4.0)
+    _, iu = mdef.eval_step(params, x, y, bits)
+    iu = np.asarray(iu)
+    assert iu.shape == (2, 5)
+    # intersection <= union, all non-negative.
+    assert (iu[0] <= iu[1] + 1e-6).all()
+    assert (iu >= 0).all()
+    # unions sum >= total pixels (each pixel is in >= 1 class union).
+    assert iu[1].sum() >= 2 * 32 * 32

@@ -1,0 +1,85 @@
+"""LSQ quantizer semantics: forward grid, STE, step-size gradient."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.quantizer import init_step_size, lsq, qrange, quantize_weight, weight_codes
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+def test_qrange_values():
+    assert qrange(4.0, signed=True) == (-8.0, 7.0)
+    assert qrange(2.0, signed=True) == (-2.0, 1.0)
+    qn, qp = qrange(4.0, signed=False)
+    assert (qn, qp) == (0.0, 15.0)
+
+
+def test_qrange_traced_bits():
+    """Bit-widths arrive as runtime tensors; qrange must trace."""
+    f = jax.jit(lambda b: qrange(b, signed=True)[1])
+    assert float(f(jnp.asarray(4.0))) == 7.0
+    assert float(f(jnp.asarray(2.0))) == 1.0
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 10_000),
+    s=st.floats(0.01, 1.0),
+    bits=st.sampled_from([2, 4, 8]),
+)
+def test_forward_on_grid(seed, s, bits):
+    v = jax.random.normal(jax.random.PRNGKey(seed), (256,))
+    qn, qp = qrange(float(bits), signed=True)
+    out = np.asarray(lsq(v, s, qn, qp))
+    codes = out / s
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+    assert codes.min() >= qn - 1e-4 and codes.max() <= qp + 1e-4
+
+
+def test_ste_gradient_masks_out_of_range():
+    v = jnp.asarray([0.05, 10.0, -10.0, -0.3])
+    g = jax.grad(lambda v: jnp.sum(lsq(v, 0.1, -8.0, 7.0)))(v)
+    np.testing.assert_allclose(np.asarray(g), [1.0, 0.0, 0.0, 1.0])
+
+
+def test_step_gradient_signs():
+    """ds = qp for saturated-high, qn for saturated-low, round(v/s)-v/s in range."""
+    s = jnp.asarray(0.1)
+    # Saturated high: d out/d s = qp * gscale.
+    g_hi = jax.grad(lambda s: jnp.sum(lsq(jnp.asarray([5.0]), s, -8.0, 7.0)), argnums=0)(s)
+    gscale = 1.0 / np.sqrt(1 * 7.0)
+    np.testing.assert_allclose(float(g_hi), 7.0 * gscale, rtol=1e-5)
+    g_lo = jax.grad(lambda s: jnp.sum(lsq(jnp.asarray([-5.0]), s, -8.0, 7.0)), argnums=0)(s)
+    np.testing.assert_allclose(float(g_lo), -8.0 * gscale, rtol=1e-5)
+    # In range, v/s = 3.4: ds_elem = round(3.4) - 3.4 = -0.4.
+    g_in = jax.grad(lambda s: jnp.sum(lsq(jnp.asarray([0.34]), s, -8.0, 7.0)), argnums=0)(s)
+    np.testing.assert_allclose(float(g_in), -0.4 * gscale, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 1000), bits=st.sampled_from([2, 4, 8]))
+def test_codes_within_range(seed, bits):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (128,)) * 0.5
+    codes = np.asarray(weight_codes(w, 0.05, float(bits)))
+    qn, qp = qrange(float(bits), signed=True)
+    assert codes.min() >= qn and codes.max() <= qp
+
+
+def test_init_step_size_positive_and_scales():
+    w = jax.random.normal(jax.random.PRNGKey(0), (512,))
+    s4 = float(init_step_size(w, 4))
+    s2 = float(init_step_size(w, 2))
+    assert s4 > 0 and s2 > 0
+    # Fewer levels → larger step.
+    assert s2 > s4
+
+
+def test_quantize_weight_idempotent():
+    """Quantizing an already-quantized tensor is a no-op."""
+    w = jax.random.normal(jax.random.PRNGKey(1), (64,))
+    q1 = quantize_weight(w, 0.1, 4.0)
+    q2 = quantize_weight(q1, 0.1, 4.0)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)

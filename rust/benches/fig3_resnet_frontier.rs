@@ -1,0 +1,51 @@
+//! Fig. 3: the accuracy–throughput frontier for qresnet20 (and qresnet32
+//! unless quick): 8 budgets × methods × seeds, mean ± std, Wilcoxon
+//! significance of EAGL/ALPS vs HAWQ-v3 and the baselines.
+//!
+//! Paper shape: EAGL and ALPS at or above every comparator across the
+//! whole frontier; all methods converge at the 95-100% end.
+
+use mpq::coordinator::{Coordinator, ResultStore};
+use mpq::methods::MethodKind;
+use mpq::report;
+
+fn main() -> mpq::Result<()> {
+    let quick = mpq::bench::quick();
+    let artifacts = mpq::artifacts_dir();
+    let models: &[&str] = if quick { &["qresnet20"] } else { &["qresnet20", "qresnet32"] };
+    let budgets: &[f64] = if quick {
+        &[0.90, 0.80, 0.70, 0.60]
+    } else {
+        &[0.95, 0.90, 0.85, 0.80, 0.75, 0.70, 0.65, 0.60]
+    };
+    let seeds: Vec<u64> = (0..if quick { 1 } else { 3 }).collect();
+    let kinds: &[MethodKind] = if quick {
+        &[MethodKind::Eagl, MethodKind::Alps, MethodKind::HawqV3, MethodKind::FirstToLast]
+    } else {
+        &[MethodKind::Eagl, MethodKind::Alps, MethodKind::HawqV3,
+          MethodKind::Uniform, MethodKind::FirstToLast, MethodKind::LastToFirst]
+    };
+    for model in models {
+        let mut co = Coordinator::new(&artifacts, model, 7)?;
+        co.base_steps = if quick { 150 } else { 400 };
+        co.ft_steps = if quick { 30 } else { 120 };
+        co.eval_batches = 4;
+        co.mcfg.alps_steps = if quick { 10 } else { 40 };
+        co.mcfg.hawq_samples = 2;
+        co.mcfg.hawq_batches = 2;
+        println!("== Fig. 3 (analog): {model} frontier ==\n");
+        let mut store = ResultStore::open(&co.results_dir.join("sweep.jsonl"))?;
+        let records = co.sweep(kinds, budgets, &seeds, &mut store)?;
+        let cells = report::frontier(&records);
+        println!("{}", report::frontier_table(&cells, "top-1"));
+        println!("{}", report::frontier_plot(&cells, 64, 16));
+        for (a, b) in [("eagl", "hawq_v3"), ("alps", "hawq_v3"), ("eagl", "first_to_last")] {
+            for (budget, p) in report::significance(&cells, a, b) {
+                println!("Wilcoxon {a} vs {b} @ {:>3.0}%: p = {:.4}", budget * 100.0, p);
+            }
+        }
+        report::write_csv(&cells, &co.results_dir.join("fig3.csv"))?;
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Fig. 4: mIoU–throughput frontier for qsegnet (PSPNet analog): 4 budgets
+//! (95/85/75/65%), ALPS driven by the *loss* signal (Algorithm 1's
+//! segmentation branch).
+//!
+//! Paper shape: EAGL/ALPS statistically indistinguishable from HAWQ-v3
+//! (p > 0.1) and all three above first-to-last.
+
+use mpq::coordinator::{Coordinator, ResultStore};
+use mpq::methods::MethodKind;
+use mpq::report;
+
+fn main() -> mpq::Result<()> {
+    let quick = mpq::bench::quick();
+    let artifacts = mpq::artifacts_dir();
+    let mut co = Coordinator::new(&artifacts, "qsegnet", 7)?;
+    co.base_steps = if quick { 150 } else { 400 };
+    co.ft_steps = if quick { 30 } else { 120 };
+    co.eval_batches = 4;
+    co.mcfg.alps_steps = if quick { 10 } else { 40 };
+    co.mcfg.hawq_samples = 2;
+    co.mcfg.hawq_batches = 2;
+
+    let budgets = [0.95, 0.85, 0.75, 0.65];
+    let seeds: Vec<u64> = (0..if quick { 1 } else { 3 }).collect();
+    let kinds = [
+        MethodKind::Eagl,
+        MethodKind::Alps,
+        MethodKind::HawqV3,
+        MethodKind::FirstToLast,
+    ];
+    println!("== Fig. 4 (analog): qsegnet mIoU frontier ==\n");
+    let mut store = ResultStore::open(&co.results_dir.join("sweep.jsonl"))?;
+    let records = co.sweep(&kinds, &budgets, &seeds, &mut store)?;
+    let cells = report::frontier(&records);
+    println!("{}", report::frontier_table(&cells, "mIoU"));
+    println!("{}", report::frontier_plot(&cells, 64, 14));
+    for (a, b) in [("eagl", "hawq_v3"), ("alps", "hawq_v3"), ("eagl", "first_to_last")] {
+        for (budget, p) in report::significance(&cells, a, b) {
+            println!("Wilcoxon {a} vs {b} @ {:>3.0}%: p = {:.4}", budget * 100.0, p);
+        }
+    }
+    report::write_csv(&cells, &co.results_dir.join("fig4.csv"))?;
+    Ok(())
+}

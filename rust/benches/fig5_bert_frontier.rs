@@ -1,0 +1,42 @@
+//! Fig. 5: F1–throughput frontier for qbert (BERT/SQuAD analog): 4 budgets
+//! (90/80/70/60%), EAGL/ALPS vs the two topological baselines the paper
+//! uses for this task.
+//!
+//! Paper shape: EAGL and ALPS at or above both baselines across the
+//! frontier.
+
+use mpq::coordinator::{Coordinator, ResultStore};
+use mpq::methods::MethodKind;
+use mpq::report;
+
+fn main() -> mpq::Result<()> {
+    let quick = mpq::bench::quick();
+    let artifacts = mpq::artifacts_dir();
+    let mut co = Coordinator::new(&artifacts, "qbert", 7)?;
+    co.base_steps = if quick { 150 } else { 400 };
+    co.ft_steps = if quick { 30 } else { 120 };
+    co.eval_batches = 2;
+    co.mcfg.alps_steps = if quick { 8 } else { 30 };
+
+    let budgets = [0.90, 0.80, 0.70, 0.60];
+    let seeds: Vec<u64> = (0..if quick { 1 } else { 3 }).collect();
+    let kinds = [
+        MethodKind::Eagl,
+        MethodKind::Alps,
+        MethodKind::FirstToLast,
+        MethodKind::LastToFirst,
+    ];
+    println!("== Fig. 5 (analog): qbert F1 frontier ==\n");
+    let mut store = ResultStore::open(&co.results_dir.join("sweep.jsonl"))?;
+    let records = co.sweep(&kinds, &budgets, &seeds, &mut store)?;
+    let cells = report::frontier(&records);
+    println!("{}", report::frontier_table(&cells, "F1"));
+    println!("{}", report::frontier_plot(&cells, 64, 14));
+    for (a, b) in [("eagl", "first_to_last"), ("alps", "first_to_last"), ("eagl", "last_to_first")] {
+        for (budget, p) in report::significance(&cells, a, b) {
+            println!("Wilcoxon {a} vs {b} @ {:>3.0}%: p = {:.4}", budget * 100.0, p);
+        }
+    }
+    report::write_csv(&cells, &co.results_dir.join("fig5.csv"))?;
+    Ok(())
+}

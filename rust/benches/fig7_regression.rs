@@ -1,0 +1,89 @@
+//! Fig. 7 / Appendix A experiment 2: a linear regression over random
+//! mixed-precision configurations predicts network accuracy.
+//!
+//! Protocol: train N stratified random mixed 4/2-bit qresnet20 networks
+//! for a short fine-tune, regress final eval accuracy on the binary
+//! layer-precision vector, and report R on the training samples and a
+//! held-out 10%.
+//!
+//! Paper shape: R ≈ 0.999 on both — overall accuracy is very nearly a
+//! linear function of the per-layer choices.  The fitted coefficients feed
+//! Fig. 8 as the "oracle" gains.
+
+use mpq::coordinator::Coordinator;
+use mpq::jsonio::Json;
+use mpq::methods::prepare_mp_checkpoint;
+use mpq::quant::BitsConfig;
+use mpq::rng::Pcg32;
+use mpq::runtime::TrainState;
+use mpq::stats::{self, Ols};
+use mpq::train::{evaluate, finetune, TrainConfig};
+
+fn main() -> mpq::Result<()> {
+    let quick = mpq::bench::quick();
+    let artifacts = mpq::artifacts_dir();
+    let mut co = Coordinator::new(&artifacts, "qresnet20", 7)?;
+    co.base_steps = if quick { 150 } else { 400 };
+    let ft_steps = if quick { 20 } else { 60 };
+    let n_samples = if quick { 16 } else { 60 };
+    let eval_batches = 2;
+
+    let ck4 = co.base_checkpoint()?;
+    let n_groups = co.graph.groups.len();
+    println!("== Fig. 7 (analog): linear regression over {n_samples} random mixes ==\n");
+
+    // Stratified sampling: k groups at 2-bit, k swept over the range.
+    let mut rng = Pcg32::new(7, 77);
+    let mut xs: Vec<Vec<f64>> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+    for i in 0..n_samples {
+        let k = 1 + (i % (n_groups - 1));
+        let drop = rng.choose_k(n_groups, k);
+        let mut sel = vec![true; n_groups];
+        for d in drop {
+            sel[d] = false;
+        }
+        let bits = BitsConfig::from_selection(&co.graph, &sel, 4, 2);
+        let ck = prepare_mp_checkpoint(&ck4, &co.graph, &bits, 4)?;
+        let mut state = TrainState::new(ck);
+        let tcfg = TrainConfig { steps: ft_steps, lr0: 0.005, seed: i as u64, ..Default::default() };
+        finetune(&mut co.rt, &mut state, &co.data, &bits.to_f32(), &tcfg)?;
+        let ev = evaluate(&mut co.rt, &state.params, &co.data, &bits.to_f32(), eval_batches)?;
+        xs.push(sel.iter().map(|&s| if s { 1.0 } else { 0.0 }).collect());
+        ys.push(ev.metric);
+        if (i + 1) % 10 == 0 {
+            eprintln!("  {}/{} samples", i + 1, n_samples);
+        }
+    }
+
+    // 90/10 split.
+    let n_hold = (n_samples / 10).max(2);
+    let (xs_tr, xs_ho) = xs.split_at(n_samples - n_hold);
+    let (ys_tr, ys_ho) = ys.split_at(n_samples - n_hold);
+    let fit = Ols::fit(xs_tr, ys_tr)?;
+
+    let pred_tr: Vec<f64> = xs_tr.iter().map(|x| fit.predict(x)).collect();
+    let pred_ho: Vec<f64> = xs_ho.iter().map(|x| fit.predict(x)).collect();
+    let r_tr = stats::pearson(&pred_tr, ys_tr);
+    let r_ho = stats::pearson(&pred_ho, ys_ho);
+    println!("R (train samples):   {r_tr:.4}   (paper: 0.9996)");
+    println!("R (hold-out):        {r_ho:.4}   (paper: 0.9994)");
+
+    // Persist coefficients as the Fig. 8 oracle gains (per layer).
+    let coefs = fit.coefficients();
+    let mut per_layer = vec![0.0f64; co.graph.layers.len()];
+    for (g, group) in co.graph.groups.iter().enumerate() {
+        let share = coefs[g] / group.layer_idx.len() as f64;
+        for &li in &group.layer_idx {
+            per_layer[co.graph.layers[li].qindex] = share;
+        }
+    }
+    let payload = Json::obj(vec![
+        ("per_layer", Json::arr(per_layer.iter().map(|&g| Json::num(g)))),
+        ("wall_seconds", Json::num(0.0)),
+    ]);
+    let path = co.results_dir.join("gains_oracle.json");
+    std::fs::write(&path, payload.to_string_compact())?;
+    println!("\noracle gains written to {} (used by fig8_oracle_frontier)", path.display());
+    Ok(())
+}

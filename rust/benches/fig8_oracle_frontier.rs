@@ -1,0 +1,51 @@
+//! Fig. 8 / Appendix B: EAGL and ALPS frontiers vs the regression-
+//! coefficient "oracle" — the strongest (but impractical: the paper burned
+//! ~1080 A100-hours building it) gain estimate available.
+//!
+//! Requires `fig7_regression` to have run first (it writes
+//! `results/qresnet20/gains_oracle.json`); the oracle then rides the
+//! standard gain-cache path.
+//!
+//! Paper shape: EAGL/ALPS hug the oracle frontier — little headroom left.
+
+use mpq::coordinator::{Coordinator, ResultStore};
+use mpq::methods::MethodKind;
+use mpq::report;
+
+fn main() -> mpq::Result<()> {
+    let quick = mpq::bench::quick();
+    let artifacts = mpq::artifacts_dir();
+    let mut co = Coordinator::new(&artifacts, "qresnet20", 7)?;
+    co.base_steps = if quick { 150 } else { 400 };
+    co.ft_steps = if quick { 30 } else { 120 };
+    co.eval_batches = 4;
+    co.mcfg.alps_steps = if quick { 10 } else { 40 };
+
+    let oracle_path = co.results_dir.join("gains_oracle.json");
+    if !oracle_path.exists() {
+        println!("oracle gains missing — run `cargo bench --bench fig7_regression` first;");
+        println!("falling back to EAGL/ALPS-only frontier.");
+    }
+
+    let budgets = [0.90, 0.80, 0.70, 0.60];
+    let seeds: Vec<u64> = (0..if quick { 1 } else { 3 }).collect();
+    let mut kinds = vec![MethodKind::Eagl, MethodKind::Alps];
+    if oracle_path.exists() {
+        kinds.push(MethodKind::Oracle);
+    }
+    println!("== Fig. 8 (analog): oracle vs EAGL/ALPS frontiers ==\n");
+    let mut store = ResultStore::open(&co.results_dir.join("sweep.jsonl"))?;
+    let records = co.sweep(&kinds, &budgets, &seeds, &mut store)?;
+    let cells = report::frontier(&records);
+    println!("{}", report::frontier_table(&cells, "top-1"));
+    println!("{}", report::frontier_plot(&cells, 64, 14));
+    if oracle_path.exists() {
+        for (a, b) in [("eagl", "oracle"), ("alps", "oracle")] {
+            for (budget, p) in report::significance(&cells, a, b) {
+                println!("Wilcoxon {a} vs {b} @ {:>3.0}%: p = {:.4}", budget * 100.0, p);
+            }
+        }
+    }
+    report::write_csv(&cells, &co.results_dir.join("fig8.csv"))?;
+    Ok(())
+}

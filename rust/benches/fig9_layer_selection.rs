@@ -1,0 +1,39 @@
+//! Fig. 9: per-layer precision choices at the 70% budget, compared across
+//! methods.
+//!
+//! Paper shape: EAGL drops *fewer* layers to 2-bit at the same budget than
+//! HAWQ-v3/ALPS (it prefers dropping big-MAC low-entropy layers), and the
+//! total count of dropped layers does not predict final accuracy.
+
+use mpq::coordinator::Coordinator;
+use mpq::methods::MethodKind;
+use mpq::report;
+
+fn main() -> mpq::Result<()> {
+    let quick = mpq::bench::quick();
+    let artifacts = mpq::artifacts_dir();
+    let mut co = Coordinator::new(&artifacts, "qresnet20", 7)?;
+    co.base_steps = if quick { 150 } else { 400 };
+    co.mcfg.alps_steps = if quick { 10 } else { 40 };
+    co.mcfg.hawq_samples = 2;
+    co.mcfg.hawq_batches = 2;
+
+    println!("== Fig. 9 (analog): layer-wise precision choices @ 70% budget ==\n");
+    let kinds = [
+        MethodKind::Eagl,
+        MethodKind::Alps,
+        MethodKind::HawqV3,
+        MethodKind::Uniform,
+        MethodKind::FirstToLast,
+    ];
+    let mut choices = Vec::new();
+    for kind in kinds {
+        let bits = co.select(kind, 0.70)?;
+        let dropped = bits.count_at(&co.graph, 2);
+        println!("{:<15} {} of {} selectable layers at 2-bit", kind.name(), dropped, co.graph.groups.len());
+        choices.push((kind.name().to_string(), bits));
+    }
+    println!();
+    println!("{}", report::layer_selection_map(&co.graph, &choices));
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! Hot-path micro-benchmarks (EXPERIMENTS.md §Perf): per-layer latencies of
+//! everything the coordinator executes repeatedly.
+//!
+//!  * L2/L1: fused train_step / eval_step per model (batch included) —
+//!    the dominant cost of every experiment;
+//!  * L3: knapsack solve (paper: their Python took 2.3 s on ResNet-50 —
+//!    target ≥100× faster), EAGL metric, data generation, checkpoint I/O,
+//!    manifest JSON parse.
+
+use mpq::bench::{header, measure, try_measure};
+use mpq::data::{Dataset, Split};
+use mpq::graph::Graph;
+use mpq::knapsack;
+use mpq::quant::BitsConfig;
+use mpq::rng::Pcg32;
+use mpq::runtime::{Runtime, TrainState};
+
+fn main() -> mpq::Result<()> {
+    let quick = mpq::bench::quick();
+    let artifacts = mpq::artifacts_dir();
+    let iters = if quick { 5 } else { 20 };
+    header();
+
+    // -- L3 pure-host paths -------------------------------------------------
+    // Knapsack at paper scale: ResNet-50 has 54 quantizable layers; also a
+    // 1000-layer stress case at fine capacity resolution.
+    let mut rng = Pcg32::new(1, 1);
+    for &(n, cap) in &[(54usize, 1_000_000u64), (1000, 10_000_000)] {
+        let values: Vec<u64> = (0..n).map(|_| rng.below(10_000) as u64 + 1).collect();
+        let weights: Vec<u64> = (0..n).map(|_| rng.below(50_000) as u64 + 1).collect();
+        measure(&format!("knapsack n={n} cap={cap}"), 1, iters, || {
+            std::hint::black_box(knapsack::solve_01(&values, &weights, cap));
+        })
+        .report();
+    }
+
+    // EAGL over a realistic checkpoint.
+    if artifacts.join("qresnet20.manifest.json").exists() {
+        let rt = Runtime::load(&artifacts, "qresnet20")?;
+        let graph = Graph::load(&artifacts, "qresnet20")?;
+        let ck = rt.init_checkpoint()?;
+        measure("eagl metric qresnet20 (full ckpt)", 1, iters, || {
+            std::hint::black_box(mpq::eagl::checkpoint_entropies(&graph, &ck, 4).unwrap());
+        })
+        .report();
+
+        // Checkpoint I/O.
+        let tmp = std::env::temp_dir().join("mpq_perf.ckpt");
+        measure("checkpoint save qresnet20", 1, iters, || {
+            ck.save(&tmp).unwrap();
+        })
+        .report();
+        measure("checkpoint load qresnet20", 1, iters, || {
+            std::hint::black_box(mpq::ckpt::Checkpoint::load(&tmp).unwrap());
+        })
+        .report();
+        let _ = std::fs::remove_file(&tmp);
+
+        // Manifest parse.
+        let text = std::fs::read_to_string(artifacts.join("qresnet20.manifest.json"))?;
+        measure("manifest JSON parse", 1, iters, || {
+            std::hint::black_box(mpq::jsonio::parse(&text).unwrap());
+        })
+        .report();
+    }
+
+    // Data generation (host side of every train step).
+    for task in [mpq::runtime::Task::Cls, mpq::runtime::Task::Seg, mpq::runtime::Task::Span] {
+        let ds = Dataset::for_task(task, 7);
+        let mut i = 0u64;
+        measure(&format!("datagen {:?} batch=64", task), 1, iters, || {
+            i += 1;
+            std::hint::black_box(ds.batch(Split::Train, i, 64));
+        })
+        .report();
+    }
+
+    // -- L2/L1 executable hot paths ------------------------------------------
+    for model in ["qsegnet", "qresnet20", "qbert"] {
+        if !artifacts.join(format!("{model}.manifest.json")).exists() {
+            continue;
+        }
+        let mut rt = Runtime::load(&artifacts, model)?;
+        let graph = Graph::load(&artifacts, model)?;
+        let data = Dataset::for_task(rt.manifest.task, 7);
+        let bits = BitsConfig::uniform(&graph, 4).to_f32();
+        let ck = rt.init_checkpoint()?;
+        let (xt, yt) = data.batch(Split::Train, 0, rt.manifest.train_batch);
+        let (xe, ye) = data.batch(Split::Eval, 0, rt.manifest.eval_batch);
+        let mut state = TrainState::new(ck.clone());
+
+        let m = try_measure(&format!("{model} train_step (b={})", rt.manifest.train_batch), 2, iters, || {
+            rt.train_step(&mut state, &xt, &yt, 0.01, 1e-4, &bits)?;
+            Ok(())
+        })?;
+        m.report();
+        println!(
+            "{:<44} {:>10.1} samples/s",
+            format!("  -> {model} train throughput"),
+            m.throughput(rt.manifest.train_batch as f64)
+        );
+        let m = try_measure(&format!("{model} eval_step (b={})", rt.manifest.eval_batch), 1, iters, || {
+            rt.eval_step(&ck, &xe, &ye, &bits)?;
+            Ok(())
+        })?;
+        m.report();
+        println!(
+            "{:<44} {:>10.1} samples/s",
+            format!("  -> {model} eval throughput"),
+            m.throughput(rt.manifest.eval_batch as f64)
+        );
+    }
+    Ok(())
+}

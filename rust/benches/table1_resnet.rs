@@ -1,0 +1,57 @@
+//! Table 1: classification accuracy drop / compression ratio / GBOPs for
+//! mixed 4/2-bit qresnet20 networks at the ~70% budget, per method.
+//!
+//! Paper shape to reproduce: EAGL and ALPS recover (or exceed) the
+//! reference accuracy (negative drop) at ~10x compression while comparator
+//! selections lose more accuracy at the same budget.
+//!
+//! Env: MPQ_BENCH_QUICK=1 shrinks training budgets.
+
+use mpq::coordinator::{Coordinator, ResultStore};
+use mpq::methods::MethodKind;
+use mpq::report::{summary_table, SummaryRow};
+
+fn main() -> mpq::Result<()> {
+    let quick = mpq::bench::quick();
+    let artifacts = mpq::artifacts_dir();
+    let mut co = Coordinator::new(&artifacts, "qresnet20", 7)?;
+    co.base_steps = if quick { 150 } else { 400 };
+    co.ft_steps = if quick { 30 } else { 150 };
+    co.eval_batches = 4;
+    co.mcfg.alps_steps = if quick { 10 } else { 40 };
+    co.mcfg.hawq_samples = 2;
+    co.mcfg.hawq_batches = 2;
+
+    println!("== Table 1 (analog): qresnet20 @ 70% budget ==\n");
+    let ck8 = co.reference_checkpoint()?;
+    let ref_metric = co.eval_uniform(&ck8, 8)?.metric;
+    println!("8-bit reference top-1: {:.4}\n", ref_metric);
+
+    let store_path = co.results_dir.join("sweep.jsonl");
+    let mut store = ResultStore::open(&store_path)?;
+    let kinds = [
+        MethodKind::Eagl,
+        MethodKind::Alps,
+        MethodKind::HawqV3,
+        MethodKind::Uniform,
+        MethodKind::FirstToLast,
+    ];
+    let seeds: [u64; 1] = [0];
+    let records = co.sweep(&kinds, &[0.70], &seeds, &mut store)?;
+
+    let mut rows = Vec::new();
+    for r in &records {
+        rows.push(SummaryRow {
+            method: r.method.clone(),
+            metric_drop: ref_metric - r.metric,
+            ref_metric,
+            mp_metric: r.metric,
+            compression: r.compression,
+            gbops: r.gbops,
+        });
+    }
+    rows.sort_by(|a, b| a.metric_drop.partial_cmp(&b.metric_drop).unwrap());
+    println!("{}", summary_table(&rows, "top-1"));
+    println!("paper shape: EAGL/ALPS rows should sit at the top (lowest drop).");
+    Ok(())
+}

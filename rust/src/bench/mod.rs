@@ -1,0 +1,166 @@
+//! Benchmark harness substrate (offline environment — no criterion).
+//!
+//! Criterion-style measurement: warmup, timed iterations, mean/std/p50/p95
+//! plus throughput, with plain-text reporting.  Each `rust/benches/*.rs`
+//! target (one per paper table/figure) uses this harness with
+//! `harness = false`.
+
+use std::time::Instant;
+
+/// Timing summary over n iterations.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl Measurement {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}  n={}",
+            self.name,
+            fmt_s(self.mean_s),
+            fmt_s(self.std_s),
+            fmt_s(self.p50_s),
+            fmt_s(self.p95_s),
+            self.iters
+        );
+    }
+
+    /// items-per-second at the mean latency.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_s
+    }
+}
+
+pub fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Print the standard header for measurement tables.
+pub fn header() {
+    println!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "mean", "std", "p50", "p95"
+    );
+    println!("{}", "-".repeat(92));
+}
+
+/// Measure `f` with `warmup` + `iters` runs.
+pub fn measure<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(name, &times)
+}
+
+/// Measure a fallible operation, propagating the first error.
+pub fn try_measure<F: FnMut() -> anyhow::Result<()>>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> anyhow::Result<Measurement> {
+    for _ in 0..warmup {
+        f()?;
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f()?;
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(summarize(name, &times))
+}
+
+fn summarize(name: &str, times: &[f64]) -> Measurement {
+    let mut sorted = times.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = crate::stats::mean(times);
+    Measurement {
+        name: name.to_string(),
+        iters: times.len(),
+        mean_s: mean,
+        std_s: crate::stats::std_dev(times),
+        p50_s: percentile(&sorted, 0.50),
+        p95_s: percentile(&sorted, 0.95),
+        min_s: sorted.first().copied().unwrap_or(f64::NAN),
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+/// Quick-mode switch shared by all bench targets: `MPQ_BENCH_QUICK=1`
+/// shrinks workloads so the full suite completes on the CI box.
+pub fn quick() -> bool {
+    std::env::var("MPQ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let m = measure("noop-ish", 2, 20, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(m.iters, 20);
+        assert!(m.mean_s >= 0.0 && m.mean_s.is_finite());
+        assert!(m.p50_s <= m.p95_s + 1e-12);
+        assert!(m.min_s <= m.mean_s + 1e-12);
+    }
+
+    #[test]
+    fn formats_scales() {
+        assert!(fmt_s(2e-9).ends_with("ns"));
+        assert!(fmt_s(2e-6).ends_with("µs"));
+        assert!(fmt_s(2e-3).ends_with("ms"));
+        assert!(fmt_s(2.0).ends_with('s'));
+    }
+
+    #[test]
+    fn try_measure_propagates() {
+        let r = try_measure("fails", 0, 3, || anyhow::bail!("no"));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn throughput_inverse_of_latency() {
+        let m = Measurement {
+            name: "t".into(),
+            iters: 1,
+            mean_s: 0.5,
+            std_s: 0.0,
+            p50_s: 0.5,
+            p95_s: 0.5,
+            min_s: 0.5,
+        };
+        assert!((m.throughput(10.0) - 20.0).abs() < 1e-12);
+    }
+}

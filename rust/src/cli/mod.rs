@@ -1,0 +1,157 @@
+//! CLI argument parsing substrate (offline environment — no clap).
+//!
+//! Supports `mpq <subcommand> [--flag value] [--switch]` with typed
+//! accessors, defaults, and generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand plus `--key value` / `--switch` flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> crate::Result<Args> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                anyhow::ensure!(!name.is_empty(), "bare '--' is not a flag");
+                // `--key=value`, `--key value`, or boolean `--switch`.
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> crate::Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> crate::Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} expects an integer: {e}")),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> crate::Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} expects an integer: {e}")),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> crate::Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} expects a number: {e}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// Comma-separated list flag.
+    pub fn list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.flags.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Comma-separated f64 list flag.
+    pub fn f64_list(&self, key: &str, default: &[f64]) -> crate::Result<Vec<f64>> {
+        match self.flags.get(key) {
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--{key}: bad number '{s}': {e}"))
+                })
+                .collect(),
+            None => Ok(default.to_vec()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("sweep --model qresnet20 --seeds 3 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("sweep"));
+        assert_eq!(a.str("model", "x"), "qresnet20");
+        assert_eq!(a.usize("seeds", 1).unwrap(), 3);
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax_and_lists() {
+        let a = parse("run --budgets=0.9,0.7 --methods eagl,alps");
+        assert_eq!(a.f64_list("budgets", &[]).unwrap(), vec![0.9, 0.7]);
+        assert_eq!(a.list("methods", &[]), vec!["eagl", "alps"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("info");
+        assert_eq!(a.f64("lr", 0.01).unwrap(), 0.01);
+        assert_eq!(a.str("model", "qresnet20"), "qresnet20");
+        assert_eq!(a.list("methods", &["eagl"]), vec!["eagl"]);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("x --n abc");
+        assert!(a.usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("report file1 file2");
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+}

@@ -1,0 +1,117 @@
+//! EAGL — Entropy Approximation Guided Layer selection (paper §3.3,
+//! Algorithm 2, Appendix E).
+//!
+//! `G_l = H(p̂_l^b)`: the Shannon entropy of the empirical distribution of
+//! layer *l*'s quantized weight codes at the checkpoint precision `b`.
+//! Needs only the trained checkpoint — no training data, no accelerator —
+//! which is exactly the paper's headline: 3.15 CPU-*seconds* for ResNet-50
+//! vs hours of GPU time for ALPS/HAWQ (Table 3).
+//!
+//! This is the native host implementation; it is cross-checked against the
+//! L1 Pallas histogram kernel through the `eagl_step` artifact
+//! (rust/tests/runtime_integration.rs) and against the paper's Appendix E
+//! reference semantics in unit tests here.
+
+use crate::ckpt::Checkpoint;
+use crate::graph::Graph;
+use crate::quant::{qrange_signed, weight_codes};
+
+/// Entropy (bits) of the empirical distribution of `codes`, each in
+/// [-2^(b-1), 2^(b-1)-1].  Matches Appendix E: entropy of (p + eps).
+pub fn entropy_of_codes(codes: &[i32], bits: u32) -> f64 {
+    let n_bins = 1usize << bits;
+    let (qn, _) = qrange_signed(bits);
+    let mut hist = vec![0u64; n_bins];
+    for &c in codes {
+        let idx = (c - qn as i32) as usize;
+        debug_assert!(idx < n_bins);
+        hist[idx] += 1;
+    }
+    let n = codes.len() as f64;
+    let eps = 1e-10;
+    let mut h = 0.0;
+    for &count in &hist {
+        let p = count as f64 / n + eps;
+        h -= p * p.log2();
+    }
+    h
+}
+
+/// EAGL entropy of one weight tensor under its learned step size.
+pub fn layer_entropy(w: &[f32], step: f32, bits: u32) -> f64 {
+    let s = step.abs().max(1e-8);
+    entropy_of_codes(&weight_codes(w, s, bits), bits)
+}
+
+/// Per-layer EAGL entropies for a whole checkpoint, in qindex order
+/// (Algorithm 2).  Fixed layers are scored at their pinned precision —
+/// they never enter the knapsack, but the values are reported for Fig. 2.
+pub fn checkpoint_entropies(graph: &Graph, ck: &Checkpoint, ckpt_bits: u32) -> crate::Result<Vec<f64>> {
+    let mut out = vec![0.0; graph.layers.len()];
+    for layer in &graph.layers {
+        let base = layer.name.replace('.', "/");
+        let w = ck
+            .get(&format!("{base}/w"))
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing {base}/w"))?;
+        let s = ck
+            .get(&format!("{base}/sw"))
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing {base}/sw"))?;
+        let bits = layer.fixed_bits.unwrap_or(ckpt_bits);
+        out[layer.qindex] = layer_entropy(w.f32s(), s.item(), bits);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn uniform_codes_have_max_entropy() {
+        // All 16 4-bit codes equally often → H = 4 bits.
+        let codes: Vec<i32> = (0..160).map(|i| (i % 16) - 8).collect();
+        let h = entropy_of_codes(&codes, 4);
+        assert!((h - 4.0).abs() < 1e-6, "H = {h}");
+    }
+
+    #[test]
+    fn constant_codes_have_zero_entropy() {
+        let codes = vec![3i32; 1000];
+        let h = entropy_of_codes(&codes, 4);
+        assert!(h.abs() < 1e-4, "H = {h}");
+    }
+
+    #[test]
+    fn entropy_monotone_in_spread() {
+        // Narrow Gaussian (most mass in few bins) < wide Gaussian.
+        let mut rng = Pcg32::new(1, 1);
+        let narrow: Vec<f32> = (0..4096).map(|_| rng.normal() * 0.02).collect();
+        let wide: Vec<f32> = (0..4096).map(|_| rng.normal() * 0.2).collect();
+        let h_narrow = layer_entropy(&narrow, 0.1, 4);
+        let h_wide = layer_entropy(&wide, 0.1, 4);
+        assert!(
+            h_narrow < h_wide,
+            "narrow {h_narrow} should be < wide {h_wide}"
+        );
+    }
+
+    #[test]
+    fn entropy_bounded_by_bits() {
+        let mut rng = Pcg32::new(2, 5);
+        for &bits in &[2u32, 4, 8] {
+            let w: Vec<f32> = (0..2048).map(|_| rng.normal()).collect();
+            let h = layer_entropy(&w, 0.3, bits);
+            assert!(h >= 0.0 && h <= bits as f64 + 1e-9, "b={bits} H={h}");
+        }
+    }
+
+    #[test]
+    fn matches_hand_computed_distribution() {
+        // p = [0.5, 0.25, 0.25] over codes {-2,-1,0} at 2 bits →
+        // H = 1.5 bits.
+        let codes = vec![-2, -2, -1, 0];
+        let h = entropy_of_codes(&codes, 2);
+        assert!((h - 1.5).abs() < 1e-4, "H = {h}");
+    }
+}

@@ -1,0 +1,205 @@
+//! Network layer graph: the manifest-driven layer table the selection
+//! pipeline operates on.
+//!
+//! Responsibilities (paper §3.4.1 "Setting layer precision"):
+//!  * per-layer computational cost (MACs → BMACs under a bit-width);
+//!  * **linked layers** — layers whose activations feed the same consumer
+//!    must share precision (e.g. a residual downsample conv and the block
+//!    conv joining the same ReLU).  Linked layers form one knapsack item
+//!    whose cost/gain is the sum over members (paper Fig. 9 caption);
+//!  * fixed-precision rules — first/last layers at 8-bit; such layers are
+//!    excluded from the budget (they contribute no selectable BMACs).
+
+use std::path::Path;
+
+use crate::jsonio::Json;
+
+/// One row of the manifest layer table.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: String,
+    /// Index into the runtime `bits` vector.
+    pub qindex: usize,
+    pub link_group: String,
+    pub macs: u64,
+    pub weight_params: u64,
+    /// `Some(b)` → pinned at b bits, excluded from selection and budget.
+    pub fixed_bits: Option<u32>,
+}
+
+/// A selectable knapsack item: one or more linked layers.
+#[derive(Debug, Clone)]
+pub struct Group {
+    pub name: String,
+    pub layer_idx: Vec<usize>,
+    /// Σ MACs over member layers.
+    pub macs: u64,
+}
+
+/// The layer graph of one model.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub model: String,
+    pub layers: Vec<Layer>,
+    /// Selectable link groups only (fixed layers excluded), in topological
+    /// order of their first member.
+    pub groups: Vec<Group>,
+}
+
+impl Graph {
+    pub fn from_manifest(manifest: &Json) -> crate::Result<Graph> {
+        let model = manifest
+            .at(&["model"])
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing model name"))?
+            .to_string();
+        let rows = manifest
+            .at(&["layers"])
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing layers"))?;
+        let mut layers = Vec::with_capacity(rows.len());
+        for row in rows {
+            layers.push(Layer {
+                name: row.at(&["name"]).as_str().unwrap_or_default().to_string(),
+                kind: row.at(&["kind"]).as_str().unwrap_or_default().to_string(),
+                qindex: row
+                    .at(&["qindex"])
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("layer missing qindex"))?,
+                link_group: row
+                    .at(&["link_group"])
+                    .as_str()
+                    .unwrap_or_default()
+                    .to_string(),
+                macs: row.at(&["macs"]).as_f64().unwrap_or(0.0) as u64,
+                weight_params: row.at(&["weight_params"]).as_f64().unwrap_or(0.0) as u64,
+                fixed_bits: row.at(&["fixed_bits"]).as_f64().map(|b| b as u32),
+            });
+        }
+        // Build selectable groups preserving first-appearance order.
+        let mut groups: Vec<Group> = Vec::new();
+        for (i, layer) in layers.iter().enumerate() {
+            if layer.fixed_bits.is_some() {
+                continue;
+            }
+            match groups.iter_mut().find(|g| g.name == layer.link_group) {
+                Some(g) => {
+                    g.layer_idx.push(i);
+                    g.macs += layer.macs;
+                }
+                None => groups.push(Group {
+                    name: layer.link_group.clone(),
+                    layer_idx: vec![i],
+                    macs: layer.macs,
+                }),
+            }
+        }
+        Ok(Graph {
+            model,
+            layers,
+            groups,
+        })
+    }
+
+    pub fn load(artifacts: &Path, model: &str) -> crate::Result<Graph> {
+        let manifest = crate::jsonio::parse_file(&artifacts.join(format!("{model}.manifest.json")))?;
+        Graph::from_manifest(&manifest)
+    }
+
+    /// Number of entries in the runtime bits vector.
+    pub fn n_bits(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total *selectable* BMACs when every selectable group runs at `b`.
+    /// Fixed layers do not count toward the budget (paper §3.4.1).
+    pub fn selectable_bmacs(&self, b: u32) -> u64 {
+        self.groups.iter().map(|g| g.macs * b as u64).sum()
+    }
+
+    /// Budget in BMACs at a fraction of the all-`b_hi` cost.  The paper
+    /// samples budgets between the 4-bit (100%) and 2-bit (50%) costs.
+    pub fn budget_at(&self, fraction: f64, b_hi: u32) -> u64 {
+        (self.selectable_bmacs(b_hi) as f64 * fraction).round() as u64
+    }
+
+    /// Per-group extra BMAC cost of staying at `b_hi` instead of `b_lo` —
+    /// the knapsack item weight (§3.1).
+    pub fn group_weights(&self, b_hi: u32, b_lo: u32) -> Vec<u64> {
+        self.groups
+            .iter()
+            .map(|g| g.macs * (b_hi - b_lo) as u64)
+            .collect()
+    }
+
+    /// Aggregate per-layer values over link groups (gain estimates are
+    /// produced per layer; the knapsack item value is the sum over
+    /// members, §3.4.1).
+    pub fn aggregate_by_group(&self, per_layer: &[f64]) -> Vec<f64> {
+        self.groups
+            .iter()
+            .map(|g| g.layer_idx.iter().map(|&i| per_layer[self.layers[i].qindex]).sum())
+            .collect()
+    }
+
+    /// The knapsack base cost: all selectable groups at `b_lo` (this part
+    /// is spent regardless of selection).
+    pub fn base_bmacs(&self, b_lo: u32) -> u64 {
+        self.groups.iter().map(|g| g.macs * b_lo as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonio;
+
+    fn toy_manifest() -> Json {
+        jsonio::parse(
+            r#"{
+          "model": "toy",
+          "layers": [
+            {"name":"stem","kind":"conv","qindex":0,"link_group":"stem",
+             "macs":1000,"weight_params":100,"fixed_bits":8},
+            {"name":"a","kind":"conv","qindex":1,"link_group":"a",
+             "macs":2000,"weight_params":200,"fixed_bits":null},
+            {"name":"b","kind":"conv","qindex":2,"link_group":"ab",
+             "macs":3000,"weight_params":300,"fixed_bits":null},
+            {"name":"b_down","kind":"conv","qindex":3,"link_group":"ab",
+             "macs":500,"weight_params":50,"fixed_bits":null},
+            {"name":"head","kind":"linear","qindex":4,"link_group":"head",
+             "macs":100,"weight_params":10,"fixed_bits":8}
+          ]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn groups_exclude_fixed_and_merge_links() {
+        let g = Graph::from_manifest(&toy_manifest()).unwrap();
+        assert_eq!(g.groups.len(), 2);
+        assert_eq!(g.groups[0].name, "a");
+        assert_eq!(g.groups[1].name, "ab");
+        assert_eq!(g.groups[1].layer_idx.len(), 2);
+        assert_eq!(g.groups[1].macs, 3500);
+    }
+
+    #[test]
+    fn budgets_and_weights() {
+        let g = Graph::from_manifest(&toy_manifest()).unwrap();
+        // selectable MACs = 2000 + 3500 = 5500 → 4-bit BMACs = 22000.
+        assert_eq!(g.selectable_bmacs(4), 22_000);
+        assert_eq!(g.budget_at(0.5, 4), 11_000); // == all-2-bit cost
+        assert_eq!(g.group_weights(4, 2), vec![4000, 7000]);
+        assert_eq!(g.base_bmacs(2), 11_000);
+    }
+
+    #[test]
+    fn group_aggregation() {
+        let g = Graph::from_manifest(&toy_manifest()).unwrap();
+        let per_layer = vec![9.0, 1.0, 2.0, 3.0, 9.0]; // by qindex
+        assert_eq!(g.aggregate_by_group(&per_layer), vec![1.0, 5.0]);
+    }
+}

@@ -1,0 +1,212 @@
+//! Multiple-Choice Knapsack (MCKP) — the paper's §5 extension: "both
+//! methods can be used with more than two precision choices by changing
+//! the optimizer".
+//!
+//! Each selectable group becomes a *class* with one item per precision
+//! choice (e.g. {2, 4, 8} bits); exactly one item per class must be
+//! picked.  value(item) = gain estimate scaled by the precision's headroom
+//! (see [`gain_at`]), weight(item) = BMACs at that precision.  Solved with
+//! the classic DP over (class, capacity) in O(capacity · Σ choices),
+//! with the same capacity rescaling bound as the 0-1 solver.
+
+/// One precision option inside a class.
+#[derive(Debug, Clone, Copy)]
+pub struct Choice {
+    /// Value of picking this option (already quantized to an integer).
+    pub value: u64,
+    /// Weight (BMACs) of this option.
+    pub weight: u64,
+}
+
+/// Result: one chosen option index per class.
+#[derive(Debug, Clone)]
+pub struct McSelection {
+    pub choice_per_class: Vec<usize>,
+    pub total_value: u64,
+    pub total_weight: u64,
+}
+
+const MAX_CAP: usize = 1 << 18;
+
+/// Solve MCKP exactly (after capacity rescaling): maximize Σ value s.t.
+/// Σ weight ≤ capacity, exactly one choice per class.  Returns None when
+/// even the lightest choice per class exceeds capacity.
+pub fn solve_mckp(classes: &[Vec<Choice>], capacity: u64) -> Option<McSelection> {
+    let scale = (capacity as usize / MAX_CAP).max(1) as u64;
+    let cap = (capacity / scale) as usize;
+    let n = classes.len();
+    if n == 0 {
+        return Some(McSelection {
+            choice_per_class: vec![],
+            total_value: 0,
+            total_weight: 0,
+        });
+    }
+    const NEG: i64 = i64::MIN / 4;
+    // dp[c] = best value at weight ≤ c after processing k classes.
+    let mut dp = vec![NEG; cap + 1];
+    dp[0] = 0;
+    // chosen[k][c]: option picked for class k at column c.
+    let mut chosen = vec![vec![u8::MAX; cap + 1]; n];
+    for (k, class) in classes.iter().enumerate() {
+        assert!(class.len() < u8::MAX as usize, "too many choices per class");
+        let mut next = vec![NEG; cap + 1];
+        for (oi, opt) in class.iter().enumerate() {
+            let w = opt.weight.div_ceil(scale) as usize;
+            if w > cap {
+                continue;
+            }
+            for c in w..=cap {
+                if dp[c - w] == NEG {
+                    continue;
+                }
+                let cand = dp[c - w] + opt.value as i64;
+                if cand > next[c] {
+                    next[c] = cand;
+                    chosen[k][c] = oi as u8;
+                }
+            }
+        }
+        dp = next;
+    }
+    // Best reachable column.
+    let (mut c, _best) = dp
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, &v)| v)
+        .map(|(i, &v)| (i, v))?;
+    if dp[c] == NEG {
+        return None;
+    }
+    let total_value = dp[c] as u64;
+    // Backtrack.
+    let mut picks = vec![0usize; n];
+    let mut total_weight = 0u64;
+    for k in (0..n).rev() {
+        let oi = chosen[k][c];
+        if oi == u8::MAX {
+            return None; // unreachable state — no feasible assignment
+        }
+        picks[k] = oi as usize;
+        let opt = classes[k][oi as usize];
+        total_weight += opt.weight;
+        c -= opt.weight.div_ceil(scale) as usize;
+    }
+    Some(McSelection {
+        choice_per_class: picks,
+        total_value,
+        total_weight,
+    })
+}
+
+/// Scale a per-layer gain estimate to a precision choice's value.
+///
+/// The binary formulation's gain `G_l` measures the benefit of `b_hi`
+/// over `b_lo`.  For k choices we interpolate on the paper's own axis —
+/// entropy headroom: value(b) = G_l · (b − b_min) / (b_max − b_min),
+/// quantized to the standard 1..=10000 grid.  This preserves the binary
+/// case exactly (value(b_lo) = 0, value(b_hi) = G).
+pub fn gain_at(gain_q: u64, bits: u32, b_min: u32, b_max: u32) -> u64 {
+    if b_max == b_min {
+        return gain_q;
+    }
+    gain_q * (bits - b_min) as u64 / (b_max - b_min) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cls(opts: &[(u64, u64)]) -> Vec<Choice> {
+        opts.iter().map(|&(value, weight)| Choice { value, weight }).collect()
+    }
+
+    #[test]
+    fn picks_one_per_class() {
+        let classes = vec![
+            cls(&[(0, 2), (5, 4), (9, 8)]),
+            cls(&[(0, 2), (8, 4), (9, 8)]),
+        ];
+        // capacity 8: best is class0 low (0,2) wait — options: (0,2)+(8,4)=8
+        // w=6; (5,4)+(8,4)=13 w=8; (9,8)+(0,2)=9 w=10 infeasible.
+        let sel = solve_mckp(&classes, 8).unwrap();
+        assert_eq!(sel.choice_per_class, vec![1, 1]);
+        assert_eq!(sel.total_value, 13);
+        assert_eq!(sel.total_weight, 8);
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        let classes = vec![cls(&[(1, 10)]), cls(&[(1, 10)])];
+        assert!(solve_mckp(&classes, 5).is_none());
+    }
+
+    #[test]
+    fn reduces_to_01_knapsack() {
+        // Two choices per class with low-weight zero-value option == 0-1
+        // knapsack on the deltas.
+        let gains = [30u64, 28, 28];
+        let extra = [5u64, 4, 4];
+        let classes: Vec<Vec<Choice>> = gains
+            .iter()
+            .zip(&extra)
+            .map(|(&g, &w)| cls(&[(0, 1), (g, 1 + w)]))
+            .collect();
+        // base weight 3; capacity 3 + 8 = 11 → same as 0-1 cap 8 → items 2+3.
+        let sel = solve_mckp(&classes, 11).unwrap();
+        assert_eq!(sel.choice_per_class, vec![0, 1, 1]);
+        assert_eq!(sel.total_value, 56);
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_instances() {
+        let mut rng = crate::rng::Pcg32::new(13, 4);
+        for _ in 0..60 {
+            let n = 1 + rng.below(6) as usize;
+            let classes: Vec<Vec<Choice>> = (0..n)
+                .map(|_| {
+                    let k = 1 + rng.below(4) as usize;
+                    (0..k)
+                        .map(|_| Choice {
+                            value: rng.below(50) as u64,
+                            weight: 1 + rng.below(20) as u64,
+                        })
+                        .collect()
+                })
+                .collect();
+            let cap = rng.below(60) as u64;
+            let got = solve_mckp(&classes, cap);
+            // Brute force over all assignments.
+            let mut best: Option<(u64, u64)> = None;
+            let counts: Vec<usize> = classes.iter().map(|c| c.len()).collect();
+            let total: usize = counts.iter().product();
+            for mut idx in 0..total {
+                let (mut v, mut w) = (0u64, 0u64);
+                for (k, class) in classes.iter().enumerate() {
+                    let oi = idx % counts[k];
+                    idx /= counts[k];
+                    v += class[oi].value;
+                    w += class[oi].weight;
+                }
+                if w <= cap && best.map(|(bv, _)| v > bv).unwrap_or(true) {
+                    best = Some((v, w));
+                }
+            }
+            match (got, best) {
+                (None, None) => {}
+                (Some(s), Some((bv, _))) => {
+                    assert_eq!(s.total_value, bv, "classes {classes:?} cap {cap}");
+                    assert!(s.total_weight <= cap);
+                }
+                (g, b) => panic!("feasibility mismatch: {g:?} vs {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn gain_interpolation_endpoints() {
+        assert_eq!(gain_at(10_000, 2, 2, 8), 0);
+        assert_eq!(gain_at(10_000, 8, 2, 8), 10_000);
+        assert_eq!(gain_at(9_000, 4, 2, 8), 3_000);
+    }
+}

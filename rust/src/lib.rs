@@ -1,0 +1,67 @@
+//! # mpq — Mixed Precision Quantization framework
+//!
+//! Rust + JAX + Pallas reproduction of *"Efficient and Effective Methods for
+//! Mixed Precision Neural Network Quantization for Faster, Energy-efficient
+//! Inference"* (Bablani, McKinstry et al., 2023).
+//!
+//! The paper's contribution is a layer-precision-selection pipeline:
+//!
+//! 1. estimate a per-layer **accuracy gain** `G_l` for keeping layer *l* at
+//!    the higher precision — via [`methods`]`::Eagl` (weight-distribution
+//!    entropy, Algorithm 2), `::Alps` (one-epoch per-layer fine-tune,
+//!    Algorithm 1), or the re-implemented comparators (`::HawqV3`,
+//!    topological and uniform baselines, the Appendix-B regression oracle);
+//! 2. pick per-layer precisions under a BMAC budget with the 0-1 integer
+//!    [`knapsack`] solver (§3.1);
+//! 3. fine-tune the resulting mixed-precision network with LSQ
+//!    ([`train`], executing AOT-lowered JAX/Pallas artifacts through
+//!    [`runtime`]) and report task metrics along the whole
+//!    accuracy–throughput frontier ([`coordinator`], [`report`]).
+//!
+//! Python/JAX/Pallas only ever runs at build time (`make artifacts`); this
+//! crate is the entire runtime (DESIGN.md §2).
+//!
+//! Substrate modules ([`jsonio`], [`rng`], [`tensor`], [`cli`], [`bench`],
+//! [`prop`], [`ckpt`]) are built from scratch — the build environment is
+//! offline with only the `xla` dependency tree vendored.
+
+pub mod bench;
+pub mod ckpt;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod eagl;
+pub mod graph;
+pub mod jsonio;
+pub mod knapsack;
+pub mod methods;
+pub mod prop;
+pub mod quant;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod stats;
+pub mod tensor;
+pub mod train;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Root of the artifacts directory (override with `MPQ_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Some(p) = std::env::var_os("MPQ_ARTIFACTS") {
+        return std::path::PathBuf::from(p);
+    }
+    // Walk up from cwd until an `artifacts/` directory is found so examples,
+    // tests and benches work from any subdirectory.
+    let mut dir = std::env::current_dir().unwrap_or_default();
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return std::path::PathBuf::from("artifacts");
+        }
+    }
+}

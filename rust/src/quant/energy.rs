@@ -1,0 +1,102 @@
+//! Energy model for mixed-precision inference accounting.
+//!
+//! The paper motivates mixed precision by NorthPole-style deployment
+//! (Modha et al., 2023): integer MAC energy scales roughly with the
+//! product of operand widths (≈ b² for matched weight/activation
+//! precision), and weight movement scales linearly with bits.  This
+//! module provides that first-order model so reports can rank
+//! configurations by estimated energy as well as BMACs — the paper's
+//! "lower power, higher throughput solutions" framing (§5).
+//!
+//! Units are normalized to an 8-bit MAC = 1.0; absolute joules depend on
+//! silicon and are out of scope (DESIGN.md §3 NorthPole substitution).
+
+use crate::graph::Graph;
+use crate::quant::BitsConfig;
+
+/// First-order energy coefficients (relative to an 8-bit MAC).
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    /// Energy of one b-bit × b-bit MAC relative to 8×8: (b/8)².
+    pub mac_exponent: f64,
+    /// Relative cost of moving one weight bit (per MAC-amortized access).
+    pub weight_move_per_bit: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            mac_exponent: 2.0,
+            weight_move_per_bit: 0.05,
+        }
+    }
+}
+
+impl EnergyModel {
+    /// Estimated energy of one forward pass (normalized 8-bit-MAC units).
+    pub fn forward_energy(&self, graph: &Graph, bits: &BitsConfig) -> f64 {
+        let mut total = 0.0;
+        for layer in &graph.layers {
+            let b = bits.bits[layer.qindex] as f64;
+            let mac = (b / 8.0).powf(self.mac_exponent);
+            total += mac * layer.macs as f64;
+            total += self.weight_move_per_bit * b * layer.weight_params as f64;
+        }
+        total
+    }
+
+    /// Energy ratio vs an all-`b_ref` network (>1 ⇒ cheaper than ref).
+    pub fn savings_vs(&self, graph: &Graph, bits: &BitsConfig, b_ref: u32) -> f64 {
+        let ref_cfg = BitsConfig::uniform(graph, b_ref);
+        self.forward_energy(graph, &ref_cfg) / self.forward_energy(graph, bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonio;
+
+    fn toy() -> Graph {
+        Graph::from_manifest(
+            &jsonio::parse(
+                r#"{"model":"toy","layers":[
+              {"name":"a","kind":"conv","qindex":0,"link_group":"a",
+               "macs":1000,"weight_params":100,"fixed_bits":null},
+              {"name":"b","kind":"conv","qindex":1,"link_group":"b",
+               "macs":1000,"weight_params":100,"fixed_bits":null}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn quadratic_mac_scaling() {
+        let g = toy();
+        let m = EnergyModel::default();
+        let e8 = m.forward_energy(&g, &BitsConfig::uniform(&g, 8));
+        let e4 = m.forward_energy(&g, &BitsConfig::uniform(&g, 4));
+        let e2 = m.forward_energy(&g, &BitsConfig::uniform(&g, 2));
+        assert!(e8 > e4 && e4 > e2);
+        // MAC term dominates here: 4-bit ≈ ¼ of 8-bit MAC energy.
+        let mac8 = 2000.0;
+        let mac4 = 2000.0 * 0.25;
+        assert!((e8 - (mac8 + 0.05 * 8.0 * 200.0)).abs() < 1e-9);
+        assert!((e4 - (mac4 + 0.05 * 4.0 * 200.0)).abs() < 1e-9);
+        let _ = e2;
+    }
+
+    #[test]
+    fn savings_monotone_in_dropped_layers() {
+        let g = toy();
+        let m = EnergyModel::default();
+        let all4 = BitsConfig::uniform(&g, 4);
+        let mixed = BitsConfig::from_selection(&g, &[true, false], 4, 2);
+        let all2 = BitsConfig::from_selection(&g, &[false, false], 4, 2);
+        let s4 = m.savings_vs(&g, &all4, 8);
+        let sm = m.savings_vs(&g, &mixed, 8);
+        let s2 = m.savings_vs(&g, &all2, 8);
+        assert!(s2 > sm && sm > s4 && s4 > 1.0, "{s4} {sm} {s2}");
+    }
+}

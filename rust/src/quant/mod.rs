@@ -1,0 +1,204 @@
+//! Quantization primitives on the host side.
+//!
+//! Mirrors the L1/L2 LSQ fake-quantizer (`python/compile/quantizer.py`) so
+//! the coordinator can compute weight codes (for EAGL), quantization error
+//! norms (for HAWQ-v3's `||Q4(W) - Q2(W)||²` factor), compression ratios
+//! and BMAC costs without touching the accelerator.
+
+use crate::ckpt::Checkpoint;
+use crate::graph::Graph;
+
+/// (qn, qp) clamp bounds for a signed symmetric b-bit quantizer.
+pub fn qrange_signed(bits: u32) -> (f32, f32) {
+    let half = 1i64 << (bits - 1);
+    (-(half as f32), (half - 1) as f32)
+}
+
+/// (qn, qp) for an unsigned b-bit quantizer (post-ReLU activations).
+pub fn qrange_unsigned(bits: u32) -> (f32, f32) {
+    (0.0, ((1i64 << bits) - 1) as f32)
+}
+
+/// LSQ forward: clamp(round(v/s), qn, qp) * s.
+pub fn fake_quant(v: f32, s: f32, qn: f32, qp: f32) -> f32 {
+    (v / s).round().clamp(qn, qp) * s
+}
+
+/// Integer code of a weight under a signed b-bit quantizer (paper App. E).
+pub fn weight_code(v: f32, s: f32, bits: u32) -> i32 {
+    let (qn, qp) = qrange_signed(bits);
+    (v / s).round().clamp(qn, qp) as i32
+}
+
+/// All codes of a weight tensor.
+pub fn weight_codes(w: &[f32], s: f32, bits: u32) -> Vec<i32> {
+    w.iter().map(|&v| weight_code(v, s, bits)).collect()
+}
+
+/// ||Q_b1(W) - Q_b2(W)||² — the perturbation factor in HAWQ-v3's gain
+/// estimate (Appendix C).  Step sizes follow the HAWQ init rule the paper
+/// describes: range/2^(b-1) with the range symmetrized about 0.
+pub fn quant_error_norm2(w: &[f32], b1: u32, b2: u32) -> f64 {
+    let s1 = hawq_step_size(w, b1);
+    let s2 = hawq_step_size(w, b2);
+    let (qn1, qp1) = qrange_signed(b1);
+    let (qn2, qp2) = qrange_signed(b2);
+    w.iter()
+        .map(|&v| {
+            let d = fake_quant(v, s1, qn1, qp1) - fake_quant(v, s2, qn2, qp2);
+            (d as f64) * (d as f64)
+        })
+        .sum()
+}
+
+/// HAWQ step-size init: max(|min|, |max|) / 2^(b-1) (Appendix C).
+pub fn hawq_step_size(w: &[f32], bits: u32) -> f32 {
+    let mx = w.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let denom = (1i64 << (bits - 1)) as f32;
+    (mx / denom).max(1e-12)
+}
+
+/// A per-layer precision assignment, indexed by `qindex`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitsConfig {
+    pub bits: Vec<u32>,
+}
+
+impl BitsConfig {
+    /// All selectable layers at `b`; fixed layers pinned per the graph.
+    pub fn uniform(graph: &Graph, b: u32) -> BitsConfig {
+        let bits = graph
+            .layers
+            .iter()
+            .map(|l| l.fixed_bits.unwrap_or(b))
+            .collect();
+        BitsConfig { bits }
+    }
+
+    /// From a knapsack selection over the graph's selectable link groups:
+    /// `selected[g] == true` → group g at `b_hi`, else `b_lo`.
+    pub fn from_selection(graph: &Graph, selected: &[bool], b_hi: u32, b_lo: u32) -> BitsConfig {
+        let mut cfg = BitsConfig::uniform(graph, b_hi);
+        for (g, group) in graph.groups.iter().enumerate() {
+            let b = if selected[g] { b_hi } else { b_lo };
+            for &li in &group.layer_idx {
+                if graph.layers[li].fixed_bits.is_none() {
+                    cfg.bits[graph.layers[li].qindex] = b;
+                }
+            }
+        }
+        cfg
+    }
+
+    /// The runtime f32 vector the artifacts consume.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.bits.iter().map(|&b| b as f32).collect()
+    }
+
+    /// Number of selectable layers at each precision (diagnostics/Fig. 9).
+    pub fn count_at(&self, graph: &Graph, b: u32) -> usize {
+        graph
+            .layers
+            .iter()
+            .filter(|l| l.fixed_bits.is_none() && self.bits[l.qindex] == b)
+            .count()
+    }
+}
+
+/// Model compression ratio w.r.t. FP32 weights (paper Tables 1-2): total
+/// weight bits at FP32 / total weight bits at the mixed precision config.
+pub fn compression_ratio(graph: &Graph, cfg: &BitsConfig) -> f64 {
+    let fp32: f64 = graph.layers.iter().map(|l| 32.0 * l.weight_params as f64).sum();
+    let mp: f64 = graph
+        .layers
+        .iter()
+        .map(|l| cfg.bits[l.qindex] as f64 * l.weight_params as f64)
+        .sum();
+    fp32 / mp
+}
+
+/// Giga-bit-operations of one forward pass (paper's BOPS column):
+/// BMAC = b_weights * b_acts * MAC, b_w == b_a per layer (§3.4.1), so
+/// BOPs = Σ b² · MACs.
+pub fn gbops(graph: &Graph, cfg: &BitsConfig) -> f64 {
+    graph
+        .layers
+        .iter()
+        .map(|l| {
+            let b = cfg.bits[l.qindex] as f64;
+            b * b * l.macs as f64
+        })
+        .sum::<f64>()
+        / 1e9
+}
+
+/// Rescale a layer's learned LSQ step sizes when dropping its precision
+/// from `b_from` to `b_to` (paper §3.4.3: "initial quantization step-size
+/// ... is set to 4s" for 4→2; generally scale by 2^(b_from - b_to)).
+pub fn rescale_steps_for_drop(
+    ck: &mut Checkpoint,
+    layer_name: &str,
+    b_from: u32,
+    b_to: u32,
+) -> crate::Result<()> {
+    let factor = 2f32.powi(b_from as i32 - b_to as i32);
+    for suffix in ["sw", "sa"] {
+        let key = format!("{}/{}", layer_name.replace('.', "/"), suffix);
+        let t = ck
+            .get_mut(&key)
+            .ok_or_else(|| anyhow::anyhow!("missing step size {key}"))?;
+        for v in t.f32s_mut() {
+            *v *= factor;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qranges() {
+        assert_eq!(qrange_signed(4), (-8.0, 7.0));
+        assert_eq!(qrange_signed(2), (-2.0, 1.0));
+        assert_eq!(qrange_unsigned(4), (0.0, 15.0));
+        assert_eq!(qrange_unsigned(8), (0.0, 255.0));
+    }
+
+    #[test]
+    fn fake_quant_matches_formula() {
+        // v=0.33, s=0.1 -> round(3.3)=3 -> 0.3
+        assert!((fake_quant(0.33, 0.1, -8.0, 7.0) - 0.3).abs() < 1e-6);
+        // Saturation.
+        assert!((fake_quant(5.0, 0.1, -8.0, 7.0) - 0.7).abs() < 1e-6);
+        assert!((fake_quant(-5.0, 0.1, -8.0, 7.0) + 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let w: Vec<f32> = (-100..100).map(|i| i as f32 * 0.013).collect();
+        for &b in &[2u32, 4, 8] {
+            let (qn, qp) = qrange_signed(b);
+            for c in weight_codes(&w, 0.07, b) {
+                assert!(c as f32 >= qn && c as f32 <= qp);
+            }
+        }
+    }
+
+    #[test]
+    fn quant_error_zero_same_bits() {
+        let w: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 0.01).collect();
+        assert_eq!(quant_error_norm2(&w, 4, 4), 0.0);
+        assert!(quant_error_norm2(&w, 4, 2) > 0.0);
+    }
+
+    #[test]
+    fn hawq_step_symmetric() {
+        let w = [0.5f32, -1.0, 0.25];
+        assert!((hawq_step_size(&w, 2) - 0.5).abs() < 1e-6);
+        assert!((hawq_step_size(&w, 4) - 0.125).abs() < 1e-6);
+    }
+}
+
+pub mod energy;

@@ -1,0 +1,294 @@
+//! Report generation: regenerates the paper's tables and figures as
+//! aligned text tables, ASCII frontier plots, and CSV files.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::RunRecord;
+use crate::graph::Graph;
+use crate::quant::BitsConfig;
+use crate::stats;
+
+/// Mean ± std of the metric for each (method, budget) cell.
+#[derive(Debug, Clone)]
+pub struct FrontierCell {
+    pub method: String,
+    pub budget_frac: f64,
+    pub mean: f64,
+    pub std: f64,
+    pub n: usize,
+    pub samples: Vec<f64>,
+}
+
+/// Aggregate raw run records into frontier cells.
+pub fn frontier(records: &[RunRecord]) -> Vec<FrontierCell> {
+    let mut cells: BTreeMap<(String, String), Vec<f64>> = BTreeMap::new();
+    for r in records {
+        cells
+            .entry((r.method.clone(), format!("{:.4}", r.budget_frac)))
+            .or_default()
+            .push(r.metric);
+    }
+    let mut out = Vec::new();
+    for ((method, frac), samples) in cells {
+        out.push(FrontierCell {
+            method,
+            budget_frac: frac.parse().unwrap(),
+            mean: stats::mean(&samples),
+            std: stats::std_dev(&samples),
+            n: samples.len(),
+            samples,
+        });
+    }
+    out
+}
+
+/// The frontier table (Fig. 3/4/5 data): rows = budgets, cols = methods.
+pub fn frontier_table(cells: &[FrontierCell], metric_name: &str) -> String {
+    let mut methods: Vec<String> = cells.iter().map(|c| c.method.clone()).collect();
+    methods.sort();
+    methods.dedup();
+    let mut budgets: Vec<f64> = cells.iter().map(|c| c.budget_frac).collect();
+    budgets.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    budgets.dedup();
+    let mut s = format!("{:>8} |", "budget");
+    for m in &methods {
+        s += &format!(" {:>21} |", m);
+    }
+    s += &format!("   ({metric_name}, mean ± std)\n");
+    s += &format!("{}\n", "-".repeat(10 + 25 * methods.len()));
+    for &b in &budgets {
+        s += &format!("{:>7.0}% |", b * 100.0);
+        for m in &methods {
+            match cells
+                .iter()
+                .find(|c| c.method == *m && (c.budget_frac - b).abs() < 1e-9)
+            {
+                Some(c) => s += &format!(" {:>9.4} ± {:<9.4} |", c.mean, c.std),
+                None => s += &format!(" {:>21} |", "-"),
+            }
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// ASCII frontier plot: budget (x) vs metric (y), one glyph per method.
+pub fn frontier_plot(cells: &[FrontierCell], width: usize, height: usize) -> String {
+    if cells.is_empty() {
+        return "(no data)\n".to_string();
+    }
+    let mut methods: Vec<String> = cells.iter().map(|c| c.method.clone()).collect();
+    methods.sort();
+    methods.dedup();
+    let glyphs = ['E', 'A', 'H', 'U', 'F', 'L', 'O', '*', '+', 'x'];
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for c in cells {
+        ymin = ymin.min(c.mean);
+        ymax = ymax.max(c.mean);
+        xmin = xmin.min(c.budget_frac);
+        xmax = xmax.max(c.budget_frac);
+    }
+    let ypad = ((ymax - ymin) * 0.1).max(1e-6);
+    ymin -= ypad;
+    ymax += ypad;
+    let xspan = (xmax - xmin).max(1e-9);
+    let mut grid = vec![vec![' '; width]; height];
+    for c in cells {
+        let x = ((c.budget_frac - xmin) / xspan * (width - 1) as f64).round() as usize;
+        let y = ((c.mean - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+        let gi = methods.iter().position(|m| *m == c.method).unwrap();
+        grid[height - 1 - y][x.min(width - 1)] = glyphs[gi % glyphs.len()];
+    }
+    let mut s = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        let yval = ymax - (ymax - ymin) * i as f64 / (height - 1) as f64;
+        s += &format!("{:>8.4} |", yval);
+        s.extend(row.iter());
+        s.push('\n');
+    }
+    s += &format!("{:>9}+{}\n", "", "-".repeat(width));
+    s += &format!(
+        "{:>9} {:.0}%{}{:.0}%  (budget)\n",
+        "",
+        xmin * 100.0,
+        " ".repeat(width.saturating_sub(8)),
+        xmax * 100.0
+    );
+    s += "legend: ";
+    for (i, m) in methods.iter().enumerate() {
+        s += &format!("{}={} ", glyphs[i % glyphs.len()], m);
+    }
+    s.push('\n');
+    s
+}
+
+/// Wilcoxon rank-sum comparison of two methods at each budget (the paper's
+/// significance protocol, §4.1).
+pub fn significance(
+    cells: &[FrontierCell],
+    method_a: &str,
+    method_b: &str,
+) -> Vec<(f64, f64)> {
+    let mut out = Vec::new();
+    let mut budgets: Vec<f64> = cells.iter().map(|c| c.budget_frac).collect();
+    budgets.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    budgets.dedup();
+    for b in budgets {
+        let a = cells
+            .iter()
+            .find(|c| c.method == method_a && (c.budget_frac - b).abs() < 1e-9);
+        let bb = cells
+            .iter()
+            .find(|c| c.method == method_b && (c.budget_frac - b).abs() < 1e-9);
+        if let (Some(ca), Some(cb)) = (a, bb) {
+            if ca.samples.len() > 1 && cb.samples.len() > 1 {
+                let (_, p) = stats::ranksum(&ca.samples, &cb.samples);
+                out.push((b, p));
+            }
+        }
+    }
+    out
+}
+
+/// Table 1/2 style summary row.
+#[derive(Debug, Clone)]
+pub struct SummaryRow {
+    pub method: String,
+    pub metric_drop: f64,
+    pub ref_metric: f64,
+    pub mp_metric: f64,
+    pub compression: f64,
+    pub gbops: f64,
+}
+
+pub fn summary_table(rows: &[SummaryRow], metric_name: &str) -> String {
+    let mut s = format!(
+        "{:<15} {:>12} {:>20} {:>13} {:>10}\n",
+        "method",
+        format!("{metric_name} drop"),
+        "(ref → mp)",
+        "compression",
+        "GBOPs"
+    );
+    s += &format!("{}\n", "-".repeat(75));
+    for r in rows {
+        s += &format!(
+            "{:<15} {:>12.4} {:>9.4} → {:<8.4} {:>12.2}x {:>10.4}\n",
+            r.method, r.metric_drop, r.ref_metric, r.mp_metric, r.compression, r.gbops
+        );
+    }
+    s
+}
+
+/// Fig. 9: per-layer precision choice map, one row per method.
+pub fn layer_selection_map(graph: &Graph, choices: &[(String, BitsConfig)]) -> String {
+    let mut s = String::new();
+    let sel_layers: Vec<usize> = graph
+        .layers
+        .iter()
+        .filter(|l| l.fixed_bits.is_none())
+        .map(|l| l.qindex)
+        .collect();
+    s += &format!("layers (topological, {} selectable): ", sel_layers.len());
+    s += "each column is one layer; '4' = kept at 4-bit, '2' = dropped to 2-bit\n\n";
+    for (name, bits) in choices {
+        let row: String = sel_layers
+            .iter()
+            .map(|&qi| match bits.bits[qi] {
+                2 => '2',
+                4 => '4',
+                _ => '?',
+            })
+            .collect();
+        s += &format!("{:<15} {}\n", name, row);
+    }
+    s.push('\n');
+    s += "layer names: ";
+    s += &graph
+        .layers
+        .iter()
+        .filter(|l| l.fixed_bits.is_none())
+        .map(|l| l.name.clone())
+        .collect::<Vec<_>>()
+        .join(", ");
+    s.push('\n');
+    s
+}
+
+/// Write frontier cells as CSV (figure source data).
+pub fn write_csv(cells: &[FrontierCell], path: &std::path::Path) -> crate::Result<()> {
+    let mut s = String::from("method,budget_frac,mean,std,n\n");
+    for c in cells {
+        s += &format!(
+            "{},{},{},{},{}\n",
+            c.method, c.budget_frac, c.mean, c.std, c.n
+        );
+    }
+    std::fs::write(path, s)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(method: &str, frac: f64, seed: u64, metric: f64) -> RunRecord {
+        RunRecord {
+            model: "m".into(),
+            method: method.into(),
+            budget_frac: frac,
+            seed,
+            metric,
+            loss: 0.0,
+            groups_at_lo: 0,
+            compression: 10.0,
+            gbops: 1.0,
+            wall_s: 1.0,
+        }
+    }
+
+    #[test]
+    fn frontier_aggregates_seeds() {
+        let records = vec![
+            rec("eagl", 0.7, 0, 0.90),
+            rec("eagl", 0.7, 1, 0.92),
+            rec("alps", 0.7, 0, 0.91),
+        ];
+        let cells = frontier(&records);
+        assert_eq!(cells.len(), 2);
+        let eagl = cells.iter().find(|c| c.method == "eagl").unwrap();
+        assert_eq!(eagl.n, 2);
+        assert!((eagl.mean - 0.91).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tables_render() {
+        let records = vec![
+            rec("eagl", 0.9, 0, 0.95),
+            rec("eagl", 0.6, 0, 0.90),
+            rec("hawq_v3", 0.9, 0, 0.94),
+            rec("hawq_v3", 0.6, 0, 0.88),
+        ];
+        let cells = frontier(&records);
+        let tbl = frontier_table(&cells, "accuracy");
+        assert!(tbl.contains("eagl"));
+        assert!(tbl.contains("90%"));
+        let plot = frontier_plot(&cells, 40, 10);
+        assert!(plot.contains("legend"));
+    }
+
+    #[test]
+    fn significance_needs_replicates() {
+        let mut records = Vec::new();
+        for s in 0..5 {
+            records.push(rec("eagl", 0.7, s, 0.92 + s as f64 * 1e-4));
+            records.push(rec("hawq_v3", 0.7, s, 0.85 + s as f64 * 1e-4));
+        }
+        let cells = frontier(&records);
+        let sig = significance(&cells, "eagl", "hawq_v3");
+        assert_eq!(sig.len(), 1);
+        // Fully separated 5v5 → exact p = 0.0079.
+        assert!((sig[0].1 - 2.0 / 252.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,219 @@
+//! Deterministic RNG substrate (offline environment — no `rand` crate).
+//!
+//! [`Pcg32`] (PCG-XSH-RR 64/32, O'Neill 2014) is the workhorse: small
+//! state, excellent statistical quality for simulation workloads, and
+//! streams let every (experiment, seed, layer) tuple derive an independent
+//! generator so results are reproducible regardless of execution order.
+
+/// SplitMix64 — used to seed PCG streams from small integers.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSH-RR 64/32.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    const MUL: u64 = 6_364_136_223_846_793_005;
+
+    /// Generator from a (seed, stream) pair; distinct streams are
+    /// statistically independent.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 {
+            state: 0,
+            inc: (stream << 1) | 1,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent child generator (for per-layer / per-worker
+    /// streams).
+    pub fn split(&mut self, tag: u64) -> Pcg32 {
+        let mut s = self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let seed = splitmix64(&mut s);
+        let stream = splitmix64(&mut s);
+        Pcg32::new(seed, stream)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(Self::MUL).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Unbiased integer in [0, n) (Lemire rejection).
+    pub fn below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64).wrapping_mul(n as u64);
+            let lo = m as u32;
+            if lo >= n {
+                return (m >> 32) as u32;
+            }
+            let t = n.wrapping_neg() % n;
+            if lo >= t {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.uniform();
+            if u1 > 1e-12 {
+                let u2 = self.uniform();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f32::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Rademacher (+1 / -1 with equal probability).
+    #[inline]
+    pub fn rademacher(&mut self) -> f32 {
+        if self.next_u32() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Fisher–Yates in-place shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u32) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// k distinct indices from 0..n (partial Fisher–Yates).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below((n - i) as u32) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg32::new(42, 7);
+        let mut b = Pcg32::new(42, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg32::new(42, 1);
+        let mut b = Pcg32::new(42, 2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same <= 1);
+    }
+
+    #[test]
+    fn uniform_in_range_and_centered() {
+        let mut rng = Pcg32::new(1, 1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.uniform();
+            assert!((0.0..1.0).contains(&x));
+            sum += x as f64;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::new(3, 9);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = rng.normal() as f64;
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn below_unbiased_small() {
+        let mut rng = Pcg32::new(5, 5);
+        let mut counts = [0u32; 3];
+        for _ in 0..30_000 {
+            counts[rng.below(3) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::new(9, 1);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn choose_k_distinct() {
+        let mut rng = Pcg32::new(11, 2);
+        let picks = rng.choose_k(50, 10);
+        let mut s = picks.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 10);
+        assert!(picks.iter().all(|&i| i < 50));
+    }
+}

@@ -1,0 +1,173 @@
+//! Typed view over `artifacts/<model>.manifest.json` — the contract between
+//! the Python AOT path and the Rust runtime (input/output ordering, shapes,
+//! dtypes, layer table, task metadata).
+
+use std::path::Path;
+
+use crate::jsonio::{self, Json};
+use crate::tensor::DType;
+
+/// Shape + dtype + pytree-path name of one executable input/param.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// One AOT-lowered entry point.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub file: String,
+    /// Logical argument blocks, in order (e.g. ["params","mom","x","y",...]).
+    pub order: Vec<String>,
+    /// Logical output blocks, in order.
+    pub outputs: Vec<String>,
+}
+
+/// Task kind — decides metric accumulation semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    /// Image classification: eval out = correct count.
+    Cls,
+    /// Semantic segmentation: eval out = (2, C) intersection/union counts.
+    Seg,
+    /// Span extraction: eval out = (B, 2) predicted start/end.
+    Span,
+}
+
+/// Parsed manifest for one model.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    pub params: Vec<TensorSpec>,
+    pub entries: std::collections::BTreeMap<String, EntrySpec>,
+    pub raw: Json,
+    pub n_bits: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub task: Task,
+    pub x_train_shape: Vec<usize>,
+    pub y_train_shape: Vec<usize>,
+    pub x_eval_shape: Vec<usize>,
+    pub y_eval_shape: Vec<usize>,
+    pub x_dtype: DType,
+    pub y_dtype: DType,
+    pub evalout_shape: Vec<usize>,
+}
+
+impl Manifest {
+    pub fn load(artifacts: &Path, model: &str) -> crate::Result<Manifest> {
+        let path = artifacts.join(format!("{model}.manifest.json"));
+        let raw = jsonio::parse_file(&path)?;
+        Self::from_json(raw)
+    }
+
+    pub fn from_json(raw: Json) -> crate::Result<Manifest> {
+        let model = raw
+            .at(&["model"])
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing model"))?
+            .to_string();
+        let mut params = Vec::new();
+        for spec in raw.at(&["params"]).as_arr().unwrap_or(&[]) {
+            params.push(TensorSpec {
+                name: spec.at(&["name"]).as_str().unwrap_or_default().to_string(),
+                shape: spec.at(&["shape"]).usize_vec(),
+                dtype: DType::from_numpy(spec.at(&["dtype"]).as_str().unwrap_or("float32"))?,
+            });
+        }
+        let mut entries = std::collections::BTreeMap::new();
+        if let Some(map) = raw.at(&["entries"]).as_obj() {
+            for (name, e) in map {
+                entries.insert(
+                    name.clone(),
+                    EntrySpec {
+                        file: e.at(&["file"]).as_str().unwrap_or_default().to_string(),
+                        order: e
+                            .at(&["order"])
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|v| v.as_str().map(String::from))
+                            .collect(),
+                        outputs: e
+                            .at(&["outputs"])
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|v| v.as_str().map(String::from))
+                            .collect(),
+                    },
+                );
+            }
+        }
+        let meta = raw.at(&["meta"]);
+        let task = match meta.at(&["task"]).as_str() {
+            Some("cls") => Task::Cls,
+            Some("seg") => Task::Seg,
+            Some("span") => Task::Span,
+            other => anyhow::bail!("manifest: unknown task {other:?}"),
+        };
+        Ok(Manifest {
+            model,
+            params,
+            entries,
+            n_bits: meta.at(&["n_bits"]).as_usize().unwrap_or(0),
+            train_batch: meta.at(&["train_batch"]).as_usize().unwrap_or(0),
+            eval_batch: meta.at(&["eval_batch"]).as_usize().unwrap_or(0),
+            task,
+            x_train_shape: meta.at(&["x_train_shape"]).usize_vec(),
+            y_train_shape: meta.at(&["y_train_shape"]).usize_vec(),
+            x_eval_shape: meta.at(&["x_eval_shape"]).usize_vec(),
+            y_eval_shape: meta.at(&["y_eval_shape"]).usize_vec(),
+            x_dtype: DType::from_numpy(meta.at(&["x_dtype"]).as_str().unwrap_or("float32"))?,
+            y_dtype: DType::from_numpy(meta.at(&["y_dtype"]).as_str().unwrap_or("int32"))?,
+            evalout_shape: meta.at(&["evalout_shape"]).usize_vec(),
+            raw,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> crate::Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("manifest {}: no entry '{name}'", self.model))
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let raw = jsonio::parse(
+            r#"{
+          "model": "toy",
+          "params": [{"name":"a/w","shape":[2,2],"dtype":"float32"}],
+          "entries": {"eval_step": {"file":"toy_eval_step.hlo.txt",
+                        "order":["params","x","y","bits"],
+                        "outputs":["loss","evalout"]}},
+          "layers": [],
+          "meta": {"n_bits": 3, "train_batch": 4, "eval_batch": 8,
+                   "task": "cls", "x_train_shape": [4,8,8,3],
+                   "y_train_shape": [4], "x_eval_shape": [8,8,8,3],
+                   "y_eval_shape": [8], "x_dtype": "float32",
+                   "y_dtype": "int32", "evalout_shape": []}
+        }"#,
+        )
+        .unwrap();
+        let m = Manifest::from_json(raw).unwrap();
+        assert_eq!(m.model, "toy");
+        assert_eq!(m.n_bits, 3);
+        assert_eq!(m.task, Task::Cls);
+        assert_eq!(m.params[0].shape, vec![2, 2]);
+        let e = m.entry("eval_step").unwrap();
+        assert_eq!(e.order, vec!["params", "x", "y", "bits"]);
+        assert!(m.entry("missing").is_err());
+    }
+}

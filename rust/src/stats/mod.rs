@@ -1,0 +1,343 @@
+//! Statistics substrate: the tests and fits the paper's evaluation uses.
+//!
+//!  * Wilcoxon rank-sum (Mann–Whitney U) — the paper's significance test
+//!    for frontier comparisons ("p = 0.0079, N = 5"): exact for small
+//!    samples, normal approximation with tie correction otherwise.
+//!  * Ordinary least squares — Appendix A's linearity experiment and the
+//!    Appendix B regression-coefficient oracle.
+//!  * Pearson correlation, mean/std aggregation.
+
+/// Sample mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx).powi(2);
+        syy += (y - my).powi(2);
+    }
+    sxy / (sxx.sqrt() * syy.sqrt()).max(1e-300)
+}
+
+// ---------------------------------------------------------------------------
+// Wilcoxon rank-sum / Mann-Whitney U
+// ---------------------------------------------------------------------------
+
+/// Two-sided Wilcoxon rank-sum test. Returns (U statistic of sample a,
+/// two-sided p-value).  Exact null distribution for n+m <= 20 (the paper's
+/// N=5 per group falls here — p=0.0079 is the exact two-sided minimum for
+/// 5v5), normal approximation with tie correction otherwise.
+pub fn ranksum(a: &[f64], b: &[f64]) -> (f64, f64) {
+    let n = a.len();
+    let m = b.len();
+    assert!(n > 0 && m > 0);
+    // Midranks over the pooled sample.
+    let mut pooled: Vec<(f64, usize)> = a
+        .iter()
+        .map(|&x| (x, 0usize))
+        .chain(b.iter().map(|&x| (x, 1usize)))
+        .collect();
+    pooled.sort_by(|p, q| p.0.partial_cmp(&q.0).unwrap());
+    let mut ranks = vec![0.0f64; pooled.len()];
+    let mut i = 0;
+    while i < pooled.len() {
+        let mut j = i;
+        while j + 1 < pooled.len() && pooled[j + 1].0 == pooled[i].0 {
+            j += 1;
+        }
+        let r = (i + j) as f64 / 2.0 + 1.0;
+        for slot in ranks.iter_mut().take(j + 1).skip(i) {
+            *slot = r;
+        }
+        i = j + 1;
+    }
+    let ra: f64 = pooled
+        .iter()
+        .zip(&ranks)
+        .filter(|((_, g), _)| *g == 0)
+        .map(|(_, &r)| r)
+        .sum();
+    let u = ra - (n * (n + 1)) as f64 / 2.0;
+
+    let ties = {
+        let mut t = 0.0;
+        let mut i = 0;
+        while i < pooled.len() {
+            let mut j = i;
+            while j + 1 < pooled.len() && pooled[j + 1].0 == pooled[i].0 {
+                j += 1;
+            }
+            let c = (j - i + 1) as f64;
+            t += c * c * c - c;
+            i = j + 1;
+        }
+        t
+    };
+
+    let p = if n + m <= 20 && ties == 0.0 {
+        exact_ranksum_p(u, n, m)
+    } else {
+        // Normal approximation with tie correction.
+        let nm = (n * m) as f64;
+        let nn = (n + m) as f64;
+        let mu = nm / 2.0;
+        let sigma2 = nm / 12.0 * (nn + 1.0 - ties / (nn * (nn - 1.0)));
+        if sigma2 <= 0.0 {
+            return (u, 1.0);
+        }
+        let z = (u - mu).abs() - 0.5; // continuity correction
+        let z = z.max(0.0) / sigma2.sqrt();
+        2.0 * (1.0 - normal_cdf(z))
+    };
+    (u, p.min(1.0))
+}
+
+/// Exact two-sided p-value for the Mann-Whitney U statistic: enumerate the
+/// number of subsets of ranks (no ties) achieving each U via the standard
+/// counting DP.
+fn exact_ranksum_p(u: f64, n: usize, m: usize) -> f64 {
+    let max_u = n * m;
+    // count[k][u]: number of ways to choose k of the first t ranks with
+    // rank-sum offset u; iterate t implicitly.
+    let mut count = vec![vec![0f64; max_u + 1]; n + 1];
+    count[0][0] = 1.0;
+    for t in 1..=(n + m) {
+        // Adding rank t: each element chosen from positions <= t.
+        for k in (1..=n.min(t)).rev() {
+            for uu in (0..=max_u).rev() {
+                let contrib = t - k; // U contribution of picking rank t as k-th
+                if contrib <= uu && contrib <= m {
+                    count[k][uu] += count[k - 1][uu - contrib];
+                }
+            }
+        }
+    }
+    let total: f64 = count[n].iter().sum();
+    let u_round = u.round() as usize;
+    let mu = max_u as f64 / 2.0;
+    // Two-sided: sum probabilities of outcomes at least as extreme.
+    let dist = (u - mu).abs();
+    let mut p = 0.0;
+    for (uu, &c) in count[n].iter().enumerate() {
+        if ((uu as f64) - mu).abs() >= dist - 1e-9 {
+            p += c;
+        }
+    }
+    let _ = u_round;
+    p / total
+}
+
+/// Standard normal CDF via the Abramowitz–Stegun erf approximation.
+pub fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    // A&S 7.1.26, |error| <= 1.5e-7.
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let y = 1.0
+        - (((((1.061_405_429 * t - 1.453_152_027) * t) + 1.421_413_741) * t - 0.284_496_736)
+            * t
+            + 0.254_829_592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+// ---------------------------------------------------------------------------
+// Ordinary least squares
+// ---------------------------------------------------------------------------
+
+/// OLS fit y ≈ X·beta (+ intercept appended as the last coefficient).
+/// Solves the normal equations by Gaussian elimination with partial
+/// pivoting and ridge jitter for rank-deficient designs.
+pub struct Ols {
+    /// Coefficients; `beta[n_features]` is the intercept.
+    pub beta: Vec<f64>,
+}
+
+impl Ols {
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64]) -> crate::Result<Ols> {
+        let n = xs.len();
+        anyhow::ensure!(n == ys.len() && n > 0, "bad OLS inputs");
+        let d = xs[0].len() + 1; // + intercept
+        // Normal equations A = X'X (d×d), b = X'y.
+        let mut a = vec![0.0f64; d * d];
+        let mut b = vec![0.0f64; d];
+        for (row, &y) in xs.iter().zip(ys) {
+            let mut ext: Vec<f64> = row.clone();
+            ext.push(1.0);
+            for i in 0..d {
+                b[i] += ext[i] * y;
+                for j in 0..d {
+                    a[i * d + j] += ext[i] * ext[j];
+                }
+            }
+        }
+        // Ridge jitter for numerical rank safety.
+        for i in 0..d {
+            a[i * d + i] += 1e-9;
+        }
+        let beta = solve_linear(&mut a, &mut b, d)?;
+        Ok(Ols { beta })
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        let d = self.beta.len() - 1;
+        assert_eq!(x.len(), d);
+        x.iter().zip(&self.beta[..d]).map(|(a, b)| a * b).sum::<f64>() + self.beta[d]
+    }
+
+    /// Per-feature coefficients (excluding intercept) — the Appendix-B
+    /// oracle gains.
+    pub fn coefficients(&self) -> &[f64] {
+        &self.beta[..self.beta.len() - 1]
+    }
+}
+
+/// Gaussian elimination with partial pivoting; solves A x = b in place.
+fn solve_linear(a: &mut [f64], b: &mut [f64], d: usize) -> crate::Result<Vec<f64>> {
+    for col in 0..d {
+        // Pivot.
+        let mut piv = col;
+        for r in col + 1..d {
+            if a[r * d + col].abs() > a[piv * d + col].abs() {
+                piv = r;
+            }
+        }
+        anyhow::ensure!(a[piv * d + col].abs() > 1e-12, "singular system");
+        if piv != col {
+            for j in 0..d {
+                a.swap(col * d + j, piv * d + j);
+            }
+            b.swap(col, piv);
+        }
+        // Eliminate.
+        for r in col + 1..d {
+            let f = a[r * d + col] / a[col * d + col];
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..d {
+                a[r * d + j] -= f * a[col * d + j];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    // Back substitution.
+    let mut x = vec![0.0; d];
+    for col in (0..d).rev() {
+        let mut s = b[col];
+        for j in col + 1..d {
+            s -= a[col * d + j] * x[j];
+        }
+        x[col] = s / a[col * d + col];
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let z = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &z) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ranksum_extreme_5v5_gives_paper_p() {
+        // Completely separated 5 vs 5 → the paper's p = 0.0079 (two-sided
+        // exact: 2/C(10,5) = 2/252).
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [6.0, 7.0, 8.0, 9.0, 10.0];
+        let (_, p) = ranksum(&a, &b);
+        assert!((p - 2.0 / 252.0).abs() < 1e-9, "p = {p}");
+    }
+
+    #[test]
+    fn ranksum_identical_groups_p_one() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0, 11.0];
+        let b = a;
+        let (_, p) = ranksum(&a, &b);
+        assert!(p > 0.9, "p = {p}");
+    }
+
+    #[test]
+    fn ranksum_3v3_exact() {
+        // Fully separated 3v3: p = 2/C(6,3) = 0.1.
+        let (_, p) = ranksum(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
+        assert!((p - 0.1).abs() < 1e-9, "p = {p}");
+    }
+
+    #[test]
+    fn normal_cdf_sane() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-9);
+        assert!((normal_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!(normal_cdf(-5.0) < 1e-5);
+    }
+
+    #[test]
+    fn ols_recovers_plane() {
+        // y = 2a - 3b + 0.5
+        let xs: Vec<Vec<f64>> = (0..50)
+            .map(|i| vec![(i % 7) as f64, (i % 5) as f64])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|r| 2.0 * r[0] - 3.0 * r[1] + 0.5).collect();
+        let fit = Ols::fit(&xs, &ys).unwrap();
+        assert!((fit.beta[0] - 2.0).abs() < 1e-6);
+        assert!((fit.beta[1] + 3.0).abs() < 1e-6);
+        assert!((fit.beta[2] - 0.5).abs() < 1e-6);
+        assert!((fit.predict(&[3.0, 2.0]) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ols_handles_noise() {
+        let mut rng = crate::rng::Pcg32::new(3, 3);
+        let xs: Vec<Vec<f64>> = (0..200)
+            .map(|_| vec![rng.uniform() as f64, rng.uniform() as f64, rng.uniform() as f64])
+            .collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|r| 1.0 * r[0] + 2.0 * r[1] - 1.5 * r[2] + 0.01 * rng.normal() as f64)
+            .collect();
+        let fit = Ols::fit(&xs, &ys).unwrap();
+        assert!((fit.beta[0] - 1.0).abs() < 0.05);
+        assert!((fit.beta[1] - 2.0).abs() < 0.05);
+        assert!((fit.beta[2] + 1.5).abs() < 0.05);
+    }
+}

@@ -1,0 +1,165 @@
+//! Host tensor substrate: a small nd-array of f32/i32 used to marshal data
+//! between the coordinator and PJRT literals.
+//!
+//! Deliberately minimal — all heavy math runs inside the AOT-compiled XLA
+//! executables; the host only generates batches, shuffles, accumulates
+//! metrics, and performs the (cheap) metric/knapsack computations.
+
+/// Element type of a [`Tensor`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn from_numpy(name: &str) -> crate::Result<DType> {
+        match name {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => anyhow::bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// Dense row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: Data::F32(vec![0.0; shape.iter().product()]),
+        }
+    }
+
+    pub fn zeros_i32(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: Data::I32(vec![0; shape.iter().product()]),
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor {
+            shape: shape.to_vec(),
+            data: Data::F32(data),
+        }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor {
+            shape: shape.to_vec(),
+            data: Data::I32(data),
+        }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: Data::F32(vec![v]),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn f32s(&self) -> &[f32] {
+        match &self.data {
+            Data::F32(v) => v,
+            Data::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            Data::F32(v) => v,
+            Data::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn i32s(&self) -> &[i32] {
+        match &self.data {
+            Data::I32(v) => v,
+            Data::F32(_) => panic!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Scalar extraction (len-1 tensors of any rank).
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.len(), 1, "item() on tensor of len {}", self.len());
+        match &self.data {
+            Data::F32(v) => v[0],
+            Data::I32(v) => v[0] as f32,
+        }
+    }
+
+    /// L2 norm (f32 tensors).
+    pub fn norm2(&self) -> f64 {
+        self.f32s().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        self.f32s().iter().map(|&x| x as f64).sum::<f64>() / self.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.f32s()[4], 5.0);
+        assert!((t.mean() - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_f32(&[2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn scalar_item() {
+        assert_eq!(Tensor::scalar(3.5).item(), 3.5);
+        let t = Tensor::from_i32(&[1], vec![7]);
+        assert_eq!(t.item(), 7.0);
+    }
+
+    #[test]
+    fn norm() {
+        let t = Tensor::from_f32(&[2], vec![3.0, 4.0]);
+        assert!((t.norm2() - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,135 @@
+//! Integration: the full evaluation-framework pipeline (Fig. 1) at toy
+//! scale — gain estimation → knapsack → checkpoint transform → fine-tune →
+//! eval, with the result store and resume semantics.
+
+use mpq::coordinator::{Coordinator, ResultStore};
+use mpq::methods::{self, MethodKind};
+use mpq::quant::{self, BitsConfig};
+
+fn coord() -> Option<Coordinator> {
+    let dir = mpq::artifacts_dir();
+    if !dir.join("qsegnet.manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let mut co = Coordinator::new(&dir, "qsegnet", 1).unwrap();
+    // Toy scale: the goal is pipeline semantics, not task quality.
+    co.base_steps = 8;
+    co.ft_steps = 4;
+    co.eval_batches = 1;
+    co.mcfg.alps_steps = 3;
+    co.mcfg.hawq_samples = 1;
+    co.mcfg.hawq_batches = 1;
+    // Isolated results dir so CLI/bench caches don't interfere.
+    co.results_dir = std::env::temp_dir().join(format!("mpq_it_{}", std::process::id()));
+    std::fs::create_dir_all(&co.results_dir).unwrap();
+    Some(co)
+}
+
+#[test]
+fn full_pipeline_all_methods() {
+    let Some(mut co) = coord() else { return };
+    let ck4 = co.base_checkpoint().unwrap();
+    assert!(ck4.total_params() > 0);
+
+    // Every gain-based method produces finite per-layer gains.
+    for kind in [MethodKind::Eagl, MethodKind::Alps, MethodKind::HawqV3, MethodKind::Uniform] {
+        let est = co.gains(kind).unwrap();
+        assert_eq!(est.per_layer.len(), co.graph.layers.len(), "{kind:?}");
+        assert!(
+            est.per_layer.iter().all(|g| g.is_finite()),
+            "{kind:?}: {:?}",
+            est.per_layer
+        );
+        // Gain cache on disk: second call must be instant and identical.
+        let again = co.gains(kind).unwrap();
+        assert_eq!(est.per_layer, again.per_layer);
+    }
+
+    // Selection respects budgets: higher budget → no fewer groups at hi.
+    let mut prev_hi = 0;
+    for frac in [0.55, 0.7, 0.85, 1.0] {
+        let bits = co.select(MethodKind::Eagl, frac).unwrap();
+        let n_hi = co.graph.groups.len() - bits.count_at(&co.graph, 2);
+        assert!(n_hi >= prev_hi, "budget {frac}: {n_hi} < {prev_hi}");
+        prev_hi = n_hi;
+        // Budget actually met.
+        let cost: u64 = co
+            .graph
+            .groups
+            .iter()
+            .map(|g| {
+                let qi = co.graph.layers[g.layer_idx[0]].qindex;
+                g.macs * bits.bits[qi] as u64
+            })
+            .sum();
+        assert!(cost <= co.graph.budget_at(frac, 4) + 1);
+    }
+
+    // One end-to-end run records a sane metric.
+    let rec = co.run_one(MethodKind::Eagl, 0.75, 0).unwrap();
+    assert!((0.0..=1.0).contains(&rec.metric), "{rec:?}");
+    assert!(rec.compression > 1.0);
+    assert!(rec.gbops > 0.0);
+    let _ = std::fs::remove_dir_all(&co.results_dir);
+}
+
+#[test]
+fn sweep_resumes_from_store() {
+    let Some(mut co) = coord() else { return };
+    let store_path = co.results_dir.join("sweep.jsonl");
+    let mut store = ResultStore::open(&store_path).unwrap();
+    let kinds = [MethodKind::FirstToLast];
+    let recs = co.sweep(&kinds, &[0.7], &[0, 1], &mut store).unwrap();
+    assert_eq!(recs.len(), 2);
+    // Second sweep over the same grid touches nothing new.
+    let n_before = store.records().len();
+    let recs2 = co.sweep(&kinds, &[0.7], &[0, 1], &mut store).unwrap();
+    assert_eq!(recs2.len(), 2);
+    assert_eq!(store.records().len(), n_before);
+    assert_eq!(recs2[0].metric, recs[0].metric);
+    let _ = std::fs::remove_dir_all(&co.results_dir);
+}
+
+#[test]
+fn mp_checkpoint_transform_rescales_only_dropped() {
+    let Some(mut co) = coord() else { return };
+    let ck4 = co.base_checkpoint().unwrap();
+    // Drop exactly the first selectable group.
+    let mut selected = vec![true; co.graph.groups.len()];
+    selected[0] = false;
+    let bits = BitsConfig::from_selection(&co.graph, &selected, 4, 2);
+    let ck = methods::prepare_mp_checkpoint(&ck4, &co.graph, &bits, 4).unwrap();
+    let dropped = &co.graph.groups[0];
+    for (gi, group) in co.graph.groups.iter().enumerate() {
+        for &li in &group.layer_idx {
+            let name = co.graph.layers[li].name.replace('.', "/");
+            let s_old = ck4.get(&format!("{name}/sw")).unwrap().item();
+            let s_new = ck.get(&format!("{name}/sw")).unwrap().item();
+            if gi == 0 {
+                assert!((s_new / s_old - 4.0).abs() < 1e-5, "{name} not rescaled");
+            } else {
+                assert_eq!(s_old, s_new, "{name} wrongly rescaled");
+            }
+        }
+    }
+    let _ = dropped;
+    // Weights untouched everywhere.
+    for (n, t) in ck4.names.iter().zip(&ck4.tensors) {
+        if n.ends_with("/w") {
+            assert_eq!(t.f32s(), ck.get(n).unwrap().f32s(), "{n}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&co.results_dir);
+}
+
+#[test]
+fn compression_and_bops_track_bits() {
+    let Some(co) = coord() else { return };
+    let g = &co.graph;
+    let b4 = BitsConfig::uniform(g, 4);
+    let b2 = BitsConfig::uniform(g, 2);
+    assert!(quant::compression_ratio(g, &b2) > quant::compression_ratio(g, &b4));
+    assert!(quant::gbops(g, &b2) < quant::gbops(g, &b4));
+    let _ = std::fs::remove_dir_all(&co.results_dir);
+}

@@ -1,0 +1,265 @@
+//! Property-based tests over coordinator-side invariants (knapsack,
+//! EAGL entropy, gains quantization, statistics, JSON, checkpoint I/O).
+
+use mpq::prop::{close, forall, Config};
+use mpq::rng::Pcg32;
+use mpq::{eagl, jsonio, knapsack, quant, stats};
+
+#[test]
+fn knapsack_never_exceeds_capacity_and_dominates_greedy() {
+    forall(
+        &Config { cases: 200, ..Config::default() },
+        |rng| {
+            let n = 1 + rng.below(24) as usize;
+            let values: Vec<u64> = (0..n).map(|_| rng.below(1000) as u64 + 1).collect();
+            let weights: Vec<u64> = (0..n).map(|_| rng.below(500) as u64 + 1).collect();
+            let cap = rng.below(3000) as u64;
+            (values, weights, cap)
+        },
+        |(values, weights, cap)| {
+            let sel = knapsack::solve_01(values, weights, *cap);
+            let w: u64 = (0..values.len())
+                .filter(|&i| sel.selected[i])
+                .map(|i| weights[i])
+                .sum();
+            if w > *cap {
+                return Err(format!("weight {w} > cap {cap}"));
+            }
+            // Greedy by value density must never beat the DP.
+            let mut order: Vec<usize> = (0..values.len()).collect();
+            order.sort_by(|&a, &b| {
+                (values[b] as f64 / weights[b] as f64)
+                    .partial_cmp(&(values[a] as f64 / weights[a] as f64))
+                    .unwrap()
+            });
+            let mut gv = 0u64;
+            let mut gw = 0u64;
+            for i in order {
+                if gw + weights[i] <= *cap {
+                    gw += weights[i];
+                    gv += values[i];
+                }
+            }
+            if gv > sel.total_value {
+                return Err(format!("greedy {gv} beat DP {}", sel.total_value));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn gain_quantization_is_monotone() {
+    forall(
+        &Config { cases: 200, ..Config::default() },
+        |rng| {
+            let n = 2 + rng.below(30) as usize;
+            (0..n).map(|_| rng.normal() as f64 * 10.0).collect::<Vec<f64>>()
+        },
+        |gains| {
+            let q = knapsack::quantize_gains(gains);
+            for i in 0..gains.len() {
+                for j in 0..gains.len() {
+                    if gains[i] < gains[j] && q[i] > q[j] {
+                        return Err(format!("order violated at ({i},{j})"));
+                    }
+                }
+            }
+            if q.iter().any(|&v| v == 0 || v > 10_000) {
+                return Err("quantized gain out of 1..=10000".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn entropy_invariant_under_code_permutation() {
+    forall(
+        &Config { cases: 100, ..Config::default() },
+        |rng| {
+            let n = 64 + rng.below(1000) as usize;
+            let codes: Vec<i32> = (0..n).map(|_| rng.below(16) as i32 - 8).collect();
+            let mut shuffled = codes.clone();
+            rng.shuffle(&mut shuffled);
+            (codes, shuffled)
+        },
+        |(a, b)| {
+            close(
+                eagl::entropy_of_codes(a, 4),
+                eagl::entropy_of_codes(b, 4),
+                1e-12,
+                "permutation invariance",
+            )
+        },
+    );
+}
+
+#[test]
+fn entropy_scale_invariance_of_weights() {
+    // Scaling weights and step size together must not change codes/entropy.
+    forall(
+        &Config { cases: 100, ..Config::default() },
+        |rng| {
+            let n = 128;
+            let w: Vec<f32> = (0..n).map(|_| rng.normal() * 0.3).collect();
+            let k = rng.range(0.1, 10.0);
+            (w, k)
+        },
+        |(w, k)| {
+            let h1 = eagl::layer_entropy(w, 0.1, 4);
+            let scaled: Vec<f32> = w.iter().map(|&x| x * k).collect();
+            let h2 = eagl::layer_entropy(&scaled, 0.1 * k, 4);
+            close(h1, h2, 1e-5, "scale invariance")
+        },
+    );
+}
+
+#[test]
+fn fake_quant_idempotent_and_bounded() {
+    forall(
+        &Config { cases: 300, ..Config::default() },
+        |rng| {
+            let v = rng.normal() * 3.0;
+            let s = rng.range(0.01, 1.0);
+            let bits = [2u32, 4, 8][rng.below(3) as usize];
+            (v, s, bits)
+        },
+        |&(v, s, bits)| {
+            let (qn, qp) = quant::qrange_signed(bits);
+            let q1 = quant::fake_quant(v, s, qn, qp);
+            let q2 = quant::fake_quant(q1, s, qn, qp);
+            close(q1 as f64, q2 as f64, 1e-6, "idempotence")?;
+            if q1 < qn * s - 1e-6 || q1 > qp * s + 1e-6 {
+                return Err(format!("out of range: {q1}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn wilcoxon_p_in_unit_interval_and_symmetric() {
+    forall(
+        &Config { cases: 100, ..Config::default() },
+        |rng| {
+            let n = 3 + rng.below(6) as usize;
+            let m = 3 + rng.below(6) as usize;
+            let a: Vec<f64> = (0..n).map(|_| rng.normal() as f64).collect();
+            let b: Vec<f64> = (0..m).map(|_| rng.normal() as f64 + 0.2).collect();
+            (a, b)
+        },
+        |(a, b)| {
+            let (_, p_ab) = stats::ranksum(a, b);
+            let (_, p_ba) = stats::ranksum(b, a);
+            if !(0.0..=1.0).contains(&p_ab) {
+                return Err(format!("p out of range: {p_ab}"));
+            }
+            close(p_ab, p_ba, 1e-9, "symmetry")
+        },
+    );
+}
+
+#[test]
+fn json_round_trip_of_random_values() {
+    fn random_json(rng: &mut Pcg32, depth: usize) -> jsonio::Json {
+        use jsonio::Json;
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 1),
+            2 => Json::Num((rng.normal() * 100.0).round() as f64),
+            3 => Json::Str(format!("s{}", rng.below(1000))),
+            4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below(4) {
+                    m.insert(format!("k{i}"), random_json(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    forall(
+        &Config { cases: 300, ..Config::default() },
+        |rng| random_json(rng, 3),
+        |v| {
+            let text = v.to_string_compact();
+            let back = jsonio::parse(&text).map_err(|e| e.to_string())?;
+            if &back != v {
+                return Err(format!("round trip changed value: {text}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn checkpoint_io_round_trips_random_tensors() {
+    use mpq::ckpt::Checkpoint;
+    use mpq::tensor::Tensor;
+    let dir = std::env::temp_dir().join(format!("mpq_prop_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    forall(
+        &Config { cases: 30, ..Config::default() },
+        |rng| {
+            let k = 1 + rng.below(6) as usize;
+            let mut names = Vec::new();
+            let mut tensors = Vec::new();
+            for i in 0..k {
+                let rank = rng.below(4) as usize;
+                let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(5) as usize).collect();
+                let n: usize = shape.iter().product();
+                names.push(format!("t{i}/w"));
+                tensors.push(Tensor::from_f32(
+                    &shape,
+                    (0..n).map(|_| rng.normal()).collect(),
+                ));
+            }
+            Checkpoint::new(names, tensors)
+        },
+        |ck| {
+            let path = dir.join("prop.ckpt");
+            ck.save(&path).map_err(|e| e.to_string())?;
+            let back = Checkpoint::load(&path).map_err(|e| e.to_string())?;
+            if back.names != ck.names {
+                return Err("names differ".into());
+            }
+            for (a, b) in back.tensors.iter().zip(&ck.tensors) {
+                if a != b {
+                    return Err("tensor differs".into());
+                }
+            }
+            Ok(())
+        },
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn ols_predicts_training_points_of_exact_linear_maps() {
+    forall(
+        &Config { cases: 50, ..Config::default() },
+        |rng| {
+            let d = 1 + rng.below(6) as usize;
+            let n = d + 2 + rng.below(30) as usize;
+            let beta: Vec<f64> = (0..=d).map(|_| rng.normal() as f64).collect();
+            let xs: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..d).map(|_| rng.normal() as f64).collect())
+                .collect();
+            let ys: Vec<f64> = xs
+                .iter()
+                .map(|r| {
+                    r.iter().zip(&beta[..d]).map(|(a, b)| a * b).sum::<f64>() + beta[d]
+                })
+                .collect();
+            (xs, ys)
+        },
+        |(xs, ys)| {
+            let fit = stats::Ols::fit(xs, ys).map_err(|e| e.to_string())?;
+            for (x, &y) in xs.iter().zip(ys) {
+                close(fit.predict(x), y, 1e-5, "exact fit")?;
+            }
+            Ok(())
+        },
+    );
+}
