@@ -1,0 +1,38 @@
+# Tier-1 verification and common developer entry points.
+#
+# `make verify` is hermetic: the default cargo build has zero external
+# dependencies and the test suite runs entirely on the pure-Rust sim
+# backend — no `artifacts/` directory needed.  Artifact-dependent tests
+# are compiled only with `--features pjrt` (which needs the vendored xla
+# crate, see rust/Cargo.toml) and skip themselves at runtime when
+# artifacts are absent.
+
+.PHONY: verify test build bench verify-pjrt artifacts clean
+
+# Tier-1: must pass in a clean checkout.
+verify:
+	cargo build --release && cargo test -q
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+# Full verification including the PJRT/AOT path (requires the vendored
+# `xla` dependency to be uncommented in rust/Cargo.toml and, for the
+# tests to run rather than skip, `make artifacts`).
+verify-pjrt:
+	cargo build --release --features pjrt && cargo test -q --features pjrt
+
+# Build the AOT artifacts through the Python/JAX/Pallas path (offline
+# environments without jax can't run this — use the sim backend instead).
+artifacts:
+	python3 -m python.compile.aot --out artifacts
+
+clean:
+	cargo clean
+	rm -rf results

@@ -7,17 +7,17 @@
 //! 8-bit where the budget allows) and reports the resulting accuracy and
 //! energy estimates side by side.
 
-use mpq::coordinator::Coordinator;
 use mpq::methods::{self, MethodKind};
 use mpq::quant::energy::EnergyModel;
 use mpq::quant::{self};
-use mpq::runtime::TrainState;
+use mpq::backend::TrainState;
 use mpq::train::{evaluate, finetune, TrainConfig};
 
 fn main() -> mpq::Result<()> {
     let quick = mpq::bench::quick();
-    let artifacts = mpq::artifacts_dir();
-    let mut co = Coordinator::new(&artifacts, "qresnet20", 7)?;
+    let Some(mut co) = mpq::bench::coordinator_or_skip("qresnet20", 7) else {
+        return Ok(());
+    };
     co.base_steps = if quick { 150 } else { 400 };
     let ft_steps = if quick { 30 } else { 120 };
     let eval_batches = 2;

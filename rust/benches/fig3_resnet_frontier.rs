@@ -5,13 +5,12 @@
 //! Paper shape: EAGL and ALPS at or above every comparator across the
 //! whole frontier; all methods converge at the 95-100% end.
 
-use mpq::coordinator::{Coordinator, ResultStore};
+use mpq::coordinator::ResultStore;
 use mpq::methods::MethodKind;
 use mpq::report;
 
 fn main() -> mpq::Result<()> {
     let quick = mpq::bench::quick();
-    let artifacts = mpq::artifacts_dir();
     let models: &[&str] = if quick { &["qresnet20"] } else { &["qresnet20", "qresnet32"] };
     let budgets: &[f64] = if quick {
         &[0.90, 0.80, 0.70, 0.60]
@@ -26,7 +25,9 @@ fn main() -> mpq::Result<()> {
           MethodKind::Uniform, MethodKind::FirstToLast, MethodKind::LastToFirst]
     };
     for model in models {
-        let mut co = Coordinator::new(&artifacts, model, 7)?;
+        let Some(mut co) = mpq::bench::coordinator_or_skip(model, 7) else {
+            continue;
+        };
         co.base_steps = if quick { 150 } else { 400 };
         co.ft_steps = if quick { 30 } else { 120 };
         co.eval_batches = 4;

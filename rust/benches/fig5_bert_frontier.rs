@@ -5,14 +5,15 @@
 //! Paper shape: EAGL and ALPS at or above both baselines across the
 //! frontier.
 
-use mpq::coordinator::{Coordinator, ResultStore};
+use mpq::coordinator::ResultStore;
 use mpq::methods::MethodKind;
 use mpq::report;
 
 fn main() -> mpq::Result<()> {
     let quick = mpq::bench::quick();
-    let artifacts = mpq::artifacts_dir();
-    let mut co = Coordinator::new(&artifacts, "qbert", 7)?;
+    let Some(mut co) = mpq::bench::coordinator_or_skip("qbert", 7) else {
+        return Ok(());
+    };
     co.base_steps = if quick { 150 } else { 400 };
     co.ft_steps = if quick { 30 } else { 120 };
     co.eval_batches = 2;

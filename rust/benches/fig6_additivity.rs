@@ -9,6 +9,7 @@
 //! Paper shape: strong linear correlation (paper reports R = 0.98) —
 //! justifying the additive-gain assumption behind the knapsack.
 
+use mpq::backend::Backend;
 use mpq::coordinator::Coordinator;
 use mpq::data::Split;
 use mpq::methods::prepare_mp_checkpoint;
@@ -18,8 +19,9 @@ use mpq::stats;
 
 fn main() -> mpq::Result<()> {
     let quick = mpq::bench::quick();
-    let artifacts = mpq::artifacts_dir();
-    let mut co = Coordinator::new(&artifacts, "qresnet20", 7)?;
+    let Some(mut co) = mpq::bench::coordinator_or_skip("qresnet20", 7) else {
+        return Ok(());
+    };
     co.base_steps = if quick { 150 } else { 400 };
     let n_pairs = if quick { 15 } else { 80 };
     let eval_batches = 2;
@@ -29,11 +31,13 @@ fn main() -> mpq::Result<()> {
 
     // Training-set accuracy is the paper's measurement; our evaluate()
     // uses the eval split, so run eval_step over train batches directly.
-    let acc_at = |selected: &[bool], co: &mut Coordinator| -> mpq::Result<f64> {
+    let acc_at = |selected: &[bool],
+                  co: &mut Coordinator<Box<dyn Backend>>|
+     -> mpq::Result<f64> {
         let bits = BitsConfig::from_selection(&co.graph, selected, 4, 2);
         let ck = prepare_mp_checkpoint(&ck4, &co.graph, &bits, 4)?;
         let bitsf = bits.to_f32();
-        let batch = co.rt.manifest.eval_batch;
+        let batch = co.rt.manifest().eval_batch;
         let mut correct = 0.0;
         let mut seen = 0usize;
         for i in 0..eval_batches {

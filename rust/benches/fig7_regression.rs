@@ -10,19 +10,19 @@
 //! linear function of the per-layer choices.  The fitted coefficients feed
 //! Fig. 8 as the "oracle" gains.
 
-use mpq::coordinator::Coordinator;
 use mpq::jsonio::Json;
 use mpq::methods::prepare_mp_checkpoint;
 use mpq::quant::BitsConfig;
 use mpq::rng::Pcg32;
-use mpq::runtime::TrainState;
+use mpq::backend::TrainState;
 use mpq::stats::{self, Ols};
 use mpq::train::{evaluate, finetune, TrainConfig};
 
 fn main() -> mpq::Result<()> {
     let quick = mpq::bench::quick();
-    let artifacts = mpq::artifacts_dir();
-    let mut co = Coordinator::new(&artifacts, "qresnet20", 7)?;
+    let Some(mut co) = mpq::bench::coordinator_or_skip("qresnet20", 7) else {
+        return Ok(());
+    };
     co.base_steps = if quick { 150 } else { 400 };
     let ft_steps = if quick { 20 } else { 60 };
     let n_samples = if quick { 16 } else { 60 };

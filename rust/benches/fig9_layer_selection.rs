@@ -5,14 +5,14 @@
 //! HAWQ-v3/ALPS (it prefers dropping big-MAC low-entropy layers), and the
 //! total count of dropped layers does not predict final accuracy.
 
-use mpq::coordinator::Coordinator;
 use mpq::methods::MethodKind;
 use mpq::report;
 
 fn main() -> mpq::Result<()> {
     let quick = mpq::bench::quick();
-    let artifacts = mpq::artifacts_dir();
-    let mut co = Coordinator::new(&artifacts, "qresnet20", 7)?;
+    let Some(mut co) = mpq::bench::coordinator_or_skip("qresnet20", 7) else {
+        return Ok(());
+    };
     co.base_steps = if quick { 150 } else { 400 };
     co.mcfg.alps_steps = if quick { 10 } else { 40 };
     co.mcfg.hawq_samples = 2;

@@ -1,23 +1,23 @@
 //! Hot-path micro-benchmarks (EXPERIMENTS.md §Perf): per-layer latencies of
 //! everything the coordinator executes repeatedly.
 //!
-//!  * L2/L1: fused train_step / eval_step per model (batch included) —
-//!    the dominant cost of every experiment;
+//!  * backend hot path: fused train_step / eval_step per model (batch
+//!    included) — the dominant cost of every experiment.  Runs on the
+//!    hermetic sim models always, and on the artifact models when
+//!    artifacts + the pjrt feature are available;
 //!  * L3: knapsack solve (paper: their Python took 2.3 s on ResNet-50 —
 //!    target ≥100× faster), EAGL metric, data generation, checkpoint I/O,
 //!    manifest JSON parse.
 
-use mpq::bench::{header, measure, try_measure};
+use mpq::backend::{Backend, TrainState};
+use mpq::bench::{coordinator_or_skip, header, measure, try_measure};
 use mpq::data::{Dataset, Split};
-use mpq::graph::Graph;
 use mpq::knapsack;
 use mpq::quant::BitsConfig;
 use mpq::rng::Pcg32;
-use mpq::runtime::{Runtime, TrainState};
 
 fn main() -> mpq::Result<()> {
     let quick = mpq::bench::quick();
-    let artifacts = mpq::artifacts_dir();
     let iters = if quick { 5 } else { 20 };
     header();
 
@@ -34,30 +34,29 @@ fn main() -> mpq::Result<()> {
         .report();
     }
 
-    // EAGL over a realistic checkpoint.
-    if artifacts.join("qresnet20.manifest.json").exists() {
-        let rt = Runtime::load(&artifacts, "qresnet20")?;
-        let graph = Graph::load(&artifacts, "qresnet20")?;
-        let ck = rt.init_checkpoint()?;
-        measure("eagl metric qresnet20 (full ckpt)", 1, iters, || {
+    // EAGL + checkpoint I/O over a realistic checkpoint (any model that
+    // opens in this environment; sim_skew always does).
+    if let Some(co) = coordinator_or_skip("sim_skew", 7) {
+        let ck = co.rt.init_checkpoint()?;
+        let graph = co.graph.clone();
+        measure("eagl metric sim_skew (full ckpt)", 1, iters, || {
             std::hint::black_box(mpq::eagl::checkpoint_entropies(&graph, &ck, 4).unwrap());
         })
         .report();
 
-        // Checkpoint I/O.
         let tmp = std::env::temp_dir().join("mpq_perf.ckpt");
-        measure("checkpoint save qresnet20", 1, iters, || {
+        measure("checkpoint save sim_skew", 1, iters, || {
             ck.save(&tmp).unwrap();
         })
         .report();
-        measure("checkpoint load qresnet20", 1, iters, || {
+        measure("checkpoint load sim_skew", 1, iters, || {
             std::hint::black_box(mpq::ckpt::Checkpoint::load(&tmp).unwrap());
         })
         .report();
         let _ = std::fs::remove_file(&tmp);
 
-        // Manifest parse.
-        let text = std::fs::read_to_string(artifacts.join("qresnet20.manifest.json"))?;
+        // Manifest JSON parse (the sim manifest re-serialized).
+        let text = co.rt.manifest().raw.to_string_compact();
         measure("manifest JSON parse", 1, iters, || {
             std::hint::black_box(mpq::jsonio::parse(&text).unwrap());
         })
@@ -65,7 +64,7 @@ fn main() -> mpq::Result<()> {
     }
 
     // Data generation (host side of every train step).
-    for task in [mpq::runtime::Task::Cls, mpq::runtime::Task::Seg, mpq::runtime::Task::Span] {
+    for task in [mpq::backend::Task::Cls, mpq::backend::Task::Seg, mpq::backend::Task::Span] {
         let ds = Dataset::for_task(task, 7);
         let mut i = 0u64;
         measure(&format!("datagen {:?} batch=64", task), 1, iters, || {
@@ -75,39 +74,38 @@ fn main() -> mpq::Result<()> {
         .report();
     }
 
-    // -- L2/L1 executable hot paths ------------------------------------------
-    for model in ["qsegnet", "qresnet20", "qbert"] {
-        if !artifacts.join(format!("{model}.manifest.json")).exists() {
+    // -- backend executable hot paths ---------------------------------------
+    for model in ["sim_tiny", "sim_skew", "qsegnet", "qresnet20", "qbert"] {
+        let Some(mut co) = coordinator_or_skip(model, 7) else {
             continue;
-        }
-        let mut rt = Runtime::load(&artifacts, model)?;
-        let graph = Graph::load(&artifacts, model)?;
-        let data = Dataset::for_task(rt.manifest.task, 7);
-        let bits = BitsConfig::uniform(&graph, 4).to_f32();
-        let ck = rt.init_checkpoint()?;
-        let (xt, yt) = data.batch(Split::Train, 0, rt.manifest.train_batch);
-        let (xe, ye) = data.batch(Split::Eval, 0, rt.manifest.eval_batch);
+        };
+        let bits = BitsConfig::uniform(&co.graph, 4).to_f32();
+        let ck = co.rt.init_checkpoint()?;
+        let train_batch = co.rt.manifest().train_batch;
+        let eval_batch = co.rt.manifest().eval_batch;
+        let (xt, yt) = co.data.batch(Split::Train, 0, train_batch);
+        let (xe, ye) = co.data.batch(Split::Eval, 0, eval_batch);
         let mut state = TrainState::new(ck.clone());
 
-        let m = try_measure(&format!("{model} train_step (b={})", rt.manifest.train_batch), 2, iters, || {
-            rt.train_step(&mut state, &xt, &yt, 0.01, 1e-4, &bits)?;
+        let m = try_measure(&format!("{model} train_step (b={train_batch})"), 2, iters, || {
+            co.rt.train_step(&mut state, &xt, &yt, 0.01, 1e-4, &bits)?;
             Ok(())
         })?;
         m.report();
         println!(
             "{:<44} {:>10.1} samples/s",
             format!("  -> {model} train throughput"),
-            m.throughput(rt.manifest.train_batch as f64)
+            m.throughput(train_batch as f64)
         );
-        let m = try_measure(&format!("{model} eval_step (b={})", rt.manifest.eval_batch), 1, iters, || {
-            rt.eval_step(&ck, &xe, &ye, &bits)?;
+        let m = try_measure(&format!("{model} eval_step (b={eval_batch})"), 1, iters, || {
+            co.rt.eval_step(&ck, &xe, &ye, &bits)?;
             Ok(())
         })?;
         m.report();
         println!(
             "{:<44} {:>10.1} samples/s",
             format!("  -> {model} eval throughput"),
-            m.throughput(rt.manifest.eval_batch as f64)
+            m.throughput(eval_batch as f64)
         );
     }
     Ok(())

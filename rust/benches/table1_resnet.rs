@@ -7,14 +7,15 @@
 //!
 //! Env: MPQ_BENCH_QUICK=1 shrinks training budgets.
 
-use mpq::coordinator::{Coordinator, ResultStore};
+use mpq::coordinator::ResultStore;
 use mpq::methods::MethodKind;
 use mpq::report::{summary_table, SummaryRow};
 
 fn main() -> mpq::Result<()> {
     let quick = mpq::bench::quick();
-    let artifacts = mpq::artifacts_dir();
-    let mut co = Coordinator::new(&artifacts, "qresnet20", 7)?;
+    let Some(mut co) = mpq::bench::coordinator_or_skip("qresnet20", 7) else {
+        return Ok(());
+    };
     co.base_steps = if quick { 150 } else { 400 };
     co.ft_steps = if quick { 30 } else { 150 };
     co.eval_batches = 4;

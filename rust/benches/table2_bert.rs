@@ -4,14 +4,15 @@
 //! Paper shape: EAGL/ALPS find 4/2-bit mixes whose F1 matches or exceeds
 //! the reference at ~8-9x compression, beating topological selections.
 
-use mpq::coordinator::{Coordinator, ResultStore};
+use mpq::coordinator::ResultStore;
 use mpq::methods::MethodKind;
 use mpq::report::{summary_table, SummaryRow};
 
 fn main() -> mpq::Result<()> {
     let quick = mpq::bench::quick();
-    let artifacts = mpq::artifacts_dir();
-    let mut co = Coordinator::new(&artifacts, "qbert", 7)?;
+    let Some(mut co) = mpq::bench::coordinator_or_skip("qbert", 7) else {
+        return Ok(());
+    };
     co.base_steps = if quick { 150 } else { 400 };
     co.ft_steps = if quick { 30 } else { 150 };
     co.eval_batches = 2;

@@ -2,23 +2,24 @@
 //! the paper's headline efficiency claim (EAGL: CPU *seconds*; ALPS/HAWQ:
 //! GPU *hours*).
 //!
-//! We measure wall-clock on this testbed for qresnet20 and qsegnet.  The
-//! paper shape to reproduce is the *orders-of-magnitude ordering*
+//! We measure wall-clock on this testbed for whichever models open in this
+//! environment (sim models always; artifact models under --features pjrt).
+//! The paper shape to reproduce is the *orders-of-magnitude ordering*
 //! EAGL ≪ HAWQ-v3 < ALPS (ALPS ∝ L fine-tune epochs; HAWQ ∝ Hutchinson
 //! draws; EAGL is one pass over the checkpoint, no data, no accelerator).
 
-use mpq::bench::{fmt_s, measure};
-use mpq::coordinator::Coordinator;
+use mpq::bench::{coordinator_or_skip, fmt_s, measure};
 use mpq::methods::{estimate_gains, MethodConfig, MethodKind};
 
 fn main() -> mpq::Result<()> {
     let quick = mpq::bench::quick();
-    let artifacts = mpq::artifacts_dir();
     println!("== Table 3: metric computation cost (wall-clock, this testbed) ==\n");
     println!("{:<12} {:>14} {:>14} {:>14}", "model", "EAGL", "ALPS", "HAWQ-v3");
     println!("{}", "-".repeat(60));
-    for model in ["qresnet20", "qsegnet"] {
-        let mut co = Coordinator::new(&artifacts, model, 7)?;
+    for model in ["sim_skew", "qresnet20", "qsegnet"] {
+        let Some(mut co) = coordinator_or_skip(model, 7) else {
+            continue;
+        };
         co.base_steps = if quick { 100 } else { 300 };
         let mcfg = MethodConfig {
             alps_steps: if quick { 8 } else { 40 },
@@ -35,13 +36,11 @@ fn main() -> mpq::Result<()> {
             let _ = mpq::eagl::checkpoint_entropies(&graph, &ck, 4).unwrap();
         });
 
-        // ALPS / HAWQ involve training/HVPs: one timed estimation each.
-        let (mut rt, data) = (
-            mpq::runtime::Runtime::load(&artifacts, model)?,
-            mpq::data::Dataset::for_task(co.rt.manifest.task, 7),
-        );
-        let alps = estimate_gains(MethodKind::Alps, &mut rt, &graph, &ck4, &data, &mcfg)?;
-        let hawq = estimate_gains(MethodKind::HawqV3, &mut rt, &graph, &ck4, &data, &mcfg)?;
+        // ALPS / HAWQ involve training/HVPs: one timed estimation each,
+        // on the coordinator's own backend.
+        let data = co.data.clone();
+        let alps = estimate_gains(MethodKind::Alps, &mut co.rt, &graph, &ck4, &data, &mcfg)?;
+        let hawq = estimate_gains(MethodKind::HawqV3, &mut co.rt, &graph, &ck4, &data, &mcfg)?;
 
         println!(
             "{:<12} {:>14} {:>14} {:>14}",

@@ -2,16 +2,19 @@
 //! three layers of a checkpoint — the "which layers compress further?"
 //! picture, computed without any training data (EAGL's headline property).
 //!
+//! Hermetic by default (sim backend); point it at artifacts with
+//! `MPQ_MODEL=qresnet20` + a `--features pjrt` build.
+//!
 //! ```bash
-//! cargo run --release --example eagl_offline            # init checkpoint
-//! MPQ_CKPT=results/qresnet20/base4.ckpt cargo run ...    # trained one
+//! cargo run --release --example eagl_offline             # init checkpoint
+//! MPQ_CKPT=results/sim_skew/base4.ckpt cargo run ...     # trained one
 //! ```
 
+use mpq::backend::{self, Backend};
 use mpq::ckpt::Checkpoint;
 use mpq::eagl;
 use mpq::graph::Graph;
 use mpq::quant::weight_codes;
-use mpq::runtime::Runtime;
 
 fn ascii_hist(codes: &[i32], bits: u32) -> String {
     let n_bins = 1usize << bits;
@@ -30,12 +33,14 @@ fn ascii_hist(codes: &[i32], bits: u32) -> String {
 }
 
 fn main() -> mpq::Result<()> {
-    let model = std::env::var("MPQ_MODEL").unwrap_or_else(|_| "qresnet20".into());
-    let artifacts = mpq::artifacts_dir();
-    let graph = Graph::load(&artifacts, &model)?;
+    let model = std::env::var("MPQ_MODEL").unwrap_or_else(|_| "sim_skew".into());
+    let backend_flag = std::env::var("MPQ_BACKEND").ok();
+    let kind = backend::resolve(backend_flag.as_deref(), &model)?;
+    let rt = backend::open(kind, &model)?;
+    let graph = Graph::from_manifest(&rt.manifest().raw)?;
     let ck = match std::env::var("MPQ_CKPT") {
         Ok(p) => Checkpoint::load(std::path::Path::new(&p))?,
-        Err(_) => Runtime::load(&artifacts, &model)?.init_checkpoint()?,
+        Err(_) => rt.init_checkpoint()?,
     };
 
     let t0 = std::time::Instant::now();
@@ -49,7 +54,11 @@ fn main() -> mpq::Result<()> {
     sel.sort_by(|a, b| ents[a.qindex].partial_cmp(&ents[b.qindex]).unwrap());
     let picks = [sel[0], sel[sel.len() / 2], sel[sel.len() - 1]];
 
-    println!("EAGL on {model}: {} layers scored in {:.3} ms (Table 3's 'CPU seconds' scale)\n", graph.layers.len(), dt * 1e3);
+    println!(
+        "EAGL on {model}: {} layers scored in {:.3} ms (Table 3's 'CPU seconds' scale)\n",
+        graph.layers.len(),
+        dt * 1e3
+    );
     for layer in picks {
         let base = layer.name.replace('.', "/");
         let w = ck.get(&format!("{base}/w")).unwrap();

@@ -1,5 +1,6 @@
 //! Frontier sweep driver: the paper's Fig. 3/4/5 protocol as a
-//! configurable batch job with resume.
+//! configurable batch job with resume — backend-agnostic, hermetic by
+//! default on the sim backend.
 //!
 //! Runs (methods × budgets × seeds) fine-tune+eval experiments for one
 //! model, appending to the JSONL store so interrupted sweeps pick up where
@@ -8,23 +9,23 @@
 //!
 //! ```bash
 //! cargo run --release --example frontier_sweep -- \
-//!     --model qsegnet --budgets 0.95,0.85,0.75,0.65 --seeds 3 \
-//!     --methods eagl,alps,hawq_v3,first_to_last --ft-steps 120
+//!     --model sim_skew --budgets 0.95,0.92,0.85 --seeds 3 \
+//!     --methods eagl,alps,hawq_v3,first_to_last --ft-steps 20
 //! ```
 
+use mpq::backend::{self, Backend, Task};
 use mpq::cli::Args;
 use mpq::coordinator::{Coordinator, ResultStore};
 use mpq::methods::MethodKind;
 use mpq::report;
-use mpq::runtime::Task;
 
 fn main() -> mpq::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
-    let model = args.str("model", "qsegnet");
-    let artifacts = mpq::artifacts_dir();
-    let mut co = Coordinator::new(&artifacts, &model, args.u64("data-seed", 7)?)?;
+    let model = args.str("model", "sim_skew");
+    let kind = backend::resolve(args.opt_str("backend"), &model)?;
+    let mut co = Coordinator::open(kind, &model, args.u64("data-seed", 7)?)?;
     co.base_steps = args.usize("base-steps", 300)?;
-    co.ft_steps = args.usize("ft-steps", 100)?;
+    co.ft_steps = args.usize("ft-steps", 20)?;
     co.eval_batches = args.usize("eval-batches", 4)?;
     co.mcfg.alps_steps = args.usize("alps-steps", 15)?;
     co.mcfg.hawq_samples = args.usize("hawq-samples", 2)?;
@@ -35,10 +36,10 @@ fn main() -> mpq::Result<()> {
         .iter()
         .map(|s| MethodKind::parse(s))
         .collect::<mpq::Result<_>>()?;
-    let budgets = args.f64_list("budgets", &[0.95, 0.85, 0.75, 0.65])?;
+    let budgets = args.f64_list("budgets", &[0.95, 0.92, 0.85, 0.75])?;
     let seeds: Vec<u64> = (0..args.u64("seeds", 3)?).collect();
 
-    let metric = match co.rt.manifest.task {
+    let metric = match co.rt.manifest().task {
         Task::Cls => "top-1",
         Task::Seg => "mIoU",
         Task::Span => "F1",

@@ -1,44 +1,47 @@
 //! End-to-end driver (the EXPERIMENTS.md validation run): exercises every
-//! layer of the stack on a real workload.
+//! layer of the stack on a real workload — hermetically on the sim
+//! backend by default, or on AOT artifacts with a `--features pjrt` build
+//! and `MPQ_E2E_MODEL=qsegnet`.
 //!
-//! 1. trains the 4-bit qsegnet base + 8-bit reference through the fused
-//!    train_step artifact (L2 JAX graph, L1 quantizers inside);
+//! 1. trains the 4-bit base + 8-bit reference through the backend's fused
+//!    train_step;
 //! 2. estimates gains with EAGL, ALPS, and HAWQ-v3;
 //! 3. knapsack-selects at two budgets, fine-tunes each mixed-precision
-//!    network, evaluates mIoU;
+//!    network, evaluates the task metric;
 //! 4. prints the mini-frontier and the per-layer choices.
 //!
-//! Runtime is ~4 minutes on a single CPU core.  Env knobs:
-//! `MPQ_E2E_MODEL` (default qsegnet), `MPQ_E2E_STEPS` (base training steps).
+//! Env knobs: `MPQ_E2E_MODEL` (default sim_skew), `MPQ_E2E_STEPS` (base
+//! training steps), `MPQ_BACKEND` (sim|pjrt|auto).
 
+use mpq::backend::{self, Backend, TrainState, Task};
 use mpq::coordinator::{Coordinator, ResultStore};
 use mpq::methods::MethodKind;
 use mpq::report;
-use mpq::runtime::Task;
 
 fn main() -> mpq::Result<()> {
-    let model = std::env::var("MPQ_E2E_MODEL").unwrap_or_else(|_| "qsegnet".into());
+    let model = std::env::var("MPQ_E2E_MODEL").unwrap_or_else(|_| "sim_skew".into());
     let base_steps: usize = std::env::var("MPQ_E2E_STEPS")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(300);
 
-    let artifacts = mpq::artifacts_dir();
-    let mut co = Coordinator::new(&artifacts, &model, 7)?;
+    let backend_flag = std::env::var("MPQ_BACKEND").ok();
+    let kind = backend::resolve(backend_flag.as_deref(), &model)?;
+    let mut co = Coordinator::open(kind, &model, 7)?;
     co.base_steps = base_steps;
-    co.ft_steps = base_steps / 3;
+    co.ft_steps = base_steps / 10;
     co.eval_batches = 4;
     co.mcfg.alps_steps = 15;
     co.mcfg.hawq_samples = 2;
     co.mcfg.hawq_batches = 2;
 
-    let metric = match co.rt.manifest.task {
+    let metric = match co.rt.manifest().task {
         Task::Cls => "top-1",
         Task::Seg => "mIoU",
         Task::Span => "F1",
     };
 
-    println!("== 1. base checkpoints ({base_steps} steps) ==");
+    println!("== 1. base checkpoints ({base_steps} steps, {} backend) ==", co.rt.kind());
     let t0 = std::time::Instant::now();
     let ck4 = co.base_checkpoint()?;
     let e4 = co.eval_uniform(&ck4, 4)?;
@@ -47,7 +50,7 @@ fn main() -> mpq::Result<()> {
     let b2 = co.select(MethodKind::Uniform, 0.5)?; // all-2-bit
     let e2 = {
         let ck2 = mpq::methods::prepare_mp_checkpoint(&ck4, &co.graph, &b2, 4)?;
-        let mut state = mpq::runtime::TrainState::new(ck2);
+        let mut state = TrainState::new(ck2);
         let tcfg = mpq::train::TrainConfig {
             steps: co.ft_steps,
             lr0: 0.005,
@@ -70,15 +73,15 @@ fn main() -> mpq::Result<()> {
     let store_path = co.results_dir.join("e2e.jsonl");
     let mut store = ResultStore::open(&store_path)?;
     let kinds = [MethodKind::Eagl, MethodKind::Alps, MethodKind::HawqV3, MethodKind::FirstToLast];
-    let budgets = [0.85, 0.65];
+    let budgets = [0.92, 0.75];
     let records = co.sweep(&kinds, &budgets, &[0], &mut store)?;
     let cells = report::frontier(&records);
     println!("{}", report::frontier_table(&cells, metric));
 
-    println!("== 4. per-layer choices @ 65% ==");
+    println!("== 4. per-layer choices @ 75% ==");
     let mut choices = Vec::new();
     for kind in kinds {
-        choices.push((kind.name().to_string(), co.select(kind, 0.65)?));
+        choices.push((kind.name().to_string(), co.select(kind, 0.75)?));
     }
     println!("{}", report::layer_selection_map(&co.graph, &choices));
     println!("total wall time: {:.1}s", t0.elapsed().as_secs_f64());

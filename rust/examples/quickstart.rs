@@ -1,26 +1,31 @@
-//! Quickstart: the EAGL → knapsack pipeline in ~30 lines, no training.
+//! Quickstart: the EAGL → knapsack pipeline in ~30 lines, no training —
+//! and no artifacts: the default backend is the hermetic pure-Rust sim
+//! executor, so this runs in a clean checkout with zero external steps.
 //!
-//! Loads the qresnet20 artifacts, scores every layer with the EAGL entropy
-//! metric (Algorithm 2 — needs only the checkpoint), and solves the 0-1
-//! knapsack at a 70% compute budget to choose per-layer 2/4-bit precisions.
+//! Scores every layer with the EAGL entropy metric (Algorithm 2 — needs
+//! only the checkpoint), and solves the 0-1 knapsack at a 70% compute
+//! budget to choose per-layer 2/4-bit precisions.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart                 # sim backend
+//! MPQ_MODEL=qresnet20 cargo run ... --features pjrt        # AOT artifacts
 //! ```
 
+use mpq::backend::{self, Backend};
 use mpq::eagl;
 use mpq::graph::Graph;
 use mpq::knapsack;
 use mpq::quant::{self, BitsConfig};
-use mpq::runtime::Runtime;
 
 fn main() -> mpq::Result<()> {
-    let artifacts = mpq::artifacts_dir();
-    let model = "qresnet20";
+    let model = std::env::var("MPQ_MODEL").unwrap_or_else(|_| "sim_skew".into());
+    let backend_flag = std::env::var("MPQ_BACKEND").ok();
+    let kind = backend::resolve(backend_flag.as_deref(), &model)?;
+    let rt = backend::open(kind, &model)?;
 
-    // The layer table (costs, link groups, fixed-precision rules).
-    let graph = Graph::load(&artifacts, model)?;
-    let rt = Runtime::load(&artifacts, model)?;
+    // The layer table (costs, link groups, fixed-precision rules) comes
+    // from the backend's manifest.
+    let graph = Graph::from_manifest(&rt.manifest().raw)?;
     let ckpt = rt.init_checkpoint()?; // or any trained checkpoint
 
     // 1. EAGL gains: entropy of each layer's quantized weight distribution.
@@ -34,7 +39,7 @@ fn main() -> mpq::Result<()> {
     let bits = BitsConfig::from_selection(&graph, &sel.selected, 4, 2);
 
     // 3. Inspect the result.
-    println!("{model} @ 70% budget — EAGL selection:\n");
+    println!("{model} ({} backend) @ 70% budget — EAGL selection:\n", rt.kind());
     println!("{:<16} {:>8} {:>6}", "layer", "H(bits)", "bits");
     for l in &graph.layers {
         println!(

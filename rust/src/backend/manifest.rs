@@ -1,8 +1,10 @@
-//! Typed view over `artifacts/<model>.manifest.json` — the contract between
-//! the Python AOT path and the Rust runtime (input/output ordering, shapes,
-//! dtypes, layer table, task metadata).
+//! Typed view over a model manifest — the contract between a backend and
+//! the coordinator (input/output ordering, shapes, dtypes, layer table,
+//! task metadata).  The pjrt backend reads
+//! `artifacts/<model>.manifest.json` emitted by the Python AOT path; the
+//! sim backend synthesizes an equivalent manifest in memory.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::jsonio::{self, Json};
 use crate::tensor::DType;
@@ -15,7 +17,7 @@ pub struct TensorSpec {
     pub dtype: DType,
 }
 
-/// One AOT-lowered entry point.
+/// One lowered entry point.
 #[derive(Debug, Clone)]
 pub struct EntrySpec {
     pub file: String,
@@ -56,9 +58,26 @@ pub struct Manifest {
     pub evalout_shape: Vec<usize>,
 }
 
+/// Path of a model's manifest inside an artifacts dir, with an actionable
+/// error (names the expected path and the `MPQ_ARTIFACTS` override) when
+/// it does not exist — instead of failing deep inside manifest parsing.
+pub fn manifest_path_checked(artifacts: &Path, model: &str) -> crate::Result<PathBuf> {
+    let path = artifacts.join(format!("{model}.manifest.json"));
+    if !path.is_file() {
+        crate::bail!(
+            "no AOT artifacts for model '{model}': expected manifest at {} — \
+             build them (`make artifacts`), point MPQ_ARTIFACTS at the \
+             artifacts directory, or use the hermetic sim backend \
+             (`--backend sim`, models sim_tiny/sim_skew)",
+            path.display()
+        );
+    }
+    Ok(path)
+}
+
 impl Manifest {
     pub fn load(artifacts: &Path, model: &str) -> crate::Result<Manifest> {
-        let path = artifacts.join(format!("{model}.manifest.json"));
+        let path = manifest_path_checked(artifacts, model)?;
         let raw = jsonio::parse_file(&path)?;
         Self::from_json(raw)
     }
@@ -67,7 +86,7 @@ impl Manifest {
         let model = raw
             .at(&["model"])
             .as_str()
-            .ok_or_else(|| anyhow::anyhow!("manifest: missing model"))?
+            .ok_or_else(|| crate::err!("manifest: missing model"))?
             .to_string();
         let mut params = Vec::new();
         for spec in raw.at(&["params"]).as_arr().unwrap_or(&[]) {
@@ -107,7 +126,7 @@ impl Manifest {
             Some("cls") => Task::Cls,
             Some("seg") => Task::Seg,
             Some("span") => Task::Span,
-            other => anyhow::bail!("manifest: unknown task {other:?}"),
+            other => crate::bail!("manifest: unknown task {other:?}"),
         };
         Ok(Manifest {
             model,
@@ -131,7 +150,7 @@ impl Manifest {
     pub fn entry(&self, name: &str) -> crate::Result<&EntrySpec> {
         self.entries
             .get(name)
-            .ok_or_else(|| anyhow::anyhow!("manifest {}: no entry '{name}'", self.model))
+            .ok_or_else(|| crate::err!("manifest {}: no entry '{name}'", self.model))
     }
 
     pub fn n_params(&self) -> usize {
@@ -169,5 +188,17 @@ mod tests {
         let e = m.entry("eval_step").unwrap();
         assert_eq!(e.order, vec!["params", "x", "y", "bits"]);
         assert!(m.entry("missing").is_err());
+    }
+
+    #[test]
+    fn missing_artifacts_error_is_actionable() {
+        let dir = std::path::Path::new("/definitely/not/an/artifacts/dir");
+        let err = Manifest::load(dir, "qresnet20").unwrap_err().to_string();
+        assert!(
+            err.contains("/definitely/not/an/artifacts/dir/qresnet20.manifest.json"),
+            "error must name the expected path: {err}"
+        );
+        assert!(err.contains("MPQ_ARTIFACTS"), "error must name the override: {err}");
+        assert!(err.contains("--backend sim"), "error must point at the sim fallback: {err}");
     }
 }

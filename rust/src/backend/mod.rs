@@ -1,0 +1,283 @@
+//! Pluggable execution backends — the seam between the selection pipeline
+//! and whatever actually runs the network.
+//!
+//! [`Backend`] abstracts execution: a backend exposes its [`Manifest`]
+//! (entry points, shapes, layer table), an initial [`Checkpoint`], and a
+//! single `execute(entry, inputs) -> outputs` primitive.  The typed entry
+//! points the pipeline uses (`train_step`, `eval_step`, `vhv_step`,
+//! `eagl_step`) are provided methods built on `execute`, so every backend
+//! shares one marshaling convention:
+//!
+//! ```text
+//! train_step: params.. mom.. x y lr wd bits  ->  params'.. mom'.. loss metric
+//! eval_step:  params.. x y bits              ->  loss evalout
+//! vhv_step:   params.. x y bits seed         ->  per-layer v·Hv
+//! eagl_step:  (w, sw per layer)              ->  per-layer entropies
+//! ```
+//!
+//! Implementations:
+//!
+//! * [`SimBackend`] (always available) — hermetic pure-Rust reference
+//!   executor over synthesized proxy models; see [`sim`].
+//! * `PjrtBackend` (`--features pjrt`) — executes AOT-lowered HLO-text
+//!   artifacts through a PJRT CPU client; see `pjrt`.
+//!
+//! [`resolve`] + [`open`] implement the CLI's `--backend sim|pjrt|auto`
+//! selection; `auto` prefers artifacts when they exist *and* the pjrt
+//! backend is compiled in, else falls back to sim.
+
+pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod sim;
+
+use crate::ckpt::Checkpoint;
+use crate::tensor::Tensor;
+
+pub use manifest::{EntrySpec, Manifest, Task, TensorSpec};
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+pub use sim::SimBackend;
+
+/// Mutable fine-tune state: parameters and SGD momenta, in manifest order.
+#[derive(Clone)]
+pub struct TrainState {
+    pub params: Checkpoint,
+    pub mom: Checkpoint,
+}
+
+impl TrainState {
+    pub fn new(params: Checkpoint) -> TrainState {
+        let mom = params.zeros_like();
+        TrainState { params, mom }
+    }
+}
+
+/// An execution backend. Object-safe: the coordinator and CLI run over
+/// `Box<dyn Backend>` while tests can use concrete types.
+pub trait Backend {
+    /// Short backend name ("sim" | "pjrt") for logs and reports.
+    fn kind(&self) -> &'static str;
+
+    /// The model contract: entry points, shapes, layer table, task.
+    fn manifest(&self) -> &Manifest;
+
+    /// The model's initial (seed-0) checkpoint.
+    fn init_checkpoint(&self) -> crate::Result<Checkpoint>;
+
+    /// Execute an entry point with host tensors; returns decomposed outputs.
+    fn execute(&mut self, entry: &str, args: &[&Tensor]) -> crate::Result<Vec<Tensor>>;
+
+    /// Force-compile an entry (warmup / startup-cost measurement).
+    /// No-op for backends without a compile step.
+    fn compile_entry(&mut self, entry: &str) -> crate::Result<()> {
+        let _ = entry;
+        Ok(())
+    }
+
+    // -- typed entry points (shared marshaling over `execute`) --------------
+
+    /// One fused SGD fine-tune step.  Updates `state` in place and returns
+    /// (loss, train metric).
+    fn train_step(
+        &mut self,
+        state: &mut TrainState,
+        x: &Tensor,
+        y: &Tensor,
+        lr: f32,
+        wd: f32,
+        bits: &[f32],
+    ) -> crate::Result<(f32, f32)> {
+        let n = self.manifest().n_params();
+        let lr_t = Tensor::scalar(lr);
+        let wd_t = Tensor::scalar(wd);
+        let bits_t = Tensor::from_f32(&[bits.len()], bits.to_vec());
+        let mut args: Vec<&Tensor> = Vec::with_capacity(2 * n + 5);
+        args.extend(state.params.tensors.iter());
+        args.extend(state.mom.tensors.iter());
+        args.extend([x, y, &lr_t, &wd_t, &bits_t]);
+        let mut out = self.execute("train_step", &args)?;
+        drop(args);
+        crate::ensure!(out.len() == 2 * n + 2, "train_step output arity");
+        let metric = out.pop().unwrap().item();
+        let loss = out.pop().unwrap().item();
+        let mom_new = out.split_off(n);
+        state.params = Checkpoint::new(state.params.names.clone(), out);
+        state.mom = Checkpoint::new(state.mom.names.clone(), mom_new);
+        Ok((loss, metric))
+    }
+
+    /// Evaluation step: returns (mean loss over batch, task-specific
+    /// accumulator tensor — see [`Task`]).
+    fn eval_step(
+        &mut self,
+        params: &Checkpoint,
+        x: &Tensor,
+        y: &Tensor,
+        bits: &[f32],
+    ) -> crate::Result<(f32, Tensor)> {
+        let bits_t = Tensor::from_f32(&[bits.len()], bits.to_vec());
+        let mut args: Vec<&Tensor> = Vec::with_capacity(params.tensors.len() + 3);
+        args.extend(params.tensors.iter());
+        args.extend([x, y, &bits_t]);
+        let mut out = self.execute("eval_step", &args)?;
+        crate::ensure!(out.len() == 2, "eval_step output arity");
+        let evalout = out.pop().unwrap();
+        let loss = out.pop().unwrap().item();
+        Ok((loss, evalout))
+    }
+
+    /// One Hutchinson sample: per-layer v·Hv vector (HAWQ-v3 trace).
+    fn vhv_step(
+        &mut self,
+        params: &Checkpoint,
+        x: &Tensor,
+        y: &Tensor,
+        bits: &[f32],
+        seed: i32,
+    ) -> crate::Result<Vec<f32>> {
+        let bits_t = Tensor::from_f32(&[bits.len()], bits.to_vec());
+        let seed_t = Tensor::from_i32(&[1], vec![seed]);
+        let mut args: Vec<&Tensor> = Vec::with_capacity(params.tensors.len() + 4);
+        args.extend(params.tensors.iter());
+        args.extend([x, y, &bits_t, &seed_t]);
+        let out = self.execute("vhv_step", &args)?;
+        crate::ensure!(out.len() == 1, "vhv_step output arity");
+        Ok(out[0].f32s().to_vec())
+    }
+
+    /// Per-layer EAGL entropies computed by the backend (cross-check path
+    /// for the native rust implementation in [`crate::eagl`]).
+    ///
+    /// Only each layer's `w` and `sw` enter the entry signature (in the
+    /// original flatten order) — marshal exactly those.
+    fn eagl_step(&mut self, params: &Checkpoint) -> crate::Result<Vec<f32>> {
+        let args: Vec<&Tensor> = params
+            .names
+            .iter()
+            .zip(&params.tensors)
+            .filter(|(n, _)| n.ends_with("/w") || n.ends_with("/sw"))
+            .map(|(_, t)| t)
+            .collect();
+        let out = self.execute("eagl_step", &args)?;
+        crate::ensure!(out.len() == 1, "eagl_step output arity");
+        Ok(out[0].f32s().to_vec())
+    }
+}
+
+impl Backend for Box<dyn Backend> {
+    fn kind(&self) -> &'static str {
+        (**self).kind()
+    }
+    fn manifest(&self) -> &Manifest {
+        (**self).manifest()
+    }
+    fn init_checkpoint(&self) -> crate::Result<Checkpoint> {
+        (**self).init_checkpoint()
+    }
+    fn execute(&mut self, entry: &str, args: &[&Tensor]) -> crate::Result<Vec<Tensor>> {
+        (**self).execute(entry, args)
+    }
+    fn compile_entry(&mut self, entry: &str) -> crate::Result<()> {
+        (**self).compile_entry(entry)
+    }
+}
+
+/// Which backend to open.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Sim,
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Sim => "sim",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<BackendKind> {
+        match s {
+            "sim" => Ok(BackendKind::Sim),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => crate::bail!("unknown backend '{other}' (expected sim|pjrt|auto)"),
+        }
+    }
+}
+
+/// Resolve `--backend` (None or "auto" = automatic): pjrt when artifacts
+/// for `model` exist *and* the pjrt backend is compiled in, else sim.
+pub fn resolve(requested: Option<&str>, model: &str) -> crate::Result<BackendKind> {
+    match requested {
+        None | Some("auto") => {
+            let has_artifacts = crate::find_artifacts()
+                .map(|d| d.join(format!("{model}.manifest.json")).is_file())
+                .unwrap_or(false);
+            if has_artifacts && cfg!(feature = "pjrt") {
+                Ok(BackendKind::Pjrt)
+            } else {
+                Ok(BackendKind::Sim)
+            }
+        }
+        Some(s) => BackendKind::parse(s),
+    }
+}
+
+/// Open a backend for `model`.
+pub fn open(kind: BackendKind, model: &str) -> crate::Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Sim => Ok(Box::new(SimBackend::new(model)?)),
+        BackendKind::Pjrt => open_pjrt(model),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn open_pjrt(model: &str) -> crate::Result<Box<dyn Backend>> {
+    Ok(Box::new(PjrtBackend::load(&crate::artifacts_dir(), model)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn open_pjrt(_model: &str) -> crate::Result<Box<dyn Backend>> {
+    crate::bail!(
+        "backend 'pjrt' unavailable: this build has no `pjrt` feature \
+         (it needs the vendored `xla` crate — see rust/Cargo.toml). \
+         Use `--backend sim` for the hermetic reference backend, or rebuild \
+         with `cargo build --features pjrt`."
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_round_trip() {
+        for k in [BackendKind::Sim, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(BackendKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn resolve_defaults_to_sim_without_artifacts() {
+        // No artifacts dir for this model name in the test environment.
+        let kind = resolve(None, "no_such_model_xyz").unwrap();
+        assert_eq!(kind, BackendKind::Sim);
+        assert_eq!(resolve(Some("auto"), "no_such_model_xyz").unwrap(), BackendKind::Sim);
+        assert_eq!(resolve(Some("sim"), "anything").unwrap(), BackendKind::Sim);
+        assert_eq!(resolve(Some("pjrt"), "anything").unwrap(), BackendKind::Pjrt);
+        assert!(resolve(Some("bogus"), "m").is_err());
+    }
+
+    #[test]
+    fn boxed_backend_forwards() {
+        let mut be: Box<dyn Backend> = open(BackendKind::Sim, "sim_tiny").unwrap();
+        assert_eq!(be.kind(), "sim");
+        assert!(be.manifest().n_params() > 0);
+        assert!(be.compile_entry("train_step").is_ok());
+        let ck = be.init_checkpoint().unwrap();
+        assert_eq!(ck.names.len(), be.manifest().n_params());
+    }
+}

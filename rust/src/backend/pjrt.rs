@@ -1,0 +1,134 @@
+//! PjrtBackend — the AOT-artifact execution path (`--features pjrt`).
+//!
+//! Loads AOT-compiled HLO-text artifacts and executes them through a PJRT
+//! CPU client.  Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()`
+//! → `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Interchange is HLO *text*: jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids.
+//!
+//! Executables are compiled once per (model, entry) and cached.  The
+//! lowered graphs return a single tuple (`return_tuple=True`), which we
+//! decompose on the host.  The typed entry points (`train_step`,
+//! `eval_step`, ...) come from the [`Backend`] trait's shared marshaling.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::ckpt::Checkpoint;
+use crate::tensor::{Data, Tensor};
+
+use super::manifest::{manifest_path_checked, Manifest};
+use super::Backend;
+
+/// A loaded model: PJRT client + manifest + lazily compiled entry points.
+pub struct PjrtBackend {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    artifacts: PathBuf,
+    exes: HashMap<String, PjRtLoadedExecutable>,
+    /// Cumulative executions per entry (perf accounting).
+    pub exec_counts: HashMap<String, u64>,
+}
+
+impl PjrtBackend {
+    /// Load a model's manifest and create a CPU PJRT client.  Entry points
+    /// compile lazily on first use (compilation is seconds per entry).
+    pub fn load(artifacts: &std::path::Path, model: &str) -> crate::Result<PjrtBackend> {
+        // Actionable error before any parsing when artifacts are absent.
+        manifest_path_checked(artifacts, model)?;
+        let manifest = Manifest::load(artifacts, model)?;
+        let client = PjRtClient::cpu().map_err(to_err)?;
+        Ok(PjrtBackend {
+            client,
+            manifest,
+            artifacts: artifacts.to_path_buf(),
+            exes: HashMap::new(),
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    fn exe(&mut self, entry: &str) -> crate::Result<&PjRtLoadedExecutable> {
+        if !self.exes.contains_key(entry) {
+            let spec = self.manifest.entry(entry)?.clone();
+            let path = self.artifacts.join(&spec.file);
+            let proto = HloModuleProto::from_text_file(&path).map_err(to_err)?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(to_err)?;
+            self.exes.insert(entry.to_string(), exe);
+        }
+        Ok(&self.exes[entry])
+    }
+
+    // -- marshaling ----------------------------------------------------------
+
+    fn literal_of(&self, t: &Tensor) -> crate::Result<Literal> {
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &t.data {
+            Data::F32(v) => Literal::vec1(v.as_slice()),
+            Data::I32(v) => Literal::vec1(v.as_slice()),
+        };
+        lit.reshape(&dims).map_err(to_err)
+    }
+
+    fn tensor_of(&self, lit: &Literal) -> crate::Result<Tensor> {
+        let shape = lit.array_shape().map_err(to_err)?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::from_f32(
+                &dims,
+                lit.to_vec::<f32>().map_err(to_err)?,
+            )),
+            xla::ElementType::S32 => Ok(Tensor::from_i32(
+                &dims,
+                lit.to_vec::<i32>().map_err(to_err)?,
+            )),
+            other => crate::bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load the model's AOT-emitted initial checkpoint (seed 0).
+    fn init_checkpoint(&self) -> crate::Result<Checkpoint> {
+        Checkpoint::load(&self.artifacts.join(format!("{}_init.ckpt", self.manifest.model)))
+    }
+
+    /// Force-compile an entry (for startup-cost measurement / warmup).
+    fn compile_entry(&mut self, entry: &str) -> crate::Result<()> {
+        self.exe(entry).map(|_| ())
+    }
+
+    /// Execute an entry point with host tensors; returns decomposed outputs.
+    fn execute(&mut self, entry: &str, args: &[&Tensor]) -> crate::Result<Vec<Tensor>> {
+        let mut literals = Vec::with_capacity(args.len());
+        for t in args {
+            literals.push(self.literal_of(t)?);
+        }
+        *self.exec_counts.entry(entry.to_string()).or_insert(0) += 1;
+        let exe = self.exe(entry)?;
+        let result = exe.execute::<Literal>(&literals).map_err(to_err)?;
+        let out = result[0][0].to_literal_sync().map_err(to_err)?;
+        // return_tuple=True → single tuple output; decompose.
+        let parts = out.to_tuple().map_err(to_err)?;
+        let mut tensors = Vec::with_capacity(parts.len());
+        for lit in &parts {
+            tensors.push(self.tensor_of(lit)?);
+        }
+        Ok(tensors)
+    }
+}
+
+fn to_err(e: xla::Error) -> crate::error::Error {
+    crate::err!("xla: {e}")
+}

@@ -1,0 +1,804 @@
+//! SimBackend — the hermetic pure-Rust reference executor.
+//!
+//! Synthesizes small proxy classification models (linear "link groups"
+//! with seeded-RNG weights) and implements the four pipeline entry points
+//! (`train_step`, `eval_step`, `vhv_step`, `eagl_step`) directly on host
+//! tensors, honoring per-layer [`crate::quant::BitsConfig`] quantization:
+//! LSQ fake-quantized weights (signed) and activations (unsigned,
+//! post-ReLU) with clipped straight-through gradients, SGD-momentum
+//! updates, and a finite-difference Hutchinson v·Hv for HAWQ.  Everything
+//! is deterministic: same inputs → bit-identical outputs, so the full
+//! EAGL/ALPS pipeline runs and is testable with no AOT artifacts.
+//!
+//! ## Proxy models
+//!
+//! The input is the textures classification task
+//! ([`crate::data::Dataset::for_task`] with [`crate::backend::Task::Cls`]); a fixed,
+//! parameter-free Gabor-energy featurizer reduces each 32×32×3 image to
+//! 10 oriented-grating energies (one per class generator), after which a
+//! stack of quantized linear layers discriminates.  Two models ship:
+//!
+//! * `sim_tiny` — 4 layers, for fast pipeline tests;
+//! * `sim_skew` — 6 layers engineered so EAGL's premise *holds by
+//!   construction*: a high-entropy `wide` layer carries the main path
+//!   (dropping it to 2-bit is destructive), while low-entropy layers
+//!   (`idty`, `mix_a`, `mix_b`) are small-gain residual branches whose
+//!   2-bit quantization is nearly harmless.  Layer `macs` are skewed so
+//!   a mid-range budget forces the knapsack to choose between them.
+
+use std::collections::HashMap;
+
+use crate::ckpt::Checkpoint;
+use crate::eagl;
+use crate::jsonio::Json;
+use crate::quant;
+use crate::rng::Pcg32;
+use crate::tensor::Tensor;
+
+use super::manifest::Manifest;
+use super::Backend;
+
+/// Residual branch gain: out = in + GAMMA * branch(in).
+const GAMMA: f32 = 0.05;
+/// SGD momentum of the fused train step.
+const MOMENTUM: f32 = 0.9;
+/// Featurizer output scale (puts class energies at O(1)).
+const FEAT_SCALE: f32 = 6.0;
+/// Finite-difference step of the Hutchinson v·Hv probe.
+const VHV_EPS: f32 = 1e-2;
+/// Precision the `eagl_step` entry scores selectable layers at.  Like the
+/// AOT artifact (whose entropy graph is lowered at the default `b_hi`),
+/// the entry is fixed at 4-bit; fixed layers score at their pinned bits.
+/// Callers needing another precision use the native
+/// [`crate::eagl::checkpoint_entropies`] directly.
+const EAGL_CKPT_BITS: u32 = 4;
+/// Image side and feature count of the textures task.
+const IMG: usize = 32;
+const N_FEATURES: usize = 10;
+const N_CLASSES: usize = 10;
+
+/// Static spec of one sim layer.
+#[derive(Debug, Clone)]
+struct SimLayer {
+    name: &'static str,
+    fan_in: usize,
+    fan_out: usize,
+    link_group: &'static str,
+    fixed_bits: Option<u32>,
+    /// Residual side branch (out = in + GAMMA*layer(in)); needs fan_in == fan_out.
+    branch: bool,
+    w_sigma: f32,
+    sw: f32,
+    sa: f32,
+    macs: u64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn lay(
+    name: &'static str,
+    fan_in: usize,
+    fan_out: usize,
+    link_group: &'static str,
+    fixed_bits: Option<u32>,
+    branch: bool,
+    w_sigma: f32,
+    sw: f32,
+    sa: f32,
+    macs: u64,
+) -> SimLayer {
+    SimLayer {
+        name,
+        fan_in,
+        fan_out,
+        link_group,
+        fixed_bits,
+        branch,
+        w_sigma,
+        sw,
+        sa,
+        macs,
+    }
+}
+
+fn layers_for(model: &str) -> Option<Vec<SimLayer>> {
+    match model {
+        "sim_tiny" => Some(vec![
+            lay("stem", N_FEATURES, 12, "stem", Some(8), false, 0.45, 0.19, 0.10, 120),
+            lay("h1", 12, 12, "h1", None, false, 0.30, 0.15, 0.10, 500),
+            lay("h2", 12, 12, "h2", None, true, 0.10, 0.20, 0.10, 500),
+            lay("head", 12, N_CLASSES, "head", Some(8), false, 0.35, 0.12, 0.10, 120),
+        ]),
+        "sim_skew" => Some(vec![
+            lay("stem", N_FEATURES, 16, "stem", Some(8), false, 0.45, 0.19, 0.10, 160),
+            lay("wide", 16, 16, "wide", None, false, 0.35, 0.12, 0.30, 6000),
+            lay("idty", 16, 16, "idty", None, true, 0.02, 0.25, 0.10, 400),
+            lay("mix_a", 16, 16, "mix", None, true, 0.10, 0.20, 0.10, 400),
+            lay("mix_b", 16, 16, "mix", None, true, 0.10, 0.20, 0.10, 400),
+            lay("head", 16, N_CLASSES, "head", Some(8), false, 0.35, 0.12, 0.10, 160),
+        ]),
+        _ => None,
+    }
+}
+
+/// Names of the available sim models (for error messages / docs).
+pub const SIM_MODELS: &[&str] = &["sim_tiny", "sim_skew"];
+
+/// Owned, per-call view of one layer's parameters.
+#[derive(Clone)]
+struct NetLayer {
+    w: Vec<f32>,
+    b: Vec<f32>,
+    sw: f32,
+    sa: f32,
+}
+
+/// Per-layer forward cache for the backward pass.
+struct LayerCache {
+    /// Input activations [batch * fan_in].
+    a_in: Vec<f32>,
+    /// Pre-activations [batch * fan_out].
+    z: Vec<f32>,
+    /// Fake-quantized weights [fan_in * fan_out].
+    wq: Vec<f32>,
+    /// Weight code inside clamp range (clipped STE mask).
+    w_in: Vec<bool>,
+    /// Activation below the unsigned clamp (clipped STE mask); empty for
+    /// the head layer (logits are not quantized).
+    act_in: Vec<bool>,
+}
+
+/// The hermetic reference backend.
+pub struct SimBackend {
+    manifest: Manifest,
+    layers: Vec<SimLayer>,
+    /// Gabor featurizer basis, [N_FEATURES][IMG*IMG], flattened.
+    basis_cos: Vec<f32>,
+    basis_sin: Vec<f32>,
+    /// Cumulative executions per entry (perf accounting parity with pjrt).
+    pub exec_counts: HashMap<String, u64>,
+}
+
+impl SimBackend {
+    /// Build the sim backend for one of the [`SIM_MODELS`].
+    pub fn new(model: &str) -> crate::Result<SimBackend> {
+        let layers = layers_for(model).ok_or_else(|| {
+            crate::err!(
+                "unknown sim model '{model}' (available: {}); artifact models \
+                 need the pjrt backend",
+                SIM_MODELS.join(", ")
+            )
+        })?;
+        // Chain consistency (defensive — specs are static).
+        for win in layers.windows(2) {
+            let carried = if win[1].branch { win[1].fan_out } else { win[1].fan_in };
+            crate::ensure!(
+                win[0].fan_out == win[1].fan_in && win[1].fan_in == carried,
+                "sim model '{model}': fan mismatch {} -> {}",
+                win[0].name,
+                win[1].name
+            );
+        }
+        let manifest = Manifest::from_json(manifest_json(model, &layers))?;
+        let (basis_cos, basis_sin) = featurizer_basis();
+        Ok(SimBackend {
+            manifest,
+            layers,
+            basis_cos,
+            basis_sin,
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    /// Canonical parameter names, 4 per layer: w, b, sw, sa.
+    fn param_names(&self) -> Vec<String> {
+        let mut names = Vec::with_capacity(4 * self.layers.len());
+        for l in &self.layers {
+            for suffix in ["w", "b", "sw", "sa"] {
+                names.push(format!("{}/{}", l.name, suffix));
+            }
+        }
+        names
+    }
+
+    // -- entry implementations ----------------------------------------------
+
+    fn net_from_params(&self, params: &[&Tensor]) -> crate::Result<Vec<NetLayer>> {
+        crate::ensure!(
+            params.len() == 4 * self.layers.len(),
+            "sim: expected {} param tensors, got {}",
+            4 * self.layers.len(),
+            params.len()
+        );
+        let mut net = Vec::with_capacity(self.layers.len());
+        for (li, l) in self.layers.iter().enumerate() {
+            let w = params[4 * li];
+            let b = params[4 * li + 1];
+            crate::ensure!(
+                w.len() == l.fan_in * l.fan_out && b.len() == l.fan_out,
+                "sim: bad param shape for layer {}",
+                l.name
+            );
+            net.push(NetLayer {
+                w: w.f32s().to_vec(),
+                b: b.f32s().to_vec(),
+                sw: params[4 * li + 2].item(),
+                sa: params[4 * li + 3].item(),
+            });
+        }
+        Ok(net)
+    }
+
+    fn layer_bits(&self, li: usize, bits: &[f32]) -> u32 {
+        self.layers[li]
+            .fixed_bits
+            .unwrap_or_else(|| bits[li].round().max(1.0) as u32)
+    }
+
+    /// Gabor-energy featurizer: [batch * N_FEATURES], O(1) class energies.
+    fn featurize(&self, x: &Tensor) -> crate::Result<(Vec<f32>, usize)> {
+        crate::ensure!(
+            x.shape.len() == 4 && x.shape[1] == IMG && x.shape[2] == IMG && x.shape[3] == 3,
+            "sim: expected x of shape [B,{IMG},{IMG},3], got {:?}",
+            x.shape
+        );
+        let batch = x.shape[0];
+        let xs = x.f32s();
+        let px = IMG * IMG;
+        let mut feats = vec![0f32; batch * N_FEATURES];
+        let mut gray = vec![0f32; px];
+        for b in 0..batch {
+            for (i, g) in gray.iter_mut().enumerate() {
+                let o = (b * px + i) * 3;
+                *g = (xs[o] + xs[o + 1] + xs[o + 2]) / 3.0 - 0.5;
+            }
+            for k in 0..N_FEATURES {
+                let (mut c, mut s) = (0f64, 0f64);
+                let cb = &self.basis_cos[k * px..(k + 1) * px];
+                let sb = &self.basis_sin[k * px..(k + 1) * px];
+                for i in 0..px {
+                    c += (gray[i] * cb[i]) as f64;
+                    s += (gray[i] * sb[i]) as f64;
+                }
+                feats[b * N_FEATURES + k] =
+                    ((c * c + s * s).sqrt() as f32) * (2.0 / px as f32) * FEAT_SCALE;
+            }
+        }
+        Ok((feats, batch))
+    }
+
+    /// Quantized forward pass; returns (logits, per-layer caches).
+    fn forward(
+        &self,
+        net: &[NetLayer],
+        bits: &[f32],
+        feats: &[f32],
+        batch: usize,
+    ) -> (Vec<f32>, Vec<LayerCache>) {
+        let n_layers = self.layers.len();
+        let mut a = feats.to_vec();
+        let mut caches = Vec::with_capacity(n_layers);
+        for li in 0..n_layers {
+            let spec = &self.layers[li];
+            let p = &net[li];
+            let (fi, fo) = (spec.fan_in, spec.fan_out);
+            let b_eff = self.layer_bits(li, bits);
+            let (qn, qp) = quant::qrange_signed(b_eff);
+            let mut wq = vec![0f32; fi * fo];
+            let mut w_in = vec![false; fi * fo];
+            for (i, &w) in p.w.iter().enumerate() {
+                let code = (w / p.sw).round();
+                w_in[i] = code >= qn && code <= qp;
+                wq[i] = code.clamp(qn, qp) * p.sw;
+            }
+            // z = a @ wq + b
+            let mut z = vec![0f32; batch * fo];
+            for bi in 0..batch {
+                let arow = &a[bi * fi..(bi + 1) * fi];
+                let zrow = &mut z[bi * fo..(bi + 1) * fo];
+                zrow.copy_from_slice(&p.b);
+                for (i, &av) in arow.iter().enumerate() {
+                    if av != 0.0 {
+                        let wrow = &wq[i * fo..(i + 1) * fo];
+                        for (o, zv) in zrow.iter_mut().enumerate() {
+                            *zv += av * wrow[o];
+                        }
+                    }
+                }
+            }
+            let last = li == n_layers - 1;
+            if last {
+                caches.push(LayerCache {
+                    a_in: std::mem::take(&mut a),
+                    z: z.clone(),
+                    wq,
+                    w_in,
+                    act_in: Vec::new(),
+                });
+                a = z;
+            } else {
+                // relu → unsigned fake-quant with clipped STE mask.
+                let (_, aqp) = quant::qrange_unsigned(b_eff);
+                let mut hq = vec![0f32; batch * fo];
+                let mut act_in = vec![false; batch * fo];
+                for (i, &zv) in z.iter().enumerate() {
+                    let h = zv.max(0.0);
+                    let code = (h / p.sa).round();
+                    act_in[i] = h / p.sa <= aqp;
+                    hq[i] = code.clamp(0.0, aqp) * p.sa;
+                }
+                let a_in = std::mem::take(&mut a);
+                a = if spec.branch {
+                    let mut out = a_in.clone();
+                    for (o, &hv) in out.iter_mut().zip(&hq) {
+                        *o += GAMMA * hv;
+                    }
+                    out
+                } else {
+                    hq
+                };
+                caches.push(LayerCache { a_in, z, wq, w_in, act_in });
+            }
+        }
+        (a, caches)
+    }
+
+    /// Softmax cross-entropy: (mean loss, dlogits/batch, correct count).
+    fn softmax_ce(logits: &[f32], y: &[i32], batch: usize) -> (f32, Vec<f32>, usize) {
+        let c = N_CLASSES;
+        let mut dlogits = vec![0f32; batch * c];
+        let mut loss = 0f64;
+        let mut correct = 0usize;
+        for b in 0..batch {
+            let row = &logits[b * c..(b + 1) * c];
+            let mut mx = f32::NEG_INFINITY;
+            let mut argmax = 0usize;
+            for (k, &v) in row.iter().enumerate() {
+                if v > mx {
+                    mx = v;
+                    argmax = k;
+                }
+            }
+            let mut denom = 0f64;
+            for &v in row {
+                denom += ((v - mx) as f64).exp();
+            }
+            let yi = y[b] as usize;
+            let p_y = ((row[yi] - mx) as f64).exp() / denom;
+            loss -= (p_y + 1e-12).ln();
+            if argmax == yi {
+                correct += 1;
+            }
+            for k in 0..c {
+                let p = ((row[k] - mx) as f64).exp() / denom;
+                dlogits[b * c + k] =
+                    ((p - if k == yi { 1.0 } else { 0.0 }) / batch as f64) as f32;
+            }
+        }
+        ((loss / batch as f64) as f32, dlogits, correct)
+    }
+
+    /// Full forward + backward: per-layer (dW, db) with clipped STE, plus
+    /// (loss, correct count).
+    fn grads(
+        &self,
+        net: &[NetLayer],
+        bits: &[f32],
+        feats: &[f32],
+        y: &[i32],
+        batch: usize,
+    ) -> (Vec<(Vec<f32>, Vec<f32>)>, f32, usize) {
+        let n_layers = self.layers.len();
+        let (logits, caches) = self.forward(net, bits, feats, batch);
+        let (loss, dlogits, correct) = Self::softmax_ce(&logits, y, batch);
+        let mut grads: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(n_layers);
+        grads.resize_with(n_layers, || (Vec::new(), Vec::new()));
+        let mut d = dlogits;
+        for li in (0..n_layers).rev() {
+            let spec = &self.layers[li];
+            let cache = &caches[li];
+            let (fi, fo) = (spec.fan_in, spec.fan_out);
+            let last = li == n_layers - 1;
+            // Gradient at the layer's pre-activation output.
+            let dbr: Vec<f32> = if last {
+                d.clone()
+            } else {
+                let scale = if spec.branch { GAMMA } else { 1.0 };
+                d.iter()
+                    .enumerate()
+                    .map(|(i, &dv)| {
+                        if cache.act_in[i] && cache.z[i] > 0.0 {
+                            dv * scale
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect()
+            };
+            // dW = a_inᵀ · dbr (masked), db = Σ_b dbr.
+            let mut dw = vec![0f32; fi * fo];
+            let mut db = vec![0f32; fo];
+            for bi in 0..batch {
+                let arow = &cache.a_in[bi * fi..(bi + 1) * fi];
+                let drow = &dbr[bi * fo..(bi + 1) * fo];
+                for (o, &dv) in drow.iter().enumerate() {
+                    db[o] += dv;
+                }
+                for (i, &av) in arow.iter().enumerate() {
+                    if av != 0.0 {
+                        let wrow = &mut dw[i * fo..(i + 1) * fo];
+                        for (o, &dv) in drow.iter().enumerate() {
+                            wrow[o] += av * dv;
+                        }
+                    }
+                }
+            }
+            for (i, g) in dw.iter_mut().enumerate() {
+                if !cache.w_in[i] {
+                    *g = 0.0;
+                }
+            }
+            // d_in = dbr · wqᵀ.
+            let mut d_in = vec![0f32; batch * fi];
+            for bi in 0..batch {
+                let drow = &dbr[bi * fo..(bi + 1) * fo];
+                let irow = &mut d_in[bi * fi..(bi + 1) * fi];
+                for (i, iv) in irow.iter_mut().enumerate() {
+                    let wrow = &cache.wq[i * fo..(i + 1) * fo];
+                    let mut acc = 0f32;
+                    for (o, &dv) in drow.iter().enumerate() {
+                        acc += dv * wrow[o];
+                    }
+                    *iv = acc;
+                }
+            }
+            d = if !last && spec.branch {
+                // Skip connection: upstream gradient passes through.
+                d.iter().zip(&d_in).map(|(&a, &b)| a + b).collect()
+            } else {
+                d_in
+            };
+            grads[li] = (dw, db);
+        }
+        (grads, loss, correct)
+    }
+
+    fn exec_train(&self, args: &[&Tensor]) -> crate::Result<Vec<Tensor>> {
+        let n = 4 * self.layers.len();
+        crate::ensure!(args.len() == 2 * n + 5, "sim train_step: arity {}", args.len());
+        let net = self.net_from_params(&args[..n])?;
+        let mom_args = &args[n..2 * n];
+        let x = args[2 * n];
+        let y_t = args[2 * n + 1];
+        let lr = args[2 * n + 2].item();
+        let wd = args[2 * n + 3].item();
+        let bits = args[2 * n + 4].f32s();
+        crate::ensure!(bits.len() == self.layers.len(), "sim: bits arity");
+        let (feats, batch) = self.featurize(x)?;
+        let y = y_t.i32s();
+        crate::ensure!(y.len() == batch, "sim: y arity");
+        let (grads, loss, correct) = self.grads(&net, bits, &feats, y, batch);
+        // SGD momentum update (wd on weights only; step sizes are inert).
+        let mut out = Vec::with_capacity(2 * n + 2);
+        let mut mom_out = Vec::with_capacity(n);
+        for (li, l) in self.layers.iter().enumerate() {
+            let p = &net[li];
+            let (dw, db) = &grads[li];
+            let mw_old = mom_args[4 * li].f32s();
+            let mb_old = mom_args[4 * li + 1].f32s();
+            let mut w_new = p.w.clone();
+            let mut mw_new = vec![0f32; p.w.len()];
+            for i in 0..p.w.len() {
+                mw_new[i] = MOMENTUM * mw_old[i] + dw[i] + wd * p.w[i];
+                w_new[i] -= lr * mw_new[i];
+            }
+            let mut b_new = p.b.clone();
+            let mut mb_new = vec![0f32; p.b.len()];
+            for o in 0..p.b.len() {
+                mb_new[o] = MOMENTUM * mb_old[o] + db[o];
+                b_new[o] -= lr * mb_new[o];
+            }
+            out.push(Tensor::from_f32(&[l.fan_in, l.fan_out], w_new));
+            out.push(Tensor::from_f32(&[l.fan_out], b_new));
+            out.push((*args[4 * li + 2]).clone()); // sw (inert)
+            out.push((*args[4 * li + 3]).clone()); // sa (inert)
+            mom_out.push(Tensor::from_f32(&[l.fan_in, l.fan_out], mw_new));
+            mom_out.push(Tensor::from_f32(&[l.fan_out], mb_new));
+            mom_out.push((*mom_args[4 * li + 2]).clone());
+            mom_out.push((*mom_args[4 * li + 3]).clone());
+        }
+        out.extend(mom_out);
+        out.push(Tensor::scalar(loss));
+        out.push(Tensor::scalar(correct as f32 / batch as f32));
+        Ok(out)
+    }
+
+    fn exec_eval(&self, args: &[&Tensor]) -> crate::Result<Vec<Tensor>> {
+        let n = 4 * self.layers.len();
+        crate::ensure!(args.len() == n + 3, "sim eval_step: arity {}", args.len());
+        let net = self.net_from_params(&args[..n])?;
+        let x = args[n];
+        let y_t = args[n + 1];
+        let bits = args[n + 2].f32s();
+        crate::ensure!(bits.len() == self.layers.len(), "sim: bits arity");
+        let (feats, batch) = self.featurize(x)?;
+        let y = y_t.i32s();
+        crate::ensure!(y.len() == batch, "sim: y arity");
+        let (logits, _) = self.forward(&net, bits, &feats, batch);
+        let (loss, _, correct) = Self::softmax_ce(&logits, y, batch);
+        Ok(vec![
+            Tensor::scalar(loss),
+            Tensor::from_f32(&[], vec![correct as f32]),
+        ])
+    }
+
+    fn exec_vhv(&self, args: &[&Tensor]) -> crate::Result<Vec<Tensor>> {
+        let n = 4 * self.layers.len();
+        crate::ensure!(args.len() == n + 4, "sim vhv_step: arity {}", args.len());
+        let net = self.net_from_params(&args[..n])?;
+        let x = args[n];
+        let y_t = args[n + 1];
+        let bits = args[n + 2].f32s();
+        let seed = args[n + 3].i32s()[0];
+        let (feats, batch) = self.featurize(x)?;
+        let y = y_t.i32s();
+        crate::ensure!(y.len() == batch, "sim: y arity");
+        // Rademacher probe per layer, deterministic in the seed.
+        let mut rng = Pcg32::new(seed as u32 as u64, 0x6876_7673);
+        let vs: Vec<Vec<f32>> = self
+            .layers
+            .iter()
+            .map(|l| (0..l.fan_in * l.fan_out).map(|_| rng.rademacher()).collect())
+            .collect();
+        let (g0, _, _) = self.grads(&net, bits, &feats, y, batch);
+        let mut net2 = net.clone();
+        for (li, v) in vs.iter().enumerate() {
+            for (w, &vv) in net2[li].w.iter_mut().zip(v) {
+                *w += VHV_EPS * vv;
+            }
+        }
+        let (g1, _, _) = self.grads(&net2, bits, &feats, y, batch);
+        let mut vhv = vec![0f32; self.layers.len()];
+        for li in 0..self.layers.len() {
+            let mut acc = 0f64;
+            for (i, &vv) in vs[li].iter().enumerate() {
+                acc += ((g1[li].0[i] - g0[li].0[i]) / VHV_EPS * vv) as f64;
+            }
+            vhv[li] = acc as f32;
+        }
+        Ok(vec![Tensor::from_f32(&[self.layers.len()], vhv)])
+    }
+
+    fn exec_eagl(&self, args: &[&Tensor]) -> crate::Result<Vec<Tensor>> {
+        let n_layers = self.layers.len();
+        crate::ensure!(args.len() == 2 * n_layers, "sim eagl_step: arity {}", args.len());
+        let mut out = vec![0f32; n_layers];
+        for (li, l) in self.layers.iter().enumerate() {
+            let w = args[2 * li];
+            let sw = args[2 * li + 1].item();
+            let b_eff = l.fixed_bits.unwrap_or(EAGL_CKPT_BITS);
+            out[li] = eagl::layer_entropy(w.f32s(), sw, b_eff) as f32;
+        }
+        Ok(vec![Tensor::from_f32(&[n_layers], out)])
+    }
+}
+
+impl Backend for SimBackend {
+    fn kind(&self) -> &'static str {
+        "sim"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Deterministic seeded-RNG initial checkpoint: per-layer Gaussian
+    /// weights (stream keyed by layer index), zero biases, configured
+    /// step sizes.
+    fn init_checkpoint(&self) -> crate::Result<Checkpoint> {
+        let mut tensors = Vec::with_capacity(4 * self.layers.len());
+        for (li, l) in self.layers.iter().enumerate() {
+            let mut rng = Pcg32::new(
+                0x51AB_0000_0000_0000 ^ (li as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                0x1417,
+            );
+            let w: Vec<f32> = (0..l.fan_in * l.fan_out)
+                .map(|_| l.w_sigma * rng.normal())
+                .collect();
+            tensors.push(Tensor::from_f32(&[l.fan_in, l.fan_out], w));
+            tensors.push(Tensor::zeros(&[l.fan_out]));
+            tensors.push(Tensor::from_f32(&[], vec![l.sw]));
+            tensors.push(Tensor::from_f32(&[], vec![l.sa]));
+        }
+        Ok(Checkpoint::new(self.param_names(), tensors))
+    }
+
+    fn execute(&mut self, entry: &str, args: &[&Tensor]) -> crate::Result<Vec<Tensor>> {
+        *self.exec_counts.entry(entry.to_string()).or_insert(0) += 1;
+        match entry {
+            "train_step" => self.exec_train(args),
+            "eval_step" => self.exec_eval(args),
+            "vhv_step" => self.exec_vhv(args),
+            "eagl_step" => self.exec_eagl(args),
+            other => crate::bail!("sim backend: unknown entry '{other}'"),
+        }
+    }
+}
+
+/// Fixed oriented-grating (Gabor) correlation basis matching the textures
+/// generator in [`crate::data`]: one (orientation, frequency) pair per
+/// class.
+fn featurizer_basis() -> (Vec<f32>, Vec<f32>) {
+    let px = IMG * IMG;
+    let mut cos_b = vec![0f32; N_FEATURES * px];
+    let mut sin_b = vec![0f32; N_FEATURES * px];
+    for k in 0..N_FEATURES {
+        let (theta, freq) = crate::data::texture_class_params(k);
+        let (st, ct) = theta.sin_cos();
+        for i in 0..IMG {
+            for j in 0..IMG {
+                let u = (i as f32 - IMG as f32 / 2.0) / IMG as f32;
+                let v = (j as f32 - IMG as f32 / 2.0) / IMG as f32;
+                let t = (u * ct + v * st) * freq * std::f32::consts::TAU;
+                cos_b[k * px + i * IMG + j] = t.cos();
+                sin_b[k * px + i * IMG + j] = t.sin();
+            }
+        }
+    }
+    (cos_b, sin_b)
+}
+
+/// Synthesize the manifest JSON for a sim model (same schema as the AOT
+/// path's `<model>.manifest.json`).
+fn manifest_json(model: &str, layers: &[SimLayer]) -> Json {
+    let mut params = Vec::new();
+    for l in layers {
+        params.push(param_spec(l.name, "w", vec![l.fan_in, l.fan_out]));
+        params.push(param_spec(l.name, "b", vec![l.fan_out]));
+        params.push(param_spec(l.name, "sw", vec![]));
+        params.push(param_spec(l.name, "sa", vec![]));
+    }
+    let layer_rows: Vec<Json> = layers
+        .iter()
+        .enumerate()
+        .map(|(qindex, l)| {
+            Json::obj(vec![
+                ("name", Json::str(l.name)),
+                ("kind", Json::str("linear")),
+                ("qindex", Json::num(qindex as f64)),
+                ("link_group", Json::str(l.link_group)),
+                ("macs", Json::num(l.macs as f64)),
+                ("weight_params", Json::num((l.fan_in * l.fan_out) as f64)),
+                (
+                    "fixed_bits",
+                    match l.fixed_bits {
+                        Some(b) => Json::num(b as f64),
+                        None => Json::Null,
+                    },
+                ),
+            ])
+        })
+        .collect();
+    let entry = |order: &[&str], outputs: &[&str]| {
+        Json::obj(vec![
+            ("file", Json::str("<sim builtin>")),
+            ("order", Json::arr(order.iter().map(|s| Json::str(s)))),
+            ("outputs", Json::arr(outputs.iter().map(|s| Json::str(s)))),
+        ])
+    };
+    let entries = Json::obj(vec![
+        (
+            "train_step",
+            entry(
+                &["params", "mom", "x", "y", "lr", "wd", "bits"],
+                &["params", "mom", "loss", "metric"],
+            ),
+        ),
+        ("eval_step", entry(&["params", "x", "y", "bits"], &["loss", "evalout"])),
+        ("vhv_step", entry(&["params", "x", "y", "bits", "seed"], &["vhv"])),
+        ("eagl_step", entry(&["w_sw"], &["entropies"])),
+    ]);
+    let usizes = |v: &[usize]| Json::arr(v.iter().map(|&d| Json::num(d as f64)));
+    let meta = Json::obj(vec![
+        ("n_bits", Json::num(layers.len() as f64)),
+        ("train_batch", Json::num(16.0)),
+        ("eval_batch", Json::num(64.0)),
+        ("task", Json::str("cls")),
+        ("x_train_shape", usizes(&[16, IMG, IMG, 3])),
+        ("y_train_shape", usizes(&[16])),
+        ("x_eval_shape", usizes(&[64, IMG, IMG, 3])),
+        ("y_eval_shape", usizes(&[64])),
+        ("x_dtype", Json::str("float32")),
+        ("y_dtype", Json::str("int32")),
+        ("evalout_shape", usizes(&[])),
+    ]);
+    Json::obj(vec![
+        ("model", Json::str(model)),
+        ("params", Json::Arr(params)),
+        ("layers", Json::Arr(layer_rows)),
+        ("entries", entries),
+        ("meta", meta),
+    ])
+}
+
+fn param_spec(layer: &str, suffix: &str, shape: Vec<usize>) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&format!("{layer}/{suffix}"))),
+        ("shape", Json::arr(shape.iter().map(|&d| Json::num(d as f64)))),
+        ("dtype", Json::str("float32")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Dataset, Split};
+    use crate::graph::Graph;
+    use crate::quant::BitsConfig;
+
+    #[test]
+    fn unknown_model_is_actionable() {
+        let err = SimBackend::new("qresnet20").unwrap_err().to_string();
+        assert!(err.contains("sim_tiny"), "{err}");
+        assert!(err.contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn manifest_graph_and_checkpoint_are_consistent() {
+        for model in SIM_MODELS {
+            let be = SimBackend::new(model).unwrap();
+            let m = be.manifest();
+            assert_eq!(m.model, *model);
+            let graph = Graph::from_manifest(&m.raw).unwrap();
+            assert_eq!(graph.n_bits(), m.n_bits);
+            assert!(!graph.groups.is_empty());
+            let ck = be.init_checkpoint().unwrap();
+            assert_eq!(ck.names.len(), m.params.len());
+            for (name, spec) in ck.names.iter().zip(&m.params) {
+                assert_eq!(name, &spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn init_checkpoint_is_deterministic() {
+        let be = SimBackend::new("sim_tiny").unwrap();
+        let a = be.init_checkpoint().unwrap();
+        let b = be.init_checkpoint().unwrap();
+        for (ta, tb) in a.tensors.iter().zip(&b.tensors) {
+            assert_eq!(ta, tb);
+        }
+    }
+
+    #[test]
+    fn eval_runs_and_counts_correct() {
+        let mut be = SimBackend::new("sim_tiny").unwrap();
+        let graph = Graph::from_manifest(&be.manifest().raw).unwrap();
+        let data = Dataset::for_task(be.manifest().task, 1);
+        let ck = be.init_checkpoint().unwrap();
+        let bits = BitsConfig::uniform(&graph, 4).to_f32();
+        let batch = be.manifest().eval_batch;
+        let (x, y) = data.batch(Split::Eval, 0, batch);
+        let (loss, out) = be.eval_step(&ck, &x, &y, &bits).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(out.shape, be.manifest().evalout_shape);
+        let correct = out.item();
+        assert!((0.0..=batch as f32).contains(&correct), "correct={correct}");
+        assert_eq!(be.exec_counts.get("eval_step"), Some(&1));
+    }
+
+    #[test]
+    fn skew_init_entropies_are_ordered() {
+        // The engineered premise: wide ≫ mix layers ≫ idty at init.
+        let mut be = SimBackend::new("sim_skew").unwrap();
+        let ck = be.init_checkpoint().unwrap();
+        let ents = be.eagl_step(&ck).unwrap();
+        let graph = Graph::from_manifest(&be.manifest().raw).unwrap();
+        let h = |name: &str| {
+            let l = graph.layers.iter().find(|l| l.name == name).unwrap();
+            ents[l.qindex] as f64
+        };
+        assert!(h("wide") > 3.0, "wide H = {}", h("wide"));
+        assert!(h("idty") < 0.5, "idty H = {}", h("idty"));
+        assert!(h("mix_a") + h("mix_b") < h("wide"), "mix group must stay below wide");
+    }
+}

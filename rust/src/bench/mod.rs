@@ -74,12 +74,12 @@ pub fn measure<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) ->
 }
 
 /// Measure a fallible operation, propagating the first error.
-pub fn try_measure<F: FnMut() -> anyhow::Result<()>>(
+pub fn try_measure<F: FnMut() -> crate::Result<()>>(
     name: &str,
     warmup: usize,
     iters: usize,
     mut f: F,
-) -> anyhow::Result<Measurement> {
+) -> crate::Result<Measurement> {
     for _ in 0..warmup {
         f()?;
     }
@@ -121,6 +121,24 @@ pub fn quick() -> bool {
     std::env::var("MPQ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Open a coordinator for `model` on the auto-resolved backend, or print
+/// a skip line and return `None` when the model isn't runnable in this
+/// build/checkout (e.g. artifact models without `make artifacts` or a
+/// non-pjrt build).  Bench targets use this so the hermetic parts of the
+/// suite always run.
+pub fn coordinator_or_skip(
+    model: &str,
+    data_seed: u64,
+) -> Option<crate::coordinator::Coordinator<Box<dyn crate::backend::Backend>>> {
+    match crate::coordinator::Coordinator::open_auto(model, data_seed) {
+        Ok(co) => Some(co),
+        Err(e) => {
+            println!("skipping {model}: {e}");
+            None
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,7 +164,7 @@ mod tests {
 
     #[test]
     fn try_measure_propagates() {
-        let r = try_measure("fails", 0, 3, || anyhow::bail!("no"));
+        let r = try_measure("fails", 0, 3, || crate::bail!("no"));
         assert!(r.is_err());
     }
 

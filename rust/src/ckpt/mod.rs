@@ -67,12 +67,12 @@ impl Checkpoint {
 
     pub fn load(path: &Path) -> crate::Result<Checkpoint> {
         let mut f = std::fs::File::open(path)
-            .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?;
+            .map_err(|e| crate::err!("opening {}: {e}", path.display()))?;
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
-        anyhow::ensure!(&magic == MAGIC, "bad checkpoint magic in {}", path.display());
+        crate::ensure!(&magic == MAGIC, "bad checkpoint magic in {}", path.display());
         let count = read_u32(&mut f)? as usize;
-        anyhow::ensure!(count < 1_000_000, "implausible tensor count {count}");
+        crate::ensure!(count < 1_000_000, "implausible tensor count {count}");
         let mut names = Vec::with_capacity(count);
         let mut tensors = Vec::with_capacity(count);
         for _ in 0..count {
@@ -85,7 +85,7 @@ impl Checkpoint {
                 shape.push(read_u32(&mut f)? as usize);
             }
             let byte_len = read_u64(&mut f)? as usize;
-            anyhow::ensure!(
+            crate::ensure!(
                 byte_len == 4 * shape.iter().product::<usize>(),
                 "byte length mismatch for tensor"
             );
@@ -129,7 +129,7 @@ impl Checkpoint {
             }
         }
         let mut f = std::fs::File::create(path)
-            .map_err(|e| anyhow::anyhow!("creating {}: {e}", path.display()))?;
+            .map_err(|e| crate::err!("creating {}: {e}", path.display()))?;
         f.write_all(&buf)?;
         Ok(())
     }

@@ -20,7 +20,7 @@ impl Args {
         let mut iter = argv.into_iter().peekable();
         while let Some(arg) = iter.next() {
             if let Some(name) = arg.strip_prefix("--") {
-                anyhow::ensure!(!name.is_empty(), "bare '--' is not a flag");
+                crate::ensure!(!name.is_empty(), "bare '--' is not a flag");
                 // `--key=value`, `--key value`, or boolean `--switch`.
                 if let Some((k, v)) = name.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
@@ -60,7 +60,7 @@ impl Args {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|e| anyhow::anyhow!("--{key} expects an integer: {e}")),
+                .map_err(|e| crate::err!("--{key} expects an integer: {e}")),
         }
     }
 
@@ -69,7 +69,7 @@ impl Args {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|e| anyhow::anyhow!("--{key} expects an integer: {e}")),
+                .map_err(|e| crate::err!("--{key} expects an integer: {e}")),
         }
     }
 
@@ -78,7 +78,7 @@ impl Args {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|e| anyhow::anyhow!("--{key} expects a number: {e}")),
+                .map_err(|e| crate::err!("--{key} expects a number: {e}")),
         }
     }
 
@@ -102,7 +102,7 @@ impl Args {
                 .map(|s| {
                     s.trim()
                         .parse()
-                        .map_err(|e| anyhow::anyhow!("--{key}: bad number '{s}': {e}"))
+                        .map_err(|e| crate::err!("--{key}: bad number '{s}': {e}"))
                 })
                 .collect(),
             None => Ok(default.to_vec()),

@@ -1,5 +1,5 @@
 //! Experiment coordinator — the paper's evaluation framework (Fig. 1) as a
-//! runnable pipeline.
+//! runnable pipeline, generic over the execution [`Backend`].
 //!
 //! For a (model, method, budget, seed) tuple the coordinator:
 //!
@@ -14,31 +14,32 @@
 //! 5. evaluates and appends a [`RunRecord`] to the JSONL result store
 //!    (append-only; reruns resume by skipping already-present records).
 //!
-//! ALPS's per-group probe fine-tunes are independent jobs; [`JobPool`]
-//! fans independent work out over worker threads, each owning its own PJRT
-//! client (clients are not Sync). On the single-core CI testbed this
-//! degenerates to sequential execution without code changes.
+//! The backend is anything implementing [`Backend`]: the hermetic
+//! [`SimBackend`] (default — no artifacts needed) or the pjrt artifact
+//! runtime.  ALPS's per-group probe fine-tunes are independent jobs;
+//! [`job_pool`] fans independent work out over worker threads, each owning
+//! its own backend (PJRT clients are not Sync). On the single-core CI
+//! testbed this degenerates to sequential execution without code changes.
 
 use std::collections::BTreeMap;
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+use crate::backend::{self, Backend, BackendKind, SimBackend, TrainState};
 use crate::ckpt::Checkpoint;
 use crate::data::Dataset;
 use crate::graph::Graph;
 use crate::jsonio::{self, Json};
 use crate::methods::{self, GainEstimate, MethodConfig, MethodKind};
 use crate::quant::{self, BitsConfig};
-use crate::runtime::{Runtime, TrainState};
 use crate::train::{evaluate, finetune, EvalResult, TrainConfig};
 
-/// Everything needed to run experiments for one model.
-pub struct Coordinator {
+/// Everything needed to run experiments for one model on one backend.
+pub struct Coordinator<B: Backend> {
     pub model: String,
-    pub artifacts: PathBuf,
     pub results_dir: PathBuf,
-    pub rt: Runtime,
+    pub rt: B,
     pub graph: Graph,
     pub data: Dataset,
     pub mcfg: MethodConfig,
@@ -82,13 +83,21 @@ impl RunRecord {
         ])
     }
 
+    /// Parse a record; `None` when a required field (model, method,
+    /// budget, seed, metric) is missing or non-finite — non-finite floats
+    /// serialize as JSON `null` (see [`crate::jsonio`]), so NaN/Inf
+    /// metrics are rejected here rather than corrupting the store.
     pub fn from_json(v: &Json) -> Option<RunRecord> {
+        let metric = v.at(&["metric"]).as_f64()?;
+        if !metric.is_finite() {
+            return None;
+        }
         Some(RunRecord {
             model: v.at(&["model"]).as_str()?.to_string(),
             method: v.at(&["method"]).as_str()?.to_string(),
             budget_frac: v.at(&["budget_frac"]).as_f64()?,
             seed: v.at(&["seed"]).as_f64()? as u64,
-            metric: v.at(&["metric"]).as_f64()?,
+            metric,
             loss: v.at(&["loss"]).as_f64().unwrap_or(f64::NAN),
             groups_at_lo: v.at(&["groups_at_lo"]).as_usize().unwrap_or(0),
             compression: v.at(&["compression"]).as_f64().unwrap_or(0.0),
@@ -98,20 +107,55 @@ impl RunRecord {
     }
 }
 
-impl Coordinator {
-    pub fn new(artifacts: &Path, model: &str, data_seed: u64) -> crate::Result<Coordinator> {
-        let rt = Runtime::load(artifacts, model)?;
-        let graph = Graph::load(artifacts, model)?;
-        let data = Dataset::for_task(rt.manifest.task, data_seed);
-        let results_dir = artifacts
-            .parent()
-            .unwrap_or(Path::new("."))
-            .join("results")
-            .join(model);
+impl Coordinator<Box<dyn Backend>> {
+    /// Open a coordinator on a boxed backend chosen by `kind` (the CLI
+    /// path).  Results go to `results/<model>` next to the artifacts dir
+    /// (pjrt) or under the cwd (sim).
+    pub fn open(kind: BackendKind, model: &str, data_seed: u64) -> crate::Result<Self> {
+        let be = backend::open(kind, model)?;
+        let results_dir = match kind {
+            BackendKind::Pjrt => crate::artifacts_dir()
+                .parent()
+                .unwrap_or(Path::new("."))
+                .join("results")
+                .join(model),
+            // results_root() walks up like find_artifacts(), so sim sweeps
+            // resume from the same store regardless of the cwd.
+            BackendKind::Sim => crate::results_root().join(model),
+        };
+        Coordinator::with_backend(be, data_seed, results_dir)
+    }
+
+    /// Open with automatic backend resolution (artifacts + pjrt feature →
+    /// pjrt, else sim).
+    pub fn open_auto(model: &str, data_seed: u64) -> crate::Result<Self> {
+        Self::open(backend::resolve(None, model)?, model, data_seed)
+    }
+}
+
+impl Coordinator<SimBackend> {
+    /// Hermetic sim coordinator (no artifacts); results under
+    /// `<results_root>/<model>` (see [`crate::results_root`]).
+    pub fn sim(model: &str, data_seed: u64) -> crate::Result<Self> {
+        Coordinator::with_backend(
+            SimBackend::new(model)?,
+            data_seed,
+            crate::results_root().join(model),
+        )
+    }
+}
+
+impl<B: Backend> Coordinator<B> {
+    /// Build a coordinator around an already-open backend.  The graph is
+    /// derived from the backend's manifest; `results_dir` holds cached
+    /// checkpoints, gains, and the JSONL store.
+    pub fn with_backend(rt: B, data_seed: u64, results_dir: PathBuf) -> crate::Result<Self> {
+        let graph = Graph::from_manifest(&rt.manifest().raw)?;
+        let data = Dataset::for_task(rt.manifest().task, data_seed);
+        let model = rt.manifest().model.clone();
         std::fs::create_dir_all(&results_dir)?;
         Ok(Coordinator {
-            model: model.to_string(),
-            artifacts: artifacts.to_path_buf(),
+            model,
             results_dir,
             rt,
             graph,
@@ -132,7 +176,11 @@ impl Coordinator {
         if path.exists() {
             return Checkpoint::load(&path);
         }
-        log::info!("training {}-bit base checkpoint ({} steps)", self.mcfg.b_hi, self.base_steps);
+        crate::info!(
+            "training {}-bit base checkpoint ({} steps)",
+            self.mcfg.b_hi,
+            self.base_steps
+        );
         let ck = self.train_uniform(self.mcfg.b_hi, self.base_steps, 0)?;
         ck.save(&path)?;
         Ok(ck)
@@ -145,7 +193,7 @@ impl Coordinator {
         if path.exists() {
             return Checkpoint::load(&path);
         }
-        log::info!("training 8-bit reference checkpoint ({} steps)", self.base_steps);
+        crate::info!("training 8-bit reference checkpoint ({} steps)", self.base_steps);
         let ck = self.train_uniform(8, self.base_steps, 0)?;
         ck.save(&path)?;
         Ok(ck)
@@ -162,7 +210,7 @@ impl Coordinator {
             ..TrainConfig::default()
         };
         let log_ = finetune(&mut self.rt, &mut state, &self.data, &bits.to_f32(), &cfg)?;
-        log::info!(
+        crate::info!(
             "base {}-bit: final train loss {:.4} metric {:.4}",
             b,
             log_.losses.last().copied().unwrap_or(f32::NAN),
@@ -300,13 +348,11 @@ impl Coordinator {
         for &kind in kinds {
             for &frac in budget_fracs {
                 for &seed in seeds {
-                    if let Some(existing) =
-                        store.find(&self.model, kind.name(), frac, seed)
-                    {
+                    if let Some(existing) = store.find(&self.model, kind.name(), frac, seed) {
                         out.push(existing);
                         continue;
                     }
-                    log::info!(
+                    crate::info!(
                         "run {} {} budget={:.0}% seed={}",
                         self.model,
                         kind.name(),
@@ -388,8 +434,8 @@ impl ResultStore {
 // ---------------------------------------------------------------------------
 
 /// Run `jobs` of independent work items across `workers` threads.  Each
-/// worker invokes `make_worker_state` once (e.g. to open its own PJRT
-/// client — clients are not Sync) and then processes items off a shared
+/// worker invokes `make_worker_state` once (e.g. to open its own backend —
+/// PJRT clients are not Sync) and then processes items off a shared
 /// queue.  Results are returned in input order.
 pub fn job_pool<T, S, R>(
     items: Vec<T>,
@@ -404,10 +450,10 @@ where
     let n = items.len();
     let queue = std::sync::Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>());
     let results = std::sync::Mutex::new(Vec::<(usize, R)>::with_capacity(n));
-    let err = std::sync::Mutex::new(None::<anyhow::Error>);
-    crossbeam_utils::thread::scope(|scope| {
+    let err = std::sync::Mutex::new(None::<crate::error::Error>);
+    std::thread::scope(|scope| {
         for _ in 0..workers.max(1) {
-            scope.spawn(|_| {
+            scope.spawn(|| {
                 let mut state = match make_worker_state() {
                     Ok(s) => s,
                     Err(e) => {
@@ -428,13 +474,12 @@ where
                 }
             });
         }
-    })
-    .map_err(|_| anyhow::anyhow!("job pool worker panicked"))?;
+    });
     if let Some(e) = err.into_inner().unwrap() {
         return Err(e);
     }
     let mut results = results.into_inner().unwrap();
-    anyhow::ensure!(results.len() == n, "job pool lost results");
+    crate::ensure!(results.len() == n, "job pool lost results");
     results.sort_by_key(|(i, _)| *i);
     Ok(results.into_iter().map(|(_, r)| r).collect())
 }
@@ -443,14 +488,8 @@ where
 mod tests {
     use super::*;
 
-    #[test]
-    fn result_store_round_trip_and_resume() {
-        let dir = std::env::temp_dir().join("mpq_store_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join(format!("store_{}.jsonl", std::process::id()));
-        let _ = std::fs::remove_file(&path);
-        let mut store = ResultStore::open(&path).unwrap();
-        let rec = RunRecord {
+    fn sample_record() -> RunRecord {
+        RunRecord {
             model: "m".into(),
             method: "eagl".into(),
             budget_frac: 0.7,
@@ -461,14 +500,65 @@ mod tests {
             compression: 9.1,
             gbops: 1.25,
             wall_s: 2.0,
-        };
-        store.append(&rec).unwrap();
+        }
+    }
+
+    #[test]
+    fn result_store_round_trip_and_resume() {
+        let dir = std::env::temp_dir().join("mpq_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("store_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut store = ResultStore::open(&path).unwrap();
+        store.append(&sample_record()).unwrap();
         // Reopen → record still there.
         let store2 = ResultStore::open(&path).unwrap();
         let found = store2.find("m", "eagl", 0.7, 3).unwrap();
         assert!((found.metric - 0.91).abs() < 1e-12);
         assert!(store2.find("m", "eagl", 0.7, 4).is_none());
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn run_record_json_round_trip() {
+        let rec = sample_record();
+        let line = rec.to_json().to_string_compact();
+        let back = RunRecord::from_json(&jsonio::parse(&line).unwrap()).unwrap();
+        assert_eq!(back.model, rec.model);
+        assert_eq!(back.method, rec.method);
+        assert_eq!(back.seed, rec.seed);
+        assert!((back.metric - rec.metric).abs() < 1e-12);
+        assert!((back.loss - rec.loss).abs() < 1e-12);
+        assert_eq!(back.groups_at_lo, rec.groups_at_lo);
+        assert!((back.compression - rec.compression).abs() < 1e-12);
+    }
+
+    #[test]
+    fn run_record_rejects_nan_metric() {
+        let mut rec = sample_record();
+        rec.metric = f64::NAN;
+        // Non-finite numbers serialize as null...
+        let line = rec.to_json().to_string_compact();
+        assert!(line.contains("\"metric\":null"), "{line}");
+        // ...and a null/missing required field parses to None.
+        let v = jsonio::parse(&line).unwrap();
+        assert!(RunRecord::from_json(&v).is_none());
+    }
+
+    #[test]
+    fn run_record_missing_optional_fields_default() {
+        // Only required fields present: loss defaults to NaN, counters to 0.
+        let v = jsonio::parse(
+            r#"{"model":"m","method":"eagl","budget_frac":0.5,"seed":1,"metric":0.8}"#,
+        )
+        .unwrap();
+        let rec = RunRecord::from_json(&v).unwrap();
+        assert!(rec.loss.is_nan());
+        assert_eq!(rec.groups_at_lo, 0);
+        assert_eq!(rec.compression, 0.0);
+        // Missing a required field → None.
+        let v = jsonio::parse(r#"{"model":"m","method":"eagl","metric":0.8}"#).unwrap();
+        assert!(RunRecord::from_json(&v).is_none());
     }
 
     #[test]
@@ -487,7 +577,7 @@ mod tests {
             || Ok(()),
             |_, x| {
                 if x == 3 {
-                    anyhow::bail!("boom")
+                    crate::bail!("boom")
                 } else {
                     Ok(x)
                 }

@@ -16,7 +16,7 @@
 //!    stand-in for qbert).
 
 use crate::rng::Pcg32;
-use crate::runtime::Task;
+use crate::backend::Task;
 use crate::tensor::Tensor;
 
 /// Train or eval stream (disjoint RNG streams).
@@ -85,8 +85,7 @@ impl Dataset {
             // pair) — deliberately low-SNR so precision actually matters:
             // a 2-bit activation path (4 levels) visibly degrades here
             // while 8-bit stays clean.
-            let theta = std::f32::consts::PI * (class % 5) as f32 / 5.0;
-            let freq = if class < 5 { 3.0 } else { 4.5 };
+            let (theta, freq) = texture_class_params(class);
             let phase = rng.range(0.0, std::f32::consts::TAU);
             let amp = rng.range(0.18, 0.30);
             let (st, ct) = theta.sin_cos();
@@ -195,6 +194,15 @@ impl Dataset {
             Tensor::from_i32(&[batch, 2], spans),
         )
     }
+}
+
+/// (orientation θ, spatial frequency) of one texture class's grating —
+/// the generator's class definition, shared with the sim backend's
+/// matched-filter featurizer so the two can never drift apart.
+pub fn texture_class_params(class: usize) -> (f32, f32) {
+    let theta = std::f32::consts::PI * (class % 5) as f32 / 5.0;
+    let freq = if class < 5 { 3.0 } else { 4.5 };
+    (theta, freq)
 }
 
 /// SQuAD-style token-overlap F1 between predicted and gold spans.

@@ -52,10 +52,10 @@ pub fn checkpoint_entropies(graph: &Graph, ck: &Checkpoint, ckpt_bits: u32) -> c
         let base = layer.name.replace('.', "/");
         let w = ck
             .get(&format!("{base}/w"))
-            .ok_or_else(|| anyhow::anyhow!("checkpoint missing {base}/w"))?;
+            .ok_or_else(|| crate::err!("checkpoint missing {base}/w"))?;
         let s = ck
             .get(&format!("{base}/sw"))
-            .ok_or_else(|| anyhow::anyhow!("checkpoint missing {base}/sw"))?;
+            .ok_or_else(|| crate::err!("checkpoint missing {base}/sw"))?;
         let bits = layer.fixed_bits.unwrap_or(ckpt_bits);
         out[layer.qindex] = layer_entropy(w.f32s(), s.item(), bits);
     }

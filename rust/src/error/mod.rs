@@ -1,0 +1,109 @@
+//! Error substrate (offline environment — no `anyhow`).
+//!
+//! A single string-carrying error type plus the three macros the crate
+//! uses everywhere: [`err!`](crate::err) builds an [`Error`] from a format
+//! string, [`bail!`](crate::bail) returns it, and
+//! [`ensure!`](crate::ensure) bails when a condition fails.  `?` works on
+//! the std error types the crate actually encounters (io, UTF-8).
+
+use std::fmt;
+
+/// Crate-wide error: a rendered message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { msg: m.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::string::FromUtf8Error> for Error {
+    fn from(e: std::string::FromUtf8Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::fmt::Error> for Error {
+    fn from(e: std::fmt::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a format string: `err!("bad {x}")`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an error: `bail!("bad {x}")`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*).into())
+    };
+}
+
+/// Bail unless a condition holds: `ensure!(a == b, "mismatch {a} {b}")`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        crate::ensure!(!flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_build_and_propagate() {
+        assert_eq!(fails(false).unwrap(), 7);
+        let e = fails(true).unwrap_err();
+        assert_eq!(e.to_string(), "flag was true");
+        let e2 = crate::err!("x = {}", 3);
+        assert_eq!(format!("{e2}"), "x = 3");
+        assert_eq!(format!("{e2:?}"), "x = 3");
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        assert!(read().is_err());
+    }
+}

@@ -52,12 +52,12 @@ impl Graph {
         let model = manifest
             .at(&["model"])
             .as_str()
-            .ok_or_else(|| anyhow::anyhow!("manifest missing model name"))?
+            .ok_or_else(|| crate::err!("manifest missing model name"))?
             .to_string();
         let rows = manifest
             .at(&["layers"])
             .as_arr()
-            .ok_or_else(|| anyhow::anyhow!("manifest missing layers"))?;
+            .ok_or_else(|| crate::err!("manifest missing layers"))?;
         let mut layers = Vec::with_capacity(rows.len());
         for row in rows {
             layers.push(Layer {
@@ -66,7 +66,7 @@ impl Graph {
                 qindex: row
                     .at(&["qindex"])
                     .as_usize()
-                    .ok_or_else(|| anyhow::anyhow!("layer missing qindex"))?,
+                    .ok_or_else(|| crate::err!("layer missing qindex"))?,
                 link_group: row
                     .at(&["link_group"])
                     .as_str()
@@ -103,7 +103,8 @@ impl Graph {
     }
 
     pub fn load(artifacts: &Path, model: &str) -> crate::Result<Graph> {
-        let manifest = crate::jsonio::parse_file(&artifacts.join(format!("{model}.manifest.json")))?;
+        let path = crate::backend::manifest::manifest_path_checked(artifacts, model)?;
+        let manifest = crate::jsonio::parse_file(&path)?;
         Graph::from_manifest(&manifest)
     }
 

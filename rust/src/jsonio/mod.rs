@@ -126,14 +126,14 @@ pub fn parse(text: &str) -> crate::Result<Json> {
     let v = p.value()?;
     p.skip_ws();
     if p.pos != p.bytes.len() {
-        anyhow::bail!("trailing characters at byte {}", p.pos);
+        crate::bail!("trailing characters at byte {}", p.pos);
     }
     Ok(v)
 }
 
 pub fn parse_file(path: &std::path::Path) -> crate::Result<Json> {
     let text = std::fs::read_to_string(path)
-        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        .map_err(|e| crate::err!("reading {}: {e}", path.display()))?;
     parse(&text)
 }
 
@@ -150,7 +150,7 @@ impl<'a> Parser<'a> {
     fn bump(&mut self) -> crate::Result<u8> {
         let b = self
             .peek()
-            .ok_or_else(|| anyhow::anyhow!("unexpected end of JSON"))?;
+            .ok_or_else(|| crate::err!("unexpected end of JSON"))?;
         self.pos += 1;
         Ok(b)
     }
@@ -164,7 +164,7 @@ impl<'a> Parser<'a> {
     fn expect(&mut self, b: u8) -> crate::Result<()> {
         let got = self.bump()?;
         if got != b {
-            anyhow::bail!(
+            crate::bail!(
                 "expected '{}' got '{}' at byte {}",
                 b as char,
                 got as char,
@@ -184,7 +184,7 @@ impl<'a> Parser<'a> {
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'n') => self.lit("null", Json::Null),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            other => anyhow::bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos),
+            other => crate::bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos),
         }
     }
 
@@ -193,7 +193,7 @@ impl<'a> Parser<'a> {
             self.pos += word.len();
             Ok(val)
         } else {
-            anyhow::bail!("bad literal at byte {}", self.pos)
+            crate::bail!("bad literal at byte {}", self.pos)
         }
     }
 
@@ -216,7 +216,7 @@ impl<'a> Parser<'a> {
             match self.bump()? {
                 b',' => continue,
                 b'}' => break,
-                c => anyhow::bail!("expected ',' or '}}' got '{}'", c as char),
+                c => crate::bail!("expected ',' or '}}' got '{}'", c as char),
             }
         }
         Ok(Json::Obj(map))
@@ -236,7 +236,7 @@ impl<'a> Parser<'a> {
             match self.bump()? {
                 b',' => continue,
                 b']' => break,
-                c => anyhow::bail!("expected ',' or ']' got '{}'", c as char),
+                c => crate::bail!("expected ',' or ']' got '{}'", c as char),
             }
         }
         Ok(Json::Arr(items))
@@ -263,11 +263,11 @@ impl<'a> Parser<'a> {
                             let c = self.bump()? as char;
                             code = code * 16
                                 + c.to_digit(16)
-                                    .ok_or_else(|| anyhow::anyhow!("bad \\u escape"))?;
+                                    .ok_or_else(|| crate::err!("bad \\u escape"))?;
                         }
                         out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
                     }
-                    c => anyhow::bail!("bad escape '\\{}'", c as char),
+                    c => crate::bail!("bad escape '\\{}'", c as char),
                 },
                 c if c < 0x80 => out.push(c as char),
                 c => {
@@ -282,7 +282,7 @@ impl<'a> Parser<'a> {
                     let start = self.pos - 1;
                     self.pos += len - 1;
                     let chunk = std::str::from_utf8(&self.bytes[start..start + len])
-                        .map_err(|_| anyhow::anyhow!("invalid UTF-8 in string"))?;
+                        .map_err(|_| crate::err!("invalid UTF-8 in string"))?;
                     out.push_str(chunk);
                 }
             }
@@ -302,7 +302,7 @@ impl<'a> Parser<'a> {
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
         text.parse::<f64>()
             .map(Json::Num)
-            .map_err(|e| anyhow::anyhow!("bad number '{text}': {e}"))
+            .map_err(|e| crate::err!("bad number '{text}': {e}"))
     }
 }
 
@@ -323,7 +323,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Inf; emit null so the line stays
+                    // parseable (readers treat null as "missing").
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -405,6 +409,23 @@ mod tests {
         let src = r#"{"arr":[1,2.5,"s"],"b":false,"n":null}"#;
         let v = parse(src).unwrap();
         assert_eq!(parse(&v.to_string_compact()).unwrap(), v);
+    }
+
+    #[test]
+    fn non_finite_numbers_emit_null_and_do_not_parse() {
+        // Emission: NaN/Inf become null so every emitted line re-parses.
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(v).to_string_compact(), "null");
+        }
+        let obj = Json::obj(vec![("a", Json::num(f64::NAN)), ("b", Json::num(1.5))]);
+        let text = obj.to_string_compact();
+        assert_eq!(text, r#"{"a":null,"b":1.5}"#);
+        let back = parse(&text).unwrap();
+        assert!(back.at(&["a"]).is_null());
+        // Parsing: bare NaN/Infinity are not JSON.
+        assert!(parse("NaN").is_err());
+        assert!(parse("Infinity").is_err());
+        assert!(parse("-Infinity").is_err());
     }
 
     #[test]

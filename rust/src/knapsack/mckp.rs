@@ -52,7 +52,7 @@ pub fn solve_mckp(classes: &[Vec<Choice>], capacity: u64) -> Option<McSelection>
         assert!(class.len() < u8::MAX as usize, "too many choices per class");
         let mut next = vec![NEG; cap + 1];
         for (oi, opt) in class.iter().enumerate() {
-            let w = opt.weight.div_ceil(scale) as usize;
+            let w = ((opt.weight + scale - 1) / scale) as usize;
             if w > cap {
                 continue;
             }
@@ -90,7 +90,7 @@ pub fn solve_mckp(classes: &[Vec<Choice>], capacity: u64) -> Option<McSelection>
         picks[k] = oi as usize;
         let opt = classes[k][oi as usize];
         total_weight += opt.weight;
-        c -= opt.weight.div_ceil(scale) as usize;
+        c -= ((opt.weight + scale - 1) / scale) as usize;
     }
     Some(McSelection {
         choice_per_class: picks,

@@ -30,11 +30,13 @@ const GAIN_LEVELS: u64 = 10_000;
 // this, bounding the table at n×256K cells.  The induced selection error
 // is ≤ n·scale BMACs (≈0.02% of a ResNet-50-scale budget) — far below the
 // paper's own 1e-4 gain-quantization granularity (footnote 2), so the
-// solution stays ε-optimal in the paper's sense.  Perf pass §3: 4M→256K
-// took the 54-item/1M-BMAC paper-scale instance from 156 ms to 40 ms and
-// the 1000-item stress case from 17.5 s to 1.5 s with identical
-// selections in every regression test.
-const MAX_CAP: usize = 1 << 18;
+// solution stays ε-optimal in the paper's sense; formally,
+// exact(capacity − n·scale) ≤ solve_01(capacity) ≤ exact(capacity), which
+// rust/tests/prop_invariants.rs checks against an unscaled exact solver.
+// Perf pass §3: 4M→256K took the 54-item/1M-BMAC paper-scale instance
+// from 156 ms to 40 ms and the 1000-item stress case from 17.5 s to 1.5 s
+// with identical selections in every regression test.
+pub const MAX_CAP: usize = 1 << 18;
 
 /// Quantize float gains to integers 1..=10000 (paper footnote 2).
 /// All-equal gains map to the same mid value, preserving ties.
@@ -57,7 +59,7 @@ pub fn solve_01(values: &[u64], weights: &[u64], capacity: u64) -> Selection {
     let n = values.len();
     // Rescale weights if the capacity is too fine-grained for the DP table.
     let scale = (capacity as usize / MAX_CAP).max(1) as u64;
-    let ws: Vec<u64> = weights.iter().map(|&w| w.div_ceil(scale)).collect();
+    let ws: Vec<u64> = weights.iter().map(|&w| (w + scale - 1) / scale).collect();
     let cap = (capacity / scale) as usize;
 
     let mut best = vec![0u64; cap + 1];

@@ -14,26 +14,46 @@
 //! 2. pick per-layer precisions under a BMAC budget with the 0-1 integer
 //!    [`knapsack`] solver (§3.1);
 //! 3. fine-tune the resulting mixed-precision network with LSQ
-//!    ([`train`], executing AOT-lowered JAX/Pallas artifacts through
-//!    [`runtime`]) and report task metrics along the whole
+//!    ([`train`]) and report task metrics along the whole
 //!    accuracy–throughput frontier ([`coordinator`], [`report`]).
 //!
-//! Python/JAX/Pallas only ever runs at build time (`make artifacts`); this
-//! crate is the entire runtime (DESIGN.md §2).
+//! ## Execution backends
 //!
-//! Substrate modules ([`jsonio`], [`rng`], [`tensor`], [`cli`], [`bench`],
-//! [`prop`], [`ckpt`]) are built from scratch — the build environment is
-//! offline with only the `xla` dependency tree vendored.
+//! Every step that touches a network executes through the [`backend`]
+//! abstraction — [`backend::Backend`] exposes `execute(entry, inputs)`,
+//! `init_checkpoint()` and manifest access, plus the typed entry points
+//! (`train_step`, `eval_step`, `vhv_step`, `eagl_step`) built on top.
+//! Two implementations ship:
+//!
+//! * [`backend::SimBackend`] — the **hermetic pure-Rust reference
+//!   executor** (default).  It synthesizes small proxy models with
+//!   seeded-RNG weights, honors per-layer [`quant::BitsConfig`]
+//!   quantization in forward/backward, and makes the full EAGL/ALPS
+//!   pipeline runnable and testable with zero external build steps.
+//! * `backend::PjrtBackend` (`--features pjrt`) — the AOT path: loads
+//!   HLO-text artifacts produced by the Python build (`make artifacts`)
+//!   and executes them through a PJRT CPU client.  Requires the vendored
+//!   `xla` crate; see `rust/Cargo.toml`.
+//!
+//! The CLI selects a backend with `--backend sim|pjrt|auto` (auto prefers
+//! artifacts when present and compiled-in, else falls back to sim).
+//!
+//! Substrate modules ([`error`], [`logging`], [`jsonio`], [`rng`],
+//! [`tensor`], [`cli`], [`bench`], [`prop`], [`ckpt`]) are built from
+//! scratch — the default build has **no external dependencies** at all.
 
+pub mod backend;
 pub mod bench;
 pub mod ckpt;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod eagl;
+pub mod error;
 pub mod graph;
 pub mod jsonio;
 pub mod knapsack;
+pub mod logging;
 pub mod methods;
 pub mod prop;
 pub mod quant;
@@ -45,23 +65,50 @@ pub mod tensor;
 pub mod train;
 
 /// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = crate::error::Result<T>;
 
-/// Root of the artifacts directory (override with `MPQ_ARTIFACTS`).
-pub fn artifacts_dir() -> std::path::PathBuf {
+/// Locate the AOT artifacts directory, if any: the `MPQ_ARTIFACTS`
+/// override wins (returned even if missing, so errors can name it),
+/// otherwise walk up from the cwd looking for an `artifacts/` directory.
+pub fn find_artifacts() -> Option<std::path::PathBuf> {
     if let Some(p) = std::env::var_os("MPQ_ARTIFACTS") {
-        return std::path::PathBuf::from(p);
+        return Some(std::path::PathBuf::from(p));
     }
-    // Walk up from cwd until an `artifacts/` directory is found so examples,
-    // tests and benches work from any subdirectory.
     let mut dir = std::env::current_dir().unwrap_or_default();
     loop {
         let cand = dir.join("artifacts");
         if cand.is_dir() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// Root of the artifacts directory (override with `MPQ_ARTIFACTS`).
+/// Falls back to `artifacts` when nothing is found; prefer
+/// [`find_artifacts`] when "absent" must be distinguishable.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    find_artifacts().unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}
+
+/// Root of the results directory: the `MPQ_RESULTS` override wins,
+/// otherwise walk up from the cwd looking for an existing `results/`
+/// (so sweeps resume from the same store regardless of the invocation
+/// directory, mirroring [`find_artifacts`]); falls back to `./results`.
+pub fn results_root() -> std::path::PathBuf {
+    if let Some(p) = std::env::var_os("MPQ_RESULTS") {
+        return std::path::PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_default();
+    loop {
+        let cand = dir.join("results");
+        if cand.is_dir() {
             return cand;
         }
         if !dir.pop() {
-            return std::path::PathBuf::from("artifacts");
+            return std::path::PathBuf::from("results");
         }
     }
 }

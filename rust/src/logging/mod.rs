@@ -1,0 +1,85 @@
+//! Logging substrate (offline environment — no `log` crate).
+//!
+//! Level-filtered stderr logging via the [`info!`](crate::info),
+//! [`warn!`](crate::warn) and [`debug!`](crate::debug) macros.  The level
+//! is read once from `MPQ_LOG` (`debug|info|warn|error`, default `info`)
+//! and can be overridden programmatically with [`set_level`].
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub const ERROR: u8 = 1;
+pub const WARN: u8 = 2;
+pub const INFO: u8 = 3;
+pub const DEBUG: u8 = 4;
+
+/// 0 = not yet initialized from the environment.
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+/// Current log level, lazily initialized from `MPQ_LOG`.
+pub fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != 0 {
+        return l;
+    }
+    let l = match std::env::var("MPQ_LOG").as_deref() {
+        Ok("debug") => DEBUG,
+        Ok("warn") => WARN,
+        Ok("error") => ERROR,
+        _ => INFO,
+    };
+    LEVEL.store(l, Ordering::Relaxed);
+    l
+}
+
+/// Force the log level (tests, CLI flags).
+pub fn set_level(l: u8) {
+    LEVEL.store(l, Ordering::Relaxed);
+}
+
+/// Macro back end: emit one line to stderr if `lvl` is enabled.
+pub fn log(lvl: u8, name: &str, args: std::fmt::Arguments<'_>) {
+    if lvl <= level() {
+        eprintln!("[{name}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::logging::log($crate::logging::INFO, "INFO", format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        $crate::logging::log($crate::logging::WARN, "WARN", format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::logging::log($crate::logging::DEBUG, "DEBUG", format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(ERROR < WARN && WARN < INFO && INFO < DEBUG);
+    }
+
+    #[test]
+    fn set_level_wins() {
+        set_level(WARN);
+        assert_eq!(level(), WARN);
+        // Disabled level is a no-op (must not panic).
+        crate::debug!("hidden {}", 1);
+        set_level(INFO);
+        crate::info!("shown {}", 2);
+    }
+}

@@ -2,53 +2,30 @@
 //! framework.
 //!
 //! ```text
-//! mpq info       --model qresnet20
-//! mpq train-base --model qresnet20 [--steps 400]
-//! mpq gains      --model qresnet20 --method eagl|alps|hawq_v3
-//! mpq select     --model qresnet20 --method eagl --budget 0.7
-//! mpq run        --model qresnet20 --method eagl --budget 0.7 --seed 0
-//! mpq sweep      --model qresnet20 --methods eagl,alps,hawq_v3,first_to_last
+//! mpq info       --model sim_skew
+//! mpq train-base --model sim_skew [--steps 400]
+//! mpq gains      --model sim_skew --method eagl|alps|hawq_v3
+//! mpq select     --model sim_skew --method eagl --budget 0.7
+//! mpq run        --model sim_skew --method eagl --budget 0.7 --seed 0
+//! mpq sweep      --model sim_skew --methods eagl,alps,hawq_v3,first_to_last
 //!                --budgets 0.95,0.9,...  --seeds 3
-//! mpq report     --model qresnet20
-//! mpq eagl       --model qresnet20 [--ckpt path]   # offline metric (Fig. 2)
+//! mpq report     --model sim_skew
+//! mpq eagl       --model sim_skew [--ckpt path]   # offline metric (Fig. 2)
 //! ```
+//!
+//! Backend selection: `--backend sim|pjrt|auto` (default auto).  Auto uses
+//! the pjrt artifact runtime when `artifacts/` holds the model's manifest
+//! *and* the binary was built with `--features pjrt`; otherwise the
+//! hermetic pure-Rust sim backend (models `sim_tiny`, `sim_skew`).
 
+use mpq::backend::{self, Backend, BackendKind, Task};
 use mpq::cli::Args;
 use mpq::coordinator::{Coordinator, ResultStore};
 use mpq::methods::MethodKind;
 use mpq::quant::BitsConfig;
 use mpq::report;
-use mpq::runtime::Task;
-
-struct StderrLogger;
-
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &log::Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-    fn log(&self, record: &log::Record) {
-        if self.enabled(record.metadata()) {
-            eprintln!("[{}] {}", record.level(), record.args());
-        }
-    }
-    fn flush(&self) {}
-}
-
-static LOGGER: StderrLogger = StderrLogger;
-
-fn init_logging() {
-    let level = match std::env::var("MPQ_LOG").as_deref() {
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("warn") => log::LevelFilter::Warn,
-        Ok("error") => log::LevelFilter::Error,
-        _ => log::LevelFilter::Info,
-    };
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(level);
-}
 
 fn main() {
-    init_logging();
     if let Err(e) = run() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -63,10 +40,27 @@ fn metric_name(task: Task) -> &'static str {
     }
 }
 
-fn coordinator(args: &Args) -> mpq::Result<Coordinator> {
-    let model = args.str("model", "qresnet20");
-    let artifacts = mpq::artifacts_dir();
-    let mut co = Coordinator::new(&artifacts, &model, args.u64("data-seed", 7)?)?;
+/// Resolve (backend kind, model): an explicit --model wins; otherwise the
+/// default model follows the backend (artifacts → qresnet20, sim →
+/// sim_skew).
+fn resolve_target(args: &Args) -> mpq::Result<(BackendKind, String)> {
+    let requested = args.opt_str("backend");
+    match args.opt_str("model") {
+        Some(model) => Ok((backend::resolve(requested, model)?, model.to_string())),
+        None => {
+            let kind = backend::resolve(requested, "qresnet20")?;
+            let model = match kind {
+                BackendKind::Pjrt => "qresnet20",
+                BackendKind::Sim => "sim_skew",
+            };
+            Ok((kind, model.to_string()))
+        }
+    }
+}
+
+fn coordinator(args: &Args) -> mpq::Result<Coordinator<Box<dyn Backend>>> {
+    let (kind, model) = resolve_target(args)?;
+    let mut co = Coordinator::open(kind, &model, args.u64("data-seed", 7)?)?;
     co.base_steps = args.usize("base-steps", co.base_steps)?;
     co.ft_steps = args.usize("ft-steps", co.ft_steps)?;
     co.eval_batches = args.usize("eval-batches", co.eval_batches)?;
@@ -110,18 +104,28 @@ subcommands:
   report      --model M                     frontier table/plot/significance
   eagl        --model M [--ckpt P]          offline EAGL metric (Fig. 2)
 
+backends: --backend sim|pjrt|auto (default auto).  sim = hermetic pure-Rust
+          reference executor (models sim_tiny, sim_skew; no artifacts).
+          pjrt = AOT artifact runtime (needs `make artifacts` + a build
+          with --features pjrt).  auto prefers pjrt when available.
 common flags: --data-seed, --base-steps, --ft-steps, --eval-batches,
               --alps-steps, --hawq-samples, --hawq-batches
-env: MPQ_ARTIFACTS (artifacts dir), MPQ_LOG (debug|info|warn|error)
+env: MPQ_ARTIFACTS (artifacts dir), MPQ_RESULTS (results root),
+     MPQ_LOG (debug|info|warn|error)
 ";
 
 fn cmd_info(args: &Args) -> mpq::Result<()> {
     let co = coordinator(args)?;
     let g = &co.graph;
     println!("model: {}", co.model);
-    println!("task: {:?} ({})", co.rt.manifest.task, metric_name(co.rt.manifest.task));
+    println!("backend: {}", co.rt.kind());
+    println!(
+        "task: {:?} ({})",
+        co.rt.manifest().task,
+        metric_name(co.rt.manifest().task)
+    );
     println!("layers: {} ({} selectable groups)", g.layers.len(), g.groups.len());
-    println!("params: {}", co.rt.manifest.params.len());
+    println!("params: {}", co.rt.manifest().params.len());
     println!(
         "selectable BMACs: 4-bit {:.3} G / 2-bit {:.3} G",
         g.selectable_bmacs(4) as f64 / 1e9,
@@ -133,7 +137,10 @@ fn cmd_info(args: &Args) -> mpq::Result<()> {
         mpq::quant::compression_ratio(g, &b4),
         mpq::quant::gbops(g, &b4)
     );
-    println!("\n{:<16} {:>6} {:>12} {:>10} {:>8} {:>12}", "layer", "kind", "macs", "params", "fixed", "group");
+    println!(
+        "\n{:<16} {:>6} {:>12} {:>10} {:>8} {:>12}",
+        "layer", "kind", "macs", "params", "fixed", "group"
+    );
     for l in &g.layers {
         println!(
             "{:<16} {:>6} {:>12} {:>10} {:>8} {:>12}",
@@ -150,12 +157,13 @@ fn cmd_info(args: &Args) -> mpq::Result<()> {
 
 fn cmd_train_base(args: &Args) -> mpq::Result<()> {
     let mut co = coordinator(args)?;
+    let task = co.rt.manifest().task;
     let ck4 = co.base_checkpoint()?;
     let e4 = co.eval_uniform(&ck4, 4)?;
-    println!("4-bit base: loss {:.4} {} {:.4}", e4.loss, metric_name(co.rt.manifest.task), e4.metric);
+    println!("4-bit base: loss {:.4} {} {:.4}", e4.loss, metric_name(task), e4.metric);
     let ck8 = co.reference_checkpoint()?;
     let e8 = co.eval_uniform(&ck8, 8)?;
-    println!("8-bit ref : loss {:.4} {} {:.4}", e8.loss, metric_name(co.rt.manifest.task), e8.metric);
+    println!("8-bit ref : loss {:.4} {} {:.4}", e8.loss, metric_name(task), e8.metric);
     Ok(())
 }
 
@@ -166,8 +174,12 @@ fn cmd_gains(args: &Args) -> mpq::Result<()> {
     println!("method: {} ({:.3}s to estimate)", kind.name(), est.wall_seconds);
     println!("{:<16} {:>10}", "layer", "gain");
     for l in &co.graph.layers {
-        println!("{:<16} {:>10.5}{}", l.name, est.per_layer[l.qindex],
-            if l.fixed_bits.is_some() { "  (fixed)" } else { "" });
+        println!(
+            "{:<16} {:>10.5}{}",
+            l.name,
+            est.per_layer[l.qindex],
+            if l.fixed_bits.is_some() { "  (fixed)" } else { "" }
+        );
     }
     Ok(())
 }
@@ -192,6 +204,7 @@ fn cmd_select(args: &Args) -> mpq::Result<()> {
 
 fn cmd_run(args: &Args) -> mpq::Result<()> {
     let mut co = coordinator(args)?;
+    let task = co.rt.manifest().task;
     let kind = MethodKind::parse(&args.str("method", "eagl"))?;
     let frac = args.f64("budget", 0.7)?;
     let seed = args.u64("seed", 0)?;
@@ -202,7 +215,7 @@ fn cmd_run(args: &Args) -> mpq::Result<()> {
         rec.method,
         frac * 100.0,
         seed,
-        metric_name(co.rt.manifest.task),
+        metric_name(task),
         rec.metric,
         rec.loss,
         rec.wall_s
@@ -212,6 +225,7 @@ fn cmd_run(args: &Args) -> mpq::Result<()> {
 
 fn cmd_sweep(args: &Args) -> mpq::Result<()> {
     let mut co = coordinator(args)?;
+    let task = co.rt.manifest().task;
     let kinds: Vec<MethodKind> = args
         .list("methods", &["eagl", "alps", "hawq_v3", "uniform", "first_to_last"])
         .iter()
@@ -227,16 +241,16 @@ fn cmd_sweep(args: &Args) -> mpq::Result<()> {
     let mut store = ResultStore::open(&store_path)?;
     let records = co.sweep(&kinds, &budgets, &seeds, &mut store)?;
     let cells = report::frontier(&records);
-    println!("{}", report::frontier_table(&cells, metric_name(co.rt.manifest.task)));
+    println!("{}", report::frontier_table(&cells, metric_name(task)));
     Ok(())
 }
 
 fn cmd_report(args: &Args) -> mpq::Result<()> {
     let co = coordinator(args)?;
     let store = ResultStore::open(&co.results_dir.join("sweep.jsonl"))?;
-    anyhow::ensure!(!store.records().is_empty(), "no sweep results yet — run `mpq sweep`");
+    mpq::ensure!(!store.records().is_empty(), "no sweep results yet — run `mpq sweep`");
     let cells = report::frontier(store.records());
-    let name = metric_name(co.rt.manifest.task);
+    let name = metric_name(co.rt.manifest().task);
     println!("{}", report::frontier_table(&cells, name));
     println!("{}", report::frontier_plot(&cells, 64, 18));
     for pair in [("eagl", "hawq_v3"), ("alps", "hawq_v3"), ("eagl", "first_to_last")] {
@@ -262,7 +276,11 @@ fn cmd_eagl(args: &Args) -> mpq::Result<()> {
     let t0 = std::time::Instant::now();
     let ents = mpq::eagl::checkpoint_entropies(&co.graph, &ck, co.mcfg.b_hi)?;
     let dt = t0.elapsed();
-    println!("EAGL on {} layers in {:.3} ms (paper Table 3: CPU seconds)", co.graph.layers.len(), dt.as_secs_f64() * 1e3);
+    println!(
+        "EAGL on {} layers in {:.3} ms (paper Table 3: CPU seconds)",
+        co.graph.layers.len(),
+        dt.as_secs_f64() * 1e3
+    );
     println!("{:<16} {:>10} {:>8}", "layer", "H(bits)", "alloc");
     for l in &co.graph.layers {
         let b = l.fixed_bits.unwrap_or(co.mcfg.b_hi);

@@ -16,7 +16,7 @@ use crate::eagl;
 use crate::graph::Graph;
 use crate::knapsack::{self, Selection};
 use crate::quant::{self, BitsConfig};
-use crate::runtime::{Runtime, Task, TrainState};
+use crate::backend::{Backend, Task, TrainState};
 use crate::train::{finetune, TrainConfig};
 
 /// The selection methods under evaluation.
@@ -60,7 +60,7 @@ impl MethodKind {
             "first_to_last" | "f2l" => MethodKind::FirstToLast,
             "last_to_first" | "l2f" => MethodKind::LastToFirst,
             "oracle" => MethodKind::Oracle,
-            other => anyhow::bail!("unknown method '{other}'"),
+            other => crate::bail!("unknown method '{other}'"),
         })
     }
 
@@ -114,15 +114,15 @@ pub struct GainEstimate {
 /// `ckpt4` is the trained `b_hi`-bit checkpoint (Algorithm 1/2 both start
 /// there); `data` feeds ALPS/HAWQ (EAGL never touches it — that asymmetry
 /// *is* Table 3).
-pub fn estimate_gains(
+pub fn estimate_gains<B: Backend>(
     kind: MethodKind,
-    rt: &mut Runtime,
+    rt: &mut B,
     graph: &Graph,
     ckpt4: &Checkpoint,
     data: &Dataset,
     cfg: &MethodConfig,
 ) -> crate::Result<GainEstimate> {
-    anyhow::ensure!(kind.is_gain_based(), "{} has no gains", kind.name());
+    crate::ensure!(kind.is_gain_based(), "{} has no gains", kind.name());
     let t0 = Instant::now();
     let per_layer = match kind {
         MethodKind::Eagl => eagl::checkpoint_entropies(graph, ckpt4, cfg.b_hi)?,
@@ -132,10 +132,10 @@ pub fn estimate_gains(
         MethodKind::Oracle => cfg
             .oracle_gains
             .clone()
-            .ok_or_else(|| anyhow::anyhow!("oracle gains not provided"))?,
+            .ok_or_else(|| crate::err!("oracle gains not provided"))?,
         _ => unreachable!(),
     };
-    anyhow::ensure!(
+    crate::ensure!(
         per_layer.len() == graph.layers.len(),
         "gain vector length {} != layers {}",
         per_layer.len(),
@@ -151,14 +151,14 @@ pub fn estimate_gains(
 /// ALPS (Algorithm 1): drop each selectable group to `b_lo`, fine-tune
 /// briefly, and use the *training* metric as the gain signal —
 /// `G = max(A) − A_l` for accuracy tasks, `G = Loss_l` for segmentation.
-fn alps_gains(
-    rt: &mut Runtime,
+fn alps_gains<B: Backend>(
+    rt: &mut B,
     graph: &Graph,
     ckpt4: &Checkpoint,
     data: &Dataset,
     cfg: &MethodConfig,
 ) -> crate::Result<Vec<f64>> {
-    let use_loss = rt.manifest.task == Task::Seg;
+    let use_loss = rt.manifest().task == Task::Seg;
     let mut group_signal = Vec::with_capacity(graph.groups.len());
     for g in 0..graph.groups.len() {
         // Mixed config: everything at b_hi except group g at b_lo.
@@ -175,7 +175,7 @@ fn alps_gains(
         };
         let log = finetune(rt, &mut state, data, &bits.to_f32(), &tcfg)?;
         group_signal.push(if use_loss { log.mean_loss } else { log.mean_metric });
-        log::info!(
+        crate::info!(
             "alps group {}/{} ({}) signal {:.4}",
             g + 1,
             graph.groups.len(),
@@ -194,15 +194,15 @@ fn alps_gains(
 }
 
 /// HAWQ-v3 (Appendix C): `mean-Hessian-diag × ||Q4(W) − Q2(W)||²` per layer.
-fn hawq_gains(
-    rt: &mut Runtime,
+fn hawq_gains<B: Backend>(
+    rt: &mut B,
     graph: &Graph,
     ckpt4: &Checkpoint,
     data: &Dataset,
     cfg: &MethodConfig,
 ) -> crate::Result<Vec<f64>> {
     let bits = BitsConfig::uniform(graph, cfg.b_hi).to_f32();
-    let batch = rt.manifest.train_batch;
+    let batch = rt.manifest().train_batch;
     let n_layers = graph.layers.len();
     let mut trace_sum = vec![0.0f64; n_layers];
     let mut n_draws = 0usize;
@@ -211,7 +211,7 @@ fn hawq_gains(
         for s in 0..cfg.hawq_samples {
             let seed = (bi * cfg.hawq_samples + s) as i32;
             let vhv = rt.vhv_step(ckpt4, &x, &y, &bits, seed)?;
-            anyhow::ensure!(vhv.len() == n_layers, "vhv arity");
+            crate::ensure!(vhv.len() == n_layers, "vhv arity");
             for (acc, &v) in trace_sum.iter_mut().zip(&vhv) {
                 *acc += v as f64;
             }
@@ -223,7 +223,7 @@ fn hawq_gains(
         let base = layer.name.replace('.', "/");
         let w = ckpt4
             .get(&format!("{base}/w"))
-            .ok_or_else(|| anyhow::anyhow!("missing {base}/w"))?;
+            .ok_or_else(|| crate::err!("missing {base}/w"))?;
         let n = w.len() as f64;
         // Average Hessian diagonal = E[v'Hv] / n.
         let avg_diag = trace_sum[layer.qindex] / n_draws as f64 / n;
@@ -271,7 +271,7 @@ pub fn select(
         }
         _ => {
             let gains = gains_per_layer
-                .ok_or_else(|| anyhow::anyhow!("{} requires gains", kind.name()))?;
+                .ok_or_else(|| crate::err!("{} requires gains", kind.name()))?;
             let group_gains = graph.aggregate_by_group(gains);
             knapsack::select_layers(&group_gains, &weights, capacity)
         }
@@ -295,7 +295,7 @@ pub fn select_multi(
     choices: &[u32],
     budget_bmacs: u64,
 ) -> crate::Result<BitsConfig> {
-    anyhow::ensure!(choices.len() >= 2, "need at least two precision choices");
+    crate::ensure!(choices.len() >= 2, "need at least two precision choices");
     let b_min = *choices.first().unwrap();
     let b_max = *choices.last().unwrap();
     let group_gains = graph.aggregate_by_group(gains_per_layer);
@@ -315,7 +315,7 @@ pub fn select_multi(
         })
         .collect();
     let sel = knapsack::mckp::solve_mckp(&classes, budget_bmacs)
-        .ok_or_else(|| anyhow::anyhow!("budget below the all-{b_min}-bit cost"))?;
+        .ok_or_else(|| crate::err!("budget below the all-{b_min}-bit cost"))?;
     let mut bits = BitsConfig::uniform(graph, b_max);
     for (g, group) in graph.groups.iter().enumerate() {
         let b = choices[sel.choice_per_class[g]];

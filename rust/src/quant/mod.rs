@@ -146,7 +146,7 @@ pub fn rescale_steps_for_drop(
         let key = format!("{}/{}", layer_name.replace('.', "/"), suffix);
         let t = ck
             .get_mut(&key)
-            .ok_or_else(|| anyhow::anyhow!("missing step size {key}"))?;
+            .ok_or_else(|| crate::err!("missing step size {key}"))?;
         for v in t.f32s_mut() {
             *v *= factor;
         }

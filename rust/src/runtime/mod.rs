@@ -1,225 +1,19 @@
-//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them
-//! from the coordinator hot path.
+//! Backward-compatibility shim: execution moved behind the pluggable
+//! [`crate::backend`] abstraction.
 //!
-//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! Interchange is HLO *text*: jax ≥ 0.5 emits protos with 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids.
-//!
-//! Executables are compiled once per (model, entry) and cached.  The
-//! lowered graphs return a single tuple (`return_tuple=True`), which we
-//! decompose on the host; fine-tune state (params + momenta) lives in
-//! [`TrainState`] as host tensors between steps.
+//! The old `runtime::Runtime` (PJRT + AOT artifacts) is now
+//! `backend::PjrtBackend` (compiled with `--features pjrt`); the hermetic
+//! default is `backend::SimBackend`.  The manifest types and
+//! [`TrainState`] live in [`crate::backend`] and are re-exported here so
+//! existing `crate::runtime::{Task, Manifest, TrainState}` paths keep
+//! working.
 
-pub mod manifest;
+pub use crate::backend::manifest;
+pub use crate::backend::{Backend, EntrySpec, Manifest, Task, TensorSpec, TrainState};
 
-use std::collections::HashMap;
-use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
+pub use crate::backend::PjrtBackend;
 
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
-
-use crate::ckpt::Checkpoint;
-use crate::tensor::{Data, Tensor};
-pub use manifest::{EntrySpec, Manifest, Task, TensorSpec};
-
-/// A loaded model: PJRT client + manifest + lazily compiled entry points.
-pub struct Runtime {
-    client: PjRtClient,
-    pub manifest: Manifest,
-    artifacts: PathBuf,
-    exes: HashMap<String, PjRtLoadedExecutable>,
-    /// Cumulative executions per entry (perf accounting).
-    pub exec_counts: HashMap<String, u64>,
-}
-
-/// Mutable fine-tune state: parameters and SGD momenta, in manifest order.
-#[derive(Clone)]
-pub struct TrainState {
-    pub params: Checkpoint,
-    pub mom: Checkpoint,
-}
-
-impl TrainState {
-    pub fn new(params: Checkpoint) -> TrainState {
-        let mom = params.zeros_like();
-        TrainState { params, mom }
-    }
-}
-
-impl Runtime {
-    /// Load a model's manifest and create a CPU PJRT client.  Entry points
-    /// compile lazily on first use (compilation is seconds per entry).
-    pub fn load(artifacts: &std::path::Path, model: &str) -> crate::Result<Runtime> {
-        let manifest = Manifest::load(artifacts, model)?;
-        let client = PjRtClient::cpu().map_err(to_anyhow)?;
-        Ok(Runtime {
-            client,
-            manifest,
-            artifacts: artifacts.to_path_buf(),
-            exes: HashMap::new(),
-            exec_counts: HashMap::new(),
-        })
-    }
-
-    /// Load the model's AOT-emitted initial checkpoint (seed 0).
-    pub fn init_checkpoint(&self) -> crate::Result<Checkpoint> {
-        Checkpoint::load(&self.artifacts.join(format!("{}_init.ckpt", self.manifest.model)))
-    }
-
-    fn exe(&mut self, entry: &str) -> crate::Result<&PjRtLoadedExecutable> {
-        if !self.exes.contains_key(entry) {
-            let spec = self.manifest.entry(entry)?.clone();
-            let path = self.artifacts.join(&spec.file);
-            let proto = HloModuleProto::from_text_file(&path).map_err(to_anyhow)?;
-            let comp = XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp).map_err(to_anyhow)?;
-            self.exes.insert(entry.to_string(), exe);
-        }
-        Ok(&self.exes[entry])
-    }
-
-    /// Force-compile an entry (for startup-cost measurement / warmup).
-    pub fn compile_entry(&mut self, entry: &str) -> crate::Result<()> {
-        self.exe(entry).map(|_| ())
-    }
-
-    // -- marshaling ----------------------------------------------------------
-
-    fn literal_of(&self, t: &Tensor) -> crate::Result<Literal> {
-        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-        let lit = match &t.data {
-            Data::F32(v) => Literal::vec1(v.as_slice()),
-            Data::I32(v) => Literal::vec1(v.as_slice()),
-        };
-        lit.reshape(&dims).map_err(to_anyhow)
-    }
-
-    fn tensor_of(&self, lit: &Literal) -> crate::Result<Tensor> {
-        let shape = lit.array_shape().map_err(to_anyhow)?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        match shape.ty() {
-            xla::ElementType::F32 => Ok(Tensor::from_f32(
-                &dims,
-                lit.to_vec::<f32>().map_err(to_anyhow)?,
-            )),
-            xla::ElementType::S32 => Ok(Tensor::from_i32(
-                &dims,
-                lit.to_vec::<i32>().map_err(to_anyhow)?,
-            )),
-            other => anyhow::bail!("unsupported output element type {other:?}"),
-        }
-    }
-
-    /// Execute an entry point with host tensors; returns decomposed outputs.
-    pub fn execute(&mut self, entry: &str, args: &[&Tensor]) -> crate::Result<Vec<Tensor>> {
-        let mut literals = Vec::with_capacity(args.len());
-        for t in args {
-            literals.push(self.literal_of(t)?);
-        }
-        *self.exec_counts.entry(entry.to_string()).or_insert(0) += 1;
-        let exe = self.exe(entry)?;
-        let result = exe.execute::<Literal>(&literals).map_err(to_anyhow)?;
-        let out = result[0][0].to_literal_sync().map_err(to_anyhow)?;
-        // return_tuple=True → single tuple output; decompose.
-        let parts = out.to_tuple().map_err(to_anyhow)?;
-        let mut tensors = Vec::with_capacity(parts.len());
-        for lit in &parts {
-            tensors.push(self.tensor_of(lit)?);
-        }
-        Ok(tensors)
-    }
-
-    // -- typed entry points ----------------------------------------------------
-
-    /// One fused SGD fine-tune step.  Updates `state` in place and returns
-    /// (loss, train metric).
-    pub fn train_step(
-        &mut self,
-        state: &mut TrainState,
-        x: &Tensor,
-        y: &Tensor,
-        lr: f32,
-        wd: f32,
-        bits: &[f32],
-    ) -> crate::Result<(f32, f32)> {
-        let n = self.manifest.n_params();
-        let lr_t = Tensor::scalar(lr);
-        let wd_t = Tensor::scalar(wd);
-        let bits_t = Tensor::from_f32(&[bits.len()], bits.to_vec());
-        let mut args: Vec<&Tensor> = Vec::with_capacity(2 * n + 5);
-        args.extend(state.params.tensors.iter());
-        args.extend(state.mom.tensors.iter());
-        args.extend([x, y, &lr_t, &wd_t, &bits_t]);
-        let mut out = self.execute("train_step", &args)?;
-        anyhow::ensure!(out.len() == 2 * n + 2, "train_step output arity");
-        let metric = out.pop().unwrap().item();
-        let loss = out.pop().unwrap().item();
-        let mom_new = out.split_off(n);
-        state.params = Checkpoint::new(state.params.names.clone(), out);
-        state.mom = Checkpoint::new(state.mom.names.clone(), mom_new);
-        Ok((loss, metric))
-    }
-
-    /// Evaluation step: returns (mean loss over batch, task-specific
-    /// accumulator tensor — see [`Task`]).
-    pub fn eval_step(
-        &mut self,
-        params: &Checkpoint,
-        x: &Tensor,
-        y: &Tensor,
-        bits: &[f32],
-    ) -> crate::Result<(f32, Tensor)> {
-        let bits_t = Tensor::from_f32(&[bits.len()], bits.to_vec());
-        let mut args: Vec<&Tensor> = Vec::with_capacity(params.tensors.len() + 3);
-        args.extend(params.tensors.iter());
-        args.extend([x, y, &bits_t]);
-        let mut out = self.execute("eval_step", &args)?;
-        anyhow::ensure!(out.len() == 2, "eval_step output arity");
-        let evalout = out.pop().unwrap();
-        let loss = out.pop().unwrap().item();
-        Ok((loss, evalout))
-    }
-
-    /// One Hutchinson sample: per-layer v·Hv vector (HAWQ-v3 trace).
-    pub fn vhv_step(
-        &mut self,
-        params: &Checkpoint,
-        x: &Tensor,
-        y: &Tensor,
-        bits: &[f32],
-        seed: i32,
-    ) -> crate::Result<Vec<f32>> {
-        let bits_t = Tensor::from_f32(&[bits.len()], bits.to_vec());
-        let seed_t = Tensor::from_i32(&[1], vec![seed]);
-        let mut args: Vec<&Tensor> = Vec::with_capacity(params.tensors.len() + 4);
-        args.extend(params.tensors.iter());
-        args.extend([x, y, &bits_t, &seed_t]);
-        let out = self.execute("vhv_step", &args)?;
-        anyhow::ensure!(out.len() == 1, "vhv_step output arity");
-        Ok(out[0].f32s().to_vec())
-    }
-
-    /// Per-layer EAGL entropies computed by the L1 Pallas histogram kernel
-    /// (cross-check path for the native rust implementation).
-    ///
-    /// The lowering prunes parameters the entropy graph never reads, so
-    /// only each layer's `w` and `sw` survive in the executable signature
-    /// (in the original flatten order) — marshal exactly those.
-    pub fn eagl_step(&mut self, params: &Checkpoint) -> crate::Result<Vec<f32>> {
-        let args: Vec<&Tensor> = params
-            .names
-            .iter()
-            .zip(&params.tensors)
-            .filter(|(n, _)| n.ends_with("/w") || n.ends_with("/sw"))
-            .map(|(_, t)| t)
-            .collect();
-        let out = self.execute("eagl_step", &args)?;
-        anyhow::ensure!(out.len() == 1, "eagl_step output arity");
-        Ok(out[0].f32s().to_vec())
-    }
-}
-
-fn to_anyhow(e: xla::Error) -> anyhow::Error {
-    anyhow::anyhow!("xla: {e}")
-}
+/// Historical alias: `runtime::Runtime` was the PJRT artifact runtime.
+#[cfg(feature = "pjrt")]
+pub type Runtime = PjrtBackend;

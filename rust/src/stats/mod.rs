@@ -182,7 +182,7 @@ pub struct Ols {
 impl Ols {
     pub fn fit(xs: &[Vec<f64>], ys: &[f64]) -> crate::Result<Ols> {
         let n = xs.len();
-        anyhow::ensure!(n == ys.len() && n > 0, "bad OLS inputs");
+        crate::ensure!(n == ys.len() && n > 0, "bad OLS inputs");
         let d = xs[0].len() + 1; // + intercept
         // Normal equations A = X'X (d×d), b = X'y.
         let mut a = vec![0.0f64; d * d];
@@ -228,7 +228,7 @@ fn solve_linear(a: &mut [f64], b: &mut [f64], d: usize) -> crate::Result<Vec<f64
                 piv = r;
             }
         }
-        anyhow::ensure!(a[piv * d + col].abs() > 1e-12, "singular system");
+        crate::ensure!(a[piv * d + col].abs() > 1e-12, "singular system");
         if piv != col {
             for j in 0..d {
                 a.swap(col * d + j, piv * d + j);

@@ -17,7 +17,7 @@ impl DType {
         match name {
             "float32" => Ok(DType::F32),
             "int32" => Ok(DType::I32),
-            other => anyhow::bail!("unsupported dtype '{other}'"),
+            other => crate::bail!("unsupported dtype '{other}'"),
         }
     }
 }

@@ -1,14 +1,15 @@
 //! Fine-tune driver: the LSQ quantization-aware training loop (paper
-//! §3.4.3) executed entirely through AOT artifacts.
+//! §3.4.3), generic over the execution [`Backend`].
 //!
 //! The loop is intentionally thin — every FLOP of fwd/bwd/update lives in
-//! the fused `train_step` HLO; the host only generates batches (deterministic
-//! [`Dataset`] streams), schedules the cosine learning rate, and accumulates
-//! metrics.
+//! the backend's fused `train_step` (an AOT HLO executable on pjrt, the
+//! reference implementation on sim); the host only generates batches
+//! (deterministic [`Dataset`] streams), schedules the cosine learning
+//! rate, and accumulates metrics.
 
+use crate::backend::{Backend, Task, TrainState};
 use crate::ckpt::Checkpoint;
 use crate::data::{span_f1, Dataset, Split};
-use crate::runtime::{Runtime, Task, TrainState};
 
 /// Fine-tuning hyperparameters.  Defaults mirror the paper's recipe scaled
 /// to the synthetic testbed (cosine decay, SGD momentum 0.9, wd 1e-4).
@@ -57,14 +58,14 @@ pub fn cosine_lr(step: usize, total: usize, lr0: f32, floor_frac: f32) -> f32 {
 }
 
 /// Run `cfg.steps` fused fine-tune steps, updating `state` in place.
-pub fn finetune(
-    rt: &mut Runtime,
+pub fn finetune<B: Backend>(
+    rt: &mut B,
     state: &mut TrainState,
     data: &Dataset,
     bits: &[f32],
     cfg: &TrainConfig,
 ) -> crate::Result<TrainLog> {
-    let batch = rt.manifest.train_batch;
+    let batch = rt.manifest().train_batch;
     let mut losses = Vec::with_capacity(cfg.steps);
     let mut metrics = Vec::with_capacity(cfg.steps);
     // Distinct seeds shift the batch stream so the paper's N-seed protocol
@@ -74,7 +75,7 @@ pub fn finetune(
         let (x, y) = data.batch(Split::Train, stream_base + step as u64, batch);
         let lr = cosine_lr(step, cfg.steps, cfg.lr0, cfg.lr_floor);
         let (loss, metric) = rt.train_step(state, &x, &y, lr, cfg.wd, bits)?;
-        anyhow::ensure!(loss.is_finite(), "diverged at step {step}: loss {loss}");
+        crate::ensure!(loss.is_finite(), "diverged at step {step}: loss {loss}");
         losses.push(loss);
         metrics.push(metric);
     }
@@ -97,15 +98,15 @@ pub struct EvalResult {
 }
 
 /// Evaluate over `n_batches` deterministic eval batches.
-pub fn evaluate(
-    rt: &mut Runtime,
+pub fn evaluate<B: Backend>(
+    rt: &mut B,
     params: &Checkpoint,
     data: &Dataset,
     bits: &[f32],
     n_batches: usize,
 ) -> crate::Result<EvalResult> {
-    let batch = rt.manifest.eval_batch;
-    let task = rt.manifest.task;
+    let batch = rt.manifest().eval_batch;
+    let task = rt.manifest().task;
     let mut loss_sum = 0.0f64;
     // Accumulators per task.
     let mut correct = 0.0f64;
@@ -143,7 +144,7 @@ pub fn evaluate(
     let metric = match task {
         Task::Cls => correct / seen as f64,
         Task::Seg => {
-            let c = rt.manifest.evalout_shape[1];
+            let c = rt.manifest().evalout_shape[1];
             let ious: Vec<f64> = (0..c)
                 .map(|k| if union[k] > 0.0 { inter[k] / union[k] } else { 1.0 })
                 .collect();
@@ -160,6 +161,9 @@ pub fn evaluate(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::SimBackend;
+    use crate::graph::Graph;
+    use crate::quant::BitsConfig;
 
     #[test]
     fn cosine_schedule_endpoints() {
@@ -179,5 +183,22 @@ mod tests {
     #[test]
     fn cosine_single_step() {
         assert_eq!(cosine_lr(0, 1, 0.05, 0.1), 0.05);
+    }
+
+    #[test]
+    fn finetune_and_evaluate_on_sim() {
+        let mut be = SimBackend::new("sim_tiny").unwrap();
+        let graph = Graph::from_manifest(&be.manifest().raw).unwrap();
+        let data = Dataset::for_task(be.manifest().task, 3);
+        let bits = BitsConfig::uniform(&graph, 4).to_f32();
+        let mut state = TrainState::new(be.init_checkpoint().unwrap());
+        let cfg = TrainConfig { steps: 5, lr0: 0.02, ..TrainConfig::default() };
+        let log = finetune(&mut be, &mut state, &data, &bits, &cfg).unwrap();
+        assert_eq!(log.losses.len(), 5);
+        assert!(log.losses.iter().all(|l| l.is_finite()));
+        assert!(log.metrics.iter().all(|m| (0.0..=1.0).contains(m)));
+        let eval = evaluate(&mut be, &state.params, &data, &bits, 2).unwrap();
+        assert!(eval.loss.is_finite());
+        assert!((0.0..=1.0).contains(&eval.metric));
     }
 }

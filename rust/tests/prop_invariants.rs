@@ -73,6 +73,108 @@ fn gain_quantization_is_monotone() {
     );
 }
 
+/// Exact 0-1 knapsack by brute force over subsets (n ≤ 16).
+fn brute_force_value(values: &[u64], weights: &[u64], cap: u64) -> u64 {
+    let n = values.len();
+    let mut best = 0u64;
+    for mask in 0..(1u32 << n) {
+        let (mut v, mut w) = (0u64, 0u64);
+        for i in 0..n {
+            if mask >> i & 1 == 1 {
+                v += values[i];
+                w += weights[i];
+            }
+        }
+        if w <= cap {
+            best = best.max(v);
+        }
+    }
+    best
+}
+
+#[test]
+fn knapsack_above_max_cap_matches_unscaled_exact_dp_within_slack() {
+    // When capacity exceeds knapsack::MAX_CAP, weights are rescaled by
+    // scale = capacity / MAX_CAP.  The documented ε bound:
+    //   exact(cap − n·scale) ≤ solve_01(cap).total_value ≤ exact(cap).
+    forall(
+        &Config { cases: 40, ..Config::default() },
+        |rng| {
+            let n = 1 + rng.below(10) as usize;
+            let values: Vec<u64> = (0..n).map(|_| rng.below(1000) as u64 + 1).collect();
+            // Large weights so the big capacity is actually binding.
+            let weights: Vec<u64> =
+                (0..n).map(|_| rng.below(1 << 20) as u64 + (1 << 18)).collect();
+            // Capacity 1–4× above the DP rescaling threshold.
+            let cap = knapsack::MAX_CAP as u64 * (1 + rng.below(4) as u64)
+                + rng.below(1 << 16) as u64;
+            (values, weights, cap)
+        },
+        |(values, weights, cap)| {
+            let n = values.len() as u64;
+            let scale = (*cap as usize / knapsack::MAX_CAP).max(1) as u64;
+            let sel = knapsack::solve_01(values, weights, *cap);
+            // Feasible at full resolution.
+            let w_sel: u64 = (0..values.len())
+                .filter(|&i| sel.selected[i])
+                .map(|i| weights[i])
+                .sum();
+            if w_sel > *cap {
+                return Err(format!("selected weight {w_sel} > cap {cap}"));
+            }
+            let upper = brute_force_value(values, weights, *cap);
+            let lower = brute_force_value(values, weights, cap.saturating_sub(n * scale));
+            if sel.total_value > upper {
+                return Err(format!("DP {} beat the exact optimum {upper}", sel.total_value));
+            }
+            if sel.total_value < lower {
+                return Err(format!(
+                    "DP {} below the ε bound {lower} (upper {upper}, scale {scale})",
+                    sel.total_value
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn gain_quantization_preserves_ties_and_ordering() {
+    forall(
+        &Config { cases: 200, ..Config::default() },
+        |rng| {
+            // Draw from a small pool of distinct values so exact ties are
+            // frequent.
+            let pool: Vec<f64> =
+                (0..1 + rng.below(5)).map(|_| rng.normal() as f64 * 5.0).collect();
+            let n = 2 + rng.below(20) as usize;
+            (0..n)
+                .map(|_| pool[rng.below(pool.len() as u32) as usize])
+                .collect::<Vec<f64>>()
+        },
+        |gains| {
+            let q = knapsack::quantize_gains(gains);
+            if q.len() != gains.len() {
+                return Err("length changed".into());
+            }
+            for i in 0..gains.len() {
+                for j in 0..gains.len() {
+                    if gains[i] == gains[j] && q[i] != q[j] {
+                        return Err(format!("tie broken at ({i},{j}): {} vs {}", q[i], q[j]));
+                    }
+                    if gains[i] < gains[j] && q[i] > q[j] {
+                        return Err(format!("order violated at ({i},{j})"));
+                    }
+                }
+            }
+            if q.iter().any(|&v| v == 0 || v > 10_000) {
+                return Err("quantized gain out of 1..=10000".into());
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn entropy_invariant_under_code_permutation() {
     forall(

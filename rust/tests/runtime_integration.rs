@@ -1,118 +1,109 @@
-//! Integration: Rust runtime ↔ AOT artifacts (the L3↔L2/L1 seam).
-//!
-//! Requires `make artifacts` to have run (skipped otherwise).  qsegnet is
-//! used as the vehicle — it is the smallest model — plus qbert for the
-//! Pallas-kernel-on-the-hot-path case.
+//! Integration: the [`Backend`] execution seam, exercised hermetically on
+//! [`SimBackend`] — every test here runs with no `artifacts/` directory.
+//! The artifact-gated PJRT equivalents live in the `pjrt_artifacts` module
+//! at the bottom, compiled only with `--features pjrt` and skipped at
+//! runtime when artifacts are absent.
 
+use mpq::backend::{Backend, SimBackend, TrainState};
 use mpq::data::{Dataset, Split};
 use mpq::eagl;
 use mpq::graph::Graph;
 use mpq::quant::BitsConfig;
-use mpq::runtime::{Runtime, TrainState};
 
-fn artifacts() -> Option<std::path::PathBuf> {
-    let dir = mpq::artifacts_dir();
-    if dir.join("qsegnet.manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("skipping: artifacts not built");
-        None
-    }
+fn sim(model: &str) -> (SimBackend, Graph) {
+    let be = SimBackend::new(model).unwrap();
+    let graph = Graph::from_manifest(&be.manifest().raw).unwrap();
+    (be, graph)
 }
 
 #[test]
 fn manifest_and_graph_agree() {
-    let Some(dir) = artifacts() else { return };
-    for model in ["qsegnet", "qresnet20", "qbert"] {
-        let rt = Runtime::load(&dir, model).unwrap();
-        let graph = Graph::load(&dir, model).unwrap();
-        assert_eq!(rt.manifest.n_bits, graph.n_bits(), "{model}");
+    for model in ["sim_tiny", "sim_skew"] {
+        let (be, graph) = sim(model);
+        assert_eq!(be.manifest().n_bits, graph.n_bits(), "{model}");
         assert!(!graph.groups.is_empty(), "{model}");
         // Init checkpoint matches manifest param specs.
-        let ck = rt.init_checkpoint().unwrap();
-        assert_eq!(ck.names.len(), rt.manifest.params.len());
-        for (name, spec) in ck.names.iter().zip(&rt.manifest.params) {
+        let ck = be.init_checkpoint().unwrap();
+        assert_eq!(ck.names.len(), be.manifest().params.len());
+        for (name, spec) in ck.names.iter().zip(&be.manifest().params) {
             assert_eq!(name, &spec.name);
+            assert_eq!(ck.get(name).unwrap().shape, spec.shape, "{model} {name}");
         }
     }
 }
 
 #[test]
 fn eval_and_train_step_execute() {
-    let Some(dir) = artifacts() else { return };
-    let mut rt = Runtime::load(&dir, "qsegnet").unwrap();
-    let graph = Graph::load(&dir, "qsegnet").unwrap();
-    let data = Dataset::for_task(rt.manifest.task, 1);
+    let (mut be, graph) = sim("sim_tiny");
+    let data = Dataset::for_task(be.manifest().task, 1);
     let bits = BitsConfig::uniform(&graph, 4).to_f32();
 
-    let ck = rt.init_checkpoint().unwrap();
-    let (xe, ye) = data.batch(Split::Eval, 0, rt.manifest.eval_batch);
-    let (loss0, out) = rt.eval_step(&ck, &xe, &ye, &bits).unwrap();
+    let ck = be.init_checkpoint().unwrap();
+    let (xe, ye) = data.batch(Split::Eval, 0, be.manifest().eval_batch);
+    let (loss0, out) = be.eval_step(&ck, &xe, &ye, &bits).unwrap();
     assert!(loss0.is_finite() && loss0 > 0.0);
-    assert_eq!(out.shape, rt.manifest.evalout_shape);
+    assert_eq!(out.shape, be.manifest().evalout_shape);
 
     // A few train steps must change the params and keep the loss finite.
     let mut state = TrainState::new(ck.clone());
-    let (xt, yt) = data.batch(Split::Train, 0, rt.manifest.train_batch);
-    let mut losses = Vec::new();
+    let (xt, yt) = data.batch(Split::Train, 0, be.manifest().train_batch);
     for _ in 0..3 {
-        let (l, m) = rt.train_step(&mut state, &xt, &yt, 0.05, 1e-4, &bits).unwrap();
+        let (l, m) = be.train_step(&mut state, &xt, &yt, 0.05, 1e-4, &bits).unwrap();
         assert!(l.is_finite());
         assert!((0.0..=1.0).contains(&m));
-        losses.push(l);
     }
-    let w0 = ck.get("enc1/w").unwrap();
-    let w1 = state.params.get("enc1/w").unwrap();
+    let w0 = ck.get("h1/w").unwrap();
+    let w1 = state.params.get("h1/w").unwrap();
     assert_ne!(w0.f32s(), w1.f32s(), "params must move");
     // Momentum should be non-zero after steps.
-    assert!(state.mom.get("enc1/w").unwrap().norm2() > 0.0);
+    assert!(state.mom.get("h1/w").unwrap().norm2() > 0.0);
+    // Step sizes are inert under training (LSQ steps adapt only through
+    // the explicit rescale transform).
+    assert_eq!(
+        ck.get("h1/sw").unwrap().item(),
+        state.params.get("h1/sw").unwrap().item()
+    );
 }
 
 #[test]
 fn same_seed_same_result() {
-    let Some(dir) = artifacts() else { return };
-    let mut rt = Runtime::load(&dir, "qsegnet").unwrap();
-    let graph = Graph::load(&dir, "qsegnet").unwrap();
-    let data = Dataset::for_task(rt.manifest.task, 1);
+    let (mut be, graph) = sim("sim_tiny");
+    let data = Dataset::for_task(be.manifest().task, 1);
     let bits = BitsConfig::uniform(&graph, 4).to_f32();
-    let ck = rt.init_checkpoint().unwrap();
-    let (x, y) = data.batch(Split::Train, 0, rt.manifest.train_batch);
+    let ck = be.init_checkpoint().unwrap();
+    let (x, y) = data.batch(Split::Train, 0, be.manifest().train_batch);
     let mut a = TrainState::new(ck.clone());
     let mut b = TrainState::new(ck);
-    let ra = rt.train_step(&mut a, &x, &y, 0.01, 0.0, &bits).unwrap();
-    let rb = rt.train_step(&mut b, &x, &y, 0.01, 0.0, &bits).unwrap();
+    let ra = be.train_step(&mut a, &x, &y, 0.01, 0.0, &bits).unwrap();
+    let rb = be.train_step(&mut b, &x, &y, 0.01, 0.0, &bits).unwrap();
     assert_eq!(ra, rb);
     assert_eq!(
-        a.params.get("enc1/w").unwrap().f32s(),
-        b.params.get("enc1/w").unwrap().f32s()
+        a.params.get("h1/w").unwrap().f32s(),
+        b.params.get("h1/w").unwrap().f32s()
     );
 }
 
 #[test]
 fn bits_vector_affects_execution() {
-    let Some(dir) = artifacts() else { return };
-    let mut rt = Runtime::load(&dir, "qsegnet").unwrap();
-    let graph = Graph::load(&dir, "qsegnet").unwrap();
-    let data = Dataset::for_task(rt.manifest.task, 1);
-    let ck = rt.init_checkpoint().unwrap();
-    let (x, y) = data.batch(Split::Eval, 0, rt.manifest.eval_batch);
+    let (mut be, graph) = sim("sim_tiny");
+    let data = Dataset::for_task(be.manifest().task, 1);
+    let ck = be.init_checkpoint().unwrap();
+    let (x, y) = data.batch(Split::Eval, 0, be.manifest().eval_batch);
     let b4 = BitsConfig::uniform(&graph, 4).to_f32();
     let b2 = BitsConfig::uniform(&graph, 2).to_f32();
-    let (l4, _) = rt.eval_step(&ck, &x, &y, &b4).unwrap();
-    let (l2, _) = rt.eval_step(&ck, &x, &y, &b2).unwrap();
+    let (l4, _) = be.eval_step(&ck, &x, &y, &b4).unwrap();
+    let (l2, _) = be.eval_step(&ck, &x, &y, &b2).unwrap();
     assert_ne!(l4, l2, "2-bit and 4-bit must differ");
 }
 
 #[test]
-fn native_eagl_matches_pallas_kernel() {
-    // The cross-check the paper's Appendix E snippet implies: the Rust
-    // host entropy must equal the L1 Pallas histogram kernel's output.
-    let Some(dir) = artifacts() else { return };
-    for model in ["qsegnet", "qresnet20"] {
-        let mut rt = Runtime::load(&dir, model).unwrap();
-        let graph = Graph::load(&dir, model).unwrap();
-        let ck = rt.init_checkpoint().unwrap();
-        let kernel = rt.eagl_step(&ck).unwrap();
+fn native_eagl_matches_backend_kernel() {
+    // The cross-check the paper's Appendix E snippet implies: the native
+    // host entropy must equal the backend's eagl_step output.
+    for model in ["sim_tiny", "sim_skew"] {
+        let (mut be, graph) = sim(model);
+        let ck = be.init_checkpoint().unwrap();
+        let kernel = be.eagl_step(&ck).unwrap();
         let native = eagl::checkpoint_entropies(&graph, &ck, 4).unwrap();
         assert_eq!(kernel.len(), native.len());
         for (i, (k, n)) in kernel.iter().zip(&native).enumerate() {
@@ -126,16 +117,14 @@ fn native_eagl_matches_pallas_kernel() {
 
 #[test]
 fn vhv_deterministic_per_seed() {
-    let Some(dir) = artifacts() else { return };
-    let mut rt = Runtime::load(&dir, "qsegnet").unwrap();
-    let graph = Graph::load(&dir, "qsegnet").unwrap();
-    let data = Dataset::for_task(rt.manifest.task, 1);
+    let (mut be, graph) = sim("sim_tiny");
+    let data = Dataset::for_task(be.manifest().task, 1);
     let bits = BitsConfig::uniform(&graph, 4).to_f32();
-    let ck = rt.init_checkpoint().unwrap();
-    let (x, y) = data.batch(Split::Train, 0, rt.manifest.train_batch);
-    let v1 = rt.vhv_step(&ck, &x, &y, &bits, 11).unwrap();
-    let v2 = rt.vhv_step(&ck, &x, &y, &bits, 11).unwrap();
-    let v3 = rt.vhv_step(&ck, &x, &y, &bits, 12).unwrap();
+    let ck = be.init_checkpoint().unwrap();
+    let (x, y) = data.batch(Split::Train, 0, be.manifest().train_batch);
+    let v1 = be.vhv_step(&ck, &x, &y, &bits, 11).unwrap();
+    let v2 = be.vhv_step(&ck, &x, &y, &bits, 11).unwrap();
+    let v3 = be.vhv_step(&ck, &x, &y, &bits, 12).unwrap();
     assert_eq!(v1, v2);
     assert_ne!(v1, v3);
     assert_eq!(v1.len(), graph.n_bits());
@@ -143,21 +132,103 @@ fn vhv_deterministic_per_seed() {
 }
 
 #[test]
-fn qbert_pallas_path_executes() {
-    // qbert's linears run through the Pallas quant_matmul kernel inside
-    // the artifact — this is the L1-on-the-hot-path proof.
-    let Some(dir) = artifacts() else { return };
-    let mut rt = Runtime::load(&dir, "qbert").unwrap();
-    let graph = Graph::load(&dir, "qbert").unwrap();
-    let data = Dataset::for_task(rt.manifest.task, 1);
-    let bits = BitsConfig::uniform(&graph, 4).to_f32();
-    let ck = rt.init_checkpoint().unwrap();
-    let (x, y) = data.batch(Split::Eval, 0, rt.manifest.eval_batch);
-    let (loss, pred) = rt.eval_step(&ck, &x, &y, &bits).unwrap();
-    assert!(loss.is_finite());
-    assert_eq!(pred.shape, vec![rt.manifest.eval_batch, 2]);
-    let mut state = TrainState::new(ck);
-    let (xt, yt) = data.batch(Split::Train, 0, rt.manifest.train_batch);
-    let (l, _) = rt.train_step(&mut state, &xt, &yt, 0.01, 0.0, &bits).unwrap();
-    assert!(l.is_finite());
+fn sim_checkpoint_save_load_round_trips() {
+    // ckpt I/O on SimBackend-shaped checkpoints (scalars, 1-d biases,
+    // 2-d weight matrices in one file).
+    let (be, _) = sim("sim_skew");
+    let ck = be.init_checkpoint().unwrap();
+    let dir = std::env::temp_dir().join(format!("mpq_sim_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("sim_skew_init.ckpt");
+    ck.save(&path).unwrap();
+    let back = mpq::ckpt::Checkpoint::load(&path).unwrap();
+    assert_eq!(back.names, ck.names);
+    for (a, b) in back.tensors.iter().zip(&ck.tensors) {
+        assert_eq!(a, b);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unknown_entry_errors() {
+    let (mut be, _) = sim("sim_tiny");
+    let err = be.execute("not_an_entry", &[]).unwrap_err().to_string();
+    assert!(err.contains("not_an_entry"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-gated PJRT tests: compiled only with --features pjrt, and
+// skipped at runtime when `make artifacts` has not run.
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+mod pjrt_artifacts {
+    use mpq::backend::{Backend, PjrtBackend, TrainState};
+    use mpq::data::{Dataset, Split};
+    use mpq::graph::Graph;
+    use mpq::quant::BitsConfig;
+
+    fn artifacts() -> Option<std::path::PathBuf> {
+        let dir = mpq::artifacts_dir();
+        if dir.join("qsegnet.manifest.json").exists() {
+            Some(dir)
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn pjrt_eval_and_train_step_execute() {
+        let Some(dir) = artifacts() else { return };
+        let mut rt = PjrtBackend::load(&dir, "qsegnet").unwrap();
+        let graph = Graph::load(&dir, "qsegnet").unwrap();
+        let data = Dataset::for_task(rt.manifest().task, 1);
+        let bits = BitsConfig::uniform(&graph, 4).to_f32();
+        let ck = rt.init_checkpoint().unwrap();
+        let (xe, ye) = data.batch(Split::Eval, 0, rt.manifest().eval_batch);
+        let (loss0, out) = rt.eval_step(&ck, &xe, &ye, &bits).unwrap();
+        assert!(loss0.is_finite() && loss0 > 0.0);
+        assert_eq!(out.shape, rt.manifest().evalout_shape);
+        let mut state = TrainState::new(ck);
+        let (xt, yt) = data.batch(Split::Train, 0, rt.manifest().train_batch);
+        let (l, m) = rt.train_step(&mut state, &xt, &yt, 0.05, 1e-4, &bits).unwrap();
+        assert!(l.is_finite());
+        assert!((0.0..=1.0).contains(&m));
+    }
+
+    #[test]
+    fn pjrt_native_eagl_matches_pallas_kernel() {
+        let Some(dir) = artifacts() else { return };
+        for model in ["qsegnet", "qresnet20"] {
+            let mut rt = PjrtBackend::load(&dir, model).unwrap();
+            let graph = Graph::load(&dir, model).unwrap();
+            let ck = rt.init_checkpoint().unwrap();
+            let kernel = rt.eagl_step(&ck).unwrap();
+            let native = mpq::eagl::checkpoint_entropies(&graph, &ck, 4).unwrap();
+            assert_eq!(kernel.len(), native.len());
+            for (i, (k, n)) in kernel.iter().zip(&native).enumerate() {
+                assert!(
+                    (*k as f64 - n).abs() < 1e-3,
+                    "{model} layer {i}: kernel {k} native {n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_qbert_pallas_path_executes() {
+        // qbert's linears run through the Pallas quant_matmul kernel inside
+        // the artifact — this is the L1-on-the-hot-path proof.
+        let Some(dir) = artifacts() else { return };
+        let mut rt = PjrtBackend::load(&dir, "qbert").unwrap();
+        let graph = Graph::load(&dir, "qbert").unwrap();
+        let data = Dataset::for_task(rt.manifest().task, 1);
+        let bits = BitsConfig::uniform(&graph, 4).to_f32();
+        let ck = rt.init_checkpoint().unwrap();
+        let (x, y) = data.batch(Split::Eval, 0, rt.manifest().eval_batch);
+        let (loss, pred) = rt.eval_step(&ck, &x, &y, &bits).unwrap();
+        assert!(loss.is_finite());
+        assert_eq!(pred.shape, vec![rt.manifest().eval_batch, 2]);
+    }
 }
