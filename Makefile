@@ -7,11 +7,13 @@
 # crate, see rust/Cargo.toml) and skip themselves at runtime when
 # artifacts are absent.
 
-.PHONY: verify test build bench verify-pjrt artifacts clean
+.PHONY: verify test build bench bench-quick verify-pjrt artifacts clean
 
-# Tier-1: must pass in a clean checkout.
+# Tier-1: must pass in a clean checkout.  bench-quick rides along as a
+# smoke step so the bench binary (and its BENCH_hotpath.json emission)
+# can never silently rot.
 verify:
-	cargo build --release && cargo test -q
+	cargo build --release && cargo test -q && $(MAKE) bench-quick
 
 build:
 	cargo build --release
@@ -21,6 +23,12 @@ test:
 
 bench:
 	cargo bench
+
+# Quick-mode hot-path bench; writes the machine-readable perf record
+# BENCH_hotpath.json at the repo root (see rust/README.md §Performance).
+# Re-running prints speedups against the recorded file.
+bench-quick:
+	MPQ_BENCH_QUICK=1 MPQ_BENCH_OUT=$(CURDIR)/BENCH_hotpath.json cargo bench --bench perf_hotpath
 
 # Full verification including the PJRT/AOT path (requires the vendored
 # `xla` dependency to be uncommented in rust/Cargo.toml and, for the

@@ -8,17 +8,52 @@
 //!  * L3: knapsack solve (paper: their Python took 2.3 s on ResNet-50 —
 //!    target ≥100× faster), EAGL metric, data generation, checkpoint I/O,
 //!    manifest JSON parse.
+//!
+//! Every measurement is recorded into a machine-readable
+//! `BENCH_hotpath.json` (path: `MPQ_BENCH_OUT`, else the cwd) via the
+//! [`mpq::bench::BenchSink`]; when a previous record exists, each
+//! measurement also prints its speedup against the recorded mean, so
+//! perf claims in PRs are checked against the baseline file rather than
+//! asserted from memory.  `make bench-quick` runs this in quick mode and
+//! writes the record at the repo root.
+
+use std::collections::BTreeMap;
 
 use mpq::backend::{Backend, TrainState};
-use mpq::bench::{coordinator_or_skip, header, measure, try_measure};
+use mpq::bench::{coordinator_or_skip, fmt_s, header, measure, try_measure, BenchSink, Measurement};
 use mpq::data::{Dataset, Split};
 use mpq::knapsack;
 use mpq::quant::BitsConfig;
 use mpq::rng::Pcg32;
 
+/// Report a measurement, print its delta vs the recorded baseline (if
+/// any), and record it into the sink.
+fn note(sink: &mut BenchSink, baseline: &Option<BTreeMap<String, f64>>, m: Measurement) {
+    m.report();
+    if let Some(base) = baseline {
+        if let Some(&old) = base.get(&m.name) {
+            if m.mean_s > 0.0 && old > 0.0 {
+                println!(
+                    "  -> vs recorded baseline: {:>6.2}x  ({} -> {})",
+                    old / m.mean_s,
+                    fmt_s(old),
+                    fmt_s(m.mean_s)
+                );
+            }
+        }
+    }
+    sink.record(m);
+}
+
 fn main() -> mpq::Result<()> {
     let quick = mpq::bench::quick();
     let iters = if quick { 5 } else { 20 };
+    let out_path = BenchSink::out_path("hotpath");
+    let baseline = mpq::bench::load_baseline(&out_path);
+    let mut sink = BenchSink::new("hotpath");
+    if baseline.is_some() {
+        println!("comparing against recorded baseline {}\n", out_path.display());
+    }
     header();
 
     // -- L3 pure-host paths -------------------------------------------------
@@ -28,10 +63,10 @@ fn main() -> mpq::Result<()> {
     for &(n, cap) in &[(54usize, 1_000_000u64), (1000, 10_000_000)] {
         let values: Vec<u64> = (0..n).map(|_| rng.below(10_000) as u64 + 1).collect();
         let weights: Vec<u64> = (0..n).map(|_| rng.below(50_000) as u64 + 1).collect();
-        measure(&format!("knapsack n={n} cap={cap}"), 1, iters, || {
+        let m = measure(&format!("knapsack n={n} cap={cap}"), 1, iters, || {
             std::hint::black_box(knapsack::solve_01(&values, &weights, cap));
-        })
-        .report();
+        });
+        note(&mut sink, &baseline, m);
     }
 
     // EAGL + checkpoint I/O over a realistic checkpoint (any model that
@@ -39,39 +74,45 @@ fn main() -> mpq::Result<()> {
     if let Some(co) = coordinator_or_skip("sim_skew", 7) {
         let ck = co.rt.init_checkpoint()?;
         let graph = co.graph.clone();
-        measure("eagl metric sim_skew (full ckpt)", 1, iters, || {
+        let m = measure("eagl metric sim_skew (full ckpt)", 1, iters, || {
             std::hint::black_box(mpq::eagl::checkpoint_entropies(&graph, &ck, 4).unwrap());
-        })
-        .report();
+        });
+        note(&mut sink, &baseline, m);
 
         let tmp = std::env::temp_dir().join("mpq_perf.ckpt");
-        measure("checkpoint save sim_skew", 1, iters, || {
+        let m = measure("checkpoint save sim_skew", 1, iters, || {
             ck.save(&tmp).unwrap();
-        })
-        .report();
-        measure("checkpoint load sim_skew", 1, iters, || {
+        });
+        note(&mut sink, &baseline, m);
+        let m = measure("checkpoint load sim_skew", 1, iters, || {
             std::hint::black_box(mpq::ckpt::Checkpoint::load(&tmp).unwrap());
-        })
-        .report();
+        });
+        note(&mut sink, &baseline, m);
         let _ = std::fs::remove_file(&tmp);
 
         // Manifest JSON parse (the sim manifest re-serialized).
         let text = co.rt.manifest().raw.to_string_compact();
-        measure("manifest JSON parse", 1, iters, || {
+        let m = measure("manifest JSON parse", 1, iters, || {
             std::hint::black_box(mpq::jsonio::parse(&text).unwrap());
-        })
-        .report();
+        });
+        note(&mut sink, &baseline, m);
     }
 
-    // Data generation (host side of every train step).
+    // Data generation (host side of every train step).  The Dataset memo
+    // caches repeated batches, so measure the miss path with a fresh
+    // index per iteration, and the hit path on a pinned index.
     for task in [mpq::backend::Task::Cls, mpq::backend::Task::Seg, mpq::backend::Task::Span] {
         let ds = Dataset::for_task(task, 7);
         let mut i = 0u64;
-        measure(&format!("datagen {:?} batch=64", task), 1, iters, || {
+        let m = measure(&format!("datagen {:?} batch=64 (miss)", task), 1, iters, || {
             i += 1;
             std::hint::black_box(ds.batch(Split::Train, i, 64));
-        })
-        .report();
+        });
+        note(&mut sink, &baseline, m);
+        let m = measure(&format!("datagen {:?} batch=64 (memo hit)", task), 1, iters, || {
+            std::hint::black_box(ds.batch(Split::Train, 1, 64));
+        });
+        note(&mut sink, &baseline, m);
     }
 
     // -- backend executable hot paths ---------------------------------------
@@ -91,22 +132,31 @@ fn main() -> mpq::Result<()> {
             co.rt.train_step(&mut state, &xt, &yt, 0.01, 1e-4, &bits)?;
             Ok(())
         })?;
-        m.report();
+        let thr = m.throughput(train_batch as f64);
+        note(&mut sink, &baseline, m);
         println!(
             "{:<44} {:>10.1} samples/s",
             format!("  -> {model} train throughput"),
-            m.throughput(train_batch as f64)
+            thr
         );
         let m = try_measure(&format!("{model} eval_step (b={eval_batch})"), 1, iters, || {
             co.rt.eval_step(&ck, &xe, &ye, &bits)?;
             Ok(())
         })?;
-        m.report();
+        let thr = m.throughput(eval_batch as f64);
+        note(&mut sink, &baseline, m);
         println!(
             "{:<44} {:>10.1} samples/s",
             format!("  -> {model} eval throughput"),
-            m.throughput(eval_batch as f64)
+            thr
         );
     }
+
+    sink.write(&out_path)?;
+    println!(
+        "\nwrote {} ({} measurements)",
+        out_path.display(),
+        sink.measurements.len()
+    );
     Ok(())
 }

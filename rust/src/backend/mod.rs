@@ -165,6 +165,29 @@ pub trait Backend {
     }
 }
 
+/// A source of fresh [`Backend`] instances for parallel fan-out: each
+/// worker thread of [`crate::coordinator::job_pool`] opens its own
+/// backend (PJRT clients are not Sync; sim backends carry per-instance
+/// caches).  Any `Fn() -> Result<B>` closure is a factory — the blanket
+/// impl below — so call sites pass `&|| SimBackend::new("sim_skew")` or
+/// the coordinator's boxed re-opener.
+///
+/// Because every backend of the same model computes deterministically
+/// and instance-independently, work fanned out over factory-opened
+/// instances is bit-identical to running it sequentially on one
+/// instance (asserted in `rust/tests/kernel_cache_parallel.rs`).
+pub trait BackendFactory: Sync {
+    type B: Backend;
+    fn open(&self) -> crate::Result<Self::B>;
+}
+
+impl<B: Backend, F: Fn() -> crate::Result<B> + Sync> BackendFactory for F {
+    type B = B;
+    fn open(&self) -> crate::Result<B> {
+        self()
+    }
+}
+
 impl Backend for Box<dyn Backend> {
     fn kind(&self) -> &'static str {
         (**self).kind()

@@ -10,6 +10,20 @@
 //! is deterministic: same inputs → bit-identical outputs, so the full
 //! EAGL/ALPS pipeline runs and is testable with no AOT artifacts.
 //!
+//! ## Execution path
+//!
+//! All compute routes through [`crate::kernels`]: blocked GEMM tiles over
+//! transposed quantized weights with preallocated scratch
+//! ([`kernels::Workspace`]), a per-layer quantized-weight cache that is
+//! invalidated only when a train step rewrites the weights, and a
+//! featurizer cache keyed by batch content (deterministic
+//! [`crate::data::Dataset::batch`] streams make content identity equal
+//! (task, split, index, batch) identity).  Every kernel preserves the
+//! reference f32 accumulation order, so the fast path is bit-identical
+//! to the scalar loops it replaced — see `rust/benches/perf_hotpath.rs`
+//! for the measured speedups and `rust/tests/kernel_cache_parallel.rs`
+//! for the identity assertions.
+//!
 //! ## Proxy models
 //!
 //! The input is the textures classification task
@@ -31,6 +45,7 @@ use std::collections::HashMap;
 use crate::ckpt::Checkpoint;
 use crate::eagl;
 use crate::jsonio::Json;
+use crate::kernels::{self, FeatCache, GradWs, WeightCache, Workspace};
 use crate::quant;
 use crate::rng::Pcg32;
 use crate::tensor::Tensor;
@@ -56,6 +71,8 @@ const EAGL_CKPT_BITS: u32 = 4;
 const IMG: usize = 32;
 const N_FEATURES: usize = 10;
 const N_CLASSES: usize = 10;
+/// Featurizer-cache capacity (entries are batch × N_FEATURES f32s).
+const FEAT_CACHE_CAP: usize = 64;
 
 /// Static spec of one sim layer.
 #[derive(Debug, Clone)]
@@ -123,28 +140,175 @@ fn layers_for(model: &str) -> Option<Vec<SimLayer>> {
 /// Names of the available sim models (for error messages / docs).
 pub const SIM_MODELS: &[&str] = &["sim_tiny", "sim_skew"];
 
-/// Owned, per-call view of one layer's parameters.
-#[derive(Clone)]
-struct NetLayer {
-    w: Vec<f32>,
-    b: Vec<f32>,
+/// Borrowed per-layer parameter views — the entry points marshal slices
+/// straight out of the argument tensors (no per-call clone chain).
+struct NetRef<'a> {
+    w: &'a [f32],
+    b: &'a [f32],
     sw: f32,
     sa: f32,
 }
 
-/// Per-layer forward cache for the backward pass.
-struct LayerCache {
-    /// Input activations [batch * fan_in].
-    a_in: Vec<f32>,
-    /// Pre-activations [batch * fan_out].
-    z: Vec<f32>,
-    /// Fake-quantized weights [fan_in * fan_out].
-    wq: Vec<f32>,
-    /// Weight code inside clamp range (clipped STE mask).
-    w_in: Vec<bool>,
-    /// Activation below the unsigned clamp (clipped STE mask); empty for
-    /// the head layer (logits are not quantized).
-    act_in: Vec<bool>,
+/// Validate and view the per-layer (w, b, sw, sa) parameter tensors.
+fn net_refs<'a>(layers: &[SimLayer], params: &[&'a Tensor]) -> crate::Result<Vec<NetRef<'a>>> {
+    crate::ensure!(
+        params.len() == 4 * layers.len(),
+        "sim: expected {} param tensors, got {}",
+        4 * layers.len(),
+        params.len()
+    );
+    let mut net = Vec::with_capacity(layers.len());
+    for (li, l) in layers.iter().enumerate() {
+        let w = params[4 * li];
+        let b = params[4 * li + 1];
+        crate::ensure!(
+            w.len() == l.fan_in * l.fan_out && b.len() == l.fan_out,
+            "sim: bad param shape for layer {}",
+            l.name
+        );
+        net.push(NetRef {
+            w: w.f32s(),
+            b: b.f32s(),
+            sw: params[4 * li + 2].item(),
+            sa: params[4 * li + 3].item(),
+        });
+    }
+    Ok(net)
+}
+
+/// Quantized forward pass through the kernel tiles; activations, masks
+/// and logits land in `fwd` (logits = `fwd[last].out`).
+fn forward_pass(
+    layers: &[SimLayer],
+    net: &[NetRef<'_>],
+    bits_eff: &[u32],
+    wcache: &mut WeightCache,
+    feats: &[f32],
+    fwd: &mut Vec<kernels::LayerWs>,
+    batch: usize,
+) {
+    let n_layers = layers.len();
+    while fwd.len() < n_layers {
+        fwd.push(kernels::LayerWs::default());
+    }
+    for li in 0..n_layers {
+        let (done, rest) = fwd.split_at_mut(li);
+        let cur = &mut rest[0];
+        let spec = &layers[li];
+        let p = &net[li];
+        let (fi, fo) = (spec.fan_in, spec.fan_out);
+        let a_in: &[f32] = if li == 0 { feats } else { &done[li - 1].out };
+        let (qn, qp) = quant::qrange_signed(bits_eff[li]);
+        let (wt, _) = wcache.ensure(li, bits_eff[li], p.sw, p.w, fi, fo, qn, qp);
+        cur.z.clear();
+        cur.z.resize(batch * fo, 0.0);
+        kernels::gemm::gemm_bias_wt(a_in, wt, p.b, &mut cur.z, batch, fi, fo);
+        if li == n_layers - 1 {
+            // Head: logits pass through unquantized.
+            cur.act_in.clear();
+            cur.out.clear();
+            cur.out.extend_from_slice(&cur.z);
+        } else {
+            let (_, aqp) = quant::qrange_unsigned(bits_eff[li]);
+            cur.act_in.clear();
+            cur.act_in.resize(batch * fo, false);
+            cur.out.clear();
+            cur.out.resize(batch * fo, 0.0);
+            let residual = if spec.branch { Some(a_in) } else { None };
+            kernels::gemm::relu_quant_act(
+                &cur.z,
+                p.sa,
+                aqp,
+                residual,
+                GAMMA,
+                &mut cur.out,
+                &mut cur.act_in,
+            );
+        }
+    }
+}
+
+/// Backward pass with clipped STE; per-layer (dW, db) land in `g`.
+/// `d` enters as dlogits and is clobbered.  Relies on the paired
+/// [`forward_pass`] having just ensured every layer's quantized weights:
+/// they are read back via [`WeightCache::peek`], so the backward half
+/// never re-fingerprints a weight tensor.
+#[allow(clippy::too_many_arguments)]
+fn backward_pass(
+    layers: &[SimLayer],
+    wcache: &WeightCache,
+    feats: &[f32],
+    fwd: &[kernels::LayerWs],
+    batch: usize,
+    d: &mut Vec<f32>,
+    d_in: &mut Vec<f32>,
+    dbr: &mut Vec<f32>,
+    g: &mut GradWs,
+) {
+    let n_layers = layers.len();
+    for li in (0..n_layers).rev() {
+        let spec = &layers[li];
+        let (fi, fo) = (spec.fan_in, spec.fan_out);
+        let last = li == n_layers - 1;
+        let cache = &fwd[li];
+        // Gradient at the layer's pre-activation output.
+        dbr.clear();
+        if last {
+            dbr.extend_from_slice(d);
+        } else {
+            dbr.resize(batch * fo, 0.0);
+            let scale = if spec.branch { GAMMA } else { 1.0 };
+            kernels::gemm::ste_backprop_mask(d, &cache.z, &cache.act_in, scale, dbr);
+        }
+        let a_in: &[f32] = if li == 0 { feats } else { &fwd[li - 1].out };
+        // dW = a_inᵀ · dbr (masked below), db = Σ_b dbr.
+        let dw = &mut g.dw[li];
+        dw.clear();
+        dw.resize(fi * fo, 0.0);
+        let db = &mut g.db[li];
+        db.clear();
+        db.resize(fo, 0.0);
+        kernels::gemm::accumulate_grads(a_in, dbr, dw, db, batch, fi, fo);
+        let (wt, w_in) = wcache.peek(li);
+        kernels::gemm::mask_grads(dw, w_in);
+        // d_in = dbr · wqᵀ.
+        d_in.clear();
+        d_in.resize(batch * fi, 0.0);
+        kernels::gemm::gemm_din_wt(dbr, wt, d_in, batch, fi, fo);
+        if !last && spec.branch {
+            // Skip connection: upstream gradient passes through.
+            for (dv, &iv) in d.iter_mut().zip(d_in.iter()) {
+                *dv += iv;
+            }
+        } else {
+            std::mem::swap(d, d_in);
+        }
+    }
+}
+
+/// Full forward + backward into the reusable workspaces: per-layer
+/// (dW, db) in `g`, returns (mean loss, correct count).
+#[allow(clippy::too_many_arguments)]
+fn grads_into(
+    layers: &[SimLayer],
+    net: &[NetRef<'_>],
+    bits_eff: &[u32],
+    wcache: &mut WeightCache,
+    feats: &[f32],
+    ws: &mut Workspace,
+    g: &mut GradWs,
+    y: &[i32],
+    batch: usize,
+) -> (f32, usize) {
+    g.ensure(layers.len());
+    forward_pass(layers, net, bits_eff, wcache, feats, &mut ws.fwd, batch);
+    let logits = &ws.fwd[layers.len() - 1].out;
+    let (loss, correct) =
+        kernels::gemm::softmax_ce(logits, y, batch, N_CLASSES, Some(&mut ws.d));
+    backward_pass(
+        layers, wcache, feats, &ws.fwd, batch, &mut ws.d, &mut ws.d_in, &mut ws.dbr, g,
+    );
+    (loss, correct)
 }
 
 /// The hermetic reference backend.
@@ -156,6 +320,15 @@ pub struct SimBackend {
     basis_sin: Vec<f32>,
     /// Cumulative executions per entry (perf accounting parity with pjrt).
     pub exec_counts: HashMap<String, u64>,
+    /// Reusable forward/backward scratch (see [`crate::kernels`]).
+    ws: Workspace,
+    /// Gradient buffers; two so the vHv probe holds both FD endpoints.
+    g0: GradWs,
+    g1: GradWs,
+    /// Quantized-weight memo, invalidated when a train step updates weights.
+    wcache: WeightCache,
+    /// Featurizer memo keyed by batch content.
+    fcache: FeatCache,
 }
 
 impl SimBackend {
@@ -180,13 +353,30 @@ impl SimBackend {
         }
         let manifest = Manifest::from_json(manifest_json(model, &layers))?;
         let (basis_cos, basis_sin) = featurizer_basis();
+        let n_layers = layers.len();
         Ok(SimBackend {
             manifest,
             layers,
             basis_cos,
             basis_sin,
             exec_counts: HashMap::new(),
+            ws: Workspace::default(),
+            g0: GradWs::default(),
+            g1: GradWs::default(),
+            wcache: WeightCache::new(n_layers),
+            fcache: FeatCache::new(FEAT_CACHE_CAP),
         })
+    }
+
+    /// Cache counters, for tests and diagnostics:
+    /// (featurizer hits, featurizer misses, weight hits, weight misses).
+    pub fn cache_stats(&self) -> (u64, u64, u64, u64) {
+        (
+            self.fcache.hits,
+            self.fcache.misses,
+            self.wcache.hits,
+            self.wcache.misses,
+        )
     }
 
     /// Canonical parameter names, 4 per layer: w, b, sw, sa.
@@ -202,270 +392,56 @@ impl SimBackend {
 
     // -- entry implementations ----------------------------------------------
 
-    fn net_from_params(&self, params: &[&Tensor]) -> crate::Result<Vec<NetLayer>> {
-        crate::ensure!(
-            params.len() == 4 * self.layers.len(),
-            "sim: expected {} param tensors, got {}",
-            4 * self.layers.len(),
-            params.len()
-        );
-        let mut net = Vec::with_capacity(self.layers.len());
-        for (li, l) in self.layers.iter().enumerate() {
-            let w = params[4 * li];
-            let b = params[4 * li + 1];
-            crate::ensure!(
-                w.len() == l.fan_in * l.fan_out && b.len() == l.fan_out,
-                "sim: bad param shape for layer {}",
-                l.name
-            );
-            net.push(NetLayer {
-                w: w.f32s().to_vec(),
-                b: b.f32s().to_vec(),
-                sw: params[4 * li + 2].item(),
-                sa: params[4 * li + 3].item(),
-            });
-        }
-        Ok(net)
-    }
-
     fn layer_bits(&self, li: usize, bits: &[f32]) -> u32 {
         self.layers[li]
             .fixed_bits
             .unwrap_or_else(|| bits[li].round().max(1.0) as u32)
     }
 
-    /// Gabor-energy featurizer: [batch * N_FEATURES], O(1) class energies.
-    fn featurize(&self, x: &Tensor) -> crate::Result<(Vec<f32>, usize)> {
+    /// Effective per-layer precision (fixed layers pinned).
+    fn effective_bits(&self, bits: &[f32]) -> Vec<u32> {
+        (0..self.layers.len())
+            .map(|li| self.layer_bits(li, bits))
+            .collect()
+    }
+
+    /// Validate the image tensor shape; returns the batch size.
+    fn check_x(&self, x: &Tensor) -> crate::Result<usize> {
         crate::ensure!(
             x.shape.len() == 4 && x.shape[1] == IMG && x.shape[2] == IMG && x.shape[3] == 3,
             "sim: expected x of shape [B,{IMG},{IMG},3], got {:?}",
             x.shape
         );
-        let batch = x.shape[0];
+        Ok(x.shape[0])
+    }
+
+    /// Gabor-energy featurizer with content-keyed memoization (see
+    /// [`crate::kernels::FeatCache`]); returns an index into the cache.
+    fn featurize_cached(&mut self, x: &Tensor, batch: usize) -> usize {
         let xs = x.f32s();
-        let px = IMG * IMG;
+        let fp = kernels::fingerprint_f32(xs);
+        if let Some(i) = self.fcache.find(fp, xs.len()) {
+            return i;
+        }
         let mut feats = vec![0f32; batch * N_FEATURES];
-        let mut gray = vec![0f32; px];
-        for b in 0..batch {
-            for (i, g) in gray.iter_mut().enumerate() {
-                let o = (b * px + i) * 3;
-                *g = (xs[o] + xs[o + 1] + xs[o + 2]) / 3.0 - 0.5;
-            }
-            for k in 0..N_FEATURES {
-                let (mut c, mut s) = (0f64, 0f64);
-                let cb = &self.basis_cos[k * px..(k + 1) * px];
-                let sb = &self.basis_sin[k * px..(k + 1) * px];
-                for i in 0..px {
-                    c += (gray[i] * cb[i]) as f64;
-                    s += (gray[i] * sb[i]) as f64;
-                }
-                feats[b * N_FEATURES + k] =
-                    ((c * c + s * s).sqrt() as f32) * (2.0 / px as f32) * FEAT_SCALE;
-            }
-        }
-        Ok((feats, batch))
+        kernels::gemm::gabor_energies(
+            xs,
+            &self.basis_cos,
+            &self.basis_sin,
+            &mut self.ws.gray,
+            batch,
+            IMG * IMG,
+            N_FEATURES,
+            FEAT_SCALE,
+            &mut feats,
+        );
+        self.fcache.insert(fp, xs.len(), feats)
     }
 
-    /// Quantized forward pass; returns (logits, per-layer caches).
-    fn forward(
-        &self,
-        net: &[NetLayer],
-        bits: &[f32],
-        feats: &[f32],
-        batch: usize,
-    ) -> (Vec<f32>, Vec<LayerCache>) {
-        let n_layers = self.layers.len();
-        let mut a = feats.to_vec();
-        let mut caches = Vec::with_capacity(n_layers);
-        for li in 0..n_layers {
-            let spec = &self.layers[li];
-            let p = &net[li];
-            let (fi, fo) = (spec.fan_in, spec.fan_out);
-            let b_eff = self.layer_bits(li, bits);
-            let (qn, qp) = quant::qrange_signed(b_eff);
-            let mut wq = vec![0f32; fi * fo];
-            let mut w_in = vec![false; fi * fo];
-            for (i, &w) in p.w.iter().enumerate() {
-                let code = (w / p.sw).round();
-                w_in[i] = code >= qn && code <= qp;
-                wq[i] = code.clamp(qn, qp) * p.sw;
-            }
-            // z = a @ wq + b
-            let mut z = vec![0f32; batch * fo];
-            for bi in 0..batch {
-                let arow = &a[bi * fi..(bi + 1) * fi];
-                let zrow = &mut z[bi * fo..(bi + 1) * fo];
-                zrow.copy_from_slice(&p.b);
-                for (i, &av) in arow.iter().enumerate() {
-                    if av != 0.0 {
-                        let wrow = &wq[i * fo..(i + 1) * fo];
-                        for (o, zv) in zrow.iter_mut().enumerate() {
-                            *zv += av * wrow[o];
-                        }
-                    }
-                }
-            }
-            let last = li == n_layers - 1;
-            if last {
-                caches.push(LayerCache {
-                    a_in: std::mem::take(&mut a),
-                    z: z.clone(),
-                    wq,
-                    w_in,
-                    act_in: Vec::new(),
-                });
-                a = z;
-            } else {
-                // relu → unsigned fake-quant with clipped STE mask.
-                let (_, aqp) = quant::qrange_unsigned(b_eff);
-                let mut hq = vec![0f32; batch * fo];
-                let mut act_in = vec![false; batch * fo];
-                for (i, &zv) in z.iter().enumerate() {
-                    let h = zv.max(0.0);
-                    let code = (h / p.sa).round();
-                    act_in[i] = h / p.sa <= aqp;
-                    hq[i] = code.clamp(0.0, aqp) * p.sa;
-                }
-                let a_in = std::mem::take(&mut a);
-                a = if spec.branch {
-                    let mut out = a_in.clone();
-                    for (o, &hv) in out.iter_mut().zip(&hq) {
-                        *o += GAMMA * hv;
-                    }
-                    out
-                } else {
-                    hq
-                };
-                caches.push(LayerCache { a_in, z, wq, w_in, act_in });
-            }
-        }
-        (a, caches)
-    }
-
-    /// Softmax cross-entropy: (mean loss, dlogits/batch, correct count).
-    fn softmax_ce(logits: &[f32], y: &[i32], batch: usize) -> (f32, Vec<f32>, usize) {
-        let c = N_CLASSES;
-        let mut dlogits = vec![0f32; batch * c];
-        let mut loss = 0f64;
-        let mut correct = 0usize;
-        for b in 0..batch {
-            let row = &logits[b * c..(b + 1) * c];
-            let mut mx = f32::NEG_INFINITY;
-            let mut argmax = 0usize;
-            for (k, &v) in row.iter().enumerate() {
-                if v > mx {
-                    mx = v;
-                    argmax = k;
-                }
-            }
-            let mut denom = 0f64;
-            for &v in row {
-                denom += ((v - mx) as f64).exp();
-            }
-            let yi = y[b] as usize;
-            let p_y = ((row[yi] - mx) as f64).exp() / denom;
-            loss -= (p_y + 1e-12).ln();
-            if argmax == yi {
-                correct += 1;
-            }
-            for k in 0..c {
-                let p = ((row[k] - mx) as f64).exp() / denom;
-                dlogits[b * c + k] =
-                    ((p - if k == yi { 1.0 } else { 0.0 }) / batch as f64) as f32;
-            }
-        }
-        ((loss / batch as f64) as f32, dlogits, correct)
-    }
-
-    /// Full forward + backward: per-layer (dW, db) with clipped STE, plus
-    /// (loss, correct count).
-    fn grads(
-        &self,
-        net: &[NetLayer],
-        bits: &[f32],
-        feats: &[f32],
-        y: &[i32],
-        batch: usize,
-    ) -> (Vec<(Vec<f32>, Vec<f32>)>, f32, usize) {
-        let n_layers = self.layers.len();
-        let (logits, caches) = self.forward(net, bits, feats, batch);
-        let (loss, dlogits, correct) = Self::softmax_ce(&logits, y, batch);
-        let mut grads: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(n_layers);
-        grads.resize_with(n_layers, || (Vec::new(), Vec::new()));
-        let mut d = dlogits;
-        for li in (0..n_layers).rev() {
-            let spec = &self.layers[li];
-            let cache = &caches[li];
-            let (fi, fo) = (spec.fan_in, spec.fan_out);
-            let last = li == n_layers - 1;
-            // Gradient at the layer's pre-activation output.
-            let dbr: Vec<f32> = if last {
-                d.clone()
-            } else {
-                let scale = if spec.branch { GAMMA } else { 1.0 };
-                d.iter()
-                    .enumerate()
-                    .map(|(i, &dv)| {
-                        if cache.act_in[i] && cache.z[i] > 0.0 {
-                            dv * scale
-                        } else {
-                            0.0
-                        }
-                    })
-                    .collect()
-            };
-            // dW = a_inᵀ · dbr (masked), db = Σ_b dbr.
-            let mut dw = vec![0f32; fi * fo];
-            let mut db = vec![0f32; fo];
-            for bi in 0..batch {
-                let arow = &cache.a_in[bi * fi..(bi + 1) * fi];
-                let drow = &dbr[bi * fo..(bi + 1) * fo];
-                for (o, &dv) in drow.iter().enumerate() {
-                    db[o] += dv;
-                }
-                for (i, &av) in arow.iter().enumerate() {
-                    if av != 0.0 {
-                        let wrow = &mut dw[i * fo..(i + 1) * fo];
-                        for (o, &dv) in drow.iter().enumerate() {
-                            wrow[o] += av * dv;
-                        }
-                    }
-                }
-            }
-            for (i, g) in dw.iter_mut().enumerate() {
-                if !cache.w_in[i] {
-                    *g = 0.0;
-                }
-            }
-            // d_in = dbr · wqᵀ.
-            let mut d_in = vec![0f32; batch * fi];
-            for bi in 0..batch {
-                let drow = &dbr[bi * fo..(bi + 1) * fo];
-                let irow = &mut d_in[bi * fi..(bi + 1) * fi];
-                for (i, iv) in irow.iter_mut().enumerate() {
-                    let wrow = &cache.wq[i * fo..(i + 1) * fo];
-                    let mut acc = 0f32;
-                    for (o, &dv) in drow.iter().enumerate() {
-                        acc += dv * wrow[o];
-                    }
-                    *iv = acc;
-                }
-            }
-            d = if !last && spec.branch {
-                // Skip connection: upstream gradient passes through.
-                d.iter().zip(&d_in).map(|(&a, &b)| a + b).collect()
-            } else {
-                d_in
-            };
-            grads[li] = (dw, db);
-        }
-        (grads, loss, correct)
-    }
-
-    fn exec_train(&self, args: &[&Tensor]) -> crate::Result<Vec<Tensor>> {
+    fn exec_train(&mut self, args: &[&Tensor]) -> crate::Result<Vec<Tensor>> {
         let n = 4 * self.layers.len();
         crate::ensure!(args.len() == 2 * n + 5, "sim train_step: arity {}", args.len());
-        let net = self.net_from_params(&args[..n])?;
+        let net = net_refs(&self.layers, &args[..n])?;
         let mom_args = &args[n..2 * n];
         let x = args[2 * n];
         let y_t = args[2 * n + 1];
@@ -473,29 +449,45 @@ impl SimBackend {
         let wd = args[2 * n + 3].item();
         let bits = args[2 * n + 4].f32s();
         crate::ensure!(bits.len() == self.layers.len(), "sim: bits arity");
-        let (feats, batch) = self.featurize(x)?;
+        let batch = self.check_x(x)?;
         let y = y_t.i32s();
         crate::ensure!(y.len() == batch, "sim: y arity");
-        let (grads, loss, correct) = self.grads(&net, bits, &feats, y, batch);
+        let bits_eff = self.effective_bits(bits);
+        let feats_idx = self.featurize_cached(x, batch);
+        let feats = self.fcache.feats(feats_idx);
+        let (loss, correct) = grads_into(
+            &self.layers,
+            &net,
+            &bits_eff,
+            &mut self.wcache,
+            feats,
+            &mut self.ws,
+            &mut self.g0,
+            y,
+            batch,
+        );
         // SGD momentum update (wd on weights only; step sizes are inert).
         let mut out = Vec::with_capacity(2 * n + 2);
         let mut mom_out = Vec::with_capacity(n);
         for (li, l) in self.layers.iter().enumerate() {
             let p = &net[li];
-            let (dw, db) = &grads[li];
+            let dw = &self.g0.dw[li];
+            let db = &self.g0.db[li];
             let mw_old = mom_args[4 * li].f32s();
             let mb_old = mom_args[4 * li + 1].f32s();
-            let mut w_new = p.w.clone();
-            let mut mw_new = vec![0f32; p.w.len()];
+            let mut w_new = Vec::with_capacity(p.w.len());
+            let mut mw_new = Vec::with_capacity(p.w.len());
             for i in 0..p.w.len() {
-                mw_new[i] = MOMENTUM * mw_old[i] + dw[i] + wd * p.w[i];
-                w_new[i] -= lr * mw_new[i];
+                let m = MOMENTUM * mw_old[i] + dw[i] + wd * p.w[i];
+                mw_new.push(m);
+                w_new.push(p.w[i] - lr * m);
             }
-            let mut b_new = p.b.clone();
-            let mut mb_new = vec![0f32; p.b.len()];
+            let mut b_new = Vec::with_capacity(p.b.len());
+            let mut mb_new = Vec::with_capacity(p.b.len());
             for o in 0..p.b.len() {
-                mb_new[o] = MOMENTUM * mb_old[o] + db[o];
-                b_new[o] -= lr * mb_new[o];
+                let m = MOMENTUM * mb_old[o] + db[o];
+                mb_new.push(m);
+                b_new.push(p.b[o] - lr * m);
             }
             out.push(Tensor::from_f32(&[l.fan_in, l.fan_out], w_new));
             out.push(Tensor::from_f32(&[l.fan_out], b_new));
@@ -512,36 +504,50 @@ impl SimBackend {
         Ok(out)
     }
 
-    fn exec_eval(&self, args: &[&Tensor]) -> crate::Result<Vec<Tensor>> {
+    fn exec_eval(&mut self, args: &[&Tensor]) -> crate::Result<Vec<Tensor>> {
         let n = 4 * self.layers.len();
         crate::ensure!(args.len() == n + 3, "sim eval_step: arity {}", args.len());
-        let net = self.net_from_params(&args[..n])?;
+        let net = net_refs(&self.layers, &args[..n])?;
         let x = args[n];
         let y_t = args[n + 1];
         let bits = args[n + 2].f32s();
         crate::ensure!(bits.len() == self.layers.len(), "sim: bits arity");
-        let (feats, batch) = self.featurize(x)?;
+        let batch = self.check_x(x)?;
         let y = y_t.i32s();
         crate::ensure!(y.len() == batch, "sim: y arity");
-        let (logits, _) = self.forward(&net, bits, &feats, batch);
-        let (loss, _, correct) = Self::softmax_ce(&logits, y, batch);
+        let bits_eff = self.effective_bits(bits);
+        let feats_idx = self.featurize_cached(x, batch);
+        let feats = self.fcache.feats(feats_idx);
+        forward_pass(
+            &self.layers,
+            &net,
+            &bits_eff,
+            &mut self.wcache,
+            feats,
+            &mut self.ws.fwd,
+            batch,
+        );
+        let logits = &self.ws.fwd[self.layers.len() - 1].out;
+        let (loss, correct) = kernels::gemm::softmax_ce(logits, y, batch, N_CLASSES, None);
         Ok(vec![
             Tensor::scalar(loss),
             Tensor::from_f32(&[], vec![correct as f32]),
         ])
     }
 
-    fn exec_vhv(&self, args: &[&Tensor]) -> crate::Result<Vec<Tensor>> {
+    fn exec_vhv(&mut self, args: &[&Tensor]) -> crate::Result<Vec<Tensor>> {
         let n = 4 * self.layers.len();
         crate::ensure!(args.len() == n + 4, "sim vhv_step: arity {}", args.len());
-        let net = self.net_from_params(&args[..n])?;
+        let net = net_refs(&self.layers, &args[..n])?;
         let x = args[n];
         let y_t = args[n + 1];
         let bits = args[n + 2].f32s();
+        crate::ensure!(bits.len() == self.layers.len(), "sim: bits arity");
         let seed = args[n + 3].i32s()[0];
-        let (feats, batch) = self.featurize(x)?;
+        let batch = self.check_x(x)?;
         let y = y_t.i32s();
         crate::ensure!(y.len() == batch, "sim: y arity");
+        let bits_eff = self.effective_bits(bits);
         // Rademacher probe per layer, deterministic in the seed.
         let mut rng = Pcg32::new(seed as u32 as u64, 0x6876_7673);
         let vs: Vec<Vec<f32>> = self
@@ -549,26 +555,64 @@ impl SimBackend {
             .iter()
             .map(|l| (0..l.fan_in * l.fan_out).map(|_| rng.rademacher()).collect())
             .collect();
-        let (g0, _, _) = self.grads(&net, bits, &feats, y, batch);
-        let mut net2 = net.clone();
-        for (li, v) in vs.iter().enumerate() {
-            for (w, &vv) in net2[li].w.iter_mut().zip(v) {
-                *w += VHV_EPS * vv;
-            }
-        }
-        let (g1, _, _) = self.grads(&net2, bits, &feats, y, batch);
+        let feats_idx = self.featurize_cached(x, batch);
+        let feats = self.fcache.feats(feats_idx);
+        grads_into(
+            &self.layers,
+            &net,
+            &bits_eff,
+            &mut self.wcache,
+            feats,
+            &mut self.ws,
+            &mut self.g0,
+            y,
+            batch,
+        );
+        let w2: Vec<Vec<f32>> = net
+            .iter()
+            .zip(&vs)
+            .map(|(p, v)| {
+                let mut w = p.w.to_vec();
+                for (wv, &vv) in w.iter_mut().zip(v) {
+                    *wv += VHV_EPS * vv;
+                }
+                w
+            })
+            .collect();
+        let net2: Vec<NetRef<'_>> = net
+            .iter()
+            .zip(&w2)
+            .map(|(p, w)| NetRef {
+                w: w.as_slice(),
+                b: p.b,
+                sw: p.sw,
+                sa: p.sa,
+            })
+            .collect();
+        grads_into(
+            &self.layers,
+            &net2,
+            &bits_eff,
+            &mut self.wcache,
+            feats,
+            &mut self.ws,
+            &mut self.g1,
+            y,
+            batch,
+        );
         let mut vhv = vec![0f32; self.layers.len()];
         for li in 0..self.layers.len() {
+            let (g1w, g0w) = (&self.g1.dw[li], &self.g0.dw[li]);
             let mut acc = 0f64;
             for (i, &vv) in vs[li].iter().enumerate() {
-                acc += ((g1[li].0[i] - g0[li].0[i]) / VHV_EPS * vv) as f64;
+                acc += ((g1w[i] - g0w[i]) / VHV_EPS * vv) as f64;
             }
             vhv[li] = acc as f32;
         }
         Ok(vec![Tensor::from_f32(&[self.layers.len()], vhv)])
     }
 
-    fn exec_eagl(&self, args: &[&Tensor]) -> crate::Result<Vec<Tensor>> {
+    fn exec_eagl(&mut self, args: &[&Tensor]) -> crate::Result<Vec<Tensor>> {
         let n_layers = self.layers.len();
         crate::ensure!(args.len() == 2 * n_layers, "sim eagl_step: arity {}", args.len());
         let mut out = vec![0f32; n_layers];
@@ -576,7 +620,7 @@ impl SimBackend {
             let w = args[2 * li];
             let sw = args[2 * li + 1].item();
             let b_eff = l.fixed_bits.unwrap_or(EAGL_CKPT_BITS);
-            out[li] = eagl::layer_entropy(w.f32s(), sw, b_eff) as f32;
+            out[li] = eagl::layer_entropy(w.f32s(), sw, b_eff)? as f32;
         }
         Ok(vec![Tensor::from_f32(&[n_layers], out)])
     }
@@ -784,6 +828,24 @@ mod tests {
         let correct = out.item();
         assert!((0.0..=batch as f32).contains(&correct), "correct={correct}");
         assert_eq!(be.exec_counts.get("eval_step"), Some(&1));
+    }
+
+    #[test]
+    fn repeated_eval_hits_caches_with_identical_results() {
+        let mut be = SimBackend::new("sim_tiny").unwrap();
+        let graph = Graph::from_manifest(&be.manifest().raw).unwrap();
+        let data = Dataset::for_task(be.manifest().task, 1);
+        let ck = be.init_checkpoint().unwrap();
+        let bits = BitsConfig::uniform(&graph, 4).to_f32();
+        let (x, y) = data.batch(Split::Eval, 0, be.manifest().eval_batch);
+        let (l1, c1) = be.eval_step(&ck, &x, &y, &bits).unwrap();
+        let (l2, c2) = be.eval_step(&ck, &x, &y, &bits).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(c1, c2);
+        let (feat_hits, feat_misses, w_hits, _) = be.cache_stats();
+        assert_eq!(feat_misses, 1, "second eval must reuse the featurized batch");
+        assert!(feat_hits >= 1);
+        assert!(w_hits >= graph.layers.len() as u64, "weight codes must be reused");
     }
 
     #[test]

@@ -7,6 +7,8 @@
 
 use std::time::Instant;
 
+use crate::jsonio::Json;
+
 /// Timing summary over n iterations.
 #[derive(Debug, Clone)]
 pub struct Measurement {
@@ -36,6 +38,83 @@ impl Measurement {
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / self.mean_s
     }
+
+    /// Machine-readable form for the `BENCH_*.json` perf records.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_s", Json::num(self.mean_s)),
+            ("std_s", Json::num(self.std_s)),
+            ("p50_s", Json::num(self.p50_s)),
+            ("p95_s", Json::num(self.p95_s)),
+            ("min_s", Json::num(self.min_s)),
+        ])
+    }
+}
+
+/// Collects a bench target's measurements and writes them as a
+/// machine-readable `BENCH_<name>.json` (via [`crate::jsonio`]), so perf
+/// claims are checked against a recorded baseline instead of lore.
+/// `make bench-quick` writes `BENCH_hotpath.json` at the repo root;
+/// re-running prints each measurement's speedup against the recorded
+/// file (see [`load_baseline`]).
+pub struct BenchSink {
+    pub bench: String,
+    pub measurements: Vec<Measurement>,
+}
+
+impl BenchSink {
+    pub fn new(bench: &str) -> BenchSink {
+        BenchSink {
+            bench: bench.to_string(),
+            measurements: Vec::new(),
+        }
+    }
+
+    /// Output path: the `MPQ_BENCH_OUT` override wins (the Makefile sets
+    /// it to the repo root), else `BENCH_<bench>.json` under the cwd.
+    pub fn out_path(bench: &str) -> std::path::PathBuf {
+        match std::env::var_os("MPQ_BENCH_OUT") {
+            Some(p) => std::path::PathBuf::from(p),
+            None => std::path::PathBuf::from(format!("BENCH_{bench}.json")),
+        }
+    }
+
+    pub fn record(&mut self, m: Measurement) {
+        self.measurements.push(m);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str(&self.bench)),
+            ("quick", Json::Bool(quick())),
+            (
+                "measurements",
+                Json::Arr(self.measurements.iter().map(Measurement::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn write(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().to_string_compact())?;
+        Ok(())
+    }
+}
+
+/// Read a previously written `BENCH_*.json` into (measurement name →
+/// mean seconds) for printing speedups against the recorded baseline.
+/// `None` when the file is absent or unparseable (first run).
+pub fn load_baseline(path: &std::path::Path) -> Option<std::collections::BTreeMap<String, f64>> {
+    let v = crate::jsonio::parse_file(path).ok()?;
+    let mut out = std::collections::BTreeMap::new();
+    for m in v.at(&["measurements"]).as_arr()? {
+        out.insert(
+            m.at(&["name"]).as_str()?.to_string(),
+            m.at(&["mean_s"]).as_f64()?,
+        );
+    }
+    Some(out)
 }
 
 pub fn fmt_s(s: f64) -> String {
@@ -166,6 +245,35 @@ mod tests {
     fn try_measure_propagates() {
         let r = try_measure("fails", 0, 3, || crate::bail!("no"));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn bench_sink_round_trips_through_jsonio() {
+        let mut sink = BenchSink::new("unit");
+        sink.record(Measurement {
+            name: "alpha".into(),
+            iters: 3,
+            mean_s: 0.25,
+            std_s: 0.01,
+            p50_s: 0.24,
+            p95_s: 0.27,
+            min_s: 0.23,
+        });
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("mpq_bench_sink_{}.json", std::process::id()));
+        sink.write(&path).unwrap();
+        // The written file must parse back through jsonio...
+        let v = crate::jsonio::parse_file(&path).unwrap();
+        assert_eq!(v.at(&["bench"]).as_str(), Some("unit"));
+        // ...and load_baseline must recover the means by name.
+        let base = load_baseline(&path).unwrap();
+        assert!((base.get("alpha").copied().unwrap() - 0.25).abs() < 1e-12);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_baseline_absent_file_is_none() {
+        assert!(load_baseline(std::path::Path::new("/no/such/BENCH.json")).is_none());
     }
 
     #[test]

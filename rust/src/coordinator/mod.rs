@@ -21,7 +21,7 @@
 //! its own backend (PJRT clients are not Sync). On the single-core CI
 //! testbed this degenerates to sequential execution without code changes.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
@@ -34,6 +34,23 @@ use crate::jsonio::{self, Json};
 use crate::methods::{self, GainEstimate, MethodConfig, MethodKind};
 use crate::quant::{self, BitsConfig};
 use crate::train::{evaluate, finetune, EvalResult, TrainConfig};
+
+/// Factory that re-opens the coordinator's backend for worker threads
+/// (see [`crate::backend::BackendFactory`] and [`job_pool`]).
+pub type Spawner = Box<dyn Fn() -> crate::Result<Box<dyn Backend>> + Send + Sync>;
+
+/// Default sweep parallelism: the `MPQ_WORKERS` env override wins, else
+/// the machine's available parallelism, else 1.
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("MPQ_WORKERS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
 
 /// Everything needed to run experiments for one model on one backend.
 pub struct Coordinator<B: Backend> {
@@ -49,6 +66,14 @@ pub struct Coordinator<B: Backend> {
     pub ft_steps: usize,
     /// Eval batches per evaluation.
     pub eval_batches: usize,
+    /// Worker threads for the embarrassingly-parallel gain sweeps (ALPS
+    /// per-group probes, HAWQ Hutchinson draws).  `1` forces the
+    /// sequential path; results are bit-identical either way.
+    pub workers: usize,
+    /// Re-opens a fresh backend per worker; `None` (e.g. a custom
+    /// [`with_backend`](Coordinator::with_backend) coordinator without a
+    /// registered spawner) also forces the sequential path.
+    spawner: Option<Spawner>,
     gain_cache: BTreeMap<&'static str, GainEstimate>,
 }
 
@@ -123,7 +148,10 @@ impl Coordinator<Box<dyn Backend>> {
             // resume from the same store regardless of the cwd.
             BackendKind::Sim => crate::results_root().join(model),
         };
-        Coordinator::with_backend(be, data_seed, results_dir)
+        let mut co = Coordinator::with_backend(be, data_seed, results_dir)?;
+        let model_s = model.to_string();
+        co.spawner = Some(Box::new(move || backend::open(kind, &model_s)));
+        Ok(co)
     }
 
     /// Open with automatic backend resolution (artifacts + pjrt feature →
@@ -137,11 +165,16 @@ impl Coordinator<SimBackend> {
     /// Hermetic sim coordinator (no artifacts); results under
     /// `<results_root>/<model>` (see [`crate::results_root`]).
     pub fn sim(model: &str, data_seed: u64) -> crate::Result<Self> {
-        Coordinator::with_backend(
+        let mut co = Coordinator::with_backend(
             SimBackend::new(model)?,
             data_seed,
             crate::results_root().join(model),
-        )
+        )?;
+        let model_s = model.to_string();
+        co.spawner = Some(Box::new(move || -> crate::Result<Box<dyn Backend>> {
+            Ok(Box::new(SimBackend::new(&model_s)?))
+        }));
+        Ok(co)
     }
 }
 
@@ -164,8 +197,17 @@ impl<B: Backend> Coordinator<B> {
             base_steps: 400,
             ft_steps: 150,
             eval_batches: 4,
+            workers: default_workers(),
+            spawner: None,
             gain_cache: BTreeMap::new(),
         })
+    }
+
+    /// Register a backend factory enabling the parallel ALPS/HAWQ path
+    /// (constructors that know their backend — [`Coordinator::open`],
+    /// [`Coordinator::sim`] — register one automatically).
+    pub fn set_spawner(&mut self, spawner: Spawner) {
+        self.spawner = Some(spawner);
     }
 
     // -- base checkpoints ----------------------------------------------------
@@ -253,14 +295,37 @@ impl<B: Backend> Coordinator<B> {
             }
         }
         let ckpt4 = self.base_checkpoint()?;
-        let est = methods::estimate_gains(
-            kind,
-            &mut self.rt,
-            &self.graph,
-            &ckpt4,
-            &self.data,
-            &self.mcfg,
-        )?;
+        // ALPS probes and HAWQ draws are independent jobs: fan them out
+        // over per-worker backends when a spawner is registered and more
+        // than one worker is configured.  Bit-identical either way.
+        let parallelizable = matches!(kind, MethodKind::Alps | MethodKind::HawqV3);
+        let est = match (&self.spawner, parallelizable && self.workers > 1) {
+            (Some(spawner), true) => {
+                crate::info!(
+                    "estimating {} gains on {} workers",
+                    kind.name(),
+                    self.workers
+                );
+                methods::estimate_gains_parallel(
+                    kind,
+                    spawner,
+                    self.rt.manifest().task,
+                    &self.graph,
+                    &ckpt4,
+                    &self.data,
+                    &self.mcfg,
+                    self.workers,
+                )?
+            }
+            _ => methods::estimate_gains(
+                kind,
+                &mut self.rt,
+                &self.graph,
+                &ckpt4,
+                &self.data,
+                &self.mcfg,
+            )?,
+        };
         let payload = Json::obj(vec![
             (
                 "per_layer",
@@ -436,7 +501,12 @@ impl ResultStore {
 /// Run `jobs` of independent work items across `workers` threads.  Each
 /// worker invokes `make_worker_state` once (e.g. to open its own backend —
 /// PJRT clients are not Sync) and then processes items off a shared
-/// queue.  Results are returned in input order.
+/// **FIFO** queue (front-pop, so a long-running head job never strands
+/// the tail on one worker).  Results are returned in input order.
+///
+/// Error semantics: the first error wins and ends the pool early — every
+/// worker checks the error slot *before* popping its next item, so the
+/// remaining queue is abandoned rather than drained.
 pub fn job_pool<T, S, R>(
     items: Vec<T>,
     workers: usize,
@@ -448,27 +518,36 @@ where
     R: Send,
 {
     let n = items.len();
-    let queue = std::sync::Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>());
+    let queue =
+        std::sync::Mutex::new(items.into_iter().enumerate().collect::<VecDeque<_>>());
     let results = std::sync::Mutex::new(Vec::<(usize, R)>::with_capacity(n));
     let err = std::sync::Mutex::new(None::<crate::error::Error>);
+    // Never spawn more workers than jobs: surplus workers would pay
+    // make_worker_state (a full backend open) just to pop an empty queue.
+    let n_workers = workers.max(1).min(n.max(1));
     std::thread::scope(|scope| {
-        for _ in 0..workers.max(1) {
+        for _ in 0..n_workers {
             scope.spawn(|| {
                 let mut state = match make_worker_state() {
                     Ok(s) => s,
                     Err(e) => {
-                        *err.lock().unwrap() = Some(e);
+                        err.lock().unwrap().get_or_insert(e);
                         return;
                     }
                 };
                 loop {
-                    let item = { queue.lock().unwrap().pop() };
-                    let Some((idx, item)) = item else { break };
+                    // Bail before popping: once any worker records an
+                    // error the rest of the queue must not be drained.
+                    if err.lock().unwrap().is_some() {
+                        return;
+                    }
+                    let item = { queue.lock().unwrap().pop_front() };
+                    let Some((idx, item)) = item else { return };
                     match run(&mut state, item) {
                         Ok(r) => results.lock().unwrap().push((idx, r)),
                         Err(e) => {
-                            *err.lock().unwrap() = Some(e);
-                            break;
+                            err.lock().unwrap().get_or_insert(e);
+                            return;
                         }
                     }
                 }
@@ -566,6 +645,54 @@ mod tests {
         let items: Vec<u32> = (0..37).collect();
         let out = job_pool(items, 4, || Ok(0u32), |_, x| Ok(x * 2)).unwrap();
         assert_eq!(out, (0..37).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn job_pool_is_fifo_with_one_worker() {
+        let order = std::sync::Mutex::new(Vec::new());
+        let items: Vec<u32> = (0..10).collect();
+        let out = job_pool(
+            items,
+            1,
+            || Ok(()),
+            |_, x| {
+                order.lock().unwrap().push(x);
+                Ok(x)
+            },
+        )
+        .unwrap();
+        assert_eq!(out, (0..10).collect::<Vec<_>>());
+        // Front-pop: processed in submission order, not reversed.
+        assert_eq!(*order.lock().unwrap(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn job_pool_error_stops_draining() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let ran = AtomicUsize::new(0);
+        let items: Vec<u32> = (0..100).collect();
+        let res = job_pool(
+            items,
+            1,
+            || Ok(()),
+            |_, x| {
+                ran.fetch_add(1, Ordering::SeqCst);
+                if x == 0 {
+                    crate::bail!("boom")
+                } else {
+                    Ok(x)
+                }
+            },
+        );
+        assert!(res.is_err());
+        // FIFO: the single worker hits the failing head item first and
+        // must abandon the other 99 jobs instead of draining them.
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn default_workers_is_positive() {
+        assert!(default_workers() >= 1);
     }
 
     #[test]

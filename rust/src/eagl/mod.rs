@@ -11,43 +11,82 @@
 //! L1 Pallas histogram kernel through the `eagl_step` artifact
 //! (rust/tests/runtime_integration.rs) and against the paper's Appendix E
 //! reference semantics in unit tests here.
+//!
+//! Codes outside the quantizer's clamp range are a *caller* bug (the
+//! in-repo producers clamp by construction), so they surface as a
+//! [`crate::error::Error`] — not a release-mode index panic.
 
 use crate::ckpt::Checkpoint;
 use crate::graph::Graph;
-use crate::quant::{qrange_signed, weight_codes};
+use crate::quant::{qrange_signed, weight_codes_into};
 
 /// Entropy (bits) of the empirical distribution of `codes`, each in
 /// [-2^(b-1), 2^(b-1)-1].  Matches Appendix E: entropy of (p + eps).
-pub fn entropy_of_codes(codes: &[i32], bits: u32) -> f64 {
+/// Errors when a code falls outside the quantizer range.
+pub fn entropy_of_codes(codes: &[i32], bits: u32) -> crate::Result<f64> {
+    let mut hist = Vec::new();
+    entropy_of_codes_into(codes, bits, &mut hist)
+}
+
+/// Scratch-buffer variant of [`entropy_of_codes`]: `hist` is cleared,
+/// resized and reused here, so per-layer loops
+/// ([`checkpoint_entropies`]) allocate nothing per call.
+pub fn entropy_of_codes_into(
+    codes: &[i32],
+    bits: u32,
+    hist: &mut Vec<u64>,
+) -> crate::Result<f64> {
     let n_bins = 1usize << bits;
-    let (qn, _) = qrange_signed(bits);
-    let mut hist = vec![0u64; n_bins];
+    let (qn, qp) = qrange_signed(bits);
+    hist.clear();
+    hist.resize(n_bins, 0);
     for &c in codes {
-        let idx = (c - qn as i32) as usize;
-        debug_assert!(idx < n_bins);
-        hist[idx] += 1;
+        crate::ensure!(
+            c as f32 >= qn && c as f32 <= qp,
+            "weight code {c} outside [{qn}, {qp}] for a {bits}-bit quantizer"
+        );
+        hist[(c - qn as i32) as usize] += 1;
     }
     let n = codes.len() as f64;
     let eps = 1e-10;
     let mut h = 0.0;
-    for &count in &hist {
+    for &count in hist.iter() {
         let p = count as f64 / n + eps;
         h -= p * p.log2();
     }
-    h
+    Ok(h)
 }
 
 /// EAGL entropy of one weight tensor under its learned step size.
-pub fn layer_entropy(w: &[f32], step: f32, bits: u32) -> f64 {
+pub fn layer_entropy(w: &[f32], step: f32, bits: u32) -> crate::Result<f64> {
+    let mut codes = Vec::with_capacity(w.len());
+    let mut hist = Vec::new();
+    layer_entropy_into(w, step, bits, &mut codes, &mut hist)
+}
+
+/// Scratch-buffer variant of [`layer_entropy`] — the single home of the
+/// step normalization (`|s| clamped away from 0`), shared by the one-off
+/// and per-layer-loop callers so the rule cannot fork.
+pub fn layer_entropy_into(
+    w: &[f32],
+    step: f32,
+    bits: u32,
+    codes: &mut Vec<i32>,
+    hist: &mut Vec<u64>,
+) -> crate::Result<f64> {
     let s = step.abs().max(1e-8);
-    entropy_of_codes(&weight_codes(w, s, bits), bits)
+    weight_codes_into(w, s, bits, codes);
+    entropy_of_codes_into(codes, bits, hist)
 }
 
 /// Per-layer EAGL entropies for a whole checkpoint, in qindex order
 /// (Algorithm 2).  Fixed layers are scored at their pinned precision —
 /// they never enter the knapsack, but the values are reported for Fig. 2.
+/// The code and histogram buffers are hoisted out of the per-layer loop.
 pub fn checkpoint_entropies(graph: &Graph, ck: &Checkpoint, ckpt_bits: u32) -> crate::Result<Vec<f64>> {
     let mut out = vec![0.0; graph.layers.len()];
+    let mut codes: Vec<i32> = Vec::new();
+    let mut hist: Vec<u64> = Vec::new();
     for layer in &graph.layers {
         let base = layer.name.replace('.', "/");
         let w = ck
@@ -57,7 +96,7 @@ pub fn checkpoint_entropies(graph: &Graph, ck: &Checkpoint, ckpt_bits: u32) -> c
             .get(&format!("{base}/sw"))
             .ok_or_else(|| crate::err!("checkpoint missing {base}/sw"))?;
         let bits = layer.fixed_bits.unwrap_or(ckpt_bits);
-        out[layer.qindex] = layer_entropy(w.f32s(), s.item(), bits);
+        out[layer.qindex] = layer_entropy_into(w.f32s(), s.item(), bits, &mut codes, &mut hist)?;
     }
     Ok(out)
 }
@@ -71,15 +110,38 @@ mod tests {
     fn uniform_codes_have_max_entropy() {
         // All 16 4-bit codes equally often → H = 4 bits.
         let codes: Vec<i32> = (0..160).map(|i| (i % 16) - 8).collect();
-        let h = entropy_of_codes(&codes, 4);
+        let h = entropy_of_codes(&codes, 4).unwrap();
         assert!((h - 4.0).abs() < 1e-6, "H = {h}");
     }
 
     #[test]
     fn constant_codes_have_zero_entropy() {
         let codes = vec![3i32; 1000];
-        let h = entropy_of_codes(&codes, 4);
+        let h = entropy_of_codes(&codes, 4).unwrap();
         assert!(h.abs() < 1e-4, "H = {h}");
+    }
+
+    #[test]
+    fn out_of_range_code_is_an_error_not_a_panic() {
+        // 99 has no bin in a 4-bit histogram: must error in release and
+        // debug alike (previously a debug_assert + release index panic).
+        let err = entropy_of_codes(&[0, 99], 4).unwrap_err().to_string();
+        assert!(err.contains("outside"), "{err}");
+        let err = entropy_of_codes(&[-9], 4).unwrap_err().to_string();
+        assert!(err.contains("outside"), "{err}");
+        // Boundary codes are fine.
+        assert!(entropy_of_codes(&[-8, 7], 4).is_ok());
+    }
+
+    #[test]
+    fn scratch_buffer_reuse_matches_fresh() {
+        let mut hist = Vec::new();
+        let a: Vec<i32> = (0..64).map(|i| (i % 16) - 8).collect();
+        let b = vec![0i32; 64];
+        let ha = entropy_of_codes_into(&a, 4, &mut hist).unwrap();
+        let hb = entropy_of_codes_into(&b, 4, &mut hist).unwrap();
+        assert_eq!(ha, entropy_of_codes(&a, 4).unwrap());
+        assert_eq!(hb, entropy_of_codes(&b, 4).unwrap());
     }
 
     #[test]
@@ -88,8 +150,8 @@ mod tests {
         let mut rng = Pcg32::new(1, 1);
         let narrow: Vec<f32> = (0..4096).map(|_| rng.normal() * 0.02).collect();
         let wide: Vec<f32> = (0..4096).map(|_| rng.normal() * 0.2).collect();
-        let h_narrow = layer_entropy(&narrow, 0.1, 4);
-        let h_wide = layer_entropy(&wide, 0.1, 4);
+        let h_narrow = layer_entropy(&narrow, 0.1, 4).unwrap();
+        let h_wide = layer_entropy(&wide, 0.1, 4).unwrap();
         assert!(
             h_narrow < h_wide,
             "narrow {h_narrow} should be < wide {h_wide}"
@@ -101,7 +163,7 @@ mod tests {
         let mut rng = Pcg32::new(2, 5);
         for &bits in &[2u32, 4, 8] {
             let w: Vec<f32> = (0..2048).map(|_| rng.normal()).collect();
-            let h = layer_entropy(&w, 0.3, bits);
+            let h = layer_entropy(&w, 0.3, bits).unwrap();
             assert!(h >= 0.0 && h <= bits as f64 + 1e-9, "b={bits} H={h}");
         }
     }
@@ -111,7 +173,7 @@ mod tests {
         // p = [0.5, 0.25, 0.25] over codes {-2,-1,0} at 2 bits →
         // H = 1.5 bits.
         let codes = vec![-2, -2, -1, 0];
-        let h = entropy_of_codes(&codes, 2);
+        let h = entropy_of_codes(&codes, 2).unwrap();
         assert!((h - 1.5).abs() < 1e-4, "H = {h}");
     }
 }

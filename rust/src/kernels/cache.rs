@@ -1,0 +1,266 @@
+//! Memoization layer for the sim executor's two recomputation hot spots:
+//! LSQ weight codes (re-quantized on every forward) and Gabor-energy
+//! features (re-correlated for every batch).
+//!
+//! Both caches are **semantically transparent**: a hit returns exactly
+//! the buffer a miss would have computed (the kernels in [`super::gemm`]
+//! are deterministic), so cached and uncached executions are bit
+//! identical — asserted in `rust/tests/kernel_cache_parallel.rs`.
+//!
+//! Keys are content fingerprints rather than identities: the backend
+//! receives plain tensors with no provenance, but every input it sees is
+//! deterministic — checkpoints come from seeded RNG + deterministic
+//! training, batches from [`crate::data::Dataset::batch`]'s
+//! (seed, split, index, batch) streams — so equal content *is* equal
+//! identity, and a fingerprint match after a train step updates the
+//! weights is exactly the invalidation condition we need.
+
+use std::collections::VecDeque;
+
+use super::gemm;
+
+/// 64-bit content fingerprint of an f32 slice: two word-wise FNV/murmur
+/// style streams over the IEEE bit patterns, length-separated and folded
+/// into one 64-bit value.  Not cryptographic — per-pair collision odds
+/// are ~2⁻⁶⁴, so over the handful of distinct tensors a run touches the
+/// aggregate risk stays negligible; revisit the fold (e.g. keep both
+/// words) before keying orders of magnitude more content.
+pub fn fingerprint_f32(xs: &[f32]) -> u64 {
+    let mut h1: u64 = 0xcbf2_9ce4_8422_2325 ^ (xs.len() as u64);
+    let mut h2: u64 = 0x9e37_79b9_7f4a_7c15;
+    for &v in xs {
+        let b = v.to_bits() as u64;
+        h1 = (h1 ^ b).wrapping_mul(0x0000_0100_0000_01B3);
+        h2 = (h2 ^ b).wrapping_mul(0xff51_afd7_ed55_8ccd);
+    }
+    h1 ^ h2.rotate_left(32)
+}
+
+/// One cached quantization of one layer's weights.
+#[derive(Default)]
+struct Entry {
+    /// (bits, sw bit pattern, weight fingerprint) the buffers were built
+    /// for; `None` until first use.
+    key: Option<(u32, u32, u64)>,
+    /// Fake-quantized weights, transposed layout `[fan_out][fan_in]`.
+    wt: Vec<f32>,
+    /// Clipped-STE in-range mask, parameter layout `[fan_in][fan_out]`.
+    w_in: Vec<bool>,
+}
+
+/// Two-way per-layer set: the vHv finite-difference probe alternates
+/// base and perturbed weights within every draw, so two entries keep
+/// the frozen base codes resident across a whole HAWQ sweep instead of
+/// thrashing a single slot.
+#[derive(Default)]
+struct Slot {
+    entries: [Entry; 2],
+    /// Index of the most-recently ensured entry.
+    mru: usize,
+}
+
+/// Per-layer memo of LSQ weight codes keyed by
+/// `(bits, step size, weight fingerprint)`.
+///
+/// A train step rewrites the weights, which changes the fingerprint and
+/// invalidates on the next touch; eval loops, ALPS probes and HAWQ
+/// sweeps over a frozen checkpoint hit on every call.
+pub struct WeightCache {
+    slots: Vec<Slot>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl WeightCache {
+    pub fn new(n_layers: usize) -> WeightCache {
+        WeightCache {
+            slots: (0..n_layers).map(|_| Slot::default()).collect(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Transposed quantized weights + in-range mask for layer `li`,
+    /// recomputing only when `(bits, sw, w)` misses both resident
+    /// entries (the colder entry is evicted).
+    #[allow(clippy::too_many_arguments)]
+    pub fn ensure(
+        &mut self,
+        li: usize,
+        bits: u32,
+        sw: f32,
+        w: &[f32],
+        fan_in: usize,
+        fan_out: usize,
+        qn: f32,
+        qp: f32,
+    ) -> (&[f32], &[bool]) {
+        let key = (bits, sw.to_bits(), fingerprint_f32(w));
+        let hit = {
+            let slot = &self.slots[li];
+            if slot.entries[slot.mru].key == Some(key) {
+                Some(slot.mru)
+            } else if slot.entries[1 - slot.mru].key == Some(key) {
+                Some(1 - slot.mru)
+            } else {
+                None
+            }
+        };
+        match hit {
+            Some(i) => {
+                self.hits += 1;
+                self.slots[li].mru = i;
+            }
+            None => {
+                self.misses += 1;
+                let slot = &mut self.slots[li];
+                let i = 1 - slot.mru;
+                let e = &mut slot.entries[i];
+                e.wt.clear();
+                e.wt.resize(fan_in * fan_out, 0.0);
+                e.w_in.clear();
+                e.w_in.resize(fan_in * fan_out, false);
+                gemm::quantize_weights_wt(w, sw, qn, qp, &mut e.wt, &mut e.w_in, fan_in, fan_out);
+                e.key = Some(key);
+                slot.mru = i;
+            }
+        }
+        self.peek(li)
+    }
+
+    /// The most-recently ensured entry for `li`, without re-hashing the
+    /// weights.  Valid only when the caller knows the weights are
+    /// unchanged since the matching [`ensure`](WeightCache::ensure) —
+    /// e.g. the backward half of one forward/backward pass, which would
+    /// otherwise fingerprint every weight tensor a second time.
+    pub fn peek(&self, li: usize) -> (&[f32], &[bool]) {
+        let slot = &self.slots[li];
+        let e = &slot.entries[slot.mru];
+        (&e.wt, &e.w_in)
+    }
+}
+
+/// Memo of featurizer outputs keyed by the input batch's content
+/// fingerprint (+ element count).
+///
+/// `Dataset::batch` is deterministic per (seed, split, index, batch), so
+/// the fingerprint identifies the batch; repeated train steps and eval
+/// loops over the same batch skip the O(batch · features · pixels) Gabor
+/// correlation entirely.  FIFO eviction at `cap`; entries are tiny
+/// (batch × n_features f32s).
+pub struct FeatCache {
+    entries: VecDeque<(u64, usize, Vec<f32>)>,
+    cap: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl FeatCache {
+    pub fn new(cap: usize) -> FeatCache {
+        FeatCache {
+            entries: VecDeque::new(),
+            cap: cap.max(1),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Index of the cached entry for `(fingerprint, input length)`, if
+    /// present; bumps the hit/miss counters.
+    pub fn find(&mut self, fp: u64, len: usize) -> Option<usize> {
+        let pos = self
+            .entries
+            .iter()
+            .position(|(f, l, _)| *f == fp && *l == len);
+        if pos.is_some() {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        pos
+    }
+
+    /// Insert a freshly computed feature batch (evicting the oldest entry
+    /// at capacity) and return its index.
+    pub fn insert(&mut self, fp: u64, len: usize, feats: Vec<f32>) -> usize {
+        if self.entries.len() >= self.cap {
+            self.entries.pop_front();
+        }
+        self.entries.push_back((fp, len, feats));
+        self.entries.len() - 1
+    }
+
+    /// The cached feature slice at `idx` (valid until the next insert).
+    pub fn feats(&self, idx: usize) -> &[f32] {
+        &self.entries[idx].2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_sensitive_to_content_and_length() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![1.0f32, 2.0, 3.0 + 1e-7];
+        let c = vec![1.0f32, 2.0];
+        assert_eq!(fingerprint_f32(&a), fingerprint_f32(&a));
+        assert_ne!(fingerprint_f32(&a), fingerprint_f32(&b));
+        assert_ne!(fingerprint_f32(&a), fingerprint_f32(&c));
+        // -0.0 and 0.0 have different bit patterns — distinct on purpose
+        // (the cache keys raw content, not numeric equality).
+        assert_ne!(fingerprint_f32(&[0.0]), fingerprint_f32(&[-0.0]));
+    }
+
+    #[test]
+    fn weight_cache_hits_and_invalidates() {
+        let mut wc = WeightCache::new(1);
+        let w = vec![0.1f32, -0.2, 0.3, 0.05];
+        let (wt1, _) = wc.ensure(0, 4, 0.1, &w, 2, 2, -8.0, 7.0);
+        let wt1 = wt1.to_vec();
+        assert_eq!(wc.misses, 1);
+        let (wt2, _) = wc.ensure(0, 4, 0.1, &w, 2, 2, -8.0, 7.0);
+        assert_eq!(wt1, wt2);
+        assert_eq!(wc.hits, 1);
+        // Changed weights → miss → fresh codes.
+        let w2 = vec![0.4f32, -0.2, 0.3, 0.05];
+        let (wt3, _) = wc.ensure(0, 4, 0.1, &w2, 2, 2, -8.0, 7.0);
+        assert_ne!(wt1, wt3);
+        assert_eq!(wc.misses, 2);
+        // Changed bits → miss even with identical weights.
+        wc.ensure(0, 2, 0.1, &w2, 2, 2, -2.0, 1.0);
+        assert_eq!(wc.misses, 3);
+    }
+
+    #[test]
+    fn weight_cache_two_way_keeps_base_resident() {
+        // The vHv access pattern: base / perturbed / base must cost two
+        // quantizations, not three, and peek must see the last ensure.
+        let mut wc = WeightCache::new(1);
+        let base = vec![0.1f32, -0.2, 0.3, 0.05];
+        let pert = vec![0.11f32, -0.19, 0.31, 0.06];
+        wc.ensure(0, 4, 0.1, &base, 2, 2, -8.0, 7.0); // miss
+        wc.ensure(0, 4, 0.1, &pert, 2, 2, -8.0, 7.0); // miss, other way
+        let (wt_base, _) = wc.ensure(0, 4, 0.1, &base, 2, 2, -8.0, 7.0); // hit
+        assert_eq!(wt_base[0], 0.1);
+        assert_eq!(wc.hits, 1);
+        assert_eq!(wc.misses, 2);
+        let (wt_peek, _) = wc.peek(0);
+        assert_eq!(wt_peek[0], 0.1);
+    }
+
+    #[test]
+    fn feat_cache_fifo_eviction() {
+        let mut fc = FeatCache::new(2);
+        assert!(fc.find(1, 3).is_none());
+        let i1 = fc.insert(1, 3, vec![1.0; 3]);
+        assert_eq!(fc.feats(i1), &[1.0; 3][..]);
+        fc.insert(2, 3, vec![2.0; 3]);
+        fc.insert(3, 3, vec![3.0; 3]); // evicts fp=1
+        assert!(fc.find(1, 3).is_none());
+        let hit = fc.find(3, 3).unwrap();
+        assert_eq!(fc.feats(hit), &[3.0; 3][..]);
+        assert_eq!(fc.hits, 1);
+    }
+}

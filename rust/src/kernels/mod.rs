@@ -1,0 +1,81 @@
+//! Kernel core for the hermetic sim executor: blocked GEMM-style
+//! forward/backward tiles, preallocated workspaces, and the memoization
+//! layer that keeps the hot path from recomputing invariants.
+//!
+//! PR 1 made [`crate::backend::SimBackend`] the substrate every
+//! experiment and test runs on, but its compute was scalar nested loops
+//! that allocated a fresh buffer chain per call, re-fake-quantized every
+//! weight on every forward, and re-featurized every image on every step.
+//! This module is the dedicated home for that compute:
+//!
+//! * [`gemm`] — the tile kernels (forward GEMM over transposed quantized
+//!   weights, clipped-STE backward, softmax CE, Gabor featurizer), each
+//!   documenting the exact f32 accumulation order it preserves.  The
+//!   order contract makes every optimization here *bit-invisible*:
+//!   results are identical to the reference loops, only faster.
+//! * [`cache`] — content-fingerprint memos for LSQ weight codes (per
+//!   `(layer, bits, step, weights)`) and Gabor-energy feature batches
+//!   (deterministic [`crate::data::Dataset::batch`] streams make content
+//!   identity equal batch identity).
+//! * [`Workspace`] / [`GradWs`] — reusable scratch for activations,
+//!   masks, and gradients, so steady-state `train_step`/`eval_step`
+//!   execute with no per-call buffer churn beyond the output tensors
+//!   the [`crate::backend::Backend`] contract requires.
+//!
+//! The parallel ALPS/HAWQ sweeps ([`crate::methods`]) rely on the same
+//! determinism: per-worker backends with independent caches produce bit
+//! identical gains to a single sequential backend.
+
+pub mod cache;
+pub mod gemm;
+
+pub use cache::{fingerprint_f32, FeatCache, WeightCache};
+
+/// Per-layer forward buffers, reused across calls; the backward pass
+/// reads them in place (no clone chain between forward and backward).
+#[derive(Default)]
+pub struct LayerWs {
+    /// Pre-activations `[batch * fan_out]`.
+    pub z: Vec<f32>,
+    /// Layer output activations `[batch * fan_out]` (logits for the head).
+    pub out: Vec<f32>,
+    /// Activation-below-clamp STE mask; empty for the head layer.
+    pub act_in: Vec<bool>,
+}
+
+/// Reusable scratch for one forward/backward sweep.
+#[derive(Default)]
+pub struct Workspace {
+    /// One [`LayerWs`] per layer, grown on first use.
+    pub fwd: Vec<LayerWs>,
+    /// Running output-side gradient (starts as dlogits).
+    pub d: Vec<f32>,
+    /// Input-side gradient of the current layer.
+    pub d_in: Vec<f32>,
+    /// Gradient at the pre-activation (after the STE mask).
+    pub dbr: Vec<f32>,
+    /// Featurizer grayscale scratch.
+    pub gray: Vec<f32>,
+}
+
+/// Per-layer gradient buffers (reused; two live instances let the
+/// finite-difference vHv probe hold both endpoints without copies).
+#[derive(Default)]
+pub struct GradWs {
+    /// `dw[layer]` in parameter layout `[fan_in * fan_out]`.
+    pub dw: Vec<Vec<f32>>,
+    /// `db[layer]`, `[fan_out]`.
+    pub db: Vec<Vec<f32>>,
+}
+
+impl GradWs {
+    /// Grow to `n_layers` slots (idempotent).
+    pub fn ensure(&mut self, n_layers: usize) {
+        while self.dw.len() < n_layers {
+            self.dw.push(Vec::new());
+        }
+        while self.db.len() < n_layers {
+            self.db.push(Vec::new());
+        }
+    }
+}

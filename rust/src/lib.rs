@@ -30,6 +30,9 @@
 //!   seeded-RNG weights, honors per-layer [`quant::BitsConfig`]
 //!   quantization in forward/backward, and makes the full EAGL/ALPS
 //!   pipeline runnable and testable with zero external build steps.
+//!   All of its compute routes through the [`kernels`] subsystem:
+//!   blocked GEMM tiles with preallocated scratch plus quantized-weight
+//!   and featurizer caches, bit-identical to the reference math.
 //! * `backend::PjrtBackend` (`--features pjrt`) — the AOT path: loads
 //!   HLO-text artifacts produced by the Python build (`make artifacts`)
 //!   and executes them through a PJRT CPU client.  Requires the vendored
@@ -52,6 +55,7 @@ pub mod eagl;
 pub mod error;
 pub mod graph;
 pub mod jsonio;
+pub mod kernels;
 pub mod knapsack;
 pub mod logging;
 pub mod methods;

@@ -67,6 +67,9 @@ fn coordinator(args: &Args) -> mpq::Result<Coordinator<Box<dyn Backend>>> {
     co.mcfg.alps_steps = args.usize("alps-steps", co.mcfg.alps_steps)?;
     co.mcfg.hawq_samples = args.usize("hawq-samples", co.mcfg.hawq_samples)?;
     co.mcfg.hawq_batches = args.usize("hawq-batches", co.mcfg.hawq_batches)?;
+    // Sweep parallelism: --workers wins, else MPQ_WORKERS, else available
+    // parallelism (resolved in default_workers, already set on co).
+    co.workers = args.usize("workers", co.workers)?.max(1);
     Ok(co)
 }
 
@@ -109,9 +112,11 @@ backends: --backend sim|pjrt|auto (default auto).  sim = hermetic pure-Rust
           pjrt = AOT artifact runtime (needs `make artifacts` + a build
           with --features pjrt).  auto prefers pjrt when available.
 common flags: --data-seed, --base-steps, --ft-steps, --eval-batches,
-              --alps-steps, --hawq-samples, --hawq-batches
+              --alps-steps, --hawq-samples, --hawq-batches,
+              --workers N (parallel ALPS/HAWQ gain estimation; default:
+              available parallelism; results bit-identical at any N)
 env: MPQ_ARTIFACTS (artifacts dir), MPQ_RESULTS (results root),
-     MPQ_LOG (debug|info|warn|error)
+     MPQ_LOG (debug|info|warn|error), MPQ_WORKERS (default for --workers)
 ";
 
 fn cmd_info(args: &Args) -> mpq::Result<()> {

@@ -11,12 +11,13 @@
 use std::time::Instant;
 
 use crate::ckpt::Checkpoint;
+use crate::coordinator::job_pool;
 use crate::data::Dataset;
 use crate::eagl;
 use crate::graph::Graph;
 use crate::knapsack::{self, Selection};
 use crate::quant::{self, BitsConfig};
-use crate::backend::{Backend, Task, TrainState};
+use crate::backend::{Backend, BackendFactory, Task, TrainState};
 use crate::train::{finetune, TrainConfig};
 
 /// The selection methods under evaluation.
@@ -124,17 +125,45 @@ pub fn estimate_gains<B: Backend>(
 ) -> crate::Result<GainEstimate> {
     crate::ensure!(kind.is_gain_based(), "{} has no gains", kind.name());
     let t0 = Instant::now();
-    let per_layer = match kind {
-        MethodKind::Eagl => eagl::checkpoint_entropies(graph, ckpt4, cfg.b_hi)?,
-        MethodKind::Alps => alps_gains(rt, graph, ckpt4, data, cfg)?,
-        MethodKind::HawqV3 => hawq_gains(rt, graph, ckpt4, data, cfg)?,
-        MethodKind::Uniform => vec![1.0; graph.layers.len()],
+    let per_layer = match dataless_gains(kind, graph, ckpt4, cfg) {
+        Some(r) => r?,
+        None => match kind {
+            MethodKind::Alps => alps_gains(rt, graph, ckpt4, data, cfg)?,
+            MethodKind::HawqV3 => hawq_gains(rt, graph, ckpt4, data, cfg)?,
+            _ => unreachable!(),
+        },
+    };
+    finish_estimate(kind, per_layer, graph, t0)
+}
+
+/// Gains for the methods that never touch a backend (EAGL's
+/// checkpoint-only entropy is the paper's whole point); `None` for the
+/// data-driven methods (ALPS/HAWQ).  Shared by the sequential and
+/// parallel estimators so the arms cannot drift apart.
+fn dataless_gains(
+    kind: MethodKind,
+    graph: &Graph,
+    ckpt4: &Checkpoint,
+    cfg: &MethodConfig,
+) -> Option<crate::Result<Vec<f64>>> {
+    Some(match kind {
+        MethodKind::Eagl => eagl::checkpoint_entropies(graph, ckpt4, cfg.b_hi),
+        MethodKind::Uniform => Ok(vec![1.0; graph.layers.len()]),
         MethodKind::Oracle => cfg
             .oracle_gains
             .clone()
-            .ok_or_else(|| crate::err!("oracle gains not provided"))?,
-        _ => unreachable!(),
-    };
+            .ok_or_else(|| crate::err!("oracle gains not provided")),
+        _ => return None,
+    })
+}
+
+/// Validate and package a gain vector (shared wrapper tail).
+fn finish_estimate(
+    kind: MethodKind,
+    per_layer: Vec<f64>,
+    graph: &Graph,
+    t0: Instant,
+) -> crate::Result<GainEstimate> {
     crate::ensure!(
         per_layer.len() == graph.layers.len(),
         "gain vector length {} != layers {}",
@@ -148,9 +177,93 @@ pub fn estimate_gains<B: Backend>(
     })
 }
 
-/// ALPS (Algorithm 1): drop each selectable group to `b_lo`, fine-tune
-/// briefly, and use the *training* metric as the gain signal —
+/// Parallel variant of [`estimate_gains`]: ALPS per-group probes and
+/// HAWQ Hutchinson draws are independent jobs, so they fan out over
+/// [`job_pool`] with one factory-opened backend per worker.  The result
+/// is **bit-identical** to the sequential path for any `workers` value:
+/// each job is deterministic and backend-instance-independent, jobs are
+/// fixed by the item list (not by scheduling), and the reductions run on
+/// the pool's input-ordered results — asserted in
+/// `rust/tests/kernel_cache_parallel.rs`.
+///
+/// `task` selects the ALPS signal (loss for segmentation, metric
+/// otherwise) without opening an extra backend just to read a manifest.
+#[allow(clippy::too_many_arguments)]
+pub fn estimate_gains_parallel<F: BackendFactory>(
+    kind: MethodKind,
+    factory: &F,
+    task: Task,
+    graph: &Graph,
+    ckpt4: &Checkpoint,
+    data: &Dataset,
+    cfg: &MethodConfig,
+    workers: usize,
+) -> crate::Result<GainEstimate> {
+    crate::ensure!(kind.is_gain_based(), "{} has no gains", kind.name());
+    let t0 = Instant::now();
+    let per_layer = match dataless_gains(kind, graph, ckpt4, cfg) {
+        Some(r) => r?,
+        None => match kind {
+            MethodKind::Alps => {
+                alps_gains_parallel(factory, task, graph, ckpt4, data, cfg, workers)?
+            }
+            MethodKind::HawqV3 => hawq_gains_parallel(factory, graph, ckpt4, data, cfg, workers)?,
+            _ => unreachable!(),
+        },
+    };
+    finish_estimate(kind, per_layer, graph, t0)
+}
+
+/// One ALPS probe (Algorithm 1, one group): drop group `g` to `b_lo`,
+/// fine-tune briefly from `ckpt4`, return the train signal.  Fully
+/// determined by its arguments — safe to run on any backend instance.
+fn alps_probe<B: Backend>(
+    rt: &mut B,
+    graph: &Graph,
+    ckpt4: &Checkpoint,
+    data: &Dataset,
+    cfg: &MethodConfig,
+    g: usize,
+    use_loss: bool,
+) -> crate::Result<f64> {
+    // Mixed config: everything at b_hi except group g at b_lo.
+    let mut selected = vec![true; graph.groups.len()];
+    selected[g] = false;
+    let bits = BitsConfig::from_selection(graph, &selected, cfg.b_hi, cfg.b_lo);
+    let ck = prepare_mp_checkpoint(ckpt4, graph, &bits, cfg.b_hi)?;
+    let mut state = TrainState::new(ck);
+    let tcfg = TrainConfig {
+        steps: cfg.alps_steps,
+        lr0: cfg.alps_lr,
+        seed: 1,
+        ..TrainConfig::default()
+    };
+    let log = finetune(rt, &mut state, data, &bits.to_f32(), &tcfg)?;
+    let signal = if use_loss { log.mean_loss } else { log.mean_metric };
+    crate::info!(
+        "alps group {}/{} ({}) signal {:.4}",
+        g + 1,
+        graph.groups.len(),
+        graph.groups[g].name,
+        signal
+    );
+    Ok(signal)
+}
+
+/// Convert per-group ALPS signals to per-layer gains:
 /// `G = max(A) − A_l` for accuracy tasks, `G = Loss_l` for segmentation.
+fn alps_signals_to_gains(graph: &Graph, use_loss: bool, group_signal: &[f64]) -> Vec<f64> {
+    let gains_per_group: Vec<f64> = if use_loss {
+        group_signal.to_vec() // higher loss ⇒ more valuable at b_hi
+    } else {
+        let max_a = group_signal.iter().cloned().fold(f64::MIN, f64::max);
+        group_signal.iter().map(|a| max_a - a).collect()
+    };
+    spread_group_gains(graph, &gains_per_group)
+}
+
+/// ALPS (Algorithm 1), sequential: probe each selectable group on the
+/// caller's backend.
 fn alps_gains<B: Backend>(
     rt: &mut B,
     graph: &Graph,
@@ -161,63 +274,70 @@ fn alps_gains<B: Backend>(
     let use_loss = rt.manifest().task == Task::Seg;
     let mut group_signal = Vec::with_capacity(graph.groups.len());
     for g in 0..graph.groups.len() {
-        // Mixed config: everything at b_hi except group g at b_lo.
-        let mut selected = vec![true; graph.groups.len()];
-        selected[g] = false;
-        let bits = BitsConfig::from_selection(graph, &selected, cfg.b_hi, cfg.b_lo);
-        let ck = prepare_mp_checkpoint(ckpt4, graph, &bits, cfg.b_hi)?;
-        let mut state = TrainState::new(ck);
-        let tcfg = TrainConfig {
-            steps: cfg.alps_steps,
-            lr0: cfg.alps_lr,
-            seed: 1,
-            ..TrainConfig::default()
-        };
-        let log = finetune(rt, &mut state, data, &bits.to_f32(), &tcfg)?;
-        group_signal.push(if use_loss { log.mean_loss } else { log.mean_metric });
-        crate::info!(
-            "alps group {}/{} ({}) signal {:.4}",
-            g + 1,
-            graph.groups.len(),
-            graph.groups[g].name,
-            group_signal[g]
-        );
+        group_signal.push(alps_probe(rt, graph, ckpt4, data, cfg, g, use_loss)?);
     }
-    // Convert to gains.
-    let gains_per_group: Vec<f64> = if use_loss {
-        group_signal // higher loss ⇒ more valuable at b_hi
-    } else {
-        let max_a = group_signal.iter().cloned().fold(f64::MIN, f64::max);
-        group_signal.iter().map(|a| max_a - a).collect()
-    };
-    Ok(spread_group_gains(graph, &gains_per_group))
+    Ok(alps_signals_to_gains(graph, use_loss, &group_signal))
 }
 
-/// HAWQ-v3 (Appendix C): `mean-Hessian-diag × ||Q4(W) − Q2(W)||²` per layer.
-fn hawq_gains<B: Backend>(
-    rt: &mut B,
+/// ALPS fanned out over [`job_pool`]: one group probe per job, one
+/// backend per worker; bit-identical to [`alps_gains`].
+pub fn alps_gains_parallel<F: BackendFactory>(
+    factory: &F,
+    task: Task,
     graph: &Graph,
     ckpt4: &Checkpoint,
     data: &Dataset,
     cfg: &MethodConfig,
+    workers: usize,
 ) -> crate::Result<Vec<f64>> {
-    let bits = BitsConfig::uniform(graph, cfg.b_hi).to_f32();
+    let use_loss = task == Task::Seg;
+    let items: Vec<usize> = (0..graph.groups.len()).collect();
+    let group_signal = job_pool(
+        items,
+        workers,
+        || factory.open(),
+        |rt, g| alps_probe(rt, graph, ckpt4, data, cfg, g, use_loss),
+    )?;
+    Ok(alps_signals_to_gains(graph, use_loss, &group_signal))
+}
+
+/// One HAWQ Hutchinson draw: batch `bi`, sample `s`.  The batch is
+/// regenerated from the deterministic stream, so the draw is fully
+/// determined by its indices.
+fn hawq_probe<B: Backend>(
+    rt: &mut B,
+    ckpt4: &Checkpoint,
+    bits: &[f32],
+    data: &Dataset,
+    bi: usize,
+    s: usize,
+    samples: usize,
+) -> crate::Result<Vec<f32>> {
     let batch = rt.manifest().train_batch;
+    let (x, y) = data.batch(crate::data::Split::Train, 9_000 + bi as u64, batch);
+    let seed = (bi * samples + s) as i32;
+    rt.vhv_step(ckpt4, &x, &y, bits, seed)
+}
+
+/// Reduce ordered v·Hv draws into HAWQ-v3 gains:
+/// `mean-Hessian-diag × ||Q4(W) − Q2(W)||²` per layer (Appendix C).
+/// The f64 accumulation runs in draw order, so sequential and parallel
+/// paths sum identically.
+fn hawq_reduce(
+    graph: &Graph,
+    ckpt4: &Checkpoint,
+    cfg: &MethodConfig,
+    vhvs: &[Vec<f32>],
+) -> crate::Result<Vec<f64>> {
     let n_layers = graph.layers.len();
     let mut trace_sum = vec![0.0f64; n_layers];
-    let mut n_draws = 0usize;
-    for bi in 0..cfg.hawq_batches {
-        let (x, y) = data.batch(crate::data::Split::Train, 9_000 + bi as u64, batch);
-        for s in 0..cfg.hawq_samples {
-            let seed = (bi * cfg.hawq_samples + s) as i32;
-            let vhv = rt.vhv_step(ckpt4, &x, &y, &bits, seed)?;
-            crate::ensure!(vhv.len() == n_layers, "vhv arity");
-            for (acc, &v) in trace_sum.iter_mut().zip(&vhv) {
-                *acc += v as f64;
-            }
-            n_draws += 1;
+    for vhv in vhvs {
+        crate::ensure!(vhv.len() == n_layers, "vhv arity");
+        for (acc, &v) in trace_sum.iter_mut().zip(vhv) {
+            *acc += v as f64;
         }
     }
+    let n_draws = vhvs.len();
     let mut gains = vec![0.0f64; n_layers];
     for layer in &graph.layers {
         let base = layer.name.replace('.', "/");
@@ -231,6 +351,49 @@ fn hawq_gains<B: Backend>(
         gains[layer.qindex] = avg_diag.max(0.0) * pert;
     }
     Ok(gains)
+}
+
+/// HAWQ-v3, sequential: `hawq_batches × hawq_samples` draws on the
+/// caller's backend.
+fn hawq_gains<B: Backend>(
+    rt: &mut B,
+    graph: &Graph,
+    ckpt4: &Checkpoint,
+    data: &Dataset,
+    cfg: &MethodConfig,
+) -> crate::Result<Vec<f64>> {
+    let bits = BitsConfig::uniform(graph, cfg.b_hi).to_f32();
+    let mut vhvs = Vec::with_capacity(cfg.hawq_batches * cfg.hawq_samples);
+    for bi in 0..cfg.hawq_batches {
+        for s in 0..cfg.hawq_samples {
+            vhvs.push(hawq_probe(rt, ckpt4, &bits, data, bi, s, cfg.hawq_samples)?);
+        }
+    }
+    hawq_reduce(graph, ckpt4, cfg, &vhvs)
+}
+
+/// HAWQ fanned out over [`job_pool`]: one Hutchinson draw per job, one
+/// backend per worker; bit-identical to [`hawq_gains`] (draws are
+/// reduced in input order).
+pub fn hawq_gains_parallel<F: BackendFactory>(
+    factory: &F,
+    graph: &Graph,
+    ckpt4: &Checkpoint,
+    data: &Dataset,
+    cfg: &MethodConfig,
+    workers: usize,
+) -> crate::Result<Vec<f64>> {
+    let bits = BitsConfig::uniform(graph, cfg.b_hi).to_f32();
+    let items: Vec<(usize, usize)> = (0..cfg.hawq_batches)
+        .flat_map(|bi| (0..cfg.hawq_samples).map(move |s| (bi, s)))
+        .collect();
+    let vhvs = job_pool(
+        items,
+        workers,
+        || factory.open(),
+        |rt, (bi, s)| hawq_probe(rt, ckpt4, &bits, data, bi, s, cfg.hawq_samples),
+    )?;
+    hawq_reduce(graph, ckpt4, cfg, &vhvs)
 }
 
 /// Distribute per-group gains back to member layers so that group

@@ -32,7 +32,18 @@ pub fn weight_code(v: f32, s: f32, bits: u32) -> i32 {
 
 /// All codes of a weight tensor.
 pub fn weight_codes(w: &[f32], s: f32, bits: u32) -> Vec<i32> {
-    w.iter().map(|&v| weight_code(v, s, bits)).collect()
+    let mut out = Vec::new();
+    weight_codes_into(w, s, bits, &mut out);
+    out
+}
+
+/// Scratch-buffer variant of [`weight_codes`]: clears and refills `out`,
+/// so per-layer loops (e.g. [`crate::eagl::checkpoint_entropies`]) reuse
+/// one allocation.
+pub fn weight_codes_into(w: &[f32], s: f32, bits: u32, out: &mut Vec<i32>) {
+    out.clear();
+    out.reserve(w.len());
+    out.extend(w.iter().map(|&v| weight_code(v, s, bits)));
 }
 
 /// ||Q_b1(W) - Q_b2(W)||² — the perturbation factor in HAWQ-v3's gain

@@ -1,0 +1,164 @@
+//! Kernel-core invariants: the caches introduced in `rust/src/kernels/`
+//! must be semantically invisible (bit-identical results, invalidated
+//! exactly when their inputs change), and the `job_pool`-parallel
+//! ALPS/HAWQ gain estimation must equal the sequential path exactly at
+//! any worker count.  These are the acceptance assertions of the
+//! kernel-core overhaul — claimed speedups mean nothing if the fast
+//! path drifts from the reference math.
+
+use mpq::backend::{Backend, SimBackend, TrainState};
+use mpq::data::{Dataset, Split};
+use mpq::graph::Graph;
+use mpq::methods::{self, MethodConfig, MethodKind};
+use mpq::quant::BitsConfig;
+
+fn setup(model: &str) -> (SimBackend, Graph, Dataset) {
+    let be = SimBackend::new(model).unwrap();
+    let graph = Graph::from_manifest(&be.manifest().raw).unwrap();
+    let data = Dataset::for_task(be.manifest().task, 11);
+    (be, graph, data)
+}
+
+#[test]
+fn featurizer_cache_returns_bit_identical_evals() {
+    let (mut warm, graph, data) = setup("sim_tiny");
+    let mut cold = SimBackend::new("sim_tiny").unwrap();
+    let ck = warm.init_checkpoint().unwrap();
+    let bits = BitsConfig::uniform(&graph, 4).to_f32();
+    let (x, y) = data.batch(Split::Eval, 0, warm.manifest().eval_batch);
+    let (l1, c1) = warm.eval_step(&ck, &x, &y, &bits).unwrap();
+    // Second call on the warm backend takes the cache-hit path...
+    let (l2, c2) = warm.eval_step(&ck, &x, &y, &bits).unwrap();
+    // ...a cold backend takes the miss path; all three must agree bitwise.
+    let (l3, c3) = cold.eval_step(&ck, &x, &y, &bits).unwrap();
+    assert_eq!(l1, l2, "cache-hit eval loss drifted");
+    assert_eq!(c1.f32s(), c2.f32s());
+    assert_eq!(l1, l3, "warm and cold backends disagree");
+    assert_eq!(c1.f32s(), c3.f32s());
+    let (feat_hits, feat_misses, w_hits, _) = warm.cache_stats();
+    assert_eq!(feat_misses, 1, "second eval must hit the featurizer cache");
+    assert!(feat_hits >= 1);
+    assert!(w_hits >= 1, "frozen checkpoint must hit the weight cache");
+}
+
+#[test]
+fn weight_cache_invalidated_after_train_step() {
+    // Warm a backend's caches with an eval, run a train step (weights
+    // change), then compare its post-step eval against a fresh backend
+    // replaying the identical step: a stale cached weight code would
+    // surface as differing loss/correct-count bits.
+    let (mut warm, graph, data) = setup("sim_tiny");
+    let bits = BitsConfig::uniform(&graph, 4).to_f32();
+    let (xt, yt) = data.batch(Split::Train, 0, warm.manifest().train_batch);
+    let (xe, ye) = data.batch(Split::Eval, 0, warm.manifest().eval_batch);
+    let mut state = TrainState::new(warm.init_checkpoint().unwrap());
+    warm.eval_step(&state.params, &xe, &ye, &bits).unwrap(); // populate caches
+    warm.train_step(&mut state, &xt, &yt, 0.05, 1e-4, &bits).unwrap();
+    let (lw, cw) = warm.eval_step(&state.params, &xe, &ye, &bits).unwrap();
+
+    let mut fresh = SimBackend::new("sim_tiny").unwrap();
+    let mut state2 = TrainState::new(fresh.init_checkpoint().unwrap());
+    fresh.train_step(&mut state2, &xt, &yt, 0.05, 1e-4, &bits).unwrap();
+    let (lf, cf) = fresh.eval_step(&state2.params, &xe, &ye, &bits).unwrap();
+
+    for (a, b) in state.params.tensors.iter().zip(&state2.params.tensors) {
+        assert_eq!(a, b, "replayed train step must produce identical params");
+    }
+    assert_eq!(lw, lf, "stale weight-quant cache changed the eval loss");
+    assert_eq!(cw.f32s(), cf.f32s());
+}
+
+#[test]
+fn consecutive_train_steps_match_fresh_backend() {
+    // Several steps in a row: every step invalidates the previous step's
+    // cached weight codes; the whole trajectory must match a backend
+    // without any warm state.
+    let (mut warm, graph, data) = setup("sim_skew");
+    let bits = BitsConfig::uniform(&graph, 4).to_f32();
+    let mut s1 = TrainState::new(warm.init_checkpoint().unwrap());
+    let mut losses1 = Vec::new();
+    for i in 0..4 {
+        let (x, y) = data.batch(Split::Train, i, warm.manifest().train_batch);
+        let (l, _) = warm.train_step(&mut s1, &x, &y, 0.02, 1e-4, &bits).unwrap();
+        losses1.push(l);
+    }
+    let mut fresh = SimBackend::new("sim_skew").unwrap();
+    let mut s2 = TrainState::new(fresh.init_checkpoint().unwrap());
+    let mut losses2 = Vec::new();
+    for i in 0..4 {
+        let (x, y) = data.batch(Split::Train, i, fresh.manifest().train_batch);
+        let (l, _) = fresh.train_step(&mut s2, &x, &y, 0.02, 1e-4, &bits).unwrap();
+        losses2.push(l);
+    }
+    assert_eq!(losses1, losses2, "training trajectories diverged");
+    for (a, b) in s1.params.tensors.iter().zip(&s2.params.tensors) {
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn parallel_alps_gains_bit_identical_to_sequential() {
+    let (mut rt, graph, data) = setup("sim_tiny");
+    let ck = rt.init_checkpoint().unwrap();
+    let cfg = MethodConfig {
+        alps_steps: 3,
+        ..MethodConfig::default()
+    };
+    let task = rt.manifest().task;
+    let seq = methods::estimate_gains(MethodKind::Alps, &mut rt, &graph, &ck, &data, &cfg)
+        .unwrap();
+    let factory = || SimBackend::new("sim_tiny");
+    let p1 = methods::estimate_gains_parallel(
+        MethodKind::Alps, &factory, task, &graph, &ck, &data, &cfg, 1,
+    )
+    .unwrap();
+    let p4 = methods::estimate_gains_parallel(
+        MethodKind::Alps, &factory, task, &graph, &ck, &data, &cfg, 4,
+    )
+    .unwrap();
+    assert_eq!(seq.per_layer, p1.per_layer, "workers=1 drifted from sequential");
+    assert_eq!(seq.per_layer, p4.per_layer, "workers=4 drifted from sequential");
+}
+
+#[test]
+fn parallel_hawq_gains_bit_identical_to_sequential() {
+    let (mut rt, graph, data) = setup("sim_tiny");
+    let ck = rt.init_checkpoint().unwrap();
+    let cfg = MethodConfig {
+        hawq_samples: 2,
+        hawq_batches: 2,
+        ..MethodConfig::default()
+    };
+    let task = rt.manifest().task;
+    let seq = methods::estimate_gains(MethodKind::HawqV3, &mut rt, &graph, &ck, &data, &cfg)
+        .unwrap();
+    let factory = || SimBackend::new("sim_tiny");
+    let p1 = methods::estimate_gains_parallel(
+        MethodKind::HawqV3, &factory, task, &graph, &ck, &data, &cfg, 1,
+    )
+    .unwrap();
+    let p4 = methods::estimate_gains_parallel(
+        MethodKind::HawqV3, &factory, task, &graph, &ck, &data, &cfg, 4,
+    )
+    .unwrap();
+    assert_eq!(seq.per_layer, p1.per_layer, "workers=1 drifted from sequential");
+    assert_eq!(seq.per_layer, p4.per_layer, "workers=4 drifted from sequential");
+}
+
+#[test]
+fn vhv_probe_unaffected_by_cache_state() {
+    // The vHv finite-difference probe quantizes two weight sets per call
+    // (base + perturbed); per-layer cache slots must not leak between
+    // them or across calls.
+    let (mut warm, graph, data) = setup("sim_tiny");
+    let ck = warm.init_checkpoint().unwrap();
+    let bits = BitsConfig::uniform(&graph, 4).to_f32();
+    let (x, y) = data.batch(Split::Train, 5, warm.manifest().train_batch);
+    warm.eval_step(&ck, &x, &y, &bits).unwrap(); // warm the caches
+    let v_warm = warm.vhv_step(&ck, &x, &y, &bits, 7).unwrap();
+    let v_warm2 = warm.vhv_step(&ck, &x, &y, &bits, 7).unwrap();
+    let mut cold = SimBackend::new("sim_tiny").unwrap();
+    let v_cold = cold.vhv_step(&ck, &x, &y, &bits, 7).unwrap();
+    assert_eq!(v_warm, v_warm2);
+    assert_eq!(v_warm, v_cold);
+}

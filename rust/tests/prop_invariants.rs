@@ -188,8 +188,8 @@ fn entropy_invariant_under_code_permutation() {
         },
         |(a, b)| {
             close(
-                eagl::entropy_of_codes(a, 4),
-                eagl::entropy_of_codes(b, 4),
+                eagl::entropy_of_codes(a, 4).map_err(|e| e.to_string())?,
+                eagl::entropy_of_codes(b, 4).map_err(|e| e.to_string())?,
                 1e-12,
                 "permutation invariance",
             )
@@ -209,9 +209,9 @@ fn entropy_scale_invariance_of_weights() {
             (w, k)
         },
         |(w, k)| {
-            let h1 = eagl::layer_entropy(w, 0.1, 4);
+            let h1 = eagl::layer_entropy(w, 0.1, 4).map_err(|e| e.to_string())?;
             let scaled: Vec<f32> = w.iter().map(|&x| x * k).collect();
-            let h2 = eagl::layer_entropy(&scaled, 0.1 * k, 4);
+            let h2 = eagl::layer_entropy(&scaled, 0.1 * k, 4).map_err(|e| e.to_string())?;
             close(h1, h2, 1e-5, "scale invariance")
         },
     );
