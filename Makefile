@@ -7,13 +7,13 @@
 # crate, see rust/Cargo.toml) and skip themselves at runtime when
 # artifacts are absent.
 
-.PHONY: verify test build bench bench-quick verify-pjrt artifacts clean
+.PHONY: verify test build bench bench-quick exp-smoke verify-pjrt artifacts clean
 
-# Tier-1: must pass in a clean checkout.  bench-quick rides along as a
-# smoke step so the bench binary (and its BENCH_hotpath.json emission)
-# can never silently rot.
+# Tier-1: must pass in a clean checkout.  bench-quick and exp-smoke ride
+# along as smoke steps so the bench binary (and its BENCH_hotpath.json
+# emission) and the manifest-driven experiment path can never silently rot.
 verify:
-	cargo build --release && cargo test -q && $(MAKE) bench-quick
+	cargo build --release && cargo test -q && $(MAKE) bench-quick && $(MAKE) exp-smoke
 
 build:
 	cargo build --release
@@ -30,6 +30,22 @@ bench:
 bench-quick:
 	MPQ_BENCH_QUICK=1 MPQ_BENCH_OUT=$(CURDIR)/BENCH_hotpath.json cargo bench --bench perf_hotpath
 
+# End-to-end smoke of the manifest-driven experiment scheduler: run a
+# tiny two-model manifest on the hermetic sim backend into a scratch
+# results root, assert the registry row count, and re-invoke to assert
+# resume adds nothing (see rust/README.md §Experiments).
+EXP_SMOKE_DIR := $(CURDIR)/.exp-smoke-results
+exp-smoke:
+	rm -rf $(EXP_SMOKE_DIR)
+	MPQ_RESULTS=$(EXP_SMOKE_DIR) cargo run --release -q -p mpq -- exp --manifest rust/examples/manifests/smoke.json --workers 2
+	@rows=$$(cat $(EXP_SMOKE_DIR)/sim_tiny/sweep.jsonl $(EXP_SMOKE_DIR)/sim_skew/sweep.jsonl | wc -l); \
+	test "$$rows" -eq 8 || { echo "exp-smoke: expected 8 registry rows, got $$rows"; exit 1; }
+	MPQ_RESULTS=$(EXP_SMOKE_DIR) cargo run --release -q -p mpq -- exp --manifest rust/examples/manifests/smoke.json --workers 2
+	@rows=$$(cat $(EXP_SMOKE_DIR)/sim_tiny/sweep.jsonl $(EXP_SMOKE_DIR)/sim_skew/sweep.jsonl | wc -l); \
+	test "$$rows" -eq 8 || { echo "exp-smoke resume: expected 8 rows, got $$rows"; exit 1; }; \
+	echo "exp-smoke OK (8 rows, resume added none)"
+	rm -rf $(EXP_SMOKE_DIR)
+
 # Full verification including the PJRT/AOT path (requires the vendored
 # `xla` dependency to be uncommented in rust/Cargo.toml and, for the
 # tests to run rather than skip, `make artifacts`).
@@ -43,4 +59,4 @@ artifacts:
 
 clean:
 	cargo clean
-	rm -rf results
+	rm -rf results $(EXP_SMOKE_DIR)

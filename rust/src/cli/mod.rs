@@ -108,6 +108,64 @@ impl Args {
             None => Ok(default.to_vec()),
         }
     }
+
+    /// Reject flags a subcommand does not understand.  A misspelled flag
+    /// (`mpq run --budgets 0.7`) silently falling back to the default is
+    /// the worst failure mode a sweep CLI can have, so every subcommand
+    /// validates its flag set; the error names the offender, suggests the
+    /// closest valid flag, and lists what is accepted.
+    pub fn ensure_known_flags(&self, subcommand: &str, allowed: &[&str]) -> crate::Result<()> {
+        for key in self.flags.keys() {
+            if !allowed.contains(&key.as_str()) {
+                let hint = match closest(key, allowed.iter().copied()) {
+                    Some(s) => format!(" (did you mean --{s}?)"),
+                    None => String::new(),
+                };
+                crate::bail!(
+                    "unknown flag --{key} for '{subcommand}'{hint}\nvalid flags: {}",
+                    allowed
+                        .iter()
+                        .map(|f| format!("--{f}"))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The candidate closest to `needle` by edit distance, if any is close
+/// enough to plausibly be a typo (distance ≤ 2, or ≤ half the length for
+/// short names).  Shared by the flag validator and the experiment-manifest
+/// parser's unknown-key errors.
+pub fn closest<'a>(needle: &str, candidates: impl IntoIterator<Item = &'a str>) -> Option<&'a str> {
+    let mut best: Option<(usize, &str)> = None;
+    for cand in candidates {
+        let d = edit_distance(needle, cand);
+        if best.map(|(bd, _)| d < bd).unwrap_or(true) {
+            best = Some((d, cand));
+        }
+    }
+    let (d, cand) = best?;
+    let max_d = 2.max(needle.len() / 2).min(3);
+    (d <= max_d).then_some(cand)
+}
+
+/// Classic Levenshtein distance (two-row DP; flag names are short).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -153,5 +211,35 @@ mod tests {
     fn positional_args() {
         let a = parse("report file1 file2");
         assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_with_suggestion() {
+        let a = parse("run --budgets 0.7");
+        let err = a
+            .ensure_known_flags("run", &["budget", "seed", "method"])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--budgets"), "{err}");
+        assert!(err.contains("did you mean --budget?"), "{err}");
+        assert!(err.contains("valid flags"), "{err}");
+        // Known flags pass.
+        let a = parse("run --budget 0.7 --seed 3");
+        assert!(a.ensure_known_flags("run", &["budget", "seed", "method"]).is_ok());
+    }
+
+    #[test]
+    fn closest_suggests_only_plausible_typos() {
+        assert_eq!(closest("budgets", ["budget", "seed"]), Some("budget"));
+        assert_eq!(closest("modle", ["model", "method"]), Some("model"));
+        assert_eq!(closest("zzzzzz", ["budget", "seed"]), None);
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("budgets", "budget"), 1);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 }

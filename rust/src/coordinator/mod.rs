@@ -21,10 +21,13 @@
 //! its own backend (PJRT clients are not Sync). On the single-core CI
 //! testbed this degenerates to sequential execution without code changes.
 
+pub mod store;
+
 use std::collections::{BTreeMap, VecDeque};
-use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
+
+pub use store::ResultStore;
 
 use crate::backend::{self, Backend, BackendKind, SimBackend, TrainState};
 use crate::ckpt::Checkpoint;
@@ -132,22 +135,38 @@ impl RunRecord {
     }
 }
 
+/// Canonical results directory for a (backend kind, model): next to the
+/// artifacts dir for pjrt, under [`crate::results_root`] for sim (which
+/// walks up like `find_artifacts`, so sweeps resume from the same store
+/// regardless of the cwd).  Shared by [`Coordinator::open`] and the
+/// experiment registry so both always point at the same JSONL store.
+pub fn results_dir_for(kind: BackendKind, model: &str) -> PathBuf {
+    match kind {
+        BackendKind::Pjrt => crate::artifacts_dir()
+            .parent()
+            .unwrap_or(Path::new("."))
+            .join("results")
+            .join(model),
+        BackendKind::Sim => crate::results_root().join(model),
+    }
+}
+
 impl Coordinator<Box<dyn Backend>> {
     /// Open a coordinator on a boxed backend chosen by `kind` (the CLI
-    /// path).  Results go to `results/<model>` next to the artifacts dir
-    /// (pjrt) or under the cwd (sim).
+    /// path).  Results go to [`results_dir_for`]`(kind, model)`.
     pub fn open(kind: BackendKind, model: &str, data_seed: u64) -> crate::Result<Self> {
+        Self::open_at(kind, model, data_seed, results_dir_for(kind, model))
+    }
+
+    /// [`open`](Self::open) with an explicit results directory (the
+    /// experiment scheduler redirects whole sweeps into isolated roots).
+    pub fn open_at(
+        kind: BackendKind,
+        model: &str,
+        data_seed: u64,
+        results_dir: PathBuf,
+    ) -> crate::Result<Self> {
         let be = backend::open(kind, model)?;
-        let results_dir = match kind {
-            BackendKind::Pjrt => crate::artifacts_dir()
-                .parent()
-                .unwrap_or(Path::new("."))
-                .join("results")
-                .join(model),
-            // results_root() walks up like find_artifacts(), so sim sweeps
-            // resume from the same store regardless of the cwd.
-            BackendKind::Sim => crate::results_root().join(model),
-        };
         let mut co = Coordinator::with_backend(be, data_seed, results_dir)?;
         let model_s = model.to_string();
         co.spawner = Some(Box::new(move || backend::open(kind, &model_s)));
@@ -435,66 +454,6 @@ impl<B: Backend> Coordinator<B> {
 }
 
 // ---------------------------------------------------------------------------
-// Result store (append-only JSONL with resume)
-// ---------------------------------------------------------------------------
-
-pub struct ResultStore {
-    path: PathBuf,
-    records: Vec<RunRecord>,
-}
-
-impl ResultStore {
-    pub fn open(path: &Path) -> crate::Result<ResultStore> {
-        let mut records = Vec::new();
-        if path.exists() {
-            for line in std::fs::read_to_string(path)?.lines() {
-                if line.trim().is_empty() {
-                    continue;
-                }
-                if let Ok(v) = jsonio::parse(line) {
-                    if let Some(r) = RunRecord::from_json(&v) {
-                        records.push(r);
-                    }
-                }
-            }
-        }
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        Ok(ResultStore {
-            path: path.to_path_buf(),
-            records,
-        })
-    }
-
-    pub fn find(&self, model: &str, method: &str, frac: f64, seed: u64) -> Option<RunRecord> {
-        self.records
-            .iter()
-            .find(|r| {
-                r.model == model
-                    && r.method == method
-                    && (r.budget_frac - frac).abs() < 1e-9
-                    && r.seed == seed
-            })
-            .cloned()
-    }
-
-    pub fn append(&mut self, rec: &RunRecord) -> crate::Result<()> {
-        let mut f = std::fs::OpenOptions::new()
-            .create(true)
-            .append(true)
-            .open(&self.path)?;
-        writeln!(f, "{}", rec.to_json().to_string_compact())?;
-        self.records.push(rec.clone());
-        Ok(())
-    }
-
-    pub fn records(&self) -> &[RunRecord] {
-        &self.records
-    }
-}
-
-// ---------------------------------------------------------------------------
 // Job pool: fan independent jobs over worker threads
 // ---------------------------------------------------------------------------
 
@@ -580,22 +539,6 @@ mod tests {
             gbops: 1.25,
             wall_s: 2.0,
         }
-    }
-
-    #[test]
-    fn result_store_round_trip_and_resume() {
-        let dir = std::env::temp_dir().join("mpq_store_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join(format!("store_{}.jsonl", std::process::id()));
-        let _ = std::fs::remove_file(&path);
-        let mut store = ResultStore::open(&path).unwrap();
-        store.append(&sample_record()).unwrap();
-        // Reopen → record still there.
-        let store2 = ResultStore::open(&path).unwrap();
-        let found = store2.find("m", "eagl", 0.7, 3).unwrap();
-        assert!((found.metric - 0.91).abs() < 1e-12);
-        assert!(store2.find("m", "eagl", 0.7, 4).is_none());
-        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

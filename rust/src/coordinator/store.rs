@@ -1,0 +1,239 @@
+//! Append-only JSONL result store with exact-key resume.
+//!
+//! One store holds one model's run records (`results/<model>/sweep.jsonl`).
+//! Every record is keyed by (model, method, budget, seed); the store keeps
+//! a fingerprint index over the **exact f64 bits** of the budget so resume
+//! lookups are O(1) and never merge distinct budgets that happen to print
+//! the same (the old report path's `{:.4}` round-trip bug class).
+//!
+//! The multi-model registry in [`crate::experiment::registry`] routes
+//! records to per-model stores; the experiment scheduler appends in plan
+//! order so a killed sweep leaves a valid prefix to resume from.
+
+use std::collections::HashSet;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::jsonio;
+
+use super::RunRecord;
+
+/// Exact content key of a run record: (model, method, budget-bits, seed).
+/// `budget_frac` enters by `to_bits`, so two budgets collide only when
+/// they are the same f64 — values round-trip bit-exactly through the
+/// JSONL store (shortest-representation float formatting).
+pub fn record_key(model: &str, method: &str, budget_frac: f64, seed: u64) -> (String, String, u64, u64) {
+    (model.to_string(), method.to_string(), budget_frac.to_bits(), seed)
+}
+
+pub struct ResultStore {
+    path: PathBuf,
+    records: Vec<RunRecord>,
+    keys: HashSet<(String, String, u64, u64)>,
+}
+
+impl ResultStore {
+    pub fn open(path: &Path) -> crate::Result<ResultStore> {
+        let mut records = Vec::new();
+        if path.exists() {
+            let content = std::fs::read_to_string(path)?;
+            // Every append ends in '\n', so a newline-less tail can only
+            // be a record cut short by a mid-write kill.  Drop it and
+            // truncate the file to the last line boundary — otherwise the
+            // next append would concatenate onto the partial bytes and
+            // turn two records into one permanently unparseable line.
+            let valid_len = content.rfind('\n').map(|i| i + 1).unwrap_or(0);
+            if valid_len != content.len() {
+                let f = std::fs::OpenOptions::new().write(true).open(path)?;
+                f.set_len(valid_len as u64)?;
+            }
+            for line in content[..valid_len].lines() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                if let Ok(v) = jsonio::parse(line) {
+                    if let Some(r) = RunRecord::from_json(&v) {
+                        records.push(r);
+                    }
+                }
+            }
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let keys = records
+            .iter()
+            .map(|r| record_key(&r.model, &r.method, r.budget_frac, r.seed))
+            .collect();
+        Ok(ResultStore {
+            path: path.to_path_buf(),
+            records,
+            keys,
+        })
+    }
+
+    /// Exact-key membership (O(1); budget compared by f64 bits).
+    pub fn contains(&self, model: &str, method: &str, frac: f64, seed: u64) -> bool {
+        self.keys.contains(&record_key(model, method, frac, seed))
+    }
+
+    /// Exact-key fetch (budget compared by f64 bits) — the resume path's
+    /// lookup, consistent with [`contains`](Self::contains) so two
+    /// budgets closer than any print tolerance never alias.
+    pub fn find_exact(
+        &self,
+        model: &str,
+        method: &str,
+        frac: f64,
+        seed: u64,
+    ) -> Option<RunRecord> {
+        self.records
+            .iter()
+            .find(|r| {
+                r.model == model
+                    && r.method == method
+                    && r.budget_frac.to_bits() == frac.to_bits()
+                    && r.seed == seed
+            })
+            .cloned()
+    }
+
+    /// Find a record by key.  Kept tolerant (budget within 1e-9) for
+    /// callers holding budgets that went through lossy formatting; new
+    /// code should prefer [`find_exact`](Self::find_exact).
+    pub fn find(&self, model: &str, method: &str, frac: f64, seed: u64) -> Option<RunRecord> {
+        self.records
+            .iter()
+            .find(|r| {
+                r.model == model
+                    && r.method == method
+                    && (r.budget_frac - frac).abs() < 1e-9
+                    && r.seed == seed
+            })
+            .cloned()
+    }
+
+    pub fn append(&mut self, rec: &RunRecord) -> crate::Result<()> {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)?;
+        writeln!(f, "{}", rec.to_json().to_string_compact())?;
+        self.keys
+            .insert(record_key(&rec.model, &rec.method, rec.budget_frac, rec.seed));
+        self.records.push(rec.clone());
+        Ok(())
+    }
+
+    pub fn records(&self) -> &[RunRecord] {
+        &self.records
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_record() -> RunRecord {
+        RunRecord {
+            model: "m".into(),
+            method: "eagl".into(),
+            budget_frac: 0.7,
+            seed: 3,
+            metric: 0.91,
+            loss: 0.3,
+            groups_at_lo: 5,
+            compression: 9.1,
+            gbops: 1.25,
+            wall_s: 2.0,
+        }
+    }
+
+    #[test]
+    fn result_store_round_trip_and_resume() {
+        let dir = std::env::temp_dir().join("mpq_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("store_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut store = ResultStore::open(&path).unwrap();
+        store.append(&sample_record()).unwrap();
+        // Reopen → record still there.
+        let store2 = ResultStore::open(&path).unwrap();
+        let found = store2.find("m", "eagl", 0.7, 3).unwrap();
+        assert!((found.metric - 0.91).abs() < 1e-12);
+        assert!(store2.find("m", "eagl", 0.7, 4).is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn partial_trailing_line_is_truncated_and_append_stays_clean() {
+        let dir = std::env::temp_dir().join("mpq_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("store_partial_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        // One complete record followed by a mid-write kill's partial line
+        // (no trailing newline).
+        let full = sample_record().to_json().to_string_compact();
+        std::fs::write(&path, format!("{full}\n{{\"model\":\"sim_ti")).unwrap();
+        let mut store = ResultStore::open(&path).unwrap();
+        assert_eq!(store.records().len(), 1);
+        // The partial tail is gone from the file, so a new append starts
+        // on a clean line boundary instead of concatenating.
+        let mut rec2 = sample_record();
+        rec2.seed = 9;
+        store.append(&rec2).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            assert!(RunRecord::from_json(&jsonio::parse(line).unwrap()).is_some(), "{line}");
+        }
+        let store2 = ResultStore::open(&path).unwrap();
+        assert_eq!(store2.records().len(), 2);
+        assert!(store2.contains("m", "eagl", 0.7, 9));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn find_exact_never_aliases_nearby_budgets() {
+        let dir = std::env::temp_dir().join("mpq_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("store_exact_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut store = ResultStore::open(&path).unwrap();
+        let mut a = sample_record();
+        a.metric = 0.90;
+        store.append(&a).unwrap();
+        let mut b = sample_record();
+        b.budget_frac = 0.7 + 1e-13; // within find()'s 1e-9 tolerance
+        b.metric = 0.80;
+        store.append(&b).unwrap();
+        let hit = store.find_exact("m", "eagl", b.budget_frac, 3).unwrap();
+        assert!((hit.metric - 0.80).abs() < 1e-12, "must fetch the exact cell");
+        assert!(store.find_exact("m", "eagl", 0.7 + 2e-13, 3).is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn contains_uses_exact_budget_bits() {
+        let dir = std::env::temp_dir().join("mpq_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("store_bits_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut store = ResultStore::open(&path).unwrap();
+        store.append(&sample_record()).unwrap();
+        assert!(store.contains("m", "eagl", 0.7, 3));
+        assert!(!store.contains("m", "eagl", 0.7, 4));
+        // A budget that prints like 0.7000 but differs in bits is distinct.
+        let near = 0.7 + 1e-13;
+        assert_ne!(near.to_bits(), 0.7f64.to_bits());
+        assert!(!store.contains("m", "eagl", near, 3));
+        // After a JSONL round-trip the exact key still matches.
+        let store2 = ResultStore::open(&path).unwrap();
+        assert!(store2.contains("m", "eagl", 0.7, 3));
+        let _ = std::fs::remove_file(&path);
+    }
+}

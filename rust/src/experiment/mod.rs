@@ -1,0 +1,22 @@
+//! Declarative experiment layer: manifest → plan → resumable schedule.
+//!
+//! The paper's evaluation framework (Fig. 1) is a matrix — models ×
+//! methods × budgets × seeds.  This subsystem expresses that matrix as a
+//! versioned JSON manifest ([`spec`]), expands it deterministically into
+//! content-addressed run keys ([`plan`]), dedups them against the
+//! per-model JSONL registry ([`registry`]) and fans the remaining runs out
+//! over worker-owned backends ([`schedule`]), bit-identical to sequential
+//! execution at any worker count.
+//!
+//! `mpq exp --manifest m.json` is the primary CLI entry point; `mpq run`
+//! and `mpq sweep` are thin wrappers that synthesize a one-model spec.
+
+pub mod plan;
+pub mod registry;
+pub mod schedule;
+pub mod spec;
+
+pub use plan::{expand, Plan, RunKey};
+pub use registry::Registry;
+pub use schedule::{execute, ExecOptions, ExecOutcome};
+pub use spec::{ExperimentSpec, ModelSpec, Overrides, RunParams, MANIFEST_VERSION};

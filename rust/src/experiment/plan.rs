@@ -1,0 +1,209 @@
+//! Deterministic plan expansion: a manifest's matrix becomes an ordered
+//! list of content-addressed [`RunKey`]s.
+//!
+//! The order is model-major (model → method → budget → seed), exactly the
+//! order the manifest declares each axis, so the same spec always expands
+//! to the same run list — and therefore the same JSONL append order at any
+//! worker count.  [`Plan::split_pending`] dedups the expansion against the
+//! result registry so a killed sweep resumes by skipping completed keys.
+
+use std::collections::HashSet;
+
+use crate::coordinator::RunRecord;
+use crate::methods::MethodKind;
+
+use super::registry::Registry;
+use super::spec::ExperimentSpec;
+
+/// Identity of one experiment cell.  `fingerprint()` content-addresses it
+/// over the model name, method name, the budget's exact f64 bits, and the
+/// seed — two keys collide only if every field is identical.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunKey {
+    pub model: String,
+    pub method: MethodKind,
+    pub budget_frac: f64,
+    pub seed: u64,
+}
+
+impl RunKey {
+    /// FNV-1a (64-bit) over the canonical field encoding.
+    pub fn fingerprint(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        eat(self.model.as_bytes());
+        eat(&[0]);
+        eat(self.method.name().as_bytes());
+        eat(&[0]);
+        eat(&self.budget_frac.to_bits().to_le_bytes());
+        eat(&self.seed.to_le_bytes());
+        h
+    }
+
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.fingerprint())
+    }
+
+    /// One-line human form for progress output.
+    pub fn label(&self) -> String {
+        format!(
+            "{} {} b={:.2} s={}",
+            self.model,
+            self.method.name(),
+            self.budget_frac,
+            self.seed
+        )
+    }
+}
+
+/// The expanded, ordered run list of one spec.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub runs: Vec<RunKey>,
+}
+
+/// Expand a spec's matrix in declaration order (deterministic).
+///
+/// Duplicate cells collapse to one run (first occurrence wins).  Parsed
+/// manifests reject duplicate axis values outright, but the CLI wrappers
+/// synthesize specs from free-form flags (`mpq sweep --budgets 0.9,0.9`)
+/// — without the dedup those would fine-tune the same cell twice and
+/// append two identical rows.
+pub fn expand(spec: &ExperimentSpec) -> Plan {
+    let mut seen: HashSet<(String, &'static str, u64, u64)> = HashSet::new();
+    let mut runs = Vec::with_capacity(spec.n_cells());
+    for model in &spec.models {
+        for &method in &spec.methods {
+            for &budget_frac in &spec.budgets {
+                for &seed in &spec.seeds {
+                    let cell =
+                        (model.name.clone(), method.name(), budget_frac.to_bits(), seed);
+                    if !seen.insert(cell) {
+                        continue;
+                    }
+                    runs.push(RunKey {
+                        model: model.name.clone(),
+                        method,
+                        budget_frac,
+                        seed,
+                    });
+                }
+            }
+        }
+    }
+    Plan { runs }
+}
+
+impl Plan {
+    /// Split the plan against a registry: `(pending, completed)`, both
+    /// carrying the run's plan index so results can be merged back into
+    /// plan order after the pending set executes.
+    pub fn split_pending(
+        &self,
+        registry: &Registry,
+    ) -> (Vec<(usize, RunKey)>, Vec<(usize, RunRecord)>) {
+        let mut pending = Vec::new();
+        let mut completed = Vec::new();
+        for (i, key) in self.runs.iter().enumerate() {
+            match registry.find(key) {
+                Some(rec) => completed.push((i, rec)),
+                None => pending.push((i, key.clone())),
+            }
+        }
+        (pending, completed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonio;
+
+    fn spec() -> ExperimentSpec {
+        ExperimentSpec::from_json(
+            &jsonio::parse(
+                r#"{
+                "version": 1,
+                "models": ["sim_tiny", "sim_skew"],
+                "methods": ["eagl", "uniform"],
+                "budgets": [0.9, 0.7],
+                "seeds": 2
+            }"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn expansion_is_deterministic_and_model_major() {
+        let s = spec();
+        let a = expand(&s);
+        let b = expand(&s);
+        assert_eq!(a.runs.len(), 2 * 2 * 2 * 2);
+        assert_eq!(a.runs, b.runs);
+        let fp_a: Vec<u64> = a.runs.iter().map(RunKey::fingerprint).collect();
+        let fp_b: Vec<u64> = b.runs.iter().map(RunKey::fingerprint).collect();
+        assert_eq!(fp_a, fp_b);
+        // Model-major: first half is all sim_tiny, in method→budget→seed order.
+        assert!(a.runs[..8].iter().all(|r| r.model == "sim_tiny"));
+        assert_eq!(a.runs[0].seed, 0);
+        assert_eq!(a.runs[1].seed, 1);
+        assert_eq!(a.runs[0].budget_frac, 0.9);
+        assert_eq!(a.runs[2].budget_frac, 0.7);
+        assert_eq!(a.runs[4].method, MethodKind::Uniform);
+    }
+
+    #[test]
+    fn duplicate_cells_collapse_to_one_run() {
+        // Synthesized specs (CLI wrappers) skip manifest validation, so
+        // `mpq sweep --budgets 0.9,0.9 --methods eagl,eagl` reaches
+        // expansion with duplicate axis values.
+        let s = ExperimentSpec::synthesized(
+            "dup",
+            None,
+            7,
+            "sim_tiny",
+            vec![MethodKind::Eagl, MethodKind::Eagl],
+            vec![0.9, 0.9, 0.7],
+            vec![0, 0],
+            Default::default(),
+        );
+        let p = expand(&s);
+        assert_eq!(p.runs.len(), 2, "{:?}", p.runs);
+        assert_eq!(p.runs[0].budget_frac, 0.9);
+        assert_eq!(p.runs[1].budget_frac, 0.7);
+    }
+
+    #[test]
+    fn fingerprints_are_distinct_per_field() {
+        let base = RunKey {
+            model: "m".into(),
+            method: MethodKind::Eagl,
+            budget_frac: 0.7,
+            seed: 0,
+        };
+        let mut others = vec![base.clone(); 4];
+        others[0].model = "n".into();
+        others[1].method = MethodKind::Alps;
+        others[2].budget_frac = 0.7 + 1e-13; // same to 4 decimals, different bits
+        others[3].seed = 1;
+        for o in &others {
+            assert_ne!(o.fingerprint(), base.fingerprint(), "{o:?}");
+        }
+        // All 16 keys of a small matrix are unique.
+        let plan = expand(&spec());
+        let mut fps: Vec<u64> = plan.runs.iter().map(RunKey::fingerprint).collect();
+        fps.sort_unstable();
+        fps.dedup();
+        assert_eq!(fps.len(), plan.runs.len());
+        assert_eq!(base.hex().len(), 16);
+    }
+}

@@ -1,0 +1,138 @@
+//! Multi-model result registry: one [`ResultStore`] per model, addressed
+//! by [`RunKey`].
+//!
+//! The registry reuses the per-model `sweep.jsonl` layout the single-model
+//! CLI always wrote (`<results>/<model>/sweep.jsonl`), so `mpq exp`
+//! resumes sweeps started by `mpq sweep` and vice versa — there is exactly
+//! one store per model, whatever entry point filled it.
+
+use std::path::PathBuf;
+
+use crate::coordinator::{ResultStore, RunRecord};
+
+use super::plan::RunKey;
+
+pub struct Registry {
+    /// (model, store) in spec order; the store for model `m` lives at the
+    /// path given at open time (canonically `results_dir_for(kind, m)`).
+    stores: Vec<(String, ResultStore)>,
+}
+
+impl Registry {
+    /// Open one store per (model, store path).  Missing files are fine —
+    /// they open empty and are created on first append.
+    pub fn open(stores: Vec<(String, PathBuf)>) -> crate::Result<Registry> {
+        let mut out = Vec::with_capacity(stores.len());
+        for (model, path) in stores {
+            crate::ensure!(
+                !out.iter().any(|(m, _): &(String, ResultStore)| *m == model),
+                "registry: duplicate model \"{model}\""
+            );
+            out.push((model, ResultStore::open(&path)?));
+        }
+        Ok(Registry { stores: out })
+    }
+
+    fn store(&self, model: &str) -> Option<&ResultStore> {
+        self.stores.iter().find(|(m, _)| m == model).map(|(_, s)| s)
+    }
+
+    /// Exact-key membership (budget compared by f64 bits).
+    pub fn contains(&self, key: &RunKey) -> bool {
+        self.store(&key.model)
+            .map(|s| s.contains(&key.model, key.method.name(), key.budget_frac, key.seed))
+            .unwrap_or(false)
+    }
+
+    pub fn find(&self, key: &RunKey) -> Option<RunRecord> {
+        self.store(&key.model)?
+            .find_exact(&key.model, key.method.name(), key.budget_frac, key.seed)
+    }
+
+    /// Append a record to its model's store.
+    pub fn append(&mut self, rec: &RunRecord) -> crate::Result<()> {
+        let store = self
+            .stores
+            .iter_mut()
+            .find(|(m, _)| *m == rec.model)
+            .map(|(_, s)| s)
+            .ok_or_else(|| crate::err!("registry: no store for model \"{}\"", rec.model))?;
+        store.append(rec)
+    }
+
+    /// Records of one model (empty slice when the model is unknown).
+    pub fn records(&self, model: &str) -> &[RunRecord] {
+        self.store(model).map(|s| s.records()).unwrap_or(&[])
+    }
+
+    /// Models in registry (spec) order.
+    pub fn models(&self) -> impl Iterator<Item = &str> + '_ {
+        self.stores.iter().map(|(m, _)| m.as_str())
+    }
+
+    /// Total rows across all stores.
+    pub fn len(&self) -> usize {
+        self.stores.iter().map(|(_, s)| s.records().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::methods::MethodKind;
+
+    fn rec(model: &str, seed: u64) -> RunRecord {
+        RunRecord {
+            model: model.into(),
+            method: "eagl".into(),
+            budget_frac: 0.7,
+            seed,
+            metric: 0.9,
+            loss: 0.1,
+            groups_at_lo: 1,
+            compression: 8.0,
+            gbops: 1.0,
+            wall_s: 0.0,
+        }
+    }
+
+    fn key(model: &str, seed: u64) -> RunKey {
+        RunKey {
+            model: model.into(),
+            method: MethodKind::Eagl,
+            budget_frac: 0.7,
+            seed,
+        }
+    }
+
+    #[test]
+    fn routes_by_model_and_reopens() {
+        let dir = std::env::temp_dir().join(format!("mpq_registry_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let paths = vec![
+            ("a".to_string(), dir.join("a/sweep.jsonl")),
+            ("b".to_string(), dir.join("b/sweep.jsonl")),
+        ];
+        let mut reg = Registry::open(paths.clone()).unwrap();
+        assert!(reg.is_empty());
+        reg.append(&rec("a", 0)).unwrap();
+        reg.append(&rec("b", 1)).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert!(reg.contains(&key("a", 0)));
+        assert!(!reg.contains(&key("a", 1)));
+        assert!(reg.contains(&key("b", 1)));
+        assert_eq!(reg.records("a").len(), 1);
+        // Unknown model: no store, append errors, lookups are empty.
+        assert!(reg.append(&rec("zzz", 0)).is_err());
+        assert!(!reg.contains(&key("zzz", 0)));
+        // Reopen resumes both stores from disk.
+        let reg2 = Registry::open(paths).unwrap();
+        assert_eq!(reg2.len(), 2);
+        assert_eq!(reg2.find(&key("b", 1)).unwrap().seed, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,270 @@
+//! Resumable multi-model scheduler: fan whole experiment runs (checkpoint
+//! transform + LSQ fine-tune + eval) out over [`job_pool`] with one
+//! backend per worker.
+//!
+//! Execution has two phases:
+//!
+//! 1. **Prepare** (sequential over models): train-or-load the base
+//!    checkpoint and materialize every gain file a model's pending runs
+//!    need.  Gains themselves fan out internally (ALPS probes / HAWQ
+//!    draws, PR 2), so the sequential outer loop wastes nothing — and it
+//!    guarantees the run phase only ever *reads* the on-disk caches, so
+//!    concurrent workers never race on checkpoint or gain files.
+//! 2. **Run** (parallel): every pending [`RunKey`] is an independent job.
+//!    Each worker lazily opens one coordinator (and thus one backend) per
+//!    model it encounters and executes `run_one`.
+//!
+//! **Determinism.** Records are appended to the registry in *plan order*
+//! through a reorder buffer, not in completion order: a worker that
+//! finishes run 7 before run 5 parks it until 5 and 6 have flushed.  Every
+//! run is bit-deterministic given the (shared, read-only) caches, so the
+//! resulting JSONL bytes are identical at any worker count; persisted
+//! records carry `wall_s = 0` (wall time is scheduling noise — it is
+//! reported on the live progress line instead).  A killed sweep leaves a
+//! valid plan-order prefix on disk and resumes by skipping completed keys.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::backend::{self, Backend, BackendKind};
+use crate::coordinator::{self, job_pool, Coordinator, RunRecord};
+
+use super::plan::{self, RunKey};
+use super::registry::Registry;
+use super::spec::ExperimentSpec;
+
+/// How to execute a spec.
+pub struct ExecOptions {
+    /// Run-level fan-out (and the default gain-estimation fan-out of the
+    /// prepare phase).  Results are bit-identical at any value.
+    pub workers: usize,
+    /// Append to the per-model registry and skip keys already present
+    /// (resume).  `false` = ephemeral execution (`mpq run`): nothing is
+    /// read from or written to the store.
+    pub persist: bool,
+    /// Redirect all results (stores, checkpoints, gain caches) under
+    /// `<root>/<model>` instead of the canonical per-backend location —
+    /// used by tests and hermetic smoke runs.
+    pub results_root: Option<PathBuf>,
+    /// Print the live per-run progress line.
+    pub progress: bool,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions {
+            workers: coordinator::default_workers(),
+            persist: true,
+            results_root: None,
+            progress: true,
+        }
+    }
+}
+
+/// What an execution did.
+pub struct ExecOutcome {
+    /// One record per plan cell, in plan order (resumed + newly run).
+    pub records: Vec<RunRecord>,
+    /// Newly executed runs.
+    pub executed: usize,
+    /// Runs skipped because the registry already had their key.
+    pub skipped: usize,
+    /// Total wall time of the whole execution.
+    pub wall_s: f64,
+}
+
+/// Resolved per-model execution context.
+struct ModelCtx {
+    kind: BackendKind,
+    results_dir: PathBuf,
+}
+
+fn model_ctx(spec: &ExperimentSpec, opts: &ExecOptions, model: &str) -> crate::Result<ModelCtx> {
+    let kind = backend::resolve(spec.backend.as_deref(), model)?;
+    let results_dir = match &opts.results_root {
+        Some(root) => root.join(model),
+        None => coordinator::results_dir_for(kind, model),
+    };
+    Ok(ModelCtx { kind, results_dir })
+}
+
+fn open_coordinator(
+    spec: &ExperimentSpec,
+    ctx: &ModelCtx,
+    model: &str,
+) -> crate::Result<Coordinator<Box<dyn Backend>>> {
+    let mut co =
+        Coordinator::open_at(ctx.kind, model, spec.data_seed, ctx.results_dir.clone())?;
+    spec.params_for(model).apply(&mut co);
+    Ok(co)
+}
+
+/// Append completed runs to the registry in pending order (= plan order
+/// restricted to not-yet-stored keys), buffering out-of-order
+/// completions.  On a fresh sweep pending order *is* plan order, so the
+/// JSONL bytes are identical at any worker count; anything still parked
+/// when the process dies simply re-runs on resume — the store never
+/// holds a gap.
+struct Flusher<'a> {
+    registry: &'a mut Registry,
+    /// Next position in the pending sequence to flush.
+    next: usize,
+    parked: BTreeMap<usize, RunRecord>,
+}
+
+impl Flusher<'_> {
+    fn complete(&mut self, pos: usize, mut rec: RunRecord) -> crate::Result<()> {
+        // Wall time varies per schedule; the store must not (bit-identity
+        // across worker counts).  It lives on the progress line instead.
+        rec.wall_s = 0.0;
+        self.parked.insert(pos, rec);
+        while let Some(rec) = self.parked.remove(&self.next) {
+            self.registry.append(&rec)?;
+            self.next += 1;
+        }
+        Ok(())
+    }
+}
+
+/// Execute a spec end to end.  See the module docs for phase structure,
+/// resume, and determinism guarantees.
+pub fn execute(spec: &ExperimentSpec, opts: &ExecOptions) -> crate::Result<ExecOutcome> {
+    let t0 = Instant::now();
+    let the_plan = plan::expand(spec);
+
+    // Per-model contexts (backend kind + results dir), spec order.
+    let mut ctxs: BTreeMap<String, ModelCtx> = BTreeMap::new();
+    for m in &spec.models {
+        ctxs.insert(m.name.clone(), model_ctx(spec, opts, &m.name)?);
+    }
+
+    // Registry + resume split.
+    let mut registry = if opts.persist {
+        let stores = spec
+            .models
+            .iter()
+            .map(|m| {
+                let dir = &ctxs[&m.name].results_dir;
+                (m.name.clone(), dir.join("sweep.jsonl"))
+            })
+            .collect();
+        Some(Registry::open(stores)?)
+    } else {
+        None
+    };
+    let (pending, completed): (Vec<(usize, RunKey)>, Vec<(usize, RunRecord)>) = match &registry {
+        Some(reg) => the_plan.split_pending(reg),
+        None => (the_plan.runs.iter().cloned().enumerate().collect(), Vec::new()),
+    };
+    let (n_pending, n_completed) = (pending.len(), completed.len());
+    if opts.progress {
+        println!(
+            "exp \"{}\": {} cells over {} model(s) — {} pending, {} resumed, workers={}",
+            spec.name,
+            the_plan.runs.len(),
+            spec.models.len(),
+            n_pending,
+            n_completed,
+            opts.workers.max(1)
+        );
+    }
+
+    // Phase 1 — prepare: materialize base checkpoints + gain files for
+    // every model that still has pending work, so the run phase is
+    // read-only outside the registry.
+    for m in &spec.models {
+        let my_pending: Vec<&RunKey> = pending
+            .iter()
+            .map(|(_, k)| k)
+            .filter(|k| k.model == m.name)
+            .collect();
+        if my_pending.is_empty() {
+            continue;
+        }
+        let mut co = open_coordinator(spec, &ctxs[&m.name], &m.name)?;
+        // Gain estimation fans out internally; default its width to the
+        // scheduler's unless the manifest pinned one for this model.
+        if spec.params_for(&m.name).workers.is_none() {
+            co.workers = opts.workers.max(1);
+        }
+        co.base_checkpoint()?;
+        let mut kinds: Vec<_> = my_pending
+            .iter()
+            .map(|k| k.method)
+            .filter(|k| k.is_gain_based())
+            .collect();
+        kinds.sort_by_key(|k| k.name());
+        kinds.dedup();
+        for kind in kinds {
+            co.gains(kind)?;
+        }
+    }
+
+    // Phase 2 — run: fan pending cells over the pool; flush in pending
+    // order.  Items carry (pos in pending sequence, plan idx, key).
+    let flusher = registry.as_mut().map(|reg| {
+        Mutex::new(Flusher {
+            registry: reg,
+            next: 0,
+            parked: BTreeMap::new(),
+        })
+    });
+    let done = AtomicUsize::new(0);
+    let items: Vec<(usize, usize, RunKey)> = pending
+        .iter()
+        .enumerate()
+        .map(|(pos, (idx, key))| (pos, *idx, key.clone()))
+        .collect();
+    let new_records: Vec<(usize, RunRecord)> = if items.is_empty() {
+        Vec::new()
+    } else {
+        job_pool(
+            items,
+            opts.workers.max(1),
+            || Ok(BTreeMap::<String, Coordinator<Box<dyn Backend>>>::new()),
+            |cos, (pos, idx, key): (usize, usize, RunKey)| {
+                if !cos.contains_key(&key.model) {
+                    let mut co = open_coordinator(spec, &ctxs[&key.model], &key.model)?;
+                    co.workers = 1; // gains are cached; runs are the unit of parallelism
+                    cos.insert(key.model.clone(), co);
+                }
+                let co = cos.get_mut(&key.model).unwrap();
+                let rec = co.run_one(key.method, key.budget_frac, key.seed)?;
+                if opts.progress {
+                    let n = done.fetch_add(1, Ordering::SeqCst) + 1;
+                    println!(
+                        "[{n}/{n_pending}] {}  metric {:.4}  loss {:.4}  {:.1}s",
+                        key.label(),
+                        rec.metric,
+                        rec.loss,
+                        rec.wall_s
+                    );
+                }
+                if let Some(fl) = &flusher {
+                    fl.lock().unwrap().complete(pos, rec.clone())?;
+                }
+                Ok((idx, rec))
+            },
+        )?
+    };
+    drop(flusher);
+
+    // Merge resumed + new back into plan order.
+    let mut by_idx: BTreeMap<usize, RunRecord> = completed.into_iter().collect();
+    by_idx.extend(new_records);
+    crate::ensure!(
+        by_idx.len() == the_plan.runs.len(),
+        "scheduler lost runs: {} of {}",
+        by_idx.len(),
+        the_plan.runs.len()
+    );
+    Ok(ExecOutcome {
+        records: by_idx.into_values().collect(),
+        executed: n_pending,
+        skipped: n_completed,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}

@@ -1,0 +1,578 @@
+//! Versioned, declarative experiment manifests — the paper's evaluation
+//! matrix (Fig. 1: models × methods × budgets × seeds) as one JSON file.
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "name": "frontier",
+//!   "backend": "sim",
+//!   "data_seed": 7,
+//!   "models": [
+//!     {"name": "sim_tiny", "ft_steps": 80},
+//!     "sim_skew"
+//!   ],
+//!   "methods": ["eagl", "alps", "uniform"],
+//!   "budgets": [0.9, 0.7],
+//!   "seeds": 2,
+//!   "defaults": {"base_steps": 400, "ft_steps": 150, "eval_batches": 4}
+//! }
+//! ```
+//!
+//! Parsing is **fail-closed** (SNIPPETS §2 idiom): unknown keys are
+//! rejected with a typo suggestion, and every validation error names the
+//! offending key path (`models[1].ft_steps: expected a positive integer`).
+//! `models` entries are either bare names or objects carrying per-model
+//! overrides of the tuning knobs in [`Overrides`]; `seeds` is either an
+//! integer count (`2` → seeds `[0, 1]`) or an explicit list.
+
+use std::path::Path;
+
+use crate::backend::Backend;
+use crate::coordinator::Coordinator;
+use crate::jsonio::{self, Json};
+use crate::methods::MethodKind;
+
+/// The manifest version this build reads.
+pub const MANIFEST_VERSION: u32 = 1;
+
+/// Per-run tuning knobs a manifest may override, globally (`defaults`)
+/// or per model.  `None` = inherit the next layer down.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Overrides {
+    pub base_steps: Option<usize>,
+    pub ft_steps: Option<usize>,
+    pub eval_batches: Option<usize>,
+    pub alps_steps: Option<usize>,
+    pub hawq_samples: Option<usize>,
+    pub hawq_batches: Option<usize>,
+    pub workers: Option<usize>,
+}
+
+const OVERRIDE_KEYS: &[&str] = &[
+    "base_steps",
+    "ft_steps",
+    "eval_batches",
+    "alps_steps",
+    "hawq_samples",
+    "hawq_batches",
+    "workers",
+];
+
+impl Overrides {
+    fn from_obj(v: &Json, path: &str) -> crate::Result<Overrides> {
+        Ok(Overrides {
+            base_steps: opt_pos_usize(v, "base_steps", path)?,
+            ft_steps: opt_pos_usize(v, "ft_steps", path)?,
+            eval_batches: opt_pos_usize(v, "eval_batches", path)?,
+            alps_steps: opt_pos_usize(v, "alps_steps", path)?,
+            hawq_samples: opt_pos_usize(v, "hawq_samples", path)?,
+            hawq_batches: opt_pos_usize(v, "hawq_batches", path)?,
+            workers: opt_pos_usize(v, "workers", path)?,
+        })
+    }
+}
+
+/// Fully resolved run parameters for one model (defaults ← manifest
+/// `defaults` ← per-model overrides).  Base values mirror
+/// [`Coordinator::with_backend`]'s defaults so a manifest that overrides
+/// nothing behaves exactly like the bare CLI.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RunParams {
+    pub base_steps: usize,
+    pub ft_steps: usize,
+    pub eval_batches: usize,
+    pub alps_steps: usize,
+    pub hawq_samples: usize,
+    pub hawq_batches: usize,
+    /// Gain-estimation fan-out for this model's prepare phase; `None` =
+    /// the scheduler's worker count.
+    pub workers: Option<usize>,
+}
+
+impl RunParams {
+    pub fn standard() -> RunParams {
+        RunParams {
+            base_steps: 400,
+            ft_steps: 150,
+            eval_batches: 4,
+            alps_steps: 40,
+            hawq_samples: 4,
+            hawq_batches: 2,
+            workers: None,
+        }
+    }
+
+    fn overridden(&self, o: &Overrides) -> RunParams {
+        RunParams {
+            base_steps: o.base_steps.unwrap_or(self.base_steps),
+            ft_steps: o.ft_steps.unwrap_or(self.ft_steps),
+            eval_batches: o.eval_batches.unwrap_or(self.eval_batches),
+            alps_steps: o.alps_steps.unwrap_or(self.alps_steps),
+            hawq_samples: o.hawq_samples.unwrap_or(self.hawq_samples),
+            hawq_batches: o.hawq_batches.unwrap_or(self.hawq_batches),
+            workers: o.workers.or(self.workers),
+        }
+    }
+
+    /// Push the resolved knobs onto a coordinator.
+    pub fn apply<B: Backend>(&self, co: &mut Coordinator<B>) {
+        co.base_steps = self.base_steps;
+        co.ft_steps = self.ft_steps;
+        co.eval_batches = self.eval_batches;
+        co.mcfg.alps_steps = self.alps_steps;
+        co.mcfg.hawq_samples = self.hawq_samples;
+        co.mcfg.hawq_batches = self.hawq_batches;
+        if let Some(w) = self.workers {
+            co.workers = w.max(1);
+        }
+    }
+}
+
+/// One model row of the matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub overrides: Overrides,
+}
+
+/// A parsed, validated experiment manifest.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    pub name: String,
+    /// `sim` | `pjrt` | `auto` (`None` = auto); resolved per model at
+    /// schedule time.
+    pub backend: Option<String>,
+    pub data_seed: u64,
+    pub models: Vec<ModelSpec>,
+    pub methods: Vec<MethodKind>,
+    pub budgets: Vec<f64>,
+    pub seeds: Vec<u64>,
+    pub defaults: Overrides,
+}
+
+const TOP_KEYS: &[&str] = &[
+    "version", "name", "backend", "data_seed", "models", "methods", "budgets", "seeds", "defaults",
+];
+
+impl ExperimentSpec {
+    /// Parse + validate a manifest file; errors are prefixed with the path.
+    pub fn from_file(path: &Path) -> crate::Result<ExperimentSpec> {
+        let v = jsonio::parse_file(path)?;
+        Self::from_json(&v).map_err(|e| crate::err!("{}: {e}", path.display()))
+    }
+
+    /// Parse + validate a manifest value.  Every error names the offending
+    /// key (with a suggestion for likely typos) so a broken 50-cell sweep
+    /// fails in milliseconds, not after the first hour of fine-tuning.
+    pub fn from_json(v: &Json) -> crate::Result<ExperimentSpec> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| crate::err!("manifest: expected a JSON object at the top level"))?;
+        reject_unknown_keys(obj.keys().map(|k| k.as_str()), TOP_KEYS, "manifest")?;
+
+        let version = req_pos_usize(v, "version", "manifest")?;
+        crate::ensure!(
+            version == MANIFEST_VERSION as usize,
+            "manifest: version: this build reads manifest v{MANIFEST_VERSION}, got {version}"
+        );
+
+        let name = match v.get("name") {
+            None => "experiment".to_string(),
+            Some(n) => n
+                .as_str()
+                .ok_or_else(|| crate::err!("manifest: name: expected a string"))?
+                .to_string(),
+        };
+
+        let backend = match v.get("backend") {
+            None => None,
+            Some(b) => {
+                let s = b
+                    .as_str()
+                    .ok_or_else(|| crate::err!("manifest: backend: expected a string"))?;
+                crate::ensure!(
+                    matches!(s, "sim" | "pjrt" | "auto"),
+                    "manifest: backend: expected sim|pjrt|auto, got \"{s}\""
+                );
+                Some(s.to_string())
+            }
+        };
+
+        let data_seed = match v.get("data_seed") {
+            None => 7,
+            Some(s) => int_u64(s, "data_seed", "manifest")?,
+        };
+
+        let models = parse_models(v)?;
+        let methods = parse_methods(v)?;
+        let budgets = parse_budgets(v)?;
+        let seeds = parse_seeds(v)?;
+        let defaults = match v.get("defaults") {
+            None => Overrides::default(),
+            Some(d) => {
+                let dobj = d
+                    .as_obj()
+                    .ok_or_else(|| crate::err!("manifest: defaults: expected an object"))?;
+                reject_unknown_keys(dobj.keys().map(|k| k.as_str()), OVERRIDE_KEYS, "defaults")?;
+                Overrides::from_obj(d, "defaults")?
+            }
+        };
+
+        Ok(ExperimentSpec {
+            name,
+            backend,
+            data_seed,
+            models,
+            methods,
+            budgets,
+            seeds,
+            defaults,
+        })
+    }
+
+    /// Synthesize a spec for the thin CLI wrappers (`mpq run` / `mpq
+    /// sweep` are one-model manifests the user never has to write).
+    pub fn synthesized(
+        name: &str,
+        backend: Option<String>,
+        data_seed: u64,
+        model: &str,
+        methods: Vec<MethodKind>,
+        budgets: Vec<f64>,
+        seeds: Vec<u64>,
+        defaults: Overrides,
+    ) -> ExperimentSpec {
+        ExperimentSpec {
+            name: name.to_string(),
+            backend,
+            data_seed,
+            models: vec![ModelSpec {
+                name: model.to_string(),
+                overrides: Overrides::default(),
+            }],
+            methods,
+            budgets,
+            seeds,
+            defaults,
+        }
+    }
+
+    /// Resolved run parameters for one model of this spec.
+    pub fn params_for(&self, model: &str) -> RunParams {
+        let base = RunParams::standard().overridden(&self.defaults);
+        match self.models.iter().find(|m| m.name == model) {
+            Some(m) => base.overridden(&m.overrides),
+            None => base,
+        }
+    }
+
+    /// Matrix size (runs this spec describes).
+    pub fn n_cells(&self) -> usize {
+        self.models.len() * self.methods.len() * self.budgets.len() * self.seeds.len()
+    }
+}
+
+// -- field parsers -----------------------------------------------------------
+
+fn reject_unknown_keys<'a>(
+    keys: impl Iterator<Item = &'a str>,
+    allowed: &[&str],
+    path: &str,
+) -> crate::Result<()> {
+    for k in keys {
+        if !allowed.contains(&k) {
+            let hint = match crate::cli::closest(k, allowed.iter().copied()) {
+                Some(s) => format!(" (did you mean \"{s}\"?)"),
+                None => String::new(),
+            };
+            crate::bail!(
+                "{path}: unknown key \"{k}\"{hint}; allowed: {}",
+                allowed.join(", ")
+            );
+        }
+    }
+    Ok(())
+}
+
+/// A JSON number that is a non-negative integer, as u64.
+fn int_u64(v: &Json, key: &str, path: &str) -> crate::Result<u64> {
+    let n = v
+        .as_f64()
+        .ok_or_else(|| crate::err!("{path}: {key}: expected an integer"))?;
+    crate::ensure!(
+        n.fract() == 0.0 && n >= 0.0 && n <= u64::MAX as f64,
+        "{path}: {key}: expected a non-negative integer, got {n}"
+    );
+    Ok(n as u64)
+}
+
+fn req_pos_usize(v: &Json, key: &str, path: &str) -> crate::Result<usize> {
+    match v.get(key) {
+        None => crate::bail!("{path}: missing required key \"{key}\""),
+        Some(n) => pos_usize(n, key, path),
+    }
+}
+
+fn opt_pos_usize(v: &Json, key: &str, path: &str) -> crate::Result<Option<usize>> {
+    v.get(key).map(|n| pos_usize(n, key, path)).transpose()
+}
+
+fn pos_usize(n: &Json, key: &str, path: &str) -> crate::Result<usize> {
+    let n = int_u64(n, key, path)?;
+    crate::ensure!(n >= 1, "{path}: {key}: expected a positive integer, got 0");
+    Ok(n as usize)
+}
+
+fn parse_models(v: &Json) -> crate::Result<Vec<ModelSpec>> {
+    let arr = v
+        .get("models")
+        .ok_or_else(|| crate::err!("manifest: missing required key \"models\""))?
+        .as_arr()
+        .ok_or_else(|| crate::err!("manifest: models: expected an array"))?;
+    crate::ensure!(!arr.is_empty(), "manifest: models: must not be empty");
+    let model_keys: Vec<&str> = std::iter::once("name").chain(OVERRIDE_KEYS.iter().copied()).collect();
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, m) in arr.iter().enumerate() {
+        let path = format!("models[{i}]");
+        let spec = match m {
+            Json::Str(name) => ModelSpec {
+                name: name.clone(),
+                overrides: Overrides::default(),
+            },
+            Json::Obj(obj) => {
+                reject_unknown_keys(obj.keys().map(|k| k.as_str()), &model_keys, &path)?;
+                let name = m
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| crate::err!("{path}: missing required key \"name\""))?;
+                ModelSpec {
+                    name: name.to_string(),
+                    overrides: Overrides::from_obj(m, &path)?,
+                }
+            }
+            _ => crate::bail!("{path}: expected a model name string or an object"),
+        };
+        crate::ensure!(!spec.name.is_empty(), "{path}: name: must not be empty");
+        crate::ensure!(
+            !out.iter().any(|o: &ModelSpec| o.name == spec.name),
+            "{path}: duplicate model \"{}\"",
+            spec.name
+        );
+        out.push(spec);
+    }
+    Ok(out)
+}
+
+fn parse_methods(v: &Json) -> crate::Result<Vec<MethodKind>> {
+    let arr = v
+        .get("methods")
+        .ok_or_else(|| crate::err!("manifest: missing required key \"methods\""))?
+        .as_arr()
+        .ok_or_else(|| crate::err!("manifest: methods: expected an array"))?;
+    crate::ensure!(!arr.is_empty(), "manifest: methods: must not be empty");
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, m) in arr.iter().enumerate() {
+        let s = m
+            .as_str()
+            .ok_or_else(|| crate::err!("methods[{i}]: expected a method name string"))?;
+        let kind = MethodKind::parse(s).map_err(|e| crate::err!("methods[{i}]: {e}"))?;
+        crate::ensure!(
+            kind != MethodKind::Oracle,
+            "methods[{i}]: \"oracle\" needs externally supplied gains and cannot run from a manifest"
+        );
+        crate::ensure!(!out.contains(&kind), "methods[{i}]: duplicate method \"{}\"", kind.name());
+        out.push(kind);
+    }
+    Ok(out)
+}
+
+fn parse_budgets(v: &Json) -> crate::Result<Vec<f64>> {
+    let arr = v
+        .get("budgets")
+        .ok_or_else(|| crate::err!("manifest: missing required key \"budgets\""))?
+        .as_arr()
+        .ok_or_else(|| crate::err!("manifest: budgets: expected an array of fractions"))?;
+    crate::ensure!(!arr.is_empty(), "manifest: budgets: must not be empty");
+    let mut out: Vec<f64> = Vec::with_capacity(arr.len());
+    for (i, b) in arr.iter().enumerate() {
+        let f = b
+            .as_f64()
+            .ok_or_else(|| crate::err!("budgets[{i}]: expected a number"))?;
+        crate::ensure!(
+            f.is_finite() && f > 0.0 && f <= 1.0,
+            "budgets[{i}]: expected a fraction in (0, 1], got {f}"
+        );
+        crate::ensure!(
+            !out.iter().any(|o| o.to_bits() == f.to_bits()),
+            "budgets[{i}]: duplicate budget {f}"
+        );
+        out.push(f);
+    }
+    Ok(out)
+}
+
+fn parse_seeds(v: &Json) -> crate::Result<Vec<u64>> {
+    match v.get("seeds") {
+        None => crate::bail!("manifest: missing required key \"seeds\""),
+        // Integer count: `"seeds": 3` ⇒ seeds [0, 1, 2].
+        Some(n @ Json::Num(_)) => {
+            let count = int_u64(n, "seeds", "manifest")?;
+            crate::ensure!(
+                (1..=100_000).contains(&count),
+                "manifest: seeds: count must be in 1..=100000, got {count}"
+            );
+            Ok((0..count).collect())
+        }
+        Some(Json::Arr(arr)) => {
+            crate::ensure!(!arr.is_empty(), "manifest: seeds: must not be empty");
+            let mut out = Vec::with_capacity(arr.len());
+            for (i, s) in arr.iter().enumerate() {
+                let seed = int_u64(s, &format!("seeds[{i}]"), "manifest")
+                    .map_err(|_| crate::err!("seeds[{i}]: expected a non-negative integer"))?;
+                crate::ensure!(!out.contains(&seed), "seeds[{i}]: duplicate seed {seed}");
+                out.push(seed);
+            }
+            Ok(out)
+        }
+        Some(_) => crate::bail!("manifest: seeds: expected an integer count or an array of seeds"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> crate::Result<ExperimentSpec> {
+        ExperimentSpec::from_json(&jsonio::parse(text).unwrap())
+    }
+
+    const GOOD: &str = r#"{
+        "version": 1,
+        "name": "frontier",
+        "backend": "sim",
+        "models": [{"name": "sim_tiny", "ft_steps": 80}, "sim_skew"],
+        "methods": ["eagl", "alps", "uniform"],
+        "budgets": [0.9, 0.7],
+        "seeds": 2,
+        "defaults": {"base_steps": 100, "eval_batches": 2, "workers": 4}
+    }"#;
+
+    #[test]
+    fn parses_good_manifest() {
+        let spec = parse(GOOD).unwrap();
+        assert_eq!(spec.name, "frontier");
+        assert_eq!(spec.backend.as_deref(), Some("sim"));
+        assert_eq!(spec.models.len(), 2);
+        assert_eq!(spec.models[1].name, "sim_skew");
+        assert_eq!(spec.methods.len(), 3);
+        assert_eq!(spec.budgets, vec![0.9, 0.7]);
+        assert_eq!(spec.seeds, vec![0, 1]);
+        assert_eq!(spec.n_cells(), 2 * 3 * 2 * 2);
+    }
+
+    #[test]
+    fn params_layer_defaults_then_model_overrides() {
+        let spec = parse(GOOD).unwrap();
+        let tiny = spec.params_for("sim_tiny");
+        // From defaults:
+        assert_eq!(tiny.base_steps, 100);
+        assert_eq!(tiny.eval_batches, 2);
+        assert_eq!(tiny.workers, Some(4));
+        // Model override wins over the standard value:
+        assert_eq!(tiny.ft_steps, 80);
+        // sim_skew takes defaults + standard.
+        let skew = spec.params_for("sim_skew");
+        assert_eq!(skew.ft_steps, RunParams::standard().ft_steps);
+        assert_eq!(skew.base_steps, 100);
+    }
+
+    #[test]
+    fn explicit_seed_list() {
+        let spec = parse(
+            r#"{"version":1,"models":["m"],"methods":["eagl"],"budgets":[0.5],"seeds":[3,1,4]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.seeds, vec![3, 1, 4]);
+        assert_eq!(spec.data_seed, 7);
+        assert!(spec.backend.is_none());
+    }
+
+    /// Every broken manifest fails with an error naming the offending key.
+    #[test]
+    fn validation_errors_name_the_key() {
+        let cases: &[(&str, &str)] = &[
+            (r#"{"models":["m"],"methods":["eagl"],"budgets":[0.5],"seeds":1}"#, "version"),
+            (
+                r#"{"version":2,"models":["m"],"methods":["eagl"],"budgets":[0.5],"seeds":1}"#,
+                "version",
+            ),
+            (r#"{"version":1,"methods":["eagl"],"budgets":[0.5],"seeds":1}"#, "models"),
+            (
+                r#"{"version":1,"models":[],"methods":["eagl"],"budgets":[0.5],"seeds":1}"#,
+                "models",
+            ),
+            (
+                r#"{"version":1,"models":[{"ft_steps":3}],"methods":["eagl"],"budgets":[0.5],"seeds":1}"#,
+                "models[0]",
+            ),
+            (
+                r#"{"version":1,"models":[{"name":"m","ft_step":3}],"methods":["eagl"],"budgets":[0.5],"seeds":1}"#,
+                "ft_steps",
+            ),
+            (
+                r#"{"version":1,"models":["m","m"],"methods":["eagl"],"budgets":[0.5],"seeds":1}"#,
+                "models[1]",
+            ),
+            (
+                r#"{"version":1,"models":["m"],"methods":["bogus"],"budgets":[0.5],"seeds":1}"#,
+                "methods[0]",
+            ),
+            (
+                r#"{"version":1,"models":["m"],"methods":["oracle"],"budgets":[0.5],"seeds":1}"#,
+                "methods[0]",
+            ),
+            (
+                r#"{"version":1,"models":["m"],"methods":["eagl"],"budgets":[1.5],"seeds":1}"#,
+                "budgets[0]",
+            ),
+            (
+                r#"{"version":1,"models":["m"],"methods":["eagl"],"budgets":[0.5,0.5],"seeds":1}"#,
+                "budgets[1]",
+            ),
+            (
+                r#"{"version":1,"models":["m"],"methods":["eagl"],"budgets":[0.5],"seeds":0}"#,
+                "seeds",
+            ),
+            (
+                r#"{"version":1,"models":["m"],"methods":["eagl"],"budgets":[0.5],"seeds":[1,1]}"#,
+                "seeds[1]",
+            ),
+            (
+                r#"{"version":1,"models":["m"],"methods":["eagl"],"budgets":[0.5],"seeds":1,"defaults":{"ft_steps":0}}"#,
+                "ft_steps",
+            ),
+            (
+                r#"{"version":1,"models":["m"],"methods":["eagl"],"budgets":[0.5],"seeds":1,"budgetz":[1]}"#,
+                "budgetz",
+            ),
+            (
+                r#"{"version":1,"backend":"tpu","models":["m"],"methods":["eagl"],"budgets":[0.5],"seeds":1}"#,
+                "backend",
+            ),
+        ];
+        for (text, key) in cases {
+            let err = parse(text).unwrap_err().to_string();
+            assert!(err.contains(key), "expected '{key}' in error for {text}: {err}");
+        }
+    }
+
+    #[test]
+    fn unknown_top_level_key_suggests_fix() {
+        let err = parse(
+            r#"{"version":1,"models":["m"],"methods":["eagl"],"budgets":[0.5],"seeds":1,"budgest":[1]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("did you mean \"budgets\"?"), "{err}");
+    }
+}

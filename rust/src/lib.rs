@@ -17,6 +17,10 @@
 //!    ([`train`]) and report task metrics along the whole
 //!    accuracy–throughput frontier ([`coordinator`], [`report`]).
 //!
+//! Whole evaluation matrices (models × methods × budgets × seeds) are
+//! expressed as declarative JSON manifests and executed by the resumable
+//! multi-model scheduler in [`experiment`] (`mpq exp --manifest m.json`).
+//!
 //! ## Execution backends
 //!
 //! Every step that touches a network executes through the [`backend`]
@@ -53,6 +57,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eagl;
 pub mod error;
+pub mod experiment;
 pub mod graph;
 pub mod jsonio;
 pub mod kernels;

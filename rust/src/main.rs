@@ -2,6 +2,7 @@
 //! framework.
 //!
 //! ```text
+//! mpq exp        --manifest m.json [--workers N]   # the primary entry point
 //! mpq info       --model sim_skew
 //! mpq train-base --model sim_skew [--steps 400]
 //! mpq gains      --model sim_skew --method eagl|alps|hawq_v3
@@ -9,18 +10,28 @@
 //! mpq run        --model sim_skew --method eagl --budget 0.7 --seed 0
 //! mpq sweep      --model sim_skew --methods eagl,alps,hawq_v3,first_to_last
 //!                --budgets 0.95,0.9,...  --seeds 3
-//! mpq report     --model sim_skew
+//! mpq report     --model sim_skew | --models a,b | --manifest m.json
 //! mpq eagl       --model sim_skew [--ckpt path]   # offline metric (Fig. 2)
 //! ```
+//!
+//! `exp` executes a declarative experiment manifest (models × methods ×
+//! budgets × seeds) through the resumable multi-model scheduler; `run`
+//! and `sweep` are thin wrappers that synthesize a one-model manifest
+//! from their flags.  Every subcommand rejects flags it does not
+//! understand (a misspelled `--budgets` on `run` is an error, not a
+//! silent fallback to the default budget).
 //!
 //! Backend selection: `--backend sim|pjrt|auto` (default auto).  Auto uses
 //! the pjrt artifact runtime when `artifacts/` holds the model's manifest
 //! *and* the binary was built with `--features pjrt`; otherwise the
 //! hermetic pure-Rust sim backend (models `sim_tiny`, `sim_skew`).
 
+use std::path::Path;
+
 use mpq::backend::{self, Backend, BackendKind, Task};
 use mpq::cli::Args;
-use mpq::coordinator::{Coordinator, ResultStore};
+use mpq::coordinator::{self, Coordinator, ResultStore};
+use mpq::experiment::{self, ExecOptions, ExperimentSpec, Overrides};
 use mpq::methods::MethodKind;
 use mpq::quant::BitsConfig;
 use mpq::report;
@@ -37,6 +48,15 @@ fn metric_name(task: Task) -> &'static str {
         Task::Cls => "top-1 accuracy",
         Task::Seg => "mIoU",
         Task::Span => "F1",
+    }
+}
+
+/// Metric name for a model without keeping a backend open (falls back to
+/// a generic label when the backend cannot open, e.g. pjrt-less builds).
+fn metric_name_for(kind: BackendKind, model: &str) -> String {
+    match backend::open(kind, model) {
+        Ok(be) => metric_name(be.manifest().task).to_string(),
+        Err(_) => "metric".to_string(),
     }
 }
 
@@ -73,8 +93,48 @@ fn coordinator(args: &Args) -> mpq::Result<Coordinator<Box<dyn Backend>>> {
     Ok(co)
 }
 
+/// Tuning flags shared by the single-cell subcommands (for `exp` these
+/// live in the manifest instead).
+const COMMON_FLAGS: &[&str] = &[
+    "backend",
+    "model",
+    "data-seed",
+    "base-steps",
+    "ft-steps",
+    "eval-batches",
+    "alps-steps",
+    "hawq-samples",
+    "hawq-batches",
+    "workers",
+];
+
+/// Per-subcommand flag validation: every subcommand rejects unknown or
+/// misspelled flags with a suggestion instead of silently ignoring them.
+fn validate_flags(args: &Args) -> mpq::Result<()> {
+    let Some(sub) = args.subcommand.as_deref() else {
+        return Ok(());
+    };
+    let extra: &[&str] = match sub {
+        "info" | "train-base" => &[],
+        "gains" => &["method"],
+        "select" => &["method", "budget"],
+        "run" => &["method", "budget", "seed"],
+        "sweep" => &["methods", "budgets", "seeds"],
+        "report" => &["models", "manifest"],
+        "eagl" => &["ckpt"],
+        // Manifest-driven: tuning knobs belong in the manifest, so only
+        // the orchestration flags are accepted.
+        "exp" => return args.ensure_known_flags(sub, &["manifest", "workers", "backend"]),
+        _ => return Ok(()), // unknown subcommand → usage text below
+    };
+    let mut allowed: Vec<&str> = COMMON_FLAGS.to_vec();
+    allowed.extend_from_slice(extra);
+    args.ensure_known_flags(sub, &allowed)
+}
+
 fn run() -> mpq::Result<()> {
     let args = Args::from_env()?;
+    validate_flags(&args)?;
     match args.subcommand.as_deref() {
         Some("info") => cmd_info(&args),
         Some("train-base") => cmd_train_base(&args),
@@ -82,6 +142,7 @@ fn run() -> mpq::Result<()> {
         Some("select") => cmd_select(&args),
         Some("run") => cmd_run(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("exp") => cmd_exp(&args),
         Some("report") => cmd_report(&args),
         Some("eagl") => cmd_eagl(&args),
         other => {
@@ -98,13 +159,18 @@ const USAGE: &str = "\
 mpq — mixed-precision quantization framework (EAGL + ALPS, Bablani et al. 2023)
 
 subcommands:
+  exp         --manifest M.json [--workers N]   execute a declarative experiment
+              manifest (models x methods x budgets x seeds) with resume: cells
+              already in the per-model registry are skipped, and records are
+              bit-identical at any --workers value
   info        --model M                     manifest/graph/cost summary
   train-base  --model M [--base-steps N]    train + cache 4-bit base & 8-bit ref
   gains       --model M --method K          per-layer gain estimates + timing
   select      --model M --method K --budget F   knapsack selection at budget
   run         --model M --method K --budget F --seed S   one full experiment
   sweep       --model M --methods a,b,.. --budgets f,..  --seeds N   full sweep
-  report      --model M                     frontier table/plot/significance
+  report      --model M | --models a,b | --manifest M.json
+              frontier tables/plots/significance, aggregated across models
   eagl        --model M [--ckpt P]          offline EAGL metric (Fig. 2)
 
 backends: --backend sim|pjrt|auto (default auto).  sim = hermetic pure-Rust
@@ -113,8 +179,9 @@ backends: --backend sim|pjrt|auto (default auto).  sim = hermetic pure-Rust
           with --features pjrt).  auto prefers pjrt when available.
 common flags: --data-seed, --base-steps, --ft-steps, --eval-batches,
               --alps-steps, --hawq-samples, --hawq-batches,
-              --workers N (parallel ALPS/HAWQ gain estimation; default:
+              --workers N (parallel runs + gain estimation; default:
               available parallelism; results bit-identical at any N)
+unknown or misspelled flags are rejected per subcommand.
 env: MPQ_ARTIFACTS (artifacts dir), MPQ_RESULTS (results root),
      MPQ_LOG (debug|info|warn|error), MPQ_WORKERS (default for --workers)
 ";
@@ -207,20 +274,58 @@ fn cmd_select(args: &Args) -> mpq::Result<()> {
     Ok(())
 }
 
+/// `--base-steps` etc. as manifest-style overrides for the synthesized
+/// specs behind `run` and `sweep`.
+fn overrides_from_args(args: &Args) -> mpq::Result<Overrides> {
+    let opt = |key: &str| -> mpq::Result<Option<usize>> {
+        match args.opt_str(key) {
+            None => Ok(None),
+            Some(_) => args.usize(key, 0).map(Some),
+        }
+    };
+    Ok(Overrides {
+        base_steps: opt("base-steps")?,
+        ft_steps: opt("ft-steps")?,
+        eval_batches: opt("eval-batches")?,
+        alps_steps: opt("alps-steps")?,
+        hawq_samples: opt("hawq-samples")?,
+        hawq_batches: opt("hawq-batches")?,
+        workers: None, // --workers is the scheduler width, not a manifest knob
+    })
+}
+
+/// One full experiment — a thin wrapper over a synthesized one-cell
+/// manifest, executed without touching the result registry.
 fn cmd_run(args: &Args) -> mpq::Result<()> {
-    let mut co = coordinator(args)?;
-    let task = co.rt.manifest().task;
-    let kind = MethodKind::parse(&args.str("method", "eagl"))?;
+    let (kind, model) = resolve_target(args)?;
+    let method = MethodKind::parse(&args.str("method", "eagl"))?;
     let frac = args.f64("budget", 0.7)?;
     let seed = args.u64("seed", 0)?;
-    let rec = co.run_one(kind, frac, seed)?;
+    let spec = ExperimentSpec::synthesized(
+        "run",
+        args.opt_str("backend").map(String::from),
+        args.u64("data-seed", 7)?,
+        &model,
+        vec![method],
+        vec![frac],
+        vec![seed],
+        overrides_from_args(args)?,
+    );
+    let opts = ExecOptions {
+        workers: args.usize("workers", coordinator::default_workers())?.max(1),
+        persist: false,
+        results_root: None,
+        progress: false,
+    };
+    let outcome = experiment::execute(&spec, &opts)?;
+    let rec = &outcome.records[0];
     println!(
         "{} {} budget {:.0}% seed {}: {} = {:.4} (loss {:.4}) [{:.1}s]",
         rec.model,
         rec.method,
         frac * 100.0,
         seed,
-        metric_name(task),
+        metric_name_for(kind, &model),
         rec.metric,
         rec.loss,
         rec.wall_s
@@ -228,10 +333,11 @@ fn cmd_run(args: &Args) -> mpq::Result<()> {
     Ok(())
 }
 
+/// Budget × seed sweep — a thin wrapper over a synthesized one-model
+/// manifest, executed with registry persistence and resume.
 fn cmd_sweep(args: &Args) -> mpq::Result<()> {
-    let mut co = coordinator(args)?;
-    let task = co.rt.manifest().task;
-    let kinds: Vec<MethodKind> = args
+    let (kind, model) = resolve_target(args)?;
+    let methods: Vec<MethodKind> = args
         .list("methods", &["eagl", "alps", "hawq_v3", "uniform", "first_to_last"])
         .iter()
         .map(|s| MethodKind::parse(s))
@@ -240,35 +346,133 @@ fn cmd_sweep(args: &Args) -> mpq::Result<()> {
         "budgets",
         &[0.95, 0.90, 0.85, 0.80, 0.75, 0.70, 0.65, 0.60],
     )?;
-    let n_seeds = args.u64("seeds", 3)?;
-    let seeds: Vec<u64> = (0..n_seeds).collect();
-    let store_path = co.results_dir.join("sweep.jsonl");
-    let mut store = ResultStore::open(&store_path)?;
-    let records = co.sweep(&kinds, &budgets, &seeds, &mut store)?;
-    let cells = report::frontier(&records);
-    println!("{}", report::frontier_table(&cells, metric_name(task)));
+    let seeds: Vec<u64> = (0..args.u64("seeds", 3)?).collect();
+    mpq::ensure!(!seeds.is_empty(), "--seeds must be at least 1");
+    let spec = ExperimentSpec::synthesized(
+        "sweep",
+        args.opt_str("backend").map(String::from),
+        args.u64("data-seed", 7)?,
+        &model,
+        methods,
+        budgets,
+        seeds,
+        overrides_from_args(args)?,
+    );
+    let opts = ExecOptions {
+        workers: args.usize("workers", coordinator::default_workers())?.max(1),
+        ..ExecOptions::default()
+    };
+    let outcome = experiment::execute(&spec, &opts)?;
+    let cells = report::frontier(&outcome.records);
+    println!("{}", report::frontier_table(&cells, &metric_name_for(kind, &model)));
     Ok(())
 }
 
+/// Execute a declarative experiment manifest (the primary entry point).
+fn cmd_exp(args: &Args) -> mpq::Result<()> {
+    let path = args
+        .opt_str("manifest")
+        .ok_or_else(|| mpq::err!("exp requires --manifest <file.json> (see rust/examples/manifests/)"))?;
+    let mut spec = ExperimentSpec::from_file(Path::new(path))?;
+    if let Some(b) = args.opt_str("backend") {
+        spec.backend = Some(b.to_string());
+    }
+    let opts = ExecOptions {
+        workers: args.usize("workers", coordinator::default_workers())?.max(1),
+        ..ExecOptions::default()
+    };
+    let outcome = experiment::execute(&spec, &opts)?;
+    println!(
+        "\nexp \"{}\" done: {} run(s) executed, {} resumed, {:.1}s",
+        spec.name, outcome.executed, outcome.skipped, outcome.wall_s
+    );
+
+    // Per-model frontiers + the cross-model overview.
+    let mut per_model: Vec<(String, Vec<report::FrontierCell>)> = Vec::new();
+    for m in &spec.models {
+        let recs: Vec<_> = outcome
+            .records
+            .iter()
+            .filter(|r| r.model == m.name)
+            .cloned()
+            .collect();
+        let kind = backend::resolve(spec.backend.as_deref(), &m.name)?;
+        let cells = report::frontier(&recs);
+        println!(
+            "\n== {} ==\n{}",
+            m.name,
+            report::frontier_table(&cells, &metric_name_for(kind, &m.name))
+        );
+        per_model.push((m.name.clone(), cells));
+    }
+    if per_model.len() > 1 {
+        println!("{}", report::cross_model_table(&per_model));
+    }
+    Ok(())
+}
+
+/// Report over one or many models' registries: `--model M`, `--models
+/// a,b`, or `--manifest M.json` (which also supplies the backend).
 fn cmd_report(args: &Args) -> mpq::Result<()> {
-    let co = coordinator(args)?;
-    let store = ResultStore::open(&co.results_dir.join("sweep.jsonl"))?;
-    mpq::ensure!(!store.records().is_empty(), "no sweep results yet — run `mpq sweep`");
-    let cells = report::frontier(store.records());
-    let name = metric_name(co.rt.manifest().task);
-    println!("{}", report::frontier_table(&cells, name));
-    println!("{}", report::frontier_plot(&cells, 64, 18));
-    for pair in [("eagl", "hawq_v3"), ("alps", "hawq_v3"), ("eagl", "first_to_last")] {
-        let sig = report::significance(&cells, pair.0, pair.1);
-        if !sig.is_empty() {
-            println!("Wilcoxon rank-sum {} vs {}:", pair.0, pair.1);
-            for (b, p) in sig {
-                println!("  budget {:>4.0}%  p = {:.4}", b * 100.0, p);
+    let mut backend_req = args.opt_str("backend").map(String::from);
+    let models: Vec<String> = if let Some(path) = args.opt_str("manifest") {
+        let spec = ExperimentSpec::from_file(Path::new(path))?;
+        if backend_req.is_none() {
+            backend_req = spec.backend.clone();
+        }
+        spec.models.iter().map(|m| m.name.clone()).collect()
+    } else if args.opt_str("models").is_some() {
+        args.list("models", &[])
+    } else {
+        vec![resolve_target(args)?.1]
+    };
+
+    let mut per_model: Vec<(String, Vec<report::FrontierCell>)> = Vec::new();
+    for model in &models {
+        let kind = backend::resolve(backend_req.as_deref(), model)?;
+        let dir = coordinator::results_dir_for(kind, model);
+        let store = ResultStore::open(&dir.join("sweep.jsonl"))?;
+        if store.records().is_empty() {
+            println!("== {model} == (no results yet — run `mpq sweep` or `mpq exp`)");
+            continue;
+        }
+        let cells = report::frontier(store.records());
+        let name = metric_name_for(kind, model);
+        println!("== {model} ({name}) ==");
+        println!("{}", report::frontier_table(&cells, &name));
+        println!("{}", report::frontier_plot(&cells, 64, 18));
+        // Significance over every method pair actually present in the
+        // store (the hardcoded eagl/alps/hawq trio missed everything else).
+        for (a, b) in report::method_pairs(&cells) {
+            let sig = report::significance(&cells, &a, &b);
+            if !sig.is_empty() {
+                println!("Wilcoxon rank-sum {a} vs {b}:");
+                for (bud, p) in sig {
+                    println!("  budget {:>4.0}%  p = {:.4}", bud * 100.0, p);
+                }
             }
         }
+        report::write_csv(&cells, &dir.join("frontier.csv"))?;
+        println!("csv written to {}", dir.join("frontier.csv").display());
+        per_model.push((model.clone(), cells));
     }
-    report::write_csv(&cells, &co.results_dir.join("frontier.csv"))?;
-    println!("csv written to {}", co.results_dir.join("frontier.csv").display());
+    mpq::ensure!(
+        !per_model.is_empty(),
+        "no sweep results for {:?} — run `mpq sweep` or `mpq exp` first",
+        models
+    );
+    if per_model.len() > 1 {
+        println!("{}", report::cross_model_table(&per_model));
+        let out = coordinator::results_dir_for(
+            backend::resolve(backend_req.as_deref(), &models[0])?,
+            &models[0],
+        )
+        .parent()
+        .map(|p| p.join("frontier_all.csv"))
+        .unwrap_or_else(|| std::path::PathBuf::from("frontier_all.csv"));
+        report::write_csv_multi(&per_model, &out)?;
+        println!("cross-model csv written to {}", out.display());
+    }
     Ok(())
 }
 

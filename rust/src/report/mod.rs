@@ -19,25 +19,63 @@ pub struct FrontierCell {
     pub samples: Vec<f64>,
 }
 
+/// Total-order sortable key for an f64 (IEEE-754 bit flip): preserves
+/// numeric order including negatives, and distinct bit patterns stay
+/// distinct.  Frontier cells are grouped on this key so the exact budget
+/// survives — the old `format!("{:.4}")` → `parse()` round-trip both
+/// lost precision and merged budgets that only agreed to 4 decimals.
+fn f64_order_key(f: f64) -> u64 {
+    let b = f.to_bits();
+    if b & (1 << 63) != 0 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
+
 /// Aggregate raw run records into frontier cells.
 pub fn frontier(records: &[RunRecord]) -> Vec<FrontierCell> {
-    let mut cells: BTreeMap<(String, String), Vec<f64>> = BTreeMap::new();
+    let mut cells: BTreeMap<(String, u64), (f64, Vec<f64>)> = BTreeMap::new();
     for r in records {
         cells
-            .entry((r.method.clone(), format!("{:.4}", r.budget_frac)))
-            .or_default()
+            .entry((r.method.clone(), f64_order_key(r.budget_frac)))
+            .or_insert_with(|| (r.budget_frac, Vec::new()))
+            .1
             .push(r.metric);
     }
     let mut out = Vec::new();
-    for ((method, frac), samples) in cells {
+    for ((method, _), (budget_frac, samples)) in cells {
         out.push(FrontierCell {
             method,
-            budget_frac: frac.parse().unwrap(),
+            budget_frac,
             mean: stats::mean(&samples),
             std: stats::std_dev(&samples),
             n: samples.len(),
             samples,
         });
+    }
+    out
+}
+
+/// Sorted, deduplicated method names present in a cell set — the basis
+/// for deriving significance pairs from the data actually in the store.
+pub fn methods_in(cells: &[FrontierCell]) -> Vec<String> {
+    let mut methods: Vec<String> = cells.iter().map(|c| c.method.clone()).collect();
+    methods.sort();
+    methods.dedup();
+    methods
+}
+
+/// All unordered method pairs present in a cell set, for Wilcoxon
+/// comparisons (replaces the old hardcoded three pairs, which silently
+/// reported nothing for sweeps that ran other method sets).
+pub fn method_pairs(cells: &[FrontierCell]) -> Vec<(String, String)> {
+    let methods = methods_in(cells);
+    let mut out = Vec::new();
+    for i in 0..methods.len() {
+        for j in (i + 1)..methods.len() {
+            out.push((methods[i].clone(), methods[j].clone()));
+        }
     }
     out
 }
@@ -229,6 +267,60 @@ pub fn write_csv(cells: &[FrontierCell], path: &std::path::Path) -> crate::Resul
     Ok(())
 }
 
+/// Cross-model overview (the `mpq exp` / multi-model `mpq report`
+/// summary): for every (model, method), the cell count, budget range, and
+/// the best frontier point.
+pub fn cross_model_table(per_model: &[(String, Vec<FrontierCell>)]) -> String {
+    let mut s = format!(
+        "{:<12} {:<15} {:>6} {:>15} {:>12} {:>8}\n",
+        "model", "method", "cells", "budgets", "best mean", "at"
+    );
+    s += &format!("{}\n", "-".repeat(74));
+    for (model, cells) in per_model {
+        for method in methods_in(cells) {
+            let mine: Vec<&FrontierCell> = cells.iter().filter(|c| c.method == method).collect();
+            let lo = mine.iter().map(|c| c.budget_frac).fold(f64::INFINITY, f64::min);
+            let hi = mine.iter().map(|c| c.budget_frac).fold(f64::NEG_INFINITY, f64::max);
+            // total_cmp: a NaN mean (diverged fine-tune) must not panic
+            // the summary after an hours-long sweep already succeeded.
+            let best = mine
+                .iter()
+                .max_by(|a, b| a.mean.total_cmp(&b.mean))
+                .unwrap();
+            s += &format!(
+                "{:<12} {:<15} {:>6} {:>6.0}%–{:>4.0}%{:>4} {:>12.4} {:>7.0}%\n",
+                model,
+                method,
+                mine.len(),
+                lo * 100.0,
+                hi * 100.0,
+                "",
+                best.mean,
+                best.budget_frac * 100.0
+            );
+        }
+    }
+    s
+}
+
+/// Multi-model frontier CSV (`model` as the leading column).
+pub fn write_csv_multi(
+    per_model: &[(String, Vec<FrontierCell>)],
+    path: &std::path::Path,
+) -> crate::Result<()> {
+    let mut s = String::from("model,method,budget_frac,mean,std,n\n");
+    for (model, cells) in per_model {
+        for c in cells {
+            s += &format!(
+                "{},{},{},{},{},{}\n",
+                model, c.method, c.budget_frac, c.mean, c.std, c.n
+            );
+        }
+    }
+    std::fs::write(path, s)?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -276,6 +368,64 @@ mod tests {
         assert!(tbl.contains("90%"));
         let plot = frontier_plot(&cells, 40, 10);
         assert!(plot.contains("legend"));
+    }
+
+    #[test]
+    fn frontier_keeps_exact_budgets_distinct() {
+        // Two budgets equal to 4 decimals but different f64s: the old
+        // {:.4} key merged them into one cell; the bit key must not.
+        let b1 = 0.7;
+        let b2 = 0.7 + 1e-9;
+        let records = vec![rec("eagl", b1, 0, 0.90), rec("eagl", b2, 0, 0.80)];
+        let cells = frontier(&records);
+        assert_eq!(cells.len(), 2);
+        // And the surviving budget is the exact input value, not a
+        // parse("0.7000") round-trip.
+        assert!(cells.iter().any(|c| c.budget_frac.to_bits() == b1.to_bits()));
+        assert!(cells.iter().any(|c| c.budget_frac.to_bits() == b2.to_bits()));
+        // Cells keep ascending budget order within a method.
+        assert!(cells[0].budget_frac < cells[1].budget_frac);
+    }
+
+    #[test]
+    fn f64_order_key_is_monotone() {
+        let vals = [-2.5, -0.0, 0.0, 1e-300, 0.5999, 0.6, 0.9, 1.0];
+        for w in vals.windows(2) {
+            assert!(
+                f64_order_key(w[0]) <= f64_order_key(w[1]),
+                "{} vs {}",
+                w[0],
+                w[1]
+            );
+        }
+        assert!(f64_order_key(0.6) < f64_order_key(0.9));
+    }
+
+    #[test]
+    fn method_pairs_derived_from_cells() {
+        let records = vec![
+            rec("eagl", 0.7, 0, 0.9),
+            rec("alps", 0.7, 0, 0.9),
+            rec("uniform", 0.7, 0, 0.8),
+        ];
+        let cells = frontier(&records);
+        assert_eq!(methods_in(&cells), vec!["alps", "eagl", "uniform"]);
+        let pairs = method_pairs(&cells);
+        assert_eq!(pairs.len(), 3);
+        assert!(pairs.contains(&("alps".into(), "eagl".into())));
+        assert!(pairs.contains(&("eagl".into(), "uniform".into())));
+    }
+
+    #[test]
+    fn cross_model_table_renders_every_model() {
+        let cells_a = frontier(&[rec("eagl", 0.9, 0, 0.95), rec("eagl", 0.6, 0, 0.90)]);
+        let cells_b = frontier(&[rec("uniform", 0.9, 0, 0.80)]);
+        let per_model = vec![("tiny".to_string(), cells_a), ("skew".to_string(), cells_b)];
+        let tbl = cross_model_table(&per_model);
+        assert!(tbl.contains("tiny"), "{tbl}");
+        assert!(tbl.contains("skew"), "{tbl}");
+        assert!(tbl.contains("eagl"), "{tbl}");
+        assert!(tbl.contains("0.9500"), "{tbl}");
     }
 
     #[test]

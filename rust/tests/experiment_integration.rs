@@ -1,0 +1,144 @@
+//! Integration: the declarative experiment layer — manifest parse /
+//! validation, deterministic plan expansion, registry resume, and the
+//! scheduler's worker-count bit-identity — all hermetic on the pure-Rust
+//! [`SimBackend`] with isolated results roots (no env vars, no artifacts).
+
+use std::path::PathBuf;
+
+use mpq::experiment::{self, plan, ExecOptions, ExperimentSpec};
+use mpq::jsonio;
+
+/// Fresh isolated results root per test.
+fn tmp_root(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mpq_expit_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Toy-scale spec on the sim backend (pipeline semantics, not quality).
+fn spec(models: &str, methods: &str, budgets: &str, seeds: &str) -> ExperimentSpec {
+    let text = format!(
+        r#"{{
+            "version": 1,
+            "name": "it",
+            "backend": "sim",
+            "models": [{models}],
+            "methods": [{methods}],
+            "budgets": [{budgets}],
+            "seeds": {seeds},
+            "defaults": {{"base_steps": 30, "ft_steps": 3, "eval_batches": 1, "alps_steps": 2}}
+        }}"#
+    );
+    ExperimentSpec::from_json(&jsonio::parse(&text).unwrap()).unwrap()
+}
+
+fn opts(root: &PathBuf, workers: usize) -> ExecOptions {
+    ExecOptions {
+        workers,
+        persist: true,
+        results_root: Some(root.clone()),
+        progress: false,
+    }
+}
+
+#[test]
+fn manifest_file_errors_name_file_and_key() {
+    let dir = tmp_root("badmanifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad.json");
+    std::fs::write(
+        &path,
+        r#"{"version":1,"models":["sim_tiny"],"methods":["eagl"],"budgets":[2.0],"seeds":1}"#,
+    )
+    .unwrap();
+    let err = ExperimentSpec::from_file(&path).unwrap_err().to_string();
+    assert!(err.contains("bad.json"), "{err}");
+    assert!(err.contains("budgets[0]"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn plan_expansion_is_stable_across_parses() {
+    let a = plan::expand(&spec(r#""sim_tiny","sim_skew""#, r#""eagl","uniform""#, "0.9,0.7", "2"));
+    let b = plan::expand(&spec(r#""sim_tiny","sim_skew""#, r#""eagl","uniform""#, "0.9,0.7", "2"));
+    assert_eq!(a.runs.len(), 16);
+    assert_eq!(a.runs, b.runs);
+    let fps: Vec<String> = a.runs.iter().map(|k| k.hex()).collect();
+    assert_eq!(fps, b.runs.iter().map(|k| k.hex()).collect::<Vec<_>>());
+    let mut uniq = fps.clone();
+    uniq.sort();
+    uniq.dedup();
+    assert_eq!(uniq.len(), 16, "fingerprints must be unique");
+}
+
+#[test]
+fn resume_skips_completed_cells() {
+    let root = tmp_root("resume");
+    // first_to_last needs no gain estimation — the fastest full run.
+    let s = spec(r#""sim_tiny""#, r#""first_to_last""#, "0.85", "[0, 1]");
+    let out1 = experiment::execute(&s, &opts(&root, 1)).unwrap();
+    assert_eq!((out1.executed, out1.skipped), (2, 0));
+    // Re-invoking the identical manifest re-runs nothing.
+    let out2 = experiment::execute(&s, &opts(&root, 1)).unwrap();
+    assert_eq!((out2.executed, out2.skipped), (0, 2));
+    assert_eq!(out1.records.len(), out2.records.len());
+    for (a, b) in out1.records.iter().zip(&out2.records) {
+        assert_eq!(a.metric, b.metric, "resumed record must be the stored one");
+        assert_eq!(a.seed, b.seed);
+    }
+    // A grown manifest only runs the new cells (key-level dedup, not
+    // whole-sweep dedup).
+    let s3 = spec(r#""sim_tiny""#, r#""first_to_last""#, "0.85", "[0, 1, 2]");
+    let out3 = experiment::execute(&s3, &opts(&root, 1)).unwrap();
+    assert_eq!((out3.executed, out3.skipped), (1, 2));
+    let store_text =
+        std::fs::read_to_string(root.join("sim_tiny").join("sweep.jsonl")).unwrap();
+    assert_eq!(store_text.lines().count(), 3);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// The acceptance-criteria invariant: the persisted JSONL is *byte*
+/// identical between `--workers 1` and `--workers 4`.
+#[test]
+fn store_bytes_identical_at_any_worker_count() {
+    let s = spec(r#""sim_tiny""#, r#""eagl","uniform""#, "0.85,0.7", "2");
+    let root1 = tmp_root("w1");
+    let root4 = tmp_root("w4");
+    let out1 = experiment::execute(&s, &opts(&root1, 1)).unwrap();
+    let out4 = experiment::execute(&s, &opts(&root4, 4)).unwrap();
+    assert_eq!(out1.executed, 8);
+    assert_eq!(out4.executed, 8);
+    let b1 = std::fs::read(root1.join("sim_tiny").join("sweep.jsonl")).unwrap();
+    let b4 = std::fs::read(root4.join("sim_tiny").join("sweep.jsonl")).unwrap();
+    assert!(!b1.is_empty());
+    assert_eq!(b1, b4, "workers=1 and workers=4 stores must be bit-identical");
+    // Stored records are schedule-invariant: wall time lives on the
+    // progress line, not in the store.
+    for line in String::from_utf8(b1).unwrap().lines() {
+        let v = jsonio::parse(line).unwrap();
+        assert_eq!(v.at(&["wall_s"]).as_f64(), Some(0.0), "{line}");
+    }
+    let _ = std::fs::remove_dir_all(&root1);
+    let _ = std::fs::remove_dir_all(&root4);
+}
+
+/// Ephemeral execution (`mpq run` path): no registry is written.
+#[test]
+fn non_persistent_execution_leaves_no_store() {
+    let root = tmp_root("ephemeral");
+    let s = spec(r#""sim_tiny""#, r#""first_to_last""#, "0.85", "1");
+    let out = experiment::execute(
+        &s,
+        &ExecOptions {
+            workers: 1,
+            persist: false,
+            results_root: Some(root.clone()),
+            progress: false,
+        },
+    )
+    .unwrap();
+    assert_eq!(out.records.len(), 1);
+    assert!(out.records[0].wall_s > 0.0, "ephemeral records keep real wall time");
+    assert!(!root.join("sim_tiny").join("sweep.jsonl").exists());
+    let _ = std::fs::remove_dir_all(&root);
+}
