@@ -7,13 +7,14 @@
 # crate, see rust/Cargo.toml) and skip themselves at runtime when
 # artifacts are absent.
 
-.PHONY: verify test build bench bench-quick exp-smoke verify-pjrt artifacts clean
+.PHONY: verify test build bench bench-quick exp-smoke serve-smoke verify-pjrt artifacts clean
 
-# Tier-1: must pass in a clean checkout.  bench-quick and exp-smoke ride
-# along as smoke steps so the bench binary (and its BENCH_hotpath.json
-# emission) and the manifest-driven experiment path can never silently rot.
+# Tier-1: must pass in a clean checkout.  bench-quick, exp-smoke and
+# serve-smoke ride along as smoke steps so the bench binary (and its
+# BENCH_hotpath.json emission), the manifest-driven experiment path, and
+# the serving engine can never silently rot.
 verify:
-	cargo build --release && cargo test -q && $(MAKE) bench-quick && $(MAKE) exp-smoke
+	cargo build --release && cargo test -q && $(MAKE) bench-quick && $(MAKE) exp-smoke && $(MAKE) serve-smoke
 
 build:
 	cargo build --release
@@ -46,6 +47,21 @@ exp-smoke:
 	echo "exp-smoke OK (8 rows, resume added none)"
 	rm -rf $(EXP_SMOKE_DIR)
 
+# End-to-end smoke of the serving engine: loadgen drives `mpq serve` on
+# the hermetic sim backend (EAGL selection at a 70% budget over a fresh
+# scratch results root).  The binary itself asserts the serving
+# invariants — every request completed with zero failures (which implies
+# nonzero throughput), monotone/contiguous response ids, clean drain —
+# and exits nonzero on any violation (see rust/README.md §Serving).
+SERVE_SMOKE_DIR := $(CURDIR)/.serve-smoke-results
+serve-smoke:
+	rm -rf $(SERVE_SMOKE_DIR)
+	MPQ_RESULTS=$(SERVE_SMOKE_DIR) cargo run --release -q -p mpq -- serve \
+	  --model sim_tiny --backend sim --base-steps 60 --budget 0.7 --method eagl \
+	  --requests 48 --max-request 4 --workers 2 --max-batch 8 --batch-timeout-ms 2
+	rm -rf $(SERVE_SMOKE_DIR)
+	@echo "serve-smoke OK"
+
 # Full verification including the PJRT/AOT path (requires the vendored
 # `xla` dependency to be uncommented in rust/Cargo.toml and, for the
 # tests to run rather than skip, `make artifacts`).
@@ -59,4 +75,4 @@ artifacts:
 
 clean:
 	cargo clean
-	rm -rf results $(EXP_SMOKE_DIR)
+	rm -rf results $(EXP_SMOKE_DIR) $(SERVE_SMOKE_DIR)

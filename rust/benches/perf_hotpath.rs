@@ -152,6 +152,73 @@ fn main() -> mpq::Result<()> {
         );
     }
 
+    // -- serving engine ------------------------------------------------------
+    // The serve path (mpq serve): dynamic micro-batching over per-worker
+    // backends, driven closed-loop by the deterministic loadgen.  Rows
+    // cover 1 vs N workers and unbatched (max-batch 1) vs batched
+    // (max-batch 32); each config records the request-latency histogram
+    // and the wall-clock seconds-per-request (whose inverse is req/s).
+    {
+        use mpq::serve::{loadgen, Engine, LoadMode, LoadSpec, ServeConfig, Spawner};
+        let spawner: Spawner = std::sync::Arc::new(|| {
+            Ok(Box::new(mpq::backend::SimBackend::new("sim_skew")?) as Box<dyn Backend>)
+        });
+        let be = mpq::backend::SimBackend::new("sim_skew")?;
+        let ck = be.init_checkpoint()?;
+        let graph = mpq::graph::Graph::from_manifest(&be.manifest().raw)?;
+        let bits = BitsConfig::uniform(&graph, 4).to_f32();
+        let data = Dataset::for_task(mpq::backend::Task::Cls, 7);
+        let requests = if quick { 64 } else { 256 };
+        for &(workers, max_batch) in &[(1usize, 1usize), (1, 32), (4, 1), (4, 32)] {
+            let cfg = ServeConfig {
+                workers,
+                max_batch,
+                batch_timeout: std::time::Duration::from_millis(1),
+                force_per_request: false,
+                warmup: true,
+            };
+            let engine = Engine::start(spawner.clone(), ck.clone(), bits.clone(), cfg)?;
+            let spec = LoadSpec {
+                requests,
+                max_request_samples: 2,
+                seed: 42,
+                mode: LoadMode::Closed { concurrency: 8 },
+            };
+            let load = loadgen::run(&engine, &data, &spec)?;
+            let snap = engine.drain()?;
+            let m = Measurement {
+                name: format!("serve sim_skew w={workers} mb={max_batch} req lat"),
+                iters: snap.completed as usize,
+                mean_s: snap.mean_latency_s,
+                std_s: 0.0,
+                p50_s: snap.p50_s,
+                p95_s: snap.p95_s,
+                p99_s: snap.p99_s,
+                min_s: snap.min_latency_s,
+            };
+            note(&mut sink, &baseline, m);
+            let per_req = load.wall_s / requests as f64;
+            let m = Measurement {
+                name: format!("serve sim_skew w={workers} mb={max_batch} wall/req"),
+                iters: requests,
+                mean_s: per_req,
+                std_s: 0.0,
+                p50_s: per_req,
+                p95_s: per_req,
+                p99_s: per_req,
+                min_s: per_req,
+            };
+            note(&mut sink, &baseline, m);
+            println!(
+                "{:<44} {:>10.1} req/s  {:>8.1} samples/s  occupancy {:.2}",
+                format!("  -> serve w={workers} mb={max_batch} throughput"),
+                load.throughput_rps,
+                load.samples_per_s,
+                snap.mean_occupancy()
+            );
+        }
+    }
+
     sink.write(&out_path)?;
     println!(
         "\nwrote {} ({} measurements)",

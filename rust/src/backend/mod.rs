@@ -11,6 +11,7 @@
 //! ```text
 //! train_step: params.. mom.. x y lr wd bits  ->  params'.. mom'.. loss metric
 //! eval_step:  params.. x y bits              ->  loss evalout
+//! infer_step: params.. x bits                ->  per-sample logits
 //! vhv_step:   params.. x y bits seed         ->  per-layer v·Hv
 //! eagl_step:  (w, sw per layer)              ->  per-layer entropies
 //! ```
@@ -125,6 +126,27 @@ pub trait Backend {
         let evalout = out.pop().unwrap();
         let loss = out.pop().unwrap().item();
         Ok((loss, evalout))
+    }
+
+    /// Inference entry: per-sample logits `[batch, classes]` — the fused
+    /// serving path ([`crate::serve`]) batches many requests' samples into
+    /// one call and reassembles per-request results from the rows.  Only
+    /// available when the manifest lists an `infer_step` entry (the sim
+    /// backend always does; artifact sets lowered without it make the
+    /// serving engine fall back to per-request `eval_step`).
+    fn infer_step(
+        &mut self,
+        params: &Checkpoint,
+        x: &Tensor,
+        bits: &[f32],
+    ) -> crate::Result<Tensor> {
+        let bits_t = Tensor::from_f32(&[bits.len()], bits.to_vec());
+        let mut args: Vec<&Tensor> = Vec::with_capacity(params.tensors.len() + 2);
+        args.extend(params.tensors.iter());
+        args.extend([x, &bits_t]);
+        let mut out = self.execute("infer_step", &args)?;
+        crate::ensure!(out.len() == 1, "infer_step output arity");
+        Ok(out.pop().unwrap())
     }
 
     /// One Hutchinson sample: per-layer v·Hv vector (HAWQ-v3 trace).

@@ -535,6 +535,35 @@ impl SimBackend {
         ])
     }
 
+    /// Inference: per-sample logits `[batch, N_CLASSES]`.  The forward
+    /// kernels are row-independent (documented accumulation order in
+    /// [`crate::kernels::gemm`]), so each sample's logit row is
+    /// bit-identical no matter which batch it rides in — the property the
+    /// serving engine's fused micro-batching relies on.
+    fn exec_infer(&mut self, args: &[&Tensor]) -> crate::Result<Vec<Tensor>> {
+        let n = 4 * self.layers.len();
+        crate::ensure!(args.len() == n + 2, "sim infer_step: arity {}", args.len());
+        let net = net_refs(&self.layers, &args[..n])?;
+        let x = args[n];
+        let bits = args[n + 1].f32s();
+        crate::ensure!(bits.len() == self.layers.len(), "sim: bits arity");
+        let batch = self.check_x(x)?;
+        let bits_eff = self.effective_bits(bits);
+        let feats_idx = self.featurize_cached(x, batch);
+        let feats = self.fcache.feats(feats_idx);
+        forward_pass(
+            &self.layers,
+            &net,
+            &bits_eff,
+            &mut self.wcache,
+            feats,
+            &mut self.ws.fwd,
+            batch,
+        );
+        let logits = self.ws.fwd[self.layers.len() - 1].out.clone();
+        Ok(vec![Tensor::from_f32(&[batch, N_CLASSES], logits)])
+    }
+
     fn exec_vhv(&mut self, args: &[&Tensor]) -> crate::Result<Vec<Tensor>> {
         let n = 4 * self.layers.len();
         crate::ensure!(args.len() == n + 4, "sim vhv_step: arity {}", args.len());
@@ -661,6 +690,7 @@ impl Backend for SimBackend {
         match entry {
             "train_step" => self.exec_train(args),
             "eval_step" => self.exec_eval(args),
+            "infer_step" => self.exec_infer(args),
             "vhv_step" => self.exec_vhv(args),
             "eagl_step" => self.exec_eagl(args),
             other => crate::bail!("sim backend: unknown entry '{other}'"),
@@ -738,6 +768,7 @@ fn manifest_json(model: &str, layers: &[SimLayer]) -> Json {
             ),
         ),
         ("eval_step", entry(&["params", "x", "y", "bits"], &["loss", "evalout"])),
+        ("infer_step", entry(&["params", "x", "bits"], &["logits"])),
         ("vhv_step", entry(&["params", "x", "y", "bits", "seed"], &["vhv"])),
         ("eagl_step", entry(&["w_sw"], &["entropies"])),
     ]);
@@ -846,6 +877,42 @@ mod tests {
         assert_eq!(feat_misses, 1, "second eval must reuse the featurized batch");
         assert!(feat_hits >= 1);
         assert!(w_hits >= graph.layers.len() as u64, "weight codes must be reused");
+    }
+
+    #[test]
+    fn infer_logits_are_row_independent_and_match_eval() {
+        // The serving engine's fused batching hinges on this: a sample's
+        // logit row must not depend on the batch it rides in, and a
+        // softmax-CE over the rows must reproduce eval_step exactly.
+        let mut be = SimBackend::new("sim_tiny").unwrap();
+        let graph = Graph::from_manifest(&be.manifest().raw).unwrap();
+        let data = Dataset::for_task(be.manifest().task, 5);
+        let ck = be.init_checkpoint().unwrap();
+        let mut bits = BitsConfig::uniform(&graph, 4);
+        // Mixed precisions so the weight cache sees several code sets.
+        bits.bits[1] = 2;
+        let bits = bits.to_f32();
+        let (x, y) = data.batch(Split::Eval, 2, 6);
+        let logits = be.infer_step(&ck, &x, &bits).unwrap();
+        assert_eq!(logits.shape, vec![6, N_CLASSES]);
+        // Row independence: each sample alone produces the same row.
+        let row = IMG * IMG * 3;
+        for b in 0..6 {
+            let xs = x.f32s()[b * row..(b + 1) * row].to_vec();
+            let xb = Tensor::from_f32(&[1, IMG, IMG, 3], xs);
+            let lb = be.infer_step(&ck, &xb, &bits).unwrap();
+            assert_eq!(
+                lb.f32s(),
+                &logits.f32s()[b * N_CLASSES..(b + 1) * N_CLASSES],
+                "sample {b} logits must not depend on batch composition"
+            );
+        }
+        // Host-side softmax-CE over the rows == eval_step on the batch.
+        let (loss_ref, out_ref) = be.eval_step(&ck, &x, &y, &bits).unwrap();
+        let (loss, correct) =
+            crate::kernels::gemm::softmax_ce(logits.f32s(), y.i32s(), 6, N_CLASSES, None);
+        assert_eq!(loss.to_bits(), loss_ref.to_bits());
+        assert_eq!(correct as f32, out_ref.item());
     }
 
     #[test]

@@ -18,18 +18,20 @@ pub struct Measurement {
     pub std_s: f64,
     pub p50_s: f64,
     pub p95_s: f64,
+    pub p99_s: f64,
     pub min_s: f64,
 }
 
 impl Measurement {
     pub fn report(&self) {
         println!(
-            "{:<44} {:>10} {:>10} {:>10} {:>10}  n={}",
+            "{:<44} {:>10} {:>10} {:>10} {:>10} {:>10}  n={}",
             self.name,
             fmt_s(self.mean_s),
             fmt_s(self.std_s),
             fmt_s(self.p50_s),
             fmt_s(self.p95_s),
+            fmt_s(self.p99_s),
             self.iters
         );
     }
@@ -48,6 +50,7 @@ impl Measurement {
             ("std_s", Json::num(self.std_s)),
             ("p50_s", Json::num(self.p50_s)),
             ("p95_s", Json::num(self.p95_s)),
+            ("p99_s", Json::num(self.p99_s)),
             ("min_s", Json::num(self.min_s)),
         ])
     }
@@ -132,10 +135,10 @@ pub fn fmt_s(s: f64) -> String {
 /// Print the standard header for measurement tables.
 pub fn header() {
     println!(
-        "{:<44} {:>10} {:>10} {:>10} {:>10}",
-        "benchmark", "mean", "std", "p50", "p95"
+        "{:<44} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "mean", "std", "p50", "p95", "p99"
     );
-    println!("{}", "-".repeat(92));
+    println!("{}", "-".repeat(103));
 }
 
 /// Measure `f` with `warmup` + `iters` runs.
@@ -182,6 +185,7 @@ fn summarize(name: &str, times: &[f64]) -> Measurement {
         std_s: crate::stats::std_dev(times),
         p50_s: percentile(&sorted, 0.50),
         p95_s: percentile(&sorted, 0.95),
+        p99_s: percentile(&sorted, 0.99),
         min_s: sorted.first().copied().unwrap_or(f64::NAN),
     }
 }
@@ -230,6 +234,7 @@ mod tests {
         assert_eq!(m.iters, 20);
         assert!(m.mean_s >= 0.0 && m.mean_s.is_finite());
         assert!(m.p50_s <= m.p95_s + 1e-12);
+        assert!(m.p95_s <= m.p99_s + 1e-12);
         assert!(m.min_s <= m.mean_s + 1e-12);
     }
 
@@ -257,6 +262,7 @@ mod tests {
             std_s: 0.01,
             p50_s: 0.24,
             p95_s: 0.27,
+            p99_s: 0.28,
             min_s: 0.23,
         });
         let dir = std::env::temp_dir();
@@ -285,6 +291,7 @@ mod tests {
             std_s: 0.0,
             p50_s: 0.5,
             p95_s: 0.5,
+            p99_s: 0.5,
             min_s: 0.5,
         };
         assert!((m.throughput(10.0) - 20.0).abs() < 1e-12);

@@ -116,23 +116,115 @@ impl RunRecord {
     /// serialize as JSON `null` (see [`crate::jsonio`]), so NaN/Inf
     /// metrics are rejected here rather than corrupting the store.
     pub fn from_json(v: &Json) -> Option<RunRecord> {
-        let metric = v.at(&["metric"]).as_f64()?;
-        if !metric.is_finite() {
-            return None;
-        }
-        Some(RunRecord {
-            model: v.at(&["model"]).as_str()?.to_string(),
-            method: v.at(&["method"]).as_str()?.to_string(),
-            budget_frac: v.at(&["budget_frac"]).as_f64()?,
-            seed: v.at(&["seed"]).as_f64()? as u64,
-            metric,
-            loss: v.at(&["loss"]).as_f64().unwrap_or(f64::NAN),
-            groups_at_lo: v.at(&["groups_at_lo"]).as_usize().unwrap_or(0),
-            compression: v.at(&["compression"]).as_f64().unwrap_or(0.0),
-            gbops: v.at(&["gbops"]).as_f64().unwrap_or(0.0),
-            wall_s: v.at(&["wall_s"]).as_f64().unwrap_or(0.0),
-        })
+        Self::from_json_diag(v).record
     }
+
+    /// [`from_json`](Self::from_json) with field-level diagnostics.
+    ///
+    /// Optional numeric fields used to be absorbed silently via
+    /// `unwrap_or` defaults, so a corrupted store fed zeros straight into
+    /// frontier math with no trace.  This variant reports exactly which
+    /// required fields killed a record and which optional fields fell
+    /// back to a default; [`ResultStore::open`] logs both with the JSONL
+    /// line number and counts them.  A field that is *present and valid*
+    /// is never flagged — `wall_s: 0` (what the experiment scheduler
+    /// deliberately persists for byte-identical stores) parses cleanly.
+    pub fn from_json_diag(v: &Json) -> RecordParse {
+        let mut missing: Vec<&'static str> = Vec::new();
+        let mut defaulted: Vec<&'static str> = Vec::new();
+
+        let model = v.at(&["model"]).as_str();
+        if model.is_none() {
+            missing.push("model");
+        }
+        let method = v.at(&["method"]).as_str();
+        if method.is_none() {
+            missing.push("method");
+        }
+        let budget_frac = v.at(&["budget_frac"]).as_f64();
+        if budget_frac.is_none() {
+            missing.push("budget_frac");
+        }
+        let seed = v.at(&["seed"]).as_f64();
+        if seed.is_none() {
+            missing.push("seed");
+        }
+        let metric = v.at(&["metric"]).as_f64().filter(|m| m.is_finite());
+        if metric.is_none() {
+            missing.push("metric");
+        }
+
+        let loss = match v.at(&["loss"]).as_f64() {
+            Some(x) => x,
+            None => {
+                defaulted.push("loss");
+                f64::NAN
+            }
+        };
+        let groups_at_lo = match v.at(&["groups_at_lo"]).as_usize() {
+            Some(x) => x,
+            None => {
+                defaulted.push("groups_at_lo");
+                0
+            }
+        };
+        let compression = match v.at(&["compression"]).as_f64() {
+            Some(x) => x,
+            None => {
+                defaulted.push("compression");
+                0.0
+            }
+        };
+        let gbops = match v.at(&["gbops"]).as_f64() {
+            Some(x) => x,
+            None => {
+                defaulted.push("gbops");
+                0.0
+            }
+        };
+        let wall_s = match v.at(&["wall_s"]).as_f64() {
+            Some(x) => x,
+            None => {
+                defaulted.push("wall_s");
+                0.0
+            }
+        };
+
+        if !missing.is_empty() {
+            return RecordParse {
+                record: None,
+                missing,
+                defaulted,
+            };
+        }
+        RecordParse {
+            record: Some(RunRecord {
+                model: model.unwrap().to_string(),
+                method: method.unwrap().to_string(),
+                budget_frac: budget_frac.unwrap(),
+                seed: seed.unwrap() as u64,
+                metric: metric.unwrap(),
+                loss,
+                groups_at_lo,
+                compression,
+                gbops,
+                wall_s,
+            }),
+            missing,
+            defaulted,
+        }
+    }
+}
+
+/// Field-level outcome of parsing one JSONL record (see
+/// [`RunRecord::from_json_diag`]).
+pub struct RecordParse {
+    /// The record, or `None` when any required field was missing/invalid.
+    pub record: Option<RunRecord>,
+    /// Required fields that were missing or invalid.
+    pub missing: Vec<&'static str>,
+    /// Optional fields that were missing/malformed and got a default.
+    pub defaulted: Vec<&'static str>,
 }
 
 /// Canonical results directory for a (backend kind, model): next to the
@@ -371,6 +463,35 @@ impl<B: Backend> Coordinator<B> {
         Ok(bits)
     }
 
+    /// Resolve the winning stored run at `budget` into its
+    /// [`BitsConfig`] — the `mpq serve --bits-from` path.  Picks the
+    /// best-metric record for this model at the exact budget (falling
+    /// back to the nearest stored budget with a warning) and re-derives
+    /// the knapsack selection from that record's method, reusing the
+    /// on-disk gain cache the sweep left behind.
+    pub fn bits_from_store(
+        &mut self,
+        store: &ResultStore,
+        budget: f64,
+    ) -> crate::Result<(RunRecord, BitsConfig)> {
+        let rec = store.best_at_budget(&self.model, budget).ok_or_else(|| {
+            crate::err!(
+                "no run records for model '{}' in {} — run `mpq sweep` or `mpq exp` first",
+                self.model,
+                store.path().display()
+            )
+        })?;
+        if rec.budget_frac.to_bits() != budget.to_bits() {
+            crate::warn!(
+                "no stored run at budget {budget}; using nearest stored budget {}",
+                rec.budget_frac
+            );
+        }
+        let kind = MethodKind::parse(&rec.method)?;
+        let bits = self.select(kind, rec.budget_frac)?;
+        Ok((rec, bits))
+    }
+
     /// Run one (method, budget, seed) experiment end to end.
     pub fn run_one(
         &mut self,
@@ -581,6 +702,33 @@ mod tests {
         // Missing a required field → None.
         let v = jsonio::parse(r#"{"model":"m","method":"eagl","metric":0.8}"#).unwrap();
         assert!(RunRecord::from_json(&v).is_none());
+    }
+
+    #[test]
+    fn from_json_diag_names_missing_and_defaulted_fields() {
+        // Missing required fields are listed and kill the record.
+        let v = jsonio::parse(r#"{"model":"m","method":"eagl","metric":0.8}"#).unwrap();
+        let p = RunRecord::from_json_diag(&v);
+        assert!(p.record.is_none());
+        assert_eq!(p.missing, vec!["budget_frac", "seed"]);
+        // Missing optional fields are listed but defaulted.
+        let v = jsonio::parse(
+            r#"{"model":"m","method":"eagl","budget_frac":0.5,"seed":1,"metric":0.8,"loss":0.2}"#,
+        )
+        .unwrap();
+        let p = RunRecord::from_json_diag(&v);
+        let rec = p.record.unwrap();
+        assert!(p.missing.is_empty());
+        assert_eq!(p.defaulted, vec!["groups_at_lo", "compression", "gbops", "wall_s"]);
+        assert!((rec.loss - 0.2).abs() < 1e-12);
+        assert_eq!(rec.compression, 0.0);
+        // A fully populated record flags nothing — including wall_s: 0,
+        // which the experiment scheduler writes on purpose.
+        let mut full = sample_record();
+        full.wall_s = 0.0;
+        let v = jsonio::parse(&full.to_json().to_string_compact()).unwrap();
+        let p = RunRecord::from_json_diag(&v);
+        assert!(p.missing.is_empty() && p.defaulted.is_empty());
     }
 
     #[test]

@@ -26,15 +26,30 @@ pub fn record_key(model: &str, method: &str, budget_frac: f64, seed: u64) -> (St
     (model.to_string(), method.to_string(), budget_frac.to_bits(), seed)
 }
 
+/// What [`ResultStore::open`] had to skip or default while loading — a
+/// nonzero count means the JSONL file carries corruption that used to be
+/// absorbed silently (see [`RunRecord::from_json_diag`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LoadIssues {
+    /// Lines dropped entirely (unparseable JSON or missing required
+    /// fields).
+    pub skipped_lines: usize,
+    /// Optional numeric fields that fell back to a default across all
+    /// loaded records.
+    pub defaulted_fields: usize,
+}
+
 pub struct ResultStore {
     path: PathBuf,
     records: Vec<RunRecord>,
     keys: HashSet<(String, String, u64, u64)>,
+    issues: LoadIssues,
 }
 
 impl ResultStore {
     pub fn open(path: &Path) -> crate::Result<ResultStore> {
         let mut records = Vec::new();
+        let mut issues = LoadIssues::default();
         if path.exists() {
             let content = std::fs::read_to_string(path)?;
             // Every append ends in '\n', so a newline-less tail can only
@@ -47,15 +62,54 @@ impl ResultStore {
                 let f = std::fs::OpenOptions::new().write(true).open(path)?;
                 f.set_len(valid_len as u64)?;
             }
-            for line in content[..valid_len].lines() {
+            for (lineno, line) in content[..valid_len].lines().enumerate() {
+                let lineno = lineno + 1;
                 if line.trim().is_empty() {
                     continue;
                 }
-                if let Ok(v) = jsonio::parse(line) {
-                    if let Some(r) = RunRecord::from_json(&v) {
-                        records.push(r);
+                match jsonio::parse(line) {
+                    Err(e) => {
+                        issues.skipped_lines += 1;
+                        crate::warn!(
+                            "{}:{lineno}: skipped unparseable record: {e}",
+                            path.display()
+                        );
+                    }
+                    Ok(v) => {
+                        let parsed = RunRecord::from_json_diag(&v);
+                        match parsed.record {
+                            None => {
+                                issues.skipped_lines += 1;
+                                crate::warn!(
+                                    "{}:{lineno}: skipped record — missing/invalid required \
+                                     field(s): {}",
+                                    path.display(),
+                                    parsed.missing.join(", ")
+                                );
+                            }
+                            Some(r) => {
+                                if !parsed.defaulted.is_empty() {
+                                    issues.defaulted_fields += parsed.defaulted.len();
+                                    crate::warn!(
+                                        "{}:{lineno}: defaulted missing/malformed field(s): {}",
+                                        path.display(),
+                                        parsed.defaulted.join(", ")
+                                    );
+                                }
+                                records.push(r);
+                            }
+                        }
                     }
                 }
+            }
+            if issues.skipped_lines + issues.defaulted_fields > 0 {
+                crate::warn!(
+                    "{}: loaded {} record(s); {} line(s) skipped, {} field(s) defaulted",
+                    path.display(),
+                    records.len(),
+                    issues.skipped_lines,
+                    issues.defaulted_fields
+                );
             }
         }
         if let Some(dir) = path.parent() {
@@ -69,7 +123,53 @@ impl ResultStore {
             path: path.to_path_buf(),
             records,
             keys,
+            issues,
         })
+    }
+
+    /// Load diagnostics of the `open` that produced this store.
+    pub fn load_issues(&self) -> LoadIssues {
+        self.issues
+    }
+
+    /// Best-metric record for `model` at `budget` — the `mpq serve
+    /// --bits-from` lookup.  Exact f64-bits budget matches win; when none
+    /// exist the nearest stored budget is used.  Ties break
+    /// deterministically: higher metric, then lower seed, then method
+    /// name.
+    pub fn best_at_budget(&self, model: &str, budget: f64) -> Option<RunRecord> {
+        let of_model: Vec<&RunRecord> =
+            self.records.iter().filter(|r| r.model == model).collect();
+        if of_model.is_empty() {
+            return None;
+        }
+        let exact: Vec<&RunRecord> = of_model
+            .iter()
+            .copied()
+            .filter(|r| r.budget_frac.to_bits() == budget.to_bits())
+            .collect();
+        let pool: Vec<&RunRecord> = if !exact.is_empty() {
+            exact
+        } else {
+            let nearest = of_model
+                .iter()
+                .map(|r| (r.budget_frac - budget).abs())
+                .fold(f64::INFINITY, f64::min);
+            of_model
+                .iter()
+                .copied()
+                .filter(|r| (r.budget_frac - budget).abs() <= nearest)
+                .collect()
+        };
+        pool.into_iter()
+            .min_by(|a, b| {
+                b.metric
+                    .partial_cmp(&a.metric)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.seed.cmp(&b.seed))
+                    .then(a.method.cmp(&b.method))
+            })
+            .cloned()
     }
 
     /// Exact-key membership (O(1); budget compared by f64 bits).
@@ -194,6 +294,72 @@ mod tests {
         let store2 = ResultStore::open(&path).unwrap();
         assert_eq!(store2.records().len(), 2);
         assert!(store2.contains("m", "eagl", 0.7, 9));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn open_counts_and_survives_skipped_and_defaulted_lines() {
+        let dir = std::env::temp_dir().join("mpq_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("store_diag_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let good = sample_record().to_json().to_string_compact();
+        let content = format!(
+            "{good}\n\
+             {{not json at all\n\
+             {{\"model\":\"m\",\"method\":\"eagl\",\"metric\":0.5}}\n\
+             {{\"model\":\"m\",\"method\":\"alps\",\"budget_frac\":0.6,\"seed\":2,\"metric\":0.7}}\n"
+        );
+        std::fs::write(&path, content).unwrap();
+        let store = ResultStore::open(&path).unwrap();
+        // good + the defaulted-fields record survive; the malformed line
+        // and the missing-required-fields record are skipped, counted.
+        assert_eq!(store.records().len(), 2);
+        assert_eq!(
+            store.load_issues(),
+            LoadIssues {
+                skipped_lines: 2,
+                // loss, groups_at_lo, compression, gbops, wall_s
+                defaulted_fields: 5,
+            }
+        );
+        // A clean store reports zero issues.
+        let clean = dir.join(format!("store_diag_clean_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&clean);
+        std::fs::write(&clean, format!("{good}\n")).unwrap();
+        assert_eq!(ResultStore::open(&clean).unwrap().load_issues(), LoadIssues::default());
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&clean);
+    }
+
+    #[test]
+    fn best_at_budget_picks_max_metric_with_deterministic_ties() {
+        let dir = std::env::temp_dir().join("mpq_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("store_best_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut store = ResultStore::open(&path).unwrap();
+        let mut mk = |method: &str, budget: f64, seed: u64, metric: f64| {
+            let mut r = sample_record();
+            r.method = method.into();
+            r.budget_frac = budget;
+            r.seed = seed;
+            r.metric = metric;
+            store.append(&r).unwrap();
+        };
+        mk("eagl", 0.7, 0, 0.90);
+        mk("alps", 0.7, 1, 0.94);
+        mk("eagl", 0.7, 2, 0.94); // tie on metric → lower seed wins
+        mk("hawq_v3", 0.6, 0, 0.99);
+        drop(mk);
+        let best = store.best_at_budget("m", 0.7).unwrap();
+        assert_eq!((best.method.as_str(), best.seed), ("alps", 1));
+        // No exact budget 0.62 → fall back to the nearest stored budget
+        // (0.6; unambiguous — 0.65 would tie-break on f64 rounding noise).
+        let near = store.best_at_budget("m", 0.62).unwrap();
+        assert_eq!(near.method, "hawq_v3");
+        // Unknown model → None.
+        assert!(store.best_at_budget("nope", 0.7).is_none());
         let _ = std::fs::remove_file(&path);
     }
 

@@ -21,6 +21,12 @@
 //! expressed as declarative JSON manifests and executed by the resumable
 //! multi-model scheduler in [`experiment`] (`mpq exp --manifest m.json`).
 //!
+//! The resulting (checkpoint, precision assignment) pairs are *served*
+//! by the batched inference engine in [`serve`] (`mpq serve`): a dynamic
+//! micro-batching queue fanned over per-worker backends, with responses
+//! bit-identical to direct single-request evaluation and a deterministic
+//! load generator measuring requests/s and latency percentiles.
+//!
 //! ## Execution backends
 //!
 //! Every step that touches a network executes through the [`backend`]
@@ -69,6 +75,7 @@ pub mod quant;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod tensor;
 pub mod train;

@@ -11,6 +11,8 @@
 //! mpq sweep      --model sim_skew --methods eagl,alps,hawq_v3,first_to_last
 //!                --budgets 0.95,0.9,...  --seeds 3
 //! mpq report     --model sim_skew | --models a,b | --manifest m.json
+//! mpq serve      --model sim_skew --budget 0.7 [--workers N --max-batch B]
+//! mpq infer      --model sim_skew [--samples N --index I]
 //! mpq eagl       --model sim_skew [--ckpt path]   # offline metric (Fig. 2)
 //! ```
 //!
@@ -27,14 +29,19 @@
 //! hermetic pure-Rust sim backend (models `sim_tiny`, `sim_skew`).
 
 use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use mpq::backend::{self, Backend, BackendKind, Task};
+use mpq::backend::{self, Backend, BackendKind, Task, TrainState};
 use mpq::cli::Args;
 use mpq::coordinator::{self, Coordinator, ResultStore};
+use mpq::data::Split;
 use mpq::experiment::{self, ExecOptions, ExperimentSpec, Overrides};
 use mpq::methods::MethodKind;
 use mpq::quant::BitsConfig;
 use mpq::report;
+use mpq::serve;
+use mpq::train::{finetune, TrainConfig};
 
 fn main() {
     if let Err(e) = run() {
@@ -122,6 +129,22 @@ fn validate_flags(args: &Args) -> mpq::Result<()> {
         "sweep" => &["methods", "budgets", "seeds"],
         "report" => &["models", "manifest"],
         "eagl" => &["ckpt"],
+        "serve" => &[
+            "method",
+            "budget",
+            "bits-from",
+            "seed",
+            "max-batch",
+            "batch-timeout-ms",
+            "requests",
+            "max-request",
+            "mode",
+            "concurrency",
+            "rate",
+            "loadgen-seed",
+            "per-request",
+        ],
+        "infer" => &["method", "budget", "bits-from", "seed", "samples", "index"],
         // Manifest-driven: tuning knobs belong in the manifest, so only
         // the orchestration flags are accepted.
         "exp" => return args.ensure_known_flags(sub, &["manifest", "workers", "backend"]),
@@ -143,6 +166,8 @@ fn run() -> mpq::Result<()> {
         Some("run") => cmd_run(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("exp") => cmd_exp(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("infer") => cmd_infer(&args),
         Some("report") => cmd_report(&args),
         Some("eagl") => cmd_eagl(&args),
         other => {
@@ -171,6 +196,14 @@ subcommands:
   sweep       --model M --methods a,b,.. --budgets f,..  --seeds N   full sweep
   report      --model M | --models a,b | --manifest M.json
               frontier tables/plots/significance, aggregated across models
+  serve       --model M [--budget F [--method K] | --bits-from sweep.jsonl --budget F]
+              [--workers N] [--max-batch B] [--batch-timeout-ms T] [--ft-steps S]
+              [--requests R] [--max-request S] [--mode closed|open]
+              [--concurrency C] [--rate HZ] [--loadgen-seed X] [--per-request]
+              batched inference engine + deterministic loadgen; responses are
+              bit-identical to direct single-request eval at any setting
+  infer       --model M [--budget F | --bits-from ...] [--samples N] [--index I]
+              one-shot inference (the serve path's bit-identity reference)
   eagl        --model M [--ckpt P]          offline EAGL metric (Fig. 2)
 
 backends: --backend sim|pjrt|auto (default auto).  sim = hermetic pure-Rust
@@ -408,6 +441,164 @@ fn cmd_exp(args: &Args) -> mpq::Result<()> {
     if per_model.len() > 1 {
         println!("{}", report::cross_model_table(&per_model));
     }
+    Ok(())
+}
+
+/// Resolve the precision assignment to serve: `--bits-from` looks up the
+/// winning sweep record at `--budget`, a bare `--budget` runs the
+/// selection directly (`--method`, default eagl), and neither serves the
+/// uniform `b_hi` baseline.
+fn serve_bits(
+    args: &Args,
+    co: &mut Coordinator<Box<dyn Backend>>,
+) -> mpq::Result<BitsConfig> {
+    if let Some(path) = args.opt_str("bits-from") {
+        mpq::ensure!(
+            args.opt_str("budget").is_some(),
+            "--bits-from needs --budget <frac> to pick the winning row"
+        );
+        let budget = args.f64("budget", 0.7)?;
+        let store = ResultStore::open(Path::new(path))?;
+        let (rec, bits) = co.bits_from_store(&store, budget)?;
+        println!(
+            "bits from {path}: {} @ budget {:.0}% (seed {}, metric {:.4})",
+            rec.method,
+            rec.budget_frac * 100.0,
+            rec.seed,
+            rec.metric
+        );
+        Ok(bits)
+    } else if args.opt_str("budget").is_some() {
+        let kind = MethodKind::parse(&args.str("method", "eagl"))?;
+        co.select(kind, args.f64("budget", 0.7)?)
+    } else {
+        Ok(BitsConfig::uniform(&co.graph, co.mcfg.b_hi))
+    }
+}
+
+/// Checkpoint to serve: the cached base checkpoint transformed for the
+/// precision assignment, optionally fine-tuned (`--ft-steps`, default 0
+/// for serving — pass a run's step count to serve the paper's protocol).
+fn serve_checkpoint(
+    args: &Args,
+    co: &mut Coordinator<Box<dyn Backend>>,
+    bits: &BitsConfig,
+) -> mpq::Result<mpq::ckpt::Checkpoint> {
+    let ck4 = co.base_checkpoint()?;
+    let ck = mpq::methods::prepare_mp_checkpoint(&ck4, &co.graph, bits, co.mcfg.b_hi)?;
+    let ft = args.usize("ft-steps", 0)?;
+    if ft == 0 {
+        return Ok(ck);
+    }
+    let mut state = TrainState::new(ck);
+    let tcfg = TrainConfig {
+        steps: ft,
+        lr0: 0.005,
+        seed: args.u64("seed", 0)?,
+        ..TrainConfig::default()
+    };
+    finetune(&mut co.rt, &mut state, &co.data, &bits.to_f32(), &tcfg)?;
+    Ok(state.params)
+}
+
+/// `mpq serve`: start the batched inference engine for the resolved
+/// (checkpoint, bits) pair and drive it with the deterministic loadgen.
+fn cmd_serve(args: &Args) -> mpq::Result<()> {
+    let (kind, model) = resolve_target(args)?;
+    let mut co = coordinator(args)?;
+    let bits = serve_bits(args, &mut co)?;
+    let ck = serve_checkpoint(args, &mut co, &bits)?;
+    let timeout_ms = args.f64("batch-timeout-ms", 1.0)?;
+    mpq::ensure!(
+        timeout_ms.is_finite() && timeout_ms >= 0.0,
+        "--batch-timeout-ms expects a non-negative number, got {timeout_ms}"
+    );
+    let cfg = serve::ServeConfig {
+        workers: co.workers,
+        max_batch: args.usize("max-batch", 32)?,
+        batch_timeout: Duration::from_secs_f64(timeout_ms / 1e3),
+        force_per_request: args.bool("per-request"),
+        warmup: true,
+    };
+    let model_s = model.clone();
+    let spawner: serve::Spawner = Arc::new(move || backend::open(kind, &model_s));
+    println!(
+        "serving {model} [{}]: {} group(s) at 2-bit, compression {:.2}x, {:.4} GBOPs",
+        kind.name(),
+        bits.count_at(&co.graph, 2),
+        mpq::quant::compression_ratio(&co.graph, &bits),
+        mpq::quant::gbops(&co.graph, &bits)
+    );
+    let engine = serve::Engine::start(spawner, ck, bits.to_f32(), cfg.clone())?;
+    println!(
+        "engine: {} worker(s), max-batch {}, timeout {:.1}ms, {} batching",
+        cfg.workers,
+        cfg.max_batch,
+        cfg.batch_timeout.as_secs_f64() * 1e3,
+        if engine.fused() { "fused" } else { "per-request" }
+    );
+    let mode = match args.str("mode", "closed").as_str() {
+        "closed" => serve::LoadMode::Closed {
+            concurrency: args.usize("concurrency", 8)?,
+        },
+        "open" => serve::LoadMode::Open {
+            rate_hz: args.f64("rate", 200.0)?,
+        },
+        other => mpq::bail!("--mode expects closed|open, got '{other}'"),
+    };
+    let spec = serve::LoadSpec {
+        requests: args.usize("requests", 256)?,
+        max_request_samples: args.usize("max-request", 4)?,
+        seed: args.u64("loadgen-seed", 42)?,
+        mode,
+    };
+    // run() verifies the serving invariants: every request answered
+    // exactly once, response ids monotone and contiguous.
+    let load = serve::loadgen::run(&engine, &co.data, &spec)?;
+    let snap = engine.drain()?;
+    print!("{}", report::serve_table(&snap, &load));
+    // The drained engine must account for exactly the loadgen's traffic,
+    // with no failures — this (plus run()'s own checks and drain()'s
+    // unresolved-request check) is what `make serve-smoke` gates on.
+    mpq::ensure!(
+        snap.completed == spec.requests as u64 && snap.failed == 0,
+        "serve: engine completed {}/{} request(s) with {} failure(s)",
+        snap.completed,
+        spec.requests,
+        snap.failed
+    );
+    println!(
+        "serve OK: {} response(s), ids monotone, clean drain",
+        load.responses.len()
+    );
+    Ok(())
+}
+
+/// `mpq infer`: one-shot inference — a direct single-request `eval_step`,
+/// the exact computation serve responses are bit-identical to.
+fn cmd_infer(args: &Args) -> mpq::Result<()> {
+    let mut co = coordinator(args)?;
+    let bits = serve_bits(args, &mut co)?;
+    let ck = serve_checkpoint(args, &mut co, &bits)?;
+    let samples = args.usize("samples", 1)?;
+    mpq::ensure!(samples > 0, "--samples must be at least 1");
+    let (x, y) = co.data.batch(Split::Eval, args.u64("index", 0)?, samples);
+    let task = co.rt.manifest().task;
+    let t0 = Instant::now();
+    let (loss, evalout) = co.rt.eval_step(&ck, &x, &y, &bits.to_f32())?;
+    let dt = t0.elapsed().as_secs_f64();
+    print!(
+        "infer {}: {} sample(s), loss {:.4}",
+        co.model, samples, loss
+    );
+    if evalout.len() == 1 {
+        print!(
+            ", {} {:.4}",
+            metric_name(task),
+            evalout.item() as f64 / samples as f64
+        );
+    }
+    println!(", {:.2} ms", dt * 1e3);
     Ok(())
 }
 

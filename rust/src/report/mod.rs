@@ -3,9 +3,11 @@
 
 use std::collections::BTreeMap;
 
+use crate::bench::fmt_s;
 use crate::coordinator::RunRecord;
 use crate::graph::Graph;
 use crate::quant::BitsConfig;
+use crate::serve::{LoadReport, MetricsSnapshot};
 use crate::stats;
 
 /// Mean ± std of the metric for each (method, budget) cell.
@@ -265,6 +267,43 @@ pub fn write_csv(cells: &[FrontierCell], path: &std::path::Path) -> crate::Resul
     }
     std::fs::write(path, s)?;
     Ok(())
+}
+
+/// Serving summary for one load run: throughput, the latency
+/// percentiles from the engine's histogram, and batching efficiency
+/// (`mpq serve` prints this; `make serve-smoke` exercises it).
+pub fn serve_table(snap: &MetricsSnapshot, load: &LoadReport) -> String {
+    let mut s = String::new();
+    s += &format!(
+        "requests   {:>8} ok, {} failed   samples {:>8}   wall {:.2}s\n",
+        snap.completed, snap.failed, load.total_samples, load.wall_s
+    );
+    s += &format!(
+        "throughput {:>8.1} req/s   {:>8.1} samples/s\n",
+        load.throughput_rps, load.samples_per_s
+    );
+    s += &format!(
+        "latency    mean {}  p50 {}  p95 {}  p99 {}  max {}\n",
+        fmt_s(snap.mean_latency_s),
+        fmt_s(snap.p50_s),
+        fmt_s(snap.p95_s),
+        fmt_s(snap.p99_s),
+        fmt_s(snap.max_latency_s)
+    );
+    s += &format!(
+        "batches    {:>8}   occupancy {:.2} samples/batch   {:.2} chunks/batch\n",
+        snap.batches,
+        snap.mean_occupancy(),
+        if snap.batches > 0 {
+            snap.batch_chunks as f64 / snap.batches as f64
+        } else {
+            f64::NAN
+        }
+    );
+    if load.mean_accuracy.is_finite() {
+        s += &format!("accuracy   {:>8.4} (sample-weighted)\n", load.mean_accuracy);
+    }
+    s
 }
 
 /// Cross-model overview (the `mpq exp` / multi-model `mpq report`

@@ -1,0 +1,502 @@
+//! Dynamic micro-batching: the submission queue, size/deadline batch
+//! closing policy, request splitting, and plan-order response reassembly.
+//!
+//! ## Bit-identity contract
+//!
+//! Every response must be **bit-identical to a direct single-request
+//! `eval_step`** on that request's samples, at any batch composition,
+//! `max_batch`, and worker count.  The batcher guarantees this by
+//! construction rather than by tolerance:
+//!
+//! * the unit of fused execution is a **chunk** — a contiguous run of one
+//!   request's samples, `≤ max_batch` of them.  Chunk boundaries are a
+//!   pure function of (request size, `max_batch`), never of queue state,
+//!   batch composition, or worker count;
+//! * the fused forward (`infer_step`) produces **per-sample logits**, and
+//!   every kernel under it is row-independent (documented accumulation
+//!   order in [`crate::kernels::gemm`]), so a sample's logits do not
+//!   depend on which batch it rode in;
+//! * reassembly writes each chunk's logit rows back into the request's
+//!   buffer at the chunk's offset (plan order), and only when the **whole
+//!   request** is present runs one [`softmax_ce`] over all of its samples
+//!   — the exact computation `eval_step` performs on that request alone.
+//!
+//! In the per-request fallback mode (backends without an `infer_step`
+//! entry) a chunk is always a whole request and the worker's `eval_step`
+//! call *is* the reference computation, so identity is trivial.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::kernels::gemm::softmax_ce;
+use crate::tensor::Tensor;
+
+use super::metrics::Metrics;
+
+/// One served response.  `loss`/`evalout` carry exactly what a direct
+/// [`crate::backend::Backend::eval_step`] on the request's samples
+/// returns (for classification: mean loss and the correct-count scalar).
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub samples: usize,
+    pub loss: f32,
+    pub evalout: Tensor,
+    /// Submit→completion latency as observed by the engine.
+    pub latency_s: f64,
+}
+
+impl Response {
+    /// Classification accuracy (correct / samples) when `evalout` is the
+    /// scalar correct count; NaN for other tasks.
+    pub fn accuracy(&self) -> f64 {
+        if self.evalout.len() == 1 {
+            self.evalout.item() as f64 / self.samples as f64
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+/// One-shot completion slot a client blocks on.
+pub(crate) struct Promise {
+    slot: Mutex<Option<crate::Result<Response>>>,
+    cv: Condvar,
+}
+
+impl Promise {
+    fn new() -> Promise {
+        Promise {
+            slot: Mutex::new(None),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn fulfill(&self, r: crate::Result<Response>) {
+        let mut slot = self.slot.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(r);
+        }
+        self.cv.notify_all();
+    }
+}
+
+/// Handle returned by [`crate::serve::Engine::submit`]; wait for the
+/// response with [`Ticket::wait`].
+pub struct Ticket {
+    pub(crate) id: u64,
+    pub(crate) promise: Arc<Promise>,
+}
+
+impl Ticket {
+    /// The engine-assigned request id (strictly increasing in submission
+    /// order).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the engine fulfills this request.
+    pub fn wait(self) -> crate::Result<Response> {
+        let mut slot = self.promise.slot.lock().unwrap();
+        loop {
+            if let Some(r) = slot.take() {
+                return r;
+            }
+            slot = self.promise.cv.wait(slot).unwrap();
+        }
+    }
+}
+
+/// Mutable reassembly state of one in-flight request.
+struct PendingState {
+    /// Concatenated per-sample logits, `[samples * classes]`, filled
+    /// chunk by chunk (fused mode only).
+    logits: Vec<f32>,
+    classes: usize,
+    done_chunks: usize,
+    finished: bool,
+}
+
+/// One in-flight request: immutable inputs plus the reassembly state.
+pub(crate) struct Pending {
+    pub id: u64,
+    pub x: Tensor,
+    pub y: Tensor,
+    pub samples: usize,
+    pub submitted: Instant,
+    total_chunks: usize,
+    state: Mutex<PendingState>,
+    promise: Arc<Promise>,
+    metrics: Arc<Metrics>,
+}
+
+impl Pending {
+    pub fn new(
+        id: u64,
+        x: Tensor,
+        y: Tensor,
+        samples: usize,
+        total_chunks: usize,
+        metrics: Arc<Metrics>,
+    ) -> Pending {
+        Pending {
+            id,
+            x,
+            y,
+            samples,
+            submitted: Instant::now(),
+            total_chunks,
+            state: Mutex::new(PendingState {
+                logits: Vec::new(),
+                classes: 0,
+                done_chunks: 0,
+                finished: false,
+            }),
+            promise: Arc::new(Promise::new()),
+            metrics,
+        }
+    }
+
+    pub fn ticket(&self) -> Ticket {
+        Ticket {
+            id: self.id,
+            promise: Arc::clone(&self.promise),
+        }
+    }
+
+    fn finish(&self, state: &mut PendingState, r: crate::Result<Response>) {
+        state.finished = true;
+        match &r {
+            Ok(resp) => self
+                .metrics
+                .record_request(self.samples as u64, Duration::from_secs_f64(resp.latency_s)),
+            Err(_) => self.metrics.record_failed(),
+        }
+        self.promise.fulfill(r);
+    }
+
+    /// Fused-mode chunk completion: write `len` logit rows at sample
+    /// offset `offset`; when the last chunk lands, run one softmax-CE
+    /// over the whole request — the identical computation a direct
+    /// single-request `eval_step` performs — and fulfill the ticket.
+    pub fn complete_chunk(&self, offset: usize, len: usize, classes: usize, rows: &[f32]) {
+        let mut st = self.state.lock().unwrap();
+        if st.finished {
+            return;
+        }
+        if st.classes == 0 {
+            st.classes = classes;
+            st.logits.resize(self.samples * classes, 0.0);
+        }
+        debug_assert_eq!(st.classes, classes);
+        st.logits[offset * classes..(offset + len) * classes].copy_from_slice(rows);
+        st.done_chunks += 1;
+        if st.done_chunks < self.total_chunks {
+            return;
+        }
+        // Out-of-range labels would index past the logit row inside
+        // softmax_ce — a worker-thread panic that strands the ticket, so
+        // convert them into a clean request failure instead.
+        let y = self.y.i32s();
+        if let Some(&bad) = y.iter().find(|&&c| c < 0 || c as usize >= classes) {
+            let err = crate::err!(
+                "serve request {}: label {bad} out of range for {classes} class(es)",
+                self.id
+            );
+            self.finish(&mut st, Err(err));
+            return;
+        }
+        let (loss, correct) = softmax_ce(&st.logits, y, self.samples, classes, None);
+        let resp = Response {
+            id: self.id,
+            samples: self.samples,
+            loss,
+            // Same shape/content as the sim backend's eval_step evalout.
+            evalout: Tensor::from_f32(&[], vec![correct as f32]),
+            latency_s: self.submitted.elapsed().as_secs_f64(),
+        };
+        self.finish(&mut st, Ok(resp));
+    }
+
+    /// Per-request-mode completion: the worker's own `eval_step` outputs.
+    pub fn complete_whole(&self, loss: f32, evalout: Tensor) {
+        let mut st = self.state.lock().unwrap();
+        if st.finished {
+            return;
+        }
+        let resp = Response {
+            id: self.id,
+            samples: self.samples,
+            loss,
+            evalout,
+            latency_s: self.submitted.elapsed().as_secs_f64(),
+        };
+        self.finish(&mut st, Ok(resp));
+    }
+
+    /// Fail the whole request (first failure wins; later chunk
+    /// completions become no-ops).
+    pub fn fail(&self, msg: &str) {
+        let mut st = self.state.lock().unwrap();
+        if st.finished {
+            return;
+        }
+        let err = crate::err!("serve request {}: {msg}", self.id);
+        self.finish(&mut st, Err(err));
+    }
+}
+
+/// A schedulable unit: `len` samples of one request starting at sample
+/// `offset`.  Chunk geometry depends only on (request size, max_batch).
+pub(crate) struct ChunkJob {
+    pub pending: Arc<Pending>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// What a worker should do next (see [`BatchQueue::next_batch`]).
+pub(crate) enum NextBatch {
+    /// Execute these chunks as one micro-batch.
+    Ready(Vec<ChunkJob>),
+    /// Queue is non-empty but the batch is still filling: wait until the
+    /// oldest request's deadline.
+    Wait(Instant),
+    /// Queue is empty.
+    Idle,
+}
+
+/// The shared submission queue with the size/deadline closing policy.
+/// Guarded by one engine-level mutex; everything here is O(chunk count).
+pub(crate) struct BatchQueue {
+    queue: VecDeque<ChunkJob>,
+    queued_samples: usize,
+    pub max_batch: usize,
+    pub timeout: Duration,
+    pub draining: bool,
+    pub fatal: Option<String>,
+    next_id: u64,
+}
+
+impl BatchQueue {
+    pub fn new(max_batch: usize, timeout: Duration) -> BatchQueue {
+        BatchQueue {
+            queue: VecDeque::new(),
+            queued_samples: 0,
+            max_batch: max_batch.max(1),
+            timeout,
+            draining: false,
+            fatal: None,
+            next_id: 0,
+        }
+    }
+
+    /// Next request id (strictly increasing; allocated under the queue
+    /// lock so submission order defines the id order).
+    pub fn alloc_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Number of chunks a request of `samples` splits into.
+    pub fn chunks_for(&self, samples: usize, split: bool) -> usize {
+        if split {
+            (samples + self.max_batch - 1) / self.max_batch
+        } else {
+            1
+        }
+    }
+
+    /// Enqueue a request: in fused mode (`split`) as `max_batch`-sized
+    /// chunks, otherwise as one whole-request chunk.
+    pub fn enqueue(&mut self, pending: &Arc<Pending>, split: bool) {
+        if split {
+            let mut offset = 0;
+            while offset < pending.samples {
+                let len = self.max_batch.min(pending.samples - offset);
+                self.queue.push_back(ChunkJob {
+                    pending: Arc::clone(pending),
+                    offset,
+                    len,
+                });
+                offset += len;
+            }
+        } else {
+            self.queue.push_back(ChunkJob {
+                pending: Arc::clone(pending),
+                offset: 0,
+                len: pending.samples,
+            });
+        }
+        self.queued_samples += pending.samples;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// The batch closing policy.  A batch closes when enough samples are
+    /// queued to fill `max_batch`, when the oldest queued request has
+    /// waited `timeout`, or when the engine is draining; otherwise the
+    /// caller sleeps until the deadline.  Chunks are popped FIFO while
+    /// they fit (a whole-request chunk larger than `max_batch` — the
+    /// per-request fallback mode — rides alone).
+    pub fn next_batch(&mut self, now: Instant) -> NextBatch {
+        let Some(front) = self.queue.front() else {
+            return NextBatch::Idle;
+        };
+        let deadline = front.pending.submitted + self.timeout;
+        let ready = self.draining || self.queued_samples >= self.max_batch || now >= deadline;
+        if !ready {
+            return NextBatch::Wait(deadline);
+        }
+        let first = self.queue.pop_front().unwrap();
+        let mut total = first.len;
+        let mut batch = vec![first];
+        while let Some(next) = self.queue.front() {
+            if total + next.len > self.max_batch {
+                break;
+            }
+            total += next.len;
+            batch.push(self.queue.pop_front().unwrap());
+        }
+        self.queued_samples = self.queued_samples.saturating_sub(total);
+        NextBatch::Ready(batch)
+    }
+
+    /// Pop everything (the fatal-error path fails each job's request).
+    pub fn drain_all(&mut self) -> Vec<ChunkJob> {
+        self.queued_samples = 0;
+        self.queue.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pending(id: u64, samples: usize, total_chunks: usize) -> Arc<Pending> {
+        let x = Tensor::zeros(&[samples, 2]);
+        let y = Tensor::zeros_i32(&[samples]);
+        Arc::new(Pending::new(id, x, y, samples, total_chunks, Arc::new(Metrics::new())))
+    }
+
+    #[test]
+    fn splits_into_max_batch_chunks_with_contiguous_offsets() {
+        let mut q = BatchQueue::new(4, Duration::from_millis(10));
+        assert_eq!(q.chunks_for(9, true), 3);
+        assert_eq!(q.chunks_for(9, false), 1);
+        let p = pending(0, 9, 3);
+        q.enqueue(&p, true);
+        let NextBatch::Ready(b) = q.next_batch(Instant::now() + Duration::from_secs(1)) else {
+            panic!("expected ready batch after deadline");
+        };
+        // One full chunk fits per 4-sample batch.
+        assert_eq!(b.len(), 1);
+        assert_eq!((b[0].offset, b[0].len), (0, 4));
+        let NextBatch::Ready(b) = q.next_batch(Instant::now() + Duration::from_secs(1)) else {
+            panic!()
+        };
+        assert_eq!((b[0].offset, b[0].len), (4, 4));
+        let NextBatch::Ready(b) = q.next_batch(Instant::now() + Duration::from_secs(1)) else {
+            panic!()
+        };
+        assert_eq!((b[0].offset, b[0].len), (8, 1));
+        assert!(matches!(q.next_batch(Instant::now()), NextBatch::Idle));
+    }
+
+    #[test]
+    fn size_trigger_fills_up_to_max_batch() {
+        let mut q = BatchQueue::new(8, Duration::from_secs(10));
+        for id in 0..4 {
+            q.enqueue(&pending(id, 3, 1), true);
+        }
+        // 12 samples queued >= 8 → ready immediately, takes 3+3 and stops
+        // before overflowing.
+        let NextBatch::Ready(b) = q.next_batch(Instant::now()) else {
+            panic!("size trigger must close the batch")
+        };
+        assert_eq!(b.iter().map(|c| c.len).sum::<usize>(), 6);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn deadline_trigger_and_wait() {
+        let mut q = BatchQueue::new(64, Duration::from_millis(50));
+        let p = pending(0, 2, 1);
+        let t0 = p.submitted;
+        q.enqueue(&p, true);
+        match q.next_batch(t0) {
+            NextBatch::Wait(deadline) => assert_eq!(deadline, t0 + Duration::from_millis(50)),
+            _ => panic!("under-full batch before the deadline must wait"),
+        }
+        let NextBatch::Ready(b) = q.next_batch(t0 + Duration::from_millis(51)) else {
+            panic!("deadline must close the partial batch")
+        };
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].len, 2);
+    }
+
+    #[test]
+    fn draining_flushes_immediately_and_oversized_fallback_chunk_rides_alone() {
+        let mut q = BatchQueue::new(4, Duration::from_secs(10));
+        q.enqueue(&pending(0, 9, 1), false); // per-request mode: no split
+        q.enqueue(&pending(1, 2, 1), false);
+        q.draining = true;
+        let NextBatch::Ready(b) = q.next_batch(Instant::now()) else {
+            panic!("draining must flush")
+        };
+        assert_eq!(b.len(), 1, "oversized whole-request chunk rides alone");
+        assert_eq!(b[0].len, 9);
+        let NextBatch::Ready(b) = q.next_batch(Instant::now()) else { panic!() };
+        assert_eq!(b[0].len, 2);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn ids_are_strictly_increasing() {
+        let mut q = BatchQueue::new(4, Duration::from_millis(1));
+        assert_eq!((q.alloc_id(), q.alloc_id(), q.alloc_id()), (0, 1, 2));
+    }
+
+    #[test]
+    fn chunk_reassembly_runs_one_softmax_over_the_whole_request() {
+        // 3 samples, 2 classes, reassembled from two chunks out of order.
+        let metrics = Arc::new(Metrics::new());
+        let y = Tensor::from_i32(&[3], vec![0, 1, 0]);
+        let p = Pending::new(7, Tensor::zeros(&[3, 1]), y.clone(), 3, 2, metrics);
+        let t = p.ticket();
+        let logits = vec![2.0f32, -1.0, 0.5, 1.5, 3.0, 0.0];
+        // Chunk 2 (sample 2) lands before chunk 1 (samples 0..2).
+        p.complete_chunk(2, 1, 2, &logits[4..6]);
+        p.complete_chunk(0, 2, 2, &logits[0..4]);
+        let r = t.wait().unwrap();
+        let (ref_loss, ref_correct) = softmax_ce(&logits, y.i32s(), 3, 2, None);
+        assert_eq!(r.loss.to_bits(), ref_loss.to_bits());
+        assert_eq!(r.evalout.item() as usize, ref_correct);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.samples, 3);
+    }
+
+    #[test]
+    fn out_of_range_label_fails_cleanly_instead_of_panicking() {
+        let y = Tensor::from_i32(&[2], vec![0, 9]); // 9 >= 2 classes
+        let p = Pending::new(5, Tensor::zeros(&[2, 1]), y, 2, 1, Arc::new(Metrics::new()));
+        let t = p.ticket();
+        p.complete_chunk(0, 2, 2, &[0.1, 0.2, 0.3, 0.4]);
+        let err = t.wait().unwrap_err().to_string();
+        assert!(err.contains("label 9 out of range"), "{err}");
+    }
+
+    #[test]
+    fn fail_wins_once_and_later_chunks_are_ignored() {
+        let p = pending(3, 4, 2);
+        let t = p.ticket();
+        p.fail("backend exploded");
+        p.complete_chunk(0, 2, 2, &[0.0; 4]); // ignored
+        let err = t.wait().unwrap_err().to_string();
+        assert!(err.contains("request 3"), "{err}");
+        assert!(err.contains("backend exploded"), "{err}");
+    }
+}

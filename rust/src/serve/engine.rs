@@ -1,0 +1,413 @@
+//! The serving engine: N worker threads over one shared micro-batching
+//! queue, each worker holding its own [`Backend`] instance.
+//!
+//! Per-worker backends matter twice over: PJRT clients are not `Sync`,
+//! and the sim backend's [`crate::kernels`] weight-code/featurizer caches
+//! are per-instance — a worker quantizes each layer's weights **once**
+//! (on warmup or the first batch) and every subsequent request reuses the
+//! codes, instead of re-materializing them per request.
+//!
+//! Execution modes (chosen at [`Engine::start`] from the manifest):
+//!
+//! * **fused** — the backend exposes an `infer_step` entry returning
+//!   per-sample logits and the task is classification: chunks from many
+//!   requests are concatenated into one forward pass of `≤ max_batch`
+//!   samples, and responses are reassembled per request (see
+//!   [`super::batcher`] for the bit-identity argument);
+//! * **per-request** — fallback for backends without `infer_step` (or
+//!   when [`ServeConfig::force_per_request`] is set): a micro-batch is a
+//!   group of whole requests one worker dequeues together and runs
+//!   through `eval_step` back to back on its warm caches.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::backend::{Backend, Task};
+use crate::ckpt::Checkpoint;
+use crate::tensor::{DType, Tensor};
+
+use super::batcher::{BatchQueue, ChunkJob, NextBatch, Pending, Ticket};
+use super::metrics::{Metrics, MetricsSnapshot};
+
+/// Source of per-worker backend instances (`Arc` so every worker thread
+/// can hold it; cf. the coordinator's boxed [`crate::coordinator::Spawner`]).
+pub type Spawner = Arc<dyn Fn() -> crate::Result<Box<dyn Backend>> + Send + Sync>;
+
+/// Engine knobs.
+#[derive(Clone)]
+pub struct ServeConfig {
+    /// Worker threads, each with its own backend.
+    pub workers: usize,
+    /// Micro-batch sample budget; also the chunk size oversized requests
+    /// split into (fused mode).
+    pub max_batch: usize,
+    /// How long an under-full batch may wait for more traffic before a
+    /// partial batch is dispatched.
+    pub batch_timeout: Duration,
+    /// Disable the fused `infer_step` path even when available (testing
+    /// and apples-to-apples comparisons).
+    pub force_per_request: bool,
+    /// Run one throwaway single-sample inference per worker at startup so
+    /// weight codes are materialized before the first real request.
+    pub warmup: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            workers: crate::coordinator::default_workers(),
+            max_batch: 32,
+            batch_timeout: Duration::from_millis(1),
+            force_per_request: false,
+            warmup: true,
+        }
+    }
+}
+
+/// State shared between the submit path and the worker threads.
+struct Shared {
+    q: Mutex<BatchQueue>,
+    cv: Condvar,
+    metrics: Arc<Metrics>,
+    ckpt: Checkpoint,
+    bits: Vec<f32>,
+    fused: bool,
+    /// Per-sample x dims (manifest eval shape minus the batch dim).
+    sample_dims: Vec<usize>,
+    x_dtype: DType,
+    y_dtype: DType,
+}
+
+/// A running serving engine.  `submit` is thread-safe; [`Engine::drain`]
+/// stops intake, finishes all queued work, and joins the workers.
+pub struct Engine {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Validate the model contract, pick the execution mode, and spawn
+    /// the worker pool.  `ckpt` is the checkpoint to serve and `bits`
+    /// the per-layer precision vector (`BitsConfig::to_f32`).
+    pub fn start(
+        spawner: Spawner,
+        ckpt: Checkpoint,
+        bits: Vec<f32>,
+        cfg: ServeConfig,
+    ) -> crate::Result<Engine> {
+        crate::ensure!(cfg.workers >= 1, "serve: --workers must be at least 1");
+        crate::ensure!(cfg.max_batch >= 1, "serve: --max-batch must be at least 1");
+        // Probe one backend for the model contract, then let every worker
+        // open its own.  The probe cannot be handed to a worker thread:
+        // `Box<dyn Backend>` carries no `Send` bound (PJRT clients must
+        // stay on the thread that opened them), so backends are only ever
+        // constructed inside their worker.
+        let (fused, sample_dims, x_dtype, y_dtype) = {
+            let probe = spawner()?;
+            let m = probe.manifest();
+            crate::ensure!(
+                bits.len() == m.n_bits,
+                "serve: bits vector has {} entries, model '{}' expects {}",
+                bits.len(),
+                m.model,
+                m.n_bits
+            );
+            crate::ensure!(
+                ckpt.names.len() == m.n_params(),
+                "serve: checkpoint has {} tensors, model '{}' expects {}",
+                ckpt.names.len(),
+                m.model,
+                m.n_params()
+            );
+            // Fused batching needs per-sample logits (infer_step), the
+            // classification reassembly semantics, and f32 inputs (the
+            // chunk concatenation copies f32 rows); anything else takes
+            // the per-request eval_step path.
+            let fused = !cfg.force_per_request
+                && m.task == Task::Cls
+                && m.x_dtype == DType::F32
+                && m.entries.contains_key("infer_step");
+            let dims = m.x_eval_shape.get(1..).unwrap_or(&[]).to_vec();
+            crate::ensure!(
+                !dims.is_empty(),
+                "serve: model '{}' manifest has no eval input shape",
+                m.model
+            );
+            (fused, dims, m.x_dtype, m.y_dtype)
+        };
+        let shared = Arc::new(Shared {
+            q: Mutex::new(BatchQueue::new(cfg.max_batch, cfg.batch_timeout)),
+            cv: Condvar::new(),
+            metrics: Arc::new(Metrics::new()),
+            ckpt,
+            bits,
+            fused,
+            sample_dims,
+            x_dtype,
+            y_dtype,
+        });
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for wi in 0..cfg.workers {
+            let sh = Arc::clone(&shared);
+            let sp = Arc::clone(&spawner);
+            let warmup = cfg.warmup;
+            let handle = std::thread::Builder::new()
+                .name(format!("mpq-serve-{wi}"))
+                .spawn(move || worker_loop(sh, sp, warmup))?;
+            handles.push(handle);
+        }
+        Ok(Engine { shared, handles })
+    }
+
+    /// Whether the fused `infer_step` batching path is active.
+    pub fn fused(&self) -> bool {
+        self.shared.fused
+    }
+
+    /// Submit one request (`x`: `[samples, <per-sample dims>]`, `y`:
+    /// matching labels).  Returns a [`Ticket`] whose id is strictly
+    /// increasing in submission order.
+    pub fn submit(&self, x: Tensor, y: Tensor) -> crate::Result<Ticket> {
+        let samples = x.shape.first().copied().unwrap_or(0);
+        crate::ensure!(samples > 0, "serve: request must contain at least one sample");
+        crate::ensure!(
+            x.shape.len() == self.shared.sample_dims.len() + 1
+                && x.shape[1..] == self.shared.sample_dims[..],
+            "serve: request x shape {:?} does not match per-sample dims {:?}",
+            x.shape,
+            self.shared.sample_dims
+        );
+        crate::ensure!(
+            x.dtype() == self.shared.x_dtype,
+            "serve: request x dtype {:?} does not match the model's {:?}",
+            x.dtype(),
+            self.shared.x_dtype
+        );
+        crate::ensure!(
+            y.shape.first().copied().unwrap_or(0) == samples,
+            "serve: y covers {} sample(s) but x has {}",
+            y.shape.first().copied().unwrap_or(0),
+            samples
+        );
+        // Reject label buffers a backend (or the fused softmax) would
+        // choke on — a panic inside a worker thread would strand the
+        // ticket forever, so labels must be validated at the door.
+        crate::ensure!(
+            y.dtype() == self.shared.y_dtype,
+            "serve: request y dtype {:?} does not match the model's {:?}",
+            y.dtype(),
+            self.shared.y_dtype
+        );
+        if self.shared.fused {
+            crate::ensure!(
+                y.shape.len() == 1,
+                "serve: classification labels must be rank-1 [samples], got shape {:?}",
+                y.shape
+            );
+        }
+        let ticket = {
+            let mut q = self.shared.q.lock().unwrap();
+            crate::ensure!(!q.draining, "serve: engine is draining — submission rejected");
+            if let Some(f) = &q.fatal {
+                crate::bail!("serve: engine failed: {f}");
+            }
+            let id = q.alloc_id();
+            let total_chunks = q.chunks_for(samples, self.shared.fused);
+            let pending = Arc::new(Pending::new(
+                id,
+                x,
+                y,
+                samples,
+                total_chunks,
+                Arc::clone(&self.shared.metrics),
+            ));
+            let ticket = pending.ticket();
+            q.enqueue(&pending, self.shared.fused);
+            self.shared.metrics.record_submitted();
+            ticket
+        };
+        // Wake every idle worker: a multi-chunk request can fan out
+        // across several of them at once.
+        self.shared.cv.notify_all();
+        Ok(ticket)
+    }
+
+    /// Point-in-time metrics (exact after [`drain`](Engine::drain)).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Graceful shutdown: reject new submissions, flush every queued
+    /// batch (ignoring the batch timeout), join the workers, and verify
+    /// nothing was left unresolved.
+    pub fn drain(mut self) -> crate::Result<MetricsSnapshot> {
+        {
+            self.shared.q.lock().unwrap().draining = true;
+        }
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        {
+            let q = self.shared.q.lock().unwrap();
+            if let Some(f) = &q.fatal {
+                crate::bail!("serve: engine failed before drain completed: {f}");
+            }
+            crate::ensure!(q.is_empty(), "serve: drain left work queued");
+        }
+        let snap = self.shared.metrics.snapshot();
+        crate::ensure!(
+            snap.submitted == snap.completed + snap.failed,
+            "serve: drain left {} request(s) unresolved",
+            snap.submitted - snap.completed - snap.failed
+        );
+        Ok(snap)
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        if self.handles.is_empty() {
+            return; // already drained
+        }
+        {
+            self.shared.q.lock().unwrap().draining = true;
+        }
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Record an unrecoverable engine error: fail everything queued and
+/// reject all future submissions.
+fn fatal(sh: &Shared, msg: &str) {
+    crate::warn!("serve: fatal: {msg}");
+    let jobs = {
+        let mut q = sh.q.lock().unwrap();
+        q.fatal = Some(msg.to_string());
+        q.drain_all()
+    };
+    for j in &jobs {
+        j.pending.fail(msg);
+    }
+    sh.cv.notify_all();
+}
+
+fn worker_loop(sh: Arc<Shared>, spawner: Spawner, warmup: bool) {
+    let mut be = match spawner() {
+        Ok(b) => b,
+        Err(e) => {
+            fatal(&sh, &format!("worker backend open failed: {e}"));
+            return;
+        }
+    };
+    if warmup {
+        warmup_backend(&sh, &mut be);
+    }
+    let mut guard = sh.q.lock().unwrap();
+    loop {
+        if guard.fatal.is_some() {
+            return;
+        }
+        match guard.next_batch(Instant::now()) {
+            NextBatch::Ready(batch) => {
+                drop(guard);
+                sh.metrics.record_batch(
+                    batch.len() as u64,
+                    batch.iter().map(|c| c.len as u64).sum(),
+                );
+                execute_batch(&sh, &mut be, &batch);
+                guard = sh.q.lock().unwrap();
+            }
+            NextBatch::Wait(deadline) => {
+                let dur = deadline.saturating_duration_since(Instant::now());
+                let (g, _) = sh.cv.wait_timeout(guard, dur).unwrap();
+                guard = g;
+            }
+            NextBatch::Idle => {
+                if guard.draining {
+                    return;
+                }
+                guard = sh.cv.wait(guard).unwrap();
+            }
+        }
+    }
+}
+
+/// Best-effort single-sample inference so the worker's weight-code cache
+/// is populated before real traffic (results are identical either way —
+/// the caches are semantically transparent).
+fn warmup_backend(sh: &Shared, be: &mut Box<dyn Backend>) {
+    let mut shape = vec![1usize];
+    shape.extend_from_slice(&sh.sample_dims);
+    let x = match sh.x_dtype {
+        DType::F32 => Tensor::zeros(&shape),
+        DType::I32 => Tensor::zeros_i32(&shape),
+    };
+    if sh.fused {
+        let _ = be.infer_step(&sh.ckpt, &x, &sh.bits);
+    } else {
+        let y = Tensor::zeros_i32(&[1]);
+        let _ = be.eval_step(&sh.ckpt, &x, &y, &sh.bits);
+    }
+}
+
+fn execute_batch(sh: &Shared, be: &mut Box<dyn Backend>, batch: &[ChunkJob]) {
+    if sh.fused {
+        execute_fused(sh, be, batch);
+    } else {
+        execute_per_request(sh, be, batch);
+    }
+}
+
+/// Fused mode: one forward pass over the concatenated chunk samples,
+/// then per-request reassembly (row-independent kernels make the logits
+/// independent of batch composition — see [`super::batcher`]).
+fn execute_fused(sh: &Shared, be: &mut Box<dyn Backend>, batch: &[ChunkJob]) {
+    let row: usize = sh.sample_dims.iter().product();
+    let total: usize = batch.iter().map(|c| c.len).sum();
+    let mut buf = Vec::with_capacity(total * row);
+    for c in batch {
+        let xs = c.pending.x.f32s();
+        buf.extend_from_slice(&xs[c.offset * row..(c.offset + c.len) * row]);
+    }
+    let mut shape = vec![total];
+    shape.extend_from_slice(&sh.sample_dims);
+    let x = Tensor::from_f32(&shape, buf);
+    match be.infer_step(&sh.ckpt, &x, &sh.bits) {
+        Ok(logits) => {
+            let classes = logits.shape.get(1).copied().unwrap_or(1);
+            let ls = logits.f32s();
+            let mut off = 0usize;
+            for c in batch {
+                c.pending.complete_chunk(
+                    c.offset,
+                    c.len,
+                    classes,
+                    &ls[off * classes..(off + c.len) * classes],
+                );
+                off += c.len;
+            }
+        }
+        Err(e) => {
+            let msg = format!("infer_step failed: {e}");
+            for c in batch {
+                c.pending.fail(&msg);
+            }
+        }
+    }
+}
+
+/// Fallback mode: each chunk is a whole request; the worker's `eval_step`
+/// call *is* the reference computation.
+fn execute_per_request(sh: &Shared, be: &mut Box<dyn Backend>, batch: &[ChunkJob]) {
+    for c in batch {
+        match be.eval_step(&sh.ckpt, &c.pending.x, &c.pending.y, &sh.bits) {
+            Ok((loss, evalout)) => c.pending.complete_whole(loss, evalout),
+            Err(e) => c.pending.fail(&format!("eval_step failed: {e}")),
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! Deterministic seeded load generator over [`Dataset`] inputs.
+//!
+//! Request *content* is a pure function of (loadgen seed, request index):
+//! request `i` carries `size_i` samples (seeded RNG in
+//! `1..=max_request_samples`) drawn from the dataset's eval split at a
+//! dedicated index range.  Two runs with the same spec therefore submit
+//! bit-identical requests — and because the engine's responses are
+//! bit-identical to direct single-request evaluation at any worker count
+//! or batch composition, whole load runs are reproducible end to end
+//! (asserted in `rust/tests/serve_integration.rs`).
+//!
+//! Two arrival models:
+//!
+//! * **closed-loop** — `concurrency` clients, each submitting its next
+//!   request only after the previous response returns (classic
+//!   latency-bound serving benchmark);
+//! * **open-loop** — requests submitted at a fixed rate regardless of
+//!   completions (throughput/saturation benchmark), all tickets awaited
+//!   at the end.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::data::{Dataset, Split};
+use crate::rng::Pcg32;
+use crate::tensor::Tensor;
+
+use super::batcher::Response;
+use super::engine::Engine;
+
+/// Eval-split index base for loadgen batches, clear of the indices the
+/// evaluation loop replays (0..eval_batches).
+const LOADGEN_INDEX_BASE: u64 = 1_000;
+
+/// Arrival model.
+#[derive(Debug, Clone, Copy)]
+pub enum LoadMode {
+    /// `concurrency` clients in submit→wait loops.
+    Closed { concurrency: usize },
+    /// Fixed-rate submission (requests per second), waited at the end.
+    Open { rate_hz: f64 },
+}
+
+/// One load run's specification.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    pub requests: usize,
+    /// Request sizes are seeded-uniform in `1..=max_request_samples`.
+    pub max_request_samples: usize,
+    pub seed: u64,
+    pub mode: LoadMode,
+}
+
+/// Outcome of one load run.  `responses[i]` answers request `i` of the
+/// deterministic request stream (request-index order — engine ids can be
+/// interleaved differently across runs by closed-loop client racing, so
+/// index order is what makes whole runs comparable bit for bit).
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub wall_s: f64,
+    pub responses: Vec<Response>,
+    pub total_samples: usize,
+    pub throughput_rps: f64,
+    pub samples_per_s: f64,
+    /// Sample-weighted classification accuracy (NaN for non-cls tasks).
+    pub mean_accuracy: f64,
+}
+
+/// The deterministic request set for a spec: `(x, y)` per request.
+pub fn request_set(data: &Dataset, spec: &LoadSpec) -> Vec<(Tensor, Tensor)> {
+    let mut rng = Pcg32::new(spec.seed, 0x6c6f_6164); // "load"
+    (0..spec.requests)
+        .map(|i| {
+            let size = 1 + rng.below(spec.max_request_samples as u32) as usize;
+            data.batch(Split::Eval, LOADGEN_INDEX_BASE + i as u64, size)
+        })
+        .collect()
+}
+
+/// Drive `engine` with the spec's deterministic request stream and
+/// verify the serving invariants: every request answered exactly once,
+/// response ids monotone and contiguous, nonzero wall time.
+pub fn run(engine: &Engine, data: &Dataset, spec: &LoadSpec) -> crate::Result<LoadReport> {
+    crate::ensure!(spec.requests >= 1, "loadgen: need at least one request");
+    crate::ensure!(
+        spec.max_request_samples >= 1,
+        "loadgen: --max-request must be at least 1"
+    );
+    let inputs = request_set(data, spec);
+    // (request index, response) pairs — collected in completion order,
+    // re-sorted into request order below.
+    let responses: Mutex<Vec<(usize, Response)>> = Mutex::new(Vec::with_capacity(spec.requests));
+    let first_err: Mutex<Option<crate::error::Error>> = Mutex::new(None);
+    let t0 = Instant::now();
+    match spec.mode {
+        LoadMode::Closed { concurrency } => {
+            let clients = concurrency.max(1).min(spec.requests);
+            std::thread::scope(|scope| {
+                for ci in 0..clients {
+                    let inputs = &inputs;
+                    let responses = &responses;
+                    let first_err = &first_err;
+                    scope.spawn(move || {
+                        let mut i = ci;
+                        while i < inputs.len() {
+                            if first_err.lock().unwrap().is_some() {
+                                return;
+                            }
+                            let (x, y) = inputs[i].clone();
+                            match engine.submit(x, y).and_then(|t| t.wait()) {
+                                Ok(r) => responses.lock().unwrap().push((i, r)),
+                                Err(e) => {
+                                    first_err.lock().unwrap().get_or_insert(e);
+                                    return;
+                                }
+                            }
+                            i += clients;
+                        }
+                    });
+                }
+            });
+        }
+        LoadMode::Open { rate_hz } => {
+            crate::ensure!(rate_hz > 0.0, "loadgen: --rate must be positive");
+            let interval = Duration::from_secs_f64(1.0 / rate_hz);
+            let mut tickets = Vec::with_capacity(spec.requests);
+            for (i, (x, y)) in inputs.iter().enumerate() {
+                let target = t0 + interval.mul_f64(i as f64);
+                let now = Instant::now();
+                if target > now {
+                    std::thread::sleep(target - now);
+                }
+                tickets.push(engine.submit(x.clone(), y.clone())?);
+            }
+            let mut out = responses.lock().unwrap();
+            for (i, t) in tickets.into_iter().enumerate() {
+                out.push((i, t.wait()?));
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    if let Some(e) = first_err.into_inner().unwrap() {
+        return Err(e);
+    }
+    let mut indexed = responses.into_inner().unwrap();
+    crate::ensure!(
+        indexed.len() == spec.requests,
+        "loadgen: {} of {} responses missing",
+        spec.requests - indexed.len(),
+        spec.requests
+    );
+    // Monotone-id invariant: the engine assigns strictly increasing ids
+    // in submission order, and the loadgen is its only client here — so
+    // the sorted id set must be duplicate-free and contiguous (a gap
+    // means a request was lost or answered twice).
+    let mut ids: Vec<u64> = indexed.iter().map(|(_, r)| r.id).collect();
+    ids.sort_unstable();
+    for w in ids.windows(2) {
+        crate::ensure!(w[0] < w[1], "loadgen: duplicate response id {}", w[1]);
+    }
+    let span = ids.last().unwrap() - ids.first().unwrap() + 1;
+    crate::ensure!(
+        span == spec.requests as u64,
+        "loadgen: response ids not contiguous ({} ids over a span of {span})",
+        spec.requests
+    );
+    indexed.sort_by_key(|(i, _)| *i);
+    let responses: Vec<Response> = indexed.into_iter().map(|(_, r)| r).collect();
+    let total_samples: usize = responses.iter().map(|r| r.samples).sum();
+    let correct: f64 = responses
+        .iter()
+        .map(|r| if r.evalout.len() == 1 { r.evalout.item() as f64 } else { f64::NAN })
+        .sum();
+    Ok(LoadReport {
+        wall_s,
+        total_samples,
+        throughput_rps: spec.requests as f64 / wall_s,
+        samples_per_s: total_samples as f64 / wall_s,
+        mean_accuracy: correct / total_samples as f64,
+        responses,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Task;
+
+    #[test]
+    fn request_set_is_deterministic_and_sized() {
+        let data = Dataset::for_task(Task::Cls, 7);
+        let spec = LoadSpec {
+            requests: 12,
+            max_request_samples: 5,
+            seed: 42,
+            mode: LoadMode::Closed { concurrency: 2 },
+        };
+        let a = request_set(&data, &spec);
+        let b = request_set(&data, &spec);
+        assert_eq!(a.len(), 12);
+        for ((xa, ya), (xb, yb)) in a.iter().zip(&b) {
+            assert_eq!(xa, xb);
+            assert_eq!(ya, yb);
+            let n = xa.shape[0];
+            assert!((1..=5).contains(&n));
+            assert_eq!(ya.shape[0], n);
+        }
+        // A different seed shifts the size stream.
+        let other = request_set(
+            &data,
+            &LoadSpec { seed: 43, ..spec.clone() },
+        );
+        assert!(
+            a.iter().zip(&other).any(|((xa, _), (xo, _))| xa.shape != xo.shape),
+            "different seeds should produce different request size streams"
+        );
+    }
+}

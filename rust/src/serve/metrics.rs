@@ -1,0 +1,263 @@
+//! Lock-free serving metrics: a log-scaled latency histogram plus
+//! throughput/batching counters.
+//!
+//! Every recorder is a relaxed atomic — workers and completion paths
+//! never contend on a lock to account a request, so metrics cost nothing
+//! on the hot path.  The histogram uses power-of-two octaves with 4
+//! sub-buckets each (HDR-style, ≤ ~12% relative quantization error),
+//! covering 1 ns .. ~2⁶³ ns; quantiles are read by walking cumulative
+//! counts and reporting the bucket's geometric midpoint.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::jsonio::Json;
+
+/// Sub-buckets per power-of-two octave.
+const SUBS: usize = 4;
+/// 4 exact buckets for 0..4 ns + 62 octaves × SUBS.
+const N_BUCKETS: usize = 4 + 62 * SUBS;
+
+/// Histogram bucket index for a latency in nanoseconds.
+fn bucket_index(ns: u64) -> usize {
+    if ns < 4 {
+        return ns as usize;
+    }
+    let exp = 63 - ns.leading_zeros() as usize; // floor(log2), >= 2
+    let sub = ((ns >> (exp - 2)) & 0b11) as usize;
+    (4 + (exp - 2) * SUBS + sub).min(N_BUCKETS - 1)
+}
+
+/// Representative latency (ns) of a bucket: its geometric midpoint.
+fn bucket_rep_ns(idx: usize) -> f64 {
+    if idx < 4 {
+        return idx as f64;
+    }
+    let exp = (idx - 4) / SUBS + 2;
+    let sub = (idx - 4) % SUBS;
+    let quarter = (1u64 << exp) as f64 / 4.0;
+    (1u64 << exp) as f64 + (sub as f64 + 0.5) * quarter
+}
+
+/// Shared, lock-free serving metrics (one per [`crate::serve::Engine`]).
+pub struct Metrics {
+    buckets: Vec<AtomicU64>,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    samples: AtomicU64,
+    batches: AtomicU64,
+    batch_samples: AtomicU64,
+    batch_chunks: AtomicU64,
+    lat_sum_ns: AtomicU64,
+    lat_min_ns: AtomicU64,
+    lat_max_ns: AtomicU64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            samples: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_samples: AtomicU64::new(0),
+            batch_chunks: AtomicU64::new(0),
+            lat_sum_ns: AtomicU64::new(0),
+            lat_min_ns: AtomicU64::new(u64::MAX),
+            lat_max_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_submitted(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request completed successfully after `latency`.
+    pub fn record_request(&self, samples: u64, latency: std::time::Duration) {
+        let ns = latency.as_nanos().min(u64::MAX as u128) as u64;
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.samples.fetch_add(samples, Ordering::Relaxed);
+        self.lat_sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.lat_min_ns.fetch_min(ns, Ordering::Relaxed);
+        self.lat_max_ns.fetch_max(ns, Ordering::Relaxed);
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One micro-batch dispatched to a worker: `chunks` request chunks
+    /// totalling `samples` samples.
+    pub fn record_batch(&self, chunks: u64, samples: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_chunks.fetch_add(chunks, Ordering::Relaxed);
+        self.batch_samples.fetch_add(samples, Ordering::Relaxed);
+    }
+
+    /// Latency quantile (`q` in [0,1]) from the histogram; NaN when no
+    /// request completed yet.
+    fn quantile(&self, counts: &[u64], q: f64) -> f64 {
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_rep_ns(i) / 1e9;
+            }
+        }
+        bucket_rep_ns(N_BUCKETS - 1) / 1e9
+    }
+
+    /// Consistent point-in-time view (individual counters are relaxed, so
+    /// a snapshot taken mid-flight can be off by in-flight requests; after
+    /// [`crate::serve::Engine::drain`] it is exact).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let completed = self.completed.load(Ordering::Relaxed);
+        let sum_ns = self.lat_sum_ns.load(Ordering::Relaxed);
+        let min_ns = self.lat_min_ns.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed,
+            failed: self.failed.load(Ordering::Relaxed),
+            samples: self.samples.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batch_chunks: self.batch_chunks.load(Ordering::Relaxed),
+            batch_samples: self.batch_samples.load(Ordering::Relaxed),
+            mean_latency_s: if completed > 0 {
+                sum_ns as f64 / completed as f64 / 1e9
+            } else {
+                f64::NAN
+            },
+            min_latency_s: if min_ns == u64::MAX { f64::NAN } else { min_ns as f64 / 1e9 },
+            max_latency_s: self.lat_max_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            p50_s: self.quantile(&counts, 0.50),
+            p95_s: self.quantile(&counts, 0.95),
+            p99_s: self.quantile(&counts, 0.99),
+        }
+    }
+}
+
+/// Point-in-time metrics view (see [`Metrics::snapshot`]).
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    /// Total samples across completed requests.
+    pub samples: u64,
+    /// Micro-batches dispatched to workers.
+    pub batches: u64,
+    /// Request chunks across all batches.
+    pub batch_chunks: u64,
+    /// Samples across all batches (= samples once drained).
+    pub batch_samples: u64,
+    pub mean_latency_s: f64,
+    pub min_latency_s: f64,
+    pub max_latency_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+}
+
+impl MetricsSnapshot {
+    /// Mean samples per dispatched micro-batch.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            return f64::NAN;
+        }
+        self.batch_samples as f64 / self.batches as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("submitted", Json::num(self.submitted as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("samples", Json::num(self.samples as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("batch_chunks", Json::num(self.batch_chunks as f64)),
+            ("batch_samples", Json::num(self.batch_samples as f64)),
+            ("mean_latency_s", Json::num(self.mean_latency_s)),
+            ("min_latency_s", Json::num(self.min_latency_s)),
+            ("max_latency_s", Json::num(self.max_latency_s)),
+            ("p50_s", Json::num(self.p50_s)),
+            ("p95_s", Json::num(self.p95_s)),
+            ("p99_s", Json::num(self.p99_s)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn bucket_index_is_monotone_and_in_range() {
+        let mut prev = 0usize;
+        for exp in 0..60u32 {
+            let ns = 1u64 << exp;
+            for probe in [ns, ns + ns / 4, ns + ns / 2] {
+                let i = bucket_index(probe);
+                assert!(i < N_BUCKETS);
+                assert!(i >= prev, "index must not decrease: {probe} -> {i} < {prev}");
+                prev = i;
+            }
+        }
+        // Representative value lies within ~25% of the probed latency.
+        for &ns in &[5u64, 123, 999, 1_000_000, 77_000_000_000] {
+            let rep = bucket_rep_ns(bucket_index(ns));
+            assert!(
+                rep >= ns as f64 * 0.99 && rep <= ns as f64 * 1.26,
+                "rep {rep} vs {ns}"
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_counts_and_quantile_ordering() {
+        let m = Metrics::new();
+        assert!(m.snapshot().p50_s.is_nan());
+        m.record_submitted();
+        m.record_submitted();
+        m.record_batch(2, 3);
+        m.record_request(1, Duration::from_micros(100));
+        m.record_request(2, Duration::from_micros(900));
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.samples, 3);
+        assert_eq!(s.batches, 1);
+        assert!((s.mean_occupancy() - 3.0).abs() < 1e-12);
+        assert!(s.min_latency_s <= s.p50_s + 1e-12);
+        assert!(s.p50_s <= s.p95_s + 1e-12);
+        assert!(s.p95_s <= s.p99_s + 1e-12);
+        assert!(s.p99_s <= s.max_latency_s * 1.26);
+        assert!(s.mean_latency_s > 0.0);
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_json() {
+        let m = Metrics::new();
+        m.record_submitted();
+        m.record_request(4, Duration::from_millis(2));
+        let v = m.snapshot().to_json();
+        let parsed = crate::jsonio::parse(&v.to_string_compact()).unwrap();
+        assert_eq!(parsed.at(&["completed"]).as_usize(), Some(1));
+        assert_eq!(parsed.at(&["samples"]).as_usize(), Some(4));
+    }
+}

@@ -1,0 +1,42 @@
+//! `mpq serve` — a batched mixed-precision inference engine with a
+//! deterministic load generator.
+//!
+//! The selection pipeline (EAGL/ALPS → knapsack → LSQ fine-tune) ends in
+//! a checkpoint plus a [`crate::quant::BitsConfig`]; this subsystem is
+//! what actually *serves* that pair, putting a measured requests/s and
+//! latency axis behind the paper's accuracy–throughput frontier instead
+//! of a proxy cost:
+//!
+//! ```text
+//! submit(x, y) ─┬─> BatchQueue ── size/deadline micro-batches ──> worker 0 (Backend + caches)
+//!               │       │  (requests > max_batch split into chunks)  worker 1 ...
+//!   Ticket <────┘       └─> plan-order reassembly → softmax-CE per request → Response
+//! ```
+//!
+//! * [`Engine`] ([`engine`]) — worker pool over one shared submission
+//!   queue; each worker owns a [`crate::backend::Backend`] whose
+//!   [`crate::kernels`] weight-code cache materializes quantized codes
+//!   once per layer, not per request.  Graceful [`Engine::drain`].
+//! * [`batcher`] — size/deadline-triggered micro-batching with request
+//!   splitting and plan-order response reassembly.  Responses are
+//!   **bit-identical to direct single-request `eval_step`** at any batch
+//!   composition, `max_batch`, and worker count (the module docs carry
+//!   the argument; `rust/tests/serve_integration.rs` the assertions).
+//! * [`metrics`] — lock-free latency histogram (p50/p95/p99),
+//!   throughput and batch-occupancy counters.
+//! * [`loadgen`] — deterministic seeded closed-loop/open-loop load
+//!   generation over [`crate::data::Dataset`] eval batches.
+//!
+//! CLI: `mpq serve` (engine + loadgen + metrics report) and `mpq infer`
+//! (one-shot request); `make serve-smoke` wires the whole path into
+//! `make verify`.
+
+pub mod batcher;
+pub mod engine;
+pub mod loadgen;
+pub mod metrics;
+
+pub use batcher::{Response, Ticket};
+pub use engine::{Engine, ServeConfig, Spawner};
+pub use loadgen::{LoadMode, LoadReport, LoadSpec};
+pub use metrics::{Metrics, MetricsSnapshot};

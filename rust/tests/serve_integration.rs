@@ -1,0 +1,316 @@
+//! Integration tests for the serving engine (`mpq serve` path).
+//!
+//! The central contract under test: **every response is bit-identical to
+//! a direct single-request `eval_step`** on that request's samples — at
+//! any worker count, `max_batch`, batch composition, and in both the
+//! fused and the per-request execution modes.  Alongside it: batcher
+//! behaviors (empty-queue flush, oversized-request splitting with
+//! in-order reassembly, deadline-triggered partial batches), monotone
+//! response ids, loadgen determinism, and clean drains.
+//!
+//! Hermetic: everything runs on the sim backend's seeded init checkpoint
+//! — no training, no artifacts, no filesystem state.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mpq::backend::{Backend, SimBackend};
+use mpq::ckpt::Checkpoint;
+use mpq::data::{Dataset, Split};
+use mpq::graph::Graph;
+use mpq::quant::BitsConfig;
+use mpq::serve::{loadgen, Engine, LoadMode, LoadSpec, Response, ServeConfig, Spawner};
+use mpq::tensor::Tensor;
+
+const MODEL: &str = "sim_tiny";
+
+fn spawner() -> Spawner {
+    Arc::new(|| Ok(Box::new(SimBackend::new(MODEL)?) as Box<dyn Backend>))
+}
+
+/// (checkpoint, mixed-precision bits, dataset) for the test model.
+fn setup() -> (Checkpoint, Vec<f32>, Dataset) {
+    let be = SimBackend::new(MODEL).unwrap();
+    let graph = Graph::from_manifest(&be.manifest().raw).unwrap();
+    let ck = be.init_checkpoint().unwrap();
+    // Mixed precisions (one selectable layer at 2-bit) so the served
+    // assignment is a real mixed-precision config, not uniform.
+    let mut bits = BitsConfig::uniform(&graph, 4);
+    for l in &graph.layers {
+        if l.fixed_bits.is_none() {
+            bits.bits[l.qindex] = 2;
+            break;
+        }
+    }
+    (ck, bits.to_f32(), Dataset::for_task(be.manifest().task, 11))
+}
+
+fn engine(workers: usize, max_batch: usize, timeout: Duration, per_request: bool) -> Engine {
+    let (ck, bits, _) = setup();
+    Engine::start(
+        spawner(),
+        ck,
+        bits,
+        ServeConfig {
+            workers,
+            max_batch,
+            batch_timeout: timeout,
+            force_per_request: per_request,
+            warmup: true,
+        },
+    )
+    .unwrap()
+}
+
+/// The reference computation: a direct single-request eval_step on a
+/// fresh backend.
+fn direct_eval(ck: &Checkpoint, bits: &[f32], x: &Tensor, y: &Tensor) -> (f32, Tensor) {
+    let mut be = SimBackend::new(MODEL).unwrap();
+    be.eval_step(ck, x, y, bits).unwrap()
+}
+
+fn assert_bit_identical(r: &Response, reference: (f32, Tensor)) {
+    assert_eq!(
+        r.loss.to_bits(),
+        reference.0.to_bits(),
+        "response loss must be bit-identical to direct eval_step"
+    );
+    assert_eq!(
+        r.evalout, reference.1,
+        "response evalout must be identical to direct eval_step"
+    );
+}
+
+#[test]
+fn responses_bit_identical_to_direct_eval_at_any_workers_and_max_batch() {
+    let (ck, bits, data) = setup();
+    // Sizes straddle every batching regime: sub-batch, exactly max_batch,
+    // and oversized (splitting) requests, interleaved.
+    let sizes = [1usize, 3, 8, 20, 2, 5, 1, 16, 7];
+    let requests: Vec<(Tensor, Tensor)> = sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| data.batch(Split::Eval, 100 + i as u64, s))
+        .collect();
+    for &workers in &[1usize, 4] {
+        for &max_batch in &[1usize, 8] {
+            let eng = engine(workers, max_batch, Duration::from_millis(1), false);
+            let tickets: Vec<_> = requests
+                .iter()
+                .map(|(x, y)| eng.submit(x.clone(), y.clone()).unwrap())
+                .collect();
+            let responses: Vec<Response> =
+                tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+            for (resp, (x, y)) in responses.iter().zip(&requests) {
+                assert_eq!(resp.samples, x.shape[0]);
+                assert_bit_identical(resp, direct_eval(&ck, &bits, x, y));
+            }
+            let snap = eng.drain().unwrap();
+            assert_eq!(snap.completed, sizes.len() as u64);
+            assert_eq!(snap.failed, 0);
+            assert_eq!(snap.samples as usize, sizes.iter().sum::<usize>());
+        }
+    }
+}
+
+#[test]
+fn oversized_request_is_split_and_reassembled_in_order() {
+    let (ck, bits, data) = setup();
+    // 19 samples at max_batch 4 → 5 chunks, potentially spread over both
+    // workers and several micro-batches; the response must still equal
+    // ONE direct eval_step over all 19 samples.
+    let (x, y) = data.batch(Split::Eval, 500, 19);
+    let eng = engine(2, 4, Duration::from_millis(1), false);
+    let r = eng.submit(x.clone(), y.clone()).unwrap().wait().unwrap();
+    assert_eq!(r.samples, 19);
+    assert_bit_identical(&r, direct_eval(&ck, &bits, &x, &y));
+    let snap = eng.drain().unwrap();
+    assert_eq!(snap.batch_chunks, 5, "19 samples / max_batch 4 = 5 chunks");
+    assert_eq!(snap.batch_samples, 19);
+}
+
+#[test]
+fn empty_queue_flushes_clean_on_drain() {
+    // Nothing submitted: drain must return immediately with zero counts,
+    // leaving workers (possibly mid-wait) cleanly joined.
+    let eng = engine(3, 16, Duration::from_secs(5), false);
+    let snap = eng.drain().unwrap();
+    assert_eq!(snap.submitted, 0);
+    assert_eq!(snap.completed, 0);
+    assert_eq!(snap.batches, 0);
+}
+
+#[test]
+fn drain_flushes_requests_still_waiting_on_the_deadline() {
+    // A request parked behind a long batch deadline must be served by the
+    // drain, not dropped.
+    let (ck, bits, data) = setup();
+    let (x, y) = data.batch(Split::Eval, 600, 2);
+    let eng = engine(1, 64, Duration::from_secs(30), false);
+    let ticket = eng.submit(x.clone(), y.clone()).unwrap();
+    let snap = eng.drain().unwrap();
+    let r = ticket.wait().unwrap();
+    assert_bit_identical(&r, direct_eval(&ck, &bits, &x, &y));
+    assert_eq!(snap.completed, 1);
+}
+
+#[test]
+fn deadline_triggers_partial_batch() {
+    let (ck, bits, data) = setup();
+    // max_batch 64 with only 3 single-sample requests: the size trigger
+    // can never fire, so completion proves the deadline path dispatched a
+    // partial batch.
+    let eng = engine(1, 64, Duration::from_millis(40), false);
+    let reqs: Vec<(Tensor, Tensor)> = (0..3)
+        .map(|i| data.batch(Split::Eval, 700 + i, 1))
+        .collect();
+    let tickets: Vec<_> = reqs
+        .iter()
+        .map(|(x, y)| eng.submit(x.clone(), y.clone()).unwrap())
+        .collect();
+    for (t, (x, y)) in tickets.into_iter().zip(&reqs) {
+        let r = t.wait().unwrap();
+        assert_bit_identical(&r, direct_eval(&ck, &bits, x, y));
+    }
+    let snap = eng.drain().unwrap();
+    assert_eq!(snap.completed, 3);
+    assert_eq!(snap.batch_samples, 3);
+    assert!(
+        snap.batches >= 1 && snap.batches <= 3,
+        "expected deadline-dispatched partial batch(es), got {}",
+        snap.batches
+    );
+}
+
+#[test]
+fn per_request_fallback_mode_is_also_bit_identical() {
+    let (ck, bits, data) = setup();
+    let sizes = [1usize, 6, 40, 3]; // 40 > max_batch: rides alone, unsplit
+    let reqs: Vec<(Tensor, Tensor)> = sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| data.batch(Split::Eval, 800 + i as u64, s))
+        .collect();
+    let eng = engine(2, 8, Duration::from_millis(1), true);
+    assert!(!eng.fused(), "force_per_request must disable fused batching");
+    let tickets: Vec<_> = reqs
+        .iter()
+        .map(|(x, y)| eng.submit(x.clone(), y.clone()).unwrap())
+        .collect();
+    for (t, (x, y)) in tickets.into_iter().zip(&reqs) {
+        assert_bit_identical(&t.wait().unwrap(), direct_eval(&ck, &bits, x, y));
+    }
+    eng.drain().unwrap();
+}
+
+#[test]
+fn loadgen_is_deterministic_across_worker_counts() {
+    // Same spec against differently-parallel engines: the (sorted)
+    // response streams must be bit-identical — the combined determinism
+    // of the loadgen's request content and the engine's batching.
+    let (ck, bits, data) = setup();
+    let spec = LoadSpec {
+        requests: 24,
+        max_request_samples: 5,
+        seed: 42,
+        mode: LoadMode::Closed { concurrency: 4 },
+    };
+    let mut streams: Vec<Vec<Response>> = Vec::new();
+    for &workers in &[1usize, 4] {
+        let eng = Engine::start(
+            spawner(),
+            ck.clone(),
+            bits.clone(),
+            ServeConfig {
+                workers,
+                max_batch: 8,
+                batch_timeout: Duration::from_millis(1),
+                force_per_request: false,
+                warmup: true,
+            },
+        )
+        .unwrap();
+        let load = loadgen::run(&eng, &data, &spec).unwrap();
+        assert!(load.throughput_rps > 0.0);
+        eng.drain().unwrap();
+        streams.push(load.responses);
+    }
+    let (a, b) = (&streams[0], &streams[1]);
+    assert_eq!(a.len(), b.len());
+    // Request-ordered streams: position k answers request k in both runs
+    // (engine ids can interleave differently — content must not).
+    for (ra, rb) in a.iter().zip(b) {
+        assert_eq!(ra.samples, rb.samples);
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits());
+        assert_eq!(ra.evalout, rb.evalout);
+    }
+}
+
+#[test]
+fn response_ids_are_monotone_and_contiguous_under_load() {
+    let (_, _, data) = setup();
+    let eng = engine(4, 8, Duration::from_millis(1), false);
+    let spec = LoadSpec {
+        requests: 40,
+        max_request_samples: 3,
+        seed: 7,
+        mode: LoadMode::Closed { concurrency: 6 },
+    };
+    // run() itself enforces completeness + monotone, contiguous ids.
+    let load = loadgen::run(&eng, &data, &spec).unwrap();
+    assert_eq!(load.responses.len(), 40);
+    // The loadgen was the engine's only client: the id set is exactly
+    // 0..40 (a permutation across racing closed-loop clients).
+    let mut ids: Vec<u64> = load.responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..40u64).collect::<Vec<_>>());
+    let snap = eng.drain().unwrap();
+    assert_eq!(snap.completed, 40);
+    assert!(snap.p50_s <= snap.p95_s + 1e-12);
+    assert!(snap.p95_s <= snap.p99_s + 1e-12);
+    assert!(snap.mean_occupancy() >= 1.0);
+}
+
+#[test]
+fn open_loop_mode_completes_and_matches_direct_eval() {
+    let (ck, bits, data) = setup();
+    let eng = engine(2, 8, Duration::from_millis(1), false);
+    let spec = LoadSpec {
+        requests: 10,
+        max_request_samples: 2,
+        seed: 9,
+        // High rate: effectively submit-as-fast-as-possible.
+        mode: LoadMode::Open { rate_hz: 100_000.0 },
+    };
+    let load = loadgen::run(&eng, &data, &spec).unwrap();
+    let inputs = loadgen::request_set(&data, &spec);
+    for (r, (x, y)) in load.responses.iter().zip(&inputs) {
+        assert_bit_identical(r, direct_eval(&ck, &bits, x, y));
+    }
+    eng.drain().unwrap();
+}
+
+#[test]
+fn submit_validates_requests_and_rejects_after_fatal_shapes() {
+    let (_, _, data) = setup();
+    let eng = engine(1, 8, Duration::from_millis(1), false);
+    // Empty request.
+    assert!(eng
+        .submit(Tensor::zeros(&[0, 32, 32, 3]), Tensor::zeros_i32(&[0]))
+        .is_err());
+    // Wrong per-sample dims.
+    assert!(eng
+        .submit(Tensor::zeros(&[1, 16, 16, 3]), Tensor::zeros_i32(&[1]))
+        .is_err());
+    // y/x sample-count mismatch.
+    let (x, _) = data.batch(Split::Eval, 900, 2);
+    assert!(eng.submit(x, Tensor::zeros_i32(&[3])).is_err());
+    // Wrong label dtype (f32 labels would panic deep in a worker).
+    let (x, _) = data.batch(Split::Eval, 902, 1);
+    assert!(eng.submit(x, Tensor::zeros(&[1])).is_err());
+    // A valid request still goes through after the rejections.
+    let (x, y) = data.batch(Split::Eval, 901, 2);
+    let r = eng.submit(x, y).unwrap().wait().unwrap();
+    assert_eq!(r.samples, 2);
+    eng.drain().unwrap();
+}
