@@ -7,14 +7,15 @@
 # crate, see rust/Cargo.toml) and skip themselves at runtime when
 # artifacts are absent.
 
-.PHONY: verify test build bench bench-quick exp-smoke serve-smoke verify-pjrt artifacts clean
+.PHONY: verify test build bench bench-quick packed-smoke exp-smoke serve-smoke verify-pjrt artifacts clean
 
-# Tier-1: must pass in a clean checkout.  bench-quick, exp-smoke and
-# serve-smoke ride along as smoke steps so the bench binary (and its
-# BENCH_hotpath.json emission), the manifest-driven experiment path, and
-# the serving engine can never silently rot.
+# Tier-1: must pass in a clean checkout.  bench-quick, packed-smoke,
+# exp-smoke and serve-smoke ride along as smoke steps so the bench binary
+# (and its BENCH_hotpath.json emission), the packed-kernel CLI path, the
+# manifest-driven experiment path, and the serving engine can never
+# silently rot.
 verify:
-	cargo build --release && cargo test -q && $(MAKE) bench-quick && $(MAKE) exp-smoke && $(MAKE) serve-smoke
+	cargo build --release && cargo test -q && $(MAKE) bench-quick && $(MAKE) packed-smoke && $(MAKE) exp-smoke && $(MAKE) serve-smoke
 
 build:
 	cargo build --release
@@ -47,20 +48,62 @@ exp-smoke:
 	echo "exp-smoke OK (8 rows, resume added none)"
 	rm -rf $(EXP_SMOKE_DIR)
 
+# CLI smoke of the packed-kernel path: one-shot `mpq infer` with the
+# reference kernels and with `--kernel packed` over a shared scratch
+# results root (base checkpoint trained once, reused by both runs).
+# Packed evaluation is bit-identical by construction, so the printed
+# loss/accuracy lines must match byte for byte (timing stripped).
+PACKED_SMOKE_DIR := $(CURDIR)/.packed-smoke-results
+# (No pipes around cargo: a pipeline would mask the binary's exit status
+# and let a broken infer path still "pass" — redirect, then post-process.)
+packed-smoke:
+	rm -rf $(PACKED_SMOKE_DIR)
+	@mkdir -p $(PACKED_SMOKE_DIR)
+	MPQ_RESULTS=$(PACKED_SMOKE_DIR) cargo run --release -q -p mpq -- infer \
+	  --model sim_tiny --backend sim --base-steps 60 --budget 0.7 --method eagl \
+	  --samples 32 --kernel reference > $(PACKED_SMOKE_DIR)/reference.raw
+	MPQ_RESULTS=$(PACKED_SMOKE_DIR) cargo run --release -q -p mpq -- infer \
+	  --model sim_tiny --backend sim --base-steps 60 --budget 0.7 --method eagl \
+	  --samples 32 --kernel packed > $(PACKED_SMOKE_DIR)/packed.raw
+	@sed 's/, [0-9.]* ms$$//' $(PACKED_SMOKE_DIR)/reference.raw > $(PACKED_SMOKE_DIR)/reference.out
+	@sed 's/, [0-9.]* ms$$//' $(PACKED_SMOKE_DIR)/packed.raw > $(PACKED_SMOKE_DIR)/packed.out
+	@test -s $(PACKED_SMOKE_DIR)/reference.out || { echo "packed-smoke: empty infer output"; exit 1; }
+	@cmp -s $(PACKED_SMOKE_DIR)/reference.out $(PACKED_SMOKE_DIR)/packed.out || { \
+	  echo "packed-smoke: packed vs reference eval output differs:"; \
+	  diff $(PACKED_SMOKE_DIR)/reference.out $(PACKED_SMOKE_DIR)/packed.out; exit 1; }
+	@echo "packed-smoke OK (packed eval bit-identical to reference)"
+	rm -rf $(PACKED_SMOKE_DIR)
+
 # End-to-end smoke of the serving engine: loadgen drives `mpq serve` on
 # the hermetic sim backend (EAGL selection at a 70% budget over a fresh
-# scratch results root).  The binary itself asserts the serving
-# invariants — every request completed with zero failures (which implies
-# nonzero throughput), monotone/contiguous response ids, clean drain —
-# and exits nonzero on any violation (see rust/README.md §Serving).
+# scratch results root), once per kernel path.  The binary itself asserts
+# the serving invariants — every request completed with zero failures
+# (which implies nonzero throughput), monotone/contiguous response ids,
+# clean drain — and exits nonzero on any violation (see rust/README.md
+# §Serving); the target then compares the two runs' summary accuracy,
+# which the packed path's epsilon contract must leave unchanged.
+# (Redirect instead of `| tee`: a pipeline would mask the binary's exit
+# status, so its post-run invariant failures could no longer fail the gate.)
 SERVE_SMOKE_DIR := $(CURDIR)/.serve-smoke-results
 serve-smoke:
 	rm -rf $(SERVE_SMOKE_DIR)
+	@mkdir -p $(SERVE_SMOKE_DIR)
 	MPQ_RESULTS=$(SERVE_SMOKE_DIR) cargo run --release -q -p mpq -- serve \
 	  --model sim_tiny --backend sim --base-steps 60 --budget 0.7 --method eagl \
-	  --requests 48 --max-request 4 --workers 2 --max-batch 8 --batch-timeout-ms 2
+	  --requests 48 --max-request 4 --workers 2 --max-batch 8 --batch-timeout-ms 2 \
+	  --kernel reference > $(SERVE_SMOKE_DIR)/reference.out
+	@cat $(SERVE_SMOKE_DIR)/reference.out
+	MPQ_RESULTS=$(SERVE_SMOKE_DIR) cargo run --release -q -p mpq -- serve \
+	  --model sim_tiny --backend sim --base-steps 60 --budget 0.7 --method eagl \
+	  --requests 48 --max-request 4 --workers 2 --max-batch 8 --batch-timeout-ms 2 \
+	  --kernel packed > $(SERVE_SMOKE_DIR)/packed.out
+	@cat $(SERVE_SMOKE_DIR)/packed.out
+	@ref=$$(grep -o 'accuracy *[0-9.]*' $(SERVE_SMOKE_DIR)/reference.out | head -1); \
+	pk=$$(grep -o 'accuracy *[0-9.]*' $(SERVE_SMOKE_DIR)/packed.out | head -1); \
+	test -n "$$ref" && test "$$ref" = "$$pk" || { \
+	  echo "serve-smoke: kernel accuracy mismatch: reference [$$ref] vs packed [$$pk]"; exit 1; }; \
+	echo "serve-smoke OK (packed == reference $$pk)"
 	rm -rf $(SERVE_SMOKE_DIR)
-	@echo "serve-smoke OK"
 
 # Full verification including the PJRT/AOT path (requires the vendored
 # `xla` dependency to be uncommented in rust/Cargo.toml and, for the
@@ -75,4 +118,4 @@ artifacts:
 
 clean:
 	cargo clean
-	rm -rf results $(EXP_SMOKE_DIR) $(SERVE_SMOKE_DIR)
+	rm -rf results $(EXP_SMOKE_DIR) $(SERVE_SMOKE_DIR) $(PACKED_SMOKE_DIR)

@@ -19,11 +19,12 @@
 
 use std::collections::BTreeMap;
 
-use mpq::backend::{Backend, TrainState};
+use mpq::backend::{Backend, KernelChoice, TrainState};
 use mpq::bench::{coordinator_or_skip, fmt_s, header, measure, try_measure, BenchSink, Measurement};
 use mpq::data::{Dataset, Split};
+use mpq::kernels::{gemm, packed};
 use mpq::knapsack;
-use mpq::quant::BitsConfig;
+use mpq::quant::{self, BitsConfig};
 use mpq::rng::Pcg32;
 
 /// Report a measurement, print its delta vs the recorded baseline (if
@@ -115,6 +116,51 @@ fn main() -> mpq::Result<()> {
         note(&mut sink, &baseline, m);
     }
 
+    // -- packed integer kernels (the serve hot path's compute format) --------
+    // One synthetic layer large enough that the weight working set
+    // actually moves between cache levels: at 2-bit the packed codes are
+    // 16x smaller than the f32 fake-quant image.  Rows compare the
+    // reference GEMM against the LUT-decode packed GEMM (bit-identical
+    // results) and the fully integer u8xpacked i32 MAC.
+    {
+        let (fi, fo, batch) = if quick { (128usize, 128usize, 8usize) } else { (256, 256, 16) };
+        let (sw, sa) = (0.02f32, 0.05f32);
+        let mut rng = Pcg32::new(3, 3);
+        let w: Vec<f32> = (0..fi * fo).map(|_| rng.normal() * 0.05).collect();
+        let bias: Vec<f32> = (0..fo).map(|_| rng.normal() * 0.1).collect();
+        let acodes: Vec<u8> = (0..batch * fi).map(|_| rng.below(16) as u8).collect();
+        let a: Vec<f32> = acodes.iter().map(|&c| c as f32 * sa).collect();
+        let mut z = vec![0f32; batch * fo];
+        for &bits in &[2u32, 4, 8] {
+            let (qn, qp) = quant::qrange_signed(bits);
+            let mut wt = vec![0f32; fi * fo];
+            let mut w_in = vec![false; fi * fo];
+            gemm::quantize_weights_wt(&w, sw, qn, qp, &mut wt, &mut w_in, fi, fo);
+            let m = measure(&format!("gemm reference f32 {fi}x{fo} b={bits}"), 1, iters, || {
+                gemm::gemm_bias_wt(&a, &wt, &bias, &mut z, batch, fi, fo);
+                std::hint::black_box(&z);
+            });
+            note(&mut sink, &baseline, m);
+            let pk = packed::pack(&w, sw, bits, fi, fo)?;
+            let m = measure(&format!("gemm packed lut {fi}x{fo} b={bits}"), 1, iters, || {
+                packed::gemm_bias_packed(&a, &pk, &bias, &mut z, batch);
+                std::hint::black_box(&z);
+            });
+            note(&mut sink, &baseline, m);
+            let m = measure(&format!("gemm packed i32 {fi}x{fo} b={bits}"), 1, iters, || {
+                packed::gemm_bias_packed_i32(&acodes, &pk, &bias, sa * sw, &mut z, batch);
+                std::hint::black_box(&z);
+            });
+            note(&mut sink, &baseline, m);
+            println!(
+                "{:<44} {:>10} packed vs {} f32",
+                format!("  -> b={bits} weight bytes"),
+                pk.packed_bytes(),
+                4 * fi * fo
+            );
+        }
+    }
+
     // -- backend executable hot paths ---------------------------------------
     for model in ["sim_tiny", "sim_skew", "qsegnet", "qresnet20", "qbert"] {
         let Some(mut co) = coordinator_or_skip(model, 7) else {
@@ -154,68 +200,96 @@ fn main() -> mpq::Result<()> {
 
     // -- serving engine ------------------------------------------------------
     // The serve path (mpq serve): dynamic micro-batching over per-worker
-    // backends, driven closed-loop by the deterministic loadgen.  Rows
-    // cover 1 vs N workers and unbatched (max-batch 1) vs batched
-    // (max-batch 32); each config records the request-latency histogram
-    // and the wall-clock seconds-per-request (whose inverse is req/s).
+    // backends, driven closed-loop by the deterministic loadgen.  Each
+    // config records the request-latency histogram and the wall-clock
+    // seconds-per-request (whose inverse is req/s).
+    // Rows cover 1 vs N workers, unbatched (max-batch 1) vs batched
+    // (max-batch 32), and the reference vs packed kernel paths
+    // (`--kernel` on `mpq serve`; packed shares one bit-packed weight
+    // materialization across all workers).  Reference rows keep their
+    // original names so the recorded trajectory stays comparable; packed
+    // rows carry a `kernel=packed` tag, and a packed-vs-reference
+    // wall/req comparison prints per configuration.
     {
         use mpq::serve::{loadgen, Engine, LoadMode, LoadSpec, ServeConfig, Spawner};
-        let spawner: Spawner = std::sync::Arc::new(|| {
-            Ok(Box::new(mpq::backend::SimBackend::new("sim_skew")?) as Box<dyn Backend>)
-        });
         let be = mpq::backend::SimBackend::new("sim_skew")?;
         let ck = be.init_checkpoint()?;
         let graph = mpq::graph::Graph::from_manifest(&be.manifest().raw)?;
         let bits = BitsConfig::uniform(&graph, 4).to_f32();
         let data = Dataset::for_task(mpq::backend::Task::Cls, 7);
         let requests = if quick { 64 } else { 256 };
+        let mut wall_per_req: BTreeMap<(&'static str, usize, usize), f64> = BTreeMap::new();
+        for &(kernel, tag) in &[
+            (KernelChoice::Reference, ""),
+            (KernelChoice::Packed, "kernel=packed "),
+        ] {
+            let spawner: Spawner = std::sync::Arc::new(move || {
+                Ok(Box::new(mpq::backend::SimBackend::with_kernel("sim_skew", kernel)?)
+                    as Box<dyn Backend>)
+            });
+            for &(workers, max_batch) in &[(1usize, 1usize), (1, 32), (4, 1), (4, 32)] {
+                let cfg = ServeConfig {
+                    workers,
+                    max_batch,
+                    batch_timeout: std::time::Duration::from_millis(1),
+                    force_per_request: false,
+                    warmup: true,
+                };
+                let engine = Engine::start(spawner.clone(), ck.clone(), bits.clone(), cfg)?;
+                let spec = LoadSpec {
+                    requests,
+                    max_request_samples: 2,
+                    seed: 42,
+                    mode: LoadMode::Closed { concurrency: 8 },
+                };
+                let load = loadgen::run(&engine, &data, &spec)?;
+                let snap = engine.drain()?;
+                let m = Measurement {
+                    name: format!("serve sim_skew {tag}w={workers} mb={max_batch} req lat"),
+                    iters: snap.completed as usize,
+                    mean_s: snap.mean_latency_s,
+                    std_s: 0.0,
+                    p50_s: snap.p50_s,
+                    p95_s: snap.p95_s,
+                    p99_s: snap.p99_s,
+                    min_s: snap.min_latency_s,
+                };
+                note(&mut sink, &baseline, m);
+                let per_req = load.wall_s / requests as f64;
+                wall_per_req.insert((kernel.name(), workers, max_batch), per_req);
+                let m = Measurement {
+                    name: format!("serve sim_skew {tag}w={workers} mb={max_batch} wall/req"),
+                    iters: requests,
+                    mean_s: per_req,
+                    std_s: 0.0,
+                    p50_s: per_req,
+                    p95_s: per_req,
+                    p99_s: per_req,
+                    min_s: per_req,
+                };
+                note(&mut sink, &baseline, m);
+                println!(
+                    "{:<44} {:>10.1} req/s  {:>8.1} samples/s  occupancy {:.2}",
+                    format!("  -> serve {tag}w={workers} mb={max_batch} throughput"),
+                    load.throughput_rps,
+                    load.samples_per_s,
+                    snap.mean_occupancy()
+                );
+            }
+        }
         for &(workers, max_batch) in &[(1usize, 1usize), (1, 32), (4, 1), (4, 32)] {
-            let cfg = ServeConfig {
-                workers,
-                max_batch,
-                batch_timeout: std::time::Duration::from_millis(1),
-                force_per_request: false,
-                warmup: true,
-            };
-            let engine = Engine::start(spawner.clone(), ck.clone(), bits.clone(), cfg)?;
-            let spec = LoadSpec {
-                requests,
-                max_request_samples: 2,
-                seed: 42,
-                mode: LoadMode::Closed { concurrency: 8 },
-            };
-            let load = loadgen::run(&engine, &data, &spec)?;
-            let snap = engine.drain()?;
-            let m = Measurement {
-                name: format!("serve sim_skew w={workers} mb={max_batch} req lat"),
-                iters: snap.completed as usize,
-                mean_s: snap.mean_latency_s,
-                std_s: 0.0,
-                p50_s: snap.p50_s,
-                p95_s: snap.p95_s,
-                p99_s: snap.p99_s,
-                min_s: snap.min_latency_s,
-            };
-            note(&mut sink, &baseline, m);
-            let per_req = load.wall_s / requests as f64;
-            let m = Measurement {
-                name: format!("serve sim_skew w={workers} mb={max_batch} wall/req"),
-                iters: requests,
-                mean_s: per_req,
-                std_s: 0.0,
-                p50_s: per_req,
-                p95_s: per_req,
-                p99_s: per_req,
-                min_s: per_req,
-            };
-            note(&mut sink, &baseline, m);
-            println!(
-                "{:<44} {:>10.1} req/s  {:>8.1} samples/s  occupancy {:.2}",
-                format!("  -> serve w={workers} mb={max_batch} throughput"),
-                load.throughput_rps,
-                load.samples_per_s,
-                snap.mean_occupancy()
-            );
+            if let (Some(&r), Some(&p)) = (
+                wall_per_req.get(&("reference", workers, max_batch)),
+                wall_per_req.get(&("packed", workers, max_batch)),
+            ) {
+                println!(
+                    "{:<44} {:>6.2}x  ({} -> {})",
+                    format!("  -> packed vs reference w={workers} mb={max_batch}"),
+                    r / p,
+                    fmt_s(r),
+                    fmt_s(p)
+                );
+            }
         }
     }
 

@@ -40,6 +40,51 @@ pub use manifest::{EntrySpec, Manifest, Task, TensorSpec};
 pub use pjrt::PjrtBackend;
 pub use sim::SimBackend;
 
+/// Opaque, immutable, cheaply cloneable execution state a backend
+/// materializes once and many backend instances adopt — e.g. the sim
+/// backend's bit-packed weight codes ([`crate::kernels::packed::PackedNet`]),
+/// which the serving engine packs once and shares across all N workers.
+/// `Any` keeps the [`Backend`] trait object-safe and backend-agnostic;
+/// each implementation downcasts to its own concrete type.
+pub type SharedExecState = std::sync::Arc<dyn std::any::Any + Send + Sync>;
+
+/// Which forward-kernel implementation a backend executes inference and
+/// evaluation with (`--kernel` on the CLI).
+///
+/// * `Reference` — fake-quant f32 GEMM over materialized `wt = code·sw`
+///   weights; the authoritative numerics.
+/// * `Packed` — bit-packed integer weight codes
+///   ([`crate::kernels::packed`]): interior layers decode through a LUT
+///   in the reference accumulation order (bit-identical), the logits
+///   layer applies the LSQ scale once in the epilogue (documented
+///   epsilon).  Training, vHv and EAGL entries always run the reference
+///   kernels — only `eval_step`/`infer_step` route through packed codes.
+///
+/// Sim-only: the pjrt artifact path executes lowered HLO as-is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelChoice {
+    #[default]
+    Reference,
+    Packed,
+}
+
+impl KernelChoice {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelChoice::Reference => "reference",
+            KernelChoice::Packed => "packed",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<KernelChoice> {
+        match s {
+            "reference" => Ok(KernelChoice::Reference),
+            "packed" => Ok(KernelChoice::Packed),
+            other => crate::bail!("unknown kernel '{other}' (expected packed|reference)"),
+        }
+    }
+}
+
 /// Mutable fine-tune state: parameters and SGD momenta, in manifest order.
 #[derive(Clone)]
 pub struct TrainState {
@@ -73,6 +118,33 @@ pub trait Backend {
     /// No-op for backends without a compile step.
     fn compile_entry(&mut self, entry: &str) -> crate::Result<()> {
         let _ = entry;
+        Ok(())
+    }
+
+    /// Pre-materialize immutable shared execution state for serving
+    /// `(params, bits)` — e.g. the sim backend's bit-packed weight codes
+    /// — as a handle other instances of the same configuration can
+    /// [`adopt_shared`](Backend::adopt_shared), so an N-worker engine
+    /// pays the materialization once instead of N times.  `None` (the
+    /// default) when the backend has nothing shareable for its current
+    /// kernel configuration.
+    fn prepare_shared(
+        &mut self,
+        params: &Checkpoint,
+        bits: &[f32],
+    ) -> crate::Result<Option<SharedExecState>> {
+        let _ = (params, bits);
+        Ok(None)
+    }
+
+    /// Adopt a [`prepare_shared`](Backend::prepare_shared) handle
+    /// produced by a backend of the same model and kernel configuration.
+    /// The adopted state is trusted to match the `(params, bits)` of
+    /// every subsequent call that uses it — the serving engine guarantees
+    /// this by construction (one immutable checkpoint + bits vector per
+    /// engine); per-layer precisions are still cross-checked fail-closed.
+    fn adopt_shared(&mut self, state: &SharedExecState) -> crate::Result<()> {
+        let _ = state;
         Ok(())
     }
 
@@ -226,6 +298,16 @@ impl Backend for Box<dyn Backend> {
     fn compile_entry(&mut self, entry: &str) -> crate::Result<()> {
         (**self).compile_entry(entry)
     }
+    fn prepare_shared(
+        &mut self,
+        params: &Checkpoint,
+        bits: &[f32],
+    ) -> crate::Result<Option<SharedExecState>> {
+        (**self).prepare_shared(params, bits)
+    }
+    fn adopt_shared(&mut self, state: &SharedExecState) -> crate::Result<()> {
+        (**self).adopt_shared(state)
+    }
 }
 
 /// Which backend to open.
@@ -270,11 +352,28 @@ pub fn resolve(requested: Option<&str>, model: &str) -> crate::Result<BackendKin
     }
 }
 
-/// Open a backend for `model`.
+/// Open a backend for `model` with the default (reference) kernels.
 pub fn open(kind: BackendKind, model: &str) -> crate::Result<Box<dyn Backend>> {
+    open_with(kind, model, KernelChoice::Reference)
+}
+
+/// Open a backend for `model` with an explicit [`KernelChoice`].  The
+/// packed kernels are sim-only; requesting them on pjrt fails closed.
+pub fn open_with(
+    kind: BackendKind,
+    model: &str,
+    kernel: KernelChoice,
+) -> crate::Result<Box<dyn Backend>> {
     match kind {
-        BackendKind::Sim => Ok(Box::new(SimBackend::new(model)?)),
-        BackendKind::Pjrt => open_pjrt(model),
+        BackendKind::Sim => Ok(Box::new(SimBackend::with_kernel(model, kernel)?)),
+        BackendKind::Pjrt => {
+            crate::ensure!(
+                kernel == KernelChoice::Reference,
+                "--kernel packed is only available on the sim backend (the pjrt \
+                 artifact path executes AOT-lowered HLO as-is); use --kernel reference"
+            );
+            open_pjrt(model)
+        }
     }
 }
 
@@ -314,6 +413,23 @@ mod tests {
         assert_eq!(resolve(Some("sim"), "anything").unwrap(), BackendKind::Sim);
         assert_eq!(resolve(Some("pjrt"), "anything").unwrap(), BackendKind::Pjrt);
         assert!(resolve(Some("bogus"), "m").is_err());
+    }
+
+    #[test]
+    fn kernel_choice_parse_and_pjrt_gating() {
+        for k in [KernelChoice::Reference, KernelChoice::Packed] {
+            assert_eq!(KernelChoice::parse(k.name()).unwrap(), k);
+        }
+        assert!(KernelChoice::parse("int8").is_err());
+        assert_eq!(KernelChoice::default(), KernelChoice::Reference);
+        // Packed kernels are sim-only: pjrt + packed fails closed with an
+        // actionable message, before any artifact lookup.
+        let err = open_with(BackendKind::Pjrt, "qresnet20", KernelChoice::Packed)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("sim backend"), "{err}");
+        // Sim opens with either kernel.
+        assert!(open_with(BackendKind::Sim, "sim_tiny", KernelChoice::Packed).is_ok());
     }
 
     #[test]

@@ -41,17 +41,19 @@
 //!   a mid-range budget forces the knapsack to choose between them.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::ckpt::Checkpoint;
 use crate::eagl;
 use crate::jsonio::Json;
-use crate::kernels::{self, FeatCache, GradWs, WeightCache, Workspace};
+use crate::kernels::packed::{self, PackedNet};
+use crate::kernels::{self, FeatCache, GradWs, PackedWeightCache, WeightCache, Workspace};
 use crate::quant;
 use crate::rng::Pcg32;
 use crate::tensor::Tensor;
 
 use super::manifest::Manifest;
-use super::Backend;
+use super::{Backend, KernelChoice, SharedExecState};
 
 /// Residual branch gain: out = in + GAMMA * branch(in).
 const GAMMA: f32 = 0.05;
@@ -174,6 +176,92 @@ fn net_refs<'a>(layers: &[SimLayer], params: &[&'a Tensor]) -> crate::Result<Vec
         });
     }
     Ok(net)
+}
+
+/// Packed-kernel forward pass ([`crate::kernels::packed`]): identical
+/// structure to [`forward_pass`], but every layer executes over
+/// bit-packed weight codes instead of materialized f32 fake-quant
+/// weights.  Interior layers use the LUT-decode kernel, which preserves
+/// the reference accumulation order **bit for bit** — mandatory, because
+/// their outputs feed the discontinuous activation quantizer
+/// (`round(h/sa)`), where any reassociation could flip a code near a
+/// rounding boundary.  The head layer optionally (`head_epilogue`)
+/// applies the LSQ scale once in the epilogue instead — the packed
+/// inference path's integer-style numerics, safe there because nothing
+/// requantizes logits; bounded by [`packed::PACKED_LOGIT_EPS`].
+///
+/// Codes come from `pinned` (an adopted [`PackedNet`] — the serving
+/// engine's share-across-workers path, no re-fingerprinting) when
+/// present, else from the per-layer `pcache` memo.
+#[allow(clippy::too_many_arguments)]
+fn packed_forward(
+    layers: &[SimLayer],
+    net: &[NetRef<'_>],
+    bits_eff: &[u32],
+    pcache: &mut PackedWeightCache,
+    pinned: Option<&PackedNet>,
+    feats: &[f32],
+    fwd: &mut Vec<kernels::LayerWs>,
+    batch: usize,
+    head_epilogue: bool,
+) -> crate::Result<()> {
+    let n_layers = layers.len();
+    if let Some(pn) = pinned {
+        // Fail closed on a precision mismatch: the pinned codes were
+        // packed for one bits vector; serving a different one through
+        // them would silently execute the wrong quantization.
+        crate::ensure!(
+            pn.bits_eff == bits_eff,
+            "sim: adopted packed codes were materialized for bits {:?}, \
+             but this call passes {:?}",
+            pn.bits_eff,
+            bits_eff
+        );
+    }
+    while fwd.len() < n_layers {
+        fwd.push(kernels::LayerWs::default());
+    }
+    for li in 0..n_layers {
+        let (done, rest) = fwd.split_at_mut(li);
+        let cur = &mut rest[0];
+        let spec = &layers[li];
+        let p = &net[li];
+        let (fi, fo) = (spec.fan_in, spec.fan_out);
+        let a_in: &[f32] = if li == 0 { feats } else { &done[li - 1].out };
+        let pk = match pinned {
+            Some(pn) => Arc::clone(&pn.layers[li]),
+            None => pcache.ensure(li, bits_eff[li], p.sw, p.w, fi, fo)?,
+        };
+        cur.z.clear();
+        cur.z.resize(batch * fo, 0.0);
+        if li == n_layers - 1 && head_epilogue {
+            packed::gemm_bias_packed_epilogue(a_in, &pk, p.b, &mut cur.z, batch);
+        } else {
+            packed::gemm_bias_packed(a_in, &pk, p.b, &mut cur.z, batch);
+        }
+        if li == n_layers - 1 {
+            cur.act_in.clear();
+            cur.out.clear();
+            cur.out.extend_from_slice(&cur.z);
+        } else {
+            let (_, aqp) = quant::qrange_unsigned(bits_eff[li]);
+            cur.act_in.clear();
+            cur.act_in.resize(batch * fo, false);
+            cur.out.clear();
+            cur.out.resize(batch * fo, 0.0);
+            let residual = if spec.branch { Some(a_in) } else { None };
+            kernels::gemm::relu_quant_act(
+                &cur.z,
+                p.sa,
+                aqp,
+                residual,
+                GAMMA,
+                &mut cur.out,
+                &mut cur.act_in,
+            );
+        }
+    }
+    Ok(())
 }
 
 /// Quantized forward pass through the kernel tiles; activations, masks
@@ -327,13 +415,30 @@ pub struct SimBackend {
     g1: GradWs,
     /// Quantized-weight memo, invalidated when a train step updates weights.
     wcache: WeightCache,
+    /// Bit-packed weight-code memo (same fingerprint invalidation) for
+    /// the packed kernel path.
+    pcache: PackedWeightCache,
     /// Featurizer memo keyed by batch content.
     fcache: FeatCache,
+    /// Which forward kernels `eval_step`/`infer_step` execute with
+    /// (training, vHv and EAGL always run the reference kernels).
+    kernel: KernelChoice,
+    /// Adopted shared packed codes (see [`Backend::adopt_shared`]): when
+    /// present, the packed path uses them directly instead of
+    /// re-fingerprinting the weights per call — serving executes an
+    /// immutable checkpoint, so content re-hashing per request is waste.
+    packed_pinned: Option<Arc<PackedNet>>,
 }
 
 impl SimBackend {
-    /// Build the sim backend for one of the [`SIM_MODELS`].
+    /// Build the sim backend for one of the [`SIM_MODELS`] with the
+    /// default (reference) kernels.
     pub fn new(model: &str) -> crate::Result<SimBackend> {
+        SimBackend::with_kernel(model, KernelChoice::Reference)
+    }
+
+    /// Build the sim backend with an explicit [`KernelChoice`].
+    pub fn with_kernel(model: &str, kernel: KernelChoice) -> crate::Result<SimBackend> {
         let layers = layers_for(model).ok_or_else(|| {
             crate::err!(
                 "unknown sim model '{model}' (available: {}); artifact models \
@@ -364,7 +469,10 @@ impl SimBackend {
             g0: GradWs::default(),
             g1: GradWs::default(),
             wcache: WeightCache::new(n_layers),
+            pcache: PackedWeightCache::new(n_layers),
             fcache: FeatCache::new(FEAT_CACHE_CAP),
+            kernel,
+            packed_pinned: None,
         })
     }
 
@@ -377,6 +485,12 @@ impl SimBackend {
             self.wcache.hits,
             self.wcache.misses,
         )
+    }
+
+    /// Packed-code cache counters: (hits, misses).  Calls served by an
+    /// adopted [`PackedNet`] touch neither counter.
+    pub fn packed_cache_stats(&self) -> (u64, u64) {
+        (self.pcache.hits, self.pcache.misses)
     }
 
     /// Canonical parameter names, 4 per layer: w, b, sw, sa.
@@ -518,15 +632,32 @@ impl SimBackend {
         let bits_eff = self.effective_bits(bits);
         let feats_idx = self.featurize_cached(x, batch);
         let feats = self.fcache.feats(feats_idx);
-        forward_pass(
-            &self.layers,
-            &net,
-            &bits_eff,
-            &mut self.wcache,
-            feats,
-            &mut self.ws.fwd,
-            batch,
-        );
+        // Packed evaluation keeps the head on the LUT kernel too
+        // (`head_epilogue = false`), so eval — and everything built on it:
+        // ALPS probes, frontier sweeps, `mpq infer` — is bit-identical to
+        // the reference kernels by construction.
+        match self.kernel {
+            KernelChoice::Reference => forward_pass(
+                &self.layers,
+                &net,
+                &bits_eff,
+                &mut self.wcache,
+                feats,
+                &mut self.ws.fwd,
+                batch,
+            ),
+            KernelChoice::Packed => packed_forward(
+                &self.layers,
+                &net,
+                &bits_eff,
+                &mut self.pcache,
+                self.packed_pinned.as_deref(),
+                feats,
+                &mut self.ws.fwd,
+                batch,
+                false,
+            )?,
+        }
         let logits = &self.ws.fwd[self.layers.len() - 1].out;
         let (loss, correct) = kernels::gemm::softmax_ce(logits, y, batch, N_CLASSES, None);
         Ok(vec![
@@ -551,15 +682,33 @@ impl SimBackend {
         let bits_eff = self.effective_bits(bits);
         let feats_idx = self.featurize_cached(x, batch);
         let feats = self.fcache.feats(feats_idx);
-        forward_pass(
-            &self.layers,
-            &net,
-            &bits_eff,
-            &mut self.wcache,
-            feats,
-            &mut self.ws.fwd,
-            batch,
-        );
+        // The packed inference path runs the logits layer with the LSQ
+        // scale applied once in the epilogue — nothing requantizes
+        // logits, so the reassociation stays within the documented
+        // epsilon ([`packed::PACKED_LOGIT_EPS`]) and can never flip an
+        // interior activation code.
+        match self.kernel {
+            KernelChoice::Reference => forward_pass(
+                &self.layers,
+                &net,
+                &bits_eff,
+                &mut self.wcache,
+                feats,
+                &mut self.ws.fwd,
+                batch,
+            ),
+            KernelChoice::Packed => packed_forward(
+                &self.layers,
+                &net,
+                &bits_eff,
+                &mut self.pcache,
+                self.packed_pinned.as_deref(),
+                feats,
+                &mut self.ws.fwd,
+                batch,
+                true,
+            )?,
+        }
         let logits = self.ws.fwd[self.layers.len() - 1].out.clone();
         Ok(vec![Tensor::from_f32(&[batch, N_CLASSES], logits)])
     }
@@ -683,6 +832,62 @@ impl Backend for SimBackend {
             tensors.push(Tensor::from_f32(&[], vec![l.sa]));
         }
         Ok(Checkpoint::new(self.param_names(), tensors))
+    }
+
+    /// Materialize the bit-packed weight codes for `(params, bits)` once,
+    /// as a shareable [`PackedNet`] — the serving engine hands the Arc to
+    /// every worker ([`adopt_shared`](Backend::adopt_shared)) so N
+    /// workers pack each layer once, not N times.  `None` on the
+    /// reference kernel path (nothing shareable).
+    fn prepare_shared(
+        &mut self,
+        params: &Checkpoint,
+        bits: &[f32],
+    ) -> crate::Result<Option<SharedExecState>> {
+        if self.kernel != KernelChoice::Packed {
+            return Ok(None);
+        }
+        let refs: Vec<&Tensor> = params.tensors.iter().collect();
+        let net = net_refs(&self.layers, &refs)?;
+        crate::ensure!(bits.len() == self.layers.len(), "sim: bits arity");
+        let bits_eff = self.effective_bits(bits);
+        let mut packed_layers = Vec::with_capacity(self.layers.len());
+        for (li, (spec, p)) in self.layers.iter().zip(&net).enumerate() {
+            packed_layers.push(Arc::new(packed::pack(
+                p.w,
+                p.sw,
+                bits_eff[li],
+                spec.fan_in,
+                spec.fan_out,
+            )?));
+        }
+        let net_pk = Arc::new(PackedNet {
+            bits_eff,
+            layers: packed_layers,
+        });
+        self.packed_pinned = Some(Arc::clone(&net_pk));
+        Ok(Some(net_pk as SharedExecState))
+    }
+
+    /// Adopt a [`PackedNet`] handle.  Ignored on the reference kernel
+    /// path (the handle is packed-only state); fails closed when the
+    /// handle is not this backend's type or layer count.
+    fn adopt_shared(&mut self, state: &SharedExecState) -> crate::Result<()> {
+        if self.kernel != KernelChoice::Packed {
+            return Ok(());
+        }
+        let net_pk = Arc::clone(state)
+            .downcast::<PackedNet>()
+            .map_err(|_| crate::err!("sim: adopt_shared handle is not a PackedNet"))?;
+        crate::ensure!(
+            net_pk.layers.len() == self.layers.len(),
+            "sim: adopted PackedNet has {} layer(s), model '{}' has {}",
+            net_pk.layers.len(),
+            self.manifest.model,
+            self.layers.len()
+        );
+        self.packed_pinned = Some(net_pk);
+        Ok(())
     }
 
     fn execute(&mut self, entry: &str, args: &[&Tensor]) -> crate::Result<Vec<Tensor>> {
@@ -913,6 +1118,59 @@ mod tests {
             crate::kernels::gemm::softmax_ce(logits.f32s(), y.i32s(), 6, N_CLASSES, None);
         assert_eq!(loss.to_bits(), loss_ref.to_bits());
         assert_eq!(correct as f32, out_ref.item());
+    }
+
+    #[test]
+    fn packed_eval_is_bit_identical_and_caches_codes() {
+        for model in SIM_MODELS {
+            let mut rbe = SimBackend::new(model).unwrap();
+            let mut pbe = SimBackend::with_kernel(model, KernelChoice::Packed).unwrap();
+            let graph = Graph::from_manifest(&rbe.manifest().raw).unwrap();
+            let data = Dataset::for_task(rbe.manifest().task, 3);
+            let ck = rbe.init_checkpoint().unwrap();
+            let mut bits = BitsConfig::uniform(&graph, 4);
+            bits.bits[1] = 2; // a genuinely mixed assignment
+            let bits = bits.to_f32();
+            let (x, y) = data.batch(Split::Eval, 0, 32);
+            let (lr, cr) = rbe.eval_step(&ck, &x, &y, &bits).unwrap();
+            let (lp, cp) = pbe.eval_step(&ck, &x, &y, &bits).unwrap();
+            assert_eq!(lp.to_bits(), lr.to_bits(), "{model}: packed eval loss must be bit-identical");
+            assert_eq!(cp, cr, "{model}: packed eval correct-count must be identical");
+            // A second eval over the frozen checkpoint reuses the packed codes.
+            pbe.eval_step(&ck, &x, &y, &bits).unwrap();
+            let (hits, misses) = pbe.packed_cache_stats();
+            assert_eq!(misses, graph.layers.len() as u64);
+            assert!(hits >= graph.layers.len() as u64);
+        }
+    }
+
+    #[test]
+    fn prepared_packed_codes_are_adopted_and_fail_closed_on_bits_mismatch() {
+        let mut owner = SimBackend::with_kernel("sim_tiny", KernelChoice::Packed).unwrap();
+        let graph = Graph::from_manifest(&owner.manifest().raw).unwrap();
+        let data = Dataset::for_task(owner.manifest().task, 3);
+        let ck = owner.init_checkpoint().unwrap();
+        let bits = BitsConfig::uniform(&graph, 4).to_f32();
+        let (x, _) = data.batch(Split::Eval, 1, 5);
+        let handle = owner.prepare_shared(&ck, &bits).unwrap().expect("packed state");
+        // An adopter serves straight off the shared codes: identical
+        // logits, zero packed-cache traffic.
+        let mut adopter = SimBackend::with_kernel("sim_tiny", KernelChoice::Packed).unwrap();
+        adopter.adopt_shared(&handle).unwrap();
+        let la = adopter.infer_step(&ck, &x, &bits).unwrap();
+        let mut solo = SimBackend::with_kernel("sim_tiny", KernelChoice::Packed).unwrap();
+        let ls = solo.infer_step(&ck, &x, &bits).unwrap();
+        assert_eq!(la, ls);
+        assert_eq!(adopter.packed_cache_stats(), (0, 0));
+        assert_eq!(solo.packed_cache_stats().1, graph.layers.len() as u64);
+        // Serving a different precision vector through adopted codes is
+        // an error, not a silent wrong-quantization execution.
+        let bits2 = BitsConfig::uniform(&graph, 2).to_f32();
+        let err = adopter.infer_step(&ck, &x, &bits2).unwrap_err().to_string();
+        assert!(err.contains("packed codes"), "{err}");
+        // The reference kernel path has nothing to share.
+        let mut rbe = SimBackend::new("sim_tiny").unwrap();
+        assert!(rbe.prepare_shared(&ck, &bits).unwrap().is_none());
     }
 
     #[test]

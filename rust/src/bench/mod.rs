@@ -107,15 +107,27 @@ impl BenchSink {
 
 /// Read a previously written `BENCH_*.json` into (measurement name →
 /// mean seconds) for printing speedups against the recorded baseline.
-/// `None` when the file is absent or unparseable (first run).
+///
+/// `None` means "no comparison — print absolute numbers": the file is
+/// absent, unparseable, or carries **no usable rows** (the committed
+/// seed record ships with `measurements: []` until the first
+/// `make bench-quick` on a machine with a toolchain).  Rows with a
+/// missing/non-finite/non-positive mean are dropped individually, so a
+/// speedup ratio is never emitted against an absent or degenerate row.
 pub fn load_baseline(path: &std::path::Path) -> Option<std::collections::BTreeMap<String, f64>> {
     let v = crate::jsonio::parse_file(path).ok()?;
     let mut out = std::collections::BTreeMap::new();
     for m in v.at(&["measurements"]).as_arr()? {
-        out.insert(
-            m.at(&["name"]).as_str()?.to_string(),
-            m.at(&["mean_s"]).as_f64()?,
-        );
+        let (Some(name), Some(mean)) = (m.at(&["name"]).as_str(), m.at(&["mean_s"]).as_f64())
+        else {
+            continue;
+        };
+        if mean.is_finite() && mean > 0.0 {
+            out.insert(name.to_string(), mean);
+        }
+    }
+    if out.is_empty() {
+        return None;
     }
     Some(out)
 }
@@ -280,6 +292,49 @@ mod tests {
     #[test]
     fn load_baseline_absent_file_is_none() {
         assert!(load_baseline(std::path::Path::new("/no/such/BENCH.json")).is_none());
+    }
+
+    #[test]
+    fn load_baseline_empty_or_degenerate_measurements_mean_no_comparison() {
+        let dir = std::env::temp_dir();
+        // The committed seed shape: measurements is an empty array.  A
+        // Some(empty map) here would print "comparing against recorded
+        // baseline" and then compare against nothing — it must be None.
+        let empty = dir.join(format!("mpq_bench_empty_{}.json", std::process::id()));
+        std::fs::write(&empty, r#"{"bench":"hotpath","quick":true,"measurements":[]}"#).unwrap();
+        assert!(
+            load_baseline(&empty).is_none(),
+            "an empty baseline must mean 'no comparison', not a partial match"
+        );
+        // Rows without a usable mean (null from a NaN, zero, negative)
+        // are dropped; a baseline made only of them is also None.
+        let degen = dir.join(format!("mpq_bench_degen_{}.json", std::process::id()));
+        std::fs::write(
+            &degen,
+            r#"{"bench":"hotpath","measurements":[
+                {"name":"a","mean_s":null},
+                {"name":"b","mean_s":0.0},
+                {"name":"c"}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(load_baseline(&degen).is_none());
+        // A usable row among degenerate ones survives alone.
+        let mixed = dir.join(format!("mpq_bench_mixed_{}.json", std::process::id()));
+        std::fs::write(
+            &mixed,
+            r#"{"bench":"hotpath","measurements":[
+                {"name":"a","mean_s":null},
+                {"name":"ok","mean_s":0.5}
+            ]}"#,
+        )
+        .unwrap();
+        let base = load_baseline(&mixed).unwrap();
+        assert_eq!(base.len(), 1);
+        assert!((base.get("ok").copied().unwrap() - 0.5).abs() < 1e-12);
+        for p in [&empty, &degen, &mixed] {
+            let _ = std::fs::remove_file(p);
+        }
     }
 
     #[test]

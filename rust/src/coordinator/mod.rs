@@ -29,7 +29,7 @@ use std::time::Instant;
 
 pub use store::ResultStore;
 
-use crate::backend::{self, Backend, BackendKind, SimBackend, TrainState};
+use crate::backend::{self, Backend, BackendKind, KernelChoice, SimBackend, TrainState};
 use crate::ckpt::Checkpoint;
 use crate::data::Dataset;
 use crate::graph::Graph;
@@ -250,6 +250,19 @@ impl Coordinator<Box<dyn Backend>> {
         Self::open_at(kind, model, data_seed, results_dir_for(kind, model))
     }
 
+    /// [`open`](Self::open) with an explicit [`KernelChoice`] (the CLI's
+    /// `--kernel` flag), propagated to the worker spawner so parallel
+    /// ALPS/HAWQ sweeps execute with the same kernels as the main
+    /// backend.
+    pub fn open_kernel(
+        kind: BackendKind,
+        model: &str,
+        data_seed: u64,
+        kernel: KernelChoice,
+    ) -> crate::Result<Self> {
+        Self::open_kernel_at(kind, model, data_seed, results_dir_for(kind, model), kernel)
+    }
+
     /// [`open`](Self::open) with an explicit results directory (the
     /// experiment scheduler redirects whole sweeps into isolated roots).
     pub fn open_at(
@@ -258,10 +271,22 @@ impl Coordinator<Box<dyn Backend>> {
         data_seed: u64,
         results_dir: PathBuf,
     ) -> crate::Result<Self> {
-        let be = backend::open(kind, model)?;
+        Self::open_kernel_at(kind, model, data_seed, results_dir, KernelChoice::Reference)
+    }
+
+    /// The fully explicit constructor behind [`open`](Self::open) /
+    /// [`open_kernel`](Self::open_kernel) / [`open_at`](Self::open_at).
+    pub fn open_kernel_at(
+        kind: BackendKind,
+        model: &str,
+        data_seed: u64,
+        results_dir: PathBuf,
+        kernel: KernelChoice,
+    ) -> crate::Result<Self> {
+        let be = backend::open_with(kind, model, kernel)?;
         let mut co = Coordinator::with_backend(be, data_seed, results_dir)?;
         let model_s = model.to_string();
-        co.spawner = Some(Box::new(move || backend::open(kind, &model_s)));
+        co.spawner = Some(Box::new(move || backend::open_with(kind, &model_s, kernel)));
         Ok(co)
     }
 
@@ -276,14 +301,24 @@ impl Coordinator<SimBackend> {
     /// Hermetic sim coordinator (no artifacts); results under
     /// `<results_root>/<model>` (see [`crate::results_root`]).
     pub fn sim(model: &str, data_seed: u64) -> crate::Result<Self> {
+        Self::sim_kernel(model, data_seed, KernelChoice::Reference)
+    }
+
+    /// [`sim`](Self::sim) with an explicit [`KernelChoice`], applied to
+    /// the main backend and every parallel-sweep worker.
+    pub fn sim_kernel(
+        model: &str,
+        data_seed: u64,
+        kernel: KernelChoice,
+    ) -> crate::Result<Self> {
         let mut co = Coordinator::with_backend(
-            SimBackend::new(model)?,
+            SimBackend::with_kernel(model, kernel)?,
             data_seed,
             crate::results_root().join(model),
         )?;
         let model_s = model.to_string();
         co.spawner = Some(Box::new(move || -> crate::Result<Box<dyn Backend>> {
-            Ok(Box::new(SimBackend::new(&model_s)?))
+            Ok(Box::new(SimBackend::with_kernel(&model_s, kernel)?))
         }));
         Ok(co)
     }

@@ -134,12 +134,23 @@ impl ResultStore {
 
     /// Best-metric record for `model` at `budget` — the `mpq serve
     /// --bits-from` lookup.  Exact f64-bits budget matches win; when none
-    /// exist the nearest stored budget is used.  Ties break
-    /// deterministically: higher metric, then lower seed, then method
-    /// name.
+    /// exist the nearest stored budget is used, and an exact-distance tie
+    /// between two *different* budgets (e.g. 0.6 vs 0.8 queried at 0.7)
+    /// resolves deterministically to the **lower** budget before any
+    /// record-level comparison.  Records whose `budget_frac` is not
+    /// finite (skipped-field defaults, corrupt rows) never participate —
+    /// a single NaN must not poison the distance fold — and a non-finite
+    /// query matches nothing.  Within the chosen budget, ties break:
+    /// higher metric, then lower seed, then method name.
     pub fn best_at_budget(&self, model: &str, budget: f64) -> Option<RunRecord> {
-        let of_model: Vec<&RunRecord> =
-            self.records.iter().filter(|r| r.model == model).collect();
+        if !budget.is_finite() {
+            return None;
+        }
+        let of_model: Vec<&RunRecord> = self
+            .records
+            .iter()
+            .filter(|r| r.model == model && r.budget_frac.is_finite())
+            .collect();
         if of_model.is_empty() {
             return None;
         }
@@ -155,10 +166,17 @@ impl ResultStore {
                 .iter()
                 .map(|r| (r.budget_frac - budget).abs())
                 .fold(f64::INFINITY, f64::min);
+            // Lower budget wins an exact-distance tie; then only that
+            // budget's records compete on metric/seed/method.
+            let winner = of_model
+                .iter()
+                .filter(|r| (r.budget_frac - budget).abs() <= nearest)
+                .map(|r| r.budget_frac)
+                .fold(f64::INFINITY, f64::min);
             of_model
                 .iter()
                 .copied()
-                .filter(|r| (r.budget_frac - budget).abs() <= nearest)
+                .filter(|r| r.budget_frac.to_bits() == winner.to_bits())
                 .collect()
         };
         pool.into_iter()
@@ -360,6 +378,78 @@ mod tests {
         assert_eq!(near.method, "hawq_v3");
         // Unknown model → None.
         assert!(store.best_at_budget("nope", 0.7).is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn best_at_budget_ignores_non_finite_budgets_and_queries() {
+        let dir = std::env::temp_dir().join("mpq_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("store_nan_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut store = ResultStore::open(&path).unwrap();
+        // A corrupt row: NaN budget with the best metric in the store.
+        let mut bad = sample_record();
+        bad.budget_frac = f64::NAN;
+        bad.metric = 0.999;
+        store.append(&bad).unwrap();
+        let mut good = sample_record();
+        good.budget_frac = 0.8;
+        good.seed = 1;
+        good.metric = 0.85;
+        store.append(&good).unwrap();
+        // The nearest-budget fallback must resolve to the finite record,
+        // never the NaN row, at any queried budget.
+        let hit = store.best_at_budget("m", 0.5).unwrap();
+        assert_eq!((hit.budget_frac, hit.seed), (0.8, 1));
+        // A non-finite query matches nothing — including the NaN record
+        // itself (whose bits would exact-match a NaN query).
+        assert!(store.best_at_budget("m", f64::NAN).is_none());
+        assert!(store.best_at_budget("m", f64::INFINITY).is_none());
+        // A store holding only non-finite budgets has no best record.
+        let path2 = dir.join(format!("store_nan2_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path2);
+        let mut only_bad = ResultStore::open(&path2).unwrap();
+        only_bad.append(&bad).unwrap();
+        assert!(only_bad.best_at_budget("m", 0.7).is_none());
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&path2);
+    }
+
+    #[test]
+    fn best_at_budget_equidistant_tie_resolves_to_lower_budget() {
+        let dir = std::env::temp_dir().join("mpq_store_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("store_tie_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut store = ResultStore::open(&path).unwrap();
+        // 0.5 and 1.0 are *exactly* equidistant from 0.75 (all three are
+        // exact binary fractions, both distances are the same f64).  The
+        // higher budget carries the higher metric, so a metric-first
+        // comparison across both budgets would pick 1.0.
+        let mut lo = sample_record();
+        lo.budget_frac = 0.5;
+        lo.seed = 0;
+        lo.metric = 0.80;
+        store.append(&lo).unwrap();
+        let mut hi = sample_record();
+        hi.budget_frac = 1.0;
+        hi.seed = 0;
+        hi.metric = 0.95;
+        store.append(&hi).unwrap();
+        assert_eq!((0.5f64 - 0.75).abs().to_bits(), (1.0f64 - 0.75).abs().to_bits());
+        let best = store.best_at_budget("m", 0.75).unwrap();
+        assert_eq!(
+            best.budget_frac, 0.5,
+            "equidistant nearest-budget tie must resolve to the lower budget"
+        );
+        // Within the winning budget, the usual metric ordering applies.
+        let mut lo2 = sample_record();
+        lo2.budget_frac = 0.5;
+        lo2.seed = 5;
+        lo2.metric = 0.90;
+        store.append(&lo2).unwrap();
+        assert_eq!(store.best_at_budget("m", 0.75).unwrap().seed, 5);
         let _ = std::fs::remove_file(&path);
     }
 

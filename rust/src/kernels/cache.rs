@@ -16,8 +16,10 @@
 //! weights is exactly the invalidation condition we need.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use super::gemm;
+use super::packed;
 
 /// 64-bit content fingerprint of an f32 slice: two word-wise FNV/murmur
 /// style streams over the IEEE bit patterns, length-separated and folded
@@ -140,6 +142,58 @@ impl WeightCache {
     }
 }
 
+/// Per-layer memo of bit-packed weight codes ([`packed::PackedLayer`]),
+/// keyed exactly like [`WeightCache`] (`(bits, sw bits, weight
+/// fingerprint)` — the same content-fingerprint invalidation, so a train
+/// step that rewrites the weights misses on the next packed touch).
+///
+/// Entries live behind `Arc` so a packed layer can outlive the slot that
+/// built it (the serving engine's share-across-workers path hands whole
+/// [`packed::PackedNet`]s around via `Backend::prepare_shared` /
+/// `adopt_shared`, pinned outside this cache entirely).  One entry per
+/// layer (no two-way set): the packed path serves frozen checkpoints,
+/// where every call after the first is a hit.
+pub struct PackedWeightCache {
+    slots: Vec<(Option<(u32, u32, u64)>, Option<Arc<packed::PackedLayer>>)>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PackedWeightCache {
+    pub fn new(n_layers: usize) -> PackedWeightCache {
+        PackedWeightCache {
+            slots: (0..n_layers).map(|_| (None, None)).collect(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Packed codes for layer `li`, re-packing only when `(bits, sw, w)`
+    /// misses the resident entry.
+    pub fn ensure(
+        &mut self,
+        li: usize,
+        bits: u32,
+        sw: f32,
+        w: &[f32],
+        fan_in: usize,
+        fan_out: usize,
+    ) -> crate::Result<Arc<packed::PackedLayer>> {
+        let key = (bits, sw.to_bits(), fingerprint_f32(w));
+        let slot = &mut self.slots[li];
+        if slot.0 == Some(key) {
+            if let Some(pk) = &slot.1 {
+                self.hits += 1;
+                return Ok(Arc::clone(pk));
+            }
+        }
+        self.misses += 1;
+        let pk = Arc::new(packed::pack(w, sw, bits, fan_in, fan_out)?);
+        *slot = (Some(key), Some(Arc::clone(&pk)));
+        Ok(pk)
+    }
+}
+
 /// Memo of featurizer outputs keyed by the input batch's content
 /// fingerprint (+ element count).
 ///
@@ -248,6 +302,23 @@ mod tests {
         assert_eq!(wc.misses, 2);
         let (wt_peek, _) = wc.peek(0);
         assert_eq!(wt_peek[0], 0.1);
+    }
+
+    #[test]
+    fn packed_cache_hits_and_invalidates() {
+        let mut pc = PackedWeightCache::new(1);
+        let w = vec![0.1f32, -0.2, 0.3, 0.05];
+        let p1 = pc.ensure(0, 4, 0.1, &w, 2, 2).unwrap();
+        assert_eq!(pc.misses, 1);
+        let p2 = pc.ensure(0, 4, 0.1, &w, 2, 2).unwrap();
+        assert_eq!(pc.hits, 1);
+        assert!(Arc::ptr_eq(&p1, &p2), "hit must return the resident entry");
+        // Changed weights or bits → miss → fresh codes.
+        let w2 = vec![0.4f32, -0.2, 0.3, 0.05];
+        pc.ensure(0, 4, 0.1, &w2, 2, 2).unwrap();
+        assert_eq!(pc.misses, 2);
+        pc.ensure(0, 2, 0.1, &w2, 2, 2).unwrap();
+        assert_eq!(pc.misses, 3);
     }
 
     #[test]

@@ -14,6 +14,12 @@
 //! a contiguous axpy sweep.  Gradients stay in the parameter layout
 //! `dw[i * fan_out + o]` so the SGD update walks `w`, `dw`, and the
 //! momentum buffer in lockstep.
+//!
+//! The bit-packed counterparts in [`super::packed`] share
+//! [`gemm_bias_wt`]'s accumulation contract: the packed LUT kernel
+//! replays the identical add sequence over identical operand bits
+//! (`lut[code] == wt[o,i]` bit for bit), which is what lets the packed
+//! evaluation path claim bit-identity rather than an epsilon.
 
 /// Fake-quantize a weight matrix into the transposed layout plus the
 /// clipped-STE in-range mask (parameter layout, for gradient masking).

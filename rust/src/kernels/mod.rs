@@ -13,10 +13,16 @@
 //!   documenting the exact f32 accumulation order it preserves.  The
 //!   order contract makes every optimization here *bit-invisible*:
 //!   results are identical to the reference loops, only faster.
+//! * [`packed`] — bit-packed integer weight codes (4 codes/byte at
+//!   2-bit) with LUT-decode and integer-MAC GEMMs for the serve hot
+//!   path; the LUT kernel preserves the reference accumulation order
+//!   bit-for-bit, the scale-in-epilogue kernels carry a documented
+//!   epsilon contract ([`packed::PACKED_LOGIT_EPS`]).
 //! * [`cache`] — content-fingerprint memos for LSQ weight codes (per
-//!   `(layer, bits, step, weights)`) and Gabor-energy feature batches
-//!   (deterministic [`crate::data::Dataset::batch`] streams make content
-//!   identity equal batch identity).
+//!   `(layer, bits, step, weights)`), their bit-packed counterparts
+//!   ([`PackedWeightCache`], same invalidation), and Gabor-energy
+//!   feature batches (deterministic [`crate::data::Dataset::batch`]
+//!   streams make content identity equal batch identity).
 //! * [`Workspace`] / [`GradWs`] — reusable scratch for activations,
 //!   masks, and gradients, so steady-state `train_step`/`eval_step`
 //!   execute with no per-call buffer churn beyond the output tensors
@@ -28,8 +34,9 @@
 
 pub mod cache;
 pub mod gemm;
+pub mod packed;
 
-pub use cache::{fingerprint_f32, FeatCache, WeightCache};
+pub use cache::{fingerprint_f32, FeatCache, PackedWeightCache, WeightCache};
 
 /// Per-layer forward buffers, reused across calls; the backward pass
 /// reads them in place (no clone chain between forward and backward).

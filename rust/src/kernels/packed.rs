@@ -1,0 +1,533 @@
+//! Bit-packed integer weight-code kernels — the serve hot path's storage
+//! and compute format.
+//!
+//! The reference kernels ([`super::gemm`]) materialize every quantized
+//! layer as full `f32` fake-quant weights (`wt[o,i] = code·sw`): 32 bits
+//! per weight regardless of the 2-/4-bit precision the selection pipeline
+//! fought for.  This module stores the LSQ weight **codes themselves**,
+//! bit-packed into `u8` words, and executes the forward GEMM directly
+//! over the packed rows — so a 2-bit layer's working set is 16× smaller
+//! than its fake-quant image and stays cache-resident while serving.
+//!
+//! ## Packing layout
+//!
+//! Codes are stored **transposed** (output-major, matching the reference
+//! `wt` layout): row `o` holds layer input `i = 0..fan_in` contiguously.
+//! Each code occupies a fixed *storage field* of 2, 4, or 8 bits — the
+//! smallest that holds the quantizer's signed range in two's complement
+//! ([`crate::quant::storage_field_bits`]): 4 codes/byte at 2-bit, 2 at
+//! 4-bit, 1 at 8-bit.  Fields fill each byte LSB-first.
+//!
+//! **Tail padding rule:** every row is independently padded to a whole
+//! byte (`row_bytes = ceil(fan_in · field / 8)`), so row starts are
+//! byte-aligned at any `fan_in`.  Padding fields hold the bit pattern
+//! `0`, which decodes to code `0` (value `0.0`); the kernels iterate
+//! `i < fan_in` and never read it, so padding can never contribute to a
+//! dot product even if a future kernel over-reads a whole tail byte.
+//!
+//! ## Kernels and their accuracy contracts
+//!
+//! * [`gemm_bias_packed`] — decodes each field through the per-layer
+//!   `lut[pattern] = fl(code · sw)` table and accumulates in `f32` with
+//!   the **exact reference order** (bias first, `i` ascending, zero
+//!   activations skipped).  Because `lut[p]` is bit-for-bit the value the
+//!   reference `wt` holds for that code, this kernel is **bit-identical**
+//!   to [`super::gemm::gemm_bias_wt`] — ε = 0.  It is the packed path's
+//!   workhorse for every layer whose output feeds an activation
+//!   quantizer: `round(h/sa)` is discontinuous, so even a 1-ulp
+//!   reassociation difference in `z` could flip a code near a rounding
+//!   boundary and shift downstream logits by O(sa) — which is why the
+//!   scale-in-epilogue kernels below are *not* used there.
+//! * [`gemm_bias_packed_epilogue`] — accumulates `Σ aᵢ·codeᵢ` in `f32`
+//!   and applies the per-layer LSQ scale **once in the epilogue**
+//!   (`z = bias + sw·acc`).  Used for the logits layer of the packed
+//!   inference path, where nothing requantizes downstream: the
+//!   reassociation error is bounded by ~`(fan_in+2)·ε_f32·(|bias| +
+//!   Σ|aᵢ·wᵢ|)` ≈ 1e-5 for sim-scale layers; [`PACKED_LOGIT_EPS`]
+//!   documents the contract with two orders of magnitude of margin.
+//! * [`gemm_bias_packed_i32`] — the fully integer MAC: `u8` activation
+//!   codes × packed weight codes with exact `i32` accumulation and one
+//!   `f32` scale multiply (`sa·sw`) in the epilogue.  The integer dot is
+//!   *exact*; the whole error budget is the single scale rounding (same
+//!   bound as above).  This is the deployment-numerics kernel for
+//!   integer hardware; on the sim proxy models the residual branches mix
+//!   activations off the integer grid (`out = a_in + γ·hq`), so end to
+//!   end it is exercised at the kernel/bench level while
+//!   [`gemm_bias_packed`] carries the in-model packed path.
+//! * [`quantize_acts_u8`] — the activation side of the integer MAC:
+//!   ReLU → unsigned LSQ rounding, the identical rule as
+//!   [`super::gemm::relu_quant_act`], but keeping the integer code
+//!   instead of the rescaled `f32` value.
+//!
+//! [`PackedNet`] bundles one model's packed layers behind `Arc`s so the
+//! serving engine can materialize codes **once** and share them across
+//! all N workers (see `Backend::prepare_shared` / `adopt_shared`).
+
+use std::sync::Arc;
+
+use crate::quant;
+
+/// Documented per-logit bound for the scale-in-epilogue kernels
+/// ([`gemm_bias_packed_epilogue`], [`gemm_bias_packed_i32`]) against the
+/// reference fake-quant accumulation, at sim-model scales (fan-in ≤ a few
+/// hundred, activations and weights O(1)).  The measured reassociation
+/// error is ~1e-5 worst-case; 1e-3 leaves two orders of margin.
+/// [`gemm_bias_packed`] needs no epsilon: it is bit-identical (ε = 0).
+pub const PACKED_LOGIT_EPS: f32 = 1e-3;
+
+/// One layer's bit-packed weight codes plus decode tables.
+#[derive(Debug, Clone)]
+pub struct PackedLayer {
+    pub fan_in: usize,
+    pub fan_out: usize,
+    /// Logical quantizer width the codes were produced at.
+    pub bits: u32,
+    /// Storage field width (2, 4, or 8 bits; ≥ `bits`).
+    pub field: u32,
+    /// Codes per byte (`8 / field`).
+    pub codes_per_byte: usize,
+    /// `log2(codes_per_byte)` — the hot loops locate a code's byte with
+    /// `i >> cpb_shift` and its in-byte slot with `i & (codes_per_byte -
+    /// 1)`, so decode compiles to shifts/masks instead of a runtime
+    /// divide/modulo per MAC.
+    pub cpb_shift: u32,
+    /// Bytes per output row (`ceil(fan_in / codes_per_byte)` — the tail
+    /// padding rule).
+    pub row_bytes: usize,
+    /// Packed codes, `fan_out` rows × `row_bytes`.
+    pub data: Vec<u8>,
+    /// The layer's LSQ weight step size.
+    pub sw: f32,
+    /// `lut[pattern] = fl(clamp(code)·sw)` for every field pattern —
+    /// bit-for-bit the reference `wt` value for that code.
+    pub lut: Vec<f32>,
+    /// `lut_code[pattern] = code as f32` (exact small integers) for the
+    /// scale-in-epilogue kernels.
+    pub lut_code: Vec<f32>,
+}
+
+/// Sign-extend a `field`-bit two's-complement pattern to `i32`.
+#[inline]
+fn sign_extend(pattern: u8, field: u32) -> i32 {
+    ((pattern as i32) << (32 - field)) >> (32 - field)
+}
+
+/// Extract the `i`-th field pattern of a packed row.  `cpb_shift` is
+/// `log2(codes_per_byte)` and `slot_mask` is `codes_per_byte - 1`
+/// (codes-per-byte is always a power of two), so this is pure
+/// shift/mask work on the hot path.
+#[inline]
+fn pattern_at(
+    row: &[u8],
+    i: usize,
+    field: u32,
+    cpb_shift: u32,
+    slot_mask: usize,
+    mask: u8,
+) -> usize {
+    let byte = row[i >> cpb_shift];
+    ((byte >> (((i & slot_mask) as u32) * field)) & mask) as usize
+}
+
+impl PackedLayer {
+    /// Decode one weight code (diagnostics/tests; the kernels inline the
+    /// extraction).
+    pub fn code(&self, o: usize, i: usize) -> i32 {
+        let row = &self.data[o * self.row_bytes..(o + 1) * self.row_bytes];
+        let mask = ((1u16 << self.field) - 1) as u8;
+        sign_extend(
+            pattern_at(row, i, self.field, self.cpb_shift, self.codes_per_byte - 1, mask) as u8,
+            self.field,
+        )
+    }
+
+    /// Total packed bytes (the working-set win over `4 · fan_in · fan_out`
+    /// fake-quant bytes).
+    pub fn packed_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Bit-pack a weight tensor's LSQ codes at `bits` into the transposed
+/// packed layout.  `w` is in parameter layout (`w[i·fan_out + o]`, as the
+/// backends hold it); codes are computed exactly as the reference
+/// quantizer does (`round(w/sw)` clamped to the signed range — see
+/// [`crate::quant::weight_code`]).
+pub fn pack(
+    w: &[f32],
+    sw: f32,
+    bits: u32,
+    fan_in: usize,
+    fan_out: usize,
+) -> crate::Result<PackedLayer> {
+    crate::ensure!(
+        (1..=8).contains(&bits),
+        "packed kernels support 1..=8-bit weight codes, got {bits}-bit"
+    );
+    crate::ensure!(
+        w.len() == fan_in * fan_out,
+        "pack: weight tensor has {} elements, expected {}x{}",
+        w.len(),
+        fan_in,
+        fan_out
+    );
+    let field = quant::storage_field_bits(bits);
+    let codes_per_byte = (8 / field) as usize;
+    let row_bytes = (fan_in + codes_per_byte - 1) / codes_per_byte;
+    let mask = ((1u16 << field) - 1) as u8;
+    let mut data = vec![0u8; fan_out * row_bytes];
+    for o in 0..fan_out {
+        let row = &mut data[o * row_bytes..(o + 1) * row_bytes];
+        for i in 0..fan_in {
+            let code = quant::weight_code(w[i * fan_out + o], sw, bits);
+            let shift = ((i % codes_per_byte) as u32) * field;
+            row[i / codes_per_byte] |= ((code as u8) & mask) << shift;
+        }
+    }
+    // Decode tables over every field pattern.  Stored codes are already
+    // in the quantizer range; the clamp makes even a corrupt pattern
+    // decode to an in-range value.  For in-range codes `clamp` is the
+    // identity, so `lut[p]` carries the exact f32 product the reference
+    // `quantize_weights_wt` writes into `wt`.
+    let (qn, qp) = quant::qrange_signed(bits);
+    let mut lut = Vec::with_capacity(1 << field);
+    let mut lut_code = Vec::with_capacity(1 << field);
+    for p in 0..(1u16 << field) as usize {
+        let c = (sign_extend(p as u8, field) as f32).clamp(qn, qp);
+        lut.push(c * sw);
+        lut_code.push(c);
+    }
+    Ok(PackedLayer {
+        fan_in,
+        fan_out,
+        bits,
+        field,
+        codes_per_byte,
+        cpb_shift: codes_per_byte.trailing_zeros(),
+        row_bytes,
+        data,
+        sw,
+        lut,
+        lut_code,
+    })
+}
+
+/// Forward tile over packed rows with LUT decode:
+/// `z[b,o] = bias[o] + Σ_i a[b,i] · lut[code(o,i)]`.
+///
+/// Accumulation contract: bias first, `i` ascending, exact skip of zero
+/// activations — the identical add sequence as
+/// [`super::gemm::gemm_bias_wt`] over identical operand bits, so the
+/// result is **bit-identical** to the reference fake-quant forward.
+pub fn gemm_bias_packed(
+    a: &[f32],
+    pk: &PackedLayer,
+    bias: &[f32],
+    z: &mut [f32],
+    batch: usize,
+) {
+    let (fi, fo) = (pk.fan_in, pk.fan_out);
+    let mask = ((1u16 << pk.field) - 1) as u8;
+    let (shift, slot) = (pk.cpb_shift, pk.codes_per_byte - 1);
+    for bi in 0..batch {
+        let arow = &a[bi * fi..(bi + 1) * fi];
+        let zrow = &mut z[bi * fo..(bi + 1) * fo];
+        for (o, zv) in zrow.iter_mut().enumerate() {
+            let row = &pk.data[o * pk.row_bytes..(o + 1) * pk.row_bytes];
+            let mut acc = bias[o];
+            for (i, &av) in arow.iter().enumerate() {
+                if av != 0.0 {
+                    acc += av * pk.lut[pattern_at(row, i, pk.field, shift, slot, mask)];
+                }
+            }
+            *zv = acc;
+        }
+    }
+}
+
+/// Forward tile with the per-layer LSQ scale applied **once in the
+/// epilogue**: `acc = Σ_i a[b,i] · code(o,i)` in f32 (codes are exact
+/// small integers), then `z[b,o] = bias[o] + sw · acc`.
+///
+/// Not bit-identical to the reference — the scale reassociation costs a
+/// bounded rounding difference ([`PACKED_LOGIT_EPS`]).  Safe only where
+/// no activation quantizer consumes `z` (the logits layer).
+pub fn gemm_bias_packed_epilogue(
+    a: &[f32],
+    pk: &PackedLayer,
+    bias: &[f32],
+    z: &mut [f32],
+    batch: usize,
+) {
+    let (fi, fo) = (pk.fan_in, pk.fan_out);
+    let mask = ((1u16 << pk.field) - 1) as u8;
+    let (shift, slot) = (pk.cpb_shift, pk.codes_per_byte - 1);
+    for bi in 0..batch {
+        let arow = &a[bi * fi..(bi + 1) * fi];
+        let zrow = &mut z[bi * fo..(bi + 1) * fo];
+        for (o, zv) in zrow.iter_mut().enumerate() {
+            let row = &pk.data[o * pk.row_bytes..(o + 1) * pk.row_bytes];
+            let mut acc = 0f32;
+            for (i, &av) in arow.iter().enumerate() {
+                if av != 0.0 {
+                    acc += av * pk.lut_code[pattern_at(row, i, pk.field, shift, slot, mask)];
+                }
+            }
+            *zv = bias[o] + pk.sw * acc;
+        }
+    }
+}
+
+/// The fully integer MAC tile: `u8` activation codes × packed weight
+/// codes, **exact `i32` accumulation**, one scale multiply in the
+/// epilogue:
+///
+/// `z[b,o] = bias[o] + scale · (Σ_i acode[b,i] · code(o,i))`
+///
+/// where `scale` is the product of the incoming activation step size and
+/// this layer's weight step size (`sa_in · sw`).  The integer dot is
+/// exact (no rounding at any accumulation step: |acc| ≤ fan_in·255·128
+/// fits i32 for any fan_in ≤ 2¹⁶); the entire f32 error is the epilogue
+/// multiply-add ([`PACKED_LOGIT_EPS`]).
+pub fn gemm_bias_packed_i32(
+    acodes: &[u8],
+    pk: &PackedLayer,
+    bias: &[f32],
+    scale: f32,
+    z: &mut [f32],
+    batch: usize,
+) {
+    let (fi, fo) = (pk.fan_in, pk.fan_out);
+    let mask = ((1u16 << pk.field) - 1) as u8;
+    let (shift, slot) = (pk.cpb_shift, pk.codes_per_byte - 1);
+    for bi in 0..batch {
+        let arow = &acodes[bi * fi..(bi + 1) * fi];
+        let zrow = &mut z[bi * fo..(bi + 1) * fo];
+        for (o, zv) in zrow.iter_mut().enumerate() {
+            let row = &pk.data[o * pk.row_bytes..(o + 1) * pk.row_bytes];
+            let mut acc = 0i32;
+            for (i, &ac) in arow.iter().enumerate() {
+                if ac != 0 {
+                    let p = pattern_at(row, i, pk.field, shift, slot, mask);
+                    acc += (ac as i32) * sign_extend(p as u8, pk.field);
+                }
+            }
+            *zv = bias[o] + scale * acc as f32;
+        }
+    }
+}
+
+/// ReLU → unsigned LSQ activation **codes** — the same rounding rule as
+/// [`super::gemm::relu_quant_act`] (`clamp(round(max(z,0)/sa), 0, aqp)`),
+/// kept as integers for [`gemm_bias_packed_i32`].  `aqp` must be ≤ 255
+/// (8-bit unsigned activations), which [`crate::quant::qrange_unsigned`]
+/// guarantees for bits ≤ 8.
+pub fn quantize_acts_u8(z: &[f32], sa: f32, aqp: f32, codes: &mut Vec<u8>) {
+    debug_assert!(aqp <= 255.0);
+    codes.clear();
+    codes.reserve(z.len());
+    codes.extend(
+        z.iter()
+            .map(|&zv| (zv.max(0.0) / sa).round().clamp(0.0, aqp) as u8),
+    );
+}
+
+/// One model's packed layers at one (checkpoint, bits) configuration —
+/// the immutable state the serving engine materializes once and shares
+/// across its worker pool (`Backend::prepare_shared` / `adopt_shared`).
+#[derive(Debug, Clone)]
+pub struct PackedNet {
+    /// Effective per-layer precision the codes were packed at (fixed
+    /// layers pinned), used to fail closed on a config mismatch.
+    pub bits_eff: Vec<u32>,
+    pub layers: Vec<Arc<PackedLayer>>,
+}
+
+impl PackedNet {
+    /// Total packed bytes across the model.
+    pub fn packed_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.packed_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::gemm;
+    use crate::rng::Pcg32;
+
+    fn random_weights(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed, 0x7061_636b);
+        (0..n).map(|_| rng.normal() * 0.3).collect()
+    }
+
+    #[test]
+    fn pack_round_trips_codes_at_any_fan_in() {
+        for &bits in &[1u32, 2, 3, 4, 5, 8] {
+            for &fan_in in &[1usize, 3, 4, 5, 7, 8, 13, 16] {
+                let fan_out = 3;
+                let w = random_weights(fan_in * fan_out, bits as u64 * 100 + fan_in as u64);
+                let pk = pack(&w, 0.1, bits, fan_in, fan_out).unwrap();
+                assert_eq!(pk.field, quant::storage_field_bits(bits));
+                assert_eq!(
+                    pk.row_bytes,
+                    (fan_in + pk.codes_per_byte - 1) / pk.codes_per_byte
+                );
+                for o in 0..fan_out {
+                    for i in 0..fan_in {
+                        assert_eq!(
+                            pk.code(o, i),
+                            quant::weight_code(w[i * fan_out + o], 0.1, bits),
+                            "bits={bits} fan_in={fan_in} (o={o}, i={i})"
+                        );
+                    }
+                    // Tail padding rule: fields past fan_in are zero.
+                    let row = &pk.data[o * pk.row_bytes..(o + 1) * pk.row_bytes];
+                    let mask = ((1u16 << pk.field) - 1) as u8;
+                    for i in fan_in..pk.row_bytes * pk.codes_per_byte {
+                        assert_eq!(
+                            pattern_at(row, i, pk.field, pk.cpb_shift, pk.codes_per_byte - 1, mask),
+                            0,
+                            "padding must be the zero pattern"
+                        );
+                    }
+                }
+            }
+        }
+        assert!(pack(&[0.0], 0.1, 9, 1, 1).is_err(), "bits > 8 must fail closed");
+        assert!(pack(&[0.0; 3], 0.1, 4, 2, 2).is_err(), "shape mismatch must fail");
+    }
+
+    #[test]
+    fn packed_bytes_shrink_with_precision() {
+        let (fi, fo) = (16usize, 8usize);
+        let w = random_weights(fi * fo, 9);
+        let p2 = pack(&w, 0.1, 2, fi, fo).unwrap();
+        let p4 = pack(&w, 0.1, 4, fi, fo).unwrap();
+        let p8 = pack(&w, 0.1, 8, fi, fo).unwrap();
+        assert_eq!(p2.packed_bytes(), fi * fo / 4);
+        assert_eq!(p4.packed_bytes(), fi * fo / 2);
+        assert_eq!(p8.packed_bytes(), fi * fo);
+        // vs 4 bytes/weight fake-quant: 16x / 8x / 4x smaller.
+        assert_eq!(4 * fi * fo / p2.packed_bytes(), 16);
+    }
+
+    /// LUT decode reproduces the reference fake-quant GEMM bit for bit,
+    /// including at fan-ins that are not multiples of the packing factor.
+    #[test]
+    fn lut_gemm_is_bit_identical_to_reference() {
+        let mut rng = Pcg32::new(5, 6);
+        for &bits in &[2u32, 4, 8] {
+            for &fi in &[5usize, 7, 8, 13] {
+                let (fo, batch) = (6usize, 3usize);
+                let w = random_weights(fi * fo, bits as u64 + fi as u64);
+                let bias: Vec<f32> = (0..fo).map(|_| rng.normal() * 0.1).collect();
+                let a: Vec<f32> = (0..batch * fi)
+                    .map(|i| if i % 4 == 0 { 0.0 } else { rng.normal() })
+                    .collect();
+                let sw = 0.13f32;
+                let (qn, qp) = quant::qrange_signed(bits);
+                let mut wt = vec![0f32; fi * fo];
+                let mut w_in = vec![false; fi * fo];
+                gemm::quantize_weights_wt(&w, sw, qn, qp, &mut wt, &mut w_in, fi, fo);
+                let mut z_ref = vec![0f32; batch * fo];
+                gemm::gemm_bias_wt(&a, &wt, &bias, &mut z_ref, batch, fi, fo);
+                let pk = pack(&w, sw, bits, fi, fo).unwrap();
+                let mut z_pk = vec![0f32; batch * fo];
+                gemm_bias_packed(&a, &pk, &bias, &mut z_pk, batch);
+                assert_eq!(z_pk, z_ref, "bits={bits} fan_in={fi}");
+            }
+        }
+    }
+
+    /// With power-of-two step sizes and small magnitudes every f32
+    /// operation in both paths is exact, so the i32 kernel must agree
+    /// with the reference *bitwise* — isolating packing/decode bugs from
+    /// rounding noise.
+    #[test]
+    fn i32_gemm_is_exact_with_pow2_scales() {
+        let (fi, fo, batch) = (13usize, 4usize, 2usize);
+        let (sw, sa) = (0.25f32, 0.5f32);
+        let bits = 4u32;
+        let (_, aqp) = quant::qrange_unsigned(bits);
+        let mut rng = Pcg32::new(11, 12);
+        let w: Vec<f32> = (0..fi * fo).map(|_| rng.normal()).collect();
+        let bias: Vec<f32> = (0..fo).map(|_| (rng.below(8) as f32) * 0.25).collect();
+        let acodes: Vec<u8> = (0..batch * fi)
+            .map(|_| rng.below(aqp as u32 + 1) as u8)
+            .collect();
+        let a: Vec<f32> = acodes.iter().map(|&c| c as f32 * sa).collect();
+        let (qn, qp) = quant::qrange_signed(bits);
+        let mut wt = vec![0f32; fi * fo];
+        let mut w_in = vec![false; fi * fo];
+        gemm::quantize_weights_wt(&w, sw, qn, qp, &mut wt, &mut w_in, fi, fo);
+        let mut z_ref = vec![0f32; batch * fo];
+        gemm::gemm_bias_wt(&a, &wt, &bias, &mut z_ref, batch, fi, fo);
+        let pk = pack(&w, sw, bits, fi, fo).unwrap();
+        let mut z_pk = vec![0f32; batch * fo];
+        gemm_bias_packed_i32(&acodes, &pk, &bias, sa * sw, &mut z_pk, batch);
+        for (p, r) in z_pk.iter().zip(&z_ref) {
+            assert_eq!(p.to_bits(), r.to_bits(), "pow2 scales must be exact");
+        }
+    }
+
+    /// General scales: the integer dot is exact, so the only divergence
+    /// from the reference is bounded rounding — well inside the
+    /// documented epsilon.
+    #[test]
+    fn i32_and_epilogue_gemm_match_reference_within_epsilon() {
+        let mut rng = Pcg32::new(21, 22);
+        for &bits in &[2u32, 4, 8] {
+            let (fi, fo, batch) = (15usize, 5usize, 3usize);
+            let (sw, sa) = (0.13f32, 0.1f32);
+            let (_, aqp) = quant::qrange_unsigned(bits.min(4));
+            let w = random_weights(fi * fo, 31 + bits as u64);
+            let bias: Vec<f32> = (0..fo).map(|_| rng.normal() * 0.1).collect();
+            let acodes: Vec<u8> = (0..batch * fi)
+                .map(|_| rng.below(aqp as u32 + 1) as u8)
+                .collect();
+            let a: Vec<f32> = acodes.iter().map(|&c| c as f32 * sa).collect();
+            let (qn, qp) = quant::qrange_signed(bits);
+            let mut wt = vec![0f32; fi * fo];
+            let mut w_in = vec![false; fi * fo];
+            gemm::quantize_weights_wt(&w, sw, qn, qp, &mut wt, &mut w_in, fi, fo);
+            let mut z_ref = vec![0f32; batch * fo];
+            gemm::gemm_bias_wt(&a, &wt, &bias, &mut z_ref, batch, fi, fo);
+            let pk = pack(&w, sw, bits, fi, fo).unwrap();
+            let mut z_i32 = vec![0f32; batch * fo];
+            gemm_bias_packed_i32(&acodes, &pk, &bias, sa * sw, &mut z_i32, batch);
+            let mut z_epi = vec![0f32; batch * fo];
+            gemm_bias_packed_epilogue(&a, &pk, &bias, &mut z_epi, batch);
+            for idx in 0..batch * fo {
+                assert!(
+                    (z_i32[idx] - z_ref[idx]).abs() <= PACKED_LOGIT_EPS,
+                    "bits={bits} i32 idx={idx}: {} vs {}",
+                    z_i32[idx],
+                    z_ref[idx]
+                );
+                assert!(
+                    (z_epi[idx] - z_ref[idx]).abs() <= PACKED_LOGIT_EPS,
+                    "bits={bits} epilogue idx={idx}: {} vs {}",
+                    z_epi[idx],
+                    z_ref[idx]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_acts_matches_relu_quant_rule() {
+        let z = vec![-0.3f32, 0.0, 0.04, 0.06, 1.49, 100.0];
+        let (sa, aqp) = (0.1f32, 15.0f32);
+        let mut codes = Vec::new();
+        quantize_acts_u8(&z, sa, aqp, &mut codes);
+        // Reference rule via relu_quant_act: out = code·sa.
+        let mut out = vec![0f32; z.len()];
+        let mut act_in = vec![false; z.len()];
+        gemm::relu_quant_act(&z, sa, aqp, None, 0.0, &mut out, &mut act_in);
+        for (c, o) in codes.iter().zip(&out) {
+            assert_eq!((*c as f32) * sa, *o);
+        }
+        assert_eq!(codes, vec![0, 0, 0, 1, 15, 15]);
+    }
+}

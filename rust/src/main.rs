@@ -32,7 +32,7 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use mpq::backend::{self, Backend, BackendKind, Task, TrainState};
+use mpq::backend::{self, Backend, BackendKind, KernelChoice, Task, TrainState};
 use mpq::cli::Args;
 use mpq::coordinator::{self, Coordinator, ResultStore};
 use mpq::data::Split;
@@ -85,9 +85,33 @@ fn resolve_target(args: &Args) -> mpq::Result<(BackendKind, String)> {
     }
 }
 
+/// Resolve `--kernel` for a subcommand: the flag wins, else
+/// `default_kernel` — but only on the sim backend (packed kernels are
+/// sim-only, so pjrt always defaults to reference).
+fn kernel_for(args: &Args, kind: BackendKind, default_kernel: &str) -> mpq::Result<KernelChoice> {
+    let d = match kind {
+        BackendKind::Sim => default_kernel,
+        BackendKind::Pjrt => "reference",
+    };
+    KernelChoice::parse(&args.str("kernel", d))
+}
+
 fn coordinator(args: &Args) -> mpq::Result<Coordinator<Box<dyn Backend>>> {
+    Ok(coordinator_kernel(args, "reference")?.0)
+}
+
+/// [`coordinator`] with a subcommand-specific `--kernel` default
+/// (`serve`/`infer` default to the packed inference kernels).  Returns
+/// the resolved backend kind and kernel alongside the coordinator so
+/// callers that open more backends (the serve spawner) reuse exactly the
+/// resolution the coordinator was built with instead of re-deriving it.
+fn coordinator_kernel(
+    args: &Args,
+    default_kernel: &str,
+) -> mpq::Result<(Coordinator<Box<dyn Backend>>, BackendKind, KernelChoice)> {
     let (kind, model) = resolve_target(args)?;
-    let mut co = Coordinator::open(kind, &model, args.u64("data-seed", 7)?)?;
+    let kernel = kernel_for(args, kind, default_kernel)?;
+    let mut co = Coordinator::open_kernel(kind, &model, args.u64("data-seed", 7)?, kernel)?;
     co.base_steps = args.usize("base-steps", co.base_steps)?;
     co.ft_steps = args.usize("ft-steps", co.ft_steps)?;
     co.eval_batches = args.usize("eval-batches", co.eval_batches)?;
@@ -97,7 +121,7 @@ fn coordinator(args: &Args) -> mpq::Result<Coordinator<Box<dyn Backend>>> {
     // Sweep parallelism: --workers wins, else MPQ_WORKERS, else available
     // parallelism (resolved in default_workers, already set on co).
     co.workers = args.usize("workers", co.workers)?.max(1);
-    Ok(co)
+    Ok((co, kind, kernel))
 }
 
 /// Tuning flags shared by the single-cell subcommands (for `exp` these
@@ -113,6 +137,7 @@ const COMMON_FLAGS: &[&str] = &[
     "hawq-samples",
     "hawq-batches",
     "workers",
+    "kernel",
 ];
 
 /// Per-subcommand flag validation: every subcommand rejects unknown or
@@ -200,10 +225,14 @@ subcommands:
               [--workers N] [--max-batch B] [--batch-timeout-ms T] [--ft-steps S]
               [--requests R] [--max-request S] [--mode closed|open]
               [--concurrency C] [--rate HZ] [--loadgen-seed X] [--per-request]
-              batched inference engine + deterministic loadgen; responses are
-              bit-identical to direct single-request eval at any setting
+              batched inference engine + deterministic loadgen; batching is
+              invariant (responses bit-identical at any --workers/--max-batch/
+              composition); vs direct single-request eval: bit-identical with
+              --kernel reference or --per-request, epsilon-equal with the
+              packed default (identical accuracy)
   infer       --model M [--budget F | --bits-from ...] [--samples N] [--index I]
-              one-shot inference (the serve path's bit-identity reference)
+              one-shot inference (a direct eval_step; bit-identical across
+              kernels)
   eagl        --model M [--ckpt P]          offline EAGL metric (Fig. 2)
 
 backends: --backend sim|pjrt|auto (default auto).  sim = hermetic pure-Rust
@@ -213,7 +242,12 @@ backends: --backend sim|pjrt|auto (default auto).  sim = hermetic pure-Rust
 common flags: --data-seed, --base-steps, --ft-steps, --eval-batches,
               --alps-steps, --hawq-samples, --hawq-batches,
               --workers N (parallel runs + gain estimation; default:
-              available parallelism; results bit-identical at any N)
+              available parallelism; results bit-identical at any N),
+              --kernel packed|reference (sim forward kernels; default
+              reference, except serve/infer which default to the
+              bit-packed integer path — eval is bit-identical either
+              way, packed inference logits carry a documented epsilon;
+              see rust/README.md §Packed kernels)
 unknown or misspelled flags are rejected per subcommand.
 env: MPQ_ARTIFACTS (artifacts dir), MPQ_RESULTS (results root),
      MPQ_LOG (debug|info|warn|error), MPQ_WORKERS (default for --workers)
@@ -504,8 +538,13 @@ fn serve_checkpoint(
 /// `mpq serve`: start the batched inference engine for the resolved
 /// (checkpoint, bits) pair and drive it with the deterministic loadgen.
 fn cmd_serve(args: &Args) -> mpq::Result<()> {
-    let (kind, model) = resolve_target(args)?;
-    let mut co = coordinator(args)?;
+    // Serving defaults to the packed inference kernels on sim: bit-packed
+    // weight codes, materialized once and shared across the worker pool.
+    // The worker spawner reuses the exact (kind, kernel) the coordinator
+    // resolved, so engine workers can never diverge from the coordinator
+    // that produced the checkpoint and bits.
+    let (mut co, kind, kernel) = coordinator_kernel(args, "packed")?;
+    let model = co.model.clone();
     let bits = serve_bits(args, &mut co)?;
     let ck = serve_checkpoint(args, &mut co, &bits)?;
     let timeout_ms = args.f64("batch-timeout-ms", 1.0)?;
@@ -521,10 +560,11 @@ fn cmd_serve(args: &Args) -> mpq::Result<()> {
         warmup: true,
     };
     let model_s = model.clone();
-    let spawner: serve::Spawner = Arc::new(move || backend::open(kind, &model_s));
+    let spawner: serve::Spawner = Arc::new(move || backend::open_with(kind, &model_s, kernel));
     println!(
-        "serving {model} [{}]: {} group(s) at 2-bit, compression {:.2}x, {:.4} GBOPs",
+        "serving {model} [{}, {} kernels]: {} group(s) at 2-bit, compression {:.2}x, {:.4} GBOPs",
         kind.name(),
+        kernel.name(),
         bits.count_at(&co.graph, 2),
         mpq::quant::compression_ratio(&co.graph, &bits),
         mpq::quant::gbops(&co.graph, &bits)
@@ -575,9 +615,13 @@ fn cmd_serve(args: &Args) -> mpq::Result<()> {
 }
 
 /// `mpq infer`: one-shot inference — a direct single-request `eval_step`,
-/// the exact computation serve responses are bit-identical to.
+/// the reference computation serve responses are compared against:
+/// bit-identical for `--kernel reference` (or `--per-request`) serving,
+/// epsilon-equal for the packed fused path (whose logits layer applies
+/// the LSQ scale in the epilogue; eval itself is bit-identical across
+/// kernels, so this command prints the same numbers with either flag).
 fn cmd_infer(args: &Args) -> mpq::Result<()> {
-    let mut co = coordinator(args)?;
+    let (mut co, _, _) = coordinator_kernel(args, "packed")?;
     let bits = serve_bits(args, &mut co)?;
     let ck = serve_checkpoint(args, &mut co, &bits)?;
     let samples = args.usize("samples", 1)?;

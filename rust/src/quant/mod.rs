@@ -24,6 +24,20 @@ pub fn fake_quant(v: f32, s: f32, qn: f32, qp: f32) -> f32 {
     (v / s).round().clamp(qn, qp) * s
 }
 
+/// Smallest packed storage field (2, 4, or 8 bits) that holds every code
+/// of a signed `bits`-bit quantizer in two's complement — the field width
+/// of [`crate::kernels::packed`]'s bit-packed weight layout (4 codes/byte
+/// at ≤2-bit, 2 at ≤4-bit, 1 otherwise).
+pub fn storage_field_bits(bits: u32) -> u32 {
+    if bits <= 2 {
+        2
+    } else if bits <= 4 {
+        4
+    } else {
+        8
+    }
+}
+
 /// Integer code of a weight under a signed b-bit quantizer (paper App. E).
 pub fn weight_code(v: f32, s: f32, bits: u32) -> i32 {
     let (qn, qp) = qrange_signed(bits);
@@ -175,6 +189,17 @@ mod tests {
         assert_eq!(qrange_signed(2), (-2.0, 1.0));
         assert_eq!(qrange_unsigned(4), (0.0, 15.0));
         assert_eq!(qrange_unsigned(8), (0.0, 255.0));
+    }
+
+    #[test]
+    fn storage_fields_cover_signed_ranges() {
+        for &(bits, field) in &[(1u32, 2u32), (2, 2), (3, 4), (4, 4), (5, 8), (8, 8)] {
+            assert_eq!(storage_field_bits(bits), field, "bits={bits}");
+            // The field's two's-complement range covers the quantizer's.
+            let (qn, qp) = qrange_signed(bits);
+            let half = 1i64 << (field - 1);
+            assert!(qn >= -(half as f32) && qp <= (half - 1) as f32);
+        }
     }
 
     #[test]

@@ -23,7 +23,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::backend::{Backend, Task};
+use crate::backend::{Backend, SharedExecState, Task};
 use crate::ckpt::Checkpoint;
 use crate::tensor::{DType, Tensor};
 
@@ -77,6 +77,11 @@ struct Shared {
     sample_dims: Vec<usize>,
     x_dtype: DType,
     y_dtype: DType,
+    /// Immutable execution state materialized once by the startup probe
+    /// and adopted by every worker — e.g. the sim backend's bit-packed
+    /// weight codes, so N workers share one per-layer packed
+    /// materialization instead of packing N times.
+    shared_exec: Option<SharedExecState>,
 }
 
 /// A running serving engine.  `submit` is thread-safe; [`Engine::drain`]
@@ -103,8 +108,8 @@ impl Engine {
         // `Box<dyn Backend>` carries no `Send` bound (PJRT clients must
         // stay on the thread that opened them), so backends are only ever
         // constructed inside their worker.
-        let (fused, sample_dims, x_dtype, y_dtype) = {
-            let probe = spawner()?;
+        let (fused, sample_dims, x_dtype, y_dtype, shared_exec) = {
+            let mut probe = spawner()?;
             let m = probe.manifest();
             crate::ensure!(
                 bits.len() == m.n_bits,
@@ -134,7 +139,11 @@ impl Engine {
                 "serve: model '{}' manifest has no eval input shape",
                 m.model
             );
-            (fused, dims, m.x_dtype, m.y_dtype)
+            let (x_dtype, y_dtype) = (m.x_dtype, m.y_dtype);
+            // Materialize any shareable execution state (e.g. packed
+            // weight codes) once, on the probe, before the workers spawn.
+            let shared_exec = probe.prepare_shared(&ckpt, &bits)?;
+            (fused, dims, x_dtype, y_dtype, shared_exec)
         };
         let shared = Arc::new(Shared {
             q: Mutex::new(BatchQueue::new(cfg.max_batch, cfg.batch_timeout)),
@@ -146,6 +155,7 @@ impl Engine {
             sample_dims,
             x_dtype,
             y_dtype,
+            shared_exec,
         });
         let mut handles = Vec::with_capacity(cfg.workers);
         for wi in 0..cfg.workers {
@@ -304,6 +314,15 @@ fn worker_loop(sh: Arc<Shared>, spawner: Spawner, warmup: bool) {
             return;
         }
     };
+    // Adopt the probe's shared execution state (e.g. packed weight
+    // codes) before any request: the expensive per-layer materialization
+    // happened exactly once, at engine startup.
+    if let Some(h) = &sh.shared_exec {
+        if let Err(e) = be.adopt_shared(h) {
+            fatal(&sh, &format!("worker failed to adopt shared state: {e}"));
+            return;
+        }
+    }
     if warmup {
         warmup_backend(&sh, &mut be);
     }

@@ -250,6 +250,32 @@ mod tests {
         assert!(s.mean_latency_s > 0.0);
     }
 
+    /// Regression: small histograms must never report the top bucket
+    /// (~2⁶³ ns) for a valid quantile.  With a single recorded sample,
+    /// `rank = ceil(q·total)` clamped to `[1, total]` is 1 for every q,
+    /// so p50/p95/p99 all land in the sample's own bucket — a truncating
+    /// or un-clamped rank (`q·total` rounding above the cumulative
+    /// total) instead fell through the walk to `bucket_rep_ns(N_BUCKETS
+    /// - 1)`.
+    #[test]
+    fn single_sample_quantiles_report_its_bucket_not_the_max() {
+        let m = Metrics::new();
+        m.record_submitted();
+        m.record_request(1, Duration::from_micros(100));
+        let s = m.snapshot();
+        let own_bucket_s = bucket_rep_ns(bucket_index(100_000)) / 1e9;
+        for (name, q) in [("p50", s.p50_s), ("p95", s.p95_s), ("p99", s.p99_s)] {
+            assert_eq!(
+                q.to_bits(),
+                own_bucket_s.to_bits(),
+                "{name} of a one-sample histogram must be the sample's bucket, got {q}"
+            );
+            assert!(q < 1.0, "{name} reported {q}s for a 100µs sample (max-bucket fall-through)");
+        }
+        // NaN stays reserved for the genuinely empty histogram.
+        assert!(Metrics::new().snapshot().p99_s.is_nan());
+    }
+
     #[test]
     fn snapshot_round_trips_through_json() {
         let m = Metrics::new();

@@ -16,12 +16,22 @@
 //! * [`Engine`] ([`engine`]) — worker pool over one shared submission
 //!   queue; each worker owns a [`crate::backend::Backend`] whose
 //!   [`crate::kernels`] weight-code cache materializes quantized codes
-//!   once per layer, not per request.  Graceful [`Engine::drain`].
+//!   once per layer, not per request.  On the packed kernel path
+//!   (`--kernel packed`, the sim serving default) the bit-packed codes
+//!   ([`crate::kernels::packed`]) are materialized **once at startup**
+//!   and shared across all N workers via
+//!   `Backend::prepare_shared`/`adopt_shared`.  Graceful
+//!   [`Engine::drain`].
 //! * [`batcher`] — size/deadline-triggered micro-batching with request
-//!   splitting and plan-order response reassembly.  Responses are
-//!   **bit-identical to direct single-request `eval_step`** at any batch
+//!   splitting and plan-order response reassembly.  Batching is
+//!   **invisible**: responses are bit-identical at any batch
 //!   composition, `max_batch`, and worker count (the module docs carry
 //!   the argument; `rust/tests/serve_integration.rs` the assertions).
+//!   Against direct single-request `eval_step` they are bit-identical
+//!   on the reference kernels (and in per-request mode); the packed
+//!   fused path is epsilon-equal with identical accuracy
+//!   ([`crate::kernels::packed::PACKED_LOGIT_EPS`],
+//!   `rust/tests/packed_kernels.rs`).
 //! * [`metrics`] — lock-free latency histogram (p50/p95/p99),
 //!   throughput and batch-occupancy counters.
 //! * [`loadgen`] — deterministic seeded closed-loop/open-loop load

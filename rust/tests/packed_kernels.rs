@@ -1,0 +1,274 @@
+//! Packed-kernel equivalence tests — the accuracy contract of the
+//! bit-packed integer execution path (`--kernel packed`).
+//!
+//! Contract under test (see `rust/src/kernels/packed.rs`):
+//!
+//! * `eval_step` with packed kernels is **bit-identical** to the
+//!   reference fake-quant path (the LUT kernel preserves the reference
+//!   accumulation order), on every sim model, at 2/4/8-bit and mixed
+//!   precisions — so EAGL/ALPS gains, frontier selections, and anything
+//!   else built on evaluation are unchanged by construction;
+//! * `infer_step` with packed kernels applies the LSQ scale once in the
+//!   logits epilogue: per-logit agreement within the documented
+//!   `PACKED_LOGIT_EPS`, identical argmax;
+//! * serving with packed kernels produces responses epsilon-equal to a
+//!   reference-kernel engine at workers ∈ {1, 4} × max-batch ∈ {1, 8},
+//!   with identical per-request correct counts.
+//!
+//! Hermetic: sim backend, seeded init checkpoints, isolated results
+//! directories for the selection sweeps.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use mpq::backend::{Backend, KernelChoice, SimBackend};
+use mpq::ckpt::Checkpoint;
+use mpq::coordinator::Coordinator;
+use mpq::data::{Dataset, Split};
+use mpq::graph::Graph;
+use mpq::kernels::packed::PACKED_LOGIT_EPS;
+use mpq::methods::MethodKind;
+use mpq::quant::BitsConfig;
+use mpq::serve::{Engine, Response, ServeConfig, Spawner};
+use mpq::tensor::Tensor;
+
+fn spawner(model: &'static str, kernel: KernelChoice) -> Spawner {
+    Arc::new(move || Ok(Box::new(SimBackend::with_kernel(model, kernel)?) as Box<dyn Backend>))
+}
+
+/// (checkpoint, graph, dataset) for a sim model's seeded init state.
+fn setup(model: &str) -> (Checkpoint, Graph, Dataset) {
+    let be = SimBackend::new(model).unwrap();
+    let graph = Graph::from_manifest(&be.manifest().raw).unwrap();
+    let ck = be.init_checkpoint().unwrap();
+    (ck, graph, Dataset::for_task(be.manifest().task, 13))
+}
+
+/// Precision vectors spanning the paper's range plus a mixed assignment,
+/// including row lengths that are not multiples of the packing factor
+/// (sim fan-ins of 10/12/16 at 4 codes/byte and 2 codes/byte).
+fn bits_configs(graph: &Graph) -> Vec<Vec<f32>> {
+    let mut out: Vec<Vec<f32>> = [2u32, 4, 8]
+        .iter()
+        .map(|&b| BitsConfig::uniform(graph, b).to_f32())
+        .collect();
+    let mut mixed = BitsConfig::uniform(graph, 4);
+    let mut lo = true;
+    for l in &graph.layers {
+        if l.fixed_bits.is_none() {
+            mixed.bits[l.qindex] = if lo { 2 } else { 8 };
+            lo = !lo;
+        }
+    }
+    out.push(mixed.to_f32());
+    out
+}
+
+#[test]
+fn packed_eval_is_bit_identical_across_models_and_precisions() {
+    for model in ["sim_tiny", "sim_skew"] {
+        let (ck, graph, data) = setup(model);
+        let mut rbe = SimBackend::new(model).unwrap();
+        let mut pbe = SimBackend::with_kernel(model, KernelChoice::Packed).unwrap();
+        for bits in bits_configs(&graph) {
+            for idx in 0..2u64 {
+                let (x, y) = data.batch(Split::Eval, idx, 48);
+                let (lr, cr) = rbe.eval_step(&ck, &x, &y, &bits).unwrap();
+                let (lp, cp) = pbe.eval_step(&ck, &x, &y, &bits).unwrap();
+                assert_eq!(
+                    lp.to_bits(),
+                    lr.to_bits(),
+                    "{model} bits={bits:?}: packed eval loss must be bit-identical"
+                );
+                assert_eq!(cp, cr, "{model} bits={bits:?}: correct count must be identical");
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_infer_logits_within_epsilon_with_identical_argmax() {
+    for model in ["sim_tiny", "sim_skew"] {
+        let (ck, graph, data) = setup(model);
+        let mut rbe = SimBackend::new(model).unwrap();
+        let mut pbe = SimBackend::with_kernel(model, KernelChoice::Packed).unwrap();
+        for bits in bits_configs(&graph) {
+            let (x, _) = data.batch(Split::Eval, 5, 32);
+            let lr = rbe.infer_step(&ck, &x, &bits).unwrap();
+            let lp = pbe.infer_step(&ck, &x, &bits).unwrap();
+            assert_eq!(lp.shape, lr.shape);
+            let (rs, ps) = (lr.f32s(), lp.f32s());
+            let classes = lr.shape[1];
+            for (i, (p, r)) in ps.iter().zip(rs).enumerate() {
+                assert!(
+                    (p - r).abs() <= PACKED_LOGIT_EPS,
+                    "{model} bits={bits:?} logit {i}: packed {p} vs reference {r}"
+                );
+            }
+            for b in 0..lr.shape[0] {
+                let arg = |xs: &[f32]| {
+                    xs[b * classes..(b + 1) * classes]
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
+                        .unwrap()
+                        .0
+                };
+                assert_eq!(arg(ps), arg(rs), "{model} bits={bits:?} sample {b}: argmax flip");
+            }
+        }
+    }
+}
+
+/// Frontier selections must be identical with either kernel: EAGL never
+/// evaluates, and ALPS's probe evaluations run the bit-identical packed
+/// eval path, so gains — and therefore every knapsack selection at every
+/// swept budget — agree exactly.
+#[test]
+fn selections_are_identical_with_either_kernel() {
+    let scratch = std::env::temp_dir().join(format!("mpq_packed_sel_{}", std::process::id()));
+    let co_for = |model: &str, kernel: KernelChoice, tag: &str| -> Coordinator<SimBackend> {
+        let dir: PathBuf = scratch.join(format!("{model}_{tag}"));
+        let mut co = Coordinator::with_backend(
+            SimBackend::with_kernel(model, kernel).unwrap(),
+            7,
+            dir,
+        )
+        .unwrap();
+        co.base_steps = 40;
+        co.workers = 1;
+        co
+    };
+    for model in ["sim_tiny", "sim_skew"] {
+        let mut ref_co = co_for(model, KernelChoice::Reference, "reference");
+        let mut pk_co = co_for(model, KernelChoice::Packed, "packed");
+        for method in [MethodKind::Eagl, MethodKind::Alps] {
+            for budget in [0.6, 0.8, 0.95] {
+                let a = ref_co.select(method, budget).unwrap();
+                let b = pk_co.select(method, budget).unwrap();
+                assert_eq!(
+                    a, b,
+                    "{model} {} @ {budget}: selection must not depend on the kernel",
+                    method.name()
+                );
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&scratch);
+}
+
+fn run_requests(
+    model: &'static str,
+    kernel: KernelChoice,
+    workers: usize,
+    max_batch: usize,
+    ck: &Checkpoint,
+    bits: &[f32],
+    requests: &[(Tensor, Tensor)],
+) -> Vec<Response> {
+    let eng = Engine::start(
+        spawner(model, kernel),
+        ck.clone(),
+        bits.to_vec(),
+        ServeConfig {
+            workers,
+            max_batch,
+            batch_timeout: Duration::from_millis(1),
+            force_per_request: false,
+            warmup: true,
+        },
+    )
+    .unwrap();
+    assert!(eng.fused());
+    let tickets: Vec<_> = requests
+        .iter()
+        .map(|(x, y)| eng.submit(x.clone(), y.clone()).unwrap())
+        .collect();
+    let responses: Vec<Response> = tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+    let snap = eng.drain().unwrap();
+    assert_eq!(snap.completed, requests.len() as u64);
+    assert_eq!(snap.failed, 0);
+    responses
+}
+
+#[test]
+fn serve_packed_responses_epsilon_equal_to_reference() {
+    const MODEL: &str = "sim_tiny";
+    let (ck, graph, data) = setup(MODEL);
+    let mut bits = BitsConfig::uniform(&graph, 4);
+    for l in &graph.layers {
+        if l.fixed_bits.is_none() {
+            bits.bits[l.qindex] = 2;
+            break;
+        }
+    }
+    let bits = bits.to_f32();
+    // Sizes straddle sub-batch, exact-batch, and oversized (split) requests.
+    let sizes = [1usize, 3, 8, 20, 2, 5];
+    let requests: Vec<(Tensor, Tensor)> = sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| data.batch(Split::Eval, 300 + i as u64, s))
+        .collect();
+    for &workers in &[1usize, 4] {
+        for &max_batch in &[1usize, 8] {
+            let rref =
+                run_requests(MODEL, KernelChoice::Reference, workers, max_batch, &ck, &bits, &requests);
+            let rpk =
+                run_requests(MODEL, KernelChoice::Packed, workers, max_batch, &ck, &bits, &requests);
+            for ((p, r), (x, _)) in rpk.iter().zip(&rref).zip(&requests) {
+                assert_eq!(p.samples, x.shape[0]);
+                assert!(
+                    (p.loss - r.loss).abs() <= PACKED_LOGIT_EPS,
+                    "w={workers} mb={max_batch}: packed loss {} vs reference {}",
+                    p.loss,
+                    r.loss
+                );
+                assert_eq!(
+                    p.evalout, r.evalout,
+                    "w={workers} mb={max_batch}: correct counts must match"
+                );
+            }
+        }
+    }
+}
+
+/// In per-request mode the engine executes `eval_step`, and packed eval
+/// is bit-identical — so even the kernel switch disappears from served
+/// results there.
+#[test]
+fn packed_per_request_serving_is_bit_identical_to_reference_eval() {
+    const MODEL: &str = "sim_tiny";
+    let (ck, graph, data) = setup(MODEL);
+    let bits = BitsConfig::uniform(&graph, 4).to_f32();
+    let eng = Engine::start(
+        spawner(MODEL, KernelChoice::Packed),
+        ck.clone(),
+        bits.clone(),
+        ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(1),
+            force_per_request: true,
+            warmup: true,
+        },
+    )
+    .unwrap();
+    assert!(!eng.fused());
+    let reqs: Vec<(Tensor, Tensor)> = (0..4)
+        .map(|i| data.batch(Split::Eval, 400 + i, 3))
+        .collect();
+    let tickets: Vec<_> = reqs
+        .iter()
+        .map(|(x, y)| eng.submit(x.clone(), y.clone()).unwrap())
+        .collect();
+    let mut rbe = SimBackend::new(MODEL).unwrap();
+    for (t, (x, y)) in tickets.into_iter().zip(&reqs) {
+        let resp = t.wait().unwrap();
+        let (loss, evalout) = rbe.eval_step(&ck, x, y, &bits).unwrap();
+        assert_eq!(resp.loss.to_bits(), loss.to_bits());
+        assert_eq!(resp.evalout, evalout);
+    }
+    eng.drain().unwrap();
+}
