@@ -7,15 +7,15 @@
 # crate, see rust/Cargo.toml) and skip themselves at runtime when
 # artifacts are absent.
 
-.PHONY: verify test build bench bench-quick packed-smoke exp-smoke serve-smoke verify-pjrt artifacts clean
+.PHONY: verify test build bench bench-quick packed-smoke exp-smoke serve-smoke http-smoke verify-pjrt artifacts clean
 
 # Tier-1: must pass in a clean checkout.  bench-quick, packed-smoke,
-# exp-smoke and serve-smoke ride along as smoke steps so the bench binary
-# (and its BENCH_hotpath.json emission), the packed-kernel CLI path, the
-# manifest-driven experiment path, and the serving engine can never
-# silently rot.
+# exp-smoke, serve-smoke and http-smoke ride along as smoke steps so the
+# bench binary (and its BENCH_hotpath.json emission), the packed-kernel
+# CLI path, the manifest-driven experiment path, and the serving engine
+# (in-process and over real loopback sockets) can never silently rot.
 verify:
-	cargo build --release && cargo test -q && $(MAKE) bench-quick && $(MAKE) packed-smoke && $(MAKE) exp-smoke && $(MAKE) serve-smoke
+	cargo build --release && cargo test -q && $(MAKE) bench-quick && $(MAKE) packed-smoke && $(MAKE) exp-smoke && $(MAKE) serve-smoke && $(MAKE) http-smoke
 
 build:
 	cargo build --release
@@ -105,6 +105,29 @@ serve-smoke:
 	echo "serve-smoke OK (packed == reference $$pk)"
 	rm -rf $(SERVE_SMOKE_DIR)
 
+# End-to-end smoke of the HTTP front door: `mpq serve --listen` binds a
+# real loopback socket (port 0 picks a free port), self-drives it with
+# the open-loop loadgen over TCP, scrapes `/metrics` once, and asserts
+# the serving invariants in-binary (every request answered exactly once,
+# admitted == answered, clean drain) — the target gates on the binary's
+# exit status plus its "metrics scrape OK" and "http-serve OK" lines.
+# (Redirect instead of a pipe so the exit status stays load-bearing.)
+HTTP_SMOKE_DIR := $(CURDIR)/.http-smoke-results
+http-smoke:
+	rm -rf $(HTTP_SMOKE_DIR)
+	@mkdir -p $(HTTP_SMOKE_DIR)
+	MPQ_RESULTS=$(HTTP_SMOKE_DIR) cargo run --release -q -p mpq -- serve \
+	  --model sim_tiny --backend sim --base-steps 60 --budget 0.7 --method eagl \
+	  --listen 127.0.0.1:0 --requests 48 --max-request 4 --mode open --rate 400 \
+	  --workers 2 --max-batch 8 --batch-timeout-ms 2 > $(HTTP_SMOKE_DIR)/http.out
+	@cat $(HTTP_SMOKE_DIR)/http.out
+	@grep -q 'metrics scrape OK' $(HTTP_SMOKE_DIR)/http.out || { \
+	  echo "http-smoke: missing /metrics scrape"; exit 1; }
+	@grep -q 'http-serve OK' $(HTTP_SMOKE_DIR)/http.out || { \
+	  echo "http-smoke: missing http-serve OK line"; exit 1; }
+	@echo "http-smoke OK (socket loadgen + /metrics scrape)"
+	rm -rf $(HTTP_SMOKE_DIR)
+
 # Full verification including the PJRT/AOT path (requires the vendored
 # `xla` dependency to be uncommented in rust/Cargo.toml and, for the
 # tests to run rather than skip, `make artifacts`).
@@ -118,4 +141,4 @@ artifacts:
 
 clean:
 	cargo clean
-	rm -rf results $(EXP_SMOKE_DIR) $(SERVE_SMOKE_DIR) $(PACKED_SMOKE_DIR)
+	rm -rf results $(EXP_SMOKE_DIR) $(SERVE_SMOKE_DIR) $(PACKED_SMOKE_DIR) $(HTTP_SMOKE_DIR)

@@ -293,6 +293,86 @@ fn main() -> mpq::Result<()> {
         }
     }
 
+    // -- serving over real loopback sockets ----------------------------------
+    // The same engine behind the HTTP/1.1 front door (mpq serve --listen),
+    // driven by the socket loadgen: these rows isolate the network +
+    // parse + JSON-transport overhead against the matching in-process
+    // `serve sim_skew w=.. mb=32` rows above.
+    {
+        use mpq::serve::{
+            loadgen, Engine, HttpConfig, HttpServer, LoadMode, LoadSpec, ServeConfig, Spawner,
+        };
+        let be = mpq::backend::SimBackend::new("sim_skew")?;
+        let ck = be.init_checkpoint()?;
+        let graph = mpq::graph::Graph::from_manifest(&be.manifest().raw)?;
+        let bits = BitsConfig::uniform(&graph, 4).to_f32();
+        let data = Dataset::for_task(mpq::backend::Task::Cls, 7);
+        let requests = if quick { 64 } else { 256 };
+        for &(kernel, tag, workers) in &[
+            (KernelChoice::Reference, "", 1usize),
+            (KernelChoice::Packed, "kernel=packed ", 4),
+        ] {
+            let spawner: Spawner = std::sync::Arc::new(move || {
+                Ok(Box::new(mpq::backend::SimBackend::with_kernel("sim_skew", kernel)?)
+                    as Box<dyn Backend>)
+            });
+            let cfg = ServeConfig {
+                workers,
+                max_batch: 32,
+                batch_timeout: std::time::Duration::from_millis(1),
+                force_per_request: false,
+                warmup: true,
+            };
+            let engine = Engine::start(spawner, ck.clone(), bits.clone(), cfg)?;
+            let server = HttpServer::start(engine, data.clone(), HttpConfig::default())?;
+            let addr = server.local_addr().to_string();
+            let spec = LoadSpec {
+                requests,
+                max_request_samples: 2,
+                seed: 42,
+                mode: LoadMode::Closed { concurrency: 8 },
+            };
+            let load = loadgen::run_http(&addr, &spec)?;
+            let (snap, hstats) = server.shutdown()?;
+            mpq::ensure!(
+                hstats.admitted == hstats.answered && snap.failed == 0,
+                "http bench: admitted {} != answered {} ({} engine failures)",
+                hstats.admitted,
+                hstats.answered,
+                snap.failed
+            );
+            let m = Measurement {
+                name: format!("serve sim_skew http {tag}w={workers} mb=32 req lat"),
+                iters: snap.completed as usize,
+                mean_s: snap.mean_latency_s,
+                std_s: 0.0,
+                p50_s: snap.p50_s,
+                p95_s: snap.p95_s,
+                p99_s: snap.p99_s,
+                min_s: snap.min_latency_s,
+            };
+            note(&mut sink, &baseline, m);
+            let per_req = load.wall_s / requests as f64;
+            let m = Measurement {
+                name: format!("serve sim_skew http {tag}w={workers} mb=32 wall/req"),
+                iters: requests,
+                mean_s: per_req,
+                std_s: 0.0,
+                p50_s: per_req,
+                p95_s: per_req,
+                p99_s: per_req,
+                min_s: per_req,
+            };
+            note(&mut sink, &baseline, m);
+            println!(
+                "{:<44} {:>10.1} req/s  {:>8.1} samples/s",
+                format!("  -> serve http {tag}w={workers} mb=32 throughput"),
+                load.throughput_rps,
+                load.samples_per_s
+            );
+        }
+    }
+
     sink.write(&out_path)?;
     println!(
         "\nwrote {} ({} measurements)",

@@ -12,6 +12,7 @@
 //!                --budgets 0.95,0.9,...  --seeds 3
 //! mpq report     --model sim_skew | --models a,b | --manifest m.json
 //! mpq serve      --model sim_skew --budget 0.7 [--workers N --max-batch B]
+//!                [--listen ADDR | --target http://HOST:PORT]
 //! mpq infer      --model sim_skew [--samples N --index I]
 //! mpq eagl       --model sim_skew [--ckpt path]   # offline metric (Fig. 2)
 //! ```
@@ -168,6 +169,11 @@ fn validate_flags(args: &Args) -> mpq::Result<()> {
             "rate",
             "loadgen-seed",
             "per-request",
+            "listen",
+            "target",
+            "queue-cap",
+            "max-inflight",
+            "keepalive-max",
         ],
         "infer" => &["method", "budget", "bits-from", "seed", "samples", "index"],
         // Manifest-driven: tuning knobs belong in the manifest, so only
@@ -230,6 +236,17 @@ subcommands:
               composition); vs direct single-request eval: bit-identical with
               --kernel reference or --per-request, epsilon-equal with the
               packed default (identical accuracy)
+              --listen ADDR   put the HTTP/1.1 front door on ADDR (port 0
+                              picks a free port) and self-drive it over real
+                              loopback sockets; [--queue-cap N] admission
+                              bound (queue-full is fail-fast 503),
+                              [--max-inflight N] per-connection pipelining
+                              bound, [--keepalive-max N] requests served per
+                              connection; endpoints: POST /infer,
+                              GET /metrics, GET /healthz
+              --target http://HOST:PORT   pure socket client: drive a remote
+                              front door with the same deterministic request
+                              stream (default --mode open)
   infer       --model M [--budget F | --bits-from ...] [--samples N] [--index I]
               one-shot inference (a direct eval_step; bit-identical across
               kernels)
@@ -538,6 +555,11 @@ fn serve_checkpoint(
 /// `mpq serve`: start the batched inference engine for the resolved
 /// (checkpoint, bits) pair and drive it with the deterministic loadgen.
 fn cmd_serve(args: &Args) -> mpq::Result<()> {
+    // Pure socket-client mode: no engine, no model — just the
+    // deterministic loadgen aimed at a remote `mpq serve --listen`.
+    if let Some(target) = args.opt_str("target") {
+        return cmd_serve_target(args, target);
+    }
     // Serving defaults to the packed inference kernels on sim: bit-packed
     // weight codes, materialized once and shared across the worker pool.
     // The worker spawner reuses the exact (kind, kernel) the coordinator
@@ -592,6 +614,12 @@ fn cmd_serve(args: &Args) -> mpq::Result<()> {
         seed: args.u64("loadgen-seed", 42)?,
         mode,
     };
+    // Socket front-door mode: put the HTTP/1.1 server in front of the
+    // engine and self-drive it with the same loadgen over real loopback
+    // sockets (this is what `make http-smoke` runs).
+    if let Some(listen) = args.opt_str("listen") {
+        return cmd_serve_listen(args, engine, co.data.clone(), &spec, listen);
+    }
     // run() verifies the serving invariants: every request answered
     // exactly once, response ids monotone and contiguous.
     let load = serve::loadgen::run(&engine, &co.data, &spec)?;
@@ -609,6 +637,110 @@ fn cmd_serve(args: &Args) -> mpq::Result<()> {
     );
     println!(
         "serve OK: {} response(s), ids monotone, clean drain",
+        load.responses.len()
+    );
+    Ok(())
+}
+
+/// `mpq serve --listen`: HTTP/1.1 front door over the engine, self-driven
+/// by the same deterministic loadgen over real loopback sockets, with one
+/// verified `/metrics` scrape.  `make http-smoke` gates on the final
+/// "http-serve OK" line.
+fn cmd_serve_listen(
+    args: &Args,
+    engine: serve::Engine,
+    data: mpq::data::Dataset,
+    spec: &serve::LoadSpec,
+    listen: &str,
+) -> mpq::Result<()> {
+    let hcfg = serve::HttpConfig {
+        addr: listen.trim_start_matches("http://").to_string(),
+        queue_capacity: args.usize("queue-cap", 1024)?,
+        max_inflight_per_conn: args.usize("max-inflight", 8)?,
+        max_requests_per_conn: args.usize("keepalive-max", 4096)?,
+        ..serve::HttpConfig::default()
+    };
+    let server = serve::HttpServer::start(engine, data, hcfg)?;
+    let addr = server.local_addr().to_string();
+    println!("listening on http://{addr} (POST /infer, GET /metrics, GET /healthz)");
+    let load = serve::loadgen::run_http(&addr, spec)?;
+    // One real scrape: /metrics must parse and account for the traffic.
+    let scrape = serve::http::client::HttpClient::connect(&addr)?.get("/metrics")?;
+    mpq::ensure!(scrape.status == 200, "GET /metrics: HTTP {}", scrape.status);
+    let text = scrape.body_str();
+    let line = format!("mpq_engine_requests_completed_total {}", spec.requests);
+    mpq::ensure!(
+        text.lines().any(|l| l == line),
+        "metrics scrape did not account for all {} request(s)",
+        spec.requests
+    );
+    println!("metrics scrape OK: {} line(s)", text.lines().count());
+    let (snap, hstats) = server.shutdown()?;
+    print!("{}", report::serve_table(&snap, &load));
+    println!(
+        "http: {} conn(s), admitted {}, answered {}, rejected {}, bad {}, scrapes {}",
+        hstats.connections,
+        hstats.admitted,
+        hstats.answered,
+        hstats.rejected,
+        hstats.bad_requests,
+        hstats.metrics_scrapes
+    );
+    mpq::ensure!(
+        snap.completed == spec.requests as u64 && snap.failed == 0,
+        "serve: engine completed {}/{} request(s) with {} failure(s)",
+        snap.completed,
+        spec.requests,
+        snap.failed
+    );
+    mpq::ensure!(
+        hstats.admitted == hstats.answered && hstats.failed == 0 && hstats.aborted == 0,
+        "http: admitted {} != answered {} (failed {}, aborted {})",
+        hstats.admitted,
+        hstats.answered,
+        hstats.failed,
+        hstats.aborted
+    );
+    println!(
+        "http-serve OK: {} response(s) over http://{addr}, ids monotone, clean drain",
+        load.responses.len()
+    );
+    Ok(())
+}
+
+/// `mpq serve --target http://HOST:PORT`: pure socket client — drive a
+/// remote front door with the deterministic request stream and report the
+/// client-side view (per-request latencies are the server-reported
+/// values, so the histogram matches the server's own `/metrics`).
+fn cmd_serve_target(args: &Args, target: &str) -> mpq::Result<()> {
+    let addr = target.trim_start_matches("http://").trim_end_matches('/');
+    // Open-loop is the default against a remote target: fixed-rate
+    // arrivals are the saturation benchmark the socket path exists for.
+    let mode = match args.str("mode", "open").as_str() {
+        "closed" => serve::LoadMode::Closed {
+            concurrency: args.usize("concurrency", 8)?,
+        },
+        "open" => serve::LoadMode::Open {
+            rate_hz: args.f64("rate", 200.0)?,
+        },
+        other => mpq::bail!("--mode expects closed|open, got '{other}'"),
+    };
+    let spec = serve::LoadSpec {
+        requests: args.usize("requests", 256)?,
+        max_request_samples: args.usize("max-request", 4)?,
+        seed: args.u64("loadgen-seed", 42)?,
+        mode,
+    };
+    println!("loadgen -> http://{addr}: {} request(s)", spec.requests);
+    let load = serve::loadgen::run_http(addr, &spec)?;
+    let m = serve::Metrics::new();
+    for r in &load.responses {
+        m.record_submitted();
+        m.record_request(r.samples as u64, Duration::from_secs_f64(r.latency_s));
+    }
+    print!("{}", report::serve_table(&m.snapshot(), &load));
+    println!(
+        "http loadgen OK: {} response(s), ids monotone",
         load.responses.len()
     );
     Ok(())

@@ -297,6 +297,12 @@ impl BatchQueue {
         }
     }
 
+    /// Samples currently queued and not yet claimed by a worker (the
+    /// `/metrics` queue-depth gauge).
+    pub(crate) fn queued_samples(&self) -> usize {
+        self.queued_samples
+    }
+
     /// Next request id (strictly increasing; allocated under the queue
     /// lock so submission order defines the id order).
     pub fn alloc_id(&mut self) -> u64 {

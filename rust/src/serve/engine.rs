@@ -248,6 +248,12 @@ impl Engine {
         self.shared.metrics.snapshot()
     }
 
+    /// Samples queued and not yet claimed by a worker — the queue-depth
+    /// gauge exposed on `/metrics`.
+    pub fn queued_samples(&self) -> usize {
+        self.shared.q.lock().unwrap().queued_samples()
+    }
+
     /// Graceful shutdown: reject new submissions, flush every queued
     /// batch (ignoring the batch timeout), join the workers, and verify
     /// nothing was left unresolved.

@@ -1,0 +1,169 @@
+//! Minimal blocking HTTP/1.1 client over std `TcpStream`.
+//!
+//! Exactly the subset the socket loadgen, the smoke target, and the test
+//! suite need: keep-alive request/response over one connection, with
+//! `send`/`recv` split so tests and the open-loop loadgen can pipeline a
+//! bounded number of requests.  Responses must carry `Content-Length`
+//! (our server always does); chunked responses are out of scope.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use super::parser::find_header_end;
+
+/// One parsed response.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    /// Header (name, value) pairs; names lowercased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+/// A keep-alive client connection.
+pub struct HttpClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl HttpClient {
+    /// Connect to `addr` (`host:port`).
+    pub fn connect(addr: &str) -> crate::Result<HttpClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| crate::err!("http client: connect {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        Ok(HttpClient { stream, buf: Vec::new() })
+    }
+
+    /// Write one request without waiting for the response (pipelining
+    /// building block; pair each `send` with one later [`recv`]).
+    pub fn send(&mut self, method: &str, path: &str, body: Option<&[u8]>) -> crate::Result<()> {
+        let mut req = format!("{method} {path} HTTP/1.1\r\nhost: mpq\r\n");
+        if let Some(b) = body {
+            req += &format!(
+                "content-type: application/json\r\ncontent-length: {}\r\n",
+                b.len()
+            );
+        }
+        req += "\r\n";
+        let mut bytes = req.into_bytes();
+        if let Some(b) = body {
+            bytes.extend_from_slice(b);
+        }
+        self.stream
+            .write_all(&bytes)
+            .map_err(|e| crate::err!("http client: write: {e}"))
+    }
+
+    /// Raw bytes straight onto the socket (robustness tests drive the
+    /// server with hand-crafted malformed requests through this).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> crate::Result<()> {
+        self.stream
+            .write_all(bytes)
+            .map_err(|e| crate::err!("http client: write: {e}"))
+    }
+
+    /// Stop sending (half-close).  The server sees EOF after any buffered
+    /// bytes — how truncated-body handling is exercised end to end.
+    pub fn shutdown_write(&mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Write);
+    }
+
+    /// Block until one full response is read off the connection.  Errors
+    /// on EOF — which is how tests observe "server closed the connection".
+    pub fn recv(&mut self) -> crate::Result<HttpResponse> {
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            if let Some(resp) = self.try_parse()? {
+                return Ok(resp);
+            }
+            let n = self
+                .stream
+                .read(&mut chunk)
+                .map_err(|e| crate::err!("http client: read: {e}"))?;
+            if n == 0 {
+                crate::bail!("http client: connection closed by server");
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+    }
+
+    /// One complete request/response exchange.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&[u8]>,
+    ) -> crate::Result<HttpResponse> {
+        self.send(method, path, body)?;
+        self.recv()
+    }
+
+    pub fn get(&mut self, path: &str) -> crate::Result<HttpResponse> {
+        self.request("GET", path, None)
+    }
+
+    pub fn post(&mut self, path: &str, body: &[u8]) -> crate::Result<HttpResponse> {
+        self.request("POST", path, Some(body))
+    }
+
+    fn try_parse(&mut self) -> crate::Result<Option<HttpResponse>> {
+        let Some(head_end) = find_header_end(&self.buf) else {
+            return Ok(None);
+        };
+        let head = std::str::from_utf8(&self.buf[..head_end])
+            .map_err(|_| crate::err!("http client: response head is not UTF-8"))?;
+        let mut lines = head.split('\n').map(|l| l.strip_suffix('\r').unwrap_or(l));
+        let status_line = lines.next().unwrap_or("");
+        let mut parts = status_line.split_whitespace();
+        let proto = parts.next().unwrap_or("");
+        crate::ensure!(
+            proto.starts_with("HTTP/1."),
+            "http client: bad status line '{status_line}'"
+        );
+        let status: u16 = parts
+            .next()
+            .unwrap_or("")
+            .parse()
+            .map_err(|_| crate::err!("http client: bad status in '{status_line}'"))?;
+        let mut headers: Vec<(String, String)> = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let Some(colon) = line.find(':') else {
+                crate::bail!("http client: malformed response header '{line}'");
+            };
+            headers.push((
+                line[..colon].trim().to_ascii_lowercase(),
+                line[colon + 1..].trim().to_string(),
+            ));
+        }
+        let body_len: usize = match headers.iter().find(|(n, _)| n == "content-length") {
+            Some((_, v)) => v
+                .parse()
+                .map_err(|_| crate::err!("http client: bad Content-Length '{v}'"))?,
+            None => 0,
+        };
+        let total = head_end + body_len;
+        if self.buf.len() < total {
+            return Ok(None);
+        }
+        let body = self.buf[head_end..total].to_vec();
+        self.buf.drain(..total);
+        Ok(Some(HttpResponse { status, headers, body }))
+    }
+}

@@ -1,0 +1,419 @@
+//! Lazy JSON field scanner for the `/infer` request body.
+//!
+//! The hot ingest path needs two integers out of a tiny JSON object; a
+//! full tree parse ([`crate::jsonio::parse`]) allocates a `BTreeMap` plus
+//! a `String` per key for values we immediately discard.  Following the
+//! mik-sdk ADR-002 idiom (SNIPPETS.md Snippet 3), this module scans the
+//! raw bytes for the requested *top-level* field and parses only its
+//! value, skipping everything else token by token — nested objects,
+//! arrays, and escaped strings are stepped over without materializing
+//! anything.
+//!
+//! Agreement contract: for any body the full parser accepts, a scan
+//! returns exactly the value `jsonio::parse(body).get(field)` holds —
+//! same unescaping (including `\uXXXX`), same number grammar (the token
+//! is handed to the identical `f64` parse).  The property test below
+//! generates bodies with escapes, nested objects, and field-order
+//! permutations and checks the two against each other.
+//!
+//! Laziness caveat (by design): the scan stops as soon as the requested
+//! field's value is parsed, so garbage *after* that point in the body
+//! goes undetected.  The server treats scan errors as a 400; documents
+//! that are broken only beyond the needed fields are accepted — the
+//! fields themselves are still exactly what the full parser would have
+//! produced.  A nested occurrence of the field name never matches: only
+//! top-level keys are compared.
+
+/// Scan `body` for top-level `field` and parse its value as a number.
+/// `Ok(None)` = well-formed prefix but no such field.
+pub fn scan_f64(body: &[u8], field: &str) -> crate::Result<Option<f64>> {
+    match scan_field(body, field)? {
+        None => Ok(None),
+        Some(mut s) => s.number().map(Some),
+    }
+}
+
+/// [`scan_f64`] restricted to non-negative integers that fit exactly in
+/// an f64 (so the value round-trips identically through the full parser's
+/// f64 representation).
+pub fn scan_u64(body: &[u8], field: &str) -> crate::Result<Option<u64>> {
+    let Some(v) = scan_f64(body, field)? else {
+        return Ok(None);
+    };
+    crate::ensure!(
+        v >= 0.0 && v.fract() == 0.0 && v <= 9e15,
+        "field '{field}' must be a non-negative integer, got {v}"
+    );
+    Ok(Some(v as u64))
+}
+
+/// Scan `body` for top-level `field` and parse its value as a string
+/// (full unescaping, identical to the tree parser's).
+pub fn scan_str(body: &[u8], field: &str) -> crate::Result<Option<String>> {
+    match scan_field(body, field)? {
+        None => Ok(None),
+        Some(mut s) => s.string().map(Some),
+    }
+}
+
+/// Walk the top-level object until `field` is found; the returned scanner
+/// is positioned at the start of its value.
+fn scan_field<'a>(body: &'a [u8], field: &str) -> crate::Result<Option<Scan<'a>>> {
+    let mut s = Scan { b: body, i: 0 };
+    s.ws();
+    s.expect(b'{')?;
+    s.ws();
+    if s.peek() == Some(b'}') {
+        return Ok(None);
+    }
+    loop {
+        s.ws();
+        let key = s.string()?;
+        s.ws();
+        s.expect(b':')?;
+        s.ws();
+        if key == field {
+            return Ok(Some(s));
+        }
+        s.skip_value()?;
+        s.ws();
+        match s.bump()? {
+            b',' => continue,
+            b'}' => return Ok(None),
+            c => crate::bail!("lazyjson: expected ',' or '}}', got '{}'", c as char),
+        }
+    }
+}
+
+struct Scan<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Scan<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn bump(&mut self) -> crate::Result<u8> {
+        let c = self
+            .peek()
+            .ok_or_else(|| crate::err!("lazyjson: unexpected end of body"))?;
+        self.i += 1;
+        Ok(c)
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, want: u8) -> crate::Result<()> {
+        let got = self.bump()?;
+        crate::ensure!(
+            got == want,
+            "lazyjson: expected '{}', got '{}'",
+            want as char,
+            got as char
+        );
+        Ok(())
+    }
+
+    /// Parse a string token with the exact unescaping semantics of
+    /// [`crate::jsonio`]'s parser (incl. BMP `\u` escapes; invalid code
+    /// points become U+FFFD, matching it).
+    fn string(&mut self) -> crate::Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump()? {
+                b'"' => return Ok(out),
+                b'\\' => match self.bump()? {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'b' => out.push('\u{0008}'),
+                    b'f' => out.push('\u{000C}'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let c = self.bump()? as char;
+                            code = code * 16
+                                + c.to_digit(16)
+                                    .ok_or_else(|| crate::err!("lazyjson: bad \\u escape"))?;
+                        }
+                        out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                    }
+                    c => crate::bail!("lazyjson: bad escape '\\{}'", c as char),
+                },
+                c if c < 0x80 => out.push(c as char),
+                c => {
+                    let len = if c >= 0xF0 {
+                        4
+                    } else if c >= 0xE0 {
+                        3
+                    } else {
+                        2
+                    };
+                    let start = self.i - 1;
+                    crate::ensure!(
+                        start + len <= self.b.len(),
+                        "lazyjson: truncated UTF-8 sequence"
+                    );
+                    self.i = start + len;
+                    let chunk = std::str::from_utf8(&self.b[start..start + len])
+                        .map_err(|_| crate::err!("lazyjson: invalid UTF-8 in string"))?;
+                    out.push_str(chunk);
+                }
+            }
+        }
+    }
+
+    /// Parse a number token with the identical grammar + `f64` parse the
+    /// tree parser uses, so the two can never disagree on a value.
+    fn number(&mut self) -> crate::Result<f64> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| crate::err!("lazyjson: bad number token"))?;
+        text.parse::<f64>()
+            .map_err(|e| crate::err!("lazyjson: bad number '{text}': {e}"))
+    }
+
+    /// Step over one value of any type without materializing it.
+    fn skip_value(&mut self) -> crate::Result<()> {
+        self.ws();
+        match self.peek() {
+            Some(b'"') => {
+                self.skip_string()?;
+            }
+            Some(b'{') | Some(b'[') => {
+                // Depth-walk: strings inside may contain brackets, so they
+                // are skipped with full escape awareness.
+                let mut depth = 0usize;
+                loop {
+                    match self.peek() {
+                        Some(b'"') => {
+                            self.skip_string()?;
+                        }
+                        Some(b'{') | Some(b'[') => {
+                            depth += 1;
+                            self.i += 1;
+                        }
+                        Some(b'}') | Some(b']') => {
+                            depth -= 1;
+                            self.i += 1;
+                            if depth == 0 {
+                                return Ok(());
+                            }
+                        }
+                        Some(_) => self.i += 1,
+                        None => crate::bail!("lazyjson: unterminated container"),
+                    }
+                }
+            }
+            Some(b't') => self.lit("true")?,
+            Some(b'f') => self.lit("false")?,
+            Some(b'n') => self.lit("null")?,
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                self.number()?;
+            }
+            other => crate::bail!("lazyjson: unexpected {other:?} where a value was expected"),
+        }
+        Ok(())
+    }
+
+    fn lit(&mut self, word: &str) -> crate::Result<()> {
+        crate::ensure!(
+            self.b[self.i..].starts_with(word.as_bytes()),
+            "lazyjson: bad literal at byte {}",
+            self.i
+        );
+        self.i += word.len();
+        Ok(())
+    }
+
+    /// Skip a string token (escape-aware, no allocation).
+    fn skip_string(&mut self) -> crate::Result<()> {
+        self.expect(b'"')?;
+        loop {
+            match self.bump()? {
+                b'"' => return Ok(()),
+                b'\\' => {
+                    self.bump()?;
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonio::{self, Json};
+    use crate::prop;
+    use crate::rng::Pcg32;
+
+    #[test]
+    fn finds_fields_regardless_of_position_and_whitespace() {
+        let body = b" { \"samples\" : 3 ,\n\t\"index\": 42 } ";
+        assert_eq!(scan_u64(body, "index").unwrap(), Some(42));
+        assert_eq!(scan_u64(body, "samples").unwrap(), Some(3));
+        assert_eq!(scan_u64(body, "missing").unwrap(), None);
+        assert_eq!(scan_u64(b"{}", "index").unwrap(), None);
+    }
+
+    #[test]
+    fn nested_occurrences_of_the_field_name_do_not_match() {
+        let body = br#"{"meta":{"index":999,"deep":{"samples":[1,2]}},"index":7,"samples":2}"#;
+        assert_eq!(scan_u64(body, "index").unwrap(), Some(7));
+        assert_eq!(scan_u64(body, "samples").unwrap(), Some(2));
+    }
+
+    #[test]
+    fn skips_strings_containing_braces_and_escapes() {
+        let body = br#"{"note":"a \"}{\" [ brace soup \\","index":5}"#;
+        assert_eq!(scan_u64(body, "index").unwrap(), Some(5));
+        assert_eq!(
+            scan_str(body, "note").unwrap().unwrap(),
+            "a \"}{\" [ brace soup \\"
+        );
+    }
+
+    #[test]
+    fn unicode_escapes_match_the_tree_parser() {
+        let body = "{\"name\":\"caf\\u00e9 \\n \\u2603\",\"index\":1}";
+        let lazy = scan_str(body.as_bytes(), "name").unwrap().unwrap();
+        let tree = jsonio::parse(body).unwrap();
+        assert_eq!(Some(lazy.as_str()), tree.at(&["name"]).as_str());
+        assert_eq!(lazy, "café \n ☃");
+    }
+
+    #[test]
+    fn rejects_malformed_bodies_and_wrong_types() {
+        assert!(scan_u64(b"", "index").is_err());
+        assert!(scan_u64(b"[1,2]", "index").is_err());
+        assert!(scan_u64(b"{\"index\" 7}", "index").is_err());
+        assert!(scan_u64(b"{\"index\":", "index").is_err());
+        assert!(scan_u64(br#"{"index":"seven"}"#, "index").is_err());
+        assert!(scan_u64(br#"{"index":-3}"#, "index").is_err());
+        assert!(scan_u64(br#"{"index":2.5}"#, "index").is_err());
+    }
+
+    // -- property: agreement with the full jsonio parser -------------------
+
+    /// Random JSON value (depth-bounded); keys drawn from a pool that
+    /// exercises escapes and non-ASCII.
+    fn gen_value(rng: &mut Pcg32, depth: usize) -> Json {
+        let roll = rng.below(if depth == 0 { 5 } else { 7 });
+        match roll {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::num(match rng.below(4) {
+                0 => rng.below(1_000_000) as f64,
+                1 => -(rng.below(1000) as f64),
+                2 => rng.uniform() as f64 * 1e3,
+                _ => (rng.below(100) as f64) / 8.0,
+            }),
+            3 | 4 => Json::Str(gen_string(rng)),
+            5 => Json::arr((0..rng.below(4)).map(|_| gen_value(rng, depth - 1))),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|k| (format!("k{k}_{}", rng.below(10)), gen_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    fn gen_string(rng: &mut Pcg32) -> String {
+        const POOL: &[&str] = &["a", "β", "\\", "\"", "\n", "\t", "}", "{", "[", ":", "é", "☃"];
+        (0..rng.below(8))
+            .map(|_| POOL[rng.below(POOL.len() as u32) as usize])
+            .collect()
+    }
+
+    /// Serialize pairs in the given order with random whitespace — the
+    /// tree emitter would sort keys, and the whole point is to check the
+    /// scanner against arbitrary field orderings and layouts.
+    fn emit(rng: &mut Pcg32, pairs: &[(String, Json)]) -> String {
+        const WS: &[&str] = &["", " ", "\n", "\t", "  "];
+        let ws = |rng: &mut Pcg32| WS[rng.below(WS.len() as u32) as usize];
+        let mut out = String::from("{");
+        for (i, (k, v)) in pairs.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out += ws(rng);
+            out += &Json::Str(k.clone()).to_string_compact();
+            out += ws(rng);
+            out.push(':');
+            out += ws(rng);
+            out += &v.to_string_compact();
+            out += ws(rng);
+        }
+        out.push('}');
+        out
+    }
+
+    #[test]
+    fn lazy_scan_agrees_with_the_full_parser_on_generated_bodies() {
+        prop::forall(
+            &prop::Config { cases: 300, seed: 0x1a2b },
+            |rng| {
+                // The fields the server actually scans, plus decoys with
+                // hostile names/values, in shuffled order.
+                let mut pairs: Vec<(String, Json)> = vec![
+                    ("index".into(), Json::num(rng.below(1_000_000) as f64)),
+                    ("samples".into(), Json::num(rng.below(1024) as f64)),
+                    ("tag".into(), Json::Str(gen_string(rng))),
+                ];
+                for d in 0..rng.below(4) {
+                    pairs.push((format!("decoy{d}_{}", gen_string(rng)), gen_value(rng, 2)));
+                }
+                rng.shuffle(&mut pairs);
+                // Duplicate keys would make "which occurrence wins"
+                // implementation-defined in both parsers; keep keys unique.
+                let mut seen = std::collections::BTreeSet::new();
+                pairs.retain(|(k, _)| seen.insert(k.clone()));
+                emit(rng, &pairs)
+            },
+            |body| {
+                let tree = jsonio::parse(body).map_err(|e| format!("emitter produced invalid JSON: {e}"))?;
+                for field in ["index", "samples"] {
+                    let lazy = scan_f64(body.as_bytes(), field)
+                        .map_err(|e| format!("scan_f64({field}): {e}"))?;
+                    let full = tree.at(&[field]).as_f64();
+                    if lazy.map(f64::to_bits) != full.map(f64::to_bits) {
+                        return Err(format!("{field}: lazy {lazy:?} != tree {full:?}"));
+                    }
+                }
+                let lazy = scan_str(body.as_bytes(), "tag")
+                    .map_err(|e| format!("scan_str(tag): {e}"))?;
+                if lazy.as_deref() != tree.at(&["tag"]).as_str() {
+                    return Err(format!(
+                        "tag: lazy {lazy:?} != tree {:?}",
+                        tree.at(&["tag"]).as_str()
+                    ));
+                }
+                if scan_f64(body.as_bytes(), "no_such_field")
+                    .map_err(|e| e.to_string())?
+                    .is_some()
+                {
+                    return Err("absent field reported present".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

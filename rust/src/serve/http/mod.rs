@@ -1,0 +1,827 @@
+//! HTTP/1.1 front door for the serving engine (`mpq serve --listen`).
+//!
+//! Pure std networking — `TcpListener` + the same thread substrate the
+//! engine already uses; zero new dependencies.  One acceptor thread hands
+//! each connection to its own handler thread, which feeds the existing
+//! batching [`Engine`] and writes responses back in request order:
+//!
+//! ```text
+//! TcpListener ── acceptor ──> conn thread: RequestParser (incremental)
+//!                                  │  lazy JSON scan: {"index","samples"}
+//!                                  │  admission gate ──> Engine::submit
+//!                                  └─ FIFO reply queue ──> socket (in order)
+//! ```
+//!
+//! ## Endpoints
+//!
+//! * `POST /infer` — body `{"index": I, "samples": N}`.  The server
+//!   materializes the request's `(x, y)` from its own [`Dataset`] at
+//!   eval-split index `I` with `N` samples — the same deterministic
+//!   tensors the in-process loadgen builds, which is what makes socket
+//!   responses bit-comparable to in-process runs.  `200` body carries the
+//!   response with **exact** f32 transport: `loss_bits`/`evalout_bits`
+//!   are `f32::to_bits` values as JSON numbers (u32 < 2⁵³, so the f64
+//!   JSON number representation is lossless).
+//! * `GET /metrics` — stable text rendering of the engine's lock-free
+//!   latency histogram (p50/p95/p99), throughput, batch occupancy, and
+//!   the front door's admission counters.  Field names and order are
+//!   pinned by a golden test; lines are only ever appended.
+//! * `GET /healthz` — liveness probe, `200 ok`.
+//!
+//! ## Status codes (the full contract)
+//!
+//! | status | meaning                                      | connection |
+//! |--------|----------------------------------------------|------------|
+//! | 200    | success                                      | keep-alive |
+//! | 400    | malformed request line/header/Content-Length | close      |
+//! | 400    | well-framed request, bad JSON body/fields    | keep-alive |
+//! | 404    | unknown path                                 | keep-alive |
+//! | 405    | known path, wrong method                     | keep-alive |
+//! | 413    | body over `max_body_bytes`                   | close      |
+//! | 431    | headers over `max_header_bytes`              | close      |
+//! | 500    | engine failed the request                    | keep-alive |
+//! | 503    | admission queue full / engine unavailable    | keep-alive* |
+//! | 501    | Transfer-Encoding unsupported                | close      |
+//! | 505    | HTTP version not 1.0/1.1                     | close      |
+//!
+//! (*queue-full 503 keeps the connection; engine-unavailable 503 closes.
+//! Every 503 carries `Retry-After`.)  Protocol-level errors close because
+//! the byte stream is no longer trustworthy; application-level errors
+//! keep the connection because the request was correctly framed.
+//!
+//! ## Backpressure and admission control
+//!
+//! Two bounds, both fail-fast rather than buffering unboundedly:
+//!
+//! * **global admission gate** — at most [`HttpConfig::queue_capacity`]
+//!   requests admitted (submitted to the engine, response not yet
+//!   written); beyond it `/infer` answers `503` + `Retry-After`
+//!   immediately.  Once admitted, a request is never dropped: the
+//!   accounting invariant `admitted == answered + failed + aborted`
+//!   (aborted = connection died before its response could be written)
+//!   holds after shutdown and is asserted by the tests.
+//! * **per-connection in-flight bound** — at most
+//!   [`HttpConfig::max_inflight_per_conn`] pipelined requests are parsed
+//!   ahead per connection; further buffered requests wait until responses
+//!   drain.  Keep-alive serves at most
+//!   [`HttpConfig::max_requests_per_conn`] requests, then answers the
+//!   last one with `Connection: close`.
+//!
+//! ## Graceful drain
+//!
+//! [`HttpServer::shutdown`] stops the acceptor (new connects are
+//! refused), lets every connection thread finish writing the responses
+//! for all *admitted* requests (engine workers keep running throughout),
+//! joins the threads, and only then calls the engine's own
+//! [`Engine::drain`] — which flushes anything still queued and asserts
+//! nothing was left unresolved.  Connections idle at drain time close
+//! after one read-timeout tick; partially-received requests were never
+//! admitted and are dropped with the socket.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::data::{Dataset, Split};
+use crate::jsonio::Json;
+use crate::tensor::{DType, Tensor};
+
+use super::batcher::{Response, Ticket};
+use super::engine::Engine;
+use super::metrics::MetricsSnapshot;
+
+pub mod client;
+pub mod lazyjson;
+pub mod parser;
+
+use parser::{reason, HttpError, Request, RequestParser};
+
+/// Front-door knobs (the engine has its own [`super::ServeConfig`]).
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Bind address; port 0 picks a free port (see
+    /// [`HttpServer::local_addr`]).
+    pub addr: String,
+    /// Global admission bound: max requests admitted to the engine with
+    /// their response not yet written.  Beyond it `/infer` is 503.
+    pub queue_capacity: usize,
+    /// Max pipelined requests parsed ahead per connection.
+    pub max_inflight_per_conn: usize,
+    /// Keep-alive budget: requests served per connection before the
+    /// server answers with `Connection: close`.
+    pub max_requests_per_conn: usize,
+    /// Max concurrent connections; beyond it new connects get an
+    /// immediate 503 and are closed.
+    pub max_conns: usize,
+    pub max_header_bytes: usize,
+    pub max_body_bytes: usize,
+    /// Upper bound for the `samples` field of `/infer` (guards huge
+    /// allocations from a single request).
+    pub max_request_samples: usize,
+    /// Socket read poll tick — how quickly idle connections notice a
+    /// drain.
+    pub read_timeout: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> HttpConfig {
+        HttpConfig {
+            addr: "127.0.0.1:0".to_string(),
+            queue_capacity: 1024,
+            max_inflight_per_conn: 8,
+            max_requests_per_conn: 4096,
+            max_conns: 128,
+            max_header_bytes: 8 * 1024,
+            max_body_bytes: 64 * 1024,
+            max_request_samples: 1024,
+            read_timeout: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Point-in-time front-door counters (exact after
+/// [`HttpServer::shutdown`]).
+#[derive(Debug, Clone)]
+pub struct HttpStatsSnapshot {
+    pub connections: u64,
+    /// `/infer` requests submitted to the engine.
+    pub admitted: u64,
+    /// 503s: admission gate full, connection limit, engine unavailable.
+    pub rejected: u64,
+    /// Admitted requests answered 200.
+    pub answered: u64,
+    /// Admitted requests answered 500 (engine failed them).
+    pub failed: u64,
+    /// Admitted requests whose connection died before the response could
+    /// be written (the engine still completed them).
+    pub aborted: u64,
+    /// Non-2xx, non-503 responses: protocol errors, 404/405, bad bodies.
+    pub bad_requests: u64,
+    pub metrics_scrapes: u64,
+    /// Gauge: admitted requests currently awaiting their response.
+    pub inflight: u64,
+}
+
+/// Lock-free front-door counters (relaxed atomics, like the engine's
+/// [`super::metrics::Metrics`]).
+#[derive(Default)]
+struct HttpStats {
+    connections: AtomicU64,
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+    answered: AtomicU64,
+    failed: AtomicU64,
+    aborted: AtomicU64,
+    bad_requests: AtomicU64,
+    metrics_scrapes: AtomicU64,
+}
+
+macro_rules! bump {
+    ($sh:expr, $field:ident) => {
+        $sh.stats.$field.fetch_add(1, Ordering::Relaxed)
+    };
+}
+
+/// State shared by the acceptor and every connection thread.
+struct HttpShared {
+    engine: Arc<Engine>,
+    data: Dataset,
+    cfg: HttpConfig,
+    stats: HttpStats,
+    /// The admission gate: requests admitted, response not yet written.
+    inflight: AtomicUsize,
+    active_conns: AtomicUsize,
+    draining: AtomicBool,
+    started: Instant,
+}
+
+impl HttpShared {
+    /// Try to take one admission permit.
+    fn try_admit(&self) -> bool {
+        let mut cur = self.inflight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.cfg.queue_capacity {
+                return false;
+            }
+            match self.inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    fn release_permit(&self) {
+        self.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    fn stats_snapshot(&self) -> HttpStatsSnapshot {
+        let s = &self.stats;
+        HttpStatsSnapshot {
+            connections: s.connections.load(Ordering::Relaxed),
+            admitted: s.admitted.load(Ordering::Relaxed),
+            rejected: s.rejected.load(Ordering::Relaxed),
+            answered: s.answered.load(Ordering::Relaxed),
+            failed: s.failed.load(Ordering::Relaxed),
+            aborted: s.aborted.load(Ordering::Relaxed),
+            bad_requests: s.bad_requests.load(Ordering::Relaxed),
+            metrics_scrapes: s.metrics_scrapes.load(Ordering::Relaxed),
+            inflight: self.inflight.load(Ordering::Relaxed) as u64,
+        }
+    }
+}
+
+/// A running front door.  Owns the engine for its lifetime;
+/// [`HttpServer::shutdown`] drains and returns the final metrics.
+pub struct HttpServer {
+    shared: Option<Arc<HttpShared>>,
+    local_addr: SocketAddr,
+    acceptor: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl HttpServer {
+    /// Bind `cfg.addr`, take ownership of the (already started) engine,
+    /// and start accepting.  `data` must be the dataset the engine's
+    /// checkpoint was built against — `/infer` materializes request
+    /// tensors from it.
+    pub fn start(engine: Engine, data: Dataset, cfg: HttpConfig) -> crate::Result<HttpServer> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| crate::err!("http: bind {}: {e}", cfg.addr))?;
+        // Non-blocking accept so the acceptor can poll the drain flag.
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| crate::err!("http: set_nonblocking: {e}"))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| crate::err!("http: local_addr: {e}"))?;
+        let shared = Arc::new(HttpShared {
+            engine: Arc::new(engine),
+            data,
+            cfg,
+            stats: HttpStats::default(),
+            inflight: AtomicUsize::new(0),
+            active_conns: AtomicUsize::new(0),
+            draining: AtomicBool::new(false),
+            started: Instant::now(),
+        });
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let acceptor = {
+            let sh = Arc::clone(&shared);
+            let conns = Arc::clone(&conns);
+            std::thread::Builder::new()
+                .name("mpq-http-accept".to_string())
+                .spawn(move || accept_loop(listener, sh, conns))
+                .map_err(|e| crate::err!("http: spawn acceptor: {e}"))?
+        };
+        Ok(HttpServer {
+            shared: Some(shared),
+            local_addr,
+            acceptor: Some(acceptor),
+            conns,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the picked port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn stats(&self) -> HttpStatsSnapshot {
+        self.shared.as_ref().expect("server running").stats_snapshot()
+    }
+
+    pub fn engine_metrics(&self) -> MetricsSnapshot {
+        self.shared.as_ref().expect("server running").engine.metrics()
+    }
+
+    /// Signal drain and join the acceptor + every connection thread.
+    /// Returns the shared state once this server holds the only
+    /// reference.
+    fn stop_threads(&mut self) -> Option<Arc<HttpShared>> {
+        let shared = self.shared.take()?;
+        shared.draining.store(true, Ordering::SeqCst);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        Some(shared)
+    }
+
+    /// Graceful drain: stop accepting, finish every admitted request,
+    /// close the sockets, then flush the engine via [`Engine::drain`].
+    pub fn shutdown(mut self) -> crate::Result<(MetricsSnapshot, HttpStatsSnapshot)> {
+        let shared = self
+            .stop_threads()
+            .ok_or_else(|| crate::err!("http: shutdown called on a stopped server"))?;
+        let stats = shared.stats_snapshot();
+        let shared = Arc::try_unwrap(shared)
+            .map_err(|_| crate::err!("http: internal: shared state still referenced after joins"))?;
+        let engine = Arc::try_unwrap(shared.engine)
+            .map_err(|_| crate::err!("http: internal: engine still referenced after joins"))?;
+        let snap = engine.drain()?;
+        crate::ensure!(
+            stats.admitted == stats.answered + stats.failed + stats.aborted,
+            "http: drain lost accepted work: admitted {} != answered {} + failed {} + aborted {}",
+            stats.admitted,
+            stats.answered,
+            stats.failed,
+            stats.aborted
+        );
+        Ok((snap, stats))
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        // Best-effort cleanup when shutdown() was never called (e.g. a
+        // panicking test): stop the threads; the engine drains via its
+        // own Drop when the last Arc goes.
+        let _ = self.stop_threads();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    sh: Arc<HttpShared>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    loop {
+        if sh.draining.load(Ordering::SeqCst) {
+            return; // drops the listener: new connects are refused
+        }
+        match listener.accept() {
+            Ok((mut stream, _peer)) => {
+                bump!(sh, connections);
+                let _ = stream.set_nonblocking(false);
+                if sh.active_conns.load(Ordering::Relaxed) >= sh.cfg.max_conns {
+                    bump!(sh, rejected);
+                    let body = error_body("connection limit reached");
+                    let _ = write_response(&mut stream, 503, "application/json", &body, true, true);
+                    continue;
+                }
+                sh.active_conns.fetch_add(1, Ordering::Relaxed);
+                let sh2 = Arc::clone(&sh);
+                let spawned = std::thread::Builder::new()
+                    .name("mpq-http-conn".to_string())
+                    .spawn(move || {
+                        handle_conn(&sh2, stream);
+                        sh2.active_conns.fetch_sub(1, Ordering::Relaxed);
+                    });
+                match spawned {
+                    Ok(h) => conns.lock().unwrap().push(h),
+                    Err(_) => {
+                        sh.active_conns.fetch_sub(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+}
+
+/// A response waiting to be written, FIFO per connection so pipelined
+/// requests are answered in order.
+enum Reply {
+    /// An admitted `/infer` request: wait the ticket, then write.
+    Infer { ticket: Ticket, close: bool },
+    /// Anything answerable immediately.
+    Done {
+        status: u16,
+        content_type: &'static str,
+        body: Vec<u8>,
+        retry_after: bool,
+        close: bool,
+    },
+}
+
+fn handle_conn(sh: &Arc<HttpShared>, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(sh.cfg.read_timeout));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let mut parser = RequestParser::new(sh.cfg.max_header_bytes, sh.cfg.max_body_bytes);
+    let mut queue: VecDeque<Reply> = VecDeque::new();
+    let mut served = 0usize;
+    // Set once a close-carrying error reply is queued: the byte stream
+    // past it is untrustworthy, so parsing stops.
+    let mut poisoned = false;
+    let mut rdbuf = vec![0u8; 16 * 1024];
+    loop {
+        // Admit buffered pipelined requests up to the per-conn bound and
+        // the keep-alive budget.
+        while !poisoned
+            && queue.len() < sh.cfg.max_inflight_per_conn
+            && served + queue.len() < sh.cfg.max_requests_per_conn
+        {
+            match parser.poll() {
+                Ok(Some(req)) => queue.push_back(route(sh, &req)),
+                Ok(None) => break,
+                Err(e) => {
+                    bump!(sh, bad_requests);
+                    queue.push_back(protocol_error_reply(&e));
+                    poisoned = true;
+                }
+            }
+        }
+        // Answer the oldest queued request before reading more input:
+        // responses drain in request order, and a full reply queue is the
+        // per-connection backpressure signal.
+        if let Some(reply) = queue.pop_front() {
+            served += 1;
+            let at_budget = served >= sh.cfg.max_requests_per_conn;
+            match write_reply(sh, &mut stream, reply, at_budget) {
+                Ok(false) => continue,
+                Ok(true) => return, // close requested and written
+                Err(_) => {
+                    // Peer gone mid-write.  Admitted requests still in the
+                    // queue must be resolved so the accounting invariant
+                    // (admitted == answered + failed + aborted) survives.
+                    for r in queue.drain(..) {
+                        if let Reply::Infer { ticket, .. } = r {
+                            let _ = ticket.wait();
+                            sh.release_permit();
+                            bump!(sh, aborted);
+                        }
+                    }
+                    return;
+                }
+            }
+        }
+        if poisoned {
+            return; // error reply already written with close
+        }
+        // Reply queue empty and nothing parseable buffered: read more.
+        match stream.read(&mut rdbuf) {
+            Ok(0) => return, // EOF: any partial request was never admitted
+            Ok(n) => parser.push(&rdbuf[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Idle tick.  During a drain that means this connection
+                // has answered everything it admitted — close it.
+                if sh.draining.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// Protocol-level errors answer with their status and close (the stream
+/// is no longer in a parseable state).
+fn protocol_error_reply(e: &HttpError) -> Reply {
+    Reply::Done {
+        status: e.status,
+        content_type: "application/json",
+        body: error_body(&e.msg),
+        retry_after: false,
+        close: true,
+    }
+}
+
+fn route(sh: &Arc<HttpShared>, req: &Request) -> Reply {
+    let ka = req.keep_alive;
+    match (req.method.as_str(), req.target.as_str()) {
+        ("POST", "/infer") => route_infer(sh, req),
+        ("GET", "/metrics") => {
+            bump!(sh, metrics_scrapes);
+            Reply::Done {
+                status: 200,
+                content_type: "text/plain; version=0.0.4",
+                body: render_metrics(sh).into_bytes(),
+                retry_after: false,
+                close: !ka,
+            }
+        }
+        ("GET", "/healthz") => Reply::Done {
+            status: 200,
+            content_type: "text/plain",
+            body: b"ok\n".to_vec(),
+            retry_after: false,
+            close: !ka,
+        },
+        (_, "/infer") | (_, "/metrics") | (_, "/healthz") => {
+            bump!(sh, bad_requests);
+            Reply::Done {
+                status: 405,
+                content_type: "application/json",
+                body: error_body(&format!("method {} not allowed here", req.method)),
+                retry_after: false,
+                close: !ka,
+            }
+        }
+        (_, path) => {
+            bump!(sh, bad_requests);
+            Reply::Done {
+                status: 404,
+                content_type: "application/json",
+                body: error_body(&format!("no such path '{path}'")),
+                retry_after: false,
+                close: !ka,
+            }
+        }
+    }
+}
+
+/// `/infer`: admission gate → lazy body scan → dataset materialization →
+/// engine submit.  Body errors are 400 but keep the connection (the
+/// request was correctly framed); queue-full is an immediate 503.
+fn route_infer(sh: &Arc<HttpShared>, req: &Request) -> Reply {
+    let ka = req.keep_alive;
+    if !sh.try_admit() {
+        bump!(sh, rejected);
+        return Reply::Done {
+            status: 503,
+            content_type: "application/json",
+            body: error_body("admission queue full"),
+            retry_after: true,
+            close: !ka,
+        };
+    }
+    // Permit held from here: every early return must release it.
+    let parsed = (|| -> crate::Result<(u64, usize)> {
+        let index = lazyjson::scan_u64(&req.body, "index")?
+            .ok_or_else(|| crate::err!("missing field 'index'"))?;
+        let samples = lazyjson::scan_u64(&req.body, "samples")?
+            .ok_or_else(|| crate::err!("missing field 'samples'"))? as usize;
+        crate::ensure!(
+            samples >= 1 && samples <= sh.cfg.max_request_samples,
+            "'samples' must be in 1..={}, got {samples}",
+            sh.cfg.max_request_samples
+        );
+        Ok((index, samples))
+    })();
+    let (index, samples) = match parsed {
+        Ok(v) => v,
+        Err(e) => {
+            sh.release_permit();
+            bump!(sh, bad_requests);
+            return Reply::Done {
+                status: 400,
+                content_type: "application/json",
+                body: error_body(&e.to_string()),
+                retry_after: false,
+                close: !ka,
+            };
+        }
+    };
+    let (x, y) = sh.data.batch(Split::Eval, index, samples);
+    match sh.engine.submit(x, y) {
+        Ok(ticket) => {
+            bump!(sh, admitted);
+            Reply::Infer { ticket, close: !ka }
+        }
+        Err(e) => {
+            // The engine only refuses well-formed requests when it is
+            // draining or fatally wedged — service unavailability, not a
+            // client error.
+            sh.release_permit();
+            bump!(sh, rejected);
+            Reply::Done {
+                status: 503,
+                content_type: "application/json",
+                body: error_body(&e.to_string()),
+                retry_after: true,
+                close: true,
+            }
+        }
+    }
+}
+
+/// Write one reply; for `Infer` this blocks on the engine ticket first.
+/// Returns whether the connection is to close.
+fn write_reply(
+    sh: &Arc<HttpShared>,
+    stream: &mut TcpStream,
+    reply: Reply,
+    at_budget: bool,
+) -> std::io::Result<bool> {
+    match reply {
+        Reply::Done {
+            status,
+            content_type,
+            body,
+            retry_after,
+            close,
+        } => {
+            let close = close || at_budget;
+            write_response(stream, status, content_type, &body, retry_after, close)?;
+            Ok(close)
+        }
+        Reply::Infer { ticket, close } => {
+            let close = close || at_budget;
+            let waited = ticket.wait();
+            sh.release_permit();
+            match waited {
+                Ok(resp) => {
+                    bump!(sh, answered);
+                    let body = infer_response_json(&resp).into_bytes();
+                    write_response(stream, 200, "application/json", &body, false, close)?;
+                }
+                Err(e) => {
+                    bump!(sh, failed);
+                    let body = error_body(&e.to_string());
+                    write_response(stream, 500, "application/json", &body, false, close)?;
+                }
+            }
+            Ok(close)
+        }
+    }
+}
+
+/// Serialize one HTTP/1.1 response (always `Content-Length`-framed).
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    retry_after: bool,
+    close: bool,
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nserver: mpq\r\ncontent-type: {content_type}\r\ncontent-length: {}\r\n",
+        reason(status),
+        body.len()
+    );
+    if retry_after {
+        head += "retry-after: 1\r\n";
+    }
+    if close {
+        head += "connection: close\r\n";
+    }
+    head += "\r\n";
+    let mut bytes = head.into_bytes();
+    bytes.extend_from_slice(body);
+    stream.write_all(&bytes)
+}
+
+fn error_body(msg: &str) -> Vec<u8> {
+    Json::obj(vec![("error", Json::str(msg))])
+        .to_string_compact()
+        .into_bytes()
+}
+
+/// The `200 /infer` body.  f32 payloads travel as `to_bits()` u32 values
+/// in JSON numbers — f64 represents every u32 exactly, so the transport
+/// is bit-lossless in both directions.
+pub fn infer_response_json(r: &Response) -> String {
+    let (dtype, bits): (&str, Vec<Json>) = match r.evalout.dtype() {
+        DType::F32 => (
+            "f32",
+            r.evalout
+                .f32s()
+                .iter()
+                .map(|v| Json::num(v.to_bits() as f64))
+                .collect(),
+        ),
+        DType::I32 => (
+            "i32",
+            r.evalout
+                .i32s()
+                .iter()
+                .map(|&v| Json::num(v as u32 as f64))
+                .collect(),
+        ),
+    };
+    Json::obj(vec![
+        ("id", Json::num(r.id as f64)),
+        ("samples", Json::num(r.samples as f64)),
+        ("loss_bits", Json::num(r.loss.to_bits() as f64)),
+        ("evalout_dtype", Json::str(dtype)),
+        (
+            "evalout_shape",
+            Json::arr(r.evalout.shape.iter().map(|&d| Json::num(d as f64))),
+        ),
+        ("evalout_bits", Json::arr(bits)),
+        ("latency_s", Json::num(r.latency_s)),
+    ])
+    .to_string_compact()
+}
+
+/// Inverse of [`infer_response_json`] — the socket loadgen reconstructs
+/// full [`Response`] values so socket runs produce the same `LoadReport`
+/// shape (and bit-identity assertions) as in-process runs.
+pub fn parse_infer_response(body: &[u8]) -> crate::Result<Response> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| crate::err!("infer response is not UTF-8"))?;
+    let v = crate::jsonio::parse(text)?;
+    let num = |k: &str| {
+        v.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| crate::err!("infer response missing numeric field '{k}'"))
+    };
+    let shape = v
+        .get("evalout_shape")
+        .ok_or_else(|| crate::err!("infer response missing 'evalout_shape'"))?
+        .usize_vec();
+    let bits = v
+        .get("evalout_bits")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| crate::err!("infer response missing 'evalout_bits'"))?;
+    let dtype = v.at(&["evalout_dtype"]).as_str().unwrap_or("f32");
+    let evalout = match dtype {
+        "f32" => Tensor::from_f32(
+            &shape,
+            bits.iter()
+                .map(|b| f32::from_bits(b.as_f64().unwrap_or(0.0) as u32))
+                .collect(),
+        ),
+        "i32" => Tensor::from_i32(
+            &shape,
+            bits.iter()
+                .map(|b| b.as_f64().unwrap_or(0.0) as u32 as i32)
+                .collect(),
+        ),
+        other => crate::bail!("infer response has unknown evalout dtype '{other}'"),
+    };
+    Ok(Response {
+        id: num("id")? as u64,
+        samples: num("samples")? as usize,
+        loss: f32::from_bits(num("loss_bits")? as u32),
+        evalout,
+        latency_s: num("latency_s")?,
+    })
+}
+
+/// `GET /metrics` text.  **Stable format**: the golden test in
+/// `rust/tests/http_serve_integration.rs` pins every field name and the
+/// order — only ever append new lines at the end of a section.
+fn render_metrics(sh: &HttpShared) -> String {
+    let h = sh.stats_snapshot();
+    let mut out = String::with_capacity(1024);
+    out += "# mpq serve /metrics v1\n";
+    out += &format!("mpq_http_connections_total {}\n", h.connections);
+    out += &format!("mpq_http_requests_admitted_total {}\n", h.admitted);
+    out += &format!("mpq_http_requests_rejected_total {}\n", h.rejected);
+    out += &format!("mpq_http_requests_answered_total {}\n", h.answered);
+    out += &format!("mpq_http_requests_failed_total {}\n", h.failed);
+    out += &format!("mpq_http_requests_aborted_total {}\n", h.aborted);
+    out += &format!("mpq_http_bad_requests_total {}\n", h.bad_requests);
+    out += &format!("mpq_http_metrics_scrapes_total {}\n", h.metrics_scrapes);
+    out += &format!("mpq_http_inflight_requests {}\n", h.inflight);
+    out += &format!("mpq_engine_queue_samples {}\n", sh.engine.queued_samples());
+    sh.engine
+        .metrics()
+        .render_prometheus(&mut out, sh.started.elapsed().as_secs_f64());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_response_json_round_trips_bit_exactly() {
+        let r = Response {
+            id: 17,
+            samples: 3,
+            loss: 1.234567e-3_f32,
+            evalout: Tensor::from_f32(&[], vec![2.0]),
+            latency_s: 0.001953125, // dyadic: exact through the emitter
+        };
+        let back = parse_infer_response(infer_response_json(&r).as_bytes()).unwrap();
+        assert_eq!(back.id, r.id);
+        assert_eq!(back.samples, r.samples);
+        assert_eq!(back.loss.to_bits(), r.loss.to_bits());
+        assert_eq!(back.evalout, r.evalout);
+        assert_eq!(back.latency_s.to_bits(), r.latency_s.to_bits());
+        // Awkward f32 values (negative zero, subnormal, NaN payloads
+        // aside) survive the bits transport.
+        for loss in [-0.0f32, f32::MIN_POSITIVE / 2.0, 3.4e38, -1.5e-39] {
+            let r2 = Response { loss, ..r.clone() };
+            let b2 = parse_infer_response(infer_response_json(&r2).as_bytes()).unwrap();
+            assert_eq!(b2.loss.to_bits(), loss.to_bits(), "loss {loss}");
+        }
+        // i32 evalout path.
+        let r3 = Response {
+            evalout: Tensor::from_i32(&[2], vec![-7, 42]),
+            ..r
+        };
+        let b3 = parse_infer_response(infer_response_json(&r3).as_bytes()).unwrap();
+        assert_eq!(b3.evalout, r3.evalout);
+    }
+
+    #[test]
+    fn error_body_is_valid_json_even_with_quotes_in_the_message() {
+        let body = error_body("bad \"field\" \\ value");
+        let v = crate::jsonio::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.at(&["error"]).as_str(), Some("bad \"field\" \\ value"));
+    }
+}

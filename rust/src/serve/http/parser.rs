@@ -1,0 +1,428 @@
+//! Incremental HTTP/1.1 request parser.
+//!
+//! Bytes arrive from the socket in arbitrary fragments; the parser owns a
+//! growable buffer, and [`RequestParser::poll`] re-examines it after every
+//! [`RequestParser::push`] until a complete request (head + declared body)
+//! is present.  Parsing is a pure function of the buffered bytes, so a
+//! request split at *any* byte boundary parses identically to the same
+//! request delivered whole (asserted for every boundary in the tests
+//! below).
+//!
+//! ## Protocol surface and status-code contract
+//!
+//! Deliberately the smallest HTTP/1.1 subset the serving front door
+//! needs; everything outside it maps to a *documented* status code and
+//! leaves the connection in a defined state (pinned by
+//! `rust/tests/http_serve_integration.rs`):
+//!
+//! | condition                                   | status | connection |
+//! |---------------------------------------------|--------|------------|
+//! | malformed request line / header / encoding  | 400    | close      |
+//! | bad or conflicting `Content-Length`         | 400    | close      |
+//! | body larger than the configured limit       | 413    | close      |
+//! | header block larger than the limit          | 431    | close      |
+//! | `Transfer-Encoding` (chunked unsupported)   | 501    | close      |
+//! | HTTP version other than 1.0/1.1             | 505    | close      |
+//!
+//! A truncated body is not an error: the parser reports "need more" until
+//! the peer either completes the request or closes the socket.  Both CRLF
+//! and bare-LF line endings are accepted (robustness against hand-rolled
+//! clients); leading empty lines before the request line are skipped per
+//! RFC 9112 §2.2.
+
+/// Protocol-level parse failure: the HTTP status to answer with before
+/// closing the connection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpError {
+    pub status: u16,
+    pub msg: String,
+}
+
+impl HttpError {
+    pub fn new(status: u16, msg: impl Into<String>) -> HttpError {
+        HttpError { status, msg: msg.into() }
+    }
+}
+
+/// Canonical reason phrase for the status codes this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Content Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// One fully-received request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub method: String,
+    pub target: String,
+    /// False for HTTP/1.0 (affects the keep-alive default).
+    pub version_11: bool,
+    /// Resolved keep-alive semantics: 1.1 defaults to true unless
+    /// `Connection: close`; 1.0 defaults to false unless
+    /// `Connection: keep-alive`.
+    pub keep_alive: bool,
+    /// Header (name, value) pairs; names lowercased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header with the given (lowercase) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Byte offset one past the blank line terminating the header block, for
+/// CRLF (`\r\n\r\n`), bare-LF (`\n\n`), and mixed (`\n\r\n`) endings.
+/// Shared with the response parser in [`super::client`].
+pub(crate) fn find_header_end(buf: &[u8]) -> Option<usize> {
+    let mut i = 0;
+    while i < buf.len() {
+        if buf[i] == b'\n' {
+            if buf.get(i + 1) == Some(&b'\n') {
+                return Some(i + 2);
+            }
+            if buf.get(i + 1) == Some(&b'\r') && buf.get(i + 2) == Some(&b'\n') {
+                return Some(i + 3);
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Incremental parser over one connection's byte stream.  Repeated
+/// [`poll`](RequestParser::poll) calls yield pipelined requests in order;
+/// unconsumed bytes stay buffered for the next request.
+pub struct RequestParser {
+    buf: Vec<u8>,
+    max_header: usize,
+    max_body: usize,
+}
+
+impl RequestParser {
+    pub fn new(max_header: usize, max_body: usize) -> RequestParser {
+        RequestParser {
+            buf: Vec::new(),
+            max_header: max_header.max(64),
+            max_body,
+        }
+    }
+
+    /// Append freshly-read socket bytes.
+    pub fn push(&mut self, data: &[u8]) {
+        self.buf.extend_from_slice(data);
+    }
+
+    /// Bytes buffered but not yet consumed by a completed request.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Try to parse one complete request off the front of the buffer.
+    /// `Ok(None)` means "need more bytes" — a defined wait state, never an
+    /// error.  `Err` carries the status code to answer with before
+    /// closing.
+    pub fn poll(&mut self) -> Result<Option<Request>, HttpError> {
+        // Skip empty line(s) before the request line (RFC 9112 §2.2).
+        let mut start = 0;
+        while start < self.buf.len() && (self.buf[start] == b'\r' || self.buf[start] == b'\n') {
+            start += 1;
+        }
+        if start > 0 {
+            self.buf.drain(..start);
+        }
+        let Some(head_end) = find_header_end(&self.buf) else {
+            if self.buf.len() > self.max_header {
+                return Err(HttpError::new(
+                    431,
+                    format!("header block exceeds {} bytes", self.max_header),
+                ));
+            }
+            return Ok(None);
+        };
+        if head_end > self.max_header {
+            return Err(HttpError::new(
+                431,
+                format!("header block exceeds {} bytes", self.max_header),
+            ));
+        }
+        let head = std::str::from_utf8(&self.buf[..head_end])
+            .map_err(|_| HttpError::new(400, "request head is not valid UTF-8"))?;
+        let mut lines = head.split('\n').map(|l| l.strip_suffix('\r').unwrap_or(l));
+        let request_line = lines.next().unwrap_or("");
+        let parts: Vec<&str> = request_line.split_whitespace().collect();
+        if parts.len() != 3 {
+            return Err(HttpError::new(
+                400,
+                format!("malformed request line '{request_line}'"),
+            ));
+        }
+        let (method, target, version) = (parts[0], parts[1], parts[2]);
+        if method.is_empty() || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+            return Err(HttpError::new(400, format!("malformed method '{method}'")));
+        }
+        let version_11 = match version {
+            "HTTP/1.1" => true,
+            "HTTP/1.0" => false,
+            other => {
+                return Err(HttpError::new(
+                    505,
+                    format!("unsupported protocol version '{other}'"),
+                ))
+            }
+        };
+        let mut headers: Vec<(String, String)> = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue; // the terminating blank line
+            }
+            let Some(colon) = line.find(':') else {
+                return Err(HttpError::new(400, format!("malformed header line '{line}'")));
+            };
+            let name = line[..colon].trim().to_ascii_lowercase();
+            if name.is_empty() {
+                return Err(HttpError::new(400, format!("malformed header line '{line}'")));
+            }
+            headers.push((name, line[colon + 1..].trim().to_string()));
+        }
+        if headers.iter().any(|(n, _)| n == "transfer-encoding") {
+            return Err(HttpError::new(
+                501,
+                "Transfer-Encoding is not supported (use Content-Length)",
+            ));
+        }
+        let mut body_len = 0usize;
+        let mut seen_cl: Option<&str> = None;
+        for (n, v) in &headers {
+            if n != "content-length" {
+                continue;
+            }
+            if let Some(prev) = seen_cl {
+                if prev != v {
+                    return Err(HttpError::new(
+                        400,
+                        format!("conflicting Content-Length headers '{prev}' vs '{v}'"),
+                    ));
+                }
+                continue;
+            }
+            seen_cl = Some(v);
+            body_len = v
+                .parse::<usize>()
+                .map_err(|_| HttpError::new(400, format!("bad Content-Length '{v}'")))?;
+        }
+        if body_len > self.max_body {
+            return Err(HttpError::new(
+                413,
+                format!("body of {body_len} bytes exceeds the {} byte limit", self.max_body),
+            ));
+        }
+        let total = head_end + body_len;
+        if self.buf.len() < total {
+            return Ok(None); // truncated body: wait for the rest
+        }
+        let connection = headers
+            .iter()
+            .find(|(n, _)| n == "connection")
+            .map(|(_, v)| v.to_ascii_lowercase());
+        let keep_alive = match connection.as_deref() {
+            Some("close") => false,
+            Some("keep-alive") => true,
+            _ => version_11,
+        };
+        let req = Request {
+            method: method.to_string(),
+            target: target.to_string(),
+            version_11,
+            keep_alive,
+            headers,
+            body: self.buf[head_end..total].to_vec(),
+        };
+        self.buf.drain(..total);
+        Ok(Some(req))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parser() -> RequestParser {
+        RequestParser::new(8 * 1024, 64 * 1024)
+    }
+
+    fn parse_whole(bytes: &[u8]) -> Result<Option<Request>, HttpError> {
+        let mut p = parser();
+        p.push(bytes);
+        p.poll()
+    }
+
+    const POST: &[u8] =
+        b"POST /infer HTTP/1.1\r\nHost: x\r\nContent-Length: 25\r\n\r\n{\"index\":7,\"samples\":3}\r\n";
+
+    #[test]
+    fn whole_request_parses() {
+        let r = parse_whole(POST).unwrap().unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.target, "/infer");
+        assert!(r.version_11);
+        assert!(r.keep_alive);
+        assert_eq!(r.header("host"), Some("x"));
+        assert_eq!(r.body, b"{\"index\":7,\"samples\":3}\r\n");
+    }
+
+    /// The satellite contract: splitting a valid request at *every* byte
+    /// boundary must parse to the identical request, with the first poll
+    /// reporting need-more (never an error) whenever the prefix is
+    /// incomplete.
+    #[test]
+    fn split_reads_at_every_byte_boundary_parse_identically() {
+        let whole = parse_whole(POST).unwrap().unwrap();
+        for cut in 1..POST.len() {
+            let mut p = parser();
+            p.push(&POST[..cut]);
+            let first = p.poll().unwrap_or_else(|e| {
+                panic!("prefix of {cut} bytes must not error: {e:?}")
+            });
+            assert!(first.is_none(), "request complete after only {cut} bytes?");
+            p.push(&POST[cut..]);
+            let got = p.poll().unwrap().expect("complete after both fragments");
+            assert_eq!(got, whole, "split at byte {cut} changed the parse");
+            assert_eq!(p.buffered(), 0);
+        }
+    }
+
+    #[test]
+    fn pipelined_requests_parse_in_order_from_one_push() {
+        let mut p = parser();
+        p.push(b"GET /healthz HTTP/1.1\r\n\r\nGET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n");
+        let a = p.poll().unwrap().unwrap();
+        assert_eq!(a.target, "/healthz");
+        assert!(a.keep_alive);
+        let b = p.poll().unwrap().unwrap();
+        assert_eq!(b.target, "/metrics");
+        assert!(!b.keep_alive);
+        assert!(p.poll().unwrap().is_none());
+        assert_eq!(p.buffered(), 0);
+    }
+
+    #[test]
+    fn bare_lf_and_mixed_line_endings_are_accepted() {
+        let r = parse_whole(b"POST /infer HTTP/1.1\nContent-Length: 2\n\nok")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.body, b"ok");
+        let r = parse_whole(b"GET /healthz HTTP/1.1\nHost: x\r\n\r\n").unwrap().unwrap();
+        assert_eq!(r.target, "/healthz");
+    }
+
+    #[test]
+    fn leading_empty_lines_are_skipped() {
+        let r = parse_whole(b"\r\n\r\nGET /healthz HTTP/1.1\r\n\r\n").unwrap().unwrap();
+        assert_eq!(r.target, "/healthz");
+    }
+
+    #[test]
+    fn truncated_body_waits_instead_of_erroring() {
+        let mut p = parser();
+        p.push(b"POST /infer HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc");
+        assert!(p.poll().unwrap().is_none());
+        assert!(p.poll().unwrap().is_none(), "re-poll must stay in the wait state");
+        p.push(b"defghij");
+        assert_eq!(p.poll().unwrap().unwrap().body, b"abcdefghij");
+    }
+
+    #[test]
+    fn oversized_header_block_is_431() {
+        // Terminated but oversized.
+        let mut p = RequestParser::new(128, 1024);
+        let mut big = b"GET / HTTP/1.1\r\n".to_vec();
+        big.extend_from_slice(format!("X-Pad: {}\r\n\r\n", "a".repeat(200)).as_bytes());
+        p.push(&big);
+        assert_eq!(p.poll().unwrap_err().status, 431);
+        // Unterminated and already past the limit: fail fast, don't buffer
+        // forever.
+        let mut p = RequestParser::new(128, 1024);
+        p.push("GET / HTTP/1.1\r\nX-Pad: ".as_bytes());
+        p.push("a".repeat(200).as_bytes());
+        assert_eq!(p.poll().unwrap_err().status, 431);
+    }
+
+    #[test]
+    fn bad_content_length_is_400() {
+        for cl in ["abc", "-1", "1e3", "18446744073709551616"] {
+            let req = format!("POST /infer HTTP/1.1\r\nContent-Length: {cl}\r\n\r\n");
+            let err = parse_whole(req.as_bytes()).unwrap_err();
+            assert_eq!(err.status, 400, "Content-Length '{cl}'");
+            assert!(err.msg.contains("Content-Length"), "{}", err.msg);
+        }
+        // Conflicting duplicates are 400; agreeing duplicates are fine.
+        let err = parse_whole(b"POST / HTTP/1.1\r\nContent-Length: 1\r\nContent-Length: 2\r\n\r\n")
+            .unwrap_err();
+        assert_eq!(err.status, 400);
+        let r = parse_whole(b"POST / HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\nok")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.body, b"ok");
+    }
+
+    #[test]
+    fn body_over_limit_is_413_before_the_body_arrives() {
+        let mut p = RequestParser::new(1024, 16);
+        p.push(b"POST /infer HTTP/1.1\r\nContent-Length: 17\r\n\r\n");
+        assert_eq!(p.poll().unwrap_err().status, 413);
+    }
+
+    #[test]
+    fn malformed_request_lines_are_400() {
+        for line in ["GET /x", "GET  HTTP/1.1", "just-garbage", "get /x HTTP/1.1"] {
+            let req = format!("{line}\r\n\r\n");
+            assert_eq!(parse_whole(req.as_bytes()).unwrap_err().status, 400, "{line}");
+        }
+        assert_eq!(
+            parse_whole(b"GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n").unwrap_err().status,
+            400
+        );
+        // Non-UTF-8 head.
+        assert_eq!(parse_whole(b"GET /\xff HTTP/1.1\r\n\r\n").unwrap_err().status, 400);
+    }
+
+    #[test]
+    fn unsupported_version_is_505() {
+        for v in ["HTTP/2.0", "HTTP/0.9", "ICY/1.0"] {
+            let req = format!("GET / {v}\r\n\r\n");
+            assert_eq!(parse_whole(req.as_bytes()).unwrap_err().status, 505, "{v}");
+        }
+    }
+
+    #[test]
+    fn transfer_encoding_is_501() {
+        let err = parse_whole(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").unwrap_err();
+        assert_eq!(err.status, 501);
+    }
+
+    #[test]
+    fn keep_alive_defaults_follow_the_http_version() {
+        let ka = |req: &str| parse_whole(req.as_bytes()).unwrap().unwrap().keep_alive;
+        assert!(ka("GET / HTTP/1.1\r\n\r\n"));
+        assert!(!ka("GET / HTTP/1.1\r\nConnection: close\r\n\r\n"));
+        assert!(!ka("GET / HTTP/1.0\r\n\r\n"));
+        assert!(ka("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n"));
+    }
+}

@@ -17,6 +17,14 @@
 //! * **open-loop** — requests submitted at a fixed rate regardless of
 //!   completions (throughput/saturation benchmark), all tickets awaited
 //!   at the end.
+//!
+//! Both models run either **in-process** ([`run`], straight into an
+//! [`Engine`]) or **over real loopback sockets** ([`run_http`], against
+//! an `mpq serve --listen` front door).  The request stream is identical
+//! either way — over HTTP the request carries only `(index, samples)`
+//! and the server materializes the same deterministic tensors from its
+//! own dataset — so socket runs are bit-comparable to in-process runs
+//! (asserted in `rust/tests/http_serve_integration.rs`).
 
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -27,6 +35,8 @@ use crate::tensor::Tensor;
 
 use super::batcher::Response;
 use super::engine::Engine;
+use super::http::client::HttpClient;
+use super::http::parse_infer_response;
 
 /// Eval-split index base for loadgen batches, clear of the indices the
 /// evaluation loop replays (0..eval_batches).
@@ -66,14 +76,29 @@ pub struct LoadReport {
     pub mean_accuracy: f64,
 }
 
-/// The deterministic request set for a spec: `(x, y)` per request.
-pub fn request_set(data: &Dataset, spec: &LoadSpec) -> Vec<(Tensor, Tensor)> {
+/// The deterministic per-request sample counts for a spec (seeded
+/// uniform in `1..=max_request_samples`) — the part of the request
+/// stream a socket client needs without a local dataset.
+pub fn request_sizes(spec: &LoadSpec) -> Vec<usize> {
     let mut rng = Pcg32::new(spec.seed, 0x6c6f_6164); // "load"
     (0..spec.requests)
-        .map(|i| {
-            let size = 1 + rng.below(spec.max_request_samples as u32) as usize;
-            data.batch(Split::Eval, LOADGEN_INDEX_BASE + i as u64, size)
-        })
+        .map(|_| 1 + rng.below(spec.max_request_samples as u32) as usize)
+        .collect()
+}
+
+/// The eval-split dataset index request `i` draws from — shared by the
+/// in-process path (which materializes tensors locally) and the HTTP
+/// server (which materializes the same tensors from the wire request).
+pub fn request_index(i: usize) -> u64 {
+    LOADGEN_INDEX_BASE + i as u64
+}
+
+/// The deterministic request set for a spec: `(x, y)` per request.
+pub fn request_set(data: &Dataset, spec: &LoadSpec) -> Vec<(Tensor, Tensor)> {
+    request_sizes(spec)
+        .into_iter()
+        .enumerate()
+        .map(|(i, size)| data.batch(Split::Eval, request_index(i), size))
         .collect()
 }
 
@@ -142,7 +167,170 @@ pub fn run(engine: &Engine, data: &Dataset, spec: &LoadSpec) -> crate::Result<Lo
     if let Some(e) = first_err.into_inner().unwrap() {
         return Err(e);
     }
-    let mut indexed = responses.into_inner().unwrap();
+    finalize(spec, wall_s, responses.into_inner().unwrap())
+}
+
+/// Drive an `mpq serve --listen` front door at `addr` (`host:port`) with
+/// the same deterministic request stream as [`run`], over real TCP.
+/// Requests carry only `{"index", "samples"}`; the server materializes
+/// the tensors, so responses are bit-comparable to in-process runs.
+/// The same serving invariants are verified (every request answered
+/// exactly once, ids duplicate-free and contiguous).
+pub fn run_http(addr: &str, spec: &LoadSpec) -> crate::Result<LoadReport> {
+    crate::ensure!(spec.requests >= 1, "loadgen: need at least one request");
+    crate::ensure!(
+        spec.max_request_samples >= 1,
+        "loadgen: --max-request must be at least 1"
+    );
+    let sizes = request_sizes(spec);
+    let responses: Mutex<Vec<(usize, Response)>> = Mutex::new(Vec::with_capacity(spec.requests));
+    let first_err: Mutex<Option<crate::error::Error>> = Mutex::new(None);
+    let t0 = Instant::now();
+    match spec.mode {
+        LoadMode::Closed { concurrency } => {
+            // One socket per client, submit→wait loops striped over the
+            // request stream; reconnects if the server retires the
+            // connection at its keep-alive budget.
+            let clients = concurrency.max(1).min(spec.requests);
+            std::thread::scope(|scope| {
+                for ci in 0..clients {
+                    let sizes = &sizes;
+                    let responses = &responses;
+                    let first_err = &first_err;
+                    scope.spawn(move || {
+                        let mut client = match HttpClient::connect(addr) {
+                            Ok(c) => c,
+                            Err(e) => {
+                                first_err.lock().unwrap().get_or_insert(e);
+                                return;
+                            }
+                        };
+                        let mut i = ci;
+                        while i < sizes.len() {
+                            if first_err.lock().unwrap().is_some() {
+                                return;
+                            }
+                            let exchange = client
+                                .post("/infer", &infer_body(i, sizes[i]))
+                                .and_then(|resp| {
+                                    let closing = resp.header("connection") == Some("close");
+                                    crate::ensure!(
+                                        resp.status == 200,
+                                        "loadgen: request {i}: HTTP {}: {}",
+                                        resp.status,
+                                        resp.body_str()
+                                    );
+                                    Ok((parse_infer_response(&resp.body)?, closing))
+                                });
+                            match exchange {
+                                Ok((r, closing)) => {
+                                    responses.lock().unwrap().push((i, r));
+                                    if closing && i + clients < sizes.len() {
+                                        match HttpClient::connect(addr) {
+                                            Ok(c) => client = c,
+                                            Err(e) => {
+                                                first_err.lock().unwrap().get_or_insert(e);
+                                                return;
+                                            }
+                                        }
+                                    }
+                                }
+                                Err(e) => {
+                                    first_err.lock().unwrap().get_or_insert(e);
+                                    return;
+                                }
+                            }
+                            i += clients;
+                        }
+                    });
+                }
+            });
+        }
+        LoadMode::Open { rate_hz } => {
+            crate::ensure!(rate_hz > 0.0, "loadgen: --rate must be positive");
+            // True open-loop arrivals need sends decoupled from receives:
+            // a few connections round-robin the stream, each pipelining a
+            // bounded window so a slow response can't stall the arrival
+            // clock for long (and the bounded window keeps both sides'
+            // socket buffers safe from deadlock).
+            let interval = Duration::from_secs_f64(1.0 / rate_hz);
+            let conns = 8.min(spec.requests).max(1);
+            const PIPELINE_DEPTH: usize = 4;
+            std::thread::scope(|scope| {
+                for ci in 0..conns {
+                    let sizes = &sizes;
+                    let responses = &responses;
+                    let first_err = &first_err;
+                    scope.spawn(move || {
+                        let run = || -> crate::Result<()> {
+                            let mut client = HttpClient::connect(addr)?;
+                            let mut outstanding: Vec<usize> = Vec::new();
+                            fn recv_one(
+                                client: &mut HttpClient,
+                                outstanding: &mut Vec<usize>,
+                                responses: &Mutex<Vec<(usize, Response)>>,
+                            ) -> crate::Result<()> {
+                                let i = outstanding.remove(0);
+                                let resp = client.recv()?;
+                                crate::ensure!(
+                                    resp.status == 200,
+                                    "loadgen: request {i}: HTTP {}: {}",
+                                    resp.status,
+                                    resp.body_str()
+                                );
+                                let r = parse_infer_response(&resp.body)?;
+                                responses.lock().unwrap().push((i, r));
+                                Ok(())
+                            }
+                            let mut i = ci;
+                            while i < sizes.len() {
+                                if first_err.lock().unwrap().is_some() {
+                                    return Ok(());
+                                }
+                                if outstanding.len() >= PIPELINE_DEPTH {
+                                    recv_one(&mut client, &mut outstanding, responses)?;
+                                }
+                                let target = t0 + interval.mul_f64(i as f64);
+                                let now = Instant::now();
+                                if target > now {
+                                    std::thread::sleep(target - now);
+                                }
+                                client.send("POST", "/infer", Some(&infer_body(i, sizes[i])))?;
+                                outstanding.push(i);
+                                i += conns;
+                            }
+                            while !outstanding.is_empty() {
+                                recv_one(&mut client, &mut outstanding, responses)?;
+                            }
+                            Ok(())
+                        };
+                        if let Err(e) = run() {
+                            first_err.lock().unwrap().get_or_insert(e);
+                        }
+                    });
+                }
+            });
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    if let Some(e) = first_err.into_inner().unwrap() {
+        return Err(e);
+    }
+    finalize(spec, wall_s, responses.into_inner().unwrap())
+}
+
+/// The `POST /infer` request body for request `i` of the stream.
+fn infer_body(i: usize, samples: usize) -> Vec<u8> {
+    format!("{{\"index\":{},\"samples\":{samples}}}", request_index(i)).into_bytes()
+}
+
+/// Shared tail of [`run`]/[`run_http`]: verify the serving invariants
+/// and assemble the report from `(request index, response)` pairs.
+fn finalize(
+    spec: &LoadSpec,
+    wall_s: f64,
+    mut indexed: Vec<(usize, Response)>,
+) -> crate::Result<LoadReport> {
     crate::ensure!(
         indexed.len() == spec.requests,
         "loadgen: {} of {} responses missing",

@@ -199,6 +199,68 @@ impl MetricsSnapshot {
             ("p99_s", Json::num(self.p99_s)),
         ])
     }
+
+    /// Render the engine section of `GET /metrics` in Prometheus text
+    /// style.  **Stable format** — field names and order are pinned by
+    /// the golden test in `rust/tests/http_serve_integration.rs`; only
+    /// ever append lines.  `uptime_s` doubles as the throughput window
+    /// (requests completed / uptime).
+    pub fn render_prometheus(&self, out: &mut String, uptime_s: f64) {
+        let throughput = if uptime_s > 0.0 {
+            self.completed as f64 / uptime_s
+        } else {
+            0.0
+        };
+        out.push_str(&format!(
+            "mpq_engine_requests_submitted_total {}\n",
+            self.submitted
+        ));
+        out.push_str(&format!(
+            "mpq_engine_requests_completed_total {}\n",
+            self.completed
+        ));
+        out.push_str(&format!("mpq_engine_requests_failed_total {}\n", self.failed));
+        out.push_str(&format!("mpq_engine_samples_total {}\n", self.samples));
+        out.push_str(&format!("mpq_engine_batches_total {}\n", self.batches));
+        out.push_str(&format!(
+            "mpq_engine_batch_chunks_total {}\n",
+            self.batch_chunks
+        ));
+        out.push_str(&format!(
+            "mpq_engine_batch_samples_total {}\n",
+            self.batch_samples
+        ));
+        out.push_str(&format!(
+            "mpq_engine_batch_occupancy_mean {}\n",
+            self.mean_occupancy()
+        ));
+        out.push_str(&format!("mpq_engine_throughput_rps {throughput}\n"));
+        out.push_str(&format!(
+            "mpq_engine_latency_seconds_mean {}\n",
+            self.mean_latency_s
+        ));
+        out.push_str(&format!(
+            "mpq_engine_latency_seconds_min {}\n",
+            self.min_latency_s
+        ));
+        out.push_str(&format!(
+            "mpq_engine_latency_seconds_max {}\n",
+            self.max_latency_s
+        ));
+        out.push_str(&format!(
+            "mpq_engine_latency_seconds{{quantile=\"0.5\"}} {}\n",
+            self.p50_s
+        ));
+        out.push_str(&format!(
+            "mpq_engine_latency_seconds{{quantile=\"0.95\"}} {}\n",
+            self.p95_s
+        ));
+        out.push_str(&format!(
+            "mpq_engine_latency_seconds{{quantile=\"0.99\"}} {}\n",
+            self.p99_s
+        ));
+        out.push_str(&format!("mpq_engine_uptime_seconds {uptime_s}\n"));
+    }
 }
 
 #[cfg(test)]

@@ -35,18 +35,28 @@
 //! * [`metrics`] — lock-free latency histogram (p50/p95/p99),
 //!   throughput and batch-occupancy counters.
 //! * [`loadgen`] — deterministic seeded closed-loop/open-loop load
-//!   generation over [`crate::data::Dataset`] eval batches.
+//!   generation over [`crate::data::Dataset`] eval batches, in-process
+//!   ([`loadgen::run`]) or over real loopback sockets
+//!   ([`loadgen::run_http`]).
+//! * [`http`] — the HTTP/1.1 front door (`mpq serve --listen`): std
+//!   `TcpListener` acceptor, incremental request parser, lazy JSON
+//!   field scanner, admission control with fail-fast `503`,
+//!   per-connection backpressure, graceful drain, and a stable-format
+//!   `GET /metrics` endpoint.  Zero new dependencies.
 //!
-//! CLI: `mpq serve` (engine + loadgen + metrics report) and `mpq infer`
-//! (one-shot request); `make serve-smoke` wires the whole path into
-//! `make verify`.
+//! CLI: `mpq serve` (engine + loadgen + metrics report; `--listen` for
+//! the socket front door, `--target` for a pure socket client) and
+//! `mpq infer` (one-shot request); `make serve-smoke` and
+//! `make http-smoke` wire both paths into `make verify`.
 
 pub mod batcher;
 pub mod engine;
+pub mod http;
 pub mod loadgen;
 pub mod metrics;
 
 pub use batcher::{Response, Ticket};
 pub use engine::{Engine, ServeConfig, Spawner};
+pub use http::{HttpConfig, HttpServer, HttpStatsSnapshot};
 pub use loadgen::{LoadMode, LoadReport, LoadSpec};
 pub use metrics::{Metrics, MetricsSnapshot};

@@ -1,0 +1,608 @@
+//! End-to-end tests for the HTTP/1.1 front door (`mpq serve --listen`).
+//!
+//! The central contract: **the socket path changes nothing** — a loadgen
+//! run over real loopback TCP returns responses bit-identical to an
+//! in-process engine run for the same (seed, index) request stream, at
+//! any worker count and on both kernel paths (the exact-f32 `*_bits`
+//! JSON transport is what makes this possible).  Around it: the
+//! documented status-code contract for malformed input with the
+//! connection left in a defined state, admission control that fails fast
+//! without ever losing accepted work, graceful drain mid-burst, the
+//! pinned `/metrics` text format, and keep-alive limits.
+//!
+//! Hermetic: sim backend, seeded init checkpoint, loopback sockets on
+//! port 0 — no training, no artifacts, no fixed ports.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mpq::backend::{Backend, KernelChoice, SimBackend};
+use mpq::ckpt::Checkpoint;
+use mpq::data::Dataset;
+use mpq::graph::Graph;
+use mpq::quant::BitsConfig;
+use mpq::serve::http::client::HttpClient;
+use mpq::serve::{
+    loadgen, Engine, HttpConfig, HttpServer, LoadMode, LoadSpec, ServeConfig, Spawner,
+};
+
+const MODEL: &str = "sim_tiny";
+
+/// (checkpoint, mixed-precision bits, dataset) for the test model —
+/// deterministic, so two calls build bit-identical engines.
+fn setup() -> (Checkpoint, Vec<f32>, Dataset) {
+    let be = SimBackend::new(MODEL).unwrap();
+    let graph = Graph::from_manifest(&be.manifest().raw).unwrap();
+    let ck = be.init_checkpoint().unwrap();
+    let mut bits = BitsConfig::uniform(&graph, 4);
+    for l in &graph.layers {
+        if l.fixed_bits.is_none() {
+            bits.bits[l.qindex] = 2;
+            break;
+        }
+    }
+    (ck, bits.to_f32(), Dataset::for_task(be.manifest().task, 11))
+}
+
+fn engine(workers: usize, kernel: KernelChoice, max_batch: usize, timeout: Duration) -> Engine {
+    let (ck, bits, _) = setup();
+    let spawner: Spawner = Arc::new(move || {
+        Ok(Box::new(SimBackend::with_kernel(MODEL, kernel)?) as Box<dyn Backend>)
+    });
+    Engine::start(
+        spawner,
+        ck,
+        bits,
+        ServeConfig {
+            workers,
+            max_batch,
+            batch_timeout: timeout,
+            force_per_request: false,
+            warmup: true,
+        },
+    )
+    .unwrap()
+}
+
+/// A served front door over a fresh engine; `addr` is the picked port.
+fn server(
+    workers: usize,
+    kernel: KernelChoice,
+    max_batch: usize,
+    timeout: Duration,
+    hcfg: HttpConfig,
+) -> (HttpServer, String) {
+    let (_, _, data) = setup();
+    let eng = engine(workers, kernel, max_batch, timeout);
+    let srv = HttpServer::start(eng, data, hcfg).unwrap();
+    let addr = srv.local_addr().to_string();
+    (srv, addr)
+}
+
+fn default_server(workers: usize, kernel: KernelChoice) -> (HttpServer, String) {
+    server(
+        workers,
+        kernel,
+        8,
+        Duration::from_millis(1),
+        HttpConfig::default(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Bit-identity: socket loadgen == in-process engine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn socket_loadgen_bit_identical_to_in_process_engine() {
+    let spec = LoadSpec {
+        requests: 24,
+        max_request_samples: 3,
+        seed: 42,
+        mode: LoadMode::Closed { concurrency: 4 },
+    };
+    for &workers in &[1usize, 4] {
+        for &kernel in &[KernelChoice::Reference, KernelChoice::Packed] {
+            // In-process reference run.
+            let (_, _, data) = setup();
+            let eng = engine(workers, kernel, 8, Duration::from_millis(1));
+            let local = loadgen::run(&eng, &data, &spec).unwrap();
+            eng.drain().unwrap();
+            // The same stream over a real loopback socket.
+            let (srv, addr) = default_server(workers, kernel);
+            let remote = loadgen::run_http(&addr, &spec).unwrap();
+            let (snap, hstats) = srv.shutdown().unwrap();
+            // Every request answered exactly once...
+            assert_eq!(remote.responses.len(), spec.requests);
+            assert_eq!(snap.completed, spec.requests as u64);
+            assert_eq!(hstats.admitted, spec.requests as u64);
+            assert_eq!(hstats.answered, spec.requests as u64);
+            assert_eq!((hstats.failed, hstats.aborted), (0, 0));
+            // ...with monotone contiguous ids (run_http also asserts this
+            // internally; re-check here so the contract is visible).
+            let mut ids: Vec<u64> = remote.responses.iter().map(|r| r.id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), spec.requests);
+            assert_eq!(ids[ids.len() - 1] - ids[0] + 1, spec.requests as u64);
+            // ...and bit-identical to the in-process run, request by
+            // request.  Holds on the packed path too: the engine's
+            // responses are bit-identical at any batch composition; only
+            // direct unbatched eval is epsilon-distant.
+            for (i, (a, b)) in local.responses.iter().zip(&remote.responses).enumerate() {
+                assert_eq!(a.samples, b.samples, "request {i} samples (w={workers})");
+                assert_eq!(
+                    a.loss.to_bits(),
+                    b.loss.to_bits(),
+                    "request {i} loss bits (w={workers}, {} kernels)",
+                    kernel.name()
+                );
+                assert_eq!(
+                    a.evalout, b.evalout,
+                    "request {i} evalout (w={workers}, {} kernels)",
+                    kernel.name()
+                );
+            }
+            assert_eq!(local.total_samples, remote.total_samples);
+        }
+    }
+}
+
+#[test]
+fn open_loop_over_sockets_answers_every_request() {
+    let (srv, addr) = default_server(2, KernelChoice::Packed);
+    let spec = LoadSpec {
+        requests: 20,
+        max_request_samples: 2,
+        seed: 7,
+        mode: LoadMode::Open { rate_hz: 500.0 },
+    };
+    let load = loadgen::run_http(&addr, &spec).unwrap();
+    assert_eq!(load.responses.len(), 20);
+    assert!(load.throughput_rps > 0.0);
+    let (snap, hstats) = srv.shutdown().unwrap();
+    assert_eq!(snap.completed, 20);
+    assert_eq!(hstats.admitted, hstats.answered);
+}
+
+// ---------------------------------------------------------------------------
+// Malformed input: documented status, defined connection state, no hangs
+// ---------------------------------------------------------------------------
+
+/// Table-driven socket-level robustness: each raw byte blob must yield
+/// the documented status code, and the advertised connection state must
+/// be real (close → recv of a follow-up fails; keep-alive → a follow-up
+/// `/healthz` still answers 200).
+#[test]
+fn malformed_requests_get_documented_status_and_connection_state() {
+    let (srv, addr) = default_server(1, KernelChoice::Reference);
+    struct Case {
+        name: &'static str,
+        raw: Vec<u8>,
+        status: u16,
+        closes: bool,
+    }
+    let cases = vec![
+        Case {
+            name: "lowercase method",
+            raw: b"get /healthz HTTP/1.1\r\n\r\n".to_vec(),
+            status: 400,
+            closes: true,
+        },
+        Case {
+            name: "unsupported version",
+            raw: b"GET /healthz HTTP/2.0\r\n\r\n".to_vec(),
+            status: 505,
+            closes: true,
+        },
+        Case {
+            name: "header without colon",
+            raw: b"GET /healthz HTTP/1.1\r\nbogus line\r\n\r\n".to_vec(),
+            status: 400,
+            closes: true,
+        },
+        Case {
+            name: "unparseable content-length",
+            raw: b"POST /infer HTTP/1.1\r\ncontent-length: many\r\n\r\n".to_vec(),
+            status: 400,
+            closes: true,
+        },
+        Case {
+            name: "oversized headers",
+            raw: {
+                let mut r = b"GET /healthz HTTP/1.1\r\nx-pad: ".to_vec();
+                r.extend(std::iter::repeat(b'a').take(9 * 1024));
+                r.extend_from_slice(b"\r\n\r\n");
+                r
+            },
+            status: 431,
+            closes: true,
+        },
+        Case {
+            name: "transfer-encoding",
+            raw: b"POST /infer HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n".to_vec(),
+            status: 501,
+            closes: true,
+        },
+        Case {
+            name: "body over limit",
+            raw: b"POST /infer HTTP/1.1\r\ncontent-length: 9999999\r\n\r\n".to_vec(),
+            status: 413,
+            closes: true,
+        },
+        Case {
+            name: "unknown path keeps the connection",
+            raw: b"GET /nope HTTP/1.1\r\n\r\n".to_vec(),
+            status: 404,
+            closes: false,
+        },
+        Case {
+            name: "wrong method on a known path keeps the connection",
+            raw: b"GET /infer HTTP/1.1\r\n\r\n".to_vec(),
+            status: 405,
+            closes: false,
+        },
+        Case {
+            name: "well-framed bad JSON keeps the connection",
+            raw: b"POST /infer HTTP/1.1\r\ncontent-length: 9\r\n\r\nnot json!".to_vec(),
+            status: 400,
+            closes: false,
+        },
+        Case {
+            name: "missing samples field keeps the connection",
+            raw: b"POST /infer HTTP/1.1\r\ncontent-length: 12\r\n\r\n{\"index\": 3}".to_vec(),
+            status: 400,
+            closes: false,
+        },
+        Case {
+            name: "zero samples rejected",
+            raw: b"POST /infer HTTP/1.1\r\ncontent-length: 25\r\n\r\n{\"index\":1,\"samples\":0}  ".to_vec(),
+            status: 400,
+            closes: false,
+        },
+    ];
+    for case in cases {
+        let mut c = HttpClient::connect(&addr).unwrap();
+        c.send_raw(&case.raw).unwrap();
+        let resp = c.recv().unwrap_or_else(|e| panic!("{}: {e}", case.name));
+        assert_eq!(resp.status, case.status, "{}", case.name);
+        if case.closes {
+            assert_eq!(
+                resp.header("connection"),
+                Some("close"),
+                "{}: must advertise close",
+                case.name
+            );
+            c.send_raw(b"GET /healthz HTTP/1.1\r\n\r\n").ok();
+            assert!(
+                c.recv().is_err(),
+                "{}: connection must actually be closed",
+                case.name
+            );
+        } else {
+            let follow = c.get("/healthz").unwrap_or_else(|e| {
+                panic!("{}: keep-alive connection must stay usable: {e}", case.name)
+            });
+            assert_eq!(follow.status, 200, "{}", case.name);
+            assert_eq!(follow.body, b"ok\n", "{}", case.name);
+        }
+    }
+    srv.shutdown().unwrap();
+}
+
+/// A valid request dribbled in across several writes parses exactly like
+/// a single write (the parser's own unit tests split at *every* byte
+/// boundary; this re-checks the path through a real socket).
+#[test]
+fn split_writes_across_the_socket_still_parse() {
+    let (srv, addr) = default_server(1, KernelChoice::Reference);
+    let raw: &[u8] = b"POST /infer HTTP/1.1\r\ncontent-length: 23\r\n\r\n{\"index\":5,\"samples\":2}";
+    let mut c = HttpClient::connect(&addr).unwrap();
+    for chunk in raw.chunks(7) {
+        c.send_raw(chunk).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let resp = c.recv().unwrap();
+    assert_eq!(resp.status, 200);
+    let r = mpq::serve::http::parse_infer_response(&resp.body).unwrap();
+    assert_eq!(r.samples, 2);
+    srv.shutdown().unwrap();
+}
+
+/// A truncated body followed by a client half-close never produces a
+/// response — the partial request was never admitted, and the server
+/// closes without panicking or hanging.
+#[test]
+fn truncated_body_then_eof_closes_without_a_response() {
+    let (srv, addr) = default_server(1, KernelChoice::Reference);
+    let mut c = HttpClient::connect(&addr).unwrap();
+    c.send_raw(b"POST /infer HTTP/1.1\r\ncontent-length: 23\r\n\r\n{\"index\":")
+        .unwrap();
+    c.shutdown_write();
+    assert!(c.recv().is_err(), "no response for a request that never completed");
+    let (snap, hstats) = srv.shutdown().unwrap();
+    assert_eq!(hstats.admitted, 0);
+    assert_eq!(snap.submitted, 0);
+}
+
+/// Pipelined requests on one connection are answered in order.
+#[test]
+fn pipelined_requests_answered_in_order() {
+    let (srv, addr) = default_server(2, KernelChoice::Reference);
+    let mut c = HttpClient::connect(&addr).unwrap();
+    for i in 0..3u64 {
+        let body = format!("{{\"index\":{i},\"samples\":{}}}", i + 1);
+        c.send("POST", "/infer", Some(body.as_bytes())).unwrap();
+    }
+    for i in 0..3u64 {
+        let resp = c.recv().unwrap();
+        assert_eq!(resp.status, 200);
+        let r = mpq::serve::http::parse_infer_response(&resp.body).unwrap();
+        assert_eq!(r.samples as u64, i + 1, "responses must come back in request order");
+    }
+    srv.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Admission control and graceful drain
+// ---------------------------------------------------------------------------
+
+/// Overload answers 503 + `Retry-After` immediately, and no *accepted*
+/// request is ever lost: admitted == answered exactly, rejects answered
+/// on live keep-alive connections.
+#[test]
+fn queue_full_is_503_with_zero_accepted_request_loss() {
+    // workers=1 with a huge batch size and a long deadline parks admitted
+    // requests deterministically; capacity 2 makes the third admission
+    // fail fast.
+    let (srv, addr) = server(
+        1,
+        KernelChoice::Reference,
+        64,
+        Duration::from_millis(700),
+        HttpConfig {
+            queue_capacity: 2,
+            ..HttpConfig::default()
+        },
+    );
+    let mut held: Vec<HttpClient> = Vec::new();
+    for i in 0..2 {
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let body = format!("{{\"index\":{i},\"samples\":1}}");
+        c.send("POST", "/infer", Some(body.as_bytes())).unwrap();
+        held.push(c);
+    }
+    // Let the server parse + admit both before the overload probes.
+    std::thread::sleep(Duration::from_millis(250));
+    for i in 0..4 {
+        let mut c = HttpClient::connect(&addr).unwrap();
+        let resp = c.post("/infer", b"{\"index\":9,\"samples\":1}").unwrap();
+        assert_eq!(resp.status, 503, "overload probe {i}");
+        assert!(
+            resp.header("retry-after").is_some(),
+            "503 must carry Retry-After"
+        );
+        // Queue-full keeps the connection: the client may retry here.
+        let follow = c.get("/healthz").unwrap();
+        assert_eq!(follow.status, 200);
+    }
+    // The two admitted requests complete once the batch deadline fires.
+    for mut c in held {
+        let resp = c.recv().unwrap();
+        assert_eq!(resp.status, 200, "admitted request must complete");
+    }
+    let (snap, hstats) = srv.shutdown().unwrap();
+    assert_eq!(hstats.admitted, 2);
+    assert_eq!(hstats.answered, 2, "accepted count must equal answered count");
+    assert_eq!(hstats.rejected, 4);
+    assert_eq!((hstats.failed, hstats.aborted), (0, 0));
+    assert_eq!(snap.completed, 2);
+}
+
+/// Shutdown mid-burst: every admitted request drains to a written
+/// response before sockets close, and the listener stops accepting.
+#[test]
+fn shutdown_mid_burst_drains_all_accepted_work() {
+    let (srv, addr) = server(
+        1,
+        KernelChoice::Reference,
+        64,
+        Duration::from_millis(300),
+        HttpConfig::default(),
+    );
+    // 3 connections × 2 pipelined requests, all parked at the batch
+    // deadline when shutdown lands.
+    let mut clients: Vec<HttpClient> = Vec::new();
+    for ci in 0..3 {
+        let mut c = HttpClient::connect(&addr).unwrap();
+        for rj in 0..2 {
+            let body = format!("{{\"index\":{},\"samples\":1}}", ci * 2 + rj);
+            c.send("POST", "/infer", Some(body.as_bytes())).unwrap();
+        }
+        clients.push(c);
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    let (snap, hstats) = srv.shutdown().unwrap();
+    assert_eq!(hstats.admitted, 6);
+    assert_eq!(hstats.answered, 6, "drain must flush every admitted request");
+    assert_eq!((hstats.failed, hstats.aborted), (0, 0));
+    assert_eq!(snap.completed, 6);
+    // The responses were written before the sockets closed.
+    for (ci, c) in clients.iter_mut().enumerate() {
+        for rj in 0..2 {
+            let resp = c.recv().unwrap_or_else(|e| panic!("conn {ci} resp {rj}: {e}"));
+            assert_eq!(resp.status, 200);
+        }
+        assert!(c.recv().is_err(), "socket must be closed after the drain");
+    }
+    // And the front door is gone: a new connection cannot be served.
+    match HttpClient::connect(&addr) {
+        Err(_) => {}
+        Ok(mut c) => assert!(c.post("/infer", b"{\"index\":0,\"samples\":1}").is_err()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Keep-alive limits
+// ---------------------------------------------------------------------------
+
+#[test]
+fn keepalive_budget_closes_after_the_limit_with_explicit_header() {
+    let (srv, addr) = server(
+        1,
+        KernelChoice::Reference,
+        8,
+        Duration::from_millis(1),
+        HttpConfig {
+            max_requests_per_conn: 3,
+            ..HttpConfig::default()
+        },
+    );
+    let mut c = HttpClient::connect(&addr).unwrap();
+    for _ in 0..4 {
+        c.send("GET", "/healthz", None).unwrap();
+    }
+    for i in 0..3 {
+        let resp = c.recv().unwrap();
+        assert_eq!(resp.status, 200);
+        let expect_close = i == 2;
+        assert_eq!(
+            resp.header("connection") == Some("close"),
+            expect_close,
+            "response {i}: close exactly on the budget boundary"
+        );
+    }
+    assert!(c.recv().is_err(), "4th request is past the budget: closed");
+    // The loadgen reconnects transparently across the budget.
+    srv.shutdown().unwrap();
+    let (srv, addr) = server(
+        2,
+        KernelChoice::Reference,
+        8,
+        Duration::from_millis(1),
+        HttpConfig {
+            max_requests_per_conn: 3,
+            ..HttpConfig::default()
+        },
+    );
+    let spec = LoadSpec {
+        requests: 10,
+        max_request_samples: 2,
+        seed: 42,
+        mode: LoadMode::Closed { concurrency: 2 },
+    };
+    let load = loadgen::run_http(&addr, &spec).unwrap();
+    assert_eq!(load.responses.len(), 10);
+    let (_, hstats) = srv.shutdown().unwrap();
+    assert_eq!(hstats.admitted, 10);
+    assert!(
+        hstats.connections > 2,
+        "budget 3 over 10 requests forces reconnects (got {} connections)",
+        hstats.connections
+    );
+}
+
+// ---------------------------------------------------------------------------
+// /metrics golden format
+// ---------------------------------------------------------------------------
+
+/// The pinned `/metrics` text format: field names, order, and the
+/// comment header are stable (dashboards parse this), every value is a
+/// number, and counters are monotone across scrapes.
+#[test]
+fn metrics_text_format_is_pinned_and_counters_monotone() {
+    const GOLDEN: &[&str] = &[
+        "# mpq serve /metrics v1",
+        "mpq_http_connections_total",
+        "mpq_http_requests_admitted_total",
+        "mpq_http_requests_rejected_total",
+        "mpq_http_requests_answered_total",
+        "mpq_http_requests_failed_total",
+        "mpq_http_requests_aborted_total",
+        "mpq_http_bad_requests_total",
+        "mpq_http_metrics_scrapes_total",
+        "mpq_http_inflight_requests",
+        "mpq_engine_queue_samples",
+        "mpq_engine_requests_submitted_total",
+        "mpq_engine_requests_completed_total",
+        "mpq_engine_requests_failed_total",
+        "mpq_engine_samples_total",
+        "mpq_engine_batches_total",
+        "mpq_engine_batch_chunks_total",
+        "mpq_engine_batch_samples_total",
+        "mpq_engine_batch_occupancy_mean",
+        "mpq_engine_throughput_rps",
+        "mpq_engine_latency_seconds_mean",
+        "mpq_engine_latency_seconds_min",
+        "mpq_engine_latency_seconds_max",
+        "mpq_engine_latency_seconds{quantile=\"0.5\"}",
+        "mpq_engine_latency_seconds{quantile=\"0.95\"}",
+        "mpq_engine_latency_seconds{quantile=\"0.99\"}",
+        "mpq_engine_uptime_seconds",
+    ];
+    fn parse_scrape(text: &str) -> Vec<(String, f64)> {
+        text.lines()
+            .map(|line| {
+                if line.starts_with('#') {
+                    return (line.to_string(), 0.0);
+                }
+                let (name, value) = line
+                    .rsplit_once(' ')
+                    .unwrap_or_else(|| panic!("metrics line without value: '{line}'"));
+                let v: f64 = value
+                    .parse()
+                    .unwrap_or_else(|_| panic!("non-numeric metrics value: '{line}'"));
+                (name.to_string(), v)
+            })
+            .collect()
+    }
+    let (srv, addr) = default_server(2, KernelChoice::Packed);
+    let mut c = HttpClient::connect(&addr).unwrap();
+    for i in 0..4u64 {
+        let body = format!("{{\"index\":{i},\"samples\":2}}");
+        let resp = c.post("/infer", body.as_bytes()).unwrap();
+        assert_eq!(resp.status, 200);
+    }
+    let scrape1 = c.get("/metrics").unwrap();
+    assert_eq!(scrape1.status, 200);
+    assert!(scrape1
+        .header("content-type")
+        .is_some_and(|ct| ct.starts_with("text/plain")));
+    let m1 = parse_scrape(&scrape1.body_str());
+    let names: Vec<&str> = m1.iter().map(|(n, _)| n.as_str()).collect();
+    assert_eq!(
+        names, GOLDEN,
+        "/metrics field names/order changed — this format is pinned; \
+         dashboards parse it.  Only append new lines (and update GOLDEN)."
+    );
+    // The scrape accounts for the traffic so far.
+    let get = |m: &[(String, f64)], n: &str| {
+        m.iter().find(|(k, _)| k == n).map(|(_, v)| *v).unwrap()
+    };
+    assert_eq!(get(&m1, "mpq_http_requests_answered_total"), 4.0);
+    assert_eq!(get(&m1, "mpq_engine_requests_completed_total"), 4.0);
+    assert_eq!(get(&m1, "mpq_http_metrics_scrapes_total"), 1.0);
+    assert!(get(&m1, "mpq_engine_latency_seconds{quantile=\"0.5\"}") > 0.0);
+    assert!(
+        get(&m1, "mpq_engine_latency_seconds{quantile=\"0.99\"}")
+            >= get(&m1, "mpq_engine_latency_seconds{quantile=\"0.5\"}")
+    );
+    // More traffic, second scrape: counters are monotone.
+    for i in 0..3u64 {
+        let body = format!("{{\"index\":{},\"samples\":1}}", 100 + i);
+        assert_eq!(c.post("/infer", body.as_bytes()).unwrap().status, 200);
+    }
+    let m2 = parse_scrape(&c.get("/metrics").unwrap().body_str());
+    for (name, v1) in &m1 {
+        if name.ends_with("_total") {
+            let v2 = get(&m2, name);
+            assert!(
+                v2 >= *v1,
+                "counter {name} went backwards across scrapes: {v1} -> {v2}"
+            );
+        }
+    }
+    assert_eq!(get(&m2, "mpq_http_requests_answered_total"), 7.0);
+    assert_eq!(get(&m2, "mpq_http_metrics_scrapes_total"), 2.0);
+    srv.shutdown().unwrap();
+}
