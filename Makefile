@@ -7,15 +7,16 @@
 # crate, see rust/Cargo.toml) and skip themselves at runtime when
 # artifacts are absent.
 
-.PHONY: verify test build bench bench-quick packed-smoke exp-smoke serve-smoke http-smoke verify-pjrt artifacts clean
+.PHONY: verify test build bench bench-quick packed-smoke exp-smoke serve-smoke http-smoke degrade-smoke verify-pjrt artifacts clean
 
 # Tier-1: must pass in a clean checkout.  bench-quick, packed-smoke,
-# exp-smoke, serve-smoke and http-smoke ride along as smoke steps so the
-# bench binary (and its BENCH_hotpath.json emission), the packed-kernel
-# CLI path, the manifest-driven experiment path, and the serving engine
-# (in-process and over real loopback sockets) can never silently rot.
+# exp-smoke, serve-smoke, http-smoke and degrade-smoke ride along as
+# smoke steps so the bench binary (and its BENCH_hotpath.json emission),
+# the packed-kernel CLI path, the manifest-driven experiment path, the
+# serving engine (in-process and over real loopback sockets), and the
+# SLO-driven degradation loop can never silently rot.
 verify:
-	cargo build --release && cargo test -q && $(MAKE) bench-quick && $(MAKE) packed-smoke && $(MAKE) exp-smoke && $(MAKE) serve-smoke && $(MAKE) http-smoke
+	cargo build --release && cargo test -q && $(MAKE) bench-quick && $(MAKE) packed-smoke && $(MAKE) exp-smoke && $(MAKE) serve-smoke && $(MAKE) http-smoke && $(MAKE) degrade-smoke
 
 build:
 	cargo build --release
@@ -128,6 +129,36 @@ http-smoke:
 	@echo "http-smoke OK (socket loadgen + /metrics scrape)"
 	rm -rf $(HTTP_SMOKE_DIR)
 
+# End-to-end smoke of graceful degradation: sweep two budgets on the
+# hermetic sim backend so the registry records a real two-point
+# accuracy-cost frontier, then serve it with the sim-time spike drill
+# (`--degrade spike`) and a loopback front door whose /metrics the
+# binary scrapes before and after the drill.  The binary asserts >=1
+# downgrade + >=1 recovery, zero dropped requests, a monotone
+# mpq_ctl_swap_total, and the active-budget gauge matching the final
+# frontier level, exiting nonzero on any violation; the target gates on
+# its "degrade OK" and "ctl metrics OK" lines.  (Redirect instead of a
+# pipe so the exit status stays load-bearing.)
+DEGRADE_SMOKE_DIR := $(CURDIR)/.degrade-smoke-results
+degrade-smoke:
+	rm -rf $(DEGRADE_SMOKE_DIR)
+	@mkdir -p $(DEGRADE_SMOKE_DIR)
+	MPQ_RESULTS=$(DEGRADE_SMOKE_DIR) cargo run --release -q -p mpq -- sweep \
+	  --model sim_tiny --backend sim --base-steps 60 --methods eagl \
+	  --budgets 0.95,0.6 --seeds 1
+	MPQ_RESULTS=$(DEGRADE_SMOKE_DIR) cargo run --release -q -p mpq -- serve \
+	  --model sim_tiny --backend sim --base-steps 60 \
+	  --frontier-from $(DEGRADE_SMOKE_DIR)/sim_tiny/sweep.jsonl \
+	  --degrade spike --workers 2 --max-batch 8 --batch-timeout-ms 2 \
+	  --listen 127.0.0.1:0 > $(DEGRADE_SMOKE_DIR)/degrade.out
+	@cat $(DEGRADE_SMOKE_DIR)/degrade.out
+	@grep -q 'ctl metrics OK' $(DEGRADE_SMOKE_DIR)/degrade.out || { \
+	  echo "degrade-smoke: missing ctl metrics OK line"; exit 1; }
+	@grep -q 'degrade OK' $(DEGRADE_SMOKE_DIR)/degrade.out || { \
+	  echo "degrade-smoke: missing degrade OK line"; exit 1; }
+	@echo "degrade-smoke OK (spike -> degrade -> recover, ctl gauges consistent)"
+	rm -rf $(DEGRADE_SMOKE_DIR)
+
 # Full verification including the PJRT/AOT path (requires the vendored
 # `xla` dependency to be uncommented in rust/Cargo.toml and, for the
 # tests to run rather than skip, `make artifacts`).
@@ -141,4 +172,4 @@ artifacts:
 
 clean:
 	cargo clean
-	rm -rf results $(EXP_SMOKE_DIR) $(SERVE_SMOKE_DIR) $(PACKED_SMOKE_DIR) $(HTTP_SMOKE_DIR)
+	rm -rf results $(EXP_SMOKE_DIR) $(SERVE_SMOKE_DIR) $(PACKED_SMOKE_DIR) $(HTTP_SMOKE_DIR) $(DEGRADE_SMOKE_DIR)

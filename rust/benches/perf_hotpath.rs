@@ -234,6 +234,7 @@ fn main() -> mpq::Result<()> {
                     batch_timeout: std::time::Duration::from_millis(1),
                     force_per_request: false,
                     warmup: true,
+                    ..ServeConfig::default()
                 };
                 let engine = Engine::start(spawner.clone(), ck.clone(), bits.clone(), cfg)?;
                 let spec = LoadSpec {
@@ -293,6 +294,88 @@ fn main() -> mpq::Result<()> {
         }
     }
 
+    // -- config hot-swap latency ---------------------------------------------
+    // Wall time from just before `Engine::swap` to the first response
+    // served under the new epoch, with a backlog of old-epoch requests
+    // in flight — the availability cost of one controller decision
+    // (materialize off the hot path + atomic publish + drain the
+    // admitted backlog ahead of the probe).
+    {
+        use mpq::serve::{Engine, ServeConfig, Spawner};
+        let be = mpq::backend::SimBackend::new("sim_skew")?;
+        let ck = be.init_checkpoint()?;
+        let graph = mpq::graph::Graph::from_manifest(&be.manifest().raw)?;
+        let bits_a = BitsConfig::uniform(&graph, 4).to_f32();
+        let mut lo = BitsConfig::uniform(&graph, 4);
+        for l in &graph.layers {
+            if l.fixed_bits.is_none() {
+                lo.bits[l.qindex] = 2;
+            }
+        }
+        let bits_b = lo.to_f32();
+        let data = Dataset::for_task(mpq::backend::Task::Cls, 7);
+        let spawner: Spawner = std::sync::Arc::new(|| {
+            Ok(Box::new(mpq::backend::SimBackend::new("sim_skew")?) as Box<dyn Backend>)
+        });
+        for &workers in &[1usize, 4] {
+            let engine = Engine::start(
+                spawner.clone(),
+                ck.clone(),
+                bits_a.clone(),
+                ServeConfig {
+                    workers,
+                    max_batch: 32,
+                    batch_timeout: std::time::Duration::from_millis(1),
+                    force_per_request: false,
+                    warmup: true,
+                    ..ServeConfig::default()
+                },
+            )?;
+            let mut durs: Vec<f64> = Vec::with_capacity(iters);
+            for it in 0..iters {
+                // Old-epoch backlog riding through the swap.
+                let background: mpq::Result<Vec<_>> = (0..16)
+                    .map(|j| {
+                        let (x, y) = data.batch(Split::Eval, (it * 16 + j) as u64, 1);
+                        engine.submit(x, y)
+                    })
+                    .collect();
+                let background = background?;
+                // Alternate targets so every iteration is a real config
+                // change (each swap bumps the epoch).
+                let to_bits = if it % 2 == 0 { &bits_b } else { &bits_a };
+                let (px, py) = data.batch(Split::Eval, 100_000 + it as u64, 1);
+                let t0 = std::time::Instant::now();
+                let epoch = engine.swap(ck.clone(), to_bits.clone(), 0.5, "swap-bench")?;
+                let probe = engine.submit(px, py)?.wait()?;
+                let dt = t0.elapsed().as_secs_f64();
+                mpq::ensure!(
+                    probe.epoch == epoch,
+                    "swap bench: probe served under epoch {} != {epoch}",
+                    probe.epoch
+                );
+                for t in background {
+                    t.wait()?;
+                }
+                durs.push(dt);
+            }
+            engine.drain()?;
+            durs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let q = |f: f64| durs[((f * durs.len() as f64).ceil() as usize).clamp(1, durs.len()) - 1];
+            let m = Measurement {
+                name: format!("serve sim_skew swap latency w={workers}"),
+                iters: durs.len(),
+                mean_s: durs.iter().sum::<f64>() / durs.len() as f64,
+                std_s: 0.0,
+                p50_s: q(0.50),
+                p95_s: q(0.95),
+                p99_s: q(0.99),
+                min_s: durs[0],
+            };
+            note(&mut sink, &baseline, m);
+        }
+    }
+
     // -- serving over real loopback sockets ----------------------------------
     // The same engine behind the HTTP/1.1 front door (mpq serve --listen),
     // driven by the socket loadgen: these rows isolate the network +
@@ -322,6 +405,7 @@ fn main() -> mpq::Result<()> {
                 batch_timeout: std::time::Duration::from_millis(1),
                 force_per_request: false,
                 warmup: true,
+                ..ServeConfig::default()
             };
             let engine = Engine::start(spawner, ck.clone(), bits.clone(), cfg)?;
             let server = HttpServer::start(engine, data.clone(), HttpConfig::default())?;

@@ -527,6 +527,42 @@ impl<B: Backend> Coordinator<B> {
         Ok((rec, bits))
     }
 
+    /// Resolve the store's whole accuracy/cost frontier for this model
+    /// into servable configs — the `mpq serve --frontier-from` path.
+    ///
+    /// One entry per distinct finite stored budget `>= floor`, sorted by
+    /// budget **descending** (level 0 = most expensive = most accurate),
+    /// each resolved like [`bits_from_store`](Self::bits_from_store): the
+    /// best-metric record at that budget, knapsack selection re-derived
+    /// from its method.  The SLO controller walks *down* this list under
+    /// overload and back *up* when calm.
+    pub fn frontier_from_store(
+        &mut self,
+        store: &ResultStore,
+        floor: f64,
+    ) -> crate::Result<Vec<(RunRecord, BitsConfig)>> {
+        let mut budgets: Vec<f64> = store
+            .records()
+            .iter()
+            .filter(|r| r.model == self.model && r.budget_frac.is_finite())
+            .map(|r| r.budget_frac)
+            .filter(|&b| b >= floor)
+            .collect();
+        budgets.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        budgets.dedup_by(|a, b| a.to_bits() == b.to_bits());
+        crate::ensure!(
+            !budgets.is_empty(),
+            "no stored budgets >= {floor} for model '{}' in {} — run `mpq sweep` first",
+            self.model,
+            store.path().display()
+        );
+        let mut out = Vec::with_capacity(budgets.len());
+        for b in budgets {
+            out.push(self.bits_from_store(store, b)?);
+        }
+        Ok(out)
+    }
+
     /// Run one (method, budget, seed) experiment end to end.
     pub fn run_one(
         &mut self,

@@ -30,6 +30,7 @@
 //! hermetic pure-Rust sim backend (models `sim_tiny`, `sim_skew`).
 
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -174,6 +175,23 @@ fn validate_flags(args: &Args) -> mpq::Result<()> {
             "queue-cap",
             "max-inflight",
             "keepalive-max",
+            "frontier-from",
+            "degrade",
+            "slo-p99-ms",
+            "slo-recover",
+            "queue-high",
+            "queue-low",
+            "cooldown-ticks",
+            "floor-budget",
+            "ctl-tick-ms",
+            "capacity",
+            "window-ticks",
+            "fault-seed",
+            "fault-stall-every",
+            "fault-stall-ms",
+            "fault-stall-work",
+            "fault-spike-every",
+            "fault-spike-work",
         ],
         "infer" => &["method", "budget", "bits-from", "seed", "samples", "index"],
         // Manifest-driven: tuning knobs belong in the manifest, so only
@@ -247,6 +265,29 @@ subcommands:
               --target http://HOST:PORT   pure socket client: drive a remote
                               front door with the same deterministic request
                               stream (default --mode open)
+              --frontier-from sweep.jsonl   load the sweep's whole accuracy/
+                              cost frontier as pre-materialized hot-swap
+                              targets (level 0 = highest budget; serving
+                              starts there); with --listen this adds
+                              POST /swap and an SLO controller thread that
+                              walks the frontier from windowed p99 + queue
+                              depth; thresholds: [--slo-p99-ms F]
+                              [--slo-recover F] [--queue-high N]
+                              [--queue-low N] [--cooldown-ticks N]
+                              [--floor-budget F] [--ctl-tick-ms F]
+              --degrade quiet|ramp|spike|TICKSxRATE,..   deterministic
+                              sim-time degradation drill over the loaded
+                              frontier (needs --frontier-from with >= 2
+                              levels): seeded phase profile + optional
+                              fault plan drive overload -> downgrade ->
+                              recover; the real engine serves and hot-swaps
+                              while the decision log derives only from the
+                              sim queue model, so it is byte-identical
+                              across reruns, --workers, and --kernel;
+                              [--capacity F] [--window-ticks N] plus fault
+                              flags [--fault-stall-every N] [--fault-stall-ms F]
+                              [--fault-stall-work F] [--fault-spike-every N]
+                              [--fault-spike-work F] [--fault-seed X]
   infer       --model M [--budget F | --bits-from ...] [--samples N] [--index I]
               one-shot inference (a direct eval_step; bit-identical across
               kernels)
@@ -552,6 +593,73 @@ fn serve_checkpoint(
     Ok(state.params)
 }
 
+/// `--frontier-from`: resolve every stored budget for this model into a
+/// fully materialized hot-swap target (level 0 = highest budget).
+fn build_frontier(
+    args: &Args,
+    co: &mut Coordinator<Box<dyn Backend>>,
+    path: &str,
+) -> mpq::Result<Vec<serve::FrontierStep>> {
+    let store = ResultStore::open(Path::new(path))?;
+    let floor = args.f64("floor-budget", 0.0)?;
+    let resolved = co.frontier_from_store(&store, floor)?;
+    let mut steps = Vec::with_capacity(resolved.len());
+    for (rec, bits) in resolved {
+        let ckpt = serve_checkpoint(args, co, &bits)?;
+        steps.push(serve::FrontierStep {
+            budget_frac: rec.budget_frac,
+            method: rec.method.clone(),
+            metric: rec.metric,
+            gbops: mpq::quant::gbops(&co.graph, &bits),
+            ckpt,
+            bits: bits.to_f32(),
+        });
+    }
+    Ok(steps)
+}
+
+/// Fault-injection plan from the `--fault-*` flags; `None` (no plan)
+/// unless at least one `--fault-*-every` period is set.
+fn fault_from_args(args: &Args) -> mpq::Result<Option<serve::FaultPlan>> {
+    let stall_every = args.u64("fault-stall-every", 0)?;
+    let spike_every = args.u64("fault-spike-every", 0)?;
+    if stall_every == 0 && spike_every == 0 {
+        return Ok(None);
+    }
+    let stall_ms = args.f64("fault-stall-ms", 2.0)?;
+    mpq::ensure!(
+        stall_ms.is_finite() && stall_ms >= 0.0,
+        "--fault-stall-ms expects a non-negative number, got {stall_ms}"
+    );
+    Ok(Some(serve::FaultPlan {
+        seed: args.u64("fault-seed", 1)?,
+        stall_every,
+        stall_wall: Duration::from_secs_f64(stall_ms / 1e3),
+        stall_work: args.f64("fault-stall-work", 16.0)?,
+        spike_every,
+        spike_work: args.f64("fault-spike-work", 12.0)?,
+    }))
+}
+
+/// Controller thresholds from the `--slo-*`/`--queue-*` flags.  In sim
+/// mode (`--degrade`) latency is measured in ticks, 1 tick ≙ 1 ms of the
+/// flag; live mode converts to seconds.
+fn thresholds_from_args(args: &Args, sim_ticks: bool) -> mpq::Result<serve::SloThresholds> {
+    let slo_ms = args.f64("slo-p99-ms", 6.0)?;
+    mpq::ensure!(
+        slo_ms.is_finite() && slo_ms > 0.0,
+        "--slo-p99-ms expects a positive number, got {slo_ms}"
+    );
+    Ok(serve::SloThresholds {
+        slo_p99: if sim_ticks { slo_ms } else { slo_ms / 1e3 },
+        recover_frac: args.f64("slo-recover", 0.5)?,
+        queue_high: args.usize("queue-high", 64)?,
+        queue_low: args.usize("queue-low", 8)?,
+        cooldown_ticks: args.u64("cooldown-ticks", 3)? as u32,
+        floor_budget: args.f64("floor-budget", 0.0)?,
+    })
+}
+
 /// `mpq serve`: start the batched inference engine for the resolved
 /// (checkpoint, bits) pair and drive it with the deterministic loadgen.
 fn cmd_serve(args: &Args) -> mpq::Result<()> {
@@ -567,8 +675,47 @@ fn cmd_serve(args: &Args) -> mpq::Result<()> {
     // that produced the checkpoint and bits.
     let (mut co, kind, kernel) = coordinator_kernel(args, "packed")?;
     let model = co.model.clone();
-    let bits = serve_bits(args, &mut co)?;
-    let ck = serve_checkpoint(args, &mut co, &bits)?;
+    // The adaptive path: load the sweep's whole frontier as swap targets
+    // and start serving its most accurate level.
+    let frontier: Option<Vec<serve::FrontierStep>> = match args.opt_str("frontier-from") {
+        Some(path) => {
+            mpq::ensure!(
+                args.opt_str("bits-from").is_none() && args.opt_str("budget").is_none(),
+                "--frontier-from replaces --bits-from/--budget: serving starts at frontier level 0"
+            );
+            let steps = build_frontier(args, &mut co, path)?;
+            println!("frontier from {path}: {} level(s) [{}, {} kernels]", steps.len(), kind.name(), kernel.name());
+            for (i, s) in steps.iter().enumerate() {
+                println!(
+                    "  level {i}: {:<14} metric {:.4}  {:.4} GBOPs",
+                    s.label(),
+                    s.metric,
+                    s.gbops
+                );
+            }
+            Some(steps)
+        }
+        None => None,
+    };
+    let (ck, bits_f32, init_budget, init_label) = match frontier.as_ref() {
+        Some(steps) => {
+            let s0 = &steps[0];
+            (s0.ckpt.clone(), s0.bits.clone(), s0.budget_frac, s0.label())
+        }
+        None => {
+            let bits = serve_bits(args, &mut co)?;
+            let ck = serve_checkpoint(args, &mut co, &bits)?;
+            println!(
+                "serving {model} [{}, {} kernels]: {} group(s) at 2-bit, compression {:.2}x, {:.4} GBOPs",
+                kind.name(),
+                kernel.name(),
+                bits.count_at(&co.graph, 2),
+                mpq::quant::compression_ratio(&co.graph, &bits),
+                mpq::quant::gbops(&co.graph, &bits)
+            );
+            (ck, bits.to_f32(), f64::NAN, "startup".to_string())
+        }
+    };
     let timeout_ms = args.f64("batch-timeout-ms", 1.0)?;
     mpq::ensure!(
         timeout_ms.is_finite() && timeout_ms >= 0.0,
@@ -580,18 +727,13 @@ fn cmd_serve(args: &Args) -> mpq::Result<()> {
         batch_timeout: Duration::from_secs_f64(timeout_ms / 1e3),
         force_per_request: args.bool("per-request"),
         warmup: true,
+        fault: fault_from_args(args)?,
+        initial_budget: init_budget,
+        initial_label: init_label,
     };
     let model_s = model.clone();
     let spawner: serve::Spawner = Arc::new(move || backend::open_with(kind, &model_s, kernel));
-    println!(
-        "serving {model} [{}, {} kernels]: {} group(s) at 2-bit, compression {:.2}x, {:.4} GBOPs",
-        kind.name(),
-        kernel.name(),
-        bits.count_at(&co.graph, 2),
-        mpq::quant::compression_ratio(&co.graph, &bits),
-        mpq::quant::gbops(&co.graph, &bits)
-    );
-    let engine = serve::Engine::start(spawner, ck, bits.to_f32(), cfg.clone())?;
+    let engine = serve::Engine::start(spawner, ck, bits_f32, cfg.clone())?;
     println!(
         "engine: {} worker(s), max-batch {}, timeout {:.1}ms, {} batching",
         cfg.workers,
@@ -599,6 +741,12 @@ fn cmd_serve(args: &Args) -> mpq::Result<()> {
         cfg.batch_timeout.as_secs_f64() * 1e3,
         if engine.fused() { "fused" } else { "per-request" }
     );
+    // Deterministic degradation drill: sim-time controller + real engine.
+    if let Some(profile) = args.opt_str("degrade") {
+        let steps = frontier
+            .ok_or_else(|| mpq::err!("--degrade needs --frontier-from sweep.jsonl"))?;
+        return cmd_degrade(args, engine, co.data.clone(), steps, profile);
+    }
     let mode = match args.str("mode", "closed").as_str() {
         "closed" => serve::LoadMode::Closed {
             concurrency: args.usize("concurrency", 8)?,
@@ -618,8 +766,13 @@ fn cmd_serve(args: &Args) -> mpq::Result<()> {
     // engine and self-drive it with the same loadgen over real loopback
     // sockets (this is what `make http-smoke` runs).
     if let Some(listen) = args.opt_str("listen") {
-        return cmd_serve_listen(args, engine, co.data.clone(), &spec, listen);
+        return cmd_serve_listen(args, engine, co.data.clone(), &spec, listen, frontier);
     }
+    mpq::ensure!(
+        frontier.is_none(),
+        "--frontier-from without --listen/--degrade has no controller to drive it; \
+         add --listen ADDR or --degrade PROFILE"
+    );
     // run() verifies the serving invariants: every request answered
     // exactly once, response ids monotone and contiguous.
     let load = serve::loadgen::run(&engine, &co.data, &spec)?;
@@ -652,6 +805,7 @@ fn cmd_serve_listen(
     data: mpq::data::Dataset,
     spec: &serve::LoadSpec,
     listen: &str,
+    frontier: Option<Vec<serve::FrontierStep>>,
 ) -> mpq::Result<()> {
     let hcfg = serve::HttpConfig {
         addr: listen.trim_start_matches("http://").to_string(),
@@ -660,10 +814,65 @@ fn cmd_serve_listen(
         max_requests_per_conn: args.usize("keepalive-max", 4096)?,
         ..serve::HttpConfig::default()
     };
-    let server = serve::HttpServer::start(engine, data, hcfg)?;
+    let swaps = frontier.map(|steps| Arc::new(serve::SwapRegistry { steps }));
+    let server = serve::HttpServer::start_with(engine, data, hcfg, swaps.clone())?;
     let addr = server.local_addr().to_string();
-    println!("listening on http://{addr} (POST /infer, GET /metrics, GET /healthz)");
+    println!("listening on http://{addr} (POST /infer, POST /swap, GET /metrics, GET /healthz)");
+    // SLO controller: tick against the live engine while the loadgen
+    // runs, hot-swapping along the frontier when the windowed p99 or
+    // queue depth trips the thresholds.  Stopped (and its engine handle
+    // dropped) before shutdown, which asserts sole engine ownership.
+    let ctl = match swaps.as_ref() {
+        Some(reg) => {
+            let th = thresholds_from_args(args, false)?;
+            let tick_ms = args.f64("ctl-tick-ms", 20.0)?;
+            mpq::ensure!(
+                tick_ms.is_finite() && tick_ms > 0.0,
+                "--ctl-tick-ms expects a positive number, got {tick_ms}"
+            );
+            let steps = Arc::new(reg.steps.clone());
+            let eng = server.engine_handle();
+            let stop = Arc::new(AtomicBool::new(false));
+            let stop2 = Arc::clone(&stop);
+            let handle = std::thread::Builder::new()
+                .name("mpq-ctl".to_string())
+                .spawn(move || -> mpq::Result<serve::Controller> {
+                    let mut c = serve::Controller::new(th, steps)?;
+                    while !stop2.load(Ordering::SeqCst) {
+                        c.tick(&eng)?;
+                        std::thread::sleep(Duration::from_secs_f64(tick_ms / 1e3));
+                    }
+                    Ok(c)
+                })
+                .map_err(|e| mpq::err!("serve: spawn controller: {e}"))?;
+            println!(
+                "controller: tick {:.0}ms, slo p99 {:.1}ms, queue high/low {}/{}, cooldown {}",
+                tick_ms,
+                th.slo_p99 * 1e3,
+                th.queue_high,
+                th.queue_low,
+                th.cooldown_ticks
+            );
+            Some((stop, handle))
+        }
+        None => None,
+    };
+    drop(swaps);
     let load = serve::loadgen::run_http(&addr, spec)?;
+    if let Some((stop, handle)) = ctl {
+        stop.store(true, Ordering::SeqCst);
+        let c = handle
+            .join()
+            .map_err(|_| mpq::err!("serve: controller thread panicked"))??;
+        println!(
+            "controller: {} tick(s), {} down, {} up, final level {} ({})",
+            c.log.len(),
+            c.swaps_down,
+            c.swaps_up,
+            c.state.level,
+            c.frontier[c.state.level].label()
+        );
+    }
     // One real scrape: /metrics must parse and account for the traffic.
     let scrape = serve::http::client::HttpClient::connect(&addr)?.get("/metrics")?;
     mpq::ensure!(scrape.status == 200, "GET /metrics: HTTP {}", scrape.status);
@@ -706,6 +915,140 @@ fn cmd_serve_listen(
         load.responses.len()
     );
     Ok(())
+}
+
+/// One `/metrics` scrape reduced to the controller gauges:
+/// `(epoch, swap_total, active_budget)`.
+fn scrape_ctl(addr: &str) -> mpq::Result<(u64, u64, f64)> {
+    let resp = serve::http::client::HttpClient::connect(addr)?.get("/metrics")?;
+    mpq::ensure!(resp.status == 200, "GET /metrics: HTTP {}", resp.status);
+    let text = resp.body_str();
+    let field = |name: &str| -> mpq::Result<f64> {
+        text.lines()
+            .find_map(|l| l.strip_prefix(name).and_then(|v| v.trim().parse::<f64>().ok()))
+            .ok_or_else(|| mpq::err!("/metrics missing '{name}'"))
+    };
+    Ok((
+        field("mpq_ctl_epoch ")? as u64,
+        field("mpq_ctl_swap_total ")? as u64,
+        field("mpq_ctl_active_budget ")?,
+    ))
+}
+
+/// Shared tail of both `--degrade` paths: print the swap decisions and
+/// gate on the drill actually exercising both directions.
+fn print_degrade(out: &serve::DegradeOutcome) -> mpq::Result<()> {
+    for line in out.log_text.lines() {
+        if line.contains(" down:") || line.contains(" up:") {
+            println!("  {line}");
+        }
+    }
+    mpq::ensure!(
+        out.swaps_down >= 1,
+        "degrade drill produced no downgrade — raise the load profile or lower --capacity"
+    );
+    mpq::ensure!(
+        out.swaps_up >= 1,
+        "degrade drill never recovered — extend the profile's quiet tail"
+    );
+    println!(
+        "degrade OK: {} request(s), {} swap(s) down, {} up, {} epoch(s), zero dropped",
+        out.requests,
+        out.swaps_down,
+        out.swaps_up,
+        out.epoch_levels.len()
+    );
+    Ok(())
+}
+
+/// `mpq serve --degrade PROFILE`: deterministic "overload → degrade →
+/// recover" drill.  The sim-time queue model paces the controller (so the
+/// decision log is byte-identical across reruns, `--workers`, and
+/// `--kernel`) while the real engine serves the identical request stream
+/// and hot-swaps on every decision.  With `--listen` a front door runs
+/// alongside purely so `/metrics` can be scraped for the controller
+/// gauges; `make degrade-smoke` gates on the "degrade OK" and
+/// "ctl metrics OK" lines.
+fn cmd_degrade(
+    args: &Args,
+    engine: serve::Engine,
+    data: mpq::data::Dataset,
+    steps: Vec<serve::FrontierStep>,
+    profile: &str,
+) -> mpq::Result<()> {
+    mpq::ensure!(
+        steps.len() >= 2,
+        "--degrade needs a frontier with at least 2 levels to walk, got {}",
+        steps.len()
+    );
+    let mut dcfg = serve::DegradeConfig::new(serve::SimProfile::named(profile)?);
+    dcfg.thresholds = thresholds_from_args(args, true)?;
+    dcfg.fault = fault_from_args(args)?.unwrap_or_else(serve::FaultPlan::none);
+    dcfg.seed = args.u64("loadgen-seed", 42)?;
+    dcfg.max_request_samples = args.usize("max-request", 4)?;
+    dcfg.capacity_per_tick = args.f64("capacity", 8.0)?;
+    dcfg.window_ticks = args.u64("window-ticks", 8)?;
+    mpq::ensure!(
+        dcfg.capacity_per_tick > 0.0,
+        "--capacity expects a positive number, got {}",
+        dcfg.capacity_per_tick
+    );
+    println!(
+        "degrade drill: profile '{}' ({} tick(s)), {} frontier level(s), capacity {}/tick",
+        dcfg.profile.name,
+        dcfg.profile.arrivals_per_tick().len(),
+        steps.len(),
+        dcfg.capacity_per_tick
+    );
+    let Some(listen) = args.opt_str("listen") else {
+        let out = serve::run_degrade(&engine, &data, &steps, &dcfg)?;
+        engine.drain()?;
+        return print_degrade(&out);
+    };
+    // Front door alongside the drill: the controller gauges must be
+    // visible over the socket and the swap counter monotone.
+    let hcfg = serve::HttpConfig {
+        addr: listen.trim_start_matches("http://").to_string(),
+        ..serve::HttpConfig::default()
+    };
+    let swaps = Arc::new(serve::SwapRegistry { steps });
+    let server =
+        serve::HttpServer::start_with(engine, data.clone(), hcfg, Some(Arc::clone(&swaps)))?;
+    let addr = server.local_addr().to_string();
+    let before = scrape_ctl(&addr)?;
+    mpq::ensure!(
+        before == (0, 0, swaps.steps[0].budget_frac),
+        "ctl metrics: expected fresh gauges (epoch 0, swaps 0, budget {}), got {:?}",
+        swaps.steps[0].budget_frac,
+        before
+    );
+    let eng = server.engine_handle();
+    let out = serve::run_degrade(&eng, &data, &swaps.steps, &dcfg)?;
+    drop(eng);
+    let after = scrape_ctl(&addr)?;
+    let swaps_total = (out.swaps_down + out.swaps_up) as u64;
+    mpq::ensure!(
+        after.1 >= before.1 && after.1 == swaps_total,
+        "ctl metrics: swap_total moved {} -> {}, expected {swaps_total}",
+        before.1,
+        after.1
+    );
+    let final_level = *out.epoch_levels.last().unwrap_or(&0);
+    mpq::ensure!(
+        after.0 == out.epoch_levels.len() as u64 - 1
+            && after.2.to_bits() == swaps.steps[final_level].budget_frac.to_bits(),
+        "ctl metrics: epoch {} budget {} disagree with the drill's final epoch {} level {}",
+        after.0,
+        after.2,
+        out.epoch_levels.len() - 1,
+        final_level
+    );
+    println!(
+        "ctl metrics OK: swap_total {} -> {} (monotone), active budget {:.2}",
+        before.1, after.1, after.2
+    );
+    server.shutdown()?;
+    print_degrade(&out)
 }
 
 /// `mpq serve --target http://HOST:PORT`: pure socket client — drive a

@@ -300,6 +300,9 @@ pub fn serve_table(snap: &MetricsSnapshot, load: &LoadReport) -> String {
             f64::NAN
         }
     );
+    if load.retried > 0 {
+        s += &format!("retries    {:>8} (503 sheds retried after backoff)\n", load.retried);
+    }
     if load.mean_accuracy.is_finite() {
         s += &format!("accuracy   {:>8.4} (sample-weighted)\n", load.mean_accuracy);
     }

@@ -38,6 +38,7 @@ use std::time::{Duration, Instant};
 use crate::kernels::gemm::softmax_ce;
 use crate::tensor::Tensor;
 
+use super::engine::EpochState;
 use super::metrics::Metrics;
 
 /// One served response.  `loss`/`evalout` carry exactly what a direct
@@ -51,6 +52,10 @@ pub struct Response {
     pub evalout: Tensor,
     /// Submit→completion latency as observed by the engine.
     pub latency_s: f64,
+    /// Serving epoch whose (checkpoint, bits) produced these outputs —
+    /// the epoch active when the request was admitted (see
+    /// [`super::engine::EpochState`]).
+    pub epoch: u64,
 }
 
 impl Response {
@@ -125,12 +130,17 @@ struct PendingState {
 }
 
 /// One in-flight request: immutable inputs plus the reassembly state.
+/// The request pins the [`EpochState`] that admitted it, so a hot-swap
+/// cannot retire a config while batches built on it are still in flight.
 pub(crate) struct Pending {
     pub id: u64,
     pub x: Tensor,
     pub y: Tensor,
     pub samples: usize,
     pub submitted: Instant,
+    /// The serving config active at admission; every chunk of this
+    /// request executes against it (never the post-swap one).
+    pub epoch_state: Arc<EpochState>,
     total_chunks: usize,
     state: Mutex<PendingState>,
     promise: Arc<Promise>,
@@ -144,6 +154,7 @@ impl Pending {
         y: Tensor,
         samples: usize,
         total_chunks: usize,
+        epoch_state: Arc<EpochState>,
         metrics: Arc<Metrics>,
     ) -> Pending {
         Pending {
@@ -152,6 +163,7 @@ impl Pending {
             y,
             samples,
             submitted: Instant::now(),
+            epoch_state,
             total_chunks,
             state: Mutex::new(PendingState {
                 logits: Vec::new(),
@@ -162,6 +174,11 @@ impl Pending {
             promise: Arc::new(Promise::new()),
             metrics,
         }
+    }
+
+    /// The serving epoch this request was admitted under.
+    pub fn epoch(&self) -> u64 {
+        self.epoch_state.epoch
     }
 
     pub fn ticket(&self) -> Ticket {
@@ -221,6 +238,7 @@ impl Pending {
             // Same shape/content as the sim backend's eval_step evalout.
             evalout: Tensor::from_f32(&[], vec![correct as f32]),
             latency_s: self.submitted.elapsed().as_secs_f64(),
+            epoch: self.epoch(),
         };
         self.finish(&mut st, Ok(resp));
     }
@@ -237,6 +255,7 @@ impl Pending {
             loss,
             evalout,
             latency_s: self.submitted.elapsed().as_secs_f64(),
+            epoch: self.epoch(),
         };
         self.finish(&mut st, Ok(resp));
     }
@@ -274,6 +293,11 @@ pub(crate) enum NextBatch {
 
 /// The shared submission queue with the size/deadline closing policy.
 /// Guarded by one engine-level mutex; everything here is O(chunk count).
+///
+/// The queue also owns the **active serving epoch**: admission captures
+/// `active` under the same lock that orders request ids, and a hot-swap
+/// replaces it under that lock too, so "which config admitted request
+/// id=k" is a total order with no torn reads and no second lock.
 pub(crate) struct BatchQueue {
     queue: VecDeque<ChunkJob>,
     queued_samples: usize,
@@ -281,11 +305,14 @@ pub(crate) struct BatchQueue {
     pub timeout: Duration,
     pub draining: bool,
     pub fatal: Option<String>,
+    /// Config new submissions are admitted under (see
+    /// [`super::engine::Engine::swap`]).
+    pub active: Arc<EpochState>,
     next_id: u64,
 }
 
 impl BatchQueue {
-    pub fn new(max_batch: usize, timeout: Duration) -> BatchQueue {
+    pub fn new(max_batch: usize, timeout: Duration, active: Arc<EpochState>) -> BatchQueue {
         BatchQueue {
             queue: VecDeque::new(),
             queued_samples: 0,
@@ -293,6 +320,7 @@ impl BatchQueue {
             timeout,
             draining: false,
             fatal: None,
+            active,
             next_id: 0,
         }
     }
@@ -354,6 +382,12 @@ impl BatchQueue {
     /// caller sleeps until the deadline.  Chunks are popped FIFO while
     /// they fit (a whole-request chunk larger than `max_batch` — the
     /// per-request fallback mode — rides alone).
+    ///
+    /// A batch never spans a serving-epoch boundary: a fused forward runs
+    /// one (checkpoint, bits) pair, so mixing admissions from before and
+    /// after a hot-swap would answer some requests with the wrong config.
+    /// Coalescing stops at the first chunk whose epoch differs from the
+    /// batch head's (FIFO order keeps epochs contiguous in the queue).
     pub fn next_batch(&mut self, now: Instant) -> NextBatch {
         let Some(front) = self.queue.front() else {
             return NextBatch::Idle;
@@ -364,10 +398,11 @@ impl BatchQueue {
             return NextBatch::Wait(deadline);
         }
         let first = self.queue.pop_front().unwrap();
+        let epoch = first.pending.epoch();
         let mut total = first.len;
         let mut batch = vec![first];
         while let Some(next) = self.queue.front() {
-            if total + next.len > self.max_batch {
+            if total + next.len > self.max_batch || next.pending.epoch() != epoch {
                 break;
             }
             total += next.len;
@@ -388,15 +423,44 @@ impl BatchQueue {
 mod tests {
     use super::*;
 
-    fn pending(id: u64, samples: usize, total_chunks: usize) -> Arc<Pending> {
+    use crate::ckpt::Checkpoint;
+
+    fn epoch_state(epoch: u64) -> Arc<EpochState> {
+        Arc::new(EpochState {
+            epoch,
+            ckpt: Checkpoint::new(vec![], vec![]),
+            bits: vec![],
+            shared_exec: None,
+            budget_frac: f64::NAN,
+            label: format!("test-{epoch}"),
+        })
+    }
+
+    fn queue(max_batch: usize, timeout: Duration) -> BatchQueue {
+        BatchQueue::new(max_batch, timeout, epoch_state(0))
+    }
+
+    fn pending_at(id: u64, samples: usize, total_chunks: usize, epoch: u64) -> Arc<Pending> {
         let x = Tensor::zeros(&[samples, 2]);
         let y = Tensor::zeros_i32(&[samples]);
-        Arc::new(Pending::new(id, x, y, samples, total_chunks, Arc::new(Metrics::new())))
+        Arc::new(Pending::new(
+            id,
+            x,
+            y,
+            samples,
+            total_chunks,
+            epoch_state(epoch),
+            Arc::new(Metrics::new()),
+        ))
+    }
+
+    fn pending(id: u64, samples: usize, total_chunks: usize) -> Arc<Pending> {
+        pending_at(id, samples, total_chunks, 0)
     }
 
     #[test]
     fn splits_into_max_batch_chunks_with_contiguous_offsets() {
-        let mut q = BatchQueue::new(4, Duration::from_millis(10));
+        let mut q = queue(4, Duration::from_millis(10));
         assert_eq!(q.chunks_for(9, true), 3);
         assert_eq!(q.chunks_for(9, false), 1);
         let p = pending(0, 9, 3);
@@ -420,7 +484,7 @@ mod tests {
 
     #[test]
     fn size_trigger_fills_up_to_max_batch() {
-        let mut q = BatchQueue::new(8, Duration::from_secs(10));
+        let mut q = queue(8, Duration::from_secs(10));
         for id in 0..4 {
             q.enqueue(&pending(id, 3, 1), true);
         }
@@ -435,7 +499,7 @@ mod tests {
 
     #[test]
     fn deadline_trigger_and_wait() {
-        let mut q = BatchQueue::new(64, Duration::from_millis(50));
+        let mut q = queue(64, Duration::from_millis(50));
         let p = pending(0, 2, 1);
         let t0 = p.submitted;
         q.enqueue(&p, true);
@@ -452,7 +516,7 @@ mod tests {
 
     #[test]
     fn draining_flushes_immediately_and_oversized_fallback_chunk_rides_alone() {
-        let mut q = BatchQueue::new(4, Duration::from_secs(10));
+        let mut q = queue(4, Duration::from_secs(10));
         q.enqueue(&pending(0, 9, 1), false); // per-request mode: no split
         q.enqueue(&pending(1, 2, 1), false);
         q.draining = true;
@@ -467,8 +531,29 @@ mod tests {
     }
 
     #[test]
+    fn batches_never_mix_epochs() {
+        // Requests admitted under epoch 0 and epoch 1 are interleaved in
+        // the queue; coalescing must stop at the epoch boundary even
+        // though both chunks would fit in one batch.
+        let mut q = queue(8, Duration::from_secs(10));
+        q.enqueue(&pending_at(0, 2, 1, 0), true);
+        q.enqueue(&pending_at(1, 2, 1, 1), true);
+        q.enqueue(&pending_at(2, 2, 1, 1), true);
+        q.draining = true; // flush immediately regardless of deadline
+        let NextBatch::Ready(b) = q.next_batch(Instant::now()) else {
+            panic!("draining must flush")
+        };
+        assert_eq!(b.len(), 1, "epoch-0 chunk must ride alone");
+        assert_eq!(b[0].pending.epoch(), 0);
+        let NextBatch::Ready(b) = q.next_batch(Instant::now()) else { panic!() };
+        assert_eq!(b.len(), 2, "both epoch-1 chunks coalesce");
+        assert!(b.iter().all(|c| c.pending.epoch() == 1));
+        assert!(q.is_empty());
+    }
+
+    #[test]
     fn ids_are_strictly_increasing() {
-        let mut q = BatchQueue::new(4, Duration::from_millis(1));
+        let mut q = queue(4, Duration::from_millis(1));
         assert_eq!((q.alloc_id(), q.alloc_id(), q.alloc_id()), (0, 1, 2));
     }
 
@@ -477,7 +562,7 @@ mod tests {
         // 3 samples, 2 classes, reassembled from two chunks out of order.
         let metrics = Arc::new(Metrics::new());
         let y = Tensor::from_i32(&[3], vec![0, 1, 0]);
-        let p = Pending::new(7, Tensor::zeros(&[3, 1]), y.clone(), 3, 2, metrics);
+        let p = Pending::new(7, Tensor::zeros(&[3, 1]), y.clone(), 3, 2, epoch_state(0), metrics);
         let t = p.ticket();
         let logits = vec![2.0f32, -1.0, 0.5, 1.5, 3.0, 0.0];
         // Chunk 2 (sample 2) lands before chunk 1 (samples 0..2).
@@ -494,7 +579,7 @@ mod tests {
     #[test]
     fn out_of_range_label_fails_cleanly_instead_of_panicking() {
         let y = Tensor::from_i32(&[2], vec![0, 9]); // 9 >= 2 classes
-        let p = Pending::new(5, Tensor::zeros(&[2, 1]), y, 2, 1, Arc::new(Metrics::new()));
+        let p = Pending::new(5, Tensor::zeros(&[2, 1]), y, 2, 1, epoch_state(0), Arc::new(Metrics::new()));
         let t = p.ticket();
         p.complete_chunk(0, 2, 2, &[0.1, 0.2, 0.3, 0.4]);
         let err = t.wait().unwrap_err().to_string();

@@ -1,0 +1,743 @@
+//! SLO-driven precision controller: the paper's accuracy-throughput
+//! frontier made operational.
+//!
+//! The sweep store records, per model, the best (method, budget) points
+//! on the accuracy-throughput frontier.  This module closes the loop at
+//! serving time: a tick-driven controller watches windowed p99 latency
+//! and queue depth, and when the SLO is violated walks the live config
+//! **down** the frontier (cheaper bits — lower `gbops`, bounded accuracy
+//! loss, exactly the trade the frontier record quantifies) via
+//! [`super::Engine::swap`], then back **up** when pressure clears.
+//!
+//! ## Determinism
+//!
+//! Every decision is a pure function of `(window snapshot, controller
+//! state, thresholds)` — see [`decide`].  Two execution harnesses feed
+//! it:
+//!
+//! * [`run_degrade`] — **sim-time**: arrivals come from a seeded
+//!   [`SimProfile`] rate schedule, service from a queue model whose
+//!   capacity scales with the active level's recorded `gbops` (cheaper
+//!   bits genuinely serve faster, the paper's premise), and faults from a
+//!   [`FaultPlan`].  No wall clock enters the model, so the decision log
+//!   is **byte-identical** across reruns, worker counts, and kernels —
+//!   while the real engine runs alongside, answering every request under
+//!   its admission epoch, which the driver verifies.
+//! * [`Controller::tick`] — **live**: the same `decide` over windowed
+//!   p99 from the engine's histogram (bucket-delta quantiles) and the
+//!   real queue-depth gauge.  Wall-clock feeds make this one
+//!   non-deterministic by nature; the hermetic tests pin the sim path.
+//!
+//! ## Hysteresis (no flapping)
+//!
+//! Overload requires *strictly* exceeding a threshold (`p99 > slo` or
+//! `queue > queue_high`), recovery requires dropping *below* a distinct
+//! low watermark (`p99 < slo·recover_frac` and `queue <= queue_low`),
+//! and any swap starts a cooldown of N ticks during which the controller
+//! holds.  Load sitting exactly on a threshold therefore changes
+//! nothing — pinned by a unit test below.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::ckpt::Checkpoint;
+use crate::data::{Dataset, Split};
+
+use super::batcher::Response;
+use super::engine::Engine;
+use super::loadgen::{self, FaultPlan, LoadMode, LoadSpec};
+use super::metrics::quantile_from_counts;
+
+/// One step of the loaded frontier: a fully materialized serving config
+/// plus the sweep-store facts that justify choosing it.  Level 0 is the
+/// most accurate (highest budget); higher levels are cheaper.
+#[derive(Clone)]
+pub struct FrontierStep {
+    pub budget_frac: f64,
+    pub method: String,
+    /// Recorded eval metric of this config — the accuracy bound a
+    /// downgrade to this level inherits from the sweep.
+    pub metric: f64,
+    /// Recorded GBOPs of this config — the sim-time cost model, and the
+    /// reason stepping down helps at all.
+    pub gbops: f64,
+    pub ckpt: Checkpoint,
+    /// Per-layer precision vector (`BitsConfig::to_f32`).
+    pub bits: Vec<f32>,
+}
+
+impl FrontierStep {
+    /// Display tag used as the epoch label ("eagl@0.60").
+    pub fn label(&self) -> String {
+        format!("{}@{:.2}", self.method, self.budget_frac)
+    }
+}
+
+/// Controller thresholds.  All of them surface as CLI flags; in sim mode
+/// latencies are measured in ticks (1 tick ≙ 1 ms of the `--slo-p99-ms`
+/// flag), in live mode in seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct SloThresholds {
+    /// Windowed-p99 ceiling.  Strictly above ⇒ overload.
+    pub slo_p99: f64,
+    /// Recovery low watermark as a fraction of `slo_p99`: stepping back
+    /// up needs `p99 < slo_p99 * recover_frac` (hysteresis).
+    pub recover_frac: f64,
+    /// Queue-depth (samples) ceiling.  Strictly above ⇒ overload.
+    pub queue_high: usize,
+    /// Recovery needs queue depth at or below this.
+    pub queue_low: usize,
+    /// Ticks the controller holds after any swap before it may swap
+    /// again.
+    pub cooldown_ticks: u32,
+    /// Never step down to a frontier level whose budget is below this —
+    /// the operator's accuracy floor.
+    pub floor_budget: f64,
+}
+
+impl Default for SloThresholds {
+    fn default() -> SloThresholds {
+        SloThresholds {
+            slo_p99: 6.0,
+            recover_frac: 0.5,
+            queue_high: 64,
+            queue_low: 8,
+            cooldown_ticks: 3,
+            floor_budget: 0.0,
+        }
+    }
+}
+
+/// One tick's observation window.
+#[derive(Debug, Clone, Copy)]
+pub struct Window {
+    /// Windowed p99 (ticks in sim mode, seconds live); NaN when nothing
+    /// completed in the window — treated as "no latency signal", which
+    /// can never trip the overload test on its own.
+    pub p99: f64,
+    /// Queued samples not yet claimed by a worker.
+    pub queue_depth: usize,
+}
+
+/// Why the controller held this tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HoldReason {
+    /// A recent swap's cooldown is still running.
+    Cooldown,
+    /// Neither the overload nor the recovery predicate fired.
+    Steady,
+    /// Overloaded but already at the cheapest level the floor allows.
+    AtFloor,
+    /// Calm and already at the most accurate level.
+    AtTop,
+}
+
+/// The controller's verdict for one tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    Hold(HoldReason),
+    /// Step to a cheaper level (`to = from + 1`).
+    Down { from: usize, to: usize },
+    /// Step to a more accurate level (`to = from - 1`).
+    Up { from: usize, to: usize },
+}
+
+impl Decision {
+    /// The level a swap decision targets (None for holds).
+    pub fn target(&self) -> Option<usize> {
+        match self {
+            Decision::Hold(_) => None,
+            Decision::Down { to, .. } | Decision::Up { to, .. } => Some(*to),
+        }
+    }
+
+    /// Stable log token ("hold:steady", "down:0->1", "up:2->1").
+    pub fn render(&self) -> String {
+        match self {
+            Decision::Hold(HoldReason::Cooldown) => "hold:cooldown".to_string(),
+            Decision::Hold(HoldReason::Steady) => "hold:steady".to_string(),
+            Decision::Hold(HoldReason::AtFloor) => "hold:at-floor".to_string(),
+            Decision::Hold(HoldReason::AtTop) => "hold:at-top".to_string(),
+            Decision::Down { from, to } => format!("down:{from}->{to}"),
+            Decision::Up { from, to } => format!("up:{from}->{to}"),
+        }
+    }
+}
+
+/// Mutable controller state threaded between ticks.
+#[derive(Debug, Clone, Copy)]
+pub struct CtlState {
+    /// Active frontier level (index into the loaded frontier).
+    pub level: usize,
+    /// Remaining cooldown ticks (0 = may swap).
+    pub cooldown: u32,
+}
+
+impl CtlState {
+    pub fn new(level: usize) -> CtlState {
+        CtlState { level, cooldown: 0 }
+    }
+}
+
+/// The decision function — **pure** in (thresholds, frontier budgets,
+/// state, window), so a recorded decision log replays exactly.
+///
+/// Predicates (note the strict inequalities — the hysteresis band):
+///
+/// * overload ⇔ `p99 > slo_p99` (finite p99 only) **or**
+///   `queue_depth > queue_high`;
+/// * calm ⇔ `queue_depth <= queue_low` **and** (`p99` has no signal or
+///   `p99 < slo_p99 * recover_frac`).
+///
+/// Cooldown wins over everything; overload steps down one level unless
+/// the next level would break the budget floor; calm steps up one level
+/// unless already at the top; anything in between holds steady.
+pub fn decide(th: &SloThresholds, budgets: &[f64], st: &CtlState, w: &Window) -> Decision {
+    if st.cooldown > 0 {
+        return Decision::Hold(HoldReason::Cooldown);
+    }
+    let overload =
+        (w.p99.is_finite() && w.p99 > th.slo_p99) || w.queue_depth > th.queue_high;
+    if overload {
+        let to = st.level + 1;
+        if to >= budgets.len() || budgets[to] < th.floor_budget {
+            return Decision::Hold(HoldReason::AtFloor);
+        }
+        return Decision::Down { from: st.level, to };
+    }
+    let calm = w.queue_depth <= th.queue_low
+        && (!w.p99.is_finite() || w.p99 < th.slo_p99 * th.recover_frac);
+    if calm {
+        if st.level == 0 {
+            return Decision::Hold(HoldReason::AtTop);
+        }
+        return Decision::Up { from: st.level, to: st.level - 1 };
+    }
+    Decision::Hold(HoldReason::Steady)
+}
+
+/// Fold a decision into the controller state: swaps move the level and
+/// start the cooldown, holds run the cooldown out.
+pub fn apply(st: &mut CtlState, d: &Decision, cooldown_ticks: u32) {
+    match d {
+        Decision::Down { to, .. } | Decision::Up { to, .. } => {
+            st.level = *to;
+            st.cooldown = cooldown_ticks;
+        }
+        Decision::Hold(_) => st.cooldown = st.cooldown.saturating_sub(1),
+    }
+}
+
+/// One line of the decision log.
+#[derive(Debug, Clone)]
+pub struct DecisionRecord {
+    pub tick: u64,
+    pub queue_depth: usize,
+    /// Windowed p99 in the harness's units (ticks / seconds).
+    pub p99: f64,
+    pub decision: Decision,
+    /// Frontier level after the decision was applied.
+    pub level: usize,
+    /// Serving epoch after the decision was applied.
+    pub epoch: u64,
+}
+
+/// Render a decision log in its canonical byte-stable text form (the
+/// form the determinism tests compare across reruns, worker counts, and
+/// kernels).  f64 formatting in Rust is shortest-round-trip and the sim
+/// p99 is an exact integer rank statistic, so the text is reproducible
+/// byte for byte.
+pub fn render_log(log: &[DecisionRecord]) -> String {
+    let mut s = String::new();
+    for r in log {
+        s.push_str(&format!(
+            "tick={} q={} p99={:?} {} level={} epoch={}\n",
+            r.tick,
+            r.queue_depth,
+            r.p99,
+            r.decision.render(),
+            r.level,
+            r.epoch
+        ));
+    }
+    s
+}
+
+/// A seeded open-loop rate schedule in sim time: a sequence of phases,
+/// each `ticks` long at `rate` requests/tick (fractional rates carry a
+/// remainder accumulator across ticks).
+#[derive(Debug, Clone)]
+pub struct SimProfile {
+    pub name: String,
+    pub phases: Vec<(u64, f64)>,
+}
+
+impl SimProfile {
+    /// A named profile (`quiet`, `ramp`, `spike`) or a custom spec of
+    /// `TICKSxRATE` phases, comma-separated (e.g. `"20x1,10x8,40x1"`).
+    pub fn named(name: &str) -> crate::Result<SimProfile> {
+        let phases: Vec<(u64, f64)> = match name {
+            "quiet" => vec![(40, 1.0)],
+            "ramp" => vec![(10, 1.0), (10, 3.0), (10, 6.0), (15, 10.0), (45, 1.0)],
+            "spike" => vec![(10, 1.0), (18, 10.0), (52, 1.0)],
+            custom => {
+                let mut out = Vec::new();
+                for part in custom.split(',') {
+                    let (t, r) = part
+                        .split_once('x')
+                        .ok_or_else(|| {
+                            crate::err!(
+                                "bad profile '{custom}': want quiet|ramp|spike or \
+                                 TICKSxRATE[,TICKSxRATE...]"
+                            )
+                        })?;
+                    let ticks: u64 = t
+                        .trim()
+                        .parse()
+                        .map_err(|_| crate::err!("bad profile phase '{part}': ticks"))?;
+                    let rate: f64 = r
+                        .trim()
+                        .parse()
+                        .map_err(|_| crate::err!("bad profile phase '{part}': rate"))?;
+                    crate::ensure!(
+                        ticks > 0 && rate >= 0.0 && rate.is_finite(),
+                        "bad profile phase '{part}': need ticks > 0 and finite rate >= 0"
+                    );
+                    out.push((ticks, rate));
+                }
+                crate::ensure!(!out.is_empty(), "empty profile '{custom}'");
+                out
+            }
+        };
+        Ok(SimProfile { name: name.to_string(), phases })
+    }
+
+    /// Deterministic arrivals per tick over the whole profile (the
+    /// fractional-rate accumulator makes e.g. rate 0.5 arrive every
+    /// other tick).
+    pub fn arrivals_per_tick(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut acc = 0.0f64;
+        for &(ticks, rate) in &self.phases {
+            for _ in 0..ticks {
+                acc += rate;
+                let n = acc.floor();
+                acc -= n;
+                out.push(n as usize);
+            }
+        }
+        out
+    }
+}
+
+/// Configuration of one sim-time degradation run.
+#[derive(Clone)]
+pub struct DegradeConfig {
+    pub thresholds: SloThresholds,
+    pub profile: SimProfile,
+    pub fault: FaultPlan,
+    /// Loadgen seed: request sizes (and thereby per-request sim work)
+    /// come from the same seeded stream [`loadgen::request_sizes`] uses.
+    pub seed: u64,
+    pub max_request_samples: usize,
+    /// Work units (samples) the modeled server retires per tick at
+    /// frontier level 0; higher levels scale it by their recorded
+    /// `gbops` advantage.
+    pub capacity_per_tick: f64,
+    /// Completions within this many ticks feed the windowed p99.
+    pub window_ticks: u64,
+    /// Extra ticks past the profile to let the backlog drain and the
+    /// controller recover before the run stops.
+    pub drain_ticks_max: u64,
+}
+
+impl DegradeConfig {
+    pub fn new(profile: SimProfile) -> DegradeConfig {
+        DegradeConfig {
+            thresholds: SloThresholds::default(),
+            profile,
+            fault: FaultPlan::none(),
+            seed: 42,
+            max_request_samples: 4,
+            capacity_per_tick: 8.0,
+            window_ticks: 8,
+            drain_ticks_max: 200,
+        }
+    }
+}
+
+/// Outcome of a [`run_degrade`] run.
+pub struct DegradeOutcome {
+    pub log: Vec<DecisionRecord>,
+    /// [`render_log`] of `log` — the byte-comparable artifact.
+    pub log_text: String,
+    pub swaps_down: usize,
+    pub swaps_up: usize,
+    pub requests: usize,
+    /// Frontier level serving each epoch (`epoch_levels[e]` = level of
+    /// epoch `e`; epoch 0 is the startup config at level 0).
+    pub epoch_levels: Vec<usize>,
+    /// `(expected epoch, response)` per request, in stream order.  The
+    /// driver has already verified `response.epoch` matches.
+    pub responses: Vec<(u64, Response)>,
+}
+
+/// Drive a full "overload → degrade → recover" sequence: a sim-time
+/// queue model paces the controller deterministically while the **real**
+/// engine serves the identical request stream and hot-swaps on every
+/// controller decision.
+///
+/// The engine must be freshly started on `frontier[0]`'s config (epoch
+/// 0); the driver is its only submitter and swapper, so engine request
+/// ids equal stream indices and the epoch sequence is exactly the
+/// decision log's.
+///
+/// Zero-drop guarantee checked here: every submitted request is answered
+/// under precisely the epoch that admitted it.
+pub fn run_degrade(
+    engine: &Engine,
+    data: &Dataset,
+    frontier: &[FrontierStep],
+    cfg: &DegradeConfig,
+) -> crate::Result<DegradeOutcome> {
+    crate::ensure!(!frontier.is_empty(), "degrade: empty frontier");
+    crate::ensure!(
+        engine.current_epoch() == 0,
+        "degrade: engine must be freshly started on frontier level 0"
+    );
+    crate::ensure!(cfg.capacity_per_tick > 0.0, "degrade: capacity must be positive");
+    let budgets: Vec<f64> = frontier.iter().map(|s| s.budget_frac).collect();
+    let arrivals = cfg.profile.arrivals_per_tick();
+    let total: usize = arrivals.iter().sum();
+    crate::ensure!(total >= 1, "degrade: profile '{}' admits no requests", cfg.profile.name);
+    let spec = LoadSpec {
+        requests: total,
+        max_request_samples: cfg.max_request_samples,
+        seed: cfg.seed,
+        mode: LoadMode::Closed { concurrency: 1 },
+    };
+    let sizes = loadgen::request_sizes(&spec);
+
+    // Sim queue model: (arrival tick, remaining work) FIFO.  Work is the
+    // request's sample count plus any injected fault work; capacity per
+    // tick scales with the active level's recorded gbops advantage —
+    // cheaper bits retire the backlog faster, which is the entire point
+    // of stepping down the frontier.
+    let mut simq: VecDeque<(u64, f64)> = VecDeque::new();
+    let mut window: VecDeque<(u64, u64)> = VecDeque::new(); // (completion tick, latency)
+    let mut st = CtlState::new(0);
+    let mut cur_epoch = engine.current_epoch();
+    let mut epoch_levels = vec![0usize];
+    let mut tickets = Vec::with_capacity(total);
+    let mut log = Vec::new();
+    let (mut swaps_down, mut swaps_up) = (0usize, 0usize);
+    let mut next = 0usize; // next stream index to submit
+    let profile_ticks = arrivals.len() as u64;
+    let mut tick = 0u64;
+    loop {
+        // 1. Arrivals: submit to the real engine and enqueue in the model.
+        let n_arrive = if tick < profile_ticks { arrivals[tick as usize] } else { 0 };
+        for _ in 0..n_arrive {
+            let size = sizes[next];
+            let (x, y) = data.batch(Split::Eval, loadgen::request_index(next), size);
+            let t = engine.submit(x, y)?;
+            crate::ensure!(
+                t.id() == next as u64,
+                "degrade: engine id {} != stream index {next} (single-submitter invariant)",
+                t.id()
+            );
+            tickets.push((cur_epoch, t));
+            simq.push_back((tick, size as f64 + cfg.fault.sim_extra_work(next as u64)));
+            next += 1;
+        }
+        // 2. Service: retire work FIFO at the level-scaled capacity.
+        let speedup = frontier[0].gbops / frontier[st.level].gbops;
+        let mut cap = cfg.capacity_per_tick * speedup.max(1.0);
+        while cap > 0.0 {
+            let Some(front) = simq.front_mut() else { break };
+            if front.1 <= cap {
+                cap -= front.1;
+                let (arrived, _) = simq.pop_front().unwrap();
+                window.push_back((tick, tick - arrived + 1));
+            } else {
+                front.1 -= cap;
+                break;
+            }
+        }
+        while window.front().is_some_and(|&(done, _)| done + cfg.window_ticks <= tick) {
+            window.pop_front();
+        }
+        // 3. Observe → decide → (maybe) swap the real engine.
+        let queue_depth = simq.iter().map(|&(_, w)| w).sum::<f64>().ceil() as usize;
+        let p99 = {
+            let mut lats: Vec<u64> = window.iter().map(|&(_, l)| l).collect();
+            if lats.is_empty() {
+                f64::NAN
+            } else {
+                lats.sort_unstable();
+                let rank = ((0.99 * lats.len() as f64).ceil() as usize).clamp(1, lats.len());
+                lats[rank - 1] as f64
+            }
+        };
+        let w = Window { p99, queue_depth };
+        let d = decide(&cfg.thresholds, &budgets, &st, &w);
+        if let Some(to) = d.target() {
+            let step = &frontier[to];
+            cur_epoch =
+                engine.swap(step.ckpt.clone(), step.bits.clone(), step.budget_frac, &step.label())?;
+            epoch_levels.push(to);
+            crate::ensure!(
+                cur_epoch as usize + 1 == epoch_levels.len(),
+                "degrade: non-contiguous epoch {cur_epoch} (single-swapper invariant)"
+            );
+            match d {
+                Decision::Down { .. } => swaps_down += 1,
+                Decision::Up { .. } => swaps_up += 1,
+                Decision::Hold(_) => unreachable!(),
+            }
+        }
+        apply(&mut st, &d, cfg.thresholds.cooldown_ticks);
+        log.push(DecisionRecord {
+            tick,
+            queue_depth,
+            p99,
+            decision: d,
+            level: st.level,
+            epoch: cur_epoch,
+        });
+        tick += 1;
+        if tick >= profile_ticks && (simq.is_empty() || tick >= profile_ticks + cfg.drain_ticks_max)
+        {
+            break;
+        }
+    }
+    // 4. Collect every real response and verify the zero-drop, epoch-pure
+    // guarantee: answered exactly once, under the admitting epoch.
+    let mut responses = Vec::with_capacity(tickets.len());
+    for (i, (expect, t)) in tickets.into_iter().enumerate() {
+        let r = t.wait().map_err(|e| crate::err!("degrade: request {i} dropped: {e}"))?;
+        crate::ensure!(
+            r.epoch == expect,
+            "degrade: request {i} answered under epoch {} but admitted under {expect}",
+            r.epoch
+        );
+        responses.push((expect, r));
+    }
+    crate::ensure!(
+        responses.len() == total,
+        "degrade: {} of {total} requests unanswered",
+        total - responses.len()
+    );
+    Ok(DegradeOutcome {
+        log_text: render_log(&log),
+        log,
+        swaps_down,
+        swaps_up,
+        requests: total,
+        epoch_levels,
+        responses,
+    })
+}
+
+/// Live-mode controller: ticks against a running engine on a wall-clock
+/// cadence, reading windowed p99 from histogram bucket deltas and the
+/// queue-depth gauge.  Same `decide`/`apply` core as the sim harness.
+pub struct Controller {
+    pub thresholds: SloThresholds,
+    pub frontier: Arc<Vec<FrontierStep>>,
+    pub state: CtlState,
+    pub log: Vec<DecisionRecord>,
+    pub swaps_down: usize,
+    pub swaps_up: usize,
+    last_buckets: Vec<u64>,
+    tick: u64,
+}
+
+impl Controller {
+    pub fn new(thresholds: SloThresholds, frontier: Arc<Vec<FrontierStep>>) -> crate::Result<Controller> {
+        crate::ensure!(!frontier.is_empty(), "controller: empty frontier");
+        Ok(Controller {
+            thresholds,
+            frontier,
+            state: CtlState::new(0),
+            log: Vec::new(),
+            swaps_down: 0,
+            swaps_up: 0,
+            last_buckets: Vec::new(),
+            tick: 0,
+        })
+    }
+
+    /// One live tick: observe the window since the previous tick, decide,
+    /// and hot-swap the engine if the decision says so.
+    pub fn tick(&mut self, engine: &Engine) -> crate::Result<Decision> {
+        let buckets = engine.latency_buckets();
+        let delta: Vec<u64> = if self.last_buckets.is_empty() {
+            buckets.clone()
+        } else {
+            buckets
+                .iter()
+                .zip(self.last_buckets.iter())
+                .map(|(now, then)| now.saturating_sub(*then))
+                .collect()
+        };
+        self.last_buckets = buckets;
+        let w = Window {
+            p99: quantile_from_counts(&delta, 0.99),
+            queue_depth: engine.queued_samples(),
+        };
+        let budgets: Vec<f64> = self.frontier.iter().map(|s| s.budget_frac).collect();
+        let d = decide(&self.thresholds, &budgets, &self.state, &w);
+        if let Some(to) = d.target() {
+            let step = &self.frontier[to];
+            engine.swap(step.ckpt.clone(), step.bits.clone(), step.budget_frac, &step.label())?;
+            match d {
+                Decision::Down { .. } => self.swaps_down += 1,
+                Decision::Up { .. } => self.swaps_up += 1,
+                Decision::Hold(_) => unreachable!(),
+            }
+        }
+        apply(&mut self.state, &d, self.thresholds.cooldown_ticks);
+        self.log.push(DecisionRecord {
+            tick: self.tick,
+            queue_depth: w.queue_depth,
+            p99: w.p99,
+            decision: d,
+            level: self.state.level,
+            epoch: engine.current_epoch(),
+        });
+        self.tick += 1;
+        Ok(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn th() -> SloThresholds {
+        SloThresholds {
+            slo_p99: 6.0,
+            recover_frac: 0.5,
+            queue_high: 64,
+            queue_low: 8,
+            cooldown_ticks: 3,
+            floor_budget: 0.0,
+        }
+    }
+
+    const BUDGETS: [f64; 3] = [0.95, 0.7, 0.5];
+
+    #[test]
+    fn overload_steps_down_and_calm_steps_up() {
+        let st = CtlState::new(0);
+        let d = decide(&th(), &BUDGETS, &st, &Window { p99: 7.0, queue_depth: 0 });
+        assert_eq!(d, Decision::Down { from: 0, to: 1 });
+        let d = decide(&th(), &BUDGETS, &st, &Window { p99: f64::NAN, queue_depth: 65 });
+        assert_eq!(d, Decision::Down { from: 0, to: 1 });
+        let st = CtlState::new(2);
+        let d = decide(&th(), &BUDGETS, &st, &Window { p99: 1.0, queue_depth: 0 });
+        assert_eq!(d, Decision::Up { from: 2, to: 1 });
+        // No latency signal + empty queue also recovers.
+        let d = decide(&th(), &BUDGETS, &st, &Window { p99: f64::NAN, queue_depth: 0 });
+        assert_eq!(d, Decision::Up { from: 2, to: 1 });
+    }
+
+    /// The no-flap guarantee: load sitting **exactly on** a threshold is
+    /// neither overload (strict >) nor calm (strict < / <=), so the
+    /// config holds steady at any level, tick after tick.
+    #[test]
+    fn exact_threshold_load_never_flaps() {
+        let t = th();
+        for level in 0..BUDGETS.len() {
+            let mut st = CtlState::new(level);
+            for _ in 0..50 {
+                // p99 exactly on the SLO, queue exactly on queue_high.
+                let d = decide(&t, &BUDGETS, &st, &Window { p99: 6.0, queue_depth: 64 });
+                assert_eq!(d, Decision::Hold(HoldReason::Steady));
+                // In the hysteresis band: below SLO but above recovery.
+                let d2 = decide(&t, &BUDGETS, &st, &Window { p99: 3.0, queue_depth: 0 });
+                assert_eq!(d2, Decision::Hold(HoldReason::Steady));
+                // Queue above queue_low blocks recovery even when calm-fast.
+                let d3 = decide(&t, &BUDGETS, &st, &Window { p99: 1.0, queue_depth: 9 });
+                assert_eq!(d3, Decision::Hold(HoldReason::Steady));
+                apply(&mut st, &d, t.cooldown_ticks);
+                assert_eq!(st.level, level, "level moved under exact-threshold load");
+            }
+        }
+    }
+
+    #[test]
+    fn cooldown_blocks_consecutive_swaps_then_releases() {
+        let t = th();
+        let mut st = CtlState::new(0);
+        let overload = Window { p99: 50.0, queue_depth: 500 };
+        let d = decide(&t, &BUDGETS, &st, &overload);
+        assert_eq!(d, Decision::Down { from: 0, to: 1 });
+        apply(&mut st, &d, t.cooldown_ticks);
+        for _ in 0..t.cooldown_ticks {
+            let d = decide(&t, &BUDGETS, &st, &overload);
+            assert_eq!(d, Decision::Hold(HoldReason::Cooldown));
+            apply(&mut st, &d, t.cooldown_ticks);
+        }
+        let d = decide(&t, &BUDGETS, &st, &overload);
+        assert_eq!(d, Decision::Down { from: 1, to: 2 });
+    }
+
+    #[test]
+    fn floor_budget_and_frontier_ends_clamp_the_walk() {
+        let t = SloThresholds { floor_budget: 0.6, ..th() };
+        // Level 1 (0.7) is the cheapest level the 0.6 floor allows.
+        let st = CtlState::new(1);
+        let d = decide(&t, &BUDGETS, &st, &Window { p99: 50.0, queue_depth: 500 });
+        assert_eq!(d, Decision::Hold(HoldReason::AtFloor));
+        // Bottom of the frontier clamps even without a floor.
+        let st = CtlState::new(2);
+        let d = decide(&th(), &BUDGETS, &st, &Window { p99: 50.0, queue_depth: 500 });
+        assert_eq!(d, Decision::Hold(HoldReason::AtFloor));
+        // Top clamps recovery.
+        let st = CtlState::new(0);
+        let d = decide(&th(), &BUDGETS, &st, &Window { p99: 0.5, queue_depth: 0 });
+        assert_eq!(d, Decision::Hold(HoldReason::AtTop));
+    }
+
+    #[test]
+    fn profiles_parse_and_accumulate_fractional_rates() {
+        for name in ["quiet", "ramp", "spike"] {
+            let p = SimProfile::named(name).unwrap();
+            assert!(!p.arrivals_per_tick().is_empty(), "{name}");
+        }
+        let p = SimProfile::named("4x0.5,2x3").unwrap();
+        assert_eq!(p.arrivals_per_tick(), vec![0, 1, 0, 1, 3, 3]);
+        assert!(SimProfile::named("nope").is_err());
+        assert!(SimProfile::named("0x1").is_err());
+        assert!(SimProfile::named("3x-1").is_err());
+    }
+
+    #[test]
+    fn decision_log_rendering_is_stable() {
+        let log = vec![
+            DecisionRecord {
+                tick: 0,
+                queue_depth: 3,
+                p99: f64::NAN,
+                decision: Decision::Hold(HoldReason::Steady),
+                level: 0,
+                epoch: 0,
+            },
+            DecisionRecord {
+                tick: 1,
+                queue_depth: 80,
+                p99: 12.0,
+                decision: Decision::Down { from: 0, to: 1 },
+                level: 1,
+                epoch: 1,
+            },
+        ];
+        assert_eq!(
+            render_log(&log),
+            "tick=0 q=3 p99=NaN hold:steady level=0 epoch=0\n\
+             tick=1 q=80 p99=12.0 down:0->1 level=1 epoch=1\n"
+        );
+    }
+}

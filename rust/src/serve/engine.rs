@@ -19,6 +19,7 @@
 //!   group of whole requests one worker dequeues together and runs
 //!   through `eval_step` back to back on its warm caches.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -28,7 +29,41 @@ use crate::ckpt::Checkpoint;
 use crate::tensor::{DType, Tensor};
 
 use super::batcher::{BatchQueue, ChunkJob, NextBatch, Pending, Ticket};
+use super::loadgen::FaultPlan;
 use super::metrics::{Metrics, MetricsSnapshot};
+
+/// One immutable serving configuration, version-stamped.  Admission
+/// captures the active `Arc<EpochState>` under the queue lock; a
+/// [`Engine::swap`] publishes a successor under the same lock.  In-flight
+/// requests keep their admission epoch alive through their `Pending`
+/// handles, so a swap never invalidates state a worker is executing on.
+pub struct EpochState {
+    /// Strictly increasing version (0 = the startup config).
+    pub epoch: u64,
+    pub ckpt: Checkpoint,
+    /// Per-layer precision vector (`BitsConfig::to_f32`).
+    pub bits: Vec<f32>,
+    /// Shareable execution state materialized off the hot path (e.g. the
+    /// sim backend's packed weight codes); `None` for backends whose
+    /// execution state is per-call.
+    pub shared_exec: Option<SharedExecState>,
+    /// Budget fraction of the frontier record this config came from (NaN
+    /// when the config is not frontier-derived, e.g. a startup uniform).
+    pub budget_frac: f64,
+    /// Human-readable tag for logs and `/metrics` ("startup",
+    /// "eagl@0.60", ...).
+    pub label: String,
+}
+
+/// Point-in-time epoch facts for `/metrics` and operator output.
+#[derive(Debug, Clone)]
+pub struct EpochInfo {
+    pub epoch: u64,
+    pub budget_frac: f64,
+    pub label: String,
+    /// Total successful hot-swaps since startup (monotone).
+    pub swap_total: u64,
+}
 
 /// Source of per-worker backend instances (`Arc` so every worker thread
 /// can hold it; cf. the coordinator's boxed [`crate::coordinator::Spawner`]).
@@ -51,6 +86,14 @@ pub struct ServeConfig {
     /// Run one throwaway single-sample inference per worker at startup so
     /// weight codes are materialized before the first real request.
     pub warmup: bool,
+    /// Deterministic fault plan: seeded worker stalls keyed on request id
+    /// (see [`FaultPlan`]); `None` disables injection.
+    pub fault: Option<FaultPlan>,
+    /// Budget fraction of the startup config, for the epoch-0
+    /// [`EpochInfo`] (NaN when not frontier-derived).
+    pub initial_budget: f64,
+    /// Label of the startup config ("startup" by default).
+    pub initial_label: String,
 }
 
 impl Default for ServeConfig {
@@ -61,27 +104,30 @@ impl Default for ServeConfig {
             batch_timeout: Duration::from_millis(1),
             force_per_request: false,
             warmup: true,
+            fault: None,
+            initial_budget: f64::NAN,
+            initial_label: "startup".to_string(),
         }
     }
 }
 
-/// State shared between the submit path and the worker threads.
+/// State shared between the submit path and the worker threads.  The
+/// serving config itself lives in the queue's active [`EpochState`] (one
+/// lock orders admission and swaps); this struct carries only the
+/// epoch-invariant model contract.
 struct Shared {
     q: Mutex<BatchQueue>,
     cv: Condvar,
     metrics: Arc<Metrics>,
-    ckpt: Checkpoint,
-    bits: Vec<f32>,
     fused: bool,
     /// Per-sample x dims (manifest eval shape minus the batch dim).
     sample_dims: Vec<usize>,
     x_dtype: DType,
     y_dtype: DType,
-    /// Immutable execution state materialized once by the startup probe
-    /// and adopted by every worker — e.g. the sim backend's bit-packed
-    /// weight codes, so N workers share one per-layer packed
-    /// materialization instead of packing N times.
-    shared_exec: Option<SharedExecState>,
+    /// Deterministic worker-stall injection (tests and smoke drills).
+    fault: Option<FaultPlan>,
+    /// Successful hot-swaps since startup (monotone, for `/metrics`).
+    swap_total: AtomicU64,
 }
 
 /// A running serving engine.  `submit` is thread-safe; [`Engine::drain`]
@@ -89,6 +135,9 @@ struct Shared {
 pub struct Engine {
     shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,
+    /// Kept for [`Engine::swap`]: a fresh probe backend validates and
+    /// materializes each candidate config off the hot path.
+    spawner: Spawner,
 }
 
 impl Engine {
@@ -111,20 +160,6 @@ impl Engine {
         let (fused, sample_dims, x_dtype, y_dtype, shared_exec) = {
             let mut probe = spawner()?;
             let m = probe.manifest();
-            crate::ensure!(
-                bits.len() == m.n_bits,
-                "serve: bits vector has {} entries, model '{}' expects {}",
-                bits.len(),
-                m.model,
-                m.n_bits
-            );
-            crate::ensure!(
-                ckpt.names.len() == m.n_params(),
-                "serve: checkpoint has {} tensors, model '{}' expects {}",
-                ckpt.names.len(),
-                m.model,
-                m.n_params()
-            );
             // Fused batching needs per-sample logits (infer_step), the
             // classification reassembly semantics, and f32 inputs (the
             // chunk concatenation copies f32 rows); anything else takes
@@ -140,22 +175,30 @@ impl Engine {
                 m.model
             );
             let (x_dtype, y_dtype) = (m.x_dtype, m.y_dtype);
-            // Materialize any shareable execution state (e.g. packed
-            // weight codes) once, on the probe, before the workers spawn.
-            let shared_exec = probe.prepare_shared(&ckpt, &bits)?;
+            // Validate the config against the contract and materialize
+            // any shareable execution state (e.g. packed weight codes)
+            // once, on the probe, before the workers spawn.
+            let shared_exec = materialize(&mut probe, &ckpt, &bits)?;
             (fused, dims, x_dtype, y_dtype, shared_exec)
         };
-        let shared = Arc::new(Shared {
-            q: Mutex::new(BatchQueue::new(cfg.max_batch, cfg.batch_timeout)),
-            cv: Condvar::new(),
-            metrics: Arc::new(Metrics::new()),
+        let epoch0 = Arc::new(EpochState {
+            epoch: 0,
             ckpt,
             bits,
+            shared_exec,
+            budget_frac: cfg.initial_budget,
+            label: cfg.initial_label.clone(),
+        });
+        let shared = Arc::new(Shared {
+            q: Mutex::new(BatchQueue::new(cfg.max_batch, cfg.batch_timeout, epoch0)),
+            cv: Condvar::new(),
+            metrics: Arc::new(Metrics::new()),
             fused,
             sample_dims,
             x_dtype,
             y_dtype,
-            shared_exec,
+            fault: cfg.fault,
+            swap_total: AtomicU64::new(0),
         });
         let mut handles = Vec::with_capacity(cfg.workers);
         for wi in 0..cfg.workers {
@@ -167,7 +210,82 @@ impl Engine {
                 .spawn(move || worker_loop(sh, sp, warmup))?;
             handles.push(handle);
         }
-        Ok(Engine { shared, handles })
+        Ok(Engine { shared, handles, spawner })
+    }
+
+    /// Atomically replace the serving config: validate `(ckpt, bits)`
+    /// against the model contract and materialize its execution state on
+    /// a fresh probe backend **off the hot path**, then publish the new
+    /// [`EpochState`] under the queue lock.  Requests admitted before the
+    /// publish finish on the config that admitted them; requests admitted
+    /// after are served by the new one.  Any validation or
+    /// materialization failure — and a swap during drain — fails closed:
+    /// the old config stays live and the error is returned.
+    ///
+    /// Returns the new serving epoch.
+    pub fn swap(
+        &self,
+        ckpt: Checkpoint,
+        bits: Vec<f32>,
+        budget_frac: f64,
+        label: &str,
+    ) -> crate::Result<u64> {
+        // Materialization happens before the lock is taken: the hot path
+        // never waits on packing, and a failure here leaves the active
+        // epoch untouched.
+        let shared_exec = {
+            let mut probe = (self.spawner)()?;
+            materialize(&mut probe, &ckpt, &bits)?
+        };
+        let epoch = {
+            let mut q = self.shared.q.lock().unwrap();
+            // Draining and swapping must have a defined order: drain
+            // flushes deadline-parked batches on the config that admitted
+            // them, so a swap arriving after intake closed is rejected
+            // rather than published into a queue nothing will ever be
+            // admitted to again.
+            crate::ensure!(!q.draining, "serve: engine is draining — swap rejected");
+            if let Some(f) = &q.fatal {
+                crate::bail!("serve: engine failed: {f}");
+            }
+            let epoch = q.active.epoch + 1;
+            q.active = Arc::new(EpochState {
+                epoch,
+                ckpt,
+                bits,
+                shared_exec,
+                budget_frac,
+                label: label.to_string(),
+            });
+            self.shared.swap_total.fetch_add(1, Ordering::Relaxed);
+            epoch
+        };
+        // Wake parked workers so an under-full pre-swap batch is not the
+        // only thing standing between the new config and first traffic.
+        self.shared.cv.notify_all();
+        Ok(epoch)
+    }
+
+    /// The serving epoch new submissions are currently admitted under.
+    pub fn current_epoch(&self) -> u64 {
+        self.shared.q.lock().unwrap().active.epoch
+    }
+
+    /// Epoch facts for `/metrics` and operator output.
+    pub fn epoch_info(&self) -> EpochInfo {
+        let q = self.shared.q.lock().unwrap();
+        EpochInfo {
+            epoch: q.active.epoch,
+            budget_frac: q.active.budget_frac,
+            label: q.active.label.clone(),
+            swap_total: self.shared.swap_total.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Raw latency-histogram bucket counts (cumulative since startup) —
+    /// the controller diffs successive snapshots for windowed quantiles.
+    pub fn latency_buckets(&self) -> Vec<u64> {
+        self.shared.metrics.latency_buckets()
     }
 
     /// Whether the fused `infer_step` batching path is active.
@@ -230,6 +348,7 @@ impl Engine {
                 y,
                 samples,
                 total_chunks,
+                Arc::clone(&q.active),
                 Arc::clone(&self.shared.metrics),
             ));
             let ticket = pending.ticket();
@@ -254,14 +373,22 @@ impl Engine {
         self.shared.q.lock().unwrap().queued_samples()
     }
 
-    /// Graceful shutdown: reject new submissions, flush every queued
-    /// batch (ignoring the batch timeout), join the workers, and verify
-    /// nothing was left unresolved.
-    pub fn drain(mut self) -> crate::Result<MetricsSnapshot> {
+    /// Close intake without joining the workers: new submissions and
+    /// swaps are rejected from this point on, queued work still flushes.
+    /// [`Engine::drain`] calls this first; exposed separately so tests
+    /// can pin the drain/swap ordering without racing a full join.
+    pub fn begin_drain(&self) {
         {
             self.shared.q.lock().unwrap().draining = true;
         }
         self.shared.cv.notify_all();
+    }
+
+    /// Graceful shutdown: reject new submissions, flush every queued
+    /// batch (ignoring the batch timeout), join the workers, and verify
+    /// nothing was left unresolved.
+    pub fn drain(mut self) -> crate::Result<MetricsSnapshot> {
+        self.begin_drain();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -320,18 +447,22 @@ fn worker_loop(sh: Arc<Shared>, spawner: Spawner, warmup: bool) {
             return;
         }
     };
-    // Adopt the probe's shared execution state (e.g. packed weight
-    // codes) before any request: the expensive per-layer materialization
-    // happened exactly once, at engine startup.
-    if let Some(h) = &sh.shared_exec {
+    // Adopt the startup epoch's shared execution state (e.g. packed
+    // weight codes) before any request: the expensive per-layer
+    // materialization happened exactly once, on the probe that validated
+    // the config.
+    let ep0 = Arc::clone(&sh.q.lock().unwrap().active);
+    if let Some(h) = &ep0.shared_exec {
         if let Err(e) = be.adopt_shared(h) {
             fatal(&sh, &format!("worker failed to adopt shared state: {e}"));
             return;
         }
     }
+    let mut adopted = ep0.epoch;
     if warmup {
-        warmup_backend(&sh, &mut be);
+        warmup_backend(&sh, &ep0, &mut be);
     }
+    drop(ep0);
     let mut guard = sh.q.lock().unwrap();
     loop {
         if guard.fatal.is_some() {
@@ -344,7 +475,37 @@ fn worker_loop(sh: Arc<Shared>, spawner: Spawner, warmup: bool) {
                     batch.len() as u64,
                     batch.iter().map(|c| c.len as u64).sum(),
                 );
-                execute_batch(&sh, &mut be, &batch);
+                // Batches are epoch-pure (see `BatchQueue::next_batch`);
+                // when this one's admission epoch differs from the last
+                // adopted, re-point the backend at that epoch's shared
+                // state before executing.
+                let ep = Arc::clone(&batch[0].pending.epoch_state);
+                if ep.epoch != adopted {
+                    if let Some(h) = &ep.shared_exec {
+                        if let Err(e) = be.adopt_shared(h) {
+                            fatal(
+                                &sh,
+                                &format!("worker failed to adopt epoch {}: {e}", ep.epoch),
+                            );
+                            return;
+                        }
+                    }
+                    adopted = ep.epoch;
+                }
+                if let Some(fp) = &sh.fault {
+                    // Injected stall: the worker sleeps while holding the
+                    // batch (not the lock) — queued traffic behind it
+                    // piles up exactly as a real straggler would cause.
+                    let stall = batch
+                        .iter()
+                        .map(|c| fp.stall_wall_for(c.pending.id))
+                        .max()
+                        .unwrap_or(Duration::ZERO);
+                    if stall > Duration::ZERO {
+                        std::thread::sleep(stall);
+                    }
+                }
+                execute_batch(&sh, &ep, &mut be, &batch);
                 guard = sh.q.lock().unwrap();
             }
             NextBatch::Wait(deadline) => {
@@ -362,10 +523,37 @@ fn worker_loop(sh: Arc<Shared>, spawner: Spawner, warmup: bool) {
     }
 }
 
+/// Validate `(ckpt, bits)` against the probe's model contract and
+/// materialize any shareable execution state — the fail-closed gate both
+/// [`Engine::start`] and [`Engine::swap`] pass a config through before
+/// it can be published.
+fn materialize(
+    probe: &mut Box<dyn Backend>,
+    ckpt: &Checkpoint,
+    bits: &[f32],
+) -> crate::Result<Option<SharedExecState>> {
+    let m = probe.manifest();
+    crate::ensure!(
+        bits.len() == m.n_bits,
+        "serve: bits vector has {} entries, model '{}' expects {}",
+        bits.len(),
+        m.model,
+        m.n_bits
+    );
+    crate::ensure!(
+        ckpt.names.len() == m.n_params(),
+        "serve: checkpoint has {} tensors, model '{}' expects {}",
+        ckpt.names.len(),
+        m.model,
+        m.n_params()
+    );
+    probe.prepare_shared(ckpt, bits)
+}
+
 /// Best-effort single-sample inference so the worker's weight-code cache
 /// is populated before real traffic (results are identical either way —
 /// the caches are semantically transparent).
-fn warmup_backend(sh: &Shared, be: &mut Box<dyn Backend>) {
+fn warmup_backend(sh: &Shared, ep: &EpochState, be: &mut Box<dyn Backend>) {
     let mut shape = vec![1usize];
     shape.extend_from_slice(&sh.sample_dims);
     let x = match sh.x_dtype {
@@ -373,25 +561,25 @@ fn warmup_backend(sh: &Shared, be: &mut Box<dyn Backend>) {
         DType::I32 => Tensor::zeros_i32(&shape),
     };
     if sh.fused {
-        let _ = be.infer_step(&sh.ckpt, &x, &sh.bits);
+        let _ = be.infer_step(&ep.ckpt, &x, &ep.bits);
     } else {
         let y = Tensor::zeros_i32(&[1]);
-        let _ = be.eval_step(&sh.ckpt, &x, &y, &sh.bits);
+        let _ = be.eval_step(&ep.ckpt, &x, &y, &ep.bits);
     }
 }
 
-fn execute_batch(sh: &Shared, be: &mut Box<dyn Backend>, batch: &[ChunkJob]) {
+fn execute_batch(sh: &Shared, ep: &EpochState, be: &mut Box<dyn Backend>, batch: &[ChunkJob]) {
     if sh.fused {
-        execute_fused(sh, be, batch);
+        execute_fused(sh, ep, be, batch);
     } else {
-        execute_per_request(sh, be, batch);
+        execute_per_request(ep, be, batch);
     }
 }
 
 /// Fused mode: one forward pass over the concatenated chunk samples,
 /// then per-request reassembly (row-independent kernels make the logits
 /// independent of batch composition — see [`super::batcher`]).
-fn execute_fused(sh: &Shared, be: &mut Box<dyn Backend>, batch: &[ChunkJob]) {
+fn execute_fused(sh: &Shared, ep: &EpochState, be: &mut Box<dyn Backend>, batch: &[ChunkJob]) {
     let row: usize = sh.sample_dims.iter().product();
     let total: usize = batch.iter().map(|c| c.len).sum();
     let mut buf = Vec::with_capacity(total * row);
@@ -402,7 +590,7 @@ fn execute_fused(sh: &Shared, be: &mut Box<dyn Backend>, batch: &[ChunkJob]) {
     let mut shape = vec![total];
     shape.extend_from_slice(&sh.sample_dims);
     let x = Tensor::from_f32(&shape, buf);
-    match be.infer_step(&sh.ckpt, &x, &sh.bits) {
+    match be.infer_step(&ep.ckpt, &x, &ep.bits) {
         Ok(logits) => {
             let classes = logits.shape.get(1).copied().unwrap_or(1);
             let ls = logits.f32s();
@@ -428,9 +616,9 @@ fn execute_fused(sh: &Shared, be: &mut Box<dyn Backend>, batch: &[ChunkJob]) {
 
 /// Fallback mode: each chunk is a whole request; the worker's `eval_step`
 /// call *is* the reference computation.
-fn execute_per_request(sh: &Shared, be: &mut Box<dyn Backend>, batch: &[ChunkJob]) {
+fn execute_per_request(ep: &EpochState, be: &mut Box<dyn Backend>, batch: &[ChunkJob]) {
     for c in batch {
-        match be.eval_step(&sh.ckpt, &c.pending.x, &c.pending.y, &sh.bits) {
+        match be.eval_step(&ep.ckpt, &c.pending.x, &c.pending.y, &ep.bits) {
             Ok((loss, evalout)) => c.pending.complete_whole(loss, evalout),
             Err(e) => c.pending.fail(&format!("eval_step failed: {e}")),
         }

@@ -27,6 +27,12 @@
 //!   the front door's admission counters.  Field names and order are
 //!   pinned by a golden test; lines are only ever appended.
 //! * `GET /healthz` — liveness probe, `200 ok`.
+//! * `POST /swap` — body `{"level": L}`; atomically hot-swaps the
+//!   engine onto frontier level `L` from the server's [`SwapRegistry`]
+//!   (503 when the server was started without one).  `200` body carries
+//!   the new serving epoch, level, and budget.  In-flight requests
+//!   finish on the config that admitted them; every `/infer` response
+//!   is tagged with its serving `epoch`.
 //!
 //! ## Status codes (the full contract)
 //!
@@ -91,6 +97,7 @@ use crate::jsonio::Json;
 use crate::tensor::{DType, Tensor};
 
 use super::batcher::{Response, Ticket};
+use super::controller::FrontierStep;
 use super::engine::Engine;
 use super::metrics::MetricsSnapshot;
 
@@ -186,11 +193,20 @@ macro_rules! bump {
     };
 }
 
+/// The set of pre-materialized frontier configs `POST /swap` may switch
+/// between.  Built once at startup (each step carries its own checkpoint
+/// + bits), so a swap request never does model prep on the request path.
+pub struct SwapRegistry {
+    pub steps: Vec<FrontierStep>,
+}
+
 /// State shared by the acceptor and every connection thread.
 struct HttpShared {
     engine: Arc<Engine>,
     data: Dataset,
     cfg: HttpConfig,
+    /// `POST /swap` targets; `None` answers every swap with 503.
+    swaps: Option<Arc<SwapRegistry>>,
     stats: HttpStats,
     /// The admission gate: requests admitted, response not yet written.
     inflight: AtomicUsize,
@@ -254,6 +270,17 @@ impl HttpServer {
     /// checkpoint was built against — `/infer` materializes request
     /// tensors from it.
     pub fn start(engine: Engine, data: Dataset, cfg: HttpConfig) -> crate::Result<HttpServer> {
+        HttpServer::start_with(engine, data, cfg, None)
+    }
+
+    /// [`HttpServer::start`] plus a [`SwapRegistry`] enabling
+    /// `POST /swap` between pre-materialized frontier configs.
+    pub fn start_with(
+        engine: Engine,
+        data: Dataset,
+        cfg: HttpConfig,
+        swaps: Option<Arc<SwapRegistry>>,
+    ) -> crate::Result<HttpServer> {
         let listener = TcpListener::bind(&cfg.addr)
             .map_err(|e| crate::err!("http: bind {}: {e}", cfg.addr))?;
         // Non-blocking accept so the acceptor can poll the drain flag.
@@ -267,6 +294,7 @@ impl HttpServer {
             engine: Arc::new(engine),
             data,
             cfg,
+            swaps,
             stats: HttpStats::default(),
             inflight: AtomicUsize::new(0),
             active_conns: AtomicUsize::new(0),
@@ -301,6 +329,13 @@ impl HttpServer {
 
     pub fn engine_metrics(&self) -> MetricsSnapshot {
         self.shared.as_ref().expect("server running").engine.metrics()
+    }
+
+    /// A handle to the served engine, for driving swaps from outside the
+    /// socket (the SLO controller thread).  The clone MUST be dropped
+    /// before [`HttpServer::shutdown`], which asserts sole ownership.
+    pub fn engine_handle(&self) -> Arc<Engine> {
+        Arc::clone(&self.shared.as_ref().expect("server running").engine)
     }
 
     /// Signal drain and join the acceptor + every connection thread.
@@ -500,6 +535,7 @@ fn route(sh: &Arc<HttpShared>, req: &Request) -> Reply {
     let ka = req.keep_alive;
     match (req.method.as_str(), req.target.as_str()) {
         ("POST", "/infer") => route_infer(sh, req),
+        ("POST", "/swap") => route_swap(sh, req),
         ("GET", "/metrics") => {
             bump!(sh, metrics_scrapes);
             Reply::Done {
@@ -517,7 +553,7 @@ fn route(sh: &Arc<HttpShared>, req: &Request) -> Reply {
             retry_after: false,
             close: !ka,
         },
-        (_, "/infer") | (_, "/metrics") | (_, "/healthz") => {
+        (_, "/infer") | (_, "/swap") | (_, "/metrics") | (_, "/healthz") => {
             bump!(sh, bad_requests);
             Reply::Done {
                 status: 405,
@@ -600,6 +636,71 @@ fn route_infer(sh: &Arc<HttpShared>, req: &Request) -> Reply {
                 body: error_body(&e.to_string()),
                 retry_after: true,
                 close: true,
+            }
+        }
+    }
+}
+
+/// `POST /swap`: hot-swap the engine onto a pre-materialized frontier
+/// level.  Fails closed — any error leaves the old config serving.
+fn route_swap(sh: &Arc<HttpShared>, req: &Request) -> Reply {
+    let ka = req.keep_alive;
+    let Some(reg) = sh.swaps.as_ref() else {
+        bump!(sh, rejected);
+        return Reply::Done {
+            status: 503,
+            content_type: "application/json",
+            body: error_body("no swap registry: server started without --frontier-from"),
+            retry_after: true,
+            close: !ka,
+        };
+    };
+    let level = match lazyjson::scan_u64(&req.body, "level") {
+        Ok(Some(l)) if (l as usize) < reg.steps.len() => l as usize,
+        Ok(_) | Err(_) => {
+            bump!(sh, bad_requests);
+            return Reply::Done {
+                status: 400,
+                content_type: "application/json",
+                body: error_body(&format!(
+                    "'level' must be an integer in 0..{}",
+                    reg.steps.len()
+                )),
+                retry_after: false,
+                close: !ka,
+            };
+        }
+    };
+    let step = &reg.steps[level];
+    match sh.engine.swap(
+        step.ckpt.clone(),
+        step.bits.clone(),
+        step.budget_frac,
+        &step.label(),
+    ) {
+        Ok(epoch) => Reply::Done {
+            status: 200,
+            content_type: "application/json",
+            body: Json::obj(vec![
+                ("epoch", Json::num(epoch as f64)),
+                ("level", Json::num(level as f64)),
+                ("budget", Json::num(step.budget_frac)),
+            ])
+            .to_string_compact()
+            .into_bytes(),
+            retry_after: false,
+            close: !ka,
+        },
+        // Swap refused (engine draining or wedged): old config stays
+        // live; the caller may retry.
+        Err(e) => {
+            bump!(sh, rejected);
+            Reply::Done {
+                status: 503,
+                content_type: "application/json",
+                body: error_body(&e.to_string()),
+                retry_after: true,
+                close: !ka,
             }
         }
     }
@@ -711,6 +812,7 @@ pub fn infer_response_json(r: &Response) -> String {
         ),
         ("evalout_bits", Json::arr(bits)),
         ("latency_s", Json::num(r.latency_s)),
+        ("epoch", Json::num(r.epoch as f64)),
     ])
     .to_string_compact()
 }
@@ -757,6 +859,8 @@ pub fn parse_infer_response(body: &[u8]) -> crate::Result<Response> {
         loss: f32::from_bits(num("loss_bits")? as u32),
         evalout,
         latency_s: num("latency_s")?,
+        // Absent in pre-swap payloads: epoch 0 (the startup config).
+        epoch: v.get("epoch").and_then(Json::as_f64).unwrap_or(0.0) as u64,
     })
 }
 
@@ -777,6 +881,14 @@ fn render_metrics(sh: &HttpShared) -> String {
     out += &format!("mpq_http_metrics_scrapes_total {}\n", h.metrics_scrapes);
     out += &format!("mpq_http_inflight_requests {}\n", h.inflight);
     out += &format!("mpq_engine_queue_samples {}\n", sh.engine.queued_samples());
+    let ep = sh.engine.epoch_info();
+    out += &format!("mpq_ctl_epoch {}\n", ep.epoch);
+    out += &format!("mpq_ctl_swap_total {}\n", ep.swap_total);
+    out += &format!("mpq_ctl_active_budget {}\n", ep.budget_frac);
+    out += &format!(
+        "mpq_ctl_frontier_levels {}\n",
+        sh.swaps.as_ref().map_or(0, |r| r.steps.len())
+    );
     sh.engine
         .metrics()
         .render_prometheus(&mut out, sh.started.elapsed().as_secs_f64());
@@ -795,6 +907,7 @@ mod tests {
             loss: 1.234567e-3_f32,
             evalout: Tensor::from_f32(&[], vec![2.0]),
             latency_s: 0.001953125, // dyadic: exact through the emitter
+            epoch: 5,
         };
         let back = parse_infer_response(infer_response_json(&r).as_bytes()).unwrap();
         assert_eq!(back.id, r.id);
@@ -802,6 +915,7 @@ mod tests {
         assert_eq!(back.loss.to_bits(), r.loss.to_bits());
         assert_eq!(back.evalout, r.evalout);
         assert_eq!(back.latency_s.to_bits(), r.latency_s.to_bits());
+        assert_eq!(back.epoch, r.epoch);
         // Awkward f32 values (negative zero, subnormal, NaN payloads
         // aside) survive the bits transport.
         for loss in [-0.0f32, f32::MIN_POSITIVE / 2.0, 3.4e38, -1.5e-39] {

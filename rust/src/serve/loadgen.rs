@@ -26,11 +26,12 @@
 //! own dataset — so socket runs are bit-comparable to in-process runs
 //! (asserted in `rust/tests/http_serve_integration.rs`).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::data::{Dataset, Split};
-use crate::rng::Pcg32;
+use crate::rng::{splitmix64, Pcg32};
 use crate::tensor::Tensor;
 
 use super::batcher::Response;
@@ -41,6 +42,17 @@ use super::http::parse_infer_response;
 /// Eval-split index base for loadgen batches, clear of the indices the
 /// evaluation loop replays (0..eval_batches).
 const LOADGEN_INDEX_BASE: u64 = 1_000;
+
+/// Give up on a request after this many consecutive 503 sheds — bounded
+/// so a permanently saturated server still fails the run loudly instead
+/// of spinning forever.
+const MAX_RETRIES_PER_REQUEST: usize = 32;
+
+/// Ceiling on one backoff sleep.  Serve deployments answer `Retry-After`
+/// in whole seconds; a benchmark driver that obeyed it literally would
+/// measure its own sleeping, so the hint is capped here and jittered
+/// below it.
+const RETRY_SLEEP_CAP_S: f64 = 0.025;
 
 /// Arrival model.
 #[derive(Debug, Clone, Copy)]
@@ -61,6 +73,81 @@ pub struct LoadSpec {
     pub mode: LoadMode,
 }
 
+/// Deterministic fault injection: which requests stall a worker or carry
+/// a latency spike is a **pure function of (plan seed, request index)**
+/// — a seeded hash, not a clock or an RNG stream shared across threads —
+/// so a fault schedule replays identically at any worker count, in both
+/// the real engine (wall-clock stalls) and the controller's sim-time
+/// queue model (work-unit stalls/spikes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Roughly one in `stall_every` requests stalls a worker (0 = never).
+    pub stall_every: u64,
+    /// Wall-clock stall in the real engine (the worker sleeps holding
+    /// the batch, not the queue lock).
+    pub stall_wall: Duration,
+    /// The same stall expressed in sim-time work units (samples).
+    pub stall_work: f64,
+    /// Roughly one in `spike_every` requests carries a latency spike
+    /// (0 = never).
+    pub spike_every: u64,
+    /// Spike size in sim-time work units.
+    pub spike_work: f64,
+}
+
+impl FaultPlan {
+    /// The no-fault plan (all schedules disabled).
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            stall_every: 0,
+            stall_wall: Duration::ZERO,
+            stall_work: 0.0,
+            spike_every: 0,
+            spike_work: 0.0,
+        }
+    }
+
+    /// Seeded membership test: does request `index` hit a 1-in-`every`
+    /// schedule?  `salt` separates the stall and spike streams.
+    fn hits(&self, salt: u64, every: u64, index: u64) -> bool {
+        if every == 0 {
+            return false;
+        }
+        let mut s = self.seed ^ salt ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        splitmix64(&mut s) % every == 0
+    }
+
+    /// Whether request `index` stalls its worker (either clock).
+    pub fn stalls(&self, index: u64) -> bool {
+        self.hits(0x7374_616c_6c, self.stall_every, index) // "stall"
+    }
+
+    /// Wall-clock stall the real engine injects for request `index`.
+    pub fn stall_wall_for(&self, index: u64) -> Duration {
+        if self.stalls(index) {
+            self.stall_wall
+        } else {
+            Duration::ZERO
+        }
+    }
+
+    /// Extra sim-time work units request `index` carries in the
+    /// controller's queue model (stall + spike contributions).
+    pub fn sim_extra_work(&self, index: u64) -> f64 {
+        let mut w = 0.0;
+        if self.stalls(index) {
+            w += self.stall_work;
+        }
+        if self.hits(0x7370_696b_65, self.spike_every, index) {
+            // "spike"
+            w += self.spike_work;
+        }
+        w
+    }
+}
+
 /// Outcome of one load run.  `responses[i]` answers request `i` of the
 /// deterministic request stream (request-index order — engine ids can be
 /// interleaved differently across runs by closed-loop client racing, so
@@ -74,6 +161,9 @@ pub struct LoadReport {
     pub samples_per_s: f64,
     /// Sample-weighted classification accuracy (NaN for non-cls tasks).
     pub mean_accuracy: f64,
+    /// 503-shed attempts retried after `Retry-After` backoff (HTTP
+    /// closed-loop only; 0 elsewhere).
+    pub retried: u64,
 }
 
 /// The deterministic per-request sample counts for a spec (seeded
@@ -167,7 +257,7 @@ pub fn run(engine: &Engine, data: &Dataset, spec: &LoadSpec) -> crate::Result<Lo
     if let Some(e) = first_err.into_inner().unwrap() {
         return Err(e);
     }
-    finalize(spec, wall_s, responses.into_inner().unwrap())
+    finalize(spec, wall_s, responses.into_inner().unwrap(), 0)
 }
 
 /// Drive an `mpq serve --listen` front door at `addr` (`host:port`) with
@@ -185,19 +275,30 @@ pub fn run_http(addr: &str, spec: &LoadSpec) -> crate::Result<LoadReport> {
     let sizes = request_sizes(spec);
     let responses: Mutex<Vec<(usize, Response)>> = Mutex::new(Vec::with_capacity(spec.requests));
     let first_err: Mutex<Option<crate::error::Error>> = Mutex::new(None);
+    let retried = AtomicU64::new(0);
     let t0 = Instant::now();
     match spec.mode {
         LoadMode::Closed { concurrency } => {
             // One socket per client, submit→wait loops striped over the
             // request stream; reconnects if the server retires the
-            // connection at its keep-alive budget.
+            // connection at its keep-alive budget.  A 503 shed by the
+            // admission gate is **not** terminal: the client honors
+            // `Retry-After` with seeded jittered backoff (bounded
+            // retries), so admission control and a closed-loop driver
+            // compose instead of cascading one shed into a failed run.
             let clients = concurrency.max(1).min(spec.requests);
             std::thread::scope(|scope| {
                 for ci in 0..clients {
                     let sizes = &sizes;
                     let responses = &responses;
                     let first_err = &first_err;
+                    let retried = &retried;
                     scope.spawn(move || {
+                        // Per-client backoff stream: seeded by (spec
+                        // seed, client index) so reruns jitter
+                        // identically while concurrent clients stay
+                        // desynchronized.
+                        let mut backoff = Pcg32::new(spec.seed ^ 0x7265_7472_79, ci as u64); // "retry"
                         let mut client = match HttpClient::connect(addr) {
                             Ok(c) => c,
                             Err(e) => {
@@ -206,41 +307,81 @@ pub fn run_http(addr: &str, spec: &LoadSpec) -> crate::Result<LoadReport> {
                             }
                         };
                         let mut i = ci;
-                        while i < sizes.len() {
-                            if first_err.lock().unwrap().is_some() {
-                                return;
-                            }
-                            let exchange = client
-                                .post("/infer", &infer_body(i, sizes[i]))
-                                .and_then(|resp| {
-                                    let closing = resp.header("connection") == Some("close");
-                                    crate::ensure!(
-                                        resp.status == 200,
-                                        "loadgen: request {i}: HTTP {}: {}",
-                                        resp.status,
-                                        resp.body_str()
-                                    );
-                                    Ok((parse_infer_response(&resp.body)?, closing))
-                                });
-                            match exchange {
-                                Ok((r, closing)) => {
-                                    responses.lock().unwrap().push((i, r));
-                                    if closing && i + clients < sizes.len() {
-                                        match HttpClient::connect(addr) {
-                                            Ok(c) => client = c,
-                                            Err(e) => {
-                                                first_err.lock().unwrap().get_or_insert(e);
-                                                return;
-                                            }
+                        'requests: while i < sizes.len() {
+                            let mut attempts = 0usize;
+                            loop {
+                                if first_err.lock().unwrap().is_some() {
+                                    return;
+                                }
+                                // (response, closing): response None = a
+                                // 503 shed carrying its Retry-After hint.
+                                let exchange = client
+                                    .post("/infer", &infer_body(i, sizes[i]))
+                                    .and_then(|resp| {
+                                        let closing =
+                                            resp.header("connection") == Some("close");
+                                        if resp.status == 503 {
+                                            let ra = resp
+                                                .header("retry-after")
+                                                .and_then(|v| v.trim().parse::<f64>().ok())
+                                                .unwrap_or(1.0);
+                                            return Ok((None, closing, ra));
+                                        }
+                                        crate::ensure!(
+                                            resp.status == 200,
+                                            "loadgen: request {i}: HTTP {}: {}",
+                                            resp.status,
+                                            resp.body_str()
+                                        );
+                                        Ok((Some(parse_infer_response(&resp.body)?), closing, 0.0))
+                                    });
+                                let (resp, closing, retry_after_s) = match exchange {
+                                    Ok(t) => t,
+                                    Err(e) => {
+                                        first_err.lock().unwrap().get_or_insert(e);
+                                        return;
+                                    }
+                                };
+                                if let Some(r) = &resp {
+                                    responses.lock().unwrap().push((i, r.clone()));
+                                }
+                                let retrying = resp.is_none();
+                                if retrying {
+                                    attempts += 1;
+                                    if attempts > MAX_RETRIES_PER_REQUEST {
+                                        first_err.lock().unwrap().get_or_insert(crate::err!(
+                                            "loadgen: request {i}: still shed (503) after \
+                                             {MAX_RETRIES_PER_REQUEST} retries"
+                                        ));
+                                        return;
+                                    }
+                                    retried.fetch_add(1, Ordering::Relaxed);
+                                }
+                                // Reconnect when the server retired the
+                                // connection and this client still has
+                                // traffic (a retry or a later request).
+                                if closing && (retrying || i + clients < sizes.len()) {
+                                    match HttpClient::connect(addr) {
+                                        Ok(c) => client = c,
+                                        Err(e) => {
+                                            first_err.lock().unwrap().get_or_insert(e);
+                                            return;
                                         }
                                     }
                                 }
-                                Err(e) => {
-                                    first_err.lock().unwrap().get_or_insert(e);
-                                    return;
+                                if !retrying {
+                                    i += clients;
+                                    continue 'requests;
                                 }
+                                // The header conveys the server's intent;
+                                // the sleep is capped so a shedding
+                                // server can't park the driver for whole
+                                // seconds, and jittered in [0.5, 1.0)× so
+                                // shed clients don't return in lockstep.
+                                let capped = retry_after_s.clamp(0.0, RETRY_SLEEP_CAP_S);
+                                let jitter = 0.5 + 0.5 * backoff.uniform() as f64;
+                                std::thread::sleep(Duration::from_secs_f64(capped * jitter));
                             }
-                            i += clients;
                         }
                     });
                 }
@@ -316,7 +457,12 @@ pub fn run_http(addr: &str, spec: &LoadSpec) -> crate::Result<LoadReport> {
     if let Some(e) = first_err.into_inner().unwrap() {
         return Err(e);
     }
-    finalize(spec, wall_s, responses.into_inner().unwrap())
+    finalize(
+        spec,
+        wall_s,
+        responses.into_inner().unwrap(),
+        retried.load(Ordering::Relaxed),
+    )
 }
 
 /// The `POST /infer` request body for request `i` of the stream.
@@ -330,6 +476,7 @@ fn finalize(
     spec: &LoadSpec,
     wall_s: f64,
     mut indexed: Vec<(usize, Response)>,
+    retried: u64,
 ) -> crate::Result<LoadReport> {
     crate::ensure!(
         indexed.len() == spec.requests,
@@ -365,6 +512,7 @@ fn finalize(
         throughput_rps: spec.requests as f64 / wall_s,
         samples_per_s: total_samples as f64 / wall_s,
         mean_accuracy: correct / total_samples as f64,
+        retried,
         responses,
     })
 }
@@ -402,5 +550,44 @@ mod tests {
             a.iter().zip(&other).any(|((xa, _), (xo, _))| xa.shape != xo.shape),
             "different seeds should produce different request size streams"
         );
+    }
+
+    #[test]
+    fn fault_plan_is_a_pure_seeded_function_of_the_index() {
+        let fp = FaultPlan {
+            seed: 9,
+            stall_every: 4,
+            stall_wall: Duration::from_millis(1),
+            stall_work: 8.0,
+            spike_every: 4,
+            spike_work: 5.0,
+        };
+        let stalls: Vec<bool> = (0..256).map(|i| fp.stalls(i)).collect();
+        // Pure: the schedule replays identically.
+        assert_eq!(stalls, (0..256).map(|i| fp.stalls(i)).collect::<Vec<bool>>());
+        // Roughly 1-in-4 (seeded hash, not exact striding).
+        let n = stalls.iter().filter(|&&h| h).count();
+        assert!((16..=128).contains(&n), "1-in-4 over 256 requests hit {n} times");
+        // Seed moves the schedule.
+        let other = FaultPlan { seed: 10, ..fp };
+        assert_ne!((0..256).map(|i| other.stalls(i)).collect::<Vec<bool>>(), stalls);
+        // Stall and spike streams are salted apart, so per-index sim work
+        // is one of the four combinations — and never negative.
+        for i in 0..256 {
+            let w = fp.sim_extra_work(i);
+            assert!(
+                [0.0, 5.0, 8.0, 13.0].contains(&w),
+                "unexpected sim work {w} at index {i}"
+            );
+            if fp.stalls(i) {
+                assert_eq!(fp.stall_wall_for(i), Duration::from_millis(1));
+                assert!(w >= 8.0);
+            } else {
+                assert_eq!(fp.stall_wall_for(i), Duration::ZERO);
+            }
+        }
+        // The disabled plan never fires.
+        let none = FaultPlan::none();
+        assert!((0..256).all(|i| !none.stalls(i) && none.sim_extra_work(i) == 0.0));
     }
 }

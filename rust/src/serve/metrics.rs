@@ -106,19 +106,15 @@ impl Metrics {
     /// Latency quantile (`q` in [0,1]) from the histogram; NaN when no
     /// request completed yet.
     fn quantile(&self, counts: &[u64], q: f64) -> f64 {
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return f64::NAN;
-        }
-        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
-        let mut cum = 0u64;
-        for (i, &c) in counts.iter().enumerate() {
-            cum += c;
-            if cum >= rank {
-                return bucket_rep_ns(i) / 1e9;
-            }
-        }
-        bucket_rep_ns(N_BUCKETS - 1) / 1e9
+        quantile_from_counts(counts, q)
+    }
+
+    /// Raw histogram bucket counts (cumulative since startup).  Consumers
+    /// that want a **windowed** quantile — e.g. the SLO controller —
+    /// subtract a previous snapshot element-wise and feed the delta to
+    /// [`quantile_from_counts`].
+    pub fn latency_buckets(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
     }
 
     /// Consistent point-in-time view (individual counters are relaxed, so
@@ -149,6 +145,27 @@ impl Metrics {
             p99_s: self.quantile(&counts, 0.99),
         }
     }
+}
+
+/// Latency quantile (`q` in [0,1], seconds) over raw histogram bucket
+/// counts — [`Metrics::latency_buckets`] totals or a window delta of two
+/// of them.  NaN when the counts are empty (an empty window is "no
+/// signal", not "zero latency").  The rank is `ceil(q·total)` clamped to
+/// `[1, total]`, identical to the snapshot quantiles.
+pub fn quantile_from_counts(counts: &[u64], q: f64) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return f64::NAN;
+    }
+    let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        cum += c;
+        if cum >= rank {
+            return bucket_rep_ns(i) / 1e9;
+        }
+    }
+    bucket_rep_ns(N_BUCKETS - 1) / 1e9
 }
 
 /// Point-in-time metrics view (see [`Metrics::snapshot`]).
@@ -336,6 +353,34 @@ mod tests {
         }
         // NaN stays reserved for the genuinely empty histogram.
         assert!(Metrics::new().snapshot().p99_s.is_nan());
+    }
+
+    /// The controller's windowed-p99 primitive: subtracting an earlier
+    /// bucket snapshot isolates the requests recorded in between, and an
+    /// empty window reads NaN rather than a stale or zero latency.
+    #[test]
+    fn bucket_delta_quantile_sees_only_the_window() {
+        let m = Metrics::new();
+        m.record_request(1, Duration::from_micros(10));
+        let before = m.latency_buckets();
+        assert!(quantile_from_counts(
+            &before
+                .iter()
+                .zip(before.iter())
+                .map(|(a, b)| a - b)
+                .collect::<Vec<_>>(),
+            0.99
+        )
+        .is_nan());
+        m.record_request(1, Duration::from_millis(50));
+        let after = m.latency_buckets();
+        let delta: Vec<u64> = after.iter().zip(before.iter()).map(|(a, b)| a - b).collect();
+        let p99 = quantile_from_counts(&delta, 0.99);
+        // Only the 50 ms request is in the window; the old 10 µs one must
+        // not drag the quantile down.
+        assert!(p99 > 0.04 && p99 < 0.07, "windowed p99 = {p99}");
+        let p99_all = quantile_from_counts(&after, 0.99);
+        assert_eq!(p99_all.to_bits(), p99.to_bits(), "2-sample p99 is the slow bucket");
     }
 
     #[test]

@@ -41,8 +41,15 @@
 //! * [`http`] — the HTTP/1.1 front door (`mpq serve --listen`): std
 //!   `TcpListener` acceptor, incremental request parser, lazy JSON
 //!   field scanner, admission control with fail-fast `503`,
-//!   per-connection backpressure, graceful drain, and a stable-format
-//!   `GET /metrics` endpoint.  Zero new dependencies.
+//!   per-connection backpressure, graceful drain, a stable-format
+//!   `GET /metrics` endpoint, and a `POST /swap` admin hook for manual
+//!   frontier steps.  Zero new dependencies.
+//! * [`controller`] — the SLO-driven precision controller: epoch-
+//!   versioned config hot-swap ([`Engine::swap`]) walked up and down
+//!   the recorded accuracy-throughput frontier by a pure, replayable
+//!   decision function, plus the deterministic sim-time degradation
+//!   harness (`--degrade`) and seeded fault injection
+//!   ([`loadgen::FaultPlan`]).
 //!
 //! CLI: `mpq serve` (engine + loadgen + metrics report; `--listen` for
 //! the socket front door, `--target` for a pure socket client) and
@@ -50,13 +57,18 @@
 //! `make http-smoke` wire both paths into `make verify`.
 
 pub mod batcher;
+pub mod controller;
 pub mod engine;
 pub mod http;
 pub mod loadgen;
 pub mod metrics;
 
 pub use batcher::{Response, Ticket};
-pub use engine::{Engine, ServeConfig, Spawner};
-pub use http::{HttpConfig, HttpServer, HttpStatsSnapshot};
-pub use loadgen::{LoadMode, LoadReport, LoadSpec};
+pub use controller::{
+    decide, render_log, run_degrade, Controller, CtlState, Decision, DegradeConfig,
+    DegradeOutcome, FrontierStep, SimProfile, SloThresholds, Window,
+};
+pub use engine::{Engine, EpochInfo, EpochState, ServeConfig, Spawner};
+pub use http::{HttpConfig, HttpServer, HttpStatsSnapshot, SwapRegistry};
+pub use loadgen::{FaultPlan, LoadMode, LoadReport, LoadSpec};
 pub use metrics::{Metrics, MetricsSnapshot};

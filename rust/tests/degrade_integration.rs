@@ -1,0 +1,203 @@
+//! End-to-end tests for graceful degradation (`mpq serve --degrade`):
+//! the SLO controller walking a frontier of pre-materialized configs
+//! while the real engine hot-swaps under a seeded overload profile with
+//! deterministic fault injection.
+//!
+//! The central contracts:
+//!
+//! * **Determinism** — the controller's decision log derives only from
+//!   the sim-time queue model, so it is byte-identical across reruns,
+//!   worker counts, and kernel paths.
+//! * **Zero drops, epoch purity** — every request submitted during the
+//!   drill is answered exactly once, under precisely the config that
+//!   admitted it, bit-identical to a direct `eval_step` with that
+//!   epoch's bits.
+//!
+//! Hermetic: sim backend, seeded init checkpoint — no training, no
+//! artifacts, no sockets, no wall-clock dependence in any assertion.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mpq::backend::{Backend, KernelChoice, SimBackend};
+use mpq::data::{Dataset, Split};
+use mpq::graph::Graph;
+use mpq::quant::BitsConfig;
+use mpq::serve::{
+    run_degrade, DegradeConfig, Engine, FaultPlan, FrontierStep, LoadMode, LoadSpec, ServeConfig,
+    SimProfile, SloThresholds, Spawner,
+};
+
+const MODEL: &str = "sim_tiny";
+
+fn data() -> Dataset {
+    let be = SimBackend::new(MODEL).unwrap();
+    Dataset::for_task(be.manifest().task, 11)
+}
+
+/// Three frontier levels over the same seeded checkpoint: level 0 serves
+/// everything at 4-bit, level 1 drops one selectable layer to 2-bit,
+/// level 2 drops both.  The `gbops` ratios (1 : 2 : 4 speedup) are what
+/// the sim queue model's capacity scaling keys off.
+fn frontier() -> Vec<FrontierStep> {
+    let be = SimBackend::new(MODEL).unwrap();
+    let graph = Graph::from_manifest(&be.manifest().raw).unwrap();
+    let ck = be.init_checkpoint().unwrap();
+    let selectable: Vec<usize> = graph
+        .layers
+        .iter()
+        .filter(|l| l.fixed_bits.is_none())
+        .map(|l| l.qindex)
+        .collect();
+    assert!(selectable.len() >= 2, "test model needs >= 2 selectable layers");
+    let mut levels = Vec::new();
+    for (i, &(budget, gbops)) in [(0.95, 1.0), (0.70, 0.5), (0.50, 0.25)].iter().enumerate() {
+        let mut bits = BitsConfig::uniform(&graph, 4);
+        for &q in selectable.iter().take(i) {
+            bits.bits[q] = 2;
+        }
+        levels.push(FrontierStep {
+            budget_frac: budget,
+            method: "eagl".to_string(),
+            metric: 0.9 - 0.05 * i as f64,
+            gbops,
+            ckpt: ck.clone(),
+            bits: bits.to_f32(),
+        });
+    }
+    levels
+}
+
+/// The fault plan every drill uses: stalls and spikes are pure functions
+/// of (seed, request index), so both the sim model's extra work and the
+/// real engine's worker stalls hit the same requests every run.
+fn drill_fault() -> FaultPlan {
+    FaultPlan {
+        seed: 1,
+        stall_every: 7,
+        stall_wall: Duration::from_millis(1),
+        stall_work: 16.0,
+        spike_every: 5,
+        spike_work: 12.0,
+    }
+}
+
+/// Engine freshly started on frontier level 0 (epoch 0), with the drill's
+/// fault plan live in the workers (real wall-clock stalls).
+fn degrade_engine(workers: usize, kernel: KernelChoice, frontier: &[FrontierStep]) -> Engine {
+    let spawner: Spawner = Arc::new(move || {
+        Ok(Box::new(SimBackend::with_kernel(MODEL, kernel)?) as Box<dyn Backend>)
+    });
+    Engine::start(
+        spawner,
+        frontier[0].ckpt.clone(),
+        frontier[0].bits.clone(),
+        ServeConfig {
+            workers,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(1),
+            force_per_request: false,
+            warmup: true,
+            fault: Some(drill_fault()),
+            initial_budget: frontier[0].budget_frac,
+            initial_label: frontier[0].label(),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+/// The drill every test runs: a seeded spike profile with the shared
+/// fault plan feeding the sim queue model.
+fn drill_config() -> DegradeConfig {
+    let mut cfg = DegradeConfig::new(SimProfile::named("spike").unwrap());
+    cfg.thresholds = SloThresholds::default();
+    cfg.fault = drill_fault();
+    cfg
+}
+
+#[test]
+fn decision_log_is_byte_identical_across_workers_kernels_and_reruns() {
+    let data = data();
+    let frontier = frontier();
+    let cfg = drill_config();
+    let mut logs: Vec<(String, String)> = Vec::new();
+    for &workers in &[1usize, 4] {
+        for &kernel in &[KernelChoice::Reference, KernelChoice::Packed] {
+            let eng = degrade_engine(workers, kernel, &frontier);
+            let out = run_degrade(&eng, &data, &frontier, &cfg).unwrap();
+            eng.drain().unwrap();
+            assert!(!out.log_text.is_empty());
+            logs.push((format!("w={workers} k={}", kernel.name()), out.log_text));
+        }
+    }
+    // Rerun of the first combination: reruns are also byte-identical.
+    let eng = degrade_engine(1, KernelChoice::Reference, &frontier);
+    let out = run_degrade(&eng, &data, &frontier, &cfg).unwrap();
+    eng.drain().unwrap();
+    logs.push(("rerun w=1 k=reference".to_string(), out.log_text));
+    let (ref_name, ref_log) = &logs[0];
+    for (name, log) in &logs[1..] {
+        assert_eq!(
+            log, ref_log,
+            "decision log diverged: {name} vs {ref_name} — the controller must be \
+             a pure function of (profile, faults, seed), never of scheduling"
+        );
+    }
+}
+
+#[test]
+fn spike_overload_degrades_recovers_and_drops_nothing() {
+    let data = data();
+    let frontier = frontier();
+    let cfg = drill_config();
+    let eng = degrade_engine(2, KernelChoice::Reference, &frontier);
+    let out = run_degrade(&eng, &data, &frontier, &cfg).unwrap();
+    eng.drain().unwrap();
+
+    // The drill exercised both directions of the frontier walk...
+    assert!(out.swaps_down >= 1, "spike must force a downgrade:\n{}", out.log_text);
+    assert!(out.swaps_up >= 1, "quiet tail must recover:\n{}", out.log_text);
+    // ...one level at a time.
+    for w in out.epoch_levels.windows(2) {
+        assert_eq!(
+            (w[0] as i64 - w[1] as i64).abs(),
+            1,
+            "frontier is walked in single steps, got {:?}",
+            out.epoch_levels
+        );
+    }
+
+    // Zero drops: every submitted request answered exactly once
+    // (run_degrade already verified answer-under-admission-epoch).
+    assert_eq!(out.responses.len(), out.requests);
+
+    // Epoch-tagged bit-identity: each response equals a direct eval_step
+    // under the bits of the config that admitted it.
+    let spec = LoadSpec {
+        requests: out.requests,
+        max_request_samples: cfg.max_request_samples,
+        seed: cfg.seed,
+        mode: LoadMode::Closed { concurrency: 1 },
+    };
+    let sizes = mpq::serve::loadgen::request_sizes(&spec);
+    let mut be = SimBackend::new(MODEL).unwrap();
+    for (i, (admitted, r)) in out.responses.iter().enumerate() {
+        assert_eq!(r.id, i as u64);
+        assert_eq!(r.epoch, *admitted);
+        let step = &frontier[out.epoch_levels[*admitted as usize]];
+        let (x, y) = data.batch(
+            Split::Eval,
+            mpq::serve::loadgen::request_index(i),
+            sizes[i],
+        );
+        let (loss, evalout) = be.eval_step(&step.ckpt, &x, &y, &step.bits).unwrap();
+        assert_eq!(
+            r.loss.to_bits(),
+            loss.to_bits(),
+            "request {i} (epoch {admitted}): loss must be bit-identical to direct \
+             eval under its admission epoch's bits"
+        );
+        assert_eq!(r.evalout, evalout, "request {i} (epoch {admitted})");
+    }
+}

@@ -23,7 +23,8 @@ use mpq::graph::Graph;
 use mpq::quant::BitsConfig;
 use mpq::serve::http::client::HttpClient;
 use mpq::serve::{
-    loadgen, Engine, HttpConfig, HttpServer, LoadMode, LoadSpec, ServeConfig, Spawner,
+    loadgen, Engine, FrontierStep, HttpConfig, HttpServer, LoadMode, LoadSpec, ServeConfig,
+    Spawner, SwapRegistry,
 };
 
 const MODEL: &str = "sim_tiny";
@@ -59,6 +60,7 @@ fn engine(workers: usize, kernel: KernelChoice, max_batch: usize, timeout: Durat
             batch_timeout: timeout,
             force_per_request: false,
             warmup: true,
+            ..ServeConfig::default()
         },
     )
     .unwrap()
@@ -523,6 +525,10 @@ fn metrics_text_format_is_pinned_and_counters_monotone() {
         "mpq_http_metrics_scrapes_total",
         "mpq_http_inflight_requests",
         "mpq_engine_queue_samples",
+        "mpq_ctl_epoch",
+        "mpq_ctl_swap_total",
+        "mpq_ctl_active_budget",
+        "mpq_ctl_frontier_levels",
         "mpq_engine_requests_submitted_total",
         "mpq_engine_requests_completed_total",
         "mpq_engine_requests_failed_total",
@@ -605,4 +611,172 @@ fn metrics_text_format_is_pinned_and_counters_monotone() {
     assert_eq!(get(&m2, "mpq_http_requests_answered_total"), 7.0);
     assert_eq!(get(&m2, "mpq_http_metrics_scrapes_total"), 2.0);
     srv.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Hot-swap over the socket (POST /swap) and 503-retry
+// ---------------------------------------------------------------------------
+
+/// A 2-level frontier over the same checkpoint: level 0 is the mixed
+/// config `setup` serves, level 1 drops every selectable layer to 2-bit.
+fn two_level_frontier() -> Vec<FrontierStep> {
+    let be = SimBackend::new(MODEL).unwrap();
+    let graph = Graph::from_manifest(&be.manifest().raw).unwrap();
+    let (ck, bits0, _) = setup();
+    let mut lo = BitsConfig::uniform(&graph, 4);
+    for l in &graph.layers {
+        if l.fixed_bits.is_none() {
+            lo.bits[l.qindex] = 2;
+        }
+    }
+    vec![
+        FrontierStep {
+            budget_frac: 0.95,
+            method: "eagl".to_string(),
+            metric: 0.9,
+            gbops: 1.0,
+            ckpt: ck.clone(),
+            bits: bits0,
+        },
+        FrontierStep {
+            budget_frac: 0.60,
+            method: "eagl".to_string(),
+            metric: 0.8,
+            gbops: 0.5,
+            ckpt: ck,
+            bits: lo.to_f32(),
+        },
+    ]
+}
+
+/// Front door with a swap registry (engine starts on frontier level 0).
+fn frontier_server(workers: usize) -> (HttpServer, String, Vec<FrontierStep>) {
+    let (_, _, data) = setup();
+    let steps = two_level_frontier();
+    let spawner: Spawner = Arc::new(|| {
+        Ok(Box::new(SimBackend::with_kernel(MODEL, KernelChoice::Reference)?) as Box<dyn Backend>)
+    });
+    let eng = Engine::start(
+        spawner,
+        steps[0].ckpt.clone(),
+        steps[0].bits.clone(),
+        ServeConfig {
+            workers,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(1),
+            force_per_request: false,
+            warmup: true,
+            initial_budget: steps[0].budget_frac,
+            initial_label: "eagl@0.95".to_string(),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let reg = Arc::new(SwapRegistry { steps: steps.clone() });
+    let srv = HttpServer::start_with(eng, data, HttpConfig::default(), Some(reg)).unwrap();
+    let addr = srv.local_addr().to_string();
+    (srv, addr, steps)
+}
+
+fn infer_over(c: &mut HttpClient, index: u64, samples: usize) -> mpq::serve::Response {
+    let body = format!("{{\"index\":{index},\"samples\":{samples}}}");
+    let resp = c.post("/infer", body.as_bytes()).unwrap();
+    assert_eq!(resp.status, 200);
+    mpq::serve::http::parse_infer_response(&resp.body).unwrap()
+}
+
+#[test]
+fn swap_without_a_registry_is_503_with_retry_after() {
+    let (srv, addr) = default_server(1, KernelChoice::Reference);
+    let mut c = HttpClient::connect(&addr).unwrap();
+    let resp = c.post("/swap", b"{\"level\":0}").unwrap();
+    assert_eq!(resp.status, 503);
+    assert!(resp.header("retry-after").is_some());
+    // The connection stays usable — this is an application-level refusal.
+    assert_eq!(c.get("/healthz").unwrap().status, 200);
+    srv.shutdown().unwrap();
+}
+
+#[test]
+fn swap_endpoint_hot_swaps_tags_epochs_and_surfaces_ctl_metrics() {
+    let (_, _, data) = setup();
+    let (srv, addr, steps) = frontier_server(2);
+    let mut c = HttpClient::connect(&addr).unwrap();
+    // Pre-swap traffic serves under epoch 0 with level-0 bits.
+    let r0 = infer_over(&mut c, 3, 2);
+    assert_eq!(r0.epoch, 0);
+    let (x, y) = data.batch(mpq::data::Split::Eval, 3, 2);
+    let mut be = SimBackend::new(MODEL).unwrap();
+    let (loss0, out0) = be.eval_step(&steps[0].ckpt, &x, &y, &steps[0].bits).unwrap();
+    assert_eq!(r0.loss.to_bits(), loss0.to_bits());
+    assert_eq!(r0.evalout, out0);
+    // Bad swap bodies fail closed: 400, nothing swapped.
+    assert_eq!(c.post("/swap", b"{\"level\":7}").unwrap().status, 400);
+    assert_eq!(c.post("/swap", b"{\"level\":true}").unwrap().status, 400);
+    assert_eq!(infer_over(&mut c, 4, 1).epoch, 0, "failed swaps must not move the epoch");
+    // A real swap returns the new epoch and every later response is
+    // tagged with it and bit-identical to direct eval under the NEW bits.
+    let resp = c.post("/swap", b"{\"level\":1}").unwrap();
+    assert_eq!(resp.status, 200);
+    let v = mpq::jsonio::parse(&resp.body_str()).unwrap();
+    assert_eq!(v.at(&["epoch"]).as_f64(), Some(1.0));
+    assert_eq!(v.at(&["level"]).as_f64(), Some(1.0));
+    let r1 = infer_over(&mut c, 5, 2);
+    assert_eq!(r1.epoch, 1);
+    let (x, y) = data.batch(mpq::data::Split::Eval, 5, 2);
+    let (loss1, out1) = be.eval_step(&steps[1].ckpt, &x, &y, &steps[1].bits).unwrap();
+    assert_eq!(r1.loss.to_bits(), loss1.to_bits());
+    assert_eq!(r1.evalout, out1);
+    // The controller gauges follow the swap.
+    let text = c.get("/metrics").unwrap().body_str();
+    for want in [
+        "mpq_ctl_epoch 1",
+        "mpq_ctl_swap_total 1",
+        "mpq_ctl_active_budget 0.6",
+        "mpq_ctl_frontier_levels 2",
+    ] {
+        assert!(
+            text.lines().any(|l| l == want),
+            "missing '{want}' in:\n{text}"
+        );
+    }
+    srv.shutdown().unwrap();
+}
+
+#[test]
+fn loadgen_retries_503_sheds_with_backoff_until_answered() {
+    // Capacity 1 with requests parked at a long batch deadline guarantees
+    // concurrent closed-loop clients hit the admission gate.
+    let (srv, addr) = server(
+        1,
+        KernelChoice::Reference,
+        64,
+        Duration::from_millis(20),
+        HttpConfig {
+            queue_capacity: 1,
+            ..HttpConfig::default()
+        },
+    );
+    let spec = LoadSpec {
+        requests: 12,
+        max_request_samples: 2,
+        seed: 5,
+        mode: LoadMode::Closed { concurrency: 4 },
+    };
+    let load = loadgen::run_http(&addr, &spec).unwrap();
+    assert_eq!(load.responses.len(), 12, "every shed request must eventually be answered");
+    assert!(
+        load.retried > 0,
+        "queue capacity 1 under concurrency 4 must shed at least once"
+    );
+    let (snap, hstats) = srv.shutdown().unwrap();
+    assert_eq!(snap.completed, 12);
+    assert_eq!(hstats.admitted, hstats.answered);
+    assert!(
+        hstats.rejected >= load.retried,
+        "each retried request saw at least one 503 ({} rejected, {} retried)",
+        hstats.rejected,
+        load.retried
+    );
+    assert_eq!((hstats.failed, hstats.aborted), (0, 0));
 }

@@ -57,6 +57,7 @@ fn engine(workers: usize, max_batch: usize, timeout: Duration, per_request: bool
             batch_timeout: timeout,
             force_per_request: per_request,
             warmup: true,
+            ..ServeConfig::default()
         },
     )
     .unwrap()
@@ -227,6 +228,7 @@ fn loadgen_is_deterministic_across_worker_counts() {
                 batch_timeout: Duration::from_millis(1),
                 force_per_request: false,
                 warmup: true,
+                ..ServeConfig::default()
             },
         )
         .unwrap();
@@ -288,6 +290,114 @@ fn open_loop_mode_completes_and_matches_direct_eval() {
         assert_bit_identical(r, direct_eval(&ck, &bits, x, y));
     }
     eng.drain().unwrap();
+}
+
+/// A second, distinct serving config over the same checkpoint (every
+/// selectable layer at 2-bit) for hot-swap tests.
+fn alt_bits() -> Vec<f32> {
+    let be = SimBackend::new(MODEL).unwrap();
+    let graph = Graph::from_manifest(&be.manifest().raw).unwrap();
+    let mut bits = BitsConfig::uniform(&graph, 4);
+    for l in &graph.layers {
+        if l.fixed_bits.is_none() {
+            bits.bits[l.qindex] = 2;
+        }
+    }
+    bits.to_f32()
+}
+
+#[test]
+fn hot_swap_under_load_is_epoch_pure_and_bit_identical() {
+    let (ck, bits_a, data) = setup();
+    let bits_b = alt_bits();
+    assert_ne!(bits_a, bits_b, "swap test needs two distinct configs");
+    let eng = engine(2, 8, Duration::from_millis(1), false);
+    let reqs: Vec<(Tensor, Tensor)> = (0..12)
+        .map(|i| data.batch(Split::Eval, 1000 + i, 1 + (i as usize % 4)))
+        .collect();
+    // First half admitted under epoch 0, then an atomic swap, second half
+    // under epoch 1 — the submitter is single-threaded, so the admission
+    // epoch of every request is deterministic.
+    let first: Vec<_> = reqs[..6]
+        .iter()
+        .map(|(x, y)| eng.submit(x.clone(), y.clone()).unwrap())
+        .collect();
+    let epoch = eng
+        .swap(ck.clone(), bits_b.clone(), 0.6, "alt@0.60")
+        .unwrap();
+    assert_eq!(epoch, 1);
+    assert_eq!(eng.current_epoch(), 1);
+    let second: Vec<_> = reqs[6..]
+        .iter()
+        .map(|(x, y)| eng.submit(x.clone(), y.clone()).unwrap())
+        .collect();
+    // Every response is answered under exactly the config that admitted
+    // it: old-epoch requests on the OLD bits, new-epoch on the NEW.
+    for (t, (x, y)) in first.into_iter().zip(&reqs[..6]) {
+        let r = t.wait().unwrap();
+        assert_eq!(r.epoch, 0, "pre-swap request must finish on its admission epoch");
+        assert_bit_identical(&r, direct_eval(&ck, &bits_a, x, y));
+    }
+    for (t, (x, y)) in second.into_iter().zip(&reqs[6..]) {
+        let r = t.wait().unwrap();
+        assert_eq!(r.epoch, 1, "post-swap request must serve the new config");
+        assert_bit_identical(&r, direct_eval(&ck, &bits_b, x, y));
+    }
+    let info = eng.epoch_info();
+    assert_eq!((info.epoch, info.swap_total), (1, 1));
+    assert_eq!(info.label, "alt@0.60");
+    let snap = eng.drain().unwrap();
+    assert_eq!(snap.completed, 12);
+    assert_eq!(snap.failed, 0, "a swap must drop zero requests");
+}
+
+#[test]
+fn failed_swap_fails_closed_and_the_old_config_keeps_serving() {
+    let (ck, bits_a, data) = setup();
+    let eng = engine(1, 8, Duration::from_millis(1), false);
+    // Materialization failure: a bits vector of the wrong length can
+    // never be published.
+    let err = eng
+        .swap(ck.clone(), vec![4.0; 3], 0.5, "bogus")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("bits"), "unexpected error: {err}");
+    assert_eq!(eng.current_epoch(), 0, "failed swap must leave the old epoch live");
+    assert_eq!(eng.epoch_info().swap_total, 0);
+    // And the old config still serves, bit-identically.
+    let (x, y) = data.batch(Split::Eval, 2000, 3);
+    let r = eng.submit(x.clone(), y.clone()).unwrap().wait().unwrap();
+    assert_eq!(r.epoch, 0);
+    assert_bit_identical(&r, direct_eval(&ck, &bits_a, &x, &y));
+    eng.drain().unwrap();
+}
+
+/// Regression test for the drain/swap race: a swap that lands while the
+/// engine is draining must be rejected outright — before the fix it
+/// could publish a new epoch into a queue the drain was about to flush,
+/// waking workers against a dead config.
+#[test]
+fn swap_during_drain_is_rejected() {
+    let (ck, bits_a, data) = setup();
+    let bits_b = alt_bits();
+    // A parked request (long deadline) keeps the queue non-empty while
+    // the drain begins, so the rejection window is actually exercised.
+    let eng = engine(1, 64, Duration::from_secs(30), false);
+    let (x, y) = data.batch(Split::Eval, 3000, 2);
+    let ticket = eng.submit(x.clone(), y.clone()).unwrap();
+    eng.begin_drain();
+    let err = eng
+        .swap(ck.clone(), bits_b, 0.6, "late")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("draining"), "unexpected error: {err}");
+    assert_eq!(eng.current_epoch(), 0);
+    let snap = eng.drain().unwrap();
+    // The parked request was flushed by the drain, on the original epoch.
+    let r = ticket.wait().unwrap();
+    assert_eq!(r.epoch, 0);
+    assert_bit_identical(&r, direct_eval(&ck, &bits_a, &x, &y));
+    assert_eq!(snap.completed, 1);
 }
 
 #[test]
