@@ -7,16 +7,17 @@
 # crate, see rust/Cargo.toml) and skip themselves at runtime when
 # artifacts are absent.
 
-.PHONY: verify test build bench bench-quick packed-smoke exp-smoke serve-smoke http-smoke degrade-smoke verify-pjrt artifacts clean
+.PHONY: verify test build bench bench-quick simd-matrix packed-smoke exp-smoke serve-smoke http-smoke degrade-smoke verify-pjrt artifacts clean
 
-# Tier-1: must pass in a clean checkout.  bench-quick, packed-smoke,
-# exp-smoke, serve-smoke, http-smoke and degrade-smoke ride along as
-# smoke steps so the bench binary (and its BENCH_hotpath.json emission),
-# the packed-kernel CLI path, the manifest-driven experiment path, the
-# serving engine (in-process and over real loopback sockets), and the
-# SLO-driven degradation loop can never silently rot.
+# Tier-1: must pass in a clean checkout.  simd-matrix, bench-quick,
+# packed-smoke, exp-smoke, serve-smoke, http-smoke and degrade-smoke
+# ride along as smoke steps so the simd-feature build, the bench binary
+# (and its BENCH_hotpath.json emission), the packed-kernel CLI path,
+# the manifest-driven experiment path, the serving engine (in-process
+# and over real loopback sockets), and the SLO-driven degradation loop
+# can never silently rot.
 verify:
-	cargo build --release && cargo test -q && $(MAKE) bench-quick && $(MAKE) packed-smoke && $(MAKE) exp-smoke && $(MAKE) serve-smoke && $(MAKE) http-smoke && $(MAKE) degrade-smoke
+	cargo build --release && cargo test -q && $(MAKE) simd-matrix && $(MAKE) bench-quick && $(MAKE) packed-smoke && $(MAKE) exp-smoke && $(MAKE) serve-smoke && $(MAKE) http-smoke && $(MAKE) degrade-smoke
 
 build:
 	cargo build --release
@@ -29,9 +30,23 @@ bench:
 
 # Quick-mode hot-path bench; writes the machine-readable perf record
 # BENCH_hotpath.json at the repo root (see rust/README.md §Performance).
-# Re-running prints speedups against the recorded file.
+# Re-running prints speedups against the recorded file.  The target
+# fails loudly if the record still has no measurements after the run —
+# a seed-shaped `measurements: []` file passing silently would let the
+# whole perf trajectory rot.
 bench-quick:
 	MPQ_BENCH_QUICK=1 MPQ_BENCH_OUT=$(CURDIR)/BENCH_hotpath.json cargo bench --bench perf_hotpath
+	@grep -q '"name"' $(CURDIR)/BENCH_hotpath.json || { \
+	  echo "bench-quick: BENCH_hotpath.json recorded no measurements"; exit 1; }
+
+# The packed-kernel contracts must hold in both builds: the default
+# (scalar|unrolled tiles) and the 16-wide `--features simd` build.  The
+# simd variant is selected at runtime but its tiles only exist behind
+# the feature gate, so the bit-identity property tests and the serve
+# integration tests run once per build.
+simd-matrix:
+	cargo test -q -p mpq --features simd --lib packed
+	cargo test -q -p mpq --features simd --test packed_kernels
 
 # End-to-end smoke of the manifest-driven experiment scheduler: run a
 # tiny two-model manifest on the hermetic sim backend into a scratch
@@ -50,10 +65,13 @@ exp-smoke:
 	rm -rf $(EXP_SMOKE_DIR)
 
 # CLI smoke of the packed-kernel path: one-shot `mpq infer` with the
-# reference kernels and with `--kernel packed` over a shared scratch
-# results root (base checkpoint trained once, reused by both runs).
-# Packed evaluation is bit-identical by construction, so the printed
-# loss/accuracy lines must match byte for byte (timing stripped).
+# reference kernels, then with `--kernel packed` across every tile
+# variant — default (unrolled), scalar, unrolled with row-parallel
+# `--gemm-threads 2`, and the `--features simd` build's simd tiles —
+# over a shared scratch results root (base checkpoint trained once,
+# reused by all runs).  Packed evaluation is bit-identical by
+# construction in every cell, so the printed loss/accuracy lines must
+# match byte for byte (timing stripped).
 PACKED_SMOKE_DIR := $(CURDIR)/.packed-smoke-results
 # (No pipes around cargo: a pipeline would mask the binary's exit status
 # and let a broken infer path still "pass" — redirect, then post-process.)
@@ -66,13 +84,28 @@ packed-smoke:
 	MPQ_RESULTS=$(PACKED_SMOKE_DIR) cargo run --release -q -p mpq -- infer \
 	  --model sim_tiny --backend sim --base-steps 60 --budget 0.7 --method eagl \
 	  --samples 32 --kernel packed > $(PACKED_SMOKE_DIR)/packed.raw
-	@sed 's/, [0-9.]* ms$$//' $(PACKED_SMOKE_DIR)/reference.raw > $(PACKED_SMOKE_DIR)/reference.out
-	@sed 's/, [0-9.]* ms$$//' $(PACKED_SMOKE_DIR)/packed.raw > $(PACKED_SMOKE_DIR)/packed.out
+	MPQ_RESULTS=$(PACKED_SMOKE_DIR) cargo run --release -q -p mpq -- infer \
+	  --model sim_tiny --backend sim --base-steps 60 --budget 0.7 --method eagl \
+	  --samples 32 --kernel packed --packed-variant scalar \
+	  > $(PACKED_SMOKE_DIR)/scalar.raw
+	MPQ_RESULTS=$(PACKED_SMOKE_DIR) cargo run --release -q -p mpq -- infer \
+	  --model sim_tiny --backend sim --base-steps 60 --budget 0.7 --method eagl \
+	  --samples 32 --kernel packed --packed-variant unrolled --gemm-threads 2 \
+	  > $(PACKED_SMOKE_DIR)/threads.raw
+	MPQ_RESULTS=$(PACKED_SMOKE_DIR) cargo run --release -q -p mpq --features simd -- infer \
+	  --model sim_tiny --backend sim --base-steps 60 --budget 0.7 --method eagl \
+	  --samples 32 --kernel packed --packed-variant simd \
+	  > $(PACKED_SMOKE_DIR)/simd.raw
+	@for v in reference packed scalar threads simd; do \
+	  sed 's/, [0-9.]* ms$$//' $(PACKED_SMOKE_DIR)/$$v.raw > $(PACKED_SMOKE_DIR)/$$v.out; \
+	done
 	@test -s $(PACKED_SMOKE_DIR)/reference.out || { echo "packed-smoke: empty infer output"; exit 1; }
-	@cmp -s $(PACKED_SMOKE_DIR)/reference.out $(PACKED_SMOKE_DIR)/packed.out || { \
-	  echo "packed-smoke: packed vs reference eval output differs:"; \
-	  diff $(PACKED_SMOKE_DIR)/reference.out $(PACKED_SMOKE_DIR)/packed.out; exit 1; }
-	@echo "packed-smoke OK (packed eval bit-identical to reference)"
+	@for v in packed scalar threads simd; do \
+	  cmp -s $(PACKED_SMOKE_DIR)/reference.out $(PACKED_SMOKE_DIR)/$$v.out || { \
+	    echo "packed-smoke: $$v infer output differs from reference:"; \
+	    diff $(PACKED_SMOKE_DIR)/reference.out $(PACKED_SMOKE_DIR)/$$v.out; exit 1; }; \
+	done
+	@echo "packed-smoke OK (scalar/unrolled/simd x gemm-threads eval bit-identical to reference)"
 	rm -rf $(PACKED_SMOKE_DIR)
 
 # End-to-end smoke of the serving engine: loadgen drives `mpq serve` on

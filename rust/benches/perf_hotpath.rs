@@ -19,7 +19,7 @@
 
 use std::collections::BTreeMap;
 
-use mpq::backend::{Backend, KernelChoice, TrainState};
+use mpq::backend::{Backend, KernelChoice, KernelTuning, PackedVariant, TrainState};
 use mpq::bench::{coordinator_or_skip, fmt_s, header, measure, try_measure, BenchSink, Measurement};
 use mpq::data::{Dataset, Split};
 use mpq::kernels::{gemm, packed};
@@ -158,6 +158,69 @@ fn main() -> mpq::Result<()> {
                 pk.packed_bytes(),
                 4 * fi * fo
             );
+
+            // Variant × gemm-threads grid (the SIMD/unrolled + row-parallel
+            // trajectory): results are bit-identical across every cell —
+            // asserted in the kernel tests — so these rows measure pure
+            // speed.  The untagged rows above keep their PR 5 names (they
+            // now run the default = unrolled tiles).
+            let mut i32_means: BTreeMap<(&'static str, usize), f64> = BTreeMap::new();
+            #[allow(unused_mut)]
+            let mut variants = vec![PackedVariant::Scalar, PackedVariant::Unrolled];
+            #[cfg(feature = "simd")]
+            variants.push(PackedVariant::Simd);
+            for &v in &variants {
+                for &t in &[1usize, 4] {
+                    let m = measure(
+                        &format!("gemm packed lut {} {fi}x{fo} b={bits} t={t}", v.name()),
+                        1,
+                        iters,
+                        || {
+                            packed::gemm_bias_packed_v(&a, &pk, &bias, &mut z, batch, v, t);
+                            std::hint::black_box(&z);
+                        },
+                    );
+                    note(&mut sink, &baseline, m);
+                    let m = measure(
+                        &format!("gemm packed i32 {} {fi}x{fo} b={bits} t={t}", v.name()),
+                        1,
+                        iters,
+                        || {
+                            packed::gemm_bias_packed_i32_v(
+                                &acodes, &pk, &bias, sa * sw, &mut z, batch, v, t,
+                            );
+                            std::hint::black_box(&z);
+                        },
+                    );
+                    i32_means.insert((v.name(), t), m.mean_s);
+                    note(&mut sink, &baseline, m);
+                }
+            }
+            for &t in &[1usize, 4] {
+                if let (Some(&s), Some(&u)) =
+                    (i32_means.get(&("scalar", t)), i32_means.get(&("unrolled", t)))
+                {
+                    println!(
+                        "{:<44} {:>6.2}x  ({} -> {})",
+                        format!("  -> i32 unrolled vs scalar b={bits} t={t}"),
+                        s / u,
+                        fmt_s(s),
+                        fmt_s(u)
+                    );
+                }
+                #[cfg(feature = "simd")]
+                if let (Some(&s), Some(&d)) =
+                    (i32_means.get(&("scalar", t)), i32_means.get(&("simd", t)))
+                {
+                    println!(
+                        "{:<44} {:>6.2}x  ({} -> {})",
+                        format!("  -> i32 simd vs scalar b={bits} t={t}"),
+                        s / d,
+                        fmt_s(s),
+                        fmt_s(d)
+                    );
+                }
+            }
         }
     }
 
@@ -208,8 +271,11 @@ fn main() -> mpq::Result<()> {
     // (`--kernel` on `mpq serve`; packed shares one bit-packed weight
     // materialization across all workers).  Reference rows keep their
     // original names so the recorded trajectory stays comparable; packed
-    // rows carry a `kernel=packed` tag, and a packed-vs-reference
-    // wall/req comparison prints per configuration.
+    // rows carry a `kernel=packed` tag (and now run the default unrolled
+    // tiles), a `variant=scalar` row pins the pre-variant tiles, and —
+    // under `--features simd` — a `variant=simd` row measures the 16-wide
+    // tiles.  Packed-vs-reference and variant-vs-scalar wall/req
+    // comparisons print per configuration.
     {
         use mpq::serve::{loadgen, Engine, LoadMode, LoadSpec, ServeConfig, Spawner};
         let be = mpq::backend::SimBackend::new("sim_skew")?;
@@ -219,12 +285,27 @@ fn main() -> mpq::Result<()> {
         let data = Dataset::for_task(mpq::backend::Task::Cls, 7);
         let requests = if quick { 64 } else { 256 };
         let mut wall_per_req: BTreeMap<(&'static str, usize, usize), f64> = BTreeMap::new();
-        for &(kernel, tag) in &[
-            (KernelChoice::Reference, ""),
-            (KernelChoice::Packed, "kernel=packed "),
-        ] {
+        #[allow(unused_mut)]
+        let mut entries: Vec<(&'static str, &'static str, KernelChoice, KernelTuning)> = vec![
+            ("reference", "", KernelChoice::Reference, KernelTuning::default()),
+            ("packed", "kernel=packed ", KernelChoice::Packed, KernelTuning::default()),
+            (
+                "packed-scalar",
+                "kernel=packed variant=scalar ",
+                KernelChoice::Packed,
+                KernelTuning { variant: PackedVariant::Scalar, gemm_threads: 1 },
+            ),
+        ];
+        #[cfg(feature = "simd")]
+        entries.push((
+            "packed-simd",
+            "kernel=packed variant=simd ",
+            KernelChoice::Packed,
+            KernelTuning { variant: PackedVariant::Simd, gemm_threads: 1 },
+        ));
+        for &(label, tag, kernel, tuning) in &entries {
             let spawner: Spawner = std::sync::Arc::new(move || {
-                Ok(Box::new(mpq::backend::SimBackend::with_kernel("sim_skew", kernel)?)
+                Ok(Box::new(mpq::backend::SimBackend::with_tuning("sim_skew", kernel, tuning)?)
                     as Box<dyn Backend>)
             });
             for &(workers, max_batch) in &[(1usize, 1usize), (1, 32), (4, 1), (4, 32)] {
@@ -257,7 +338,7 @@ fn main() -> mpq::Result<()> {
                 };
                 note(&mut sink, &baseline, m);
                 let per_req = load.wall_s / requests as f64;
-                wall_per_req.insert((kernel.name(), workers, max_batch), per_req);
+                wall_per_req.insert((label, workers, max_batch), per_req);
                 let m = Measurement {
                     name: format!("serve sim_skew {tag}w={workers} mb={max_batch} wall/req"),
                     iters: requests,
@@ -289,6 +370,31 @@ fn main() -> mpq::Result<()> {
                     r / p,
                     fmt_s(r),
                     fmt_s(p)
+                );
+            }
+            if let (Some(&s), Some(&u)) = (
+                wall_per_req.get(&("packed-scalar", workers, max_batch)),
+                wall_per_req.get(&("packed", workers, max_batch)),
+            ) {
+                println!(
+                    "{:<44} {:>6.2}x  ({} -> {})",
+                    format!("  -> packed unrolled vs scalar w={workers} mb={max_batch}"),
+                    s / u,
+                    fmt_s(s),
+                    fmt_s(u)
+                );
+            }
+            #[cfg(feature = "simd")]
+            if let (Some(&s), Some(&d)) = (
+                wall_per_req.get(&("packed-scalar", workers, max_batch)),
+                wall_per_req.get(&("packed-simd", workers, max_batch)),
+            ) {
+                println!(
+                    "{:<44} {:>6.2}x  ({} -> {})",
+                    format!("  -> packed simd vs scalar w={workers} mb={max_batch}"),
+                    s / d,
+                    fmt_s(s),
+                    fmt_s(d)
                 );
             }
         }

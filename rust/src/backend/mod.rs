@@ -35,6 +35,7 @@ pub mod sim;
 use crate::ckpt::Checkpoint;
 use crate::tensor::Tensor;
 
+pub use crate::kernels::packed::PackedVariant;
 pub use manifest::{EntrySpec, Manifest, Task, TensorSpec};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
@@ -82,6 +83,28 @@ impl KernelChoice {
             "packed" => Ok(KernelChoice::Packed),
             other => crate::bail!("unknown kernel '{other}' (expected packed|reference)"),
         }
+    }
+}
+
+/// How the packed kernels execute — which [`PackedVariant`] tile set and
+/// how many intra-layer GEMM row-band threads.  Orthogonal to
+/// [`KernelChoice`]: tuning only takes effect on the packed path, and
+/// every combination satisfies the same accuracy contracts (variants are
+/// bit-identical on the ε = 0 kernels, row bands bit-identical at any
+/// width — see [`crate::kernels::packed`]).  Sim-only, like the packed
+/// kernels themselves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelTuning {
+    pub variant: PackedVariant,
+    /// Row-parallel width for the packed GEMMs.  Keep 1 inside serve
+    /// workers (the engine already runs one worker per core); `mpq
+    /// infer`/eval paths default wider.
+    pub gemm_threads: usize,
+}
+
+impl Default for KernelTuning {
+    fn default() -> KernelTuning {
+        KernelTuning { variant: PackedVariant::default(), gemm_threads: 1 }
     }
 }
 
@@ -357,15 +380,28 @@ pub fn open(kind: BackendKind, model: &str) -> crate::Result<Box<dyn Backend>> {
     open_with(kind, model, KernelChoice::Reference)
 }
 
-/// Open a backend for `model` with an explicit [`KernelChoice`].  The
-/// packed kernels are sim-only; requesting them on pjrt fails closed.
+/// Open a backend for `model` with an explicit [`KernelChoice`] and the
+/// default [`KernelTuning`].  The packed kernels are sim-only; requesting
+/// them on pjrt fails closed.
 pub fn open_with(
     kind: BackendKind,
     model: &str,
     kernel: KernelChoice,
 ) -> crate::Result<Box<dyn Backend>> {
+    open_tuned(kind, model, kernel, KernelTuning::default())
+}
+
+/// Open a backend with explicit kernel choice *and* tuning
+/// (variant + gemm-threads).  Tuning only affects the sim packed path;
+/// pjrt keeps the reference-only gate.
+pub fn open_tuned(
+    kind: BackendKind,
+    model: &str,
+    kernel: KernelChoice,
+    tuning: KernelTuning,
+) -> crate::Result<Box<dyn Backend>> {
     match kind {
-        BackendKind::Sim => Ok(Box::new(SimBackend::with_kernel(model, kernel)?)),
+        BackendKind::Sim => Ok(Box::new(SimBackend::with_tuning(model, kernel, tuning)?)),
         BackendKind::Pjrt => {
             crate::ensure!(
                 kernel == KernelChoice::Reference,
@@ -430,6 +466,17 @@ mod tests {
         assert!(err.contains("sim backend"), "{err}");
         // Sim opens with either kernel.
         assert!(open_with(BackendKind::Sim, "sim_tiny", KernelChoice::Packed).is_ok());
+    }
+
+    #[test]
+    fn kernel_tuning_defaults_and_open_tuned() {
+        let d = KernelTuning::default();
+        assert_eq!(d.variant, PackedVariant::Unrolled);
+        assert_eq!(d.gemm_threads, 1);
+        // Tuned open works for both kernels on sim.
+        let t = KernelTuning { variant: PackedVariant::Scalar, gemm_threads: 2 };
+        assert!(open_tuned(BackendKind::Sim, "sim_tiny", KernelChoice::Packed, t).is_ok());
+        assert!(open_tuned(BackendKind::Sim, "sim_tiny", KernelChoice::Reference, t).is_ok());
     }
 
     #[test]

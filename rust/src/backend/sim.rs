@@ -193,6 +193,12 @@ fn net_refs<'a>(layers: &[SimLayer], params: &[&'a Tensor]) -> crate::Result<Vec
 /// Codes come from `pinned` (an adopted [`PackedNet`] — the serving
 /// engine's share-across-workers path, no re-fingerprinting) when
 /// present, else from the per-layer `pcache` memo.
+///
+/// `tuning` selects the tile variant and the intra-layer row-band width
+/// — both inside the kernels' documented contracts, so results here are
+/// bit-identical across every variant and thread count (the ε = 0 LUT
+/// kernel carries every interior layer; the head epilogue stays within
+/// [`packed::PACKED_LOGIT_EPS`] by the same argument at any tuning).
 #[allow(clippy::too_many_arguments)]
 fn packed_forward(
     layers: &[SimLayer],
@@ -204,6 +210,7 @@ fn packed_forward(
     fwd: &mut Vec<kernels::LayerWs>,
     batch: usize,
     head_epilogue: bool,
+    tuning: crate::backend::KernelTuning,
 ) -> crate::Result<()> {
     let n_layers = layers.len();
     if let Some(pn) = pinned {
@@ -235,9 +242,15 @@ fn packed_forward(
         cur.z.clear();
         cur.z.resize(batch * fo, 0.0);
         if li == n_layers - 1 && head_epilogue {
-            packed::gemm_bias_packed_epilogue(a_in, &pk, p.b, &mut cur.z, batch);
+            packed::gemm_bias_packed_epilogue_v(
+                a_in, &pk, p.b, &mut cur.z, batch,
+                tuning.variant, tuning.gemm_threads,
+            );
         } else {
-            packed::gemm_bias_packed(a_in, &pk, p.b, &mut cur.z, batch);
+            packed::gemm_bias_packed_v(
+                a_in, &pk, p.b, &mut cur.z, batch,
+                tuning.variant, tuning.gemm_threads,
+            );
         }
         if li == n_layers - 1 {
             cur.act_in.clear();
@@ -423,6 +436,10 @@ pub struct SimBackend {
     /// Which forward kernels `eval_step`/`infer_step` execute with
     /// (training, vHv and EAGL always run the reference kernels).
     kernel: KernelChoice,
+    /// Packed-path tuning: tile variant + intra-layer row-band width.
+    /// Result-invisible on the packed eval/infer path (see
+    /// [`packed_forward`]); ignored by the reference kernels.
+    tuning: crate::backend::KernelTuning,
     /// Adopted shared packed codes (see [`Backend::adopt_shared`]): when
     /// present, the packed path uses them directly instead of
     /// re-fingerprinting the weights per call — serving executes an
@@ -437,8 +454,19 @@ impl SimBackend {
         SimBackend::with_kernel(model, KernelChoice::Reference)
     }
 
-    /// Build the sim backend with an explicit [`KernelChoice`].
+    /// Build the sim backend with an explicit [`KernelChoice`] and the
+    /// default [`crate::backend::KernelTuning`].
     pub fn with_kernel(model: &str, kernel: KernelChoice) -> crate::Result<SimBackend> {
+        SimBackend::with_tuning(model, kernel, crate::backend::KernelTuning::default())
+    }
+
+    /// Build the sim backend with explicit kernel choice and packed-path
+    /// tuning (variant + gemm-threads).
+    pub fn with_tuning(
+        model: &str,
+        kernel: KernelChoice,
+        tuning: crate::backend::KernelTuning,
+    ) -> crate::Result<SimBackend> {
         let layers = layers_for(model).ok_or_else(|| {
             crate::err!(
                 "unknown sim model '{model}' (available: {}); artifact models \
@@ -472,6 +500,7 @@ impl SimBackend {
             pcache: PackedWeightCache::new(n_layers),
             fcache: FeatCache::new(FEAT_CACHE_CAP),
             kernel,
+            tuning,
             packed_pinned: None,
         })
     }
@@ -656,6 +685,7 @@ impl SimBackend {
                 &mut self.ws.fwd,
                 batch,
                 false,
+                self.tuning,
             )?,
         }
         let logits = &self.ws.fwd[self.layers.len() - 1].out;
@@ -707,6 +737,7 @@ impl SimBackend {
                 &mut self.ws.fwd,
                 batch,
                 true,
+                self.tuning,
             )?,
         }
         let logits = self.ws.fwd[self.layers.len() - 1].out.clone();

@@ -274,6 +274,19 @@ impl Coordinator<Box<dyn Backend>> {
         Self::open_kernel_at(kind, model, data_seed, results_dir, KernelChoice::Reference)
     }
 
+    /// [`open_kernel`](Self::open_kernel) with explicit packed-path
+    /// tuning (variant + gemm-threads), applied to the main backend and
+    /// every parallel-sweep worker.
+    pub fn open_tuned(
+        kind: BackendKind,
+        model: &str,
+        data_seed: u64,
+        kernel: KernelChoice,
+        tuning: backend::KernelTuning,
+    ) -> crate::Result<Self> {
+        Self::open_tuned_at(kind, model, data_seed, results_dir_for(kind, model), kernel, tuning)
+    }
+
     /// The fully explicit constructor behind [`open`](Self::open) /
     /// [`open_kernel`](Self::open_kernel) / [`open_at`](Self::open_at).
     pub fn open_kernel_at(
@@ -283,10 +296,31 @@ impl Coordinator<Box<dyn Backend>> {
         results_dir: PathBuf,
         kernel: KernelChoice,
     ) -> crate::Result<Self> {
-        let be = backend::open_with(kind, model, kernel)?;
+        Self::open_tuned_at(
+            kind,
+            model,
+            data_seed,
+            results_dir,
+            kernel,
+            backend::KernelTuning::default(),
+        )
+    }
+
+    /// [`open_kernel_at`](Self::open_kernel_at) plus packed-path tuning.
+    pub fn open_tuned_at(
+        kind: BackendKind,
+        model: &str,
+        data_seed: u64,
+        results_dir: PathBuf,
+        kernel: KernelChoice,
+        tuning: backend::KernelTuning,
+    ) -> crate::Result<Self> {
+        let be = backend::open_tuned(kind, model, kernel, tuning)?;
         let mut co = Coordinator::with_backend(be, data_seed, results_dir)?;
         let model_s = model.to_string();
-        co.spawner = Some(Box::new(move || backend::open_with(kind, &model_s, kernel)));
+        co.spawner = Some(Box::new(move || {
+            backend::open_tuned(kind, &model_s, kernel, tuning)
+        }));
         Ok(co)
     }
 
@@ -311,14 +345,24 @@ impl Coordinator<SimBackend> {
         data_seed: u64,
         kernel: KernelChoice,
     ) -> crate::Result<Self> {
+        Self::sim_tuned(model, data_seed, kernel, backend::KernelTuning::default())
+    }
+
+    /// [`sim_kernel`](Self::sim_kernel) plus packed-path tuning.
+    pub fn sim_tuned(
+        model: &str,
+        data_seed: u64,
+        kernel: KernelChoice,
+        tuning: backend::KernelTuning,
+    ) -> crate::Result<Self> {
         let mut co = Coordinator::with_backend(
-            SimBackend::with_kernel(model, kernel)?,
+            SimBackend::with_tuning(model, kernel, tuning)?,
             data_seed,
             crate::results_root().join(model),
         )?;
         let model_s = model.to_string();
         co.spawner = Some(Box::new(move || -> crate::Result<Box<dyn Backend>> {
-            Ok(Box::new(SimBackend::with_kernel(&model_s, kernel)?))
+            Ok(Box::new(SimBackend::with_tuning(&model_s, kernel, tuning)?))
         }));
         Ok(co)
     }

@@ -17,7 +17,9 @@
 //!   2-bit) with LUT-decode and integer-MAC GEMMs for the serve hot
 //!   path; the LUT kernel preserves the reference accumulation order
 //!   bit-for-bit, the scale-in-epilogue kernels carry a documented
-//!   epsilon contract ([`packed::PACKED_LOGIT_EPS`]).
+//!   epsilon contract ([`packed::PACKED_LOGIT_EPS`]).  Each tile ships
+//!   scalar/unrolled/simd variants ([`packed::PackedVariant`]) and
+//!   optional row-band parallelism, all inside the same contracts.
 //! * [`cache`] — content-fingerprint memos for LSQ weight codes (per
 //!   `(layer, bits, step, weights)`), their bit-packed counterparts
 //!   ([`PackedWeightCache`], same invalidation), and Gabor-energy
@@ -48,6 +50,11 @@ pub struct LayerWs {
     pub out: Vec<f32>,
     /// Activation-below-clamp STE mask; empty for the head layer.
     pub act_in: Vec<bool>,
+    /// `u8` activation codes for the integer-MAC path
+    /// ([`packed::quantize_acts_u8`] output) — hoisted here so the serve
+    /// hot path reuses one buffer per layer instead of reallocating per
+    /// request.
+    pub acodes: Vec<u8>,
 }
 
 /// Reusable scratch for one forward/backward sweep.
@@ -63,6 +70,19 @@ pub struct Workspace {
     pub dbr: Vec<f32>,
     /// Featurizer grayscale scratch.
     pub gray: Vec<f32>,
+}
+
+impl Workspace {
+    /// Grow `fwd` to `n_layers` slots (idempotent) and return the slice —
+    /// the one call sites need before walking a packed/integer forward so
+    /// per-layer scratch (including [`LayerWs::acodes`]) persists across
+    /// requests.
+    pub fn ensure_layers(&mut self, n_layers: usize) -> &mut [LayerWs] {
+        while self.fwd.len() < n_layers {
+            self.fwd.push(LayerWs::default());
+        }
+        &mut self.fwd[..n_layers]
+    }
 }
 
 /// Per-layer gradient buffers (reused; two live instances let the

@@ -59,6 +59,36 @@
 //!   [`super::gemm::relu_quant_act`], but keeping the integer code
 //!   instead of the rescaled `f32` value.
 //!
+//! ## Variants and row-parallelism
+//!
+//! Every kernel dispatches over a [`PackedVariant`]:
+//!
+//! * `Scalar` — the original code-at-a-time loops (`pattern_at` per MAC).
+//!   The accuracy baseline every other variant is tested against.
+//! * `Unrolled` (default) — whole-byte decode through 256-entry per-byte
+//!   tables ([`DECODE2`]/[`DECODE4`]: 4 sign-extended codes per lookup at
+//!   2-bit, 2 at 4-bit) feeding explicit 8-wide inner blocks.  The `i32`
+//!   tile uses 8 independent lane accumulators (i32 addition is
+//!   associative, so this is **bit-identical** to scalar); the epilogue
+//!   tile reassociates its f32 lanes inside the [`PACKED_LOGIT_EPS`]
+//!   contract; the ε = 0 LUT tile accelerates **only the decode** — its
+//!   add order (bias first, `i` ascending, zero-skip) is untouched, so it
+//!   stays bit-identical to the reference at any variant.
+//! * `Simd` (`--features simd`) — 16-wide blocks over the same decode
+//!   tables, written as fixed-size-array lane code the autovectorizer
+//!   maps onto SSE/AVX/NEON.  Same contracts as `Unrolled`; selecting it
+//!   in a build without the feature fails closed at parse time.
+//!
+//! Each output element `z[b,o]` is produced by exactly one dot product,
+//! so the `_v` entry points ([`gemm_bias_packed_v`] etc.) additionally
+//! partition `fan_out` into contiguous row bands over
+//! [`crate::coordinator::job_pool`] when `threads > 1`.  Every band runs
+//! the unchanged arithmetic for its own rows and results are scattered
+//! back in band order — row-parallel output is bit-identical at any
+//! thread count for all three tiles by construction.  Keep `threads = 1`
+//! inside serve workers (the engine already runs one worker per core);
+//! `mpq infer`/eval paths default to the worker-pool width.
+//!
 //! [`PackedNet`] bundles one model's packed layers behind `Arc`s so the
 //! serving engine can materialize codes **once** and share them across
 //! all N workers (see `Backend::prepare_shared` / `adopt_shared`).
@@ -74,6 +104,72 @@ use crate::quant;
 /// error is ~1e-5 worst-case; 1e-3 leaves two orders of margin.
 /// [`gemm_bias_packed`] needs no epsilon: it is bit-identical (ε = 0).
 pub const PACKED_LOGIT_EPS: f32 = 1e-3;
+
+/// Which implementation of the packed GEMM tiles to run.  All variants
+/// satisfy the same per-kernel accuracy contracts (see the module docs);
+/// the choice only trades decode/accumulation strategy for speed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PackedVariant {
+    /// Code-at-a-time loops — the accuracy baseline.
+    Scalar,
+    /// Per-byte decode tables + 8-wide unrolled blocks (stable Rust, no
+    /// feature flags).  The default.
+    #[default]
+    Unrolled,
+    /// 16-wide lane blocks behind `--features simd`.  In a build without
+    /// the feature, dispatch falls back to `Unrolled` (same contracts)
+    /// and [`PackedVariant::parse`] fails closed.
+    Simd,
+}
+
+impl PackedVariant {
+    pub fn name(self) -> &'static str {
+        match self {
+            PackedVariant::Scalar => "scalar",
+            PackedVariant::Unrolled => "unrolled",
+            PackedVariant::Simd => "simd",
+        }
+    }
+
+    /// Parse a `--packed-variant` value.  `simd` is only accepted when
+    /// the build actually carries the simd tiles, so a serve fleet can
+    /// never silently run a slower fallback than the flag promised.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "scalar" => Ok(PackedVariant::Scalar),
+            "unrolled" => Ok(PackedVariant::Unrolled),
+            "simd" => {
+                #[cfg(feature = "simd")]
+                {
+                    Ok(PackedVariant::Simd)
+                }
+                #[cfg(not(feature = "simd"))]
+                {
+                    crate::bail!(
+                        "packed variant 'simd' needs a build with --features simd \
+                         (this build has scalar|unrolled)"
+                    )
+                }
+            }
+            other => crate::bail!(
+                "unknown packed variant '{other}' (expected scalar|unrolled|simd)"
+            ),
+        }
+    }
+}
+
+/// Resolve the GEMM row-parallelism width from `MPQ_GEMM_THREADS`,
+/// falling back to `fallback` when the variable is unset, empty, or not
+/// a positive integer.  CLI `--gemm-threads` overrides both.
+pub fn gemm_threads_from_env(fallback: usize) -> usize {
+    match std::env::var("MPQ_GEMM_THREADS") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => fallback,
+        },
+        Err(_) => fallback,
+    }
+}
 
 /// One layer's bit-packed weight codes plus decode tables.
 #[derive(Debug, Clone)]
@@ -127,6 +223,123 @@ fn pattern_at(
 ) -> usize {
     let byte = row[i >> cpb_shift];
     ((byte >> (((i & slot_mask) as u32) * field)) & mask) as usize
+}
+
+/// Sign-extended code at position `i` of a packed row — the scalar-tail
+/// decode the unrolled/simd tiles use past their last full block.
+#[inline]
+fn code_at(pk: &PackedLayer, row: &[u8], i: usize) -> i32 {
+    let mask = ((1u16 << pk.field) - 1) as u8;
+    sign_extend(
+        pattern_at(row, i, pk.field, pk.cpb_shift, pk.codes_per_byte - 1, mask) as u8,
+        pk.field,
+    )
+}
+
+const fn build_decode2() -> [[i8; 4]; 256] {
+    let mut t = [[0i8; 4]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        let mut s = 0usize;
+        while s < 4 {
+            let v = ((b >> (2 * s)) & 0b11) as i8;
+            t[b][s] = if v >= 2 { v - 4 } else { v };
+            s += 1;
+        }
+        b += 1;
+    }
+    t
+}
+
+const fn build_decode4() -> [[i8; 2]; 256] {
+    let mut t = [[0i8; 2]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        let mut s = 0usize;
+        while s < 2 {
+            let v = ((b >> (4 * s)) & 0xF) as i8;
+            t[b][s] = if v >= 8 { v - 16 } else { v };
+            s += 1;
+        }
+        b += 1;
+    }
+    t
+}
+
+/// Whole-byte decode table at 2-bit fields: one lookup yields all 4
+/// sign-extended codes of a byte (LSB-first slot order, matching the
+/// packing layout).
+static DECODE2: [[i8; 4]; 256] = build_decode2();
+/// Whole-byte decode table at 4-bit fields: one lookup yields both
+/// sign-extended codes of a byte.
+static DECODE4: [[i8; 2]; 256] = build_decode4();
+
+/// Decode 8 consecutive codes starting at `base` (a multiple of 8, so
+/// every field width lands on a byte boundary) into `dst`.
+#[inline]
+fn decode8(row: &[u8], base: usize, field: u32, dst: &mut [i32; 8]) {
+    match field {
+        2 => {
+            for s in 0..2 {
+                let d = &DECODE2[row[(base >> 2) + s] as usize];
+                for j in 0..4 {
+                    dst[s * 4 + j] = d[j] as i32;
+                }
+            }
+        }
+        4 => {
+            for s in 0..4 {
+                let d = &DECODE4[row[(base >> 1) + s] as usize];
+                dst[s * 2] = d[0] as i32;
+                dst[s * 2 + 1] = d[1] as i32;
+            }
+        }
+        _ => {
+            for j in 0..8 {
+                dst[j] = row[base + j] as i8 as i32;
+            }
+        }
+    }
+}
+
+/// Decode 16 consecutive codes starting at `base` (a multiple of 16).
+#[cfg(feature = "simd")]
+#[inline]
+fn decode16(row: &[u8], base: usize, field: u32, dst: &mut [i32; 16]) {
+    match field {
+        2 => {
+            for s in 0..4 {
+                let d = &DECODE2[row[(base >> 2) + s] as usize];
+                for j in 0..4 {
+                    dst[s * 4 + j] = d[j] as i32;
+                }
+            }
+        }
+        4 => {
+            for s in 0..8 {
+                let d = &DECODE4[row[(base >> 1) + s] as usize];
+                dst[s * 2] = d[0] as i32;
+                dst[s * 2 + 1] = d[1] as i32;
+            }
+        }
+        _ => {
+            for j in 0..16 {
+                dst[j] = row[base + j] as i8 as i32;
+            }
+        }
+    }
+}
+
+/// Fixed pairwise reduction of 16 f32 lanes — one deterministic tree
+/// shape regardless of target, so simd results are reproducible.
+#[cfg(feature = "simd")]
+#[inline]
+fn tree_sum16_f32(l: &[f32; 16]) -> f32 {
+    let q0 = (l[0] + l[1]) + (l[2] + l[3]);
+    let q1 = (l[4] + l[5]) + (l[6] + l[7]);
+    let q2 = (l[8] + l[9]) + (l[10] + l[11]);
+    let q3 = (l[12] + l[13]) + (l[14] + l[15]);
+    (q0 + q1) + (q2 + q3)
 }
 
 impl PackedLayer {
@@ -212,27 +425,33 @@ pub fn pack(
     })
 }
 
-/// Forward tile over packed rows with LUT decode:
-/// `z[b,o] = bias[o] + Σ_i a[b,i] · lut[code(o,i)]`.
-///
-/// Accumulation contract: bias first, `i` ascending, exact skip of zero
-/// activations — the identical add sequence as
-/// [`super::gemm::gemm_bias_wt`] over identical operand bits, so the
-/// result is **bit-identical** to the reference fake-quant forward.
-pub fn gemm_bias_packed(
+// ---------------------------------------------------------------------------
+// Band implementations.  Every kernel body below computes rows `o0..o1`
+// of the output into `z`, whose row stride is the band width `o1 - o0`
+// (the full-output case is simply the band `0..fan_out`).  Keeping the
+// tiles in band form is what makes row-parallelism bit-identical: each
+// `z[b,o]` is produced by exactly one band running the unchanged
+// arithmetic.
+// ---------------------------------------------------------------------------
+
+fn lut_scalar_band(
     a: &[f32],
     pk: &PackedLayer,
     bias: &[f32],
     z: &mut [f32],
     batch: usize,
+    o0: usize,
+    o1: usize,
 ) {
-    let (fi, fo) = (pk.fan_in, pk.fan_out);
+    let fi = pk.fan_in;
+    let bw = o1 - o0;
     let mask = ((1u16 << pk.field) - 1) as u8;
     let (shift, slot) = (pk.cpb_shift, pk.codes_per_byte - 1);
     for bi in 0..batch {
         let arow = &a[bi * fi..(bi + 1) * fi];
-        let zrow = &mut z[bi * fo..(bi + 1) * fo];
-        for (o, zv) in zrow.iter_mut().enumerate() {
+        let zrow = &mut z[bi * bw..(bi + 1) * bw];
+        for (k, zv) in zrow.iter_mut().enumerate() {
+            let o = o0 + k;
             let row = &pk.data[o * pk.row_bytes..(o + 1) * pk.row_bytes];
             let mut acc = bias[o];
             for (i, &av) in arow.iter().enumerate() {
@@ -245,27 +464,101 @@ pub fn gemm_bias_packed(
     }
 }
 
-/// Forward tile with the per-layer LSQ scale applied **once in the
-/// epilogue**: `acc = Σ_i a[b,i] · code(o,i)` in f32 (codes are exact
-/// small integers), then `z[b,o] = bias[o] + sw · acc`.
-///
-/// Not bit-identical to the reference — the scale reassociation costs a
-/// bounded rounding difference ([`PACKED_LOGIT_EPS`]).  Safe only where
-/// no activation quantizer consumes `z` (the logits layer).
-pub fn gemm_bias_packed_epilogue(
+/// Decode-accelerated ε = 0 tile: whole-byte table lookups, but the add
+/// sequence (bias first, `i` ascending, zero activations skipped) is the
+/// scalar tile's exactly — only the pattern extraction changed, so the
+/// bit-identity contract survives.  Shared by `Unrolled` and `Simd`
+/// dispatch: the pinned add order leaves no wider formulation.
+fn lut_unrolled_band(
     a: &[f32],
     pk: &PackedLayer,
     bias: &[f32],
     z: &mut [f32],
     batch: usize,
+    o0: usize,
+    o1: usize,
 ) {
-    let (fi, fo) = (pk.fan_in, pk.fan_out);
+    let fi = pk.fan_in;
+    let bw = o1 - o0;
+    for bi in 0..batch {
+        let arow = &a[bi * fi..(bi + 1) * fi];
+        let zrow = &mut z[bi * bw..(bi + 1) * bw];
+        for (k, zv) in zrow.iter_mut().enumerate() {
+            let o = o0 + k;
+            let row = &pk.data[o * pk.row_bytes..(o + 1) * pk.row_bytes];
+            let mut acc = bias[o];
+            match pk.field {
+                2 => {
+                    let full = fi >> 2;
+                    for (ach, &byte) in arow[..full * 4].chunks_exact(4).zip(&row[..full]) {
+                        let b = byte as usize;
+                        if ach[0] != 0.0 {
+                            acc += ach[0] * pk.lut[b & 3];
+                        }
+                        if ach[1] != 0.0 {
+                            acc += ach[1] * pk.lut[(b >> 2) & 3];
+                        }
+                        if ach[2] != 0.0 {
+                            acc += ach[2] * pk.lut[(b >> 4) & 3];
+                        }
+                        if ach[3] != 0.0 {
+                            acc += ach[3] * pk.lut[(b >> 6) & 3];
+                        }
+                    }
+                    for (i, &av) in arow.iter().enumerate().skip(full * 4) {
+                        if av != 0.0 {
+                            acc += av * pk.lut[pattern_at(row, i, 2, 2, 3, 0b11)];
+                        }
+                    }
+                }
+                4 => {
+                    let full = fi >> 1;
+                    for (ach, &byte) in arow[..full * 2].chunks_exact(2).zip(&row[..full]) {
+                        let b = byte as usize;
+                        if ach[0] != 0.0 {
+                            acc += ach[0] * pk.lut[b & 0xF];
+                        }
+                        if ach[1] != 0.0 {
+                            acc += ach[1] * pk.lut[(b >> 4) & 0xF];
+                        }
+                    }
+                    for (i, &av) in arow.iter().enumerate().skip(full * 2) {
+                        if av != 0.0 {
+                            acc += av * pk.lut[pattern_at(row, i, 4, 1, 1, 0xF)];
+                        }
+                    }
+                }
+                _ => {
+                    for (&av, &byte) in arow.iter().zip(&row[..fi]) {
+                        if av != 0.0 {
+                            acc += av * pk.lut[byte as usize];
+                        }
+                    }
+                }
+            }
+            *zv = acc;
+        }
+    }
+}
+
+fn epi_scalar_band(
+    a: &[f32],
+    pk: &PackedLayer,
+    bias: &[f32],
+    z: &mut [f32],
+    batch: usize,
+    o0: usize,
+    o1: usize,
+) {
+    let fi = pk.fan_in;
+    let bw = o1 - o0;
     let mask = ((1u16 << pk.field) - 1) as u8;
     let (shift, slot) = (pk.cpb_shift, pk.codes_per_byte - 1);
     for bi in 0..batch {
         let arow = &a[bi * fi..(bi + 1) * fi];
-        let zrow = &mut z[bi * fo..(bi + 1) * fo];
-        for (o, zv) in zrow.iter_mut().enumerate() {
+        let zrow = &mut z[bi * bw..(bi + 1) * bw];
+        for (k, zv) in zrow.iter_mut().enumerate() {
+            let o = o0 + k;
             let row = &pk.data[o * pk.row_bytes..(o + 1) * pk.row_bytes];
             let mut acc = 0f32;
             for (i, &av) in arow.iter().enumerate() {
@@ -278,32 +571,66 @@ pub fn gemm_bias_packed_epilogue(
     }
 }
 
-/// The fully integer MAC tile: `u8` activation codes × packed weight
-/// codes, **exact `i32` accumulation**, one scale multiply in the
-/// epilogue:
-///
-/// `z[b,o] = bias[o] + scale · (Σ_i acode[b,i] · code(o,i))`
-///
-/// where `scale` is the product of the incoming activation step size and
-/// this layer's weight step size (`sa_in · sw`).  The integer dot is
-/// exact (no rounding at any accumulation step: |acc| ≤ fan_in·255·128
-/// fits i32 for any fan_in ≤ 2¹⁶); the entire f32 error is the epilogue
-/// multiply-add ([`PACKED_LOGIT_EPS`]).
-pub fn gemm_bias_packed_i32(
+/// 8-lane unrolled epilogue tile.  f32 lanes reassociate the dot product
+/// (fixed pairwise tree, zero-skip dropped) — allowed by the
+/// [`PACKED_LOGIT_EPS`] contract, which bounds exactly this class of
+/// reordering.
+fn epi_unrolled_band(
+    a: &[f32],
+    pk: &PackedLayer,
+    bias: &[f32],
+    z: &mut [f32],
+    batch: usize,
+    o0: usize,
+    o1: usize,
+) {
+    let fi = pk.fan_in;
+    let bw = o1 - o0;
+    let blocks = fi >> 3;
+    for bi in 0..batch {
+        let arow = &a[bi * fi..(bi + 1) * fi];
+        let zrow = &mut z[bi * bw..(bi + 1) * bw];
+        for (k, zv) in zrow.iter_mut().enumerate() {
+            let o = o0 + k;
+            let row = &pk.data[o * pk.row_bytes..(o + 1) * pk.row_bytes];
+            let mut lanes = [0f32; 8];
+            let mut w8 = [0i32; 8];
+            for blk in 0..blocks {
+                let base = blk * 8;
+                decode8(row, base, pk.field, &mut w8);
+                for j in 0..8 {
+                    lanes[j] += arow[base + j] * w8[j] as f32;
+                }
+            }
+            let mut acc = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+                + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+            for i in blocks * 8..fi {
+                acc += arow[i] * code_at(pk, row, i) as f32;
+            }
+            *zv = bias[o] + pk.sw * acc;
+        }
+    }
+}
+
+fn i32_scalar_band(
     acodes: &[u8],
     pk: &PackedLayer,
     bias: &[f32],
     scale: f32,
     z: &mut [f32],
     batch: usize,
+    o0: usize,
+    o1: usize,
 ) {
-    let (fi, fo) = (pk.fan_in, pk.fan_out);
+    let fi = pk.fan_in;
+    let bw = o1 - o0;
     let mask = ((1u16 << pk.field) - 1) as u8;
     let (shift, slot) = (pk.cpb_shift, pk.codes_per_byte - 1);
     for bi in 0..batch {
         let arow = &acodes[bi * fi..(bi + 1) * fi];
-        let zrow = &mut z[bi * fo..(bi + 1) * fo];
-        for (o, zv) in zrow.iter_mut().enumerate() {
+        let zrow = &mut z[bi * bw..(bi + 1) * bw];
+        for (k, zv) in zrow.iter_mut().enumerate() {
+            let o = o0 + k;
             let row = &pk.data[o * pk.row_bytes..(o + 1) * pk.row_bytes];
             let mut acc = 0i32;
             for (i, &ac) in arow.iter().enumerate() {
@@ -317,11 +644,367 @@ pub fn gemm_bias_packed_i32(
     }
 }
 
+/// 8-lane unrolled integer tile.  i32 addition is associative and the
+/// zero-skip is a pure shortcut in integers (`0·w = 0` exactly), so lane
+/// accumulators + unconditional MACs are **bit-identical** to the scalar
+/// tile — full lane parallelism at ε = 0.
+fn i32_unrolled_band(
+    acodes: &[u8],
+    pk: &PackedLayer,
+    bias: &[f32],
+    scale: f32,
+    z: &mut [f32],
+    batch: usize,
+    o0: usize,
+    o1: usize,
+) {
+    let fi = pk.fan_in;
+    let bw = o1 - o0;
+    let blocks = fi >> 3;
+    for bi in 0..batch {
+        let arow = &acodes[bi * fi..(bi + 1) * fi];
+        let zrow = &mut z[bi * bw..(bi + 1) * bw];
+        for (k, zv) in zrow.iter_mut().enumerate() {
+            let o = o0 + k;
+            let row = &pk.data[o * pk.row_bytes..(o + 1) * pk.row_bytes];
+            let mut lanes = [0i32; 8];
+            let mut w8 = [0i32; 8];
+            for blk in 0..blocks {
+                let base = blk * 8;
+                decode8(row, base, pk.field, &mut w8);
+                for j in 0..8 {
+                    lanes[j] += arow[base + j] as i32 * w8[j];
+                }
+            }
+            let mut acc: i32 = lanes.iter().sum();
+            for i in blocks * 8..fi {
+                acc += arow[i] as i32 * code_at(pk, row, i);
+            }
+            *zv = bias[o] + scale * acc as f32;
+        }
+    }
+}
+
+#[cfg(feature = "simd")]
+fn epi_simd_band(
+    a: &[f32],
+    pk: &PackedLayer,
+    bias: &[f32],
+    z: &mut [f32],
+    batch: usize,
+    o0: usize,
+    o1: usize,
+) {
+    let fi = pk.fan_in;
+    let bw = o1 - o0;
+    let blocks = fi >> 4;
+    for bi in 0..batch {
+        let arow = &a[bi * fi..(bi + 1) * fi];
+        let zrow = &mut z[bi * bw..(bi + 1) * bw];
+        for (k, zv) in zrow.iter_mut().enumerate() {
+            let o = o0 + k;
+            let row = &pk.data[o * pk.row_bytes..(o + 1) * pk.row_bytes];
+            let mut lanes = [0f32; 16];
+            let mut w16 = [0i32; 16];
+            for blk in 0..blocks {
+                let base = blk * 16;
+                decode16(row, base, pk.field, &mut w16);
+                for j in 0..16 {
+                    lanes[j] += arow[base + j] * w16[j] as f32;
+                }
+            }
+            let mut acc = tree_sum16_f32(&lanes);
+            for i in blocks * 16..fi {
+                acc += arow[i] * code_at(pk, row, i) as f32;
+            }
+            *zv = bias[o] + pk.sw * acc;
+        }
+    }
+}
+
+#[cfg(feature = "simd")]
+fn i32_simd_band(
+    acodes: &[u8],
+    pk: &PackedLayer,
+    bias: &[f32],
+    scale: f32,
+    z: &mut [f32],
+    batch: usize,
+    o0: usize,
+    o1: usize,
+) {
+    let fi = pk.fan_in;
+    let bw = o1 - o0;
+    let blocks = fi >> 4;
+    for bi in 0..batch {
+        let arow = &acodes[bi * fi..(bi + 1) * fi];
+        let zrow = &mut z[bi * bw..(bi + 1) * bw];
+        for (k, zv) in zrow.iter_mut().enumerate() {
+            let o = o0 + k;
+            let row = &pk.data[o * pk.row_bytes..(o + 1) * pk.row_bytes];
+            let mut lanes = [0i32; 16];
+            let mut w16 = [0i32; 16];
+            for blk in 0..blocks {
+                let base = blk * 16;
+                decode16(row, base, pk.field, &mut w16);
+                for j in 0..16 {
+                    lanes[j] += arow[base + j] as i32 * w16[j];
+                }
+            }
+            let mut acc: i32 = lanes.iter().sum();
+            for i in blocks * 16..fi {
+                acc += arow[i] as i32 * code_at(pk, row, i);
+            }
+            *zv = bias[o] + scale * acc as f32;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Variant dispatch + row-band driver.
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn lut_band(
+    a: &[f32],
+    pk: &PackedLayer,
+    bias: &[f32],
+    z: &mut [f32],
+    batch: usize,
+    o0: usize,
+    o1: usize,
+    variant: PackedVariant,
+) {
+    match variant {
+        PackedVariant::Scalar => lut_scalar_band(a, pk, bias, z, batch, o0, o1),
+        // The ε = 0 contract pins the add order, so both wide variants
+        // share the decode-accelerated, order-exact tile.
+        PackedVariant::Unrolled | PackedVariant::Simd => {
+            lut_unrolled_band(a, pk, bias, z, batch, o0, o1)
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn epi_band(
+    a: &[f32],
+    pk: &PackedLayer,
+    bias: &[f32],
+    z: &mut [f32],
+    batch: usize,
+    o0: usize,
+    o1: usize,
+    variant: PackedVariant,
+) {
+    match variant {
+        PackedVariant::Scalar => epi_scalar_band(a, pk, bias, z, batch, o0, o1),
+        PackedVariant::Unrolled => epi_unrolled_band(a, pk, bias, z, batch, o0, o1),
+        PackedVariant::Simd => {
+            #[cfg(feature = "simd")]
+            epi_simd_band(a, pk, bias, z, batch, o0, o1);
+            #[cfg(not(feature = "simd"))]
+            epi_unrolled_band(a, pk, bias, z, batch, o0, o1);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn i32_band(
+    acodes: &[u8],
+    pk: &PackedLayer,
+    bias: &[f32],
+    scale: f32,
+    z: &mut [f32],
+    batch: usize,
+    o0: usize,
+    o1: usize,
+    variant: PackedVariant,
+) {
+    match variant {
+        PackedVariant::Scalar => i32_scalar_band(acodes, pk, bias, scale, z, batch, o0, o1),
+        PackedVariant::Unrolled => i32_unrolled_band(acodes, pk, bias, scale, z, batch, o0, o1),
+        PackedVariant::Simd => {
+            #[cfg(feature = "simd")]
+            i32_simd_band(acodes, pk, bias, scale, z, batch, o0, o1);
+            #[cfg(not(feature = "simd"))]
+            i32_unrolled_band(acodes, pk, bias, scale, z, batch, o0, o1);
+        }
+    }
+}
+
+/// Partition `fan_out` into ≤ `threads` contiguous row bands and run
+/// `run_band(o0, o1, band_buf)` for each, scattering band buffers back
+/// into `z` in band order.  `threads ≤ 1` runs the whole output as one
+/// band directly in `z` — no allocation, no pool.  Each `z[b,o]` is
+/// written by exactly one band executing the unchanged tile arithmetic,
+/// so the result is bit-identical at any thread count.
+fn banded(
+    fo: usize,
+    batch: usize,
+    z: &mut [f32],
+    threads: usize,
+    run_band: impl Fn(usize, usize, &mut [f32]) + Sync,
+) {
+    let t = threads.max(1).min(fo.max(1));
+    if t <= 1 {
+        run_band(0, fo, z);
+        return;
+    }
+    let (base, extra) = (fo / t, fo % t);
+    let mut bands = Vec::with_capacity(t);
+    let mut start = 0usize;
+    for k in 0..t {
+        let len = base + usize::from(k < extra);
+        bands.push((start, start + len));
+        start += len;
+    }
+    let results = crate::coordinator::job_pool(
+        bands,
+        t,
+        || Ok(()),
+        |_, (o0, o1)| {
+            let mut buf = vec![0f32; batch * (o1 - o0)];
+            run_band(o0, o1, &mut buf);
+            Ok((o0, o1, buf))
+        },
+    )
+    .expect("packed: row-band pool is infallible");
+    for (o0, o1, buf) in results {
+        let bw = o1 - o0;
+        for bi in 0..batch {
+            z[bi * fo + o0..bi * fo + o1].copy_from_slice(&buf[bi * bw..(bi + 1) * bw]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public entry points.
+// ---------------------------------------------------------------------------
+
+/// Forward tile over packed rows with LUT decode:
+/// `z[b,o] = bias[o] + Σ_i a[b,i] · lut[code(o,i)]`.
+///
+/// Accumulation contract: bias first, `i` ascending, exact skip of zero
+/// activations — the identical add sequence as
+/// [`super::gemm::gemm_bias_wt`] over identical operand bits, so the
+/// result is **bit-identical** to the reference fake-quant forward.
+/// Runs the default [`PackedVariant`] single-threaded; see
+/// [`gemm_bias_packed_v`] for variant/thread control.
+pub fn gemm_bias_packed(
+    a: &[f32],
+    pk: &PackedLayer,
+    bias: &[f32],
+    z: &mut [f32],
+    batch: usize,
+) {
+    gemm_bias_packed_v(a, pk, bias, z, batch, PackedVariant::default(), 1);
+}
+
+/// [`gemm_bias_packed`] with explicit variant and row-parallel width.
+/// Every variant preserves the ε = 0 contract (decode-only acceleration,
+/// add order untouched), and row bands are bit-identical at any
+/// `threads` by construction.
+pub fn gemm_bias_packed_v(
+    a: &[f32],
+    pk: &PackedLayer,
+    bias: &[f32],
+    z: &mut [f32],
+    batch: usize,
+    variant: PackedVariant,
+    threads: usize,
+) {
+    banded(pk.fan_out, batch, z, threads, |o0, o1, band| {
+        lut_band(a, pk, bias, band, batch, o0, o1, variant)
+    });
+}
+
+/// Forward tile with the per-layer LSQ scale applied **once in the
+/// epilogue**: `acc = Σ_i a[b,i] · code(o,i)` in f32 (codes are exact
+/// small integers), then `z[b,o] = bias[o] + sw · acc`.
+///
+/// Not bit-identical to the reference — the scale reassociation costs a
+/// bounded rounding difference ([`PACKED_LOGIT_EPS`]).  Safe only where
+/// no activation quantizer consumes `z` (the logits layer).  Runs the
+/// default [`PackedVariant`] single-threaded; see
+/// [`gemm_bias_packed_epilogue_v`].
+pub fn gemm_bias_packed_epilogue(
+    a: &[f32],
+    pk: &PackedLayer,
+    bias: &[f32],
+    z: &mut [f32],
+    batch: usize,
+) {
+    gemm_bias_packed_epilogue_v(a, pk, bias, z, batch, PackedVariant::default(), 1);
+}
+
+/// [`gemm_bias_packed_epilogue`] with explicit variant and row-parallel
+/// width.  Wide variants reassociate f32 lanes inside the
+/// [`PACKED_LOGIT_EPS`] contract; row bands are bit-identical at any
+/// `threads`.
+pub fn gemm_bias_packed_epilogue_v(
+    a: &[f32],
+    pk: &PackedLayer,
+    bias: &[f32],
+    z: &mut [f32],
+    batch: usize,
+    variant: PackedVariant,
+    threads: usize,
+) {
+    banded(pk.fan_out, batch, z, threads, |o0, o1, band| {
+        epi_band(a, pk, bias, band, batch, o0, o1, variant)
+    });
+}
+
+/// The fully integer MAC tile: `u8` activation codes × packed weight
+/// codes, **exact `i32` accumulation**, one scale multiply in the
+/// epilogue:
+///
+/// `z[b,o] = bias[o] + scale · (Σ_i acode[b,i] · code(o,i))`
+///
+/// where `scale` is the product of the incoming activation step size and
+/// this layer's weight step size (`sa_in · sw`).  The integer dot is
+/// exact (no rounding at any accumulation step: |acc| ≤ fan_in·255·128
+/// fits i32 for any fan_in ≤ 2¹⁶); the entire f32 error is the epilogue
+/// multiply-add ([`PACKED_LOGIT_EPS`]).  Runs the default
+/// [`PackedVariant`] single-threaded; see [`gemm_bias_packed_i32_v`].
+pub fn gemm_bias_packed_i32(
+    acodes: &[u8],
+    pk: &PackedLayer,
+    bias: &[f32],
+    scale: f32,
+    z: &mut [f32],
+    batch: usize,
+) {
+    gemm_bias_packed_i32_v(acodes, pk, bias, scale, z, batch, PackedVariant::default(), 1);
+}
+
+/// [`gemm_bias_packed_i32`] with explicit variant and row-parallel
+/// width.  i32 addition is associative, so every variant is
+/// **bit-identical** to the scalar tile, and row bands are bit-identical
+/// at any `threads`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bias_packed_i32_v(
+    acodes: &[u8],
+    pk: &PackedLayer,
+    bias: &[f32],
+    scale: f32,
+    z: &mut [f32],
+    batch: usize,
+    variant: PackedVariant,
+    threads: usize,
+) {
+    banded(pk.fan_out, batch, z, threads, |o0, o1, band| {
+        i32_band(acodes, pk, bias, scale, band, batch, o0, o1, variant)
+    });
+}
+
 /// ReLU → unsigned LSQ activation **codes** — the same rounding rule as
 /// [`super::gemm::relu_quant_act`] (`clamp(round(max(z,0)/sa), 0, aqp)`),
 /// kept as integers for [`gemm_bias_packed_i32`].  `aqp` must be ≤ 255
 /// (8-bit unsigned activations), which [`crate::quant::qrange_unsigned`]
-/// guarantees for bits ≤ 8.
+/// guarantees for bits ≤ 8.  Pass a [`super::LayerWs`]'s `acodes`
+/// scratch on hot paths so the buffer's capacity is reused across
+/// requests instead of reallocated.
 pub fn quantize_acts_u8(z: &[f32], sa: f32, aqp: f32, codes: &mut Vec<u8>) {
     debug_assert!(aqp <= 255.0);
     codes.clear();
@@ -410,6 +1093,37 @@ mod tests {
         assert_eq!(p8.packed_bytes(), fi * fo);
         // vs 4 bytes/weight fake-quant: 16x / 8x / 4x smaller.
         assert_eq!(4 * fi * fo / p2.packed_bytes(), 16);
+    }
+
+    #[test]
+    fn decode_tables_match_sign_extension() {
+        for b in 0..256usize {
+            for s in 0..4 {
+                let p = ((b >> (2 * s)) & 0b11) as u8;
+                assert_eq!(DECODE2[b][s] as i32, sign_extend(p, 2), "byte={b} slot={s}");
+            }
+            for s in 0..2 {
+                let p = ((b >> (4 * s)) & 0xF) as u8;
+                assert_eq!(DECODE4[b][s] as i32, sign_extend(p, 4), "byte={b} slot={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_variant_parse_round_trip() {
+        assert_eq!(PackedVariant::default(), PackedVariant::Unrolled);
+        for v in [PackedVariant::Scalar, PackedVariant::Unrolled] {
+            assert_eq!(PackedVariant::parse(v.name()).unwrap(), v);
+        }
+        #[cfg(feature = "simd")]
+        assert_eq!(PackedVariant::parse("simd").unwrap(), PackedVariant::Simd);
+        #[cfg(not(feature = "simd"))]
+        {
+            let err = PackedVariant::parse("simd").unwrap_err().to_string();
+            assert!(err.contains("--features simd"), "fail-closed message: {err}");
+        }
+        let err = PackedVariant::parse("wide").unwrap_err().to_string();
+        assert!(err.contains("unknown packed variant"), "{err}");
     }
 
     /// LUT decode reproduces the reference fake-quant GEMM bit for bit,
@@ -513,6 +1227,157 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The tentpole property: across every fan-in 1..=67 (crossing every
+    /// byte/block boundary of the 8- and 16-wide tiles) × storage widths,
+    /// the unrolled (and simd, when built) variants are bit-identical to
+    /// scalar on the i32 tile, bit-identical to the *reference* on the
+    /// ε = 0 LUT tile, and inside [`PACKED_LOGIT_EPS`] on the epilogue
+    /// tile.  `Simd` is exercised even without the feature (it must fall
+    /// back to `Unrolled`, which carries the same contracts).
+    #[test]
+    fn variant_kernels_are_bit_identical_across_fan_in() {
+        let variants = [
+            PackedVariant::Scalar,
+            PackedVariant::Unrolled,
+            PackedVariant::Simd,
+        ];
+        for &bits in &[2u32, 4, 8] {
+            for fi in 1usize..=67 {
+                let (fo, batch) = (4usize, 2usize);
+                let (sw, sa) = (0.13f32, 0.1f32);
+                let mut rng = Pcg32::new(fi as u64 * 1000 + bits as u64, 77);
+                let w = random_weights(fi * fo, fi as u64 * 31 + bits as u64);
+                let bias: Vec<f32> = (0..fo).map(|_| rng.normal() * 0.1).collect();
+                let acodes: Vec<u8> = (0..batch * fi).map(|_| rng.below(16) as u8).collect();
+                let a: Vec<f32> = (0..batch * fi)
+                    .map(|i| if i % 5 == 0 { 0.0 } else { rng.normal() })
+                    .collect();
+                let pk = pack(&w, sw, bits, fi, fo).unwrap();
+
+                // ε = 0 reference for the LUT tile.
+                let (qn, qp) = quant::qrange_signed(bits);
+                let mut wt = vec![0f32; fi * fo];
+                let mut w_in = vec![false; fi * fo];
+                gemm::quantize_weights_wt(&w, sw, qn, qp, &mut wt, &mut w_in, fi, fo);
+                let mut z_ref = vec![0f32; batch * fo];
+                gemm::gemm_bias_wt(&a, &wt, &bias, &mut z_ref, batch, fi, fo);
+
+                let mut z_i32_scalar = vec![0f32; batch * fo];
+                gemm_bias_packed_i32_v(
+                    &acodes, &pk, &bias, sa * sw, &mut z_i32_scalar, batch,
+                    PackedVariant::Scalar, 1,
+                );
+                for &v in &variants {
+                    let mut z_l = vec![0f32; batch * fo];
+                    gemm_bias_packed_v(&a, &pk, &bias, &mut z_l, batch, v, 1);
+                    for (got, want) in z_l.iter().zip(&z_ref) {
+                        assert_eq!(
+                            got.to_bits(),
+                            want.to_bits(),
+                            "bits={bits} fi={fi} lut {} vs reference",
+                            v.name()
+                        );
+                    }
+                    let mut z_i = vec![0f32; batch * fo];
+                    gemm_bias_packed_i32_v(&acodes, &pk, &bias, sa * sw, &mut z_i, batch, v, 1);
+                    for (got, want) in z_i.iter().zip(&z_i32_scalar) {
+                        assert_eq!(
+                            got.to_bits(),
+                            want.to_bits(),
+                            "bits={bits} fi={fi} i32 {} vs scalar",
+                            v.name()
+                        );
+                    }
+                    let mut z_e = vec![0f32; batch * fo];
+                    gemm_bias_packed_epilogue_v(&a, &pk, &bias, &mut z_e, batch, v, 1);
+                    for (got, want) in z_e.iter().zip(&z_ref) {
+                        assert!(
+                            (got - want).abs() <= PACKED_LOGIT_EPS,
+                            "bits={bits} fi={fi} epilogue {}: {} vs {}",
+                            v.name(),
+                            got,
+                            want
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Row-band parallelism must be invisible: for every tile × variant ×
+    /// thread count (including counts that don't divide fan_out), the
+    /// output is bit-identical to the single-threaded run.
+    #[test]
+    fn row_parallel_is_bit_identical_at_any_thread_count() {
+        let variants = [
+            PackedVariant::Scalar,
+            PackedVariant::Unrolled,
+            PackedVariant::Simd,
+        ];
+        for &bits in &[2u32, 4, 8] {
+            let (fi, fo, batch) = (23usize, 10usize, 3usize);
+            let (sw, sa) = (0.13f32, 0.1f32);
+            let mut rng = Pcg32::new(bits as u64 * 7 + 1, 99);
+            let w = random_weights(fi * fo, bits as u64 * 13 + 5);
+            let bias: Vec<f32> = (0..fo).map(|_| rng.normal() * 0.1).collect();
+            let acodes: Vec<u8> = (0..batch * fi).map(|_| rng.below(16) as u8).collect();
+            let a: Vec<f32> = (0..batch * fi)
+                .map(|i| if i % 4 == 0 { 0.0 } else { rng.normal() })
+                .collect();
+            let pk = pack(&w, sw, bits, fi, fo).unwrap();
+            for &v in &variants {
+                let mut lut_1 = vec![0f32; batch * fo];
+                gemm_bias_packed_v(&a, &pk, &bias, &mut lut_1, batch, v, 1);
+                let mut epi_1 = vec![0f32; batch * fo];
+                gemm_bias_packed_epilogue_v(&a, &pk, &bias, &mut epi_1, batch, v, 1);
+                let mut i32_1 = vec![0f32; batch * fo];
+                gemm_bias_packed_i32_v(&acodes, &pk, &bias, sa * sw, &mut i32_1, batch, v, 1);
+                for &t in &[2usize, 4] {
+                    let mut lut_t = vec![0f32; batch * fo];
+                    gemm_bias_packed_v(&a, &pk, &bias, &mut lut_t, batch, v, t);
+                    let mut epi_t = vec![0f32; batch * fo];
+                    gemm_bias_packed_epilogue_v(&a, &pk, &bias, &mut epi_t, batch, v, t);
+                    let mut i32_t = vec![0f32; batch * fo];
+                    gemm_bias_packed_i32_v(&acodes, &pk, &bias, sa * sw, &mut i32_t, batch, v, t);
+                    for idx in 0..batch * fo {
+                        assert_eq!(
+                            lut_t[idx].to_bits(),
+                            lut_1[idx].to_bits(),
+                            "bits={bits} {} lut t={t} idx={idx}",
+                            v.name()
+                        );
+                        assert_eq!(
+                            epi_t[idx].to_bits(),
+                            epi_1[idx].to_bits(),
+                            "bits={bits} {} epilogue t={t} idx={idx}",
+                            v.name()
+                        );
+                        assert_eq!(
+                            i32_t[idx].to_bits(),
+                            i32_1[idx].to_bits(),
+                            "bits={bits} {} i32 t={t} idx={idx}",
+                            v.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_threads_env_parses_and_falls_back() {
+        // Not set in the test environment: the fallback must pass through.
+        std::env::remove_var("MPQ_GEMM_THREADS");
+        assert_eq!(gemm_threads_from_env(3), 3);
+        std::env::set_var("MPQ_GEMM_THREADS", "4");
+        assert_eq!(gemm_threads_from_env(1), 4);
+        std::env::set_var("MPQ_GEMM_THREADS", "0");
+        assert_eq!(gemm_threads_from_env(2), 2, "zero is not a valid width");
+        std::env::set_var("MPQ_GEMM_THREADS", "not-a-number");
+        assert_eq!(gemm_threads_from_env(2), 2);
+        std::env::remove_var("MPQ_GEMM_THREADS");
     }
 
     #[test]

@@ -34,7 +34,9 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use mpq::backend::{self, Backend, BackendKind, KernelChoice, Task, TrainState};
+use mpq::backend::{
+    self, Backend, BackendKind, KernelChoice, KernelTuning, PackedVariant, Task, TrainState,
+};
 use mpq::cli::Args;
 use mpq::coordinator::{self, Coordinator, ResultStore};
 use mpq::data::Split;
@@ -98,22 +100,44 @@ fn kernel_for(args: &Args, kind: BackendKind, default_kernel: &str) -> mpq::Resu
     KernelChoice::parse(&args.str("kernel", d))
 }
 
+/// Resolve the packed-path tuning flags: `--packed-variant`
+/// (scalar|unrolled|simd, fail-closed when the build lacks the simd
+/// tiles) and `--gemm-threads` (flag wins, else `MPQ_GEMM_THREADS`, else
+/// `default_threads`).  Serve passes `default_threads = 1` — its engine
+/// already runs one worker per core, and intra-layer banding on top
+/// would oversubscribe — while `mpq infer`/eval default to the
+/// worker-pool width.
+fn kernel_tuning(args: &Args, default_threads: usize) -> mpq::Result<KernelTuning> {
+    let variant = PackedVariant::parse(&args.str("packed-variant", "unrolled"))?;
+    let gemm_threads = args
+        .usize(
+            "gemm-threads",
+            mpq::kernels::packed::gemm_threads_from_env(default_threads),
+        )?
+        .max(1);
+    Ok(KernelTuning { variant, gemm_threads })
+}
+
 fn coordinator(args: &Args) -> mpq::Result<Coordinator<Box<dyn Backend>>> {
-    Ok(coordinator_kernel(args, "reference")?.0)
+    Ok(coordinator_kernel(args, "reference", 1)?.0)
 }
 
 /// [`coordinator`] with a subcommand-specific `--kernel` default
-/// (`serve`/`infer` default to the packed inference kernels).  Returns
-/// the resolved backend kind and kernel alongside the coordinator so
-/// callers that open more backends (the serve spawner) reuse exactly the
-/// resolution the coordinator was built with instead of re-deriving it.
+/// (`serve`/`infer` default to the packed inference kernels) and
+/// `--gemm-threads` default.  Returns the resolved backend kind, kernel
+/// and tuning alongside the coordinator so callers that open more
+/// backends (the serve spawner) reuse exactly the resolution the
+/// coordinator was built with instead of re-deriving it.
 fn coordinator_kernel(
     args: &Args,
     default_kernel: &str,
-) -> mpq::Result<(Coordinator<Box<dyn Backend>>, BackendKind, KernelChoice)> {
+    default_gemm_threads: usize,
+) -> mpq::Result<(Coordinator<Box<dyn Backend>>, BackendKind, KernelChoice, KernelTuning)> {
     let (kind, model) = resolve_target(args)?;
     let kernel = kernel_for(args, kind, default_kernel)?;
-    let mut co = Coordinator::open_kernel(kind, &model, args.u64("data-seed", 7)?, kernel)?;
+    let tuning = kernel_tuning(args, default_gemm_threads)?;
+    let mut co =
+        Coordinator::open_tuned(kind, &model, args.u64("data-seed", 7)?, kernel, tuning)?;
     co.base_steps = args.usize("base-steps", co.base_steps)?;
     co.ft_steps = args.usize("ft-steps", co.ft_steps)?;
     co.eval_batches = args.usize("eval-batches", co.eval_batches)?;
@@ -123,7 +147,7 @@ fn coordinator_kernel(
     // Sweep parallelism: --workers wins, else MPQ_WORKERS, else available
     // parallelism (resolved in default_workers, already set on co).
     co.workers = args.usize("workers", co.workers)?.max(1);
-    Ok((co, kind, kernel))
+    Ok((co, kind, kernel, tuning))
 }
 
 /// Tuning flags shared by the single-cell subcommands (for `exp` these
@@ -140,6 +164,8 @@ const COMMON_FLAGS: &[&str] = &[
     "hawq-batches",
     "workers",
     "kernel",
+    "packed-variant",
+    "gemm-threads",
 ];
 
 /// Per-subcommand flag validation: every subcommand rejects unknown or
@@ -305,10 +331,17 @@ common flags: --data-seed, --base-steps, --ft-steps, --eval-batches,
               reference, except serve/infer which default to the
               bit-packed integer path — eval is bit-identical either
               way, packed inference logits carry a documented epsilon;
-              see rust/README.md §Packed kernels)
+              see rust/README.md §Packed kernels),
+              --packed-variant scalar|unrolled|simd (packed tile
+              implementation; default unrolled, simd needs a build with
+              --features simd; results bit-identical across variants),
+              --gemm-threads N (intra-layer row-parallel packed GEMM;
+              default 1 for serve — the engine owns the cores — and the
+              worker-pool width for infer; bit-identical at any N)
 unknown or misspelled flags are rejected per subcommand.
 env: MPQ_ARTIFACTS (artifacts dir), MPQ_RESULTS (results root),
-     MPQ_LOG (debug|info|warn|error), MPQ_WORKERS (default for --workers)
+     MPQ_LOG (debug|info|warn|error), MPQ_WORKERS (default for --workers),
+     MPQ_GEMM_THREADS (default for --gemm-threads)
 ";
 
 fn cmd_info(args: &Args) -> mpq::Result<()> {
@@ -670,10 +703,11 @@ fn cmd_serve(args: &Args) -> mpq::Result<()> {
     }
     // Serving defaults to the packed inference kernels on sim: bit-packed
     // weight codes, materialized once and shared across the worker pool.
-    // The worker spawner reuses the exact (kind, kernel) the coordinator
-    // resolved, so engine workers can never diverge from the coordinator
-    // that produced the checkpoint and bits.
-    let (mut co, kind, kernel) = coordinator_kernel(args, "packed")?;
+    // The worker spawner reuses the exact (kind, kernel, tuning) the
+    // coordinator resolved, so engine workers can never diverge from the
+    // coordinator that produced the checkpoint and bits.  gemm-threads
+    // defaults to 1 here: the engine already runs one worker per core.
+    let (mut co, kind, kernel, tuning) = coordinator_kernel(args, "packed", 1)?;
     let model = co.model.clone();
     // The adaptive path: load the sweep's whole frontier as swap targets
     // and start serving its most accurate level.
@@ -732,14 +766,17 @@ fn cmd_serve(args: &Args) -> mpq::Result<()> {
         initial_label: init_label,
     };
     let model_s = model.clone();
-    let spawner: serve::Spawner = Arc::new(move || backend::open_with(kind, &model_s, kernel));
+    let spawner: serve::Spawner =
+        Arc::new(move || backend::open_tuned(kind, &model_s, kernel, tuning));
     let engine = serve::Engine::start(spawner, ck, bits_f32, cfg.clone())?;
     println!(
-        "engine: {} worker(s), max-batch {}, timeout {:.1}ms, {} batching",
+        "engine: {} worker(s), max-batch {}, timeout {:.1}ms, {} batching, {} tiles, gemm-threads {}",
         cfg.workers,
         cfg.max_batch,
         cfg.batch_timeout.as_secs_f64() * 1e3,
-        if engine.fused() { "fused" } else { "per-request" }
+        if engine.fused() { "fused" } else { "per-request" },
+        tuning.variant.name(),
+        tuning.gemm_threads
     );
     // Deterministic degradation drill: sim-time controller + real engine.
     if let Some(profile) = args.opt_str("degrade") {
@@ -1096,7 +1133,10 @@ fn cmd_serve_target(args: &Args, target: &str) -> mpq::Result<()> {
 /// the LSQ scale in the epilogue; eval itself is bit-identical across
 /// kernels, so this command prints the same numbers with either flag).
 fn cmd_infer(args: &Args) -> mpq::Result<()> {
-    let (mut co, _, _) = coordinator_kernel(args, "packed")?;
+    // Unlike serve (whose engine owns the cores), a one-shot infer has
+    // the whole machine: default the intra-layer GEMM row-parallelism to
+    // the worker-pool width.
+    let (mut co, _, _, _) = coordinator_kernel(args, "packed", coordinator::default_workers())?;
     let bits = serve_bits(args, &mut co)?;
     let ck = serve_checkpoint(args, &mut co, &bits)?;
     let samples = args.usize("samples", 1)?;

@@ -22,7 +22,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
-use mpq::backend::{Backend, KernelChoice, SimBackend};
+use mpq::backend::{Backend, KernelChoice, KernelTuning, PackedVariant, SimBackend};
 use mpq::ckpt::Checkpoint;
 use mpq::coordinator::Coordinator;
 use mpq::data::{Dataset, Split};
@@ -158,6 +158,46 @@ fn selections_are_identical_with_either_kernel() {
     let _ = std::fs::remove_dir_all(&scratch);
 }
 
+/// Tile variants and intra-layer row-parallelism are result-invisible on
+/// the packed eval path: the ε = 0 LUT kernel carries every layer, and
+/// its wide variants accelerate only the decode while row bands scatter
+/// untouched arithmetic — so eval is bit-identical across
+/// scalar/unrolled(/simd) and any gemm-threads, on every model and
+/// precision mix.
+#[test]
+fn packed_variants_and_gemm_threads_leave_eval_bit_identical() {
+    let tunings = [
+        KernelTuning { variant: PackedVariant::Scalar, gemm_threads: 1 },
+        KernelTuning { variant: PackedVariant::Unrolled, gemm_threads: 1 },
+        // `Simd` falls back to `Unrolled` without the feature — the
+        // identity must hold either way.
+        KernelTuning { variant: PackedVariant::Simd, gemm_threads: 1 },
+        KernelTuning { variant: PackedVariant::Unrolled, gemm_threads: 2 },
+        KernelTuning { variant: PackedVariant::Scalar, gemm_threads: 4 },
+    ];
+    for model in ["sim_tiny", "sim_skew"] {
+        let (ck, graph, data) = setup(model);
+        let mut base = SimBackend::with_kernel(model, KernelChoice::Packed).unwrap();
+        for bits in bits_configs(&graph) {
+            let (x, y) = data.batch(Split::Eval, 3, 32);
+            let (l0, c0) = base.eval_step(&ck, &x, &y, &bits).unwrap();
+            for t in tunings {
+                let mut be =
+                    SimBackend::with_tuning(model, KernelChoice::Packed, t).unwrap();
+                let (l, c) = be.eval_step(&ck, &x, &y, &bits).unwrap();
+                assert_eq!(
+                    l.to_bits(),
+                    l0.to_bits(),
+                    "{model} bits={bits:?} variant={:?} threads={}: eval loss drifted",
+                    t.variant,
+                    t.gemm_threads
+                );
+                assert_eq!(c, c0, "{model} bits={bits:?} {t:?}: correct count drifted");
+            }
+        }
+    }
+}
+
 fn run_requests(
     model: &'static str,
     kernel: KernelChoice,
@@ -177,6 +217,7 @@ fn run_requests(
             batch_timeout: Duration::from_millis(1),
             force_per_request: false,
             warmup: true,
+            ..ServeConfig::default()
         },
     )
     .unwrap();
@@ -252,6 +293,7 @@ fn packed_per_request_serving_is_bit_identical_to_reference_eval() {
             batch_timeout: Duration::from_millis(1),
             force_per_request: true,
             warmup: true,
+            ..ServeConfig::default()
         },
     )
     .unwrap();
