@@ -7,17 +7,18 @@
 # crate, see rust/Cargo.toml) and skip themselves at runtime when
 # artifacts are absent.
 
-.PHONY: verify test build bench bench-quick simd-matrix packed-smoke exp-smoke serve-smoke http-smoke degrade-smoke verify-pjrt artifacts clean
+.PHONY: verify test build bench bench-quick simd-matrix packed-smoke exp-smoke serve-smoke http-smoke degrade-smoke trace-smoke verify-pjrt artifacts clean
 
 # Tier-1: must pass in a clean checkout.  simd-matrix, bench-quick,
-# packed-smoke, exp-smoke, serve-smoke, http-smoke and degrade-smoke
-# ride along as smoke steps so the simd-feature build, the bench binary
-# (and its BENCH_hotpath.json emission), the packed-kernel CLI path,
-# the manifest-driven experiment path, the serving engine (in-process
-# and over real loopback sockets), and the SLO-driven degradation loop
-# can never silently rot.
+# packed-smoke, exp-smoke, serve-smoke, http-smoke, degrade-smoke and
+# trace-smoke ride along as smoke steps so the simd-feature build, the
+# bench binary (and its BENCH_hotpath.json emission), the packed-kernel
+# CLI path, the manifest-driven experiment path, the serving engine
+# (in-process and over real loopback sockets), the SLO-driven
+# degradation loop, and the span-tracing/stage-profiler observability
+# path can never silently rot.
 verify:
-	cargo build --release && cargo test -q && $(MAKE) simd-matrix && $(MAKE) bench-quick && $(MAKE) packed-smoke && $(MAKE) exp-smoke && $(MAKE) serve-smoke && $(MAKE) http-smoke && $(MAKE) degrade-smoke
+	cargo build --release && cargo test -q && $(MAKE) simd-matrix && $(MAKE) bench-quick && $(MAKE) packed-smoke && $(MAKE) exp-smoke && $(MAKE) serve-smoke && $(MAKE) http-smoke && $(MAKE) degrade-smoke && $(MAKE) trace-smoke
 
 build:
 	cargo build --release
@@ -192,6 +193,59 @@ degrade-smoke:
 	@echo "degrade-smoke OK (spike -> degrade -> recover, ctl gauges consistent)"
 	rm -rf $(DEGRADE_SMOKE_DIR)
 
+# End-to-end smoke of the observability path: a traced `--listen` run
+# (sample 1-in-1) that must print the pinned stage-metrics gate and
+# write a Chrome trace + per-request latency JSONL; the trace file is
+# then re-validated by `mpq trace` (complete per-request span sets,
+# monotone timestamps, all lifecycle stages covered).  Finally the
+# degrade drill runs twice at different worker counts with
+# `--decision-log`: the controller's JSONL decision log must be
+# byte-identical — it derives only from the sim queue model, never from
+# scheduling.  (Redirect instead of a pipe so the binary's exit status
+# stays load-bearing.)
+TRACE_SMOKE_DIR := $(CURDIR)/.trace-smoke-results
+trace-smoke:
+	rm -rf $(TRACE_SMOKE_DIR)
+	@mkdir -p $(TRACE_SMOKE_DIR)
+	MPQ_RESULTS=$(TRACE_SMOKE_DIR) cargo run --release -q -p mpq -- serve \
+	  --model sim_tiny --backend sim --base-steps 60 --budget 0.7 --method eagl \
+	  --listen 127.0.0.1:0 --requests 32 --max-request 4 --workers 2 --max-batch 8 \
+	  --batch-timeout-ms 2 --trace-sample 1 \
+	  --trace-out $(TRACE_SMOKE_DIR)/trace.json \
+	  --latency-out $(TRACE_SMOKE_DIR)/latency.jsonl > $(TRACE_SMOKE_DIR)/serve.out
+	@cat $(TRACE_SMOKE_DIR)/serve.out
+	@grep -q 'stage metrics OK' $(TRACE_SMOKE_DIR)/serve.out || { \
+	  echo "trace-smoke: missing stage metrics OK line"; exit 1; }
+	@grep -q 'trace written to' $(TRACE_SMOKE_DIR)/serve.out || { \
+	  echo "trace-smoke: missing trace written line"; exit 1; }
+	@lines=$$(wc -l < $(TRACE_SMOKE_DIR)/latency.jsonl); \
+	test "$$lines" -eq 32 || { \
+	  echo "trace-smoke: expected 32 latency lines, got $$lines"; exit 1; }
+	MPQ_RESULTS=$(TRACE_SMOKE_DIR) cargo run --release -q -p mpq -- trace \
+	  --file $(TRACE_SMOKE_DIR)/trace.json > $(TRACE_SMOKE_DIR)/check.out
+	@cat $(TRACE_SMOKE_DIR)/check.out
+	@grep -q 'trace OK' $(TRACE_SMOKE_DIR)/check.out || { \
+	  echo "trace-smoke: trace file failed validation"; exit 1; }
+	MPQ_RESULTS=$(TRACE_SMOKE_DIR) cargo run --release -q -p mpq -- sweep \
+	  --model sim_tiny --backend sim --base-steps 60 --methods eagl \
+	  --budgets 0.95,0.6 --seeds 1
+	MPQ_RESULTS=$(TRACE_SMOKE_DIR) cargo run --release -q -p mpq -- serve \
+	  --model sim_tiny --backend sim --base-steps 60 \
+	  --frontier-from $(TRACE_SMOKE_DIR)/sim_tiny/sweep.jsonl \
+	  --degrade spike --workers 2 --max-batch 8 --batch-timeout-ms 2 \
+	  --decision-log $(TRACE_SMOKE_DIR)/decisions-a.jsonl \
+	  > $(TRACE_SMOKE_DIR)/degrade-a.out
+	MPQ_RESULTS=$(TRACE_SMOKE_DIR) cargo run --release -q -p mpq -- serve \
+	  --model sim_tiny --backend sim --base-steps 60 \
+	  --frontier-from $(TRACE_SMOKE_DIR)/sim_tiny/sweep.jsonl \
+	  --degrade spike --workers 4 --max-batch 8 --batch-timeout-ms 2 \
+	  --decision-log $(TRACE_SMOKE_DIR)/decisions-b.jsonl \
+	  > $(TRACE_SMOKE_DIR)/degrade-b.out
+	@cmp $(TRACE_SMOKE_DIR)/decisions-a.jsonl $(TRACE_SMOKE_DIR)/decisions-b.jsonl || { \
+	  echo "trace-smoke: --decision-log diverged across worker counts"; exit 1; }
+	@echo "trace-smoke OK (all stages validated, stage metrics pinned, decision log deterministic)"
+	rm -rf $(TRACE_SMOKE_DIR)
+
 # Full verification including the PJRT/AOT path (requires the vendored
 # `xla` dependency to be uncommented in rust/Cargo.toml and, for the
 # tests to run rather than skip, `make artifacts`).
@@ -205,4 +259,4 @@ artifacts:
 
 clean:
 	cargo clean
-	rm -rf results $(EXP_SMOKE_DIR) $(SERVE_SMOKE_DIR) $(PACKED_SMOKE_DIR) $(HTTP_SMOKE_DIR) $(DEGRADE_SMOKE_DIR)
+	rm -rf results $(EXP_SMOKE_DIR) $(SERVE_SMOKE_DIR) $(PACKED_SMOKE_DIR) $(HTTP_SMOKE_DIR) $(DEGRADE_SMOKE_DIR) $(TRACE_SMOKE_DIR)

@@ -400,6 +400,79 @@ fn main() -> mpq::Result<()> {
         }
     }
 
+    // -- span-tracing overhead -----------------------------------------------
+    // The same in-process closed-loop drive with the trace sink off, at
+    // sample=1 (every request carries the full span set), and at
+    // sample=16 (1-in-16).  Disabled tracing is one `Option` check at
+    // admission; the printed ratios are the observability tax the
+    // `--trace-sample` flag buys into.  Row names are new — the existing
+    // `serve sim_skew ...` trajectory above is untouched.
+    {
+        use mpq::serve::{
+            loadgen, Engine, LoadMode, LoadSpec, ServeConfig, Spawner, TraceConfig, TraceSink,
+        };
+        let be = mpq::backend::SimBackend::new("sim_skew")?;
+        let ck = be.init_checkpoint()?;
+        let graph = mpq::graph::Graph::from_manifest(&be.manifest().raw)?;
+        let bits = BitsConfig::uniform(&graph, 4).to_f32();
+        let data = Dataset::for_task(mpq::backend::Task::Cls, 7);
+        let requests = if quick { 64 } else { 256 };
+        let spawner: Spawner = std::sync::Arc::new(|| {
+            Ok(Box::new(mpq::backend::SimBackend::new("sim_skew")?) as Box<dyn Backend>)
+        });
+        let mut per_cfg: BTreeMap<(&'static str, usize), f64> = BTreeMap::new();
+        for &workers in &[1usize, 4] {
+            for &(tag, sample) in &[("trace=off", 0u64), ("trace=1", 1), ("trace=16", 16)] {
+                let trace = (sample > 0)
+                    .then(|| TraceSink::new(TraceConfig { sample, ..TraceConfig::default() }));
+                let cfg = ServeConfig {
+                    workers,
+                    max_batch: 32,
+                    batch_timeout: std::time::Duration::from_millis(1),
+                    force_per_request: false,
+                    warmup: true,
+                    trace,
+                    ..ServeConfig::default()
+                };
+                let engine = Engine::start(spawner.clone(), ck.clone(), bits.clone(), cfg)?;
+                let spec = LoadSpec {
+                    requests,
+                    max_request_samples: 2,
+                    seed: 42,
+                    mode: LoadMode::Closed { concurrency: 8 },
+                };
+                let load = loadgen::run(&engine, &data, &spec)?;
+                engine.drain()?;
+                let per_req = load.wall_s / requests as f64;
+                per_cfg.insert((tag, workers), per_req);
+                let m = Measurement {
+                    name: format!("serve sim_skew {tag} w={workers} mb=32 wall/req"),
+                    iters: requests,
+                    mean_s: per_req,
+                    std_s: 0.0,
+                    p50_s: per_req,
+                    p95_s: per_req,
+                    p99_s: per_req,
+                    min_s: per_req,
+                };
+                note(&mut sink, &baseline, m);
+            }
+            for &(tag, label) in &[("trace=1", "sample=1"), ("trace=16", "sample=16")] {
+                if let (Some(&off), Some(&on)) =
+                    (per_cfg.get(&("trace=off", workers)), per_cfg.get(&(tag, workers)))
+                {
+                    println!(
+                        "{:<44} {:>6.2}x  ({} -> {})",
+                        format!("  -> trace overhead {label} w={workers}"),
+                        on / off,
+                        fmt_s(off),
+                        fmt_s(on)
+                    );
+                }
+            }
+        }
+    }
+
     // -- config hot-swap latency ---------------------------------------------
     // Wall time from just before `Engine::swap` to the first response
     // served under the new epoch, with a backlog of old-epoch requests

@@ -61,6 +61,7 @@ pub fn gemm_bias_wt(
     fan_in: usize,
     fan_out: usize,
 ) {
+    let lt = super::ltrace::enter();
     for bi in 0..batch {
         let arow = &a[bi * fan_in..(bi + 1) * fan_in];
         let zrow = &mut z[bi * fan_out..(bi + 1) * fan_out];
@@ -74,6 +75,9 @@ pub fn gemm_bias_wt(
             }
             *zv = acc;
         }
+    }
+    if let Some(t0) = lt {
+        super::ltrace::exit(t0, 0, "f32");
     }
 }
 

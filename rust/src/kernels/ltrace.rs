@@ -1,0 +1,147 @@
+//! Thread-local per-layer GEMM timing capture for the serve tracer.
+//!
+//! The serve worker enables a capture window around a backend forward
+//! pass ([`begin`] … [`take`]); while the window is open, every GEMM
+//! entry point in this crate ([`super::packed::gemm_bias_packed_v`],
+//! [`super::packed::gemm_bias_packed_epilogue_v`],
+//! [`super::packed::gemm_bias_packed_i32_v`],
+//! [`super::gemm::gemm_bias_wt`]) records one [`GemmTiming`] on the
+//! calling thread.  Forward passes execute layers in order, so the nth
+//! captured timing *is* layer n — the kernels need no layer-index
+//! plumbing, and code outside a capture window (training loops, sweeps,
+//! tests) pays exactly one thread-local `Cell<bool>` read per GEMM.
+//!
+//! Timestamps are nanoseconds **relative to the capture window's
+//! start**; the worker adds its own sink-relative base when it turns
+//! timings into [`crate::serve::trace::Stage::LayerGemm`] spans.  Row-
+//! parallel kernels fan out worker threads internally, but enter/exit
+//! wrap the whole banded call on the *calling* thread, so the span
+//! covers the full layer regardless of `threads`.
+
+use std::cell::{Cell, RefCell};
+use std::time::Instant;
+
+/// One GEMM call inside a capture window.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmTiming {
+    /// Call order inside the window == layer index of the forward pass.
+    pub seq: usize,
+    /// Layer precision (packed kernels; 0 for the f32 `wt` path, which
+    /// has no per-layer code width at the kernel level).
+    pub bits: u32,
+    /// Kernel variant name (`"scalar"`/`"unrolled"`/`"simd"`, or
+    /// `"f32"` for the dense transposed-weight kernel).
+    pub variant: &'static str,
+    /// Window-relative start, ns.
+    pub t_start_ns: u64,
+    /// Window-relative end, ns.
+    pub t_end_ns: u64,
+}
+
+thread_local! {
+    /// Fast gate read by every GEMM call; only true inside a window.
+    static ACTIVE: Cell<bool> = const { Cell::new(false) };
+    static WINDOW: RefCell<Option<Window>> = const { RefCell::new(None) };
+}
+
+struct Window {
+    start: Instant,
+    timings: Vec<GemmTiming>,
+}
+
+/// Open a capture window on the current thread (replacing any prior
+/// window).  Pair with [`take`].
+pub fn begin() {
+    WINDOW.with(|w| {
+        *w.borrow_mut() = Some(Window { start: Instant::now(), timings: Vec::new() })
+    });
+    ACTIVE.with(|a| a.set(true));
+}
+
+/// Is a capture window open on this thread?
+pub fn active() -> bool {
+    ACTIVE.with(|a| a.get())
+}
+
+/// Close the window and return its timings (empty if none was open).
+pub fn take() -> Vec<GemmTiming> {
+    ACTIVE.with(|a| a.set(false));
+    WINDOW.with(|w| w.borrow_mut().take().map(|w| w.timings).unwrap_or_default())
+}
+
+/// GEMM prologue: window-relative start timestamp, `None` when capture
+/// is off (the disabled-path cost: one `Cell` read).
+#[inline]
+pub fn enter() -> Option<u64> {
+    if !active() {
+        return None;
+    }
+    WINDOW.with(|w| {
+        w.borrow()
+            .as_ref()
+            .map(|win| win.start.elapsed().as_nanos() as u64)
+    })
+}
+
+/// GEMM epilogue: record the call that [`enter`] opened.
+pub fn exit(t_start_ns: u64, bits: u32, variant: &'static str) {
+    WINDOW.with(|w| {
+        if let Some(win) = w.borrow_mut().as_mut() {
+            let t_end_ns = win.start.elapsed().as_nanos() as u64;
+            let seq = win.timings.len();
+            win.timings.push(GemmTiming {
+                seq,
+                bits,
+                variant,
+                t_start_ns,
+                t_end_ns: t_end_ns.max(t_start_ns),
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_is_off_by_default_and_scoped_to_the_window() {
+        assert!(!active());
+        assert_eq!(enter(), None);
+        begin();
+        assert!(active());
+        let t0 = enter().expect("window open");
+        exit(t0, 4, "unrolled");
+        let t1 = enter().unwrap();
+        exit(t1, 2, "scalar");
+        let timings = take();
+        assert!(!active());
+        assert_eq!(timings.len(), 2);
+        assert_eq!(timings[0].seq, 0);
+        assert_eq!(timings[1].seq, 1);
+        assert_eq!(timings[0].bits, 4);
+        assert_eq!(timings[1].variant, "scalar");
+        assert!(timings[0].t_end_ns >= timings[0].t_start_ns);
+        assert!(timings[1].t_start_ns >= timings[0].t_start_ns);
+        // Closed window: recording is a no-op again.
+        assert_eq!(enter(), None);
+        assert!(take().is_empty());
+    }
+
+    #[test]
+    fn instrumented_gemms_record_only_inside_a_window() {
+        let (batch, fi, fo) = (2usize, 3usize, 2usize);
+        let a = vec![0.5f32; batch * fi];
+        let wt = vec![0.25f32; fo * fi];
+        let bias = vec![0.0f32; fo];
+        let mut z = vec![0f32; batch * fo];
+        crate::kernels::gemm::gemm_bias_wt(&a, &wt, &bias, &mut z, batch, fi, fo);
+        assert!(take().is_empty(), "no window, no timings");
+        begin();
+        crate::kernels::gemm::gemm_bias_wt(&a, &wt, &bias, &mut z, batch, fi, fo);
+        let t = take();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].variant, "f32");
+        assert_eq!(t[0].bits, 0);
+    }
+}

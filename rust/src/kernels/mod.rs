@@ -36,6 +36,7 @@
 
 pub mod cache;
 pub mod gemm;
+pub mod ltrace;
 pub mod packed;
 
 pub use cache::{fingerprint_f32, FeatCache, PackedWeightCache, WeightCache};

@@ -913,9 +913,13 @@ pub fn gemm_bias_packed_v(
     variant: PackedVariant,
     threads: usize,
 ) {
+    let lt = super::ltrace::enter();
     banded(pk.fan_out, batch, z, threads, |o0, o1, band| {
         lut_band(a, pk, bias, band, batch, o0, o1, variant)
     });
+    if let Some(t0) = lt {
+        super::ltrace::exit(t0, pk.bits, variant.name());
+    }
 }
 
 /// Forward tile with the per-layer LSQ scale applied **once in the
@@ -950,9 +954,13 @@ pub fn gemm_bias_packed_epilogue_v(
     variant: PackedVariant,
     threads: usize,
 ) {
+    let lt = super::ltrace::enter();
     banded(pk.fan_out, batch, z, threads, |o0, o1, band| {
         epi_band(a, pk, bias, band, batch, o0, o1, variant)
     });
+    if let Some(t0) = lt {
+        super::ltrace::exit(t0, pk.bits, variant.name());
+    }
 }
 
 /// The fully integer MAC tile: `u8` activation codes × packed weight
@@ -993,9 +1001,13 @@ pub fn gemm_bias_packed_i32_v(
     variant: PackedVariant,
     threads: usize,
 ) {
+    let lt = super::ltrace::enter();
     banded(pk.fan_out, batch, z, threads, |o0, o1, band| {
         i32_band(acodes, pk, bias, scale, band, batch, o0, o1, variant)
     });
+    if let Some(t0) = lt {
+        super::ltrace::exit(t0, pk.bits, variant.name());
+    }
 }
 
 /// ReLU → unsigned LSQ activation **codes** — the same rounding rule as

@@ -1,66 +1,191 @@
 //! Logging substrate (offline environment — no `log` crate).
 //!
 //! Level-filtered stderr logging via the [`info!`](crate::info),
-//! [`warn!`](crate::warn) and [`debug!`](crate::debug) macros.  The level
-//! is read once from `MPQ_LOG` (`debug|info|warn|error`, default `info`)
-//! and can be overridden programmatically with [`set_level`].
+//! [`warn!`](crate::warn) and [`debug!`](crate::debug) macros.  The
+//! filter is read once from `MPQ_LOG` and can be overridden
+//! programmatically with [`set_level`].
+//!
+//! `MPQ_LOG` is a comma-separated spec: a bare level word sets the
+//! default, `target=level` entries set per-module levels, where a target
+//! matches a module path segment-wise (`serve` matches
+//! `mpq::serve::engine`; `serve::controller` matches exactly that
+//! subtree).  The most specific (longest) matching target wins.
+//!
+//! ```text
+//! MPQ_LOG=debug                   # everything at debug
+//! MPQ_LOG=warn,serve=debug        # quiet, except the serve subsystem
+//! MPQ_LOG=info,serve::http=error  # silence front-door chatter only
+//! ```
+//!
+//! This keeps `--trace-out` / `--latency-out` runs clean: subsystem
+//! progress chatter goes through these macros (stderr, filterable),
+//! while machine-parsed gate lines (`serve OK`, report tables) stay on
+//! stdout.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 
 pub const ERROR: u8 = 1;
 pub const WARN: u8 = 2;
 pub const INFO: u8 = 3;
 pub const DEBUG: u8 = 4;
 
-/// 0 = not yet initialized from the environment.
-static LEVEL: AtomicU8 = AtomicU8::new(0);
+/// Parsed `MPQ_LOG` filter: a default level plus per-target overrides.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Filter {
+    /// Level applied when no target matches.
+    pub default: u8,
+    /// `(target, level)` pairs; targets are `::`-separated module-path
+    /// fragments (leading `mpq::` optional).
+    pub targets: Vec<(String, u8)>,
+}
 
-/// Current log level, lazily initialized from `MPQ_LOG`.
-pub fn level() -> u8 {
-    let l = LEVEL.load(Ordering::Relaxed);
-    if l != 0 {
-        return l;
+impl Filter {
+    /// Effective level for a `module_path!()` string: the longest
+    /// matching target wins, else the default.
+    pub fn level_for(&self, module: &str) -> u8 {
+        let mut best: Option<(usize, u8)> = None;
+        for (target, lvl) in &self.targets {
+            if target_matches(target, module) {
+                let len = target.len();
+                if best.map_or(true, |(blen, _)| len > blen) {
+                    best = Some((len, *lvl));
+                }
+            }
+        }
+        best.map(|(_, l)| l).unwrap_or(self.default)
     }
-    let l = match std::env::var("MPQ_LOG").as_deref() {
-        Ok("debug") => DEBUG,
-        Ok("warn") => WARN,
-        Ok("error") => ERROR,
-        _ => INFO,
-    };
-    LEVEL.store(l, Ordering::Relaxed);
-    l
 }
 
-/// Force the log level (tests, CLI flags).
+/// Does `target` name `module` or one of its ancestors?  Targets match
+/// segment-wise anywhere in the path, so `serve` matches
+/// `mpq::serve::engine` and `serve::engine` matches it too, but `erve`
+/// does not.
+fn target_matches(target: &str, module: &str) -> bool {
+    if target.is_empty() {
+        return false;
+    }
+    let mut hay = module;
+    while let Some(pos) = hay.find(target) {
+        let before_ok = pos == 0 || hay[..pos].ends_with("::");
+        let after = &hay[pos + target.len()..];
+        let after_ok = after.is_empty() || after.starts_with("::");
+        if before_ok && after_ok {
+            return true;
+        }
+        // Skip past this occurrence and keep scanning.
+        match hay.get(pos + 1..) {
+            Some(rest) => hay = rest,
+            None => break,
+        }
+    }
+    false
+}
+
+fn parse_level(word: &str) -> Option<u8> {
+    match word {
+        "error" => Some(ERROR),
+        "warn" => Some(WARN),
+        "info" => Some(INFO),
+        "debug" => Some(DEBUG),
+        _ => None,
+    }
+}
+
+/// Parse an `MPQ_LOG` spec.  Unknown words are ignored (the default
+/// stays `info`), so a typo degrades to noise, not a crash.
+pub fn parse_spec(spec: &str) -> Filter {
+    let mut f = Filter { default: INFO, targets: Vec::new() };
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        match entry.split_once('=') {
+            None => {
+                if let Some(l) = parse_level(entry) {
+                    f.default = l;
+                }
+            }
+            Some((target, word)) => {
+                if let Some(l) = parse_level(word.trim()) {
+                    f.targets.push((target.trim().to_string(), l));
+                }
+            }
+        }
+    }
+    f
+}
+
+/// `set_level` override; 0 = none (use the `MPQ_LOG` filter).
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+static FILTER: OnceLock<Filter> = OnceLock::new();
+
+fn filter() -> &'static Filter {
+    FILTER.get_or_init(|| parse_spec(&std::env::var("MPQ_LOG").unwrap_or_default()))
+}
+
+/// Current default log level (the `set_level` override when active, else
+/// the `MPQ_LOG` default).  Per-module targets may still differ — see
+/// [`enabled`].
+pub fn level() -> u8 {
+    let o = OVERRIDE.load(Ordering::Relaxed);
+    if o != 0 {
+        return o;
+    }
+    filter().default
+}
+
+/// Force the log level globally (tests, CLI flags).  Overrides both the
+/// `MPQ_LOG` default and its per-target entries.
 pub fn set_level(l: u8) {
-    LEVEL.store(l, Ordering::Relaxed);
+    OVERRIDE.store(l, Ordering::Relaxed);
 }
 
-/// Macro back end: emit one line to stderr if `lvl` is enabled.
-pub fn log(lvl: u8, name: &str, args: std::fmt::Arguments<'_>) {
-    if lvl <= level() {
-        eprintln!("[{name}] {args}");
+/// Is `lvl` enabled for `module`?
+pub fn enabled(lvl: u8, module: &str) -> bool {
+    let o = OVERRIDE.load(Ordering::Relaxed);
+    if o != 0 {
+        return lvl <= o;
+    }
+    lvl <= filter().level_for(module)
+}
+
+/// Macro back end: emit one line to stderr if `lvl` is enabled for
+/// `module` (a `module_path!()` string; the crate prefix is stripped on
+/// output).
+pub fn log(lvl: u8, name: &str, module: &str, args: std::fmt::Arguments<'_>) {
+    if enabled(lvl, module) {
+        let short = module.strip_prefix("mpq::").unwrap_or(module);
+        eprintln!("[{name} {short}] {args}");
     }
 }
 
 #[macro_export]
 macro_rules! info {
     ($($arg:tt)*) => {
-        $crate::logging::log($crate::logging::INFO, "INFO", format_args!($($arg)*))
+        $crate::logging::log(
+            $crate::logging::INFO, "INFO", module_path!(), format_args!($($arg)*),
+        )
     };
 }
 
 #[macro_export]
 macro_rules! warn {
     ($($arg:tt)*) => {
-        $crate::logging::log($crate::logging::WARN, "WARN", format_args!($($arg)*))
+        $crate::logging::log(
+            $crate::logging::WARN, "WARN", module_path!(), format_args!($($arg)*),
+        )
     };
 }
 
 #[macro_export]
 macro_rules! debug {
     ($($arg:tt)*) => {
-        $crate::logging::log($crate::logging::DEBUG, "DEBUG", format_args!($($arg)*))
+        $crate::logging::log(
+            $crate::logging::DEBUG, "DEBUG", module_path!(), format_args!($($arg)*),
+        )
     };
 }
 
@@ -77,9 +202,39 @@ mod tests {
     fn set_level_wins() {
         set_level(WARN);
         assert_eq!(level(), WARN);
+        assert!(!enabled(DEBUG, "mpq::serve::engine"));
         // Disabled level is a no-op (must not panic).
         crate::debug!("hidden {}", 1);
         set_level(INFO);
         crate::info!("shown {}", 2);
+    }
+
+    #[test]
+    fn spec_parses_default_and_targets() {
+        let f = parse_spec("warn,serve=debug,serve::http=error");
+        assert_eq!(f.default, WARN);
+        assert_eq!(f.level_for("mpq::serve::engine"), DEBUG);
+        assert_eq!(f.level_for("mpq::serve::http"), ERROR);
+        assert_eq!(f.level_for("mpq::serve::http::parser"), ERROR);
+        assert_eq!(f.level_for("mpq::kernels::packed"), WARN);
+        // Unknown words degrade to the default, never crash.
+        assert_eq!(parse_spec("loud,nope=verbose").default, INFO);
+        assert_eq!(parse_spec("").default, INFO);
+        assert_eq!(parse_spec("debug").default, DEBUG);
+    }
+
+    #[test]
+    fn target_matching_is_segment_wise() {
+        assert!(target_matches("serve", "mpq::serve::engine"));
+        assert!(target_matches("serve::engine", "mpq::serve::engine"));
+        assert!(target_matches("mpq::serve", "mpq::serve::engine"));
+        assert!(target_matches("engine", "mpq::serve::engine"));
+        assert!(!target_matches("erve", "mpq::serve::engine"));
+        assert!(!target_matches("serve::eng", "mpq::serve::engine"));
+        assert!(!target_matches("", "mpq::serve"));
+        // Longest match wins over a shorter one.
+        let f = parse_spec("serve=error,serve::engine=debug");
+        assert_eq!(f.level_for("mpq::serve::engine"), DEBUG);
+        assert_eq!(f.level_for("mpq::serve::batcher"), ERROR);
     }
 }

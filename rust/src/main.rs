@@ -14,6 +14,7 @@
 //! mpq serve      --model sim_skew --budget 0.7 [--workers N --max-batch B]
 //!                [--listen ADDR | --target http://HOST:PORT]
 //! mpq infer      --model sim_skew [--samples N --index I]
+//! mpq trace      --file trace.json                # validate a --trace-out file
 //! mpq eagl       --model sim_skew [--ckpt path]   # offline metric (Fig. 2)
 //! ```
 //!
@@ -218,8 +219,14 @@ fn validate_flags(args: &Args) -> mpq::Result<()> {
             "fault-stall-work",
             "fault-spike-every",
             "fault-spike-work",
+            "trace-out",
+            "trace-sample",
+            "latency-out",
+            "decision-log",
         ],
         "infer" => &["method", "budget", "bits-from", "seed", "samples", "index"],
+        // Offline trace validation: no model, no backend — just the file.
+        "trace" => return args.ensure_known_flags(sub, &["file"]),
         // Manifest-driven: tuning knobs belong in the manifest, so only
         // the orchestration flags are accepted.
         "exp" => return args.ensure_known_flags(sub, &["manifest", "workers", "backend"]),
@@ -243,6 +250,7 @@ fn run() -> mpq::Result<()> {
         Some("exp") => cmd_exp(&args),
         Some("serve") => cmd_serve(&args),
         Some("infer") => cmd_infer(&args),
+        Some("trace") => cmd_trace(&args),
         Some("report") => cmd_report(&args),
         Some("eagl") => cmd_eagl(&args),
         other => {
@@ -314,9 +322,27 @@ subcommands:
                               flags [--fault-stall-every N] [--fault-stall-ms F]
                               [--fault-stall-work F] [--fault-spike-every N]
                               [--fault-spike-work F] [--fault-seed X]
+              --trace-sample N   per-request span tracing: record every Nth
+                              admitted request (deterministic id % N == 0;
+                              default 1 = every request) through the full
+                              lifecycle — HTTP parse, admission, queue wait,
+                              batch assembly, per-layer packed GEMM,
+                              reassembly, epilogue, serialize, socket write —
+                              plus pinned mpq_stage_* histogram lines on
+                              /metrics and GET /trace (with --listen)
+              --trace-out F   write the Chrome trace-event JSON (load it in
+                              Perfetto / chrome://tracing) after drain;
+                              implies tracing at --trace-sample's rate
+              --latency-out F   per-request {index, samples, epoch,
+                              latency_ns} JSONL from the loadgen
+              --decision-log F  controller decision JSONL; the sim-time
+                              (--degrade) log is byte-identical across
+                              reruns, --workers, and --kernel
   infer       --model M [--budget F | --bits-from ...] [--samples N] [--index I]
               one-shot inference (a direct eval_step; bit-identical across
               kernels)
+  trace       --file trace.json   validate a --trace-out / GET /trace file:
+              complete span sets per request, monotone timestamps
   eagl        --model M [--ckpt P]          offline EAGL metric (Fig. 2)
 
 backends: --backend sim|pjrt|auto (default auto).  sim = hermetic pure-Rust
@@ -340,7 +366,8 @@ common flags: --data-seed, --base-steps, --ft-steps, --eval-batches,
               worker-pool width for infer; bit-identical at any N)
 unknown or misspelled flags are rejected per subcommand.
 env: MPQ_ARTIFACTS (artifacts dir), MPQ_RESULTS (results root),
-     MPQ_LOG (debug|info|warn|error), MPQ_WORKERS (default for --workers),
+     MPQ_LOG (debug|info|warn|error, or a per-module spec like
+     "warn,serve=debug,serve::http=error"), MPQ_WORKERS (default for --workers),
      MPQ_GEMM_THREADS (default for --gemm-threads)
 ";
 
@@ -693,6 +720,82 @@ fn thresholds_from_args(args: &Args, sim_ticks: bool) -> mpq::Result<serve::SloT
     })
 }
 
+/// Span-tracing sink from the `--trace-*` flags: enabled when either
+/// `--trace-out` or `--trace-sample` is given (sample defaults to 1 =
+/// every request).  Disabled tracing costs the hot path one `Option`
+/// check at admission.
+fn trace_sink_from_args(args: &Args) -> mpq::Result<Option<Arc<serve::TraceSink>>> {
+    if args.opt_str("trace-out").is_none() && args.opt_str("trace-sample").is_none() {
+        return Ok(None);
+    }
+    let sample = args.u64("trace-sample", 1)?;
+    mpq::ensure!(sample >= 1, "--trace-sample expects a positive integer, got {sample}");
+    let cfg = serve::TraceConfig { sample, ..serve::TraceConfig::default() };
+    mpq::info!("tracing on: sample 1-in-{sample}, ring capacity {} request(s)", cfg.capacity);
+    Ok(Some(serve::TraceSink::new(cfg)))
+}
+
+/// `--trace-out`: write the Chrome trace-event file after the engine has
+/// drained (so every sampled request's spans are published).
+fn write_trace_out(args: &Args, sink: &Option<Arc<serve::TraceSink>>) -> mpq::Result<()> {
+    let Some(path) = args.opt_str("trace-out") else {
+        return Ok(());
+    };
+    let sink = sink
+        .as_ref()
+        .ok_or_else(|| mpq::err!("--trace-out without an active trace sink"))?;
+    sink.write_chrome(Path::new(path))?;
+    println!(
+        "trace written to {path}: {} request(s) published, {} evicted",
+        sink.published(),
+        sink.dropped()
+    );
+    Ok(())
+}
+
+/// `--latency-out`: per-request latency JSONL from a finished load run.
+fn write_latency_out(args: &Args, load: &serve::LoadReport) -> mpq::Result<()> {
+    let Some(path) = args.opt_str("latency-out") else {
+        return Ok(());
+    };
+    std::fs::write(path, serve::latency_jsonl(load))
+        .map_err(|e| mpq::err!("--latency-out {path}: {e}"))?;
+    println!("latencies written to {path}: {} line(s)", load.responses.len());
+    Ok(())
+}
+
+/// `--decision-log`: controller decision JSONL.  The sim-time
+/// (`--degrade`) log is byte-identical across reruns; the live log's
+/// shape is wall-clock-driven.
+fn write_decision_log(args: &Args, log: &[serve::controller::DecisionRecord]) -> mpq::Result<()> {
+    let Some(path) = args.opt_str("decision-log") else {
+        return Ok(());
+    };
+    std::fs::write(path, serve::decisions_jsonl(log))
+        .map_err(|e| mpq::err!("--decision-log {path}: {e}"))?;
+    println!("decision log written to {path}: {} tick(s)", log.len());
+    Ok(())
+}
+
+/// `mpq trace --file trace.json`: offline validation of a trace file
+/// written by `--trace-out` (or saved from `GET /trace`) — every traced
+/// request must carry a complete span set with sane timestamps.
+fn cmd_trace(args: &Args) -> mpq::Result<()> {
+    let path = args
+        .opt_str("file")
+        .ok_or_else(|| mpq::err!("trace requires --file <trace.json>"))?;
+    let text = std::fs::read_to_string(path).map_err(|e| mpq::err!("trace: read {path}: {e}"))?;
+    let chk = serve::check_trace_text(&text)?;
+    println!(
+        "trace OK: {} event(s), {} request(s), {} stage(s) covered, {} controller tick(s)",
+        chk.events,
+        chk.requests,
+        chk.stages.len(),
+        chk.ctl_events
+    );
+    Ok(())
+}
+
 /// `mpq serve`: start the batched inference engine for the resolved
 /// (checkpoint, bits) pair and drive it with the deterministic loadgen.
 fn cmd_serve(args: &Args) -> mpq::Result<()> {
@@ -718,9 +821,9 @@ fn cmd_serve(args: &Args) -> mpq::Result<()> {
                 "--frontier-from replaces --bits-from/--budget: serving starts at frontier level 0"
             );
             let steps = build_frontier(args, &mut co, path)?;
-            println!("frontier from {path}: {} level(s) [{}, {} kernels]", steps.len(), kind.name(), kernel.name());
+            mpq::info!("frontier from {path}: {} level(s) [{}, {} kernels]", steps.len(), kind.name(), kernel.name());
             for (i, s) in steps.iter().enumerate() {
-                println!(
+                mpq::info!(
                     "  level {i}: {:<14} metric {:.4}  {:.4} GBOPs",
                     s.label(),
                     s.metric,
@@ -739,7 +842,7 @@ fn cmd_serve(args: &Args) -> mpq::Result<()> {
         None => {
             let bits = serve_bits(args, &mut co)?;
             let ck = serve_checkpoint(args, &mut co, &bits)?;
-            println!(
+            mpq::info!(
                 "serving {model} [{}, {} kernels]: {} group(s) at 2-bit, compression {:.2}x, {:.4} GBOPs",
                 kind.name(),
                 kernel.name(),
@@ -755,6 +858,7 @@ fn cmd_serve(args: &Args) -> mpq::Result<()> {
         timeout_ms.is_finite() && timeout_ms >= 0.0,
         "--batch-timeout-ms expects a non-negative number, got {timeout_ms}"
     );
+    let trace_sink = trace_sink_from_args(args)?;
     let cfg = serve::ServeConfig {
         workers: co.workers,
         max_batch: args.usize("max-batch", 32)?,
@@ -764,12 +868,13 @@ fn cmd_serve(args: &Args) -> mpq::Result<()> {
         fault: fault_from_args(args)?,
         initial_budget: init_budget,
         initial_label: init_label,
+        trace: trace_sink.clone(),
     };
     let model_s = model.clone();
     let spawner: serve::Spawner =
         Arc::new(move || backend::open_tuned(kind, &model_s, kernel, tuning));
     let engine = serve::Engine::start(spawner, ck, bits_f32, cfg.clone())?;
-    println!(
+    mpq::info!(
         "engine: {} worker(s), max-batch {}, timeout {:.1}ms, {} batching, {} tiles, gemm-threads {}",
         cfg.workers,
         cfg.max_batch,
@@ -782,7 +887,8 @@ fn cmd_serve(args: &Args) -> mpq::Result<()> {
     if let Some(profile) = args.opt_str("degrade") {
         let steps = frontier
             .ok_or_else(|| mpq::err!("--degrade needs --frontier-from sweep.jsonl"))?;
-        return cmd_degrade(args, engine, co.data.clone(), steps, profile);
+        cmd_degrade(args, engine, co.data.clone(), steps, profile)?;
+        return write_trace_out(args, &trace_sink);
     }
     let mode = match args.str("mode", "closed").as_str() {
         "closed" => serve::LoadMode::Closed {
@@ -803,7 +909,8 @@ fn cmd_serve(args: &Args) -> mpq::Result<()> {
     // engine and self-drive it with the same loadgen over real loopback
     // sockets (this is what `make http-smoke` runs).
     if let Some(listen) = args.opt_str("listen") {
-        return cmd_serve_listen(args, engine, co.data.clone(), &spec, listen, frontier);
+        cmd_serve_listen(args, engine, co.data.clone(), &spec, listen, frontier)?;
+        return write_trace_out(args, &trace_sink);
     }
     mpq::ensure!(
         frontier.is_none(),
@@ -829,6 +936,8 @@ fn cmd_serve(args: &Args) -> mpq::Result<()> {
         "serve OK: {} response(s), ids monotone, clean drain",
         load.responses.len()
     );
+    write_latency_out(args, &load)?;
+    write_trace_out(args, &trace_sink)?;
     Ok(())
 }
 
@@ -854,7 +963,9 @@ fn cmd_serve_listen(
     let swaps = frontier.map(|steps| Arc::new(serve::SwapRegistry { steps }));
     let server = serve::HttpServer::start_with(engine, data, hcfg, swaps.clone())?;
     let addr = server.local_addr().to_string();
-    println!("listening on http://{addr} (POST /infer, POST /swap, GET /metrics, GET /healthz)");
+    mpq::info!(
+        "listening on http://{addr} (POST /infer, POST /swap, GET /metrics, GET /trace, GET /healthz)"
+    );
     // SLO controller: tick against the live engine while the loadgen
     // runs, hot-swapping along the frontier when the windowed p99 or
     // queue depth trips the thresholds.  Stopped (and its engine handle
@@ -882,7 +993,7 @@ fn cmd_serve_listen(
                     Ok(c)
                 })
                 .map_err(|e| mpq::err!("serve: spawn controller: {e}"))?;
-            println!(
+            mpq::info!(
                 "controller: tick {:.0}ms, slo p99 {:.1}ms, queue high/low {}/{}, cooldown {}",
                 tick_ms,
                 th.slo_p99 * 1e3,
@@ -909,6 +1020,9 @@ fn cmd_serve_listen(
             c.state.level,
             c.frontier[c.state.level].label()
         );
+        // Live decision log: shaped by the wall clock (unlike the
+        // byte-stable --degrade variant), but the same JSONL schema.
+        write_decision_log(args, &c.log)?;
     }
     // One real scrape: /metrics must parse and account for the traffic.
     let scrape = serve::http::client::HttpClient::connect(&addr)?.get("/metrics")?;
@@ -921,6 +1035,18 @@ fn cmd_serve_listen(
         spec.requests
     );
     println!("metrics scrape OK: {} line(s)", text.lines().count());
+    // With tracing on, the scrape must also carry the pinned per-stage
+    // histogram section (appended after the engine/http/ctl families).
+    if args.opt_str("trace-out").is_some() || args.opt_str("trace-sample").is_some() {
+        for stage in ["layer_gemm", "queue_wait", "socket_write"] {
+            let needle = format!("mpq_stage_latency_seconds_count{{stage=\"{stage}\"}}");
+            mpq::ensure!(
+                text.lines().any(|l| l.starts_with(&needle)),
+                "metrics scrape missing {needle} while tracing is on"
+            );
+        }
+        println!("stage metrics OK");
+    }
     let (snap, hstats) = server.shutdown()?;
     print!("{}", report::serve_table(&snap, &load));
     println!(
@@ -951,6 +1077,7 @@ fn cmd_serve_listen(
         "http-serve OK: {} response(s) over http://{addr}, ids monotone, clean drain",
         load.responses.len()
     );
+    write_latency_out(args, &load)?;
     Ok(())
 }
 
@@ -1030,7 +1157,7 @@ fn cmd_degrade(
         "--capacity expects a positive number, got {}",
         dcfg.capacity_per_tick
     );
-    println!(
+    mpq::info!(
         "degrade drill: profile '{}' ({} tick(s)), {} frontier level(s), capacity {}/tick",
         dcfg.profile.name,
         dcfg.profile.arrivals_per_tick().len(),
@@ -1040,6 +1167,7 @@ fn cmd_degrade(
     let Some(listen) = args.opt_str("listen") else {
         let out = serve::run_degrade(&engine, &data, &steps, &dcfg)?;
         engine.drain()?;
+        write_decision_log(args, &out.log)?;
         return print_degrade(&out);
     };
     // Front door alongside the drill: the controller gauges must be
@@ -1085,6 +1213,7 @@ fn cmd_degrade(
         before.1, after.1, after.2
     );
     server.shutdown()?;
+    write_decision_log(args, &out.log)?;
     print_degrade(&out)
 }
 
@@ -1111,7 +1240,7 @@ fn cmd_serve_target(args: &Args, target: &str) -> mpq::Result<()> {
         seed: args.u64("loadgen-seed", 42)?,
         mode,
     };
-    println!("loadgen -> http://{addr}: {} request(s)", spec.requests);
+    mpq::info!("loadgen -> http://{addr}: {} request(s)", spec.requests);
     let load = serve::loadgen::run_http(addr, &spec)?;
     let m = serve::Metrics::new();
     for r in &load.responses {
@@ -1123,6 +1252,7 @@ fn cmd_serve_target(args: &Args, target: &str) -> mpq::Result<()> {
         "http loadgen OK: {} response(s), ids monotone",
         load.responses.len()
     );
+    write_latency_out(args, &load)?;
     Ok(())
 }
 

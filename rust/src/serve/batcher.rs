@@ -40,6 +40,7 @@ use crate::tensor::Tensor;
 
 use super::engine::EpochState;
 use super::metrics::Metrics;
+use super::trace::{ReqTrace, Stage};
 
 /// One served response.  `loss`/`evalout` carry exactly what a direct
 /// [`crate::backend::Backend::eval_step`] on the request's samples
@@ -98,6 +99,10 @@ impl Promise {
 pub struct Ticket {
     pub(crate) id: u64,
     pub(crate) promise: Arc<Promise>,
+    /// Span buffer when this request is trace-sampled: the client side
+    /// (HTTP conn thread) records parse/serialize/write spans through it,
+    /// and the last clone's drop publishes the whole request.
+    pub(crate) trace: Option<ReqTrace>,
 }
 
 impl Ticket {
@@ -105,6 +110,11 @@ impl Ticket {
     /// order).
     pub fn id(&self) -> u64 {
         self.id
+    }
+
+    /// The request's span buffer when tracing sampled it.
+    pub fn trace(&self) -> Option<&ReqTrace> {
+        self.trace.as_ref()
     }
 
     /// Block until the engine fulfills this request.
@@ -145,6 +155,9 @@ pub(crate) struct Pending {
     state: Mutex<PendingState>,
     promise: Arc<Promise>,
     metrics: Arc<Metrics>,
+    /// Span buffer when this request is trace-sampled (`None` = not
+    /// sampled or tracing disabled; every hook below is gated on it).
+    pub trace: Option<ReqTrace>,
 }
 
 impl Pending {
@@ -156,6 +169,7 @@ impl Pending {
         total_chunks: usize,
         epoch_state: Arc<EpochState>,
         metrics: Arc<Metrics>,
+        trace: Option<ReqTrace>,
     ) -> Pending {
         Pending {
             id,
@@ -173,6 +187,7 @@ impl Pending {
             }),
             promise: Arc::new(Promise::new()),
             metrics,
+            trace,
         }
     }
 
@@ -185,6 +200,7 @@ impl Pending {
         Ticket {
             id: self.id,
             promise: Arc::clone(&self.promise),
+            trace: self.trace.clone(),
         }
     }
 
@@ -213,7 +229,11 @@ impl Pending {
             st.logits.resize(self.samples * classes, 0.0);
         }
         debug_assert_eq!(st.classes, classes);
+        let t_asm = self.trace.as_ref().map(|rt| rt.now_ns());
         st.logits[offset * classes..(offset + len) * classes].copy_from_slice(rows);
+        if let (Some(rt), Some(t0)) = (&self.trace, t_asm) {
+            rt.span(Stage::Reassembly, self.epoch(), t0, rt.now_ns());
+        }
         st.done_chunks += 1;
         if st.done_chunks < self.total_chunks {
             return;
@@ -230,7 +250,11 @@ impl Pending {
             self.finish(&mut st, Err(err));
             return;
         }
+        let t_epi = self.trace.as_ref().map(|rt| rt.now_ns());
         let (loss, correct) = softmax_ce(&st.logits, y, self.samples, classes, None);
+        if let (Some(rt), Some(t0)) = (&self.trace, t_epi) {
+            rt.span(Stage::Epilogue, self.epoch(), t0, rt.now_ns());
+        }
         let resp = Response {
             id: self.id,
             samples: self.samples,
@@ -451,6 +475,7 @@ mod tests {
             total_chunks,
             epoch_state(epoch),
             Arc::new(Metrics::new()),
+            None,
         ))
     }
 
@@ -562,7 +587,7 @@ mod tests {
         // 3 samples, 2 classes, reassembled from two chunks out of order.
         let metrics = Arc::new(Metrics::new());
         let y = Tensor::from_i32(&[3], vec![0, 1, 0]);
-        let p = Pending::new(7, Tensor::zeros(&[3, 1]), y.clone(), 3, 2, epoch_state(0), metrics);
+        let p = Pending::new(7, Tensor::zeros(&[3, 1]), y.clone(), 3, 2, epoch_state(0), metrics, None);
         let t = p.ticket();
         let logits = vec![2.0f32, -1.0, 0.5, 1.5, 3.0, 0.0];
         // Chunk 2 (sample 2) lands before chunk 1 (samples 0..2).
@@ -579,7 +604,7 @@ mod tests {
     #[test]
     fn out_of_range_label_fails_cleanly_instead_of_panicking() {
         let y = Tensor::from_i32(&[2], vec![0, 9]); // 9 >= 2 classes
-        let p = Pending::new(5, Tensor::zeros(&[2, 1]), y, 2, 1, epoch_state(0), Arc::new(Metrics::new()));
+        let p = Pending::new(5, Tensor::zeros(&[2, 1]), y, 2, 1, epoch_state(0), Arc::new(Metrics::new()), None);
         let t = p.ticket();
         p.complete_chunk(0, 2, 2, &[0.1, 0.2, 0.3, 0.4]);
         let err = t.wait().unwrap_err().to_string();

@@ -263,6 +263,29 @@ pub fn render_log(log: &[DecisionRecord]) -> String {
     s
 }
 
+/// Render a decision log as structured JSONL: one compact JSON object
+/// per line, keys sorted (BTreeMap), ints rendered without a fraction,
+/// and a windowless p99 (NaN) rendered as `null` — all deterministic,
+/// so the sim-time log (`--degrade --decision-log`) is **byte-identical**
+/// across reruns, worker counts, and kernels, same as [`render_log`].
+pub fn decisions_jsonl(log: &[DecisionRecord]) -> String {
+    use crate::jsonio::Json;
+    let mut s = String::new();
+    for r in log {
+        let j = Json::obj(vec![
+            ("tick", Json::num(r.tick as f64)),
+            ("queue_depth", Json::num(r.queue_depth as f64)),
+            ("p99", Json::num(r.p99)),
+            ("decision", Json::str(&r.decision.render())),
+            ("level", Json::num(r.level as f64)),
+            ("epoch", Json::num(r.epoch as f64)),
+        ]);
+        s.push_str(&j.to_string_compact());
+        s.push('\n');
+    }
+    s
+}
+
 /// A seeded open-loop rate schedule in sim time: a sequence of phases,
 /// each `ticks` long at `rate` requests/tick (fractional rates carry a
 /// remainder accumulator across ticks).
@@ -497,14 +520,25 @@ pub fn run_degrade(
             }
         }
         apply(&mut st, &d, cfg.thresholds.cooldown_ticks);
-        log.push(DecisionRecord {
+        let rec = DecisionRecord {
             tick,
             queue_depth,
             p99,
             decision: d,
             level: st.level,
             epoch: cur_epoch,
-        });
+        };
+        if let Some(sink) = engine.trace() {
+            sink.ctl_event(
+                rec.tick,
+                rec.queue_depth,
+                rec.p99,
+                &rec.decision.render(),
+                rec.level,
+                rec.epoch,
+            );
+        }
+        log.push(rec);
         tick += 1;
         if tick >= profile_ticks && (simq.is_empty() || tick >= profile_ticks + cfg.drain_ticks_max)
         {
@@ -598,14 +632,34 @@ impl Controller {
             }
         }
         apply(&mut self.state, &d, self.thresholds.cooldown_ticks);
-        self.log.push(DecisionRecord {
+        let rec = DecisionRecord {
             tick: self.tick,
             queue_depth: w.queue_depth,
             p99: w.p99,
             decision: d,
             level: self.state.level,
             epoch: engine.current_epoch(),
-        });
+        };
+        if let Some(sink) = engine.trace() {
+            sink.ctl_event(
+                rec.tick,
+                rec.queue_depth,
+                rec.p99,
+                &rec.decision.render(),
+                rec.level,
+                rec.epoch,
+            );
+        }
+        crate::debug!(
+            "tick {} q={} p99={:?} {} level={} epoch={}",
+            rec.tick,
+            rec.queue_depth,
+            rec.p99,
+            rec.decision.render(),
+            rec.level,
+            rec.epoch
+        );
+        self.log.push(rec);
         self.tick += 1;
         Ok(d)
     }
@@ -738,6 +792,16 @@ mod tests {
             render_log(&log),
             "tick=0 q=3 p99=NaN hold:steady level=0 epoch=0\n\
              tick=1 q=80 p99=12.0 down:0->1 level=1 epoch=1\n"
+        );
+        // Structured form: keys sorted, NaN p99 -> null, integral f64s
+        // rendered without a fraction.  Pinned byte-for-byte — the degrade
+        // determinism contract extends to --decision-log output.
+        assert_eq!(
+            decisions_jsonl(&log),
+            "{\"decision\":\"hold:steady\",\"epoch\":0,\"level\":0,\"p99\":null,\
+             \"queue_depth\":3,\"tick\":0}\n\
+             {\"decision\":\"down:0->1\",\"epoch\":1,\"level\":1,\"p99\":12,\
+             \"queue_depth\":80,\"tick\":1}\n"
         );
     }
 }

@@ -31,6 +31,7 @@ use crate::tensor::{DType, Tensor};
 use super::batcher::{BatchQueue, ChunkJob, NextBatch, Pending, Ticket};
 use super::loadgen::FaultPlan;
 use super::metrics::{Metrics, MetricsSnapshot};
+use super::trace::{Stage, TraceSink};
 
 /// One immutable serving configuration, version-stamped.  Admission
 /// captures the active `Arc<EpochState>` under the queue lock; a
@@ -94,6 +95,10 @@ pub struct ServeConfig {
     pub initial_budget: f64,
     /// Label of the startup config ("startup" by default).
     pub initial_label: String,
+    /// Span recorder (`None` = tracing disabled; the only cost then is
+    /// this one `Option` check at admission).  See
+    /// [`crate::serve::trace`].
+    pub trace: Option<Arc<TraceSink>>,
 }
 
 impl Default for ServeConfig {
@@ -107,6 +112,7 @@ impl Default for ServeConfig {
             fault: None,
             initial_budget: f64::NAN,
             initial_label: "startup".to_string(),
+            trace: None,
         }
     }
 }
@@ -128,6 +134,8 @@ struct Shared {
     fault: Option<FaultPlan>,
     /// Successful hot-swaps since startup (monotone, for `/metrics`).
     swap_total: AtomicU64,
+    /// Span recorder; `None` disables every tracing hook.
+    trace: Option<Arc<TraceSink>>,
 }
 
 /// A running serving engine.  `submit` is thread-safe; [`Engine::drain`]
@@ -199,6 +207,7 @@ impl Engine {
             y_dtype,
             fault: cfg.fault,
             swap_total: AtomicU64::new(0),
+            trace: cfg.trace.clone(),
         });
         let mut handles = Vec::with_capacity(cfg.workers);
         for wi in 0..cfg.workers {
@@ -293,6 +302,11 @@ impl Engine {
         self.shared.fused
     }
 
+    /// The span recorder, when tracing is enabled.
+    pub fn trace(&self) -> Option<&Arc<TraceSink>> {
+        self.shared.trace.as_ref()
+    }
+
     /// Submit one request (`x`: `[samples, <per-sample dims>]`, `y`:
     /// matching labels).  Returns a [`Ticket`] whose id is strictly
     /// increasing in submission order.
@@ -334,6 +348,9 @@ impl Engine {
                 y.shape
             );
         }
+        // Admission-span start (sink presence is the one check tracing
+        // costs on the disabled path).
+        let t_sub = self.shared.trace.as_ref().map(|s| s.now_ns());
         let ticket = {
             let mut q = self.shared.q.lock().unwrap();
             crate::ensure!(!q.draining, "serve: engine is draining — submission rejected");
@@ -342,6 +359,9 @@ impl Engine {
             }
             let id = q.alloc_id();
             let total_chunks = q.chunks_for(samples, self.shared.fused);
+            // Sampling is a pure function of the id (`id % N == 0`), so
+            // the traced set is identical across reruns.
+            let trace = self.shared.trace.as_ref().and_then(|s| s.begin(id));
             let pending = Arc::new(Pending::new(
                 id,
                 x,
@@ -350,8 +370,17 @@ impl Engine {
                 total_chunks,
                 Arc::clone(&q.active),
                 Arc::clone(&self.shared.metrics),
+                trace,
             ));
             let ticket = pending.ticket();
+            // Admission closes (and queue-wait opens) *before* the
+            // enqueue makes the chunk claimable — a worker may record
+            // queue_wait the instant the lock drops.
+            if let Some(rt) = &pending.trace {
+                let t1 = rt.now_ns();
+                rt.span(Stage::Admission, pending.epoch(), t_sub.unwrap_or(t1), t1);
+                rt.set_admitted(t1, pending.epoch());
+            }
             q.enqueue(&pending, self.shared.fused);
             self.shared.metrics.record_submitted();
             ticket
@@ -471,6 +500,22 @@ fn worker_loop(sh: Arc<Shared>, spawner: Spawner, warmup: bool) {
         match guard.next_batch(Instant::now()) {
             NextBatch::Ready(batch) => {
                 drop(guard);
+                // Queue-wait closes at claim time, per chunk (a
+                // multi-chunk request gets one span per chunk, all
+                // starting at its admission end).
+                if let Some(sink) = &sh.trace {
+                    let t_claim = sink.now_ns();
+                    for c in &batch {
+                        if let Some(rt) = &c.pending.trace {
+                            rt.span(
+                                Stage::QueueWait,
+                                c.pending.epoch(),
+                                rt.admitted_ns(),
+                                t_claim,
+                            );
+                        }
+                    }
+                }
                 sh.metrics.record_batch(
                     batch.len() as u64,
                     batch.iter().map(|c| c.len as u64).sum(),
@@ -572,7 +617,7 @@ fn execute_batch(sh: &Shared, ep: &EpochState, be: &mut Box<dyn Backend>, batch:
     if sh.fused {
         execute_fused(sh, ep, be, batch);
     } else {
-        execute_per_request(ep, be, batch);
+        execute_per_request(sh, ep, be, batch);
     }
 }
 
@@ -580,6 +625,14 @@ fn execute_batch(sh: &Shared, ep: &EpochState, be: &mut Box<dyn Backend>, batch:
 /// then per-request reassembly (row-independent kernels make the logits
 /// independent of batch composition — see [`super::batcher`]).
 fn execute_fused(sh: &Shared, ep: &EpochState, be: &mut Box<dyn Backend>, batch: &[ChunkJob]) {
+    // Trace hooks fire only when the batch carries at least one sampled
+    // request; the assembly window and the per-layer GEMM timings are
+    // shared batch costs, attributed to each traced rider.
+    let sink = sh
+        .trace
+        .as_ref()
+        .filter(|_| batch.iter().any(|c| c.pending.trace.is_some()));
+    let t_asm0 = sink.map(|s| s.now_ns());
     let row: usize = sh.sample_dims.iter().product();
     let total: usize = batch.iter().map(|c| c.len).sum();
     let mut buf = Vec::with_capacity(total * row);
@@ -590,7 +643,39 @@ fn execute_fused(sh: &Shared, ep: &EpochState, be: &mut Box<dyn Backend>, batch:
     let mut shape = vec![total];
     shape.extend_from_slice(&sh.sample_dims);
     let x = Tensor::from_f32(&shape, buf);
-    match be.infer_step(&ep.ckpt, &x, &ep.bits) {
+    if let (Some(s), Some(t0)) = (sink, t_asm0) {
+        let t1 = s.now_ns();
+        for c in batch {
+            if let Some(rt) = &c.pending.trace {
+                rt.span(Stage::BatchAssembly, ep.epoch, t0, t1);
+            }
+        }
+    }
+    // Per-layer GEMM capture: the forward runs layers in order on this
+    // thread, so the nth timing is layer n (see `kernels::ltrace`).
+    let gemm_base = sink.map(|s| {
+        crate::kernels::ltrace::begin();
+        s.now_ns()
+    });
+    let result = be.infer_step(&ep.ckpt, &x, &ep.bits);
+    if let Some(base) = gemm_base {
+        for t in crate::kernels::ltrace::take() {
+            for c in batch {
+                if let Some(rt) = &c.pending.trace {
+                    rt.record(
+                        Stage::LayerGemm,
+                        ep.epoch,
+                        t.seq as i32,
+                        t.bits,
+                        t.variant,
+                        base + t.t_start_ns,
+                        base + t.t_end_ns,
+                    );
+                }
+            }
+        }
+    }
+    match result {
         Ok(logits) => {
             let classes = logits.shape.get(1).copied().unwrap_or(1);
             let ls = logits.f32s();
@@ -615,10 +700,34 @@ fn execute_fused(sh: &Shared, ep: &EpochState, be: &mut Box<dyn Backend>, batch:
 }
 
 /// Fallback mode: each chunk is a whole request; the worker's `eval_step`
-/// call *is* the reference computation.
-fn execute_per_request(ep: &EpochState, be: &mut Box<dyn Backend>, batch: &[ChunkJob]) {
+/// call *is* the reference computation.  Traced requests get queue-wait
+/// and per-layer GEMM spans only — `eval_step` computes its softmax
+/// internally, so there is no separate assembly/reassembly/epilogue
+/// window to attribute (fused mode is the fully-staged path).
+fn execute_per_request(sh: &Shared, ep: &EpochState, be: &mut Box<dyn Backend>, batch: &[ChunkJob]) {
     for c in batch {
-        match be.eval_step(&ep.ckpt, &c.pending.x, &c.pending.y, &ep.bits) {
+        let gemm_base = match (&sh.trace, &c.pending.trace) {
+            (Some(s), Some(_)) => {
+                crate::kernels::ltrace::begin();
+                Some(s.now_ns())
+            }
+            _ => None,
+        };
+        let result = be.eval_step(&ep.ckpt, &c.pending.x, &c.pending.y, &ep.bits);
+        if let (Some(base), Some(rt)) = (gemm_base, &c.pending.trace) {
+            for t in crate::kernels::ltrace::take() {
+                rt.record(
+                    Stage::LayerGemm,
+                    ep.epoch,
+                    t.seq as i32,
+                    t.bits,
+                    t.variant,
+                    base + t.t_start_ns,
+                    base + t.t_end_ns,
+                );
+            }
+        }
+        match result {
             Ok((loss, evalout)) => c.pending.complete_whole(loss, evalout),
             Err(e) => c.pending.fail(&format!("eval_step failed: {e}")),
         }

@@ -26,6 +26,9 @@
 //!   latency histogram (p50/p95/p99), throughput, batch occupancy, and
 //!   the front door's admission counters.  Field names and order are
 //!   pinned by a golden test; lines are only ever appended.
+//! * `GET /trace` — Chrome trace-event JSON of the retained sampled
+//!   request spans (see [`super::trace`]); 503 when the server was
+//!   started without tracing.
 //! * `GET /healthz` — liveness probe, `200 ok`.
 //! * `POST /swap` — body `{"level": L}`; atomically hot-swaps the
 //!   engine onto frontier level `L` from the server's [`SwapRegistry`]
@@ -99,7 +102,8 @@ use crate::tensor::{DType, Tensor};
 use super::batcher::{Response, Ticket};
 use super::controller::FrontierStep;
 use super::engine::Engine;
-use super::metrics::MetricsSnapshot;
+use super::metrics::{family, MetricsSnapshot};
+use super::trace::Stage;
 
 pub mod client;
 pub mod lazyjson;
@@ -462,8 +466,15 @@ fn handle_conn(sh: &Arc<HttpShared>, mut stream: TcpStream) {
             && queue.len() < sh.cfg.max_inflight_per_conn
             && served + queue.len() < sh.cfg.max_requests_per_conn
         {
+            // Parse-window capture (tracing only): the poll that yields a
+            // request is the parse compute; socket waits are not "parse".
+            let t_parse0 = sh.engine.trace().map(|s| s.now_ns());
             match parser.poll() {
-                Ok(Some(req)) => queue.push_back(route(sh, &req)),
+                Ok(Some(req)) => {
+                    let parse_win =
+                        sh.engine.trace().map(|s| (t_parse0.unwrap_or(0), s.now_ns()));
+                    queue.push_back(route(sh, &req, parse_win));
+                }
                 Ok(None) => break,
                 Err(e) => {
                     bump!(sh, bad_requests);
@@ -531,10 +542,10 @@ fn protocol_error_reply(e: &HttpError) -> Reply {
     }
 }
 
-fn route(sh: &Arc<HttpShared>, req: &Request) -> Reply {
+fn route(sh: &Arc<HttpShared>, req: &Request, parse_win: Option<(u64, u64)>) -> Reply {
     let ka = req.keep_alive;
     match (req.method.as_str(), req.target.as_str()) {
-        ("POST", "/infer") => route_infer(sh, req),
+        ("POST", "/infer") => route_infer(sh, req, parse_win),
         ("POST", "/swap") => route_swap(sh, req),
         ("GET", "/metrics") => {
             bump!(sh, metrics_scrapes);
@@ -546,6 +557,27 @@ fn route(sh: &Arc<HttpShared>, req: &Request) -> Reply {
                 close: !ka,
             }
         }
+        ("GET", "/trace") => match sh.engine.trace() {
+            Some(sink) => Reply::Done {
+                status: 200,
+                content_type: "application/json",
+                body: sink.chrome_trace_json().to_string_compact().into_bytes(),
+                retry_after: false,
+                close: !ka,
+            },
+            None => {
+                bump!(sh, rejected);
+                Reply::Done {
+                    status: 503,
+                    content_type: "application/json",
+                    body: error_body(
+                        "tracing disabled: start with --trace-sample or --trace-out",
+                    ),
+                    retry_after: false,
+                    close: !ka,
+                }
+            }
+        },
         ("GET", "/healthz") => Reply::Done {
             status: 200,
             content_type: "text/plain",
@@ -553,7 +585,7 @@ fn route(sh: &Arc<HttpShared>, req: &Request) -> Reply {
             retry_after: false,
             close: !ka,
         },
-        (_, "/infer") | (_, "/swap") | (_, "/metrics") | (_, "/healthz") => {
+        (_, "/infer") | (_, "/swap") | (_, "/metrics") | (_, "/trace") | (_, "/healthz") => {
             bump!(sh, bad_requests);
             Reply::Done {
                 status: 405,
@@ -579,7 +611,7 @@ fn route(sh: &Arc<HttpShared>, req: &Request) -> Reply {
 /// `/infer`: admission gate → lazy body scan → dataset materialization →
 /// engine submit.  Body errors are 400 but keep the connection (the
 /// request was correctly framed); queue-full is an immediate 503.
-fn route_infer(sh: &Arc<HttpShared>, req: &Request) -> Reply {
+fn route_infer(sh: &Arc<HttpShared>, req: &Request, parse_win: Option<(u64, u64)>) -> Reply {
     let ka = req.keep_alive;
     if !sh.try_admit() {
         bump!(sh, rejected);
@@ -622,6 +654,11 @@ fn route_infer(sh: &Arc<HttpShared>, req: &Request) -> Reply {
     match sh.engine.submit(x, y) {
         Ok(ticket) => {
             bump!(sh, admitted);
+            // The parse window happened before a request id existed;
+            // record it retroactively now that sampling has decided.
+            if let (Some(rt), Some((t0, t1))) = (ticket.trace(), parse_win) {
+                rt.span(Stage::HttpParse, rt.epoch(), t0, t1);
+            }
             Reply::Infer { ticket, close: !ka }
         }
         Err(e) => {
@@ -728,13 +765,26 @@ fn write_reply(
         }
         Reply::Infer { ticket, close } => {
             let close = close || at_budget;
+            // Keep the span buffer alive past wait() (which consumes the
+            // ticket): this clone records the serialize/write spans, and
+            // its drop — the request's true end — publishes the whole
+            // span set to the sink's ring.
+            let rt = ticket.trace().cloned();
             let waited = ticket.wait();
             sh.release_permit();
             match waited {
                 Ok(resp) => {
                     bump!(sh, answered);
+                    let t_ser = rt.as_ref().map(|r| r.now_ns());
                     let body = infer_response_json(&resp).into_bytes();
+                    if let (Some(r), Some(t0)) = (&rt, t_ser) {
+                        r.span(Stage::Serialize, resp.epoch, t0, r.now_ns());
+                    }
+                    let t_wr = rt.as_ref().map(|r| r.now_ns());
                     write_response(stream, 200, "application/json", &body, false, close)?;
+                    if let (Some(r), Some(t0)) = (&rt, t_wr) {
+                        r.span(Stage::SocketWrite, resp.epoch, t0, r.now_ns());
+                    }
                 }
                 Err(e) => {
                     bump!(sh, failed);
@@ -869,22 +919,36 @@ pub fn parse_infer_response(body: &[u8]) -> crate::Result<Response> {
 /// order — only ever append new lines at the end of a section.
 fn render_metrics(sh: &HttpShared) -> String {
     let h = sh.stats_snapshot();
-    let mut out = String::with_capacity(1024);
+    let mut out = String::with_capacity(4096);
     out += "# mpq serve /metrics v1\n";
+    family(&mut out, "mpq_http_connections_total", "counter", "Connections accepted by the front door.");
     out += &format!("mpq_http_connections_total {}\n", h.connections);
+    family(&mut out, "mpq_http_requests_admitted_total", "counter", "Requests admitted to the engine.");
     out += &format!("mpq_http_requests_admitted_total {}\n", h.admitted);
+    family(&mut out, "mpq_http_requests_rejected_total", "counter", "Requests rejected with 503.");
     out += &format!("mpq_http_requests_rejected_total {}\n", h.rejected);
+    family(&mut out, "mpq_http_requests_answered_total", "counter", "Admitted requests answered 200.");
     out += &format!("mpq_http_requests_answered_total {}\n", h.answered);
+    family(&mut out, "mpq_http_requests_failed_total", "counter", "Admitted requests answered 500.");
     out += &format!("mpq_http_requests_failed_total {}\n", h.failed);
+    family(&mut out, "mpq_http_requests_aborted_total", "counter", "Admitted requests whose connection died first.");
     out += &format!("mpq_http_requests_aborted_total {}\n", h.aborted);
+    family(&mut out, "mpq_http_bad_requests_total", "counter", "Non-2xx, non-503 responses.");
     out += &format!("mpq_http_bad_requests_total {}\n", h.bad_requests);
+    family(&mut out, "mpq_http_metrics_scrapes_total", "counter", "GET /metrics requests served.");
     out += &format!("mpq_http_metrics_scrapes_total {}\n", h.metrics_scrapes);
+    family(&mut out, "mpq_http_inflight_requests", "gauge", "Admitted requests awaiting their response.");
     out += &format!("mpq_http_inflight_requests {}\n", h.inflight);
+    family(&mut out, "mpq_engine_queue_samples", "gauge", "Samples queued and not yet claimed by a worker.");
     out += &format!("mpq_engine_queue_samples {}\n", sh.engine.queued_samples());
     let ep = sh.engine.epoch_info();
+    family(&mut out, "mpq_ctl_epoch", "gauge", "Current serving epoch.");
     out += &format!("mpq_ctl_epoch {}\n", ep.epoch);
+    family(&mut out, "mpq_ctl_swap_total", "counter", "Successful hot-swaps since startup.");
     out += &format!("mpq_ctl_swap_total {}\n", ep.swap_total);
+    family(&mut out, "mpq_ctl_active_budget", "gauge", "Budget fraction of the active config.");
     out += &format!("mpq_ctl_active_budget {}\n", ep.budget_frac);
+    family(&mut out, "mpq_ctl_frontier_levels", "gauge", "Pre-materialized frontier levels available to /swap.");
     out += &format!(
         "mpq_ctl_frontier_levels {}\n",
         sh.swaps.as_ref().map_or(0, |r| r.steps.len())
@@ -892,6 +956,12 @@ fn render_metrics(sh: &HttpShared) -> String {
     sh.engine
         .metrics()
         .render_prometheus(&mut out, sh.started.elapsed().as_secs_f64());
+    // Per-stage latency histograms, present only while tracing is on
+    // (the sink exists) — appended last so the tracing-off rendering is
+    // a strict prefix of the tracing-on one.
+    if let Some(sink) = sh.engine.trace() {
+        sink.render_stage_metrics(&mut out);
+    }
     out
 }
 

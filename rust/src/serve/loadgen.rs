@@ -465,6 +465,30 @@ pub fn run_http(addr: &str, spec: &LoadSpec) -> crate::Result<LoadReport> {
     )
 }
 
+/// Render a load report's per-request latencies as JSONL
+/// (`mpq serve --latency-out FILE`): one compact object per request in
+/// request-index order, `{index, samples, epoch, latency_ns}` with keys
+/// sorted.  The *shape* of the file is deterministic — indices, sample
+/// counts, and (single-config runs) epochs replay exactly — while the
+/// latencies themselves are wall-clock measurements and are not; pair
+/// the file with the trace (`--trace-out`) when a latency outlier needs
+/// a per-stage explanation.
+pub fn latency_jsonl(report: &LoadReport) -> String {
+    use crate::jsonio::Json;
+    let mut s = String::new();
+    for (i, r) in report.responses.iter().enumerate() {
+        let j = Json::obj(vec![
+            ("index", Json::num(i as f64)),
+            ("samples", Json::num(r.samples as f64)),
+            ("epoch", Json::num(r.epoch as f64)),
+            ("latency_ns", Json::num((r.latency_s * 1e9).round())),
+        ]);
+        s.push_str(&j.to_string_compact());
+        s.push('\n');
+    }
+    s
+}
+
 /// The `POST /infer` request body for request `i` of the stream.
 fn infer_body(i: usize, samples: usize) -> Vec<u8> {
     format!("{{\"index\":{},\"samples\":{samples}}}", request_index(i)).into_bytes()
@@ -549,6 +573,41 @@ mod tests {
         assert!(
             a.iter().zip(&other).any(|((xa, _), (xo, _))| xa.shape != xo.shape),
             "different seeds should produce different request size streams"
+        );
+    }
+
+    #[test]
+    fn latency_jsonl_renders_request_order_with_sorted_keys() {
+        let report = LoadReport {
+            wall_s: 1.0,
+            responses: vec![
+                Response {
+                    id: 1,
+                    samples: 3,
+                    loss: 0.5,
+                    evalout: Tensor::from_f32(&[1], vec![2.0]),
+                    latency_s: 0.5e-3,
+                    epoch: 0,
+                },
+                Response {
+                    id: 0,
+                    samples: 1,
+                    loss: 0.25,
+                    evalout: Tensor::from_f32(&[1], vec![1.0]),
+                    latency_s: 2e-3,
+                    epoch: 1,
+                },
+            ],
+            total_samples: 4,
+            throughput_rps: 2.0,
+            samples_per_s: 4.0,
+            mean_accuracy: 0.75,
+            retried: 0,
+        };
+        assert_eq!(
+            latency_jsonl(&report),
+            "{\"epoch\":0,\"index\":0,\"latency_ns\":500000,\"samples\":3}\n\
+             {\"epoch\":1,\"index\":1,\"latency_ns\":2000000,\"samples\":1}\n"
         );
     }
 

@@ -14,11 +14,12 @@ use crate::jsonio::Json;
 
 /// Sub-buckets per power-of-two octave.
 const SUBS: usize = 4;
-/// 4 exact buckets for 0..4 ns + 62 octaves × SUBS.
-const N_BUCKETS: usize = 4 + 62 * SUBS;
+/// 4 exact buckets for 0..4 ns + 62 octaves × SUBS.  Shared with the
+/// per-stage histograms in [`crate::serve::trace`].
+pub(crate) const N_BUCKETS: usize = 4 + 62 * SUBS;
 
 /// Histogram bucket index for a latency in nanoseconds.
-fn bucket_index(ns: u64) -> usize {
+pub(crate) fn bucket_index(ns: u64) -> usize {
     if ns < 4 {
         return ns as usize;
     }
@@ -28,7 +29,7 @@ fn bucket_index(ns: u64) -> usize {
 }
 
 /// Representative latency (ns) of a bucket: its geometric midpoint.
-fn bucket_rep_ns(idx: usize) -> f64 {
+pub(crate) fn bucket_rep_ns(idx: usize) -> f64 {
     if idx < 4 {
         return idx as f64;
     }
@@ -218,52 +219,131 @@ impl MetricsSnapshot {
     }
 
     /// Render the engine section of `GET /metrics` in Prometheus text
-    /// style.  **Stable format** — field names and order are pinned by
-    /// the golden test in `rust/tests/http_serve_integration.rs`; only
-    /// ever append lines.  `uptime_s` doubles as the throughput window
-    /// (requests completed / uptime).
+    /// style.  **Stable format** — field names, `# HELP`/`# TYPE`
+    /// comments, and order are pinned by the golden test in
+    /// `rust/tests/http_serve_integration.rs`; only ever append lines.
+    /// `uptime_s` doubles as the throughput window (requests completed /
+    /// uptime).
     pub fn render_prometheus(&self, out: &mut String, uptime_s: f64) {
         let throughput = if uptime_s > 0.0 {
             self.completed as f64 / uptime_s
         } else {
             0.0
         };
+        family(
+            out,
+            "mpq_engine_requests_submitted_total",
+            "counter",
+            "Requests accepted into the batch queue.",
+        );
         out.push_str(&format!(
             "mpq_engine_requests_submitted_total {}\n",
             self.submitted
         ));
+        family(
+            out,
+            "mpq_engine_requests_completed_total",
+            "counter",
+            "Requests completed successfully.",
+        );
         out.push_str(&format!(
             "mpq_engine_requests_completed_total {}\n",
             self.completed
         ));
+        family(
+            out,
+            "mpq_engine_requests_failed_total",
+            "counter",
+            "Requests that failed inside the engine.",
+        );
         out.push_str(&format!("mpq_engine_requests_failed_total {}\n", self.failed));
+        family(
+            out,
+            "mpq_engine_samples_total",
+            "counter",
+            "Samples across completed requests.",
+        );
         out.push_str(&format!("mpq_engine_samples_total {}\n", self.samples));
+        family(
+            out,
+            "mpq_engine_batches_total",
+            "counter",
+            "Micro-batches dispatched to workers.",
+        );
         out.push_str(&format!("mpq_engine_batches_total {}\n", self.batches));
+        family(
+            out,
+            "mpq_engine_batch_chunks_total",
+            "counter",
+            "Request chunks across all dispatched batches.",
+        );
         out.push_str(&format!(
             "mpq_engine_batch_chunks_total {}\n",
             self.batch_chunks
         ));
+        family(
+            out,
+            "mpq_engine_batch_samples_total",
+            "counter",
+            "Samples across all dispatched batches.",
+        );
         out.push_str(&format!(
             "mpq_engine_batch_samples_total {}\n",
             self.batch_samples
         ));
+        family(
+            out,
+            "mpq_engine_batch_occupancy_mean",
+            "gauge",
+            "Mean samples per dispatched micro-batch.",
+        );
         out.push_str(&format!(
             "mpq_engine_batch_occupancy_mean {}\n",
             self.mean_occupancy()
         ));
+        family(
+            out,
+            "mpq_engine_throughput_rps",
+            "gauge",
+            "Completed requests per second of uptime.",
+        );
         out.push_str(&format!("mpq_engine_throughput_rps {throughput}\n"));
+        family(
+            out,
+            "mpq_engine_latency_seconds_mean",
+            "gauge",
+            "Mean request latency.",
+        );
         out.push_str(&format!(
             "mpq_engine_latency_seconds_mean {}\n",
             self.mean_latency_s
         ));
+        family(
+            out,
+            "mpq_engine_latency_seconds_min",
+            "gauge",
+            "Minimum request latency.",
+        );
         out.push_str(&format!(
             "mpq_engine_latency_seconds_min {}\n",
             self.min_latency_s
         ));
+        family(
+            out,
+            "mpq_engine_latency_seconds_max",
+            "gauge",
+            "Maximum request latency.",
+        );
         out.push_str(&format!(
             "mpq_engine_latency_seconds_max {}\n",
             self.max_latency_s
         ));
+        family(
+            out,
+            "mpq_engine_latency_seconds",
+            "summary",
+            "Request latency quantiles from the lock-free histogram.",
+        );
         out.push_str(&format!(
             "mpq_engine_latency_seconds{{quantile=\"0.5\"}} {}\n",
             self.p50_s
@@ -276,8 +356,22 @@ impl MetricsSnapshot {
             "mpq_engine_latency_seconds{{quantile=\"0.99\"}} {}\n",
             self.p99_s
         ));
+        family(
+            out,
+            "mpq_engine_uptime_seconds",
+            "gauge",
+            "Seconds since the engine metrics window opened.",
+        );
         out.push_str(&format!("mpq_engine_uptime_seconds {uptime_s}\n"));
     }
+}
+
+/// Append the `# HELP`/`# TYPE` header for one metric family (shared by
+/// every `/metrics` section — engine here, http/ctl in
+/// [`crate::serve::http`], stages in [`crate::serve::trace`]).
+pub(crate) fn family(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n"));
+    out.push_str(&format!("# TYPE {name} {kind}\n"));
 }
 
 #[cfg(test)]

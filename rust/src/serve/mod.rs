@@ -51,10 +51,19 @@
 //!   harness (`--degrade`) and seeded fault injection
 //!   ([`loadgen::FaultPlan`]).
 //!
+//! * [`trace`] — per-request span tracing + hot-path stage profiler:
+//!   deterministic-sampled span events over the full lifecycle (HTTP
+//!   parse → admission → queue wait → batch assembly → per-layer packed
+//!   GEMM → reassembly → epilogue → serialize → socket write), exported
+//!   as Chrome trace-event JSON (`GET /trace`, `--trace-out`), pinned
+//!   `mpq_stage_*` histogram lines on `/metrics`, and controller
+//!   decision instants.
+//!
 //! CLI: `mpq serve` (engine + loadgen + metrics report; `--listen` for
-//! the socket front door, `--target` for a pure socket client) and
-//! `mpq infer` (one-shot request); `make serve-smoke` and
-//! `make http-smoke` wire both paths into `make verify`.
+//! the socket front door, `--target` for a pure socket client),
+//! `mpq infer` (one-shot request), and `mpq trace` (validate a trace
+//! file); `make serve-smoke`, `make http-smoke` and `make trace-smoke`
+//! wire the paths into `make verify`.
 
 pub mod batcher;
 pub mod controller;
@@ -62,13 +71,15 @@ pub mod engine;
 pub mod http;
 pub mod loadgen;
 pub mod metrics;
+pub mod trace;
 
 pub use batcher::{Response, Ticket};
 pub use controller::{
-    decide, render_log, run_degrade, Controller, CtlState, Decision, DegradeConfig,
-    DegradeOutcome, FrontierStep, SimProfile, SloThresholds, Window,
+    decide, decisions_jsonl, render_log, run_degrade, Controller, CtlState, Decision,
+    DegradeConfig, DegradeOutcome, FrontierStep, SimProfile, SloThresholds, Window,
 };
 pub use engine::{Engine, EpochInfo, EpochState, ServeConfig, Spawner};
 pub use http::{HttpConfig, HttpServer, HttpStatsSnapshot, SwapRegistry};
-pub use loadgen::{FaultPlan, LoadMode, LoadReport, LoadSpec};
+pub use loadgen::{latency_jsonl, FaultPlan, LoadMode, LoadReport, LoadSpec};
 pub use metrics::{Metrics, MetricsSnapshot};
+pub use trace::{check_trace_text, Stage, TraceCheck, TraceConfig, TraceSink, STAGES};

@@ -1,0 +1,806 @@
+//! Per-request span tracing + hot-path stage profiler for `mpq serve`.
+//!
+//! The serving stack used to expose exactly one latency number — the
+//! end-to-end request histogram in [`crate::serve::metrics`].  The SLO
+//! controller and the packed-kernel variants both make decisions that
+//! hinge on *where* time goes (queue wait vs batch assembly vs per-layer
+//! packed GEMM vs serialization), so this module records the full
+//! request lifecycle as compact span events:
+//!
+//! ```text
+//! http_parse → admission → queue_wait → batch_assembly
+//!            → layer_gemm (one span per layer, tagged bits+variant)
+//!            → reassembly → epilogue → serialize → socket_write
+//! ```
+//!
+//! ## Design
+//!
+//! * **Sampling is deterministic**: a pure function of the engine-
+//!   assigned request id (`id % sample == 0`), so reruns trace the same
+//!   requests and tests can predict the sampled set exactly.
+//! * **Recording is allocation-light and uncontended**: spans append to
+//!   a per-request buffer ([`RequestSpans`]) that only one thread
+//!   touches at a time (conn thread → worker → conn thread), so its
+//!   mutex never blocks in steady state; per-stage histograms are
+//!   relaxed atomics, same as [`crate::serve::Metrics`].
+//! * **Memory is bounded, whole requests only**: when the last handle to
+//!   a request's spans drops, the completed set publishes into one of a
+//!   fixed number of fixed-capacity rings; a full ring drops its
+//!   *oldest whole request* — a partial span set is never observable.
+//! * **Disabled tracing is near-free**: the engine checks one
+//!   `Option<Arc<TraceSink>>` at admission; every later hook is gated on
+//!   the request's own `Option<ReqTrace>` being `Some`.
+//! * **Bit-identity is untouched**: tracing only reads clocks and
+//!   copies metadata — the serve/http/packed identity suites run with
+//!   tracing enabled to pin that.
+//!
+//! ## Exposure
+//!
+//! * [`TraceSink::chrome_trace_json`] — Chrome trace-event JSON
+//!   (Perfetto-loadable) behind `GET /trace` and `--trace-out FILE`;
+//! * [`TraceSink::render_stage_metrics`] — pinned `mpq_stage_*` summary
+//!   lines appended to `GET /metrics`;
+//! * [`crate::serve::controller::decisions_jsonl`] — the structured
+//!   controller decision log (byte-identical under `--degrade` reruns).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Instant;
+
+use crate::jsonio::Json;
+use crate::serve::metrics::{
+    bucket_index, bucket_rep_ns, family, quantile_from_counts, N_BUCKETS,
+};
+
+/// Pipeline stages, in nominal lifecycle order.  `name()` strings are
+/// part of the pinned `/metrics` + trace-JSON format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// HTTP/1.1 request parse window on the connection thread.
+    HttpParse,
+    /// Engine admission: validation, id allocation, enqueue.
+    Admission,
+    /// Enqueue → a worker claims the chunk.
+    QueueWait,
+    /// Fused input assembly (chunk rows → one batch tensor).
+    BatchAssembly,
+    /// One per-layer GEMM inside the backend forward (bits + variant).
+    LayerGemm,
+    /// Plan-order logit-row reassembly into the request buffer.
+    Reassembly,
+    /// Per-request softmax-CE epilogue over the reassembled logits.
+    Epilogue,
+    /// Response JSON serialization on the connection thread.
+    Serialize,
+    /// Socket write of the serialized response.
+    SocketWrite,
+}
+
+/// All stages in nominal order (also the `/metrics` emission order).
+pub const STAGES: [Stage; 9] = [
+    Stage::HttpParse,
+    Stage::Admission,
+    Stage::QueueWait,
+    Stage::BatchAssembly,
+    Stage::LayerGemm,
+    Stage::Reassembly,
+    Stage::Epilogue,
+    Stage::Serialize,
+    Stage::SocketWrite,
+];
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::HttpParse => "http_parse",
+            Stage::Admission => "admission",
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchAssembly => "batch_assembly",
+            Stage::LayerGemm => "layer_gemm",
+            Stage::Reassembly => "reassembly",
+            Stage::Epilogue => "epilogue",
+            Stage::Serialize => "serialize",
+            Stage::SocketWrite => "socket_write",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Stage::HttpParse => 0,
+            Stage::Admission => 1,
+            Stage::QueueWait => 2,
+            Stage::BatchAssembly => 3,
+            Stage::LayerGemm => 4,
+            Stage::Reassembly => 5,
+            Stage::Epilogue => 6,
+            Stage::Serialize => 7,
+            Stage::SocketWrite => 8,
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Stage> {
+        STAGES.iter().copied().find(|s| s.name() == name)
+    }
+}
+
+/// One compact span event.  Timestamps are nanoseconds since the sink's
+/// creation instant (one clock for the whole trace).
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    pub request_id: u64,
+    pub epoch: u64,
+    pub stage: Stage,
+    /// Layer index for [`Stage::LayerGemm`], else -1.
+    pub layer: i32,
+    /// Effective layer precision for [`Stage::LayerGemm`], else 0.
+    pub bits: u32,
+    /// Kernel variant name for [`Stage::LayerGemm`] (`""` elsewhere).
+    pub variant: &'static str,
+    pub t_start_ns: u64,
+    pub t_end_ns: u64,
+    /// Small dense id of the recording thread (not the OS tid).
+    pub thread: u64,
+}
+
+/// One controller decision event (windowed p99, queue depth, chosen
+/// level, epoch) — rendered as an instant event in the Chrome trace.
+#[derive(Clone, Debug)]
+pub struct CtlEvent {
+    pub tick: u64,
+    pub queue_depth: usize,
+    pub p99_s: f64,
+    pub decision: String,
+    pub level: usize,
+    pub epoch: u64,
+    pub t_ns: u64,
+}
+
+/// Tracing configuration (CLI: `--trace-sample`, internal knobs for
+/// tests and the bench harness).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    /// Keep request ids where `id % sample == 0` (1 = every request).
+    pub sample: u64,
+    /// Max retained *whole requests* across all rings.
+    pub capacity: usize,
+    /// Ring count (bounds publication contention; capacity is split
+    /// evenly across rings).
+    pub shards: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { sample: 1, capacity: 4096, shards: 8 }
+    }
+}
+
+/// A completed request's span set, as retained by the rings.
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    pub request_id: u64,
+    pub spans: Vec<SpanEvent>,
+}
+
+/// Per-stage latency histogram (same bucket scheme as the engine's
+/// request histogram; relaxed atomics only).
+struct StageHist {
+    counts: Vec<AtomicU64>,
+    total: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl StageHist {
+    fn new() -> StageHist {
+        StageHist {
+            counts: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            total: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn record(&self, ns: u64) {
+        self.counts[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// Dense per-thread tag for [`SpanEvent::thread`] — assigned on first
+/// use, stable for the thread's lifetime.
+fn thread_tag() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TAG: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TAG.with(|t| *t)
+}
+
+/// The span recorder.  One per engine (shared with the HTTP front door
+/// via the engine handle); create with [`TraceSink::new`], hand the
+/// `Arc` to [`crate::serve::ServeConfig::trace`].
+pub struct TraceSink {
+    start: Instant,
+    sample: u64,
+    shard_cap: usize,
+    shards: Vec<Mutex<VecDeque<RequestRecord>>>,
+    hist: Vec<StageHist>,
+    ctl: Mutex<Vec<CtlEvent>>,
+    published: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl TraceSink {
+    pub fn new(cfg: TraceConfig) -> Arc<TraceSink> {
+        let shards = cfg.shards.max(1);
+        let shard_cap = (cfg.capacity / shards).max(1);
+        Arc::new(TraceSink {
+            start: Instant::now(),
+            sample: cfg.sample.max(1),
+            shard_cap,
+            shards: (0..shards).map(|_| Mutex::new(VecDeque::new())).collect(),
+            hist: STAGES.iter().map(|_| StageHist::new()).collect(),
+            ctl: Mutex::new(Vec::new()),
+            published: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        })
+    }
+
+    /// Nanoseconds since the sink was created — the trace's time base.
+    pub fn now_ns(&self) -> u64 {
+        self.start.elapsed().as_nanos().min(u64::MAX as u128) as u64
+    }
+
+    /// The configured sampling modulus.
+    pub fn sample(&self) -> u64 {
+        self.sample
+    }
+
+    /// Is request `id` in the deterministic sample set?
+    pub fn sampled(&self, id: u64) -> bool {
+        id % self.sample == 0
+    }
+
+    /// Sampling gate at admission: a span buffer for sampled ids, `None`
+    /// otherwise.  The buffer publishes itself into the rings when its
+    /// last clone drops (i.e. when the request's lifecycle truly ends —
+    /// after the socket write on the HTTP path).
+    pub fn begin(self: &Arc<Self>, request_id: u64) -> Option<ReqTrace> {
+        if !self.sampled(request_id) {
+            return None;
+        }
+        Some(Arc::new(RequestSpans {
+            sink: Arc::downgrade(self),
+            request_id,
+            admitted_ns: AtomicU64::new(0),
+            epoch: AtomicU64::new(0),
+            spans: Mutex::new(Vec::with_capacity(12)),
+        }))
+    }
+
+    fn record(&self, rt: &RequestSpans, ev: SpanEvent) {
+        self.hist[ev.stage.index()].record(ev.t_end_ns.saturating_sub(ev.t_start_ns));
+        rt.spans.lock().unwrap().push(ev);
+    }
+
+    fn publish(&self, rec: RequestRecord) {
+        if rec.spans.is_empty() {
+            return;
+        }
+        let shard = (thread_tag() as usize) % self.shards.len();
+        let mut ring = self.shards[shard].lock().unwrap();
+        while ring.len() >= self.shard_cap {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(rec);
+        self.published.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one controller decision.
+    pub fn ctl_event(
+        &self,
+        tick: u64,
+        queue_depth: usize,
+        p99_s: f64,
+        decision: &str,
+        level: usize,
+        epoch: u64,
+    ) {
+        let ev = CtlEvent {
+            tick,
+            queue_depth,
+            p99_s,
+            decision: decision.to_string(),
+            level,
+            epoch,
+            t_ns: self.now_ns(),
+        };
+        self.ctl.lock().unwrap().push(ev);
+    }
+
+    /// Whole requests published so far (completed span sets).
+    pub fn published(&self) -> u64 {
+        self.published.load(Ordering::Relaxed)
+    }
+
+    /// Whole requests evicted from full rings (oldest first).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Spans recorded for `stage` (count across sampled requests,
+    /// including ones later evicted from the rings).
+    pub fn stage_count(&self, stage: Stage) -> u64 {
+        self.hist[stage.index()].total.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the retained whole-request records, oldest first per
+    /// ring, sorted by first span start across rings.
+    pub fn requests(&self) -> Vec<RequestRecord> {
+        let mut out: Vec<RequestRecord> = Vec::new();
+        for shard in &self.shards {
+            out.extend(shard.lock().unwrap().iter().cloned());
+        }
+        out.sort_by_key(|r| {
+            (
+                r.spans.iter().map(|s| s.t_start_ns).min().unwrap_or(0),
+                r.request_id,
+            )
+        });
+        out
+    }
+
+    /// Chrome trace-event JSON (the `chrome://tracing` / Perfetto
+    /// format): one complete (`"ph":"X"`) event per span with
+    /// microsecond timestamps, one instant (`"ph":"I"`) event per
+    /// controller decision.  Built with [`crate::jsonio`] — no deps.
+    pub fn chrome_trace_json(&self) -> Json {
+        let mut spans: Vec<SpanEvent> = Vec::new();
+        for rec in self.requests() {
+            spans.extend(rec.spans);
+        }
+        spans.sort_by_key(|s| (s.t_start_ns, s.request_id, s.stage.index()));
+        let mut events: Vec<Json> = Vec::with_capacity(spans.len());
+        for s in &spans {
+            let mut args = vec![
+                ("epoch", Json::num(s.epoch as f64)),
+                ("request_id", Json::num(s.request_id as f64)),
+            ];
+            if s.stage == Stage::LayerGemm {
+                args.push(("bits", Json::num(s.bits as f64)));
+                args.push(("layer", Json::num(s.layer as f64)));
+                args.push(("variant", Json::str(s.variant)));
+            }
+            events.push(Json::obj(vec![
+                ("args", Json::obj(args)),
+                ("cat", Json::str("serve")),
+                ("dur", Json::num(s.t_end_ns.saturating_sub(s.t_start_ns) as f64 / 1e3)),
+                ("name", Json::str(s.stage.name())),
+                ("ph", Json::str("X")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(s.thread as f64)),
+                ("ts", Json::num(s.t_start_ns as f64 / 1e3)),
+            ]));
+        }
+        for c in self.ctl.lock().unwrap().iter() {
+            events.push(Json::obj(vec![
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("decision", Json::str(&c.decision)),
+                        ("epoch", Json::num(c.epoch as f64)),
+                        ("level", Json::num(c.level as f64)),
+                        ("p99_s", Json::num(c.p99_s)),
+                        ("queue_depth", Json::num(c.queue_depth as f64)),
+                        ("tick", Json::num(c.tick as f64)),
+                    ]),
+                ),
+                ("cat", Json::str("ctl")),
+                ("name", Json::str("ctl_tick")),
+                ("ph", Json::str("I")),
+                ("pid", Json::num(1.0)),
+                ("s", Json::str("g")),
+                ("tid", Json::num(0.0)),
+                ("ts", Json::num(c.t_ns as f64 / 1e3)),
+            ]));
+        }
+        Json::obj(vec![
+            ("displayTimeUnit", Json::str("ms")),
+            ("traceEvents", Json::Arr(events)),
+        ])
+    }
+
+    /// Write the Chrome trace JSON to `path`.
+    pub fn write_chrome(&self, path: &std::path::Path) -> crate::Result<()> {
+        let text = self.chrome_trace_json().to_string_compact();
+        std::fs::write(path, text)
+            .map_err(|e| crate::err!("trace: writing {}: {e}", path.display()))
+    }
+
+    /// Append the pinned `mpq_stage_*` section to a `/metrics` scrape:
+    /// per-stage p50/p99 + count + sum over sampled traced requests.
+    /// Emitted only when tracing is enabled (the sink exists); stage
+    /// order is [`STAGES`] order.  **Stable format** — pinned by
+    /// `rust/tests/http_serve_integration.rs`; only ever append.
+    pub fn render_stage_metrics(&self, out: &mut String) {
+        family(
+            out,
+            "mpq_stage_latency_seconds",
+            "summary",
+            "Per-stage latency over sampled traced requests.",
+        );
+        for stage in STAGES {
+            let h = &self.hist[stage.index()];
+            let counts = h.snapshot();
+            for (label, q) in [("0.5", 0.5f64), ("0.99", 0.99)] {
+                out.push_str(&format!(
+                    "mpq_stage_latency_seconds{{stage=\"{}\",quantile=\"{label}\"}} {}\n",
+                    stage.name(),
+                    quantile_from_counts(&counts, q)
+                ));
+            }
+            out.push_str(&format!(
+                "mpq_stage_latency_seconds_count{{stage=\"{}\"}} {}\n",
+                stage.name(),
+                h.total.load(Ordering::Relaxed)
+            ));
+            out.push_str(&format!(
+                "mpq_stage_latency_seconds_sum{{stage=\"{}\"}} {}\n",
+                stage.name(),
+                h.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
+            ));
+        }
+    }
+}
+
+/// Shared handle to one request's in-flight span buffer.
+pub type ReqTrace = Arc<RequestSpans>;
+
+/// A sampled request's span buffer.  Clones travel with the request
+/// (ticket → pending → reply); whoever records a span appends here, and
+/// the **last clone's drop** publishes the completed set into the sink's
+/// rings — so rings only ever hold whole requests.
+pub struct RequestSpans {
+    sink: Weak<TraceSink>,
+    request_id: u64,
+    /// End of the admission span (= queue-wait start), sink-relative ns.
+    admitted_ns: AtomicU64,
+    /// Serving epoch captured at admission (HTTP-side spans are recorded
+    /// by threads that never see the `Pending`).
+    epoch: AtomicU64,
+    spans: Mutex<Vec<SpanEvent>>,
+}
+
+impl RequestSpans {
+    pub fn request_id(&self) -> u64 {
+        self.request_id
+    }
+
+    /// Sink-relative timestamp, 0 if the sink is gone.
+    pub fn now_ns(&self) -> u64 {
+        self.sink.upgrade().map(|s| s.now_ns()).unwrap_or(0)
+    }
+
+    /// Record one span (stage timing + metadata).  Feeds the stage
+    /// histogram and appends to the request's buffer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &self,
+        stage: Stage,
+        epoch: u64,
+        layer: i32,
+        bits: u32,
+        variant: &'static str,
+        t_start_ns: u64,
+        t_end_ns: u64,
+    ) {
+        let Some(sink) = self.sink.upgrade() else { return };
+        sink.record(
+            self,
+            SpanEvent {
+                request_id: self.request_id,
+                epoch,
+                stage,
+                layer,
+                bits,
+                variant,
+                t_start_ns,
+                t_end_ns: t_end_ns.max(t_start_ns),
+                thread: thread_tag(),
+            },
+        );
+    }
+
+    /// Shorthand for stages with no layer metadata.
+    pub fn span(&self, stage: Stage, epoch: u64, t_start_ns: u64, t_end_ns: u64) {
+        self.record(stage, epoch, -1, 0, "", t_start_ns, t_end_ns);
+    }
+
+    /// Mark the admission end (= queue-wait start) and pin the serving
+    /// epoch this request was admitted under.
+    pub fn set_admitted(&self, t_ns: u64, epoch: u64) {
+        self.admitted_ns.store(t_ns, Ordering::Relaxed);
+        self.epoch.store(epoch, Ordering::Relaxed);
+    }
+
+    /// Admission end timestamp (queue-wait spans start here).
+    pub fn admitted_ns(&self) -> u64 {
+        self.admitted_ns.load(Ordering::Relaxed)
+    }
+
+    /// The serving epoch pinned at admission (0 before then).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for RequestSpans {
+    fn drop(&mut self) {
+        if let Some(sink) = self.sink.upgrade() {
+            let spans = match self.spans.get_mut() {
+                Ok(v) => std::mem::take(v),
+                Err(p) => std::mem::take(p.into_inner()),
+            };
+            sink.publish(RequestRecord { request_id: self.request_id, spans });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace-file validation (the `mpq trace` subcommand / `make trace-smoke`)
+// ---------------------------------------------------------------------------
+
+/// Summary of a validated Chrome trace file.
+#[derive(Debug)]
+pub struct TraceCheck {
+    /// Total events (spans + instants).
+    pub events: usize,
+    /// Distinct request ids with at least one span.
+    pub requests: usize,
+    /// Stage names present, in [`STAGES`] order.
+    pub stages: Vec<&'static str>,
+    /// Controller instant events.
+    pub ctl_events: usize,
+}
+
+/// Parse + validate Chrome trace-event JSON text: every event must have
+/// non-negative `ts`, complete events non-negative `dur`, and every
+/// traced request a complete engine-stage span set (admission,
+/// queue_wait, batch_assembly, ≥1 layer_gemm, reassembly, epilogue) with
+/// `admission` starting no later than any of its other engine spans.
+/// HTTP stages (http_parse/serialize/socket_write) are required per
+/// request only when any request in the file carries them (i.e. the
+/// trace came from a `--listen` run).
+pub fn check_trace_text(text: &str) -> crate::Result<TraceCheck> {
+    let v = crate::jsonio::parse(text)?;
+    let events = match v.at(&["traceEvents"]) {
+        Json::Arr(a) => a,
+        _ => crate::bail!("trace: no traceEvents array"),
+    };
+    let mut by_req: std::collections::BTreeMap<u64, Vec<(Stage, f64, f64)>> =
+        std::collections::BTreeMap::new();
+    let mut seen = vec![false; STAGES.len()];
+    let mut ctl_events = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        let ts = ev
+            .at(&["ts"])
+            .as_f64()
+            .ok_or_else(|| crate::err!("trace: event {i} missing ts"))?;
+        crate::ensure!(ts >= 0.0, "trace: event {i} has negative ts {ts}");
+        let name = match ev.at(&["name"]).as_str() {
+            Some(n) => n.to_string(),
+            None => crate::bail!("trace: event {i} missing name"),
+        };
+        let ph = ev.at(&["ph"]).as_str().unwrap_or("").to_string();
+        if ph == "I" {
+            ctl_events += 1;
+            continue;
+        }
+        crate::ensure!(ph == "X", "trace: event {i} ('{name}') has ph '{ph}'");
+        let dur = ev
+            .at(&["dur"])
+            .as_f64()
+            .ok_or_else(|| crate::err!("trace: event {i} ('{name}') missing dur"))?;
+        crate::ensure!(dur >= 0.0, "trace: event {i} ('{name}') has negative dur {dur}");
+        let stage = Stage::from_name(&name)
+            .ok_or_else(|| crate::err!("trace: event {i} has unknown stage '{name}'"))?;
+        seen[stage.index()] = true;
+        let rid = ev
+            .at(&["args", "request_id"])
+            .as_f64()
+            .ok_or_else(|| crate::err!("trace: event {i} ('{name}') missing request_id"))?;
+        by_req.entry(rid as u64).or_default().push((stage, ts, dur));
+    }
+    let any_http = seen[Stage::HttpParse.index()];
+    let engine_required = [
+        Stage::Admission,
+        Stage::QueueWait,
+        Stage::BatchAssembly,
+        Stage::LayerGemm,
+        Stage::Reassembly,
+        Stage::Epilogue,
+    ];
+    for (rid, spans) in &by_req {
+        for need in engine_required {
+            crate::ensure!(
+                spans.iter().any(|(s, _, _)| *s == need),
+                "trace: request {rid} is missing stage '{}'",
+                need.name()
+            );
+        }
+        if any_http {
+            for need in [Stage::HttpParse, Stage::Serialize, Stage::SocketWrite] {
+                crate::ensure!(
+                    spans.iter().any(|(s, _, _)| *s == need),
+                    "trace: request {rid} is missing http stage '{}'",
+                    need.name()
+                );
+            }
+        }
+        let admit = spans
+            .iter()
+            .filter(|(s, _, _)| *s == Stage::Admission)
+            .map(|&(_, ts, _)| ts)
+            .fold(f64::INFINITY, f64::min);
+        for (s, ts, _) in spans {
+            if *s != Stage::HttpParse {
+                crate::ensure!(
+                    *ts + 1e-9 >= admit,
+                    "trace: request {rid} stage '{}' starts before admission",
+                    s.name()
+                );
+            }
+        }
+    }
+    crate::ensure!(!by_req.is_empty(), "trace: no request spans recorded");
+    Ok(TraceCheck {
+        events: events.len(),
+        requests: by_req.len(),
+        stages: STAGES
+            .iter()
+            .filter(|s| seen[s.index()])
+            .map(|s| s.name())
+            .collect(),
+        ctl_events,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sink(sample: u64, capacity: usize, shards: usize) -> Arc<TraceSink> {
+        TraceSink::new(TraceConfig { sample, capacity, shards })
+    }
+
+    #[test]
+    fn sampling_is_pure_modulus() {
+        let s = sink(4, 64, 1);
+        for id in 0..32u64 {
+            assert_eq!(s.begin(id).is_some(), id % 4 == 0, "id {id}");
+        }
+        // sample=1 traces everything, sample=0 clamps to 1.
+        assert!(sink(1, 64, 1).begin(17).is_some());
+        assert!(sink(0, 64, 1).begin(17).is_some());
+    }
+
+    #[test]
+    fn drop_publishes_whole_requests_and_ring_evicts_oldest() {
+        let s = sink(1, 4, 1);
+        for id in 0..10u64 {
+            let rt = s.begin(id).unwrap();
+            rt.span(Stage::Admission, 0, id * 100, id * 100 + 10);
+            rt.span(Stage::QueueWait, 0, id * 100 + 10, id * 100 + 30);
+            drop(rt);
+        }
+        assert_eq!(s.published(), 10);
+        assert_eq!(s.dropped(), 6);
+        let reqs = s.requests();
+        assert_eq!(reqs.len(), 4, "ring capacity bounds retained requests");
+        // Oldest whole requests were dropped; survivors are complete.
+        let ids: Vec<u64> = reqs.iter().map(|r| r.request_id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9]);
+        for r in &reqs {
+            assert_eq!(r.spans.len(), 2, "whole request retained, never partial");
+        }
+    }
+
+    #[test]
+    fn in_flight_requests_are_not_visible_until_last_handle_drops() {
+        let s = sink(1, 16, 2);
+        let rt = s.begin(0).unwrap();
+        rt.span(Stage::Admission, 0, 0, 5);
+        let clone = Arc::clone(&rt);
+        drop(rt);
+        assert_eq!(s.published(), 0, "live clone still holds the buffer");
+        assert!(s.requests().is_empty());
+        clone.span(Stage::QueueWait, 0, 5, 9);
+        drop(clone);
+        assert_eq!(s.published(), 1);
+        assert_eq!(s.requests()[0].spans.len(), 2);
+    }
+
+    #[test]
+    fn chrome_json_round_trips_the_validator() {
+        let s = sink(1, 16, 1);
+        let rt = s.begin(2).unwrap();
+        rt.span(Stage::Admission, 0, 100, 200);
+        rt.span(Stage::QueueWait, 0, 200, 400);
+        rt.span(Stage::BatchAssembly, 0, 400, 450);
+        rt.record(Stage::LayerGemm, 0, 0, 4, "unrolled", 450, 500);
+        rt.record(Stage::LayerGemm, 0, 1, 2, "unrolled", 500, 560);
+        rt.span(Stage::Reassembly, 0, 560, 580);
+        rt.span(Stage::Epilogue, 0, 580, 600);
+        drop(rt);
+        s.ctl_event(3, 7, 0.012, "down:0->1", 1, 1);
+        let text = s.chrome_trace_json().to_string_compact();
+        let check = check_trace_text(&text).unwrap();
+        assert_eq!(check.requests, 1);
+        assert_eq!(check.ctl_events, 1);
+        assert_eq!(check.events, 8);
+        assert!(check.stages.contains(&"layer_gemm"));
+        assert!(!check.stages.contains(&"http_parse"));
+        // Layer metadata survives the round trip.
+        let v = crate::jsonio::parse(&text).unwrap();
+        let evs = match v.at(&["traceEvents"]) {
+            Json::Arr(a) => a,
+            _ => unreachable!(),
+        };
+        let gemm: Vec<_> = evs
+            .iter()
+            .filter(|e| e.at(&["name"]).as_str() == Some("layer_gemm"))
+            .collect();
+        assert_eq!(gemm.len(), 2);
+        assert_eq!(gemm[0].at(&["args", "layer"]).as_f64(), Some(0.0));
+        assert_eq!(gemm[1].at(&["args", "bits"]).as_f64(), Some(2.0));
+        assert_eq!(gemm[0].at(&["args", "variant"]).as_str(), Some("unrolled"));
+    }
+
+    #[test]
+    fn validator_rejects_incomplete_requests() {
+        let s = sink(1, 16, 1);
+        let rt = s.begin(0).unwrap();
+        rt.span(Stage::Admission, 0, 0, 10);
+        drop(rt);
+        let text = s.chrome_trace_json().to_string_compact();
+        let err = check_trace_text(&text).unwrap_err().to_string();
+        assert!(err.contains("missing stage"), "{err}");
+    }
+
+    #[test]
+    fn stage_metrics_render_pinned_lines() {
+        let s = sink(1, 16, 1);
+        let rt = s.begin(0).unwrap();
+        rt.span(Stage::QueueWait, 0, 0, 1_000_000);
+        rt.span(Stage::QueueWait, 0, 0, 3_000_000);
+        drop(rt);
+        let mut out = String::new();
+        s.render_stage_metrics(&mut out);
+        assert!(out.contains("# TYPE mpq_stage_latency_seconds summary"));
+        for stage in STAGES {
+            assert!(
+                out.contains(&format!(
+                    "mpq_stage_latency_seconds_count{{stage=\"{}\"}}",
+                    stage.name()
+                )),
+                "missing count line for {}",
+                stage.name()
+            );
+        }
+        assert!(out.contains("mpq_stage_latency_seconds_count{stage=\"queue_wait\"} 2"));
+        // p99 of {1ms, 3ms} lands in the 3ms bucket.
+        let p99_line = out
+            .lines()
+            .find(|l| l.contains("stage=\"queue_wait\",quantile=\"0.99\""))
+            .unwrap();
+        let v: f64 = p99_line.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!(v > 0.002 && v < 0.004, "queue_wait p99 = {v}");
+        // bucket_rep is exposed for the trace histograms — sanity.
+        assert!(bucket_rep_ns(bucket_index(1000)) >= 1000.0 * 0.99);
+    }
+}

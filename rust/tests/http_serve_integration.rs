@@ -23,8 +23,8 @@ use mpq::graph::Graph;
 use mpq::quant::BitsConfig;
 use mpq::serve::http::client::HttpClient;
 use mpq::serve::{
-    loadgen, Engine, FrontierStep, HttpConfig, HttpServer, LoadMode, LoadSpec, ServeConfig,
-    Spawner, SwapRegistry,
+    check_trace_text, loadgen, Engine, FrontierStep, HttpConfig, HttpServer, LoadMode, LoadSpec,
+    ServeConfig, Spawner, SwapRegistry, TraceConfig, TraceSink,
 };
 
 const MODEL: &str = "sim_tiny";
@@ -45,7 +45,13 @@ fn setup() -> (Checkpoint, Vec<f32>, Dataset) {
     (ck, bits.to_f32(), Dataset::for_task(be.manifest().task, 11))
 }
 
-fn engine(workers: usize, kernel: KernelChoice, max_batch: usize, timeout: Duration) -> Engine {
+fn engine_with(
+    workers: usize,
+    kernel: KernelChoice,
+    max_batch: usize,
+    timeout: Duration,
+    trace: Option<std::sync::Arc<TraceSink>>,
+) -> Engine {
     let (ck, bits, _) = setup();
     let spawner: Spawner = Arc::new(move || {
         Ok(Box::new(SimBackend::with_kernel(MODEL, kernel)?) as Box<dyn Backend>)
@@ -60,10 +66,24 @@ fn engine(workers: usize, kernel: KernelChoice, max_batch: usize, timeout: Durat
             batch_timeout: timeout,
             force_per_request: false,
             warmup: true,
+            trace,
             ..ServeConfig::default()
         },
     )
     .unwrap()
+}
+
+/// Every front door in this file runs with tracing ON (sample=1): the
+/// bit-identity, robustness and drain contracts must all hold unchanged
+/// while every request is being traced.
+fn engine(workers: usize, kernel: KernelChoice, max_batch: usize, timeout: Duration) -> Engine {
+    engine_with(
+        workers,
+        kernel,
+        max_batch,
+        timeout,
+        Some(TraceSink::new(TraceConfig::default())),
+    )
 }
 
 /// A served front door over a fresh engine; `addr` is the picked port.
@@ -508,60 +528,163 @@ fn keepalive_budget_closes_after_the_limit_with_explicit_header() {
 // /metrics golden format
 // ---------------------------------------------------------------------------
 
-/// The pinned `/metrics` text format: field names, order, and the
-/// comment header are stable (dashboards parse this), every value is a
-/// number, and counters are monotone across scrapes.
+/// The pinned `/metrics` text line sequence with tracing ON: the
+/// comment header, a `# HELP`/`# TYPE` pair ahead of every family, the
+/// value lines in order, and the `mpq_stage_*` section appended last.
+/// The tracing-off rendering is this list minus [`STAGE_LINES`] tail
+/// entries (a strict prefix — see
+/// `stage_section_appears_only_while_tracing`).
+const GOLDEN: &[&str] = &[
+    "# mpq serve /metrics v1",
+    "# HELP mpq_http_connections_total Connections accepted by the front door.",
+    "# TYPE mpq_http_connections_total counter",
+    "mpq_http_connections_total",
+    "# HELP mpq_http_requests_admitted_total Requests admitted to the engine.",
+    "# TYPE mpq_http_requests_admitted_total counter",
+    "mpq_http_requests_admitted_total",
+    "# HELP mpq_http_requests_rejected_total Requests rejected with 503.",
+    "# TYPE mpq_http_requests_rejected_total counter",
+    "mpq_http_requests_rejected_total",
+    "# HELP mpq_http_requests_answered_total Admitted requests answered 200.",
+    "# TYPE mpq_http_requests_answered_total counter",
+    "mpq_http_requests_answered_total",
+    "# HELP mpq_http_requests_failed_total Admitted requests answered 500.",
+    "# TYPE mpq_http_requests_failed_total counter",
+    "mpq_http_requests_failed_total",
+    "# HELP mpq_http_requests_aborted_total Admitted requests whose connection died first.",
+    "# TYPE mpq_http_requests_aborted_total counter",
+    "mpq_http_requests_aborted_total",
+    "# HELP mpq_http_bad_requests_total Non-2xx, non-503 responses.",
+    "# TYPE mpq_http_bad_requests_total counter",
+    "mpq_http_bad_requests_total",
+    "# HELP mpq_http_metrics_scrapes_total GET /metrics requests served.",
+    "# TYPE mpq_http_metrics_scrapes_total counter",
+    "mpq_http_metrics_scrapes_total",
+    "# HELP mpq_http_inflight_requests Admitted requests awaiting their response.",
+    "# TYPE mpq_http_inflight_requests gauge",
+    "mpq_http_inflight_requests",
+    "# HELP mpq_engine_queue_samples Samples queued and not yet claimed by a worker.",
+    "# TYPE mpq_engine_queue_samples gauge",
+    "mpq_engine_queue_samples",
+    "# HELP mpq_ctl_epoch Current serving epoch.",
+    "# TYPE mpq_ctl_epoch gauge",
+    "mpq_ctl_epoch",
+    "# HELP mpq_ctl_swap_total Successful hot-swaps since startup.",
+    "# TYPE mpq_ctl_swap_total counter",
+    "mpq_ctl_swap_total",
+    "# HELP mpq_ctl_active_budget Budget fraction of the active config.",
+    "# TYPE mpq_ctl_active_budget gauge",
+    "mpq_ctl_active_budget",
+    "# HELP mpq_ctl_frontier_levels Pre-materialized frontier levels available to /swap.",
+    "# TYPE mpq_ctl_frontier_levels gauge",
+    "mpq_ctl_frontier_levels",
+    "# HELP mpq_engine_requests_submitted_total Requests accepted into the batch queue.",
+    "# TYPE mpq_engine_requests_submitted_total counter",
+    "mpq_engine_requests_submitted_total",
+    "# HELP mpq_engine_requests_completed_total Requests completed successfully.",
+    "# TYPE mpq_engine_requests_completed_total counter",
+    "mpq_engine_requests_completed_total",
+    "# HELP mpq_engine_requests_failed_total Requests that failed inside the engine.",
+    "# TYPE mpq_engine_requests_failed_total counter",
+    "mpq_engine_requests_failed_total",
+    "# HELP mpq_engine_samples_total Samples across completed requests.",
+    "# TYPE mpq_engine_samples_total counter",
+    "mpq_engine_samples_total",
+    "# HELP mpq_engine_batches_total Micro-batches dispatched to workers.",
+    "# TYPE mpq_engine_batches_total counter",
+    "mpq_engine_batches_total",
+    "# HELP mpq_engine_batch_chunks_total Request chunks across all dispatched batches.",
+    "# TYPE mpq_engine_batch_chunks_total counter",
+    "mpq_engine_batch_chunks_total",
+    "# HELP mpq_engine_batch_samples_total Samples across all dispatched batches.",
+    "# TYPE mpq_engine_batch_samples_total counter",
+    "mpq_engine_batch_samples_total",
+    "# HELP mpq_engine_batch_occupancy_mean Mean samples per dispatched micro-batch.",
+    "# TYPE mpq_engine_batch_occupancy_mean gauge",
+    "mpq_engine_batch_occupancy_mean",
+    "# HELP mpq_engine_throughput_rps Completed requests per second of uptime.",
+    "# TYPE mpq_engine_throughput_rps gauge",
+    "mpq_engine_throughput_rps",
+    "# HELP mpq_engine_latency_seconds_mean Mean request latency.",
+    "# TYPE mpq_engine_latency_seconds_mean gauge",
+    "mpq_engine_latency_seconds_mean",
+    "# HELP mpq_engine_latency_seconds_min Minimum request latency.",
+    "# TYPE mpq_engine_latency_seconds_min gauge",
+    "mpq_engine_latency_seconds_min",
+    "# HELP mpq_engine_latency_seconds_max Maximum request latency.",
+    "# TYPE mpq_engine_latency_seconds_max gauge",
+    "mpq_engine_latency_seconds_max",
+    "# HELP mpq_engine_latency_seconds Request latency quantiles from the lock-free histogram.",
+    "# TYPE mpq_engine_latency_seconds summary",
+    "mpq_engine_latency_seconds{quantile=\"0.5\"}",
+    "mpq_engine_latency_seconds{quantile=\"0.95\"}",
+    "mpq_engine_latency_seconds{quantile=\"0.99\"}",
+    "# HELP mpq_engine_uptime_seconds Seconds since the engine metrics window opened.",
+    "# TYPE mpq_engine_uptime_seconds gauge",
+    "mpq_engine_uptime_seconds",
+    "# HELP mpq_stage_latency_seconds Per-stage latency over sampled traced requests.",
+    "# TYPE mpq_stage_latency_seconds summary",
+    "mpq_stage_latency_seconds{stage=\"http_parse\",quantile=\"0.5\"}",
+    "mpq_stage_latency_seconds{stage=\"http_parse\",quantile=\"0.99\"}",
+    "mpq_stage_latency_seconds_count{stage=\"http_parse\"}",
+    "mpq_stage_latency_seconds_sum{stage=\"http_parse\"}",
+    "mpq_stage_latency_seconds{stage=\"admission\",quantile=\"0.5\"}",
+    "mpq_stage_latency_seconds{stage=\"admission\",quantile=\"0.99\"}",
+    "mpq_stage_latency_seconds_count{stage=\"admission\"}",
+    "mpq_stage_latency_seconds_sum{stage=\"admission\"}",
+    "mpq_stage_latency_seconds{stage=\"queue_wait\",quantile=\"0.5\"}",
+    "mpq_stage_latency_seconds{stage=\"queue_wait\",quantile=\"0.99\"}",
+    "mpq_stage_latency_seconds_count{stage=\"queue_wait\"}",
+    "mpq_stage_latency_seconds_sum{stage=\"queue_wait\"}",
+    "mpq_stage_latency_seconds{stage=\"batch_assembly\",quantile=\"0.5\"}",
+    "mpq_stage_latency_seconds{stage=\"batch_assembly\",quantile=\"0.99\"}",
+    "mpq_stage_latency_seconds_count{stage=\"batch_assembly\"}",
+    "mpq_stage_latency_seconds_sum{stage=\"batch_assembly\"}",
+    "mpq_stage_latency_seconds{stage=\"layer_gemm\",quantile=\"0.5\"}",
+    "mpq_stage_latency_seconds{stage=\"layer_gemm\",quantile=\"0.99\"}",
+    "mpq_stage_latency_seconds_count{stage=\"layer_gemm\"}",
+    "mpq_stage_latency_seconds_sum{stage=\"layer_gemm\"}",
+    "mpq_stage_latency_seconds{stage=\"reassembly\",quantile=\"0.5\"}",
+    "mpq_stage_latency_seconds{stage=\"reassembly\",quantile=\"0.99\"}",
+    "mpq_stage_latency_seconds_count{stage=\"reassembly\"}",
+    "mpq_stage_latency_seconds_sum{stage=\"reassembly\"}",
+    "mpq_stage_latency_seconds{stage=\"epilogue\",quantile=\"0.5\"}",
+    "mpq_stage_latency_seconds{stage=\"epilogue\",quantile=\"0.99\"}",
+    "mpq_stage_latency_seconds_count{stage=\"epilogue\"}",
+    "mpq_stage_latency_seconds_sum{stage=\"epilogue\"}",
+    "mpq_stage_latency_seconds{stage=\"serialize\",quantile=\"0.5\"}",
+    "mpq_stage_latency_seconds{stage=\"serialize\",quantile=\"0.99\"}",
+    "mpq_stage_latency_seconds_count{stage=\"serialize\"}",
+    "mpq_stage_latency_seconds_sum{stage=\"serialize\"}",
+    "mpq_stage_latency_seconds{stage=\"socket_write\",quantile=\"0.5\"}",
+    "mpq_stage_latency_seconds{stage=\"socket_write\",quantile=\"0.99\"}",
+    "mpq_stage_latency_seconds_count{stage=\"socket_write\"}",
+    "mpq_stage_latency_seconds_sum{stage=\"socket_write\"}",
+];
+
+/// Trailing GOLDEN entries that exist only while tracing is on:
+/// the stage family header pair + 4 lines for each of the 9 stages.
+const STAGE_LINES: usize = 2 + 9 * 4;
+
+fn parse_scrape(text: &str) -> Vec<(String, f64)> {
+    text.lines()
+        .map(|line| {
+            if line.starts_with('#') {
+                return (line.to_string(), 0.0);
+            }
+            let (name, value) = line
+                .rsplit_once(' ')
+                .unwrap_or_else(|| panic!("metrics line without value: '{line}'"));
+            let v: f64 = value
+                .parse()
+                .unwrap_or_else(|_| panic!("non-numeric metrics value: '{line}'"));
+            (name.to_string(), v)
+        })
+        .collect()
+}
+
 #[test]
 fn metrics_text_format_is_pinned_and_counters_monotone() {
-    const GOLDEN: &[&str] = &[
-        "# mpq serve /metrics v1",
-        "mpq_http_connections_total",
-        "mpq_http_requests_admitted_total",
-        "mpq_http_requests_rejected_total",
-        "mpq_http_requests_answered_total",
-        "mpq_http_requests_failed_total",
-        "mpq_http_requests_aborted_total",
-        "mpq_http_bad_requests_total",
-        "mpq_http_metrics_scrapes_total",
-        "mpq_http_inflight_requests",
-        "mpq_engine_queue_samples",
-        "mpq_ctl_epoch",
-        "mpq_ctl_swap_total",
-        "mpq_ctl_active_budget",
-        "mpq_ctl_frontier_levels",
-        "mpq_engine_requests_submitted_total",
-        "mpq_engine_requests_completed_total",
-        "mpq_engine_requests_failed_total",
-        "mpq_engine_samples_total",
-        "mpq_engine_batches_total",
-        "mpq_engine_batch_chunks_total",
-        "mpq_engine_batch_samples_total",
-        "mpq_engine_batch_occupancy_mean",
-        "mpq_engine_throughput_rps",
-        "mpq_engine_latency_seconds_mean",
-        "mpq_engine_latency_seconds_min",
-        "mpq_engine_latency_seconds_max",
-        "mpq_engine_latency_seconds{quantile=\"0.5\"}",
-        "mpq_engine_latency_seconds{quantile=\"0.95\"}",
-        "mpq_engine_latency_seconds{quantile=\"0.99\"}",
-        "mpq_engine_uptime_seconds",
-    ];
-    fn parse_scrape(text: &str) -> Vec<(String, f64)> {
-        text.lines()
-            .map(|line| {
-                if line.starts_with('#') {
-                    return (line.to_string(), 0.0);
-                }
-                let (name, value) = line
-                    .rsplit_once(' ')
-                    .unwrap_or_else(|| panic!("metrics line without value: '{line}'"));
-                let v: f64 = value
-                    .parse()
-                    .unwrap_or_else(|_| panic!("non-numeric metrics value: '{line}'"));
-                (name.to_string(), v)
-            })
-            .collect()
-    }
     let (srv, addr) = default_server(2, KernelChoice::Packed);
     let mut c = HttpClient::connect(&addr).unwrap();
     for i in 0..4u64 {
@@ -593,6 +716,11 @@ fn metrics_text_format_is_pinned_and_counters_monotone() {
         get(&m1, "mpq_engine_latency_seconds{quantile=\"0.99\"}")
             >= get(&m1, "mpq_engine_latency_seconds{quantile=\"0.5\"}")
     );
+    // Tracing is on (sample=1): every request so far hit both the engine
+    // epilogue and the socket-side parse window.
+    assert_eq!(get(&m1, "mpq_stage_latency_seconds_count{stage=\"epilogue\"}"), 4.0);
+    assert_eq!(get(&m1, "mpq_stage_latency_seconds_count{stage=\"http_parse\"}"), 4.0);
+    assert!(get(&m1, "mpq_stage_latency_seconds_sum{stage=\"layer_gemm\"}") > 0.0);
     // More traffic, second scrape: counters are monotone.
     for i in 0..3u64 {
         let body = format!("{{\"index\":{},\"samples\":1}}", 100 + i);
@@ -610,6 +738,75 @@ fn metrics_text_format_is_pinned_and_counters_monotone() {
     }
     assert_eq!(get(&m2, "mpq_http_requests_answered_total"), 7.0);
     assert_eq!(get(&m2, "mpq_http_metrics_scrapes_total"), 2.0);
+    srv.shutdown().unwrap();
+}
+
+/// Tracing off: `/metrics` is exactly the GOLDEN list minus the
+/// `mpq_stage_*` tail — a strict prefix, so dashboards written against
+/// either mode parse both.
+#[test]
+fn stage_section_appears_only_while_tracing() {
+    let (_, _, data) = setup();
+    let eng = engine_with(1, KernelChoice::Reference, 8, Duration::from_millis(1), None);
+    let srv = HttpServer::start(eng, data, HttpConfig::default()).unwrap();
+    let addr = srv.local_addr().to_string();
+    let mut c = HttpClient::connect(&addr).unwrap();
+    assert_eq!(c.post("/infer", b"{\"index\":0,\"samples\":1}").unwrap().status, 200);
+    let names: Vec<String> = parse_scrape(&c.get("/metrics").unwrap().body_str())
+        .into_iter()
+        .map(|(n, _)| n)
+        .collect();
+    assert_eq!(
+        names,
+        &GOLDEN[..GOLDEN.len() - STAGE_LINES],
+        "tracing-off /metrics must be the tracing-on rendering minus the stage tail"
+    );
+    // And `GET /trace` refuses cleanly: tracing was never enabled.
+    let resp = c.get("/trace").unwrap();
+    assert_eq!(resp.status, 503);
+    assert_eq!(c.get("/healthz").unwrap().status, 200);
+    srv.shutdown().unwrap();
+}
+
+/// `GET /trace` over the live front door returns Chrome trace-event
+/// JSON the `mpq trace` validator accepts, with all nine stages present
+/// (the HTTP stages exist because the requests came over a real socket).
+#[test]
+fn trace_endpoint_serves_validated_chrome_json_with_http_stages() {
+    let (srv, addr) = default_server(2, KernelChoice::Packed);
+    let mut c = HttpClient::connect(&addr).unwrap();
+    for i in 0..5u64 {
+        let body = format!("{{\"index\":{i},\"samples\":{}}}", 1 + i % 3);
+        assert_eq!(c.post("/infer", body.as_bytes()).unwrap().status, 200);
+    }
+    // Same connection: the 5th response's socket_write span was recorded
+    // (and its trace published) before this request is even parsed.
+    let resp = c.get("/trace").unwrap();
+    assert_eq!(resp.status, 200);
+    assert!(resp
+        .header("content-type")
+        .is_some_and(|ct| ct.starts_with("application/json")));
+    let check = check_trace_text(&resp.body_str()).unwrap();
+    assert_eq!(check.requests, 5);
+    assert_eq!(
+        check.stages,
+        vec![
+            "http_parse",
+            "admission",
+            "queue_wait",
+            "batch_assembly",
+            "layer_gemm",
+            "reassembly",
+            "epilogue",
+            "serialize",
+            "socket_write",
+        ],
+        "a socket-path trace must cover every stage of the lifecycle"
+    );
+    assert_eq!(check.ctl_events, 0, "no controller ran in this drill");
+    // Wrong method on /trace: 405, connection stays usable.
+    assert_eq!(c.post("/trace", b"{}").unwrap().status, 405);
+    assert_eq!(c.get("/healthz").unwrap().status, 200);
     srv.shutdown().unwrap();
 }
 

@@ -1,0 +1,352 @@
+//! Integration tests for per-request span tracing (`mpq serve` +
+//! [`mpq::serve::trace`]).
+//!
+//! The contracts under test, each through a *real* engine rather than
+//! the sink's unit harness:
+//!
+//! * **Completeness + ordering** — every traced fused-mode request
+//!   publishes one whole span set (admission → queue wait → batch
+//!   assembly → layer GEMM → reassembly → epilogue), stage starts
+//!   monotone along that chain, and the Chrome export round-trips the
+//!   `mpq trace` validator.
+//! * **Bounded memory** — a full ring evicts the *oldest whole
+//!   requests*; survivors are the newest and still complete.
+//! * **Deterministic sampling** — `--trace-sample N` keeps exactly the
+//!   ids with `id % N == 0`, nothing else.
+//! * **Invisibility** — responses are byte-identical with tracing on
+//!   and off, and the controller's decision JSONL is byte-identical
+//!   across traced reruns.
+//!
+//! Hermetic: sim backend, seeded init checkpoint — no artifacts, no
+//! sockets.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mpq::backend::{Backend, SimBackend};
+use mpq::data::{Dataset, Split};
+use mpq::graph::Graph;
+use mpq::quant::BitsConfig;
+use mpq::serve::trace::RequestRecord;
+use mpq::serve::{
+    check_trace_text, decisions_jsonl, run_degrade, DegradeConfig, Engine, FrontierStep, Response,
+    ServeConfig, SimProfile, Spawner, Stage, TraceConfig, TraceSink,
+};
+
+const MODEL: &str = "sim_tiny";
+
+/// The six stages every fused-mode engine request must cover (the three
+/// HTTP stages only exist behind the socket front door).
+const ENGINE_STAGES: [Stage; 6] = [
+    Stage::Admission,
+    Stage::QueueWait,
+    Stage::BatchAssembly,
+    Stage::LayerGemm,
+    Stage::Reassembly,
+    Stage::Epilogue,
+];
+
+fn spawner() -> Spawner {
+    Arc::new(|| Ok(Box::new(SimBackend::new(MODEL)?) as Box<dyn Backend>))
+}
+
+fn setup() -> (mpq::ckpt::Checkpoint, Vec<f32>, Dataset) {
+    let be = SimBackend::new(MODEL).unwrap();
+    let graph = Graph::from_manifest(&be.manifest().raw).unwrap();
+    let ck = be.init_checkpoint().unwrap();
+    let mut bits = BitsConfig::uniform(&graph, 4);
+    for l in &graph.layers {
+        if l.fixed_bits.is_none() {
+            bits.bits[l.qindex] = 2;
+            break;
+        }
+    }
+    (ck, bits.to_f32(), Dataset::for_task(be.manifest().task, 11))
+}
+
+fn traced_engine(workers: usize, trace: Option<Arc<TraceSink>>) -> Engine {
+    let (ck, bits, _) = setup();
+    Engine::start(
+        spawner(),
+        ck,
+        bits,
+        ServeConfig {
+            workers,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(1),
+            force_per_request: false,
+            warmup: true,
+            trace,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+/// Earliest start of `stage` within one published request record.
+fn first_start(rec: &RequestRecord, stage: Stage) -> u64 {
+    rec.spans
+        .iter()
+        .filter(|s| s.stage == stage)
+        .map(|s| s.t_start_ns)
+        .min()
+        .unwrap_or_else(|| {
+            panic!("request {} has no {} span: {:?}", rec.request_id, stage.name(), rec.spans)
+        })
+}
+
+fn assert_complete(rec: &RequestRecord) {
+    for stage in ENGINE_STAGES {
+        assert!(
+            rec.spans.iter().any(|s| s.stage == stage),
+            "request {} missing stage {} — rings must drop whole requests, never \
+             partial span sets: {:?}",
+            rec.request_id,
+            stage.name(),
+            rec.spans
+        );
+    }
+}
+
+#[test]
+fn fused_requests_publish_complete_ordered_span_sets() {
+    let (_, _, data) = setup();
+    let sink = TraceSink::new(TraceConfig::default());
+    let eng = traced_engine(2, Some(sink.clone()));
+    // Single-chunk sizes (<= max_batch 8): one queue_wait/assembly pass
+    // per request, so the stage chain is a clean total order.
+    let sizes = [1usize, 3, 5, 2];
+    for (i, &s) in sizes.iter().enumerate() {
+        let (x, y) = data.batch(Split::Eval, 100 + i as u64, s);
+        let r = eng.submit(x, y).unwrap().wait().unwrap();
+        assert_eq!(r.samples, s);
+    }
+    eng.drain().unwrap();
+
+    let recs = sink.requests();
+    assert_eq!(recs.len(), sizes.len(), "sample=1 must publish every request");
+    assert_eq!(sink.published(), sizes.len() as u64);
+    assert_eq!(sink.dropped(), 0);
+    for rec in &recs {
+        assert_complete(rec);
+        for s in &rec.spans {
+            assert_eq!(s.request_id, rec.request_id);
+            assert_eq!(s.epoch, 0, "all spans admitted and served under epoch 0");
+            assert!(s.t_end_ns >= s.t_start_ns, "span must not run backwards: {s:?}");
+            if s.stage == Stage::LayerGemm {
+                assert!(s.layer >= 0, "layer_gemm spans carry the layer index");
+                assert!(s.bits > 0, "layer_gemm spans carry the effective precision");
+                assert!(!s.variant.is_empty(), "layer_gemm spans carry the kernel variant");
+            } else {
+                assert_eq!((s.layer, s.bits, s.variant), (-1, 0, ""));
+            }
+        }
+        // The lifecycle chain: each stage starts no earlier than its
+        // predecessor's first start.
+        let starts: Vec<u64> = ENGINE_STAGES.iter().map(|&st| first_start(rec, st)).collect();
+        for (w, names) in starts.windows(2).zip(ENGINE_STAGES.windows(2)) {
+            assert!(
+                w[0] <= w[1],
+                "request {}: {} (t={}) must start no later than {} (t={})",
+                rec.request_id,
+                names[0].name(),
+                w[0],
+                names[1].name(),
+                w[1]
+            );
+        }
+    }
+
+    // The Chrome export of this real run round-trips the validator.
+    let check = check_trace_text(&sink.chrome_trace_json().to_string_compact()).unwrap();
+    assert_eq!(check.requests, sizes.len());
+    for stage in ENGINE_STAGES {
+        assert!(
+            check.stages.contains(&stage.name()),
+            "validator must see stage {} in {:?}",
+            stage.name(),
+            check.stages
+        );
+    }
+
+    // And the pinned /metrics stage section reflects exactly these spans.
+    let mut out = String::new();
+    sink.render_stage_metrics(&mut out);
+    let needle = format!("mpq_stage_latency_seconds_count{{stage=\"epilogue\"}} {}", sizes.len());
+    assert!(out.lines().any(|l| l == needle), "missing `{needle}` in:\n{out}");
+}
+
+#[test]
+fn full_ring_evicts_oldest_whole_requests() {
+    let (_, _, data) = setup();
+    // Tiny single-shard ring: 12 sequential requests through a capacity
+    // of 4 must evict requests 0..8 and retain 8..12 — whole, not
+    // truncated.
+    let sink = TraceSink::new(TraceConfig { sample: 1, capacity: 4, shards: 1 });
+    let eng = traced_engine(1, Some(sink.clone()));
+    let total = 12u64;
+    for i in 0..total {
+        let (x, y) = data.batch(Split::Eval, 200 + i, 1 + (i as usize % 3));
+        // Sequential submit→wait→drop: request i is fully published
+        // before i+1 exists, so eviction order is the id order.
+        eng.submit(x, y).unwrap().wait().unwrap();
+    }
+    eng.drain().unwrap();
+
+    assert_eq!(sink.published(), total);
+    assert_eq!(sink.dropped(), total - 4);
+    let recs = sink.requests();
+    let mut ids: Vec<u64> = recs.iter().map(|r| r.request_id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![8, 9, 10, 11], "survivors must be the newest requests");
+    for rec in &recs {
+        assert_complete(rec);
+    }
+    // The evicted requests still counted into the stage histograms —
+    // eviction bounds memory, not measurement.
+    assert_eq!(sink.stage_count(Stage::Epilogue), total);
+}
+
+#[test]
+fn sampling_keeps_exactly_the_selected_id_set() {
+    let (_, _, data) = setup();
+    let sink = TraceSink::new(TraceConfig { sample: 3, ..TraceConfig::default() });
+    let eng = traced_engine(2, Some(sink.clone()));
+    let total = 10u64;
+    for i in 0..total {
+        let (x, y) = data.batch(Split::Eval, 300 + i, 2);
+        eng.submit(x, y).unwrap().wait().unwrap();
+    }
+    eng.drain().unwrap();
+
+    // Pure modulus, no randomness: exactly {0, 3, 6, 9}.
+    for i in 0..total {
+        assert_eq!(sink.sampled(i), i % 3 == 0);
+    }
+    let mut ids: Vec<u64> = sink.requests().iter().map(|r| r.request_id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 3, 6, 9]);
+    assert_eq!(sink.published(), 4);
+    // Unsampled requests leave no histogram residue either.
+    assert_eq!(sink.stage_count(Stage::Epilogue), 4);
+}
+
+#[test]
+fn tracing_is_invisible_to_served_responses() {
+    let (_, _, data) = setup();
+    let requests: Vec<_> = [3usize, 1, 8, 5, 2]
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| data.batch(Split::Eval, 400 + i as u64, s))
+        .collect();
+    let mut streams: Vec<Vec<Response>> = Vec::new();
+    for traced in [false, true] {
+        let sink = traced.then(|| TraceSink::new(TraceConfig::default()));
+        let eng = traced_engine(2, sink.clone());
+        let rs: Vec<Response> = requests
+            .iter()
+            .map(|(x, y)| eng.submit(x.clone(), y.clone()).unwrap().wait().unwrap())
+            .collect();
+        let snap = eng.drain().unwrap();
+        assert_eq!(snap.completed, requests.len() as u64);
+        assert_eq!(snap.failed, 0);
+        if let Some(sink) = sink {
+            assert_eq!(sink.published(), requests.len() as u64);
+        }
+        streams.push(rs);
+    }
+    for (off, on) in streams[0].iter().zip(&streams[1]) {
+        assert_eq!(off.id, on.id);
+        assert_eq!(off.samples, on.samples);
+        assert_eq!(off.epoch, on.epoch);
+        assert_eq!(
+            off.loss.to_bits(),
+            on.loss.to_bits(),
+            "tracing must not perturb the served loss"
+        );
+        assert_eq!(off.evalout, on.evalout, "tracing must not perturb the served logits");
+    }
+}
+
+/// Frontier + drill config for the traced degrade rerun (the compact
+/// sibling of `degrade_integration.rs`'s setup).
+fn frontier() -> Vec<FrontierStep> {
+    let be = SimBackend::new(MODEL).unwrap();
+    let graph = Graph::from_manifest(&be.manifest().raw).unwrap();
+    let ck = be.init_checkpoint().unwrap();
+    let selectable: Vec<usize> = graph
+        .layers
+        .iter()
+        .filter(|l| l.fixed_bits.is_none())
+        .map(|l| l.qindex)
+        .collect();
+    let mut levels = Vec::new();
+    for (i, &(budget, gbops)) in [(0.95, 1.0), (0.70, 0.5), (0.50, 0.25)].iter().enumerate() {
+        let mut bits = BitsConfig::uniform(&graph, 4);
+        for &q in selectable.iter().take(i) {
+            bits.bits[q] = 2;
+        }
+        levels.push(FrontierStep {
+            budget_frac: budget,
+            method: "eagl".to_string(),
+            metric: 0.9 - 0.05 * i as f64,
+            gbops,
+            ckpt: ck.clone(),
+            bits: bits.to_f32(),
+        });
+    }
+    levels
+}
+
+#[test]
+fn degrade_decision_jsonl_is_byte_identical_across_traced_reruns() {
+    let (_, _, data) = setup();
+    let frontier = frontier();
+    let cfg = DegradeConfig::new(SimProfile::named("spike").unwrap());
+    let mut logs: Vec<String> = Vec::new();
+    let mut sinks: Vec<Arc<TraceSink>> = Vec::new();
+    for _ in 0..2 {
+        let sink = TraceSink::new(TraceConfig::default());
+        let eng = Engine::start(
+            spawner(),
+            frontier[0].ckpt.clone(),
+            frontier[0].bits.clone(),
+            ServeConfig {
+                workers: 2,
+                max_batch: 8,
+                batch_timeout: Duration::from_millis(1),
+                force_per_request: false,
+                warmup: true,
+                trace: Some(sink.clone()),
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let out = run_degrade(&eng, &data, &frontier, &cfg).unwrap();
+        eng.drain().unwrap();
+        assert!(out.swaps_down >= 1, "spike must force a downgrade:\n{}", out.log_text);
+        let jsonl = decisions_jsonl(&out.log);
+        assert_eq!(
+            jsonl.lines().count(),
+            out.log.len(),
+            "one JSONL line per controller tick"
+        );
+        logs.push(jsonl);
+        sinks.push(sink);
+    }
+    assert_eq!(
+        logs[0], logs[1],
+        "--decision-log must be byte-identical across reruns of the same drill"
+    );
+    // Every tick also landed in the trace as a controller instant, and
+    // the whole traced drill round-trips the validator.
+    for sink in &sinks {
+        let check = check_trace_text(&sink.chrome_trace_json().to_string_compact()).unwrap();
+        assert_eq!(
+            check.ctl_events,
+            logs[0].lines().count(),
+            "one ctl_tick instant per decision record"
+        );
+        assert!(check.requests > 0);
+    }
+}
