@@ -7,18 +7,20 @@
 # crate, see rust/Cargo.toml) and skip themselves at runtime when
 # artifacts are absent.
 
-.PHONY: verify test build bench bench-quick simd-matrix packed-smoke exp-smoke serve-smoke http-smoke degrade-smoke trace-smoke verify-pjrt artifacts clean
+.PHONY: verify test build bench bench-quick lint sanitize-smoke simd-matrix packed-smoke exp-smoke serve-smoke http-smoke degrade-smoke trace-smoke verify-pjrt artifacts clean
 
-# Tier-1: must pass in a clean checkout.  simd-matrix, bench-quick,
-# packed-smoke, exp-smoke, serve-smoke, http-smoke, degrade-smoke and
-# trace-smoke ride along as smoke steps so the simd-feature build, the
+# Tier-1: must pass in a clean checkout.  lint, sanitize-smoke,
+# simd-matrix, bench-quick, packed-smoke, exp-smoke, serve-smoke,
+# http-smoke, degrade-smoke and trace-smoke ride along as smoke steps so
+# the invariant linter (self-hosted over rust/src), the Miri pass over
+# the concurrency-critical unit tests, the simd-feature build, the
 # bench binary (and its BENCH_hotpath.json emission), the packed-kernel
 # CLI path, the manifest-driven experiment path, the serving engine
 # (in-process and over real loopback sockets), the SLO-driven
 # degradation loop, and the span-tracing/stage-profiler observability
 # path can never silently rot.
 verify:
-	cargo build --release && cargo test -q && $(MAKE) simd-matrix && $(MAKE) bench-quick && $(MAKE) packed-smoke && $(MAKE) exp-smoke && $(MAKE) serve-smoke && $(MAKE) http-smoke && $(MAKE) degrade-smoke && $(MAKE) trace-smoke
+	cargo build --release && cargo test -q && $(MAKE) lint && $(MAKE) sanitize-smoke && $(MAKE) simd-matrix && $(MAKE) bench-quick && $(MAKE) packed-smoke && $(MAKE) exp-smoke && $(MAKE) serve-smoke && $(MAKE) http-smoke && $(MAKE) degrade-smoke && $(MAKE) trace-smoke
 
 build:
 	cargo build --release
@@ -39,6 +41,38 @@ bench-quick:
 	MPQ_BENCH_QUICK=1 MPQ_BENCH_OUT=$(CURDIR)/BENCH_hotpath.json cargo bench --bench perf_hotpath
 	@grep -q '"name"' $(CURDIR)/BENCH_hotpath.json || { \
 	  echo "bench-quick: BENCH_hotpath.json recorded no measurements"; exit 1; }
+
+# Zero-dependency invariant linter over rust/src (see rust/README.md
+# §Static analysis).  The first run is the gate: `mpq lint` exits 0
+# clean / 1 findings / 2 config error (stale or malformed waivers in
+# rust/lint-waivers.json fail closed), and no pipe sits between cargo
+# and the shell so that exit status stays load-bearing.  The second run
+# pins the machine-readable report at LINT_report.json; the grep guard
+# mirrors bench-quick's — an accidentally emptied rule table must never
+# read as "everything passes".
+lint:
+	cargo run --release -q -p mpq -- lint
+	cargo run --release -q -p mpq -- lint --json > $(CURDIR)/LINT_report.json
+	@grep -q '"rules":\["' $(CURDIR)/LINT_report.json || { \
+	  echo "lint: LINT_report.json records an empty rule set"; exit 1; }
+	@echo "lint OK (report at LINT_report.json)"
+
+# Miri pass over the concurrency-critical unit tests (span-trace
+# histograms/rings, metrics counters, batcher state machine).  Miri
+# ships only on nightly; when the toolchain or component is missing the
+# target skips LOUDLY — the gap shows up in every verify log instead of
+# silently passing.  -Zmiri-disable-isolation lets the trace tests read
+# the host clock (Instant::now) under the interpreter.
+sanitize-smoke:
+	@if rustup toolchain list 2>/dev/null | grep -q '^nightly' && \
+	  rustup component list --toolchain nightly 2>/dev/null | grep -q 'miri.*(installed)'; then \
+	  MIRIFLAGS="-Zmiri-disable-isolation" cargo +nightly miri test -q -p mpq --lib -- \
+	    serve::trace:: serve::metrics:: serve::batcher:: && \
+	  echo "sanitize-smoke OK (miri over trace/metrics/batcher unit tests)"; \
+	else \
+	  echo "sanitize-smoke SKIPPED: nightly toolchain with miri not installed"; \
+	  echo "  (install: rustup toolchain install nightly && rustup component add miri --toolchain nightly)"; \
+	fi
 
 # The packed-kernel contracts must hold in both builds: the default
 # (scalar|unrolled tiles) and the 16-wide `--features simd` build.  The
@@ -260,3 +294,4 @@ artifacts:
 clean:
 	cargo clean
 	rm -rf results $(EXP_SMOKE_DIR) $(SERVE_SMOKE_DIR) $(PACKED_SMOKE_DIR) $(HTTP_SMOKE_DIR) $(DEGRADE_SMOKE_DIR) $(TRACE_SMOKE_DIR)
+	rm -f LINT_report.json

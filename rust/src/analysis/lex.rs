@@ -1,0 +1,548 @@
+//! Minimal Rust lexer for `mpq lint` (see [`crate::analysis`]).
+//!
+//! The rule engine scans source *textually*, so everything that could
+//! produce a false positive — comment prose, string/char/raw-string
+//! literal contents — is blanked to spaces before the rules run, while
+//! every newline is preserved so findings keep their original line
+//! numbers.  On top of the blanked text the lexer derives the three
+//! structural facts the rules need:
+//!
+//! * per-line `// relaxed-ok:` comment markers (the only information
+//!   stripping would otherwise destroy — the `relaxed-audit` rule needs
+//!   to see justification comments);
+//! * per-line test-region membership (`#[cfg(test)]` / `#[test]` /
+//!   `mod tests` items, tracked by brace depth) so rules can exclude
+//!   test code;
+//! * `fn` spans (name + inclusive line range) so rules can scope to
+//!   specific functions (the `wall-clock` rule on the loadgen content
+//!   generators).
+//!
+//! This is deliberately not a full parser: it never needs to be right
+//! about Rust semantics, only about where literals and comments start
+//! and end, and it fails toward *under*-reporting structure (e.g. a
+//! `#[cfg(test)]` that never opens a brace just stays armed), which the
+//! fixtures pin down.
+
+/// One `fn` item's span in the blanked source: `start..=end` are
+/// 1-indexed source lines from the `fn` keyword's line to the line of
+/// the body's closing brace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FnSpan {
+    pub name: String,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// The lexed view of one source file.
+#[derive(Debug)]
+pub struct Lexed {
+    /// Source with comments and string/char literal contents blanked to
+    /// spaces; has exactly the same number of lines as the input.
+    pub code: String,
+    /// `relaxed_ok[i]` — line `i` (0-indexed) carries a comment
+    /// containing `relaxed-ok:`.
+    pub relaxed_ok: Vec<bool>,
+    /// `in_test[i]` — line `i` (0-indexed) is inside a test region.
+    pub in_test: Vec<bool>,
+    /// Every `fn` item, outermost first for nested functions.
+    pub fns: Vec<FnSpan>,
+}
+
+impl Lexed {
+    /// Names of the functions whose span contains 1-indexed `line`
+    /// (outermost first; empty at module scope).
+    pub fn fn_names_at(&self, line: usize) -> Vec<&str> {
+        self.fns
+            .iter()
+            .filter(|f| f.start <= line && line <= f.end)
+            .map(|f| f.name.as_str())
+            .collect()
+    }
+}
+
+/// Lex one source file.  Infallible by design: malformed input (an
+/// unterminated literal, an unbalanced brace) degrades to blanked text
+/// and truncated spans rather than an error, so the linter can always
+/// report on whatever the compiler will reject anyway.
+pub fn lex(src: &str) -> Lexed {
+    let (code, relaxed_ok) = strip(src);
+    let (in_test, fns) = regions(&code);
+    Lexed { code, relaxed_ok, in_test, fns }
+}
+
+/// Blank comments and literals to spaces, preserving every newline.
+/// Returns the blanked text plus the per-line `relaxed-ok:` markers
+/// harvested from the comments while they were still visible.
+fn strip(src: &str) -> (String, Vec<bool>) {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let nlines = src.split('\n').count();
+    let mut relaxed_ok = vec![false; nlines];
+    let mut out = String::with_capacity(src.len());
+    let mut line = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        // Line comment: blank to end of line, harvesting relaxed-ok.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let mut j = i;
+            let mut text = String::new();
+            while j < n && chars[j] != '\n' {
+                text.push(chars[j]);
+                out.push(' ');
+                j += 1;
+            }
+            if text.contains("relaxed-ok:") {
+                relaxed_ok[line] = true;
+            }
+            i = j;
+            continue;
+        }
+        // Block comment (Rust block comments nest).
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            out.push(' ');
+            out.push(' ');
+            let mut text_line = String::new();
+            while j < n && depth > 0 {
+                if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    out.push(' ');
+                    out.push(' ');
+                    j += 2;
+                    continue;
+                }
+                if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    out.push(' ');
+                    out.push(' ');
+                    j += 2;
+                    continue;
+                }
+                if chars[j] == '\n' {
+                    if text_line.contains("relaxed-ok:") {
+                        relaxed_ok[line] = true;
+                    }
+                    text_line.clear();
+                    out.push('\n');
+                    line += 1;
+                    j += 1;
+                    continue;
+                }
+                text_line.push(chars[j]);
+                out.push(' ');
+                j += 1;
+            }
+            if text_line.contains("relaxed-ok:") {
+                relaxed_ok[line] = true;
+            }
+            i = j;
+            continue;
+        }
+        // Raw / byte string prefixes (`r"…"`, `r#"…"#`, `br#"…"#`,
+        // `b"…"`, `b'…'`) — only when not glued to an identifier.
+        let prev_ident =
+            i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_');
+        if !prev_ident && (c == 'r' || c == 'b') {
+            let mut j = i;
+            let is_b = chars[j] == 'b';
+            if is_b {
+                j += 1;
+            }
+            let is_r = j < n && chars[j] == 'r';
+            if is_r {
+                j += 1;
+                let mut hashes = 0usize;
+                while j < n && chars[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && chars[j] == '"' {
+                    // Raw string: blank prefix + opening quote…
+                    for _ in i..=j {
+                        out.push(' ');
+                    }
+                    j += 1;
+                    // …then blank the body until `"` + `hashes` * `#`.
+                    while j < n {
+                        if chars[j] == '"' {
+                            let mut k = j + 1;
+                            let mut h = 0usize;
+                            while k < n && h < hashes && chars[k] == '#' {
+                                h += 1;
+                                k += 1;
+                            }
+                            if h == hashes {
+                                for _ in j..k {
+                                    out.push(' ');
+                                }
+                                j = k;
+                                break;
+                            }
+                        }
+                        if chars[j] == '\n' {
+                            out.push('\n');
+                            line += 1;
+                        } else {
+                            out.push(' ');
+                        }
+                        j += 1;
+                    }
+                    i = j;
+                    continue;
+                }
+                // `r`/`br` not followed by a raw string (identifier or
+                // raw identifier) — fall through, emit `c` as code.
+            } else if is_b && j < n && (chars[j] == '"' || chars[j] == '\'') {
+                // Byte string / byte char: blank the `b`, re-enter the
+                // loop on the quote so the literal branches handle it.
+                out.push(' ');
+                i = j;
+                continue;
+            }
+        }
+        // String literal with escapes.
+        if c == '"' {
+            out.push(' ');
+            let mut j = i + 1;
+            while j < n {
+                if chars[j] == '\\' {
+                    out.push(' ');
+                    j += 1;
+                    if j < n {
+                        if chars[j] == '\n' {
+                            out.push('\n');
+                            line += 1;
+                        } else {
+                            out.push(' ');
+                        }
+                        j += 1;
+                    }
+                    continue;
+                }
+                if chars[j] == '"' {
+                    out.push(' ');
+                    j += 1;
+                    break;
+                }
+                if chars[j] == '\n' {
+                    out.push('\n');
+                    line += 1;
+                } else {
+                    out.push(' ');
+                }
+                j += 1;
+            }
+            i = j;
+            continue;
+        }
+        // Char literal vs lifetime: `'\…'` and `'x'` are literals,
+        // anything else starting with `'` is a lifetime and stays.
+        if c == '\'' {
+            if i + 1 < n && chars[i + 1] == '\\' {
+                out.push(' ');
+                let mut j = i + 1;
+                while j < n && chars[j] != '\'' {
+                    if chars[j] == '\\' {
+                        out.push(' ');
+                        j += 1;
+                        if j < n {
+                            if chars[j] == '\n' {
+                                out.push('\n');
+                                line += 1;
+                            } else {
+                                out.push(' ');
+                            }
+                            j += 1;
+                        }
+                        continue;
+                    }
+                    if chars[j] == '\n' {
+                        out.push('\n');
+                        line += 1;
+                    } else {
+                        out.push(' ');
+                    }
+                    j += 1;
+                }
+                if j < n {
+                    out.push(' ');
+                    j += 1;
+                }
+                i = j;
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' {
+                out.push(' ');
+                if chars[i + 1] == '\n' {
+                    out.push('\n');
+                    line += 1;
+                } else {
+                    out.push(' ');
+                }
+                out.push(' ');
+                i += 3;
+                continue;
+            }
+            out.push('\'');
+            i += 1;
+            continue;
+        }
+        if c == '\n' {
+            line += 1;
+        }
+        out.push(c);
+        i += 1;
+    }
+    (out, relaxed_ok)
+}
+
+/// Walk the blanked text once, tracking brace depth, to derive test
+/// regions and `fn` spans.
+fn regions(code: &str) -> (Vec<bool>, Vec<FnSpan>) {
+    let nlines = code.split('\n').count();
+    let mut in_test = vec![false; nlines];
+    let mut fns: Vec<FnSpan> = Vec::new();
+    // (index into fns, brace depth its body opened at)
+    let mut open_fns: Vec<(usize, usize)> = Vec::new();
+    let mut depth = 0usize;
+    // Depth at which the innermost-sufficient test region opened.
+    let mut test_at: Option<usize> = None;
+    let mut armed_test = false;
+    // `fn` item seen; its body's `{` is still ahead.
+    let mut pending_fn: Option<(String, usize)> = None;
+    let mut expect_name = false;
+    for (ln, lt) in code.split('\n').enumerate() {
+        if test_at.is_some() {
+            in_test[ln] = true;
+        }
+        // Arm only outside an open region: a `#[test]` attribute inside
+        // `mod tests` must not leave the flag set past the region's
+        // closing brace.
+        if test_at.is_none()
+            && (lt.contains("#[cfg(test)]") || lt.contains("#[test]") || lt.contains("mod tests"))
+        {
+            armed_test = true;
+        }
+        let mut tok = String::new();
+        for ch in lt.chars().chain(std::iter::once(' ')) {
+            if ch.is_alphanumeric() || ch == '_' {
+                tok.push(ch);
+                continue;
+            }
+            if !tok.is_empty() {
+                if tok == "fn" {
+                    expect_name = true;
+                } else if expect_name {
+                    pending_fn = Some((std::mem::take(&mut tok), ln));
+                    expect_name = false;
+                }
+                tok.clear();
+            }
+            match ch {
+                '{' => {
+                    if test_at.is_none() && armed_test {
+                        test_at = Some(depth);
+                        armed_test = false;
+                        in_test[ln] = true;
+                    }
+                    if let Some((name, sline)) = pending_fn.take() {
+                        open_fns.push((fns.len(), depth));
+                        fns.push(FnSpan { name, start: sline + 1, end: sline + 1 });
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if test_at == Some(depth) {
+                        test_at = None;
+                    }
+                    while let Some(&(idx, d)) = open_fns.last() {
+                        if d == depth {
+                            fns[idx].end = ln + 1;
+                            open_fns.pop();
+                        } else {
+                            break;
+                        }
+                    }
+                }
+                // A `;` ends a bodiless item (`fn f();` in a trait,
+                // `mod tests;` or `#[cfg(test)] use …;` in a parent) —
+                // disarm both trackers.
+                ';' => {
+                    pending_fn = None;
+                    expect_name = false;
+                    armed_test = false;
+                }
+                _ => {}
+            }
+        }
+    }
+    // Unterminated spans (unbalanced braces) close at EOF.
+    for (idx, _) in open_fns {
+        fns[idx].end = nlines;
+    }
+    (in_test, fns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    fn line_count(s: &str) -> usize {
+        s.split('\n').count()
+    }
+
+    #[test]
+    fn stripping_preserves_line_count_on_fixtures() {
+        let cases = [
+            "fn main() {}\n",
+            "// comment\nlet x = \"two\nlines\";\n",
+            "/* block\nover\nlines */ code();\n",
+            "let r = r#\"raw\nwith \" quote\"#;\n",
+            "let c = '\\n'; let l: &'static str = s;\n",
+            "let b = b\"bytes\"; let bc = b'x';\n",
+        ];
+        for src in cases {
+            let l = lex(src);
+            assert_eq!(line_count(&l.code), line_count(src), "{src:?}");
+        }
+    }
+
+    #[test]
+    fn literal_contents_do_not_leak() {
+        let src = "let s = \"Instant::now\"; // Instant::now in prose\nlet r = r\"SystemTime::now\";\n";
+        let l = lex(src);
+        assert!(!l.code.contains("Instant::now"), "{:?}", l.code);
+        assert!(!l.code.contains("SystemTime::now"), "{:?}", l.code);
+    }
+
+    #[test]
+    fn code_outside_literals_survives() {
+        let src = "let t = Instant::now(); // ok\n";
+        let l = lex(src);
+        assert!(l.code.contains("Instant::now"));
+        assert!(!l.code.contains("ok"));
+    }
+
+    #[test]
+    fn relaxed_ok_markers_are_per_line() {
+        let src = "a.load(O::Relaxed); // relaxed-ok: counter\nb.load(O::Relaxed);\n// relaxed-ok: next line\nc.store(1, O::Relaxed);\n";
+        let l = lex(src);
+        assert_eq!(l.relaxed_ok, vec![true, false, true, false, false]);
+        // The justification prose itself must be blanked out of code.
+        assert!(!l.code.contains("counter"));
+    }
+
+    #[test]
+    fn cfg_test_region_detection() {
+        let src = "fn live() {\n    work();\n}\n\n#[cfg(test)]\nmod tests {\n    fn helper() {}\n    #[test]\n    fn t() { assert!(true); }\n}\nfn after() {}\n";
+        let l = lex(src);
+        // Lines 1..=3 (0-indexed 0..=2) and the trailing fn are live.
+        assert!(!l.in_test[0] && !l.in_test[1] && !l.in_test[2]);
+        // `mod tests {` through its closing brace are test lines.
+        for ln in 5..=9 {
+            assert!(l.in_test[ln], "line {} should be in_test", ln + 1);
+        }
+        assert!(!l.in_test[10]);
+    }
+
+    #[test]
+    fn mod_tests_without_cfg_is_a_test_region() {
+        let src = "mod tests {\n    fn t() {}\n}\nfn live() {}\n";
+        let l = lex(src);
+        assert!(l.in_test[0] && l.in_test[1] && l.in_test[2]);
+        assert!(!l.in_test[3]);
+    }
+
+    #[test]
+    fn fn_spans_cover_bodies_and_nesting() {
+        let src = "fn outer() {\n    let x = 1;\n    fn inner() {\n        let y = 2;\n    }\n    done(x);\n}\n";
+        let l = lex(src);
+        assert_eq!(
+            l.fns,
+            vec![
+                FnSpan { name: "outer".into(), start: 1, end: 7 },
+                FnSpan { name: "inner".into(), start: 3, end: 5 },
+            ]
+        );
+        assert_eq!(l.fn_names_at(4), vec!["outer", "inner"]);
+        assert_eq!(l.fn_names_at(6), vec!["outer"]);
+    }
+
+    #[test]
+    fn trait_method_declarations_do_not_open_spans() {
+        let src = "trait T {\n    fn decl(&self) -> usize;\n    fn with_body(&self) {\n        let _ = 1;\n    }\n}\n";
+        let l = lex(src);
+        assert_eq!(l.fns.len(), 1);
+        assert_eq!(l.fns[0].name, "with_body");
+    }
+
+    /// Deterministic generator for small random "Rust-ish" sources: a
+    /// token soup of code idents, comments, and every literal family,
+    /// with sensitive substrings planted inside literals/comments only.
+    fn gen_source(rng: &mut crate::rng::Pcg32) -> String {
+        let pieces: &[&str] = &[
+            "let x = 1;",
+            "foo(bar, baz);",
+            "\n",
+            "// line comment with Instant::now\n",
+            "/* block\ncomment SystemTime::now */",
+            "let s = \"str Instant::now \\\" esc\";",
+            "let r = r#\"raw \" SystemTime::now\"#;",
+            "let c = 'q';",
+            "let e = '\\n';",
+            "let b = b\"bytes Instant::now\";",
+            "let l: &'static str = t;",
+            "{ nested(); }",
+        ];
+        let n = 1 + (rng.next_u64() % 12) as usize;
+        let mut out = String::new();
+        for _ in 0..n {
+            let i = (rng.next_u64() % pieces.len() as u64) as usize;
+            out.push_str(pieces[i]);
+            out.push(' ');
+        }
+        out
+    }
+
+    #[test]
+    fn prop_stripping_never_changes_line_numbers() {
+        prop::forall(
+            &prop::Config::default(),
+            gen_source,
+            |src| {
+                let l = lex(src);
+                if line_count(&l.code) == line_count(src) {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "line count changed: {} -> {}",
+                        line_count(src),
+                        line_count(&l.code)
+                    ))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_literals_never_leak_into_code() {
+        // Every planted "Instant::now"/"SystemTime::now" lives inside a
+        // literal or comment, so none may survive stripping.
+        prop::forall(
+            &prop::Config::default(),
+            gen_source,
+            |src| {
+                let l = lex(src);
+                if l.code.contains("Instant::now") || l.code.contains("SystemTime::now") {
+                    Err(format!("literal leaked into code: {:?}", l.code))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,268 @@
+//! `mpq lint` — repo-aware static analysis for the serving stack.
+//!
+//! The repo's load-bearing invariants (bit-identical packed/reference
+//! kernels, byte-identical decision/JSONL logs, wall-clock-free
+//! deterministic modules, fail-closed flag parsing, justified
+//! relaxed-atomic telemetry, panic-free request paths) were enforced by
+//! convention and regression test for nine PRs; this pass makes them
+//! machine-checked.  Zero new dependencies: a small lexer
+//! ([`lex`]) blanks comments/literals while preserving line numbers,
+//! and a textual rule engine ([`rules`]) runs six rules over the
+//! blanked source with per-rule `file:line` diagnostics.
+//!
+//! Exceptions live in one explicit allowlist, `rust/lint-waivers.json`,
+//! parsed fail-closed via [`crate::jsonio`] (unknown keys are errors
+//! with a key path, every waiver needs a non-empty `why`, and a waiver
+//! that matches no finding is itself an error — stale waivers cannot
+//! accumulate).  The CLI (`mpq lint [--root DIR] [--json]
+//! [--waivers F]`) pins exit codes: 0 clean, 1 findings, 2 config
+//! error; `make lint` wires it into `make verify`, and the pass is
+//! self-hosting (it lints its own source).
+
+pub mod lex;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+use crate::jsonio::Json;
+pub use rules::{Finding, RULES};
+
+/// One allowlist entry: suppresses findings of `rule` in `file` whose
+/// source line contains `contains`.  Matching by substring rather than
+/// line number keeps waivers robust to unrelated edits above them; the
+/// mandatory `why` is the reviewable justification.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    pub rule: String,
+    pub file: String,
+    pub contains: String,
+    pub why: String,
+}
+
+/// The outcome of a lint run over one tree.
+#[derive(Debug)]
+pub struct Report {
+    /// Unwaived findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Findings suppressed by waivers.
+    pub waived: usize,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    /// The pinned machine-readable report (format version 1; keys are
+    /// emitted sorted by `to_string_compact`, so the byte form is
+    /// deterministic and golden-tested).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+            ("rules", Json::arr(RULES.iter().map(|r| Json::str(r)))),
+            ("waived", Json::num(self.waived as f64)),
+            (
+                "findings",
+                Json::arr(self.findings.iter().map(|f| {
+                    Json::obj(vec![
+                        ("rule", Json::str(f.rule)),
+                        ("file", Json::str(&f.file)),
+                        ("line", Json::num(f.line as f64)),
+                        ("excerpt", Json::str(&f.excerpt)),
+                        ("note", Json::str(&f.note)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Human-readable rendering (stdout of `mpq lint` without `--json`).
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        for f in &self.findings {
+            s.push_str(&format!("{}:{} [{}] {}\n    {}\n", f.file, f.line, f.rule, f.note, f.excerpt));
+        }
+        if self.findings.is_empty() {
+            s.push_str(&format!(
+                "lint OK ({} files, {} rules, {} waived)\n",
+                self.files_scanned,
+                RULES.len(),
+                self.waived
+            ));
+        } else {
+            s.push_str(&format!(
+                "lint: {} finding(s) across {} files ({} waived)\n",
+                self.findings.len(),
+                self.files_scanned,
+                self.waived
+            ));
+        }
+        s
+    }
+}
+
+/// Lint `root`, discovering the waiver file as `<root>/lint-waivers.json`
+/// or `<root>/../lint-waivers.json` (the repo layout: sources in
+/// `rust/src`, waivers in `rust/`).  Missing waiver file = no waivers.
+pub fn run(root: &Path) -> crate::Result<Report> {
+    let candidates = [
+        root.join("lint-waivers.json"),
+        root.join("..").join("lint-waivers.json"),
+    ];
+    let waivers = candidates.iter().find(|p| p.is_file());
+    run_with(root, waivers.map(|p| p.as_path()))
+}
+
+/// Lint `root` with an explicit waiver file (or none).  `Err` is a
+/// configuration error (exit 2 at the CLI); findings are data, not
+/// errors — inspect [`Report::findings`].
+pub fn run_with(root: &Path, waivers_path: Option<&Path>) -> crate::Result<Report> {
+    // Loud-empty guard: an accidentally emptied rule table must never
+    // read as "everything passes" (same failure mode the bench-quick
+    // empty-record guard closes).
+    crate::ensure!(!RULES.is_empty(), "lint: empty rule set");
+    let waivers = match waivers_path {
+        Some(p) => load_waivers(p)?,
+        None => Vec::new(),
+    };
+    let files = walk(root)?;
+    crate::ensure!(
+        !files.is_empty(),
+        "lint: no .rs files under {} — wrong --root?",
+        root.display()
+    );
+    let mut all: Vec<Finding> = Vec::new();
+    for (rel, path) in &files {
+        let raw = std::fs::read_to_string(path)
+            .map_err(|e| crate::err!("lint: reading {}: {e}", path.display()))?;
+        let lexed = lex::lex(&raw);
+        rules::check_file(&rules::FileCtx { rel, raw: &raw, lexed: &lexed }, &mut all);
+    }
+    let mut matched = vec![false; waivers.len()];
+    let mut kept = Vec::new();
+    let mut waived = 0usize;
+    for f in all {
+        let mut hit = false;
+        for (wi, w) in waivers.iter().enumerate() {
+            if w.rule == f.rule && w.file == f.file && f.excerpt.contains(&w.contains) {
+                matched[wi] = true;
+                hit = true;
+            }
+        }
+        if hit {
+            waived += 1;
+        } else {
+            kept.push(f);
+        }
+    }
+    // Fail closed on stale waivers: an allowlist entry that no longer
+    // matches anything is dead weight that would silently re-admit the
+    // pattern it once excused.
+    for (wi, w) in waivers.iter().enumerate() {
+        crate::ensure!(
+            matched[wi],
+            "lint: stale waiver (rule '{}', file '{}', contains {:?}) matches no \
+             finding — delete it or fix its pattern",
+            w.rule,
+            w.file,
+            w.contains
+        );
+    }
+    kept.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(Report { findings: kept, waived, files_scanned: files.len() })
+}
+
+/// Recursively collect `*.rs` under `root` as (root-relative path with
+/// forward slashes, absolute path), sorted for deterministic reports.
+fn walk(root: &Path) -> crate::Result<Vec<(String, PathBuf)>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let entries = std::fs::read_dir(&dir)
+            .map_err(|e| crate::err!("lint: reading {}: {e}", dir.display()))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| crate::err!("lint: reading {}: {e}", dir.display()))?;
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+                let rel = path
+                    .strip_prefix(root)
+                    .map_err(|e| crate::err!("lint: {}: {e}", path.display()))?
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                out.push((rel, path));
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Parse the waiver file fail-closed (the compas registry-manifest
+/// discipline): unknown keys are errors with a key path, every field is
+/// a required non-empty string, and `rule` must name a known rule.
+fn load_waivers(path: &Path) -> crate::Result<Vec<Waiver>> {
+    let v = crate::jsonio::parse_file(path)
+        .map_err(|e| crate::err!("{}: {e}", path.display()))?;
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| crate::err!("{}: top level must be an object", path.display()))?;
+    for key in obj.keys() {
+        crate::ensure!(
+            key == "waivers",
+            "{}: unknown key '{}' (expected only 'waivers')",
+            path.display(),
+            key
+        );
+    }
+    let arr = obj
+        .get("waivers")
+        .and_then(|w| w.as_arr())
+        .ok_or_else(|| crate::err!("{}: 'waivers' must be an array", path.display()))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, entry) in arr.iter().enumerate() {
+        let eobj = entry.as_obj().ok_or_else(|| {
+            crate::err!("{}: waivers[{i}] must be an object", path.display())
+        })?;
+        for key in eobj.keys() {
+            crate::ensure!(
+                matches!(key.as_str(), "rule" | "file" | "contains" | "why"),
+                "{}: waivers[{i}].{}: unknown key (expected rule/file/contains/why)",
+                path.display(),
+                key
+            );
+        }
+        let field = |name: &str| -> crate::Result<String> {
+            let s = eobj
+                .get(name)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| {
+                    crate::err!("{}: waivers[{i}].{name}: required string", path.display())
+                })?;
+            crate::ensure!(
+                !s.trim().is_empty(),
+                "{}: waivers[{i}].{name}: must be non-empty",
+                path.display()
+            );
+            Ok(s.to_string())
+        };
+        let w = Waiver {
+            rule: field("rule")?,
+            file: field("file")?,
+            contains: field("contains")?,
+            why: field("why")?,
+        };
+        crate::ensure!(
+            RULES.contains(&w.rule.as_str()),
+            "{}: waivers[{i}].rule: unknown rule '{}' (known: {})",
+            path.display(),
+            w.rule,
+            RULES.join(", ")
+        );
+        out.push(w);
+    }
+    Ok(out)
+}

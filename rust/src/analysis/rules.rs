@@ -1,0 +1,569 @@
+//! The `mpq lint` rule set (see [`crate::analysis`] for the engine and
+//! rust/README.md §Static analysis for the catalog).
+//!
+//! Every rule encodes an invariant the repo already enforces by
+//! convention and regression test; the rules make the conventions
+//! machine-checked.  Rules scan the *blanked* text from
+//! [`super::lex`], so literal contents and comment prose can never
+//! trip them, and they skip test regions — test code is allowed to
+//! panic, print, and read clocks.
+
+use super::lex::Lexed;
+
+/// One diagnostic.  `file` is the scan-root-relative path with forward
+/// slashes; `line` is 1-indexed; `excerpt` is the trimmed original
+/// source line (waivers match on it by substring).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub excerpt: String,
+    pub note: String,
+}
+
+/// The rule names, sorted — pinned into the JSON report so an
+/// accidentally emptied rule set is loudly visible (and gated in the
+/// Makefile with the same guard pattern as `bench-quick`).
+pub const RULES: &[&str] = &[
+    "fail-closed-flags",
+    "float-reassoc",
+    "hot-path-panic",
+    "relaxed-audit",
+    "stdout-discipline",
+    "wall-clock",
+];
+
+/// Per-file input to the rules.
+pub struct FileCtx<'a> {
+    pub rel: &'a str,
+    pub raw: &'a str,
+    pub lexed: &'a Lexed,
+}
+
+/// Run every rule over one file.
+pub fn check_file(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    wall_clock(ctx, out);
+    relaxed_audit(ctx, out);
+    hot_path_panic(ctx, out);
+    float_reassoc(ctx, out);
+    stdout_discipline(ctx, out);
+    fail_closed_flags(ctx, out);
+}
+
+fn push(out: &mut Vec<Finding>, ctx: &FileCtx, rule: &'static str, line: usize, note: String) {
+    let excerpt = ctx
+        .raw
+        .split('\n')
+        .nth(line.saturating_sub(1))
+        .unwrap_or("")
+        .trim()
+        .to_string();
+    out.push(Finding { rule, file: ctx.rel.to_string(), line, excerpt, note });
+}
+
+/// Is the byte before `pos` something that could extend an identifier?
+/// Used to keep `println!` from matching inside `eprintln!` and
+/// `panic!` inside `sim_panic!`.
+fn ident_before(code: &str, pos: usize) -> bool {
+    pos > 0
+        && matches!(code.as_bytes()[pos - 1], b'a'..=b'z' | b'A'..=b'Z' | b'0'..=b'9' | b'_')
+}
+
+fn line_of(code: &str, pos: usize) -> usize {
+    code.as_bytes()[..pos].iter().filter(|&&b| b == b'\n').count()
+}
+
+// ---------------------------------------------------------------------------
+// wall-clock
+// ---------------------------------------------------------------------------
+
+/// Modules whose outputs are contractually byte-identical across
+/// reruns/workers/kernels: no wall-clock reads at all.
+const WALL_CLOCK_FILES: &[&str] = &["serve/controller.rs"];
+const WALL_CLOCK_DIRS: &[&str] = &["experiment/", "rng/", "jsonio/"];
+
+/// In the loadgen, only the *content generation* functions are
+/// deterministic (pacing legitimately reads the clock), so the rule is
+/// function-scoped there.
+const LOADGEN_CONTENT_FNS: &[&str] = &[
+    "request_sizes",
+    "request_index",
+    "request_set",
+    "infer_body",
+    "latency_jsonl",
+    "finalize",
+    "hits",
+    "stalls",
+    "stall_wall_for",
+    "sim_extra_work",
+];
+
+fn wall_clock(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    let whole_file = WALL_CLOCK_FILES.contains(&ctx.rel)
+        || WALL_CLOCK_DIRS.iter().any(|d| ctx.rel.starts_with(d));
+    let fn_scoped = ctx.rel == "serve/loadgen.rs";
+    if !whole_file && !fn_scoped {
+        return;
+    }
+    for (ln0, lt) in ctx.lexed.code.split('\n').enumerate() {
+        if ctx.lexed.in_test[ln0] {
+            continue;
+        }
+        if !(lt.contains("Instant::now") || lt.contains("SystemTime::now")) {
+            continue;
+        }
+        if fn_scoped {
+            let names = ctx.lexed.fn_names_at(ln0 + 1);
+            if !names.iter().any(|n| LOADGEN_CONTENT_FNS.contains(n)) {
+                continue;
+            }
+        }
+        push(
+            out,
+            ctx,
+            "wall-clock",
+            ln0 + 1,
+            "wall-clock read in a deterministic module (outputs are contractually \
+             byte-identical across reruns/workers/kernels)"
+                .to_string(),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// relaxed-audit
+// ---------------------------------------------------------------------------
+
+fn relaxed_audit(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    let lines: Vec<&str> = ctx.lexed.code.split('\n').collect();
+    for ln0 in 0..lines.len() {
+        if !lines[ln0].contains("Ordering::Relaxed") || ctx.lexed.in_test[ln0] {
+            continue;
+        }
+        if relaxed_justified(ctx.lexed, &lines, ln0) {
+            continue;
+        }
+        push(
+            out,
+            ctx,
+            "relaxed-audit",
+            ln0 + 1,
+            "Ordering::Relaxed without a `// relaxed-ok: <why>` justification on the \
+             same line or the comment lines directly above"
+                .to_string(),
+        );
+    }
+}
+
+/// Same line, or any comment-only/blank line walking straight up.
+fn relaxed_justified(lexed: &Lexed, lines: &[&str], ln0: usize) -> bool {
+    if lexed.relaxed_ok[ln0] {
+        return true;
+    }
+    let mut j = ln0;
+    while j > 0 {
+        j -= 1;
+        if lines[j].trim().is_empty() {
+            if lexed.relaxed_ok[j] {
+                return true;
+            }
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// hot-path-panic
+// ---------------------------------------------------------------------------
+
+/// Receiver methods whose `Result` is only `Err` on a panic elsewhere:
+/// the mutex/condvar/join poison idiom.  `x.lock().unwrap()` is the
+/// repo's standard form — propagating poison would just turn one panic
+/// into a cascade — so these receivers are exempt by construction.
+const POISON_RECEIVERS: &[&str] = &[
+    "lock",
+    "wait",
+    "wait_timeout",
+    "wait_while",
+    "into_inner",
+    "join",
+    "read",
+    "write",
+    "get_mut",
+];
+
+fn hot_path_panic(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if !(ctx.rel.starts_with("serve/") || ctx.rel.starts_with("kernels/")) {
+        return;
+    }
+    let code = ctx.lexed.code.as_str();
+    for pat in ["panic!", "todo!", "unimplemented!", "debug_assert"] {
+        for (pos, _) in code.match_indices(pat) {
+            if ident_before(code, pos) {
+                continue;
+            }
+            let ln0 = line_of(code, pos);
+            if ctx.lexed.in_test[ln0] {
+                continue;
+            }
+            push(
+                out,
+                ctx,
+                "hot-path-panic",
+                ln0 + 1,
+                format!(
+                    "`{pat}` in non-test serve/kernels code: a panic in a worker \
+                     strands in-flight tickets — return an error instead"
+                ),
+            );
+        }
+    }
+    for pat in [".unwrap()", ".expect("] {
+        for (pos, _) in code.match_indices(pat) {
+            let ln0 = line_of(code, pos);
+            if ctx.lexed.in_test[ln0] {
+                continue;
+            }
+            if let Some(recv) = call_receiver(code, pos) {
+                if POISON_RECEIVERS.contains(&recv.as_str()) {
+                    continue;
+                }
+            }
+            push(
+                out,
+                ctx,
+                "hot-path-panic",
+                ln0 + 1,
+                format!(
+                    "`{pat}…` in non-test serve/kernels code (poison-idiom receivers \
+                     like .lock()/.join() are exempt): return an error or waive with \
+                     an infallibility proof"
+                ),
+            );
+        }
+    }
+}
+
+/// For `…method(args).unwrap()` with the `.` at `dot`, the name of the
+/// method call directly feeding it — `None` when the receiver is a
+/// plain variable/field (`s.expect(…)`).
+fn call_receiver(code: &str, dot: usize) -> Option<String> {
+    let b = code.as_bytes();
+    let mut i = dot;
+    while i > 0 && (b[i - 1] as char).is_whitespace() {
+        i -= 1;
+    }
+    if i == 0 || b[i - 1] != b')' {
+        return None;
+    }
+    // Balance backward over the argument list (literals are blanked, so
+    // parens inside strings cannot confuse the count).
+    let mut depth = 1usize;
+    i -= 1;
+    while i > 0 && depth > 0 {
+        i -= 1;
+        match b[i] {
+            b')' => depth += 1,
+            b'(' => depth -= 1,
+            _ => {}
+        }
+    }
+    if depth != 0 {
+        return None;
+    }
+    while i > 0 && (b[i - 1] as char).is_whitespace() {
+        i -= 1;
+    }
+    let end = i;
+    while i > 0 && matches!(b[i - 1], b'a'..=b'z' | b'A'..=b'Z' | b'0'..=b'9' | b'_') {
+        i -= 1;
+    }
+    if i == end {
+        return None;
+    }
+    Some(code[i..end].to_string())
+}
+
+// ---------------------------------------------------------------------------
+// float-reassoc
+// ---------------------------------------------------------------------------
+
+/// The ε=0 kernel modules: reference/packed GEMM must accumulate in
+/// the pinned order (bit-identity contract), so iterator reductions —
+/// which invite reassociation under future refactors — are banned
+/// outright; integer reductions get waivers with a one-line proof.
+const REASSOC_FILES: &[&str] = &["kernels/gemm.rs", "kernels/packed.rs"];
+
+fn float_reassoc(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if !REASSOC_FILES.contains(&ctx.rel) {
+        return;
+    }
+    for (ln0, lt) in ctx.lexed.code.split('\n').enumerate() {
+        if ctx.lexed.in_test[ln0] {
+            continue;
+        }
+        if !(lt.contains(".sum(") || lt.contains(".sum::<") || lt.contains(".fold(")) {
+            continue;
+        }
+        push(
+            out,
+            ctx,
+            "float-reassoc",
+            ln0 + 1,
+            "iterator reduction in an ε=0 kernel module — accumulation order is \
+             contractual; use the explicit loop form, or waive integer reductions \
+             with a proof"
+                .to_string(),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// stdout-discipline
+// ---------------------------------------------------------------------------
+
+fn stdout_discipline(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if ctx.rel == "main.rs" || ctx.rel.starts_with("cli/") {
+        return;
+    }
+    let code = ctx.lexed.code.as_str();
+    for pat in ["println!", "print!"] {
+        for (pos, _) in code.match_indices(pat) {
+            // Skip `eprintln!`/`eprint!` (stderr is fine everywhere).
+            if ident_before(code, pos) {
+                continue;
+            }
+            let ln0 = line_of(code, pos);
+            if ctx.lexed.in_test[ln0] {
+                continue;
+            }
+            push(
+                out,
+                ctx,
+                "stdout-discipline",
+                ln0 + 1,
+                "stdout belongs to main.rs/cli/ (machine-readable output and the \
+                 Makefile gate lines) — use the crate::info!/warn!/debug! logging \
+                 macros here"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fail-closed-flags
+// ---------------------------------------------------------------------------
+
+/// Every subcommand dispatched in `run()`'s `match` must be named in
+/// `validate_flags()`, which must itself call `ensure_known_flags` —
+/// otherwise a new subcommand silently accepts misspelled flags (the
+/// exact failure mode `ensure_known_flags` exists to prevent).  This
+/// rule reads the *raw* source: the dispatch names live in string
+/// literals the lexer blanks.
+fn fail_closed_flags(ctx: &FileCtx, out: &mut Vec<Finding>) {
+    if ctx.rel != "main.rs" {
+        return;
+    }
+    // Dispatch arms: lines shaped like `Some("name") => …`.
+    let mut dispatched: Vec<(String, usize)> = Vec::new();
+    for (ln0, lt) in ctx.raw.split('\n').enumerate() {
+        if ctx.lexed.in_test.get(ln0).copied().unwrap_or(false) {
+            continue;
+        }
+        if !lt.contains("=>") {
+            continue;
+        }
+        let mut rest = lt;
+        while let Some(start) = rest.find("Some(\"") {
+            let after = &rest[start + 6..];
+            let Some(end) = after.find('"') else { break };
+            dispatched.push((after[..end].to_string(), ln0 + 1));
+            rest = &after[end..];
+        }
+    }
+    if dispatched.is_empty() {
+        return;
+    }
+    // validate_flags body: from its `fn` line to the next top-level item.
+    let raw_lines: Vec<&str> = ctx.raw.split('\n').collect();
+    let Some(vf_start) = raw_lines.iter().position(|l| l.contains("fn validate_flags"))
+    else {
+        push(
+            out,
+            ctx,
+            "fail-closed-flags",
+            dispatched[0].1,
+            "subcommands are dispatched but there is no validate_flags() gate".to_string(),
+        );
+        return;
+    };
+    let vf_end = raw_lines[vf_start + 1..]
+        .iter()
+        .position(|l| l.starts_with("fn ") || l.starts_with("const ") || l.starts_with("pub fn "))
+        .map(|off| vf_start + 1 + off)
+        .unwrap_or(raw_lines.len());
+    let body = raw_lines[vf_start..vf_end].join("\n");
+    if !body.contains("ensure_known_flags") {
+        push(
+            out,
+            ctx,
+            "fail-closed-flags",
+            vf_start + 1,
+            "validate_flags() never reaches ensure_known_flags".to_string(),
+        );
+        return;
+    }
+    // Quoted names inside the body (flag names too — a harmless
+    // superset; only the subcommand names are looked up).
+    let quoted: Vec<&str> = body.split('"').skip(1).step_by(2).collect();
+    for (name, line) in dispatched {
+        if !quoted.contains(&name.as_str()) {
+            push(
+                out,
+                ctx,
+                "fail-closed-flags",
+                line,
+                format!(
+                    "subcommand '{name}' is dispatched in run() but never validated in \
+                     validate_flags() — unknown flags would be silently accepted"
+                ),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lex;
+
+    fn findings(rel: &str, src: &str) -> Vec<Finding> {
+        let lexed = lex::lex(src);
+        let ctx = FileCtx { rel, raw: src, lexed: &lexed };
+        let mut out = Vec::new();
+        check_file(&ctx, &mut out);
+        out
+    }
+
+    fn rules_of(fs: &[Finding]) -> Vec<&str> {
+        fs.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn wall_clock_fires_in_deterministic_modules_only() {
+        let src = "fn f() { let t = std::time::Instant::now(); }\n";
+        assert_eq!(rules_of(&findings("serve/controller.rs", src)), vec!["wall-clock"]);
+        assert_eq!(rules_of(&findings("experiment/schedule.rs", src)), vec!["wall-clock"]);
+        assert!(findings("serve/engine.rs", src)
+            .iter()
+            .all(|f| f.rule != "wall-clock"));
+    }
+
+    #[test]
+    fn wall_clock_ignores_strings_comments_and_tests() {
+        let in_str = "fn f() { let s = \"Instant::now\"; } // Instant::now\n";
+        assert!(findings("rng/mod.rs", in_str).is_empty());
+        let in_test = "#[cfg(test)]\nmod tests {\n  fn t() { let t = Instant::now(); }\n}\n";
+        assert!(findings("rng/mod.rs", in_test).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_is_fn_scoped_in_loadgen() {
+        let src = "fn request_sizes() { let t = Instant::now(); }\nfn pace() { let t = Instant::now(); }\n";
+        let fs = findings("serve/loadgen.rs", src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].line, 1);
+    }
+
+    #[test]
+    fn relaxed_audit_requires_justification() {
+        let bare = "fn f() { c.load(Ordering::Relaxed); }\n";
+        assert_eq!(rules_of(&findings("serve/metrics.rs", bare)), vec!["relaxed-audit"]);
+        let same_line = "fn f() { c.load(Ordering::Relaxed); } // relaxed-ok: counter\n";
+        assert!(findings("serve/metrics.rs", same_line).is_empty());
+        let above = "fn f() {\n  // relaxed-ok: counter\n  c.load(Ordering::Relaxed);\n}\n";
+        assert!(findings("serve/metrics.rs", above).is_empty());
+        let detached = "fn f() {\n  // relaxed-ok: counter\n  other();\n  c.load(Ordering::Relaxed);\n}\n";
+        assert_eq!(rules_of(&findings("serve/metrics.rs", detached)), vec!["relaxed-audit"]);
+    }
+
+    #[test]
+    fn hot_path_panic_flags_unwrap_but_exempts_poison_idiom() {
+        let bad = "fn f() { q.pop_front().unwrap(); }\n";
+        assert_eq!(rules_of(&findings("serve/engine.rs", bad)), vec!["hot-path-panic"]);
+        let poison = "fn f() { let g = self.q.lock().unwrap(); cv.wait(g).unwrap(); h.join().unwrap(); }\n";
+        assert!(findings("serve/engine.rs", poison).is_empty());
+        let multiline = "fn f() {\n  self.q\n    .lock()\n    .unwrap();\n}\n";
+        assert!(findings("serve/engine.rs", multiline).is_empty());
+    }
+
+    #[test]
+    fn hot_path_panic_flags_expect_on_plain_receivers() {
+        // A method *named* expect on a local scanner type still matches
+        // textually (waived in the real tree with a justification).
+        let src = "fn f() { s.expect(b'x')?; }\n";
+        assert_eq!(rules_of(&findings("serve/http/lazyjson.rs", src)), vec!["hot-path-panic"]);
+    }
+
+    #[test]
+    fn hot_path_panic_flags_panics_and_debug_asserts_outside_tests() {
+        let src = "fn f() { debug_assert_eq!(a, b); }\nfn g() { panic!(\"x\"); }\n";
+        let fs = findings("kernels/packed.rs", src);
+        assert_eq!(rules_of(&fs), vec!["hot-path-panic", "hot-path-panic"]);
+        let test_only = "#[cfg(test)]\nmod tests {\n  fn t() { panic!(); x.unwrap(); }\n}\n";
+        assert!(findings("serve/batcher.rs", test_only).is_empty());
+        // Not a serve/kernels file: out of scope.
+        assert!(findings("experiment/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn float_reassoc_flags_iterator_reductions_in_kernel_files() {
+        let src = "fn f(d: &[f32]) -> f32 { d.iter().sum() }\n";
+        assert_eq!(rules_of(&findings("kernels/gemm.rs", src)), vec!["float-reassoc"]);
+        let turbofish = "fn f(d: &[f32]) -> f32 { d.iter().sum::<f32>() }\n";
+        assert_eq!(rules_of(&findings("kernels/packed.rs", turbofish)), vec!["float-reassoc"]);
+        let fold = "fn f(d: &[f32]) -> f32 { d.iter().fold(0.0, |a, b| a + b) }\n";
+        assert_eq!(rules_of(&findings("kernels/gemm.rs", fold)), vec!["float-reassoc"]);
+        // Explicit loop form is the sanctioned idiom.
+        let explicit = "fn f(d: &[f32]) -> f32 { let mut a = 0.0; for &x in d { a += x; } a }\n";
+        assert!(findings("kernels/gemm.rs", explicit).is_empty());
+        // Other modules may reduce freely.
+        assert!(findings("stats/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn stdout_discipline_allows_main_cli_eprintln_and_tests() {
+        let src = "fn f() { println!(\"x\"); }\n";
+        assert_eq!(rules_of(&findings("serve/engine.rs", src)), vec!["stdout-discipline"]);
+        assert!(findings("main.rs", src).is_empty());
+        assert!(findings("cli/mod.rs", src).is_empty());
+        let stderr = "fn f() { eprintln!(\"x\"); eprint!(\"y\"); }\n";
+        assert!(findings("serve/engine.rs", stderr).is_empty());
+        let in_test = "#[cfg(test)]\nmod tests {\n  fn t() { println!(\"dbg\"); }\n}\n";
+        assert!(findings("serve/engine.rs", in_test).is_empty());
+    }
+
+    #[test]
+    fn fail_closed_flags_catches_unvalidated_subcommands() {
+        let ok = "fn validate_flags(args: &Args) -> R {\n    match sub {\n        \"run\" => {}\n    }\n    args.ensure_known_flags(sub, &[])\n}\nfn run() -> R {\n    match args.subcommand.as_deref() {\n        Some(\"run\") => cmd_run(),\n    }\n}\n";
+        assert!(findings("main.rs", ok).is_empty());
+        let ghost = ok.replace("Some(\"run\")", "Some(\"ghost\")");
+        let fs = findings("main.rs", &ghost);
+        assert_eq!(rules_of(&fs), vec!["fail-closed-flags"]);
+        assert!(fs[0].note.contains("ghost"));
+        let no_gate = ok.replace("args.ensure_known_flags(sub, &[])", "Ok(())");
+        assert_eq!(rules_of(&findings("main.rs", &no_gate)), vec!["fail-closed-flags"]);
+    }
+
+    #[test]
+    fn rule_names_are_sorted_and_nonempty() {
+        assert!(!RULES.is_empty());
+        let mut sorted = RULES.to_vec();
+        sorted.sort_unstable();
+        assert_eq!(sorted, RULES);
+    }
+}

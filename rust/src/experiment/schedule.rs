@@ -161,7 +161,7 @@ pub fn execute(spec: &ExperimentSpec, opts: &ExecOptions) -> crate::Result<ExecO
     };
     let (n_pending, n_completed) = (pending.len(), completed.len());
     if opts.progress {
-        println!(
+        crate::info!(
             "exp \"{}\": {} cells over {} model(s) — {} pending, {} resumed, workers={}",
             spec.name,
             the_plan.runs.len(),
@@ -235,7 +235,7 @@ pub fn execute(spec: &ExperimentSpec, opts: &ExecOptions) -> crate::Result<ExecO
                 let rec = co.run_one(key.method, key.budget_frac, key.seed)?;
                 if opts.progress {
                     let n = done.fetch_add(1, Ordering::SeqCst) + 1;
-                    println!(
+                    crate::info!(
                         "[{n}/{n_pending}] {}  metric {:.4}  loss {:.4}  {:.1}s",
                         key.label(),
                         rec.metric,

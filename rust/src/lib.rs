@@ -55,6 +55,7 @@
 //! [`tensor`], [`cli`], [`bench`], [`prop`], [`ckpt`]) are built from
 //! scratch — the default build has **no external dependencies** at all.
 
+pub mod analysis;
 pub mod backend;
 pub mod bench;
 pub mod ckpt;

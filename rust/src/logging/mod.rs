@@ -130,7 +130,7 @@ fn filter() -> &'static Filter {
 /// the `MPQ_LOG` default).  Per-module targets may still differ — see
 /// [`enabled`].
 pub fn level() -> u8 {
-    let o = OVERRIDE.load(Ordering::Relaxed);
+    let o = OVERRIDE.load(Ordering::Relaxed); // relaxed-ok: single u8 level flag; no data is guarded by it
     if o != 0 {
         return o;
     }
@@ -140,12 +140,12 @@ pub fn level() -> u8 {
 /// Force the log level globally (tests, CLI flags).  Overrides both the
 /// `MPQ_LOG` default and its per-target entries.
 pub fn set_level(l: u8) {
-    OVERRIDE.store(l, Ordering::Relaxed);
+    OVERRIDE.store(l, Ordering::Relaxed); // relaxed-ok: single u8 level flag; no data is guarded by it
 }
 
 /// Is `lvl` enabled for `module`?
 pub fn enabled(lvl: u8, module: &str) -> bool {
-    let o = OVERRIDE.load(Ordering::Relaxed);
+    let o = OVERRIDE.load(Ordering::Relaxed); // relaxed-ok: single u8 level flag; no data is guarded by it
     if o != 0 {
         return lvl <= o;
     }

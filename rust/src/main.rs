@@ -227,6 +227,8 @@ fn validate_flags(args: &Args) -> mpq::Result<()> {
         "infer" => &["method", "budget", "bits-from", "seed", "samples", "index"],
         // Offline trace validation: no model, no backend — just the file.
         "trace" => return args.ensure_known_flags(sub, &["file"]),
+        // Static analysis: no model, no backend — a source tree + waivers.
+        "lint" => return args.ensure_known_flags(sub, &["root", "json", "waivers"]),
         // Manifest-driven: tuning knobs belong in the manifest, so only
         // the orchestration flags are accepted.
         "exp" => return args.ensure_known_flags(sub, &["manifest", "workers", "backend"]),
@@ -251,6 +253,7 @@ fn run() -> mpq::Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("infer") => cmd_infer(&args),
         Some("trace") => cmd_trace(&args),
+        Some("lint") => cmd_lint(&args),
         Some("report") => cmd_report(&args),
         Some("eagl") => cmd_eagl(&args),
         other => {
@@ -343,6 +346,13 @@ subcommands:
               kernels)
   trace       --file trace.json   validate a --trace-out / GET /trace file:
               complete span sets per request, monotone timestamps
+  lint        [--root rust/src] [--json] [--waivers F]   repo-aware static
+              analysis: wall-clock, relaxed-audit, hot-path-panic,
+              float-reassoc, stdout-discipline, fail-closed-flags (see
+              rust/README.md §Static analysis); waivers default to
+              rust/lint-waivers.json, parsed fail-closed (unknown keys and
+              stale waivers are errors); exit 0 clean / 1 findings / 2
+              config error
   eagl        --model M [--ckpt P]          offline EAGL metric (Fig. 2)
 
 backends: --backend sim|pjrt|auto (default auto).  sim = hermetic pure-Rust
@@ -793,6 +803,36 @@ fn cmd_trace(args: &Args) -> mpq::Result<()> {
         chk.stages.len(),
         chk.ctl_events
     );
+    Ok(())
+}
+
+/// `mpq lint`: the repo-aware static analysis pass (see
+/// `mpq::analysis`).  Exit codes are pinned — 0 clean, 1 findings, 2
+/// configuration error (bad waiver file, stale waiver, wrong --root) —
+/// so `make lint` and CI can distinguish "invariant violated" from
+/// "the linter itself is misconfigured".
+fn cmd_lint(args: &Args) -> mpq::Result<()> {
+    let root = args.str("root", "rust/src");
+    let root = Path::new(&root);
+    let result = match args.opt_str("waivers") {
+        Some(w) => mpq::analysis::run_with(root, Some(Path::new(w))),
+        None => mpq::analysis::run(root),
+    };
+    let report = match result {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("lint: config error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    if args.bool("json") {
+        println!("{}", report.to_json().to_string_compact());
+    } else {
+        print!("{}", report.render_text());
+    }
+    if !report.findings.is_empty() {
+        std::process::exit(1);
+    }
     Ok(())
 }
 

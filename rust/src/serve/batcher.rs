@@ -228,7 +228,25 @@ impl Pending {
             st.classes = classes;
             st.logits.resize(self.samples * classes, 0.0);
         }
-        debug_assert_eq!(st.classes, classes);
+        // A backend returning wrong-shaped logits (class-count drift
+        // across chunks, a short row block, an offset past the request)
+        // would panic the slice below inside a worker thread and strand
+        // the ticket — fail the request cleanly instead.
+        if st.classes != classes
+            || rows.len() != len * classes
+            || (offset + len) * classes > st.logits.len()
+        {
+            let err = crate::err!(
+                "serve request {}: chunk shape mismatch (offset {offset}, len {len}, \
+                 classes {classes}, {} logit row value(s)) against {} classes x {} sample(s)",
+                self.id,
+                rows.len(),
+                st.classes,
+                self.samples
+            );
+            self.finish(&mut st, Err(err));
+            return;
+        }
         let t_asm = self.trace.as_ref().map(|rt| rt.now_ns());
         st.logits[offset * classes..(offset + len) * classes].copy_from_slice(rows);
         if let (Some(rt), Some(t0)) = (&self.trace, t_asm) {
@@ -421,7 +439,11 @@ impl BatchQueue {
         if !ready {
             return NextBatch::Wait(deadline);
         }
-        let first = self.queue.pop_front().unwrap();
+        let Some(first) = self.queue.pop_front() else {
+            // Unreachable given the front() check above, but a panic
+            // here would take a worker thread down with the queue lock.
+            return NextBatch::Idle;
+        };
         let epoch = first.pending.epoch();
         let mut total = first.len;
         let mut batch = vec![first];
@@ -430,7 +452,10 @@ impl BatchQueue {
                 break;
             }
             total += next.len;
-            batch.push(self.queue.pop_front().unwrap());
+            match self.queue.pop_front() {
+                Some(next) => batch.push(next),
+                None => break,
+            }
         }
         self.queued_samples = self.queued_samples.saturating_sub(total);
         NextBatch::Ready(batch)
@@ -609,6 +634,34 @@ mod tests {
         p.complete_chunk(0, 2, 2, &[0.1, 0.2, 0.3, 0.4]);
         let err = t.wait().unwrap_err().to_string();
         assert!(err.contains("label 9 out of range"), "{err}");
+    }
+
+    #[test]
+    fn chunk_shape_mismatch_fails_cleanly_instead_of_panicking() {
+        // Class-count drift between chunks of one request: chunk 1
+        // reports 2 classes, chunk 2 reports 3.  Pre-fix this was a
+        // debug_assert + slice panic in a worker thread; now the ticket
+        // resolves with an error.
+        let p = pending(11, 4, 2);
+        let t = p.ticket();
+        p.complete_chunk(0, 2, 2, &[0.0; 4]);
+        p.complete_chunk(2, 2, 3, &[0.0; 6]);
+        let err = t.wait().unwrap_err().to_string();
+        assert!(err.contains("chunk shape mismatch"), "{err}");
+
+        // A short logit block from the backend must fail the same way.
+        let p = pending(12, 2, 1);
+        let t = p.ticket();
+        p.complete_chunk(0, 2, 2, &[0.0; 3]); // needs 4 values
+        let err = t.wait().unwrap_err().to_string();
+        assert!(err.contains("chunk shape mismatch"), "{err}");
+
+        // An offset past the request's sample count must fail too.
+        let p = pending(13, 2, 1);
+        let t = p.ticket();
+        p.complete_chunk(2, 2, 2, &[0.0; 4]); // rows 2..4 of a 2-sample request
+        let err = t.wait().unwrap_err().to_string();
+        assert!(err.contains("chunk shape mismatch"), "{err}");
     }
 
     #[test]

@@ -480,7 +480,8 @@ pub fn run_degrade(
             let Some(front) = simq.front_mut() else { break };
             if front.1 <= cap {
                 cap -= front.1;
-                let (arrived, _) = simq.pop_front().unwrap();
+                let arrived = front.0;
+                let _ = simq.pop_front();
                 window.push_back((tick, tick - arrived + 1));
             } else {
                 front.1 -= cap;

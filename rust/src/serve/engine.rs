@@ -266,7 +266,7 @@ impl Engine {
                 budget_frac,
                 label: label.to_string(),
             });
-            self.shared.swap_total.fetch_add(1, Ordering::Relaxed);
+            self.shared.swap_total.fetch_add(1, Ordering::Relaxed); // relaxed-ok: incremented under the queue mutex; the lock provides ordering
             epoch
         };
         // Wake parked workers so an under-full pre-swap batch is not the
@@ -287,7 +287,7 @@ impl Engine {
             epoch: q.active.epoch,
             budget_frac: q.active.budget_frac,
             label: q.active.label.clone(),
-            swap_total: self.shared.swap_total.load(Ordering::Relaxed),
+            swap_total: self.shared.swap_total.load(Ordering::Relaxed), // relaxed-ok: read under the queue mutex; see the swap_total increment
         }
     }
 
@@ -679,6 +679,20 @@ fn execute_fused(sh: &Shared, ep: &EpochState, be: &mut Box<dyn Backend>, batch:
         Ok(logits) => {
             let classes = logits.shape.get(1).copied().unwrap_or(1);
             let ls = logits.f32s();
+            // A backend returning a wrong-sized logit tensor would panic
+            // the per-chunk slices below on this worker thread, stranding
+            // every ticket in the batch — fail them cleanly instead.
+            if ls.len() != total * classes {
+                let msg = format!(
+                    "infer_step returned {} logit value(s) for {total} sample(s) x \
+                     {classes} class(es)",
+                    ls.len()
+                );
+                for c in batch {
+                    c.pending.fail(&msg);
+                }
+                return;
+            }
             let mut off = 0usize;
             for c in batch {
                 c.pending.complete_chunk(

@@ -193,7 +193,7 @@ struct HttpStats {
 
 macro_rules! bump {
     ($sh:expr, $field:ident) => {
-        $sh.stats.$field.fetch_add(1, Ordering::Relaxed)
+        $sh.stats.$field.fetch_add(1, Ordering::Relaxed) // relaxed-ok: monotone stats counter; snapshot reads tolerate tearing
     };
 }
 
@@ -222,7 +222,7 @@ struct HttpShared {
 impl HttpShared {
     /// Try to take one admission permit.
     fn try_admit(&self) -> bool {
-        let mut cur = self.inflight.load(Ordering::Relaxed);
+        let mut cur = self.inflight.load(Ordering::Relaxed); // relaxed-ok: optimistic first read of a CAS loop; failure path re-reads
         loop {
             if cur >= self.cfg.queue_capacity {
                 return false;
@@ -231,7 +231,7 @@ impl HttpShared {
                 cur,
                 cur + 1,
                 Ordering::AcqRel,
-                Ordering::Relaxed,
+                Ordering::Relaxed, // relaxed-ok: CAS failure ordering; the retry loop re-reads the current value
             ) {
                 Ok(_) => return true,
                 Err(now) => cur = now,
@@ -246,15 +246,15 @@ impl HttpShared {
     fn stats_snapshot(&self) -> HttpStatsSnapshot {
         let s = &self.stats;
         HttpStatsSnapshot {
-            connections: s.connections.load(Ordering::Relaxed),
-            admitted: s.admitted.load(Ordering::Relaxed),
-            rejected: s.rejected.load(Ordering::Relaxed),
-            answered: s.answered.load(Ordering::Relaxed),
-            failed: s.failed.load(Ordering::Relaxed),
-            aborted: s.aborted.load(Ordering::Relaxed),
-            bad_requests: s.bad_requests.load(Ordering::Relaxed),
-            metrics_scrapes: s.metrics_scrapes.load(Ordering::Relaxed),
-            inflight: self.inflight.load(Ordering::Relaxed) as u64,
+            connections: s.connections.load(Ordering::Relaxed), // relaxed-ok: stats snapshot; per-field staleness acceptable
+            admitted: s.admitted.load(Ordering::Relaxed), // relaxed-ok: stats snapshot; per-field staleness acceptable
+            rejected: s.rejected.load(Ordering::Relaxed), // relaxed-ok: stats snapshot; per-field staleness acceptable
+            answered: s.answered.load(Ordering::Relaxed), // relaxed-ok: stats snapshot; per-field staleness acceptable
+            failed: s.failed.load(Ordering::Relaxed), // relaxed-ok: stats snapshot; per-field staleness acceptable
+            aborted: s.aborted.load(Ordering::Relaxed), // relaxed-ok: stats snapshot; per-field staleness acceptable
+            bad_requests: s.bad_requests.load(Ordering::Relaxed), // relaxed-ok: stats snapshot; per-field staleness acceptable
+            metrics_scrapes: s.metrics_scrapes.load(Ordering::Relaxed), // relaxed-ok: stats snapshot; per-field staleness acceptable
+            inflight: self.inflight.load(Ordering::Relaxed) as u64, // relaxed-ok: gauge snapshot for reporting only
         }
     }
 }
@@ -404,24 +404,24 @@ fn accept_loop(
             Ok((mut stream, _peer)) => {
                 bump!(sh, connections);
                 let _ = stream.set_nonblocking(false);
-                if sh.active_conns.load(Ordering::Relaxed) >= sh.cfg.max_conns {
+                if sh.active_conns.load(Ordering::Relaxed) >= sh.cfg.max_conns { // relaxed-ok: advisory connection cap; a racing accept may overshoot by one harmlessly
                     bump!(sh, rejected);
                     let body = error_body("connection limit reached");
                     let _ = write_response(&mut stream, 503, "application/json", &body, true, true);
                     continue;
                 }
-                sh.active_conns.fetch_add(1, Ordering::Relaxed);
+                sh.active_conns.fetch_add(1, Ordering::Relaxed); // relaxed-ok: connection gauge; guards only the advisory cap above
                 let sh2 = Arc::clone(&sh);
                 let spawned = std::thread::Builder::new()
                     .name("mpq-http-conn".to_string())
                     .spawn(move || {
                         handle_conn(&sh2, stream);
-                        sh2.active_conns.fetch_sub(1, Ordering::Relaxed);
+                        sh2.active_conns.fetch_sub(1, Ordering::Relaxed); // relaxed-ok: connection gauge decrement; thread join is not ordered on it
                     });
                 match spawned {
                     Ok(h) => conns.lock().unwrap().push(h),
                     Err(_) => {
-                        sh.active_conns.fetch_sub(1, Ordering::Relaxed);
+                        sh.active_conns.fetch_sub(1, Ordering::Relaxed); // relaxed-ok: connection gauge rollback on spawn failure
                     }
                 }
             }

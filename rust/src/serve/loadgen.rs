@@ -355,7 +355,7 @@ pub fn run_http(addr: &str, spec: &LoadSpec) -> crate::Result<LoadReport> {
                                         ));
                                         return;
                                     }
-                                    retried.fetch_add(1, Ordering::Relaxed);
+                                    retried.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotone retry counter; read only after the worker scope joins
                                 }
                                 // Reconnect when the server retired the
                                 // connection and this client still has
@@ -461,7 +461,7 @@ pub fn run_http(addr: &str, spec: &LoadSpec) -> crate::Result<LoadReport> {
         spec,
         wall_s,
         responses.into_inner().unwrap(),
-        retried.load(Ordering::Relaxed),
+        retried.load(Ordering::Relaxed), // relaxed-ok: the scope join provides the happens-before for this read
     )
 }
 
@@ -517,7 +517,12 @@ fn finalize(
     for w in ids.windows(2) {
         crate::ensure!(w[0] < w[1], "loadgen: duplicate response id {}", w[1]);
     }
-    let span = ids.last().unwrap() - ids.first().unwrap() + 1;
+    // `ids` can only be empty when `spec.requests == 0` (a degenerate
+    // spec the CLI never builds) — report it instead of panicking.
+    let (Some(&first), Some(&last)) = (ids.first(), ids.last()) else {
+        crate::bail!("loadgen: no responses recorded (requests = {})", spec.requests);
+    };
+    let span = last - first + 1;
     crate::ensure!(
         span == spec.requests as u64,
         "loadgen: response ids not contiguous ({} ids over a span of {span})",
@@ -609,6 +614,20 @@ mod tests {
             "{\"epoch\":0,\"index\":0,\"latency_ns\":500000,\"samples\":3}\n\
              {\"epoch\":1,\"index\":1,\"latency_ns\":2000000,\"samples\":1}\n"
         );
+    }
+
+    #[test]
+    fn finalize_with_zero_requests_errors_instead_of_panicking() {
+        let spec = LoadSpec {
+            requests: 0,
+            max_request_samples: 4,
+            seed: 1,
+            mode: LoadMode::Closed { concurrency: 1 },
+        };
+        let err = finalize(&spec, 0.5, Vec::new(), 0)
+            .expect_err("empty response set must be reported, not unwrapped");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("no responses recorded"), "unexpected error: {msg}");
     }
 
     #[test]

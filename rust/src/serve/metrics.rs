@@ -78,30 +78,30 @@ impl Metrics {
     }
 
     pub fn record_submitted(&self) {
-        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.submitted.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotone counter; snapshot tearing acceptable
     }
 
     /// One request completed successfully after `latency`.
     pub fn record_request(&self, samples: u64, latency: std::time::Duration) {
         let ns = latency.as_nanos().min(u64::MAX as u128) as u64;
-        self.completed.fetch_add(1, Ordering::Relaxed);
-        self.samples.fetch_add(samples, Ordering::Relaxed);
-        self.lat_sum_ns.fetch_add(ns, Ordering::Relaxed);
-        self.lat_min_ns.fetch_min(ns, Ordering::Relaxed);
-        self.lat_max_ns.fetch_max(ns, Ordering::Relaxed);
-        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.completed.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotone counter; snapshot tearing acceptable
+        self.samples.fetch_add(samples, Ordering::Relaxed); // relaxed-ok: monotone counter; snapshot tearing acceptable
+        self.lat_sum_ns.fetch_add(ns, Ordering::Relaxed); // relaxed-ok: monotone latency sum; snapshot tearing acceptable
+        self.lat_min_ns.fetch_min(ns, Ordering::Relaxed); // relaxed-ok: running min; commutative update needs no ordering
+        self.lat_max_ns.fetch_max(ns, Ordering::Relaxed); // relaxed-ok: running max; commutative update needs no ordering
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotone histogram bucket; snapshot tearing acceptable
     }
 
     pub fn record_failed(&self) {
-        self.failed.fetch_add(1, Ordering::Relaxed);
+        self.failed.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotone counter; snapshot tearing acceptable
     }
 
     /// One micro-batch dispatched to a worker: `chunks` request chunks
     /// totalling `samples` samples.
     pub fn record_batch(&self, chunks: u64, samples: u64) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.batch_chunks.fetch_add(chunks, Ordering::Relaxed);
-        self.batch_samples.fetch_add(samples, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotone batch counter; snapshot tearing acceptable
+        self.batch_chunks.fetch_add(chunks, Ordering::Relaxed); // relaxed-ok: monotone batch counter; snapshot tearing acceptable
+        self.batch_samples.fetch_add(samples, Ordering::Relaxed); // relaxed-ok: monotone batch counter; snapshot tearing acceptable
     }
 
     /// Latency quantile (`q` in [0,1]) from the histogram; NaN when no
@@ -115,32 +115,32 @@ impl Metrics {
     /// subtract a previous snapshot element-wise and feed the delta to
     /// [`quantile_from_counts`].
     pub fn latency_buckets(&self) -> Vec<u64> {
-        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect() // relaxed-ok: reporting-only bucket loads; staleness acceptable
     }
 
     /// Consistent point-in-time view (individual counters are relaxed, so
     /// a snapshot taken mid-flight can be off by in-flight requests; after
     /// [`crate::serve::Engine::drain`] it is exact).
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
-        let completed = self.completed.load(Ordering::Relaxed);
-        let sum_ns = self.lat_sum_ns.load(Ordering::Relaxed);
-        let min_ns = self.lat_min_ns.load(Ordering::Relaxed);
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(); // relaxed-ok: reporting-only bucket loads; staleness acceptable
+        let completed = self.completed.load(Ordering::Relaxed); // relaxed-ok: reporting-only snapshot load; per-field tearing acceptable
+        let sum_ns = self.lat_sum_ns.load(Ordering::Relaxed); // relaxed-ok: reporting-only snapshot load; per-field tearing acceptable
+        let min_ns = self.lat_min_ns.load(Ordering::Relaxed); // relaxed-ok: reporting-only snapshot load; per-field tearing acceptable
         MetricsSnapshot {
-            submitted: self.submitted.load(Ordering::Relaxed),
+            submitted: self.submitted.load(Ordering::Relaxed), // relaxed-ok: reporting-only snapshot load; per-field tearing acceptable
             completed,
-            failed: self.failed.load(Ordering::Relaxed),
-            samples: self.samples.load(Ordering::Relaxed),
-            batches: self.batches.load(Ordering::Relaxed),
-            batch_chunks: self.batch_chunks.load(Ordering::Relaxed),
-            batch_samples: self.batch_samples.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed), // relaxed-ok: reporting-only snapshot load; per-field tearing acceptable
+            samples: self.samples.load(Ordering::Relaxed), // relaxed-ok: reporting-only snapshot load; per-field tearing acceptable
+            batches: self.batches.load(Ordering::Relaxed), // relaxed-ok: reporting-only snapshot load; per-field tearing acceptable
+            batch_chunks: self.batch_chunks.load(Ordering::Relaxed), // relaxed-ok: reporting-only snapshot load; per-field tearing acceptable
+            batch_samples: self.batch_samples.load(Ordering::Relaxed), // relaxed-ok: reporting-only snapshot load; per-field tearing acceptable
             mean_latency_s: if completed > 0 {
                 sum_ns as f64 / completed as f64 / 1e9
             } else {
                 f64::NAN
             },
             min_latency_s: if min_ns == u64::MAX { f64::NAN } else { min_ns as f64 / 1e9 },
-            max_latency_s: self.lat_max_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            max_latency_s: self.lat_max_ns.load(Ordering::Relaxed) as f64 / 1e9, // relaxed-ok: reporting-only snapshot load; per-field tearing acceptable
             p50_s: self.quantile(&counts, 0.50),
             p95_s: self.quantile(&counts, 0.95),
             p99_s: self.quantile(&counts, 0.99),

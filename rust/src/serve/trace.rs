@@ -200,13 +200,13 @@ impl StageHist {
     }
 
     fn record(&self, ns: u64) {
-        self.counts[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
-        self.total.fetch_add(1, Ordering::Relaxed);
-        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.counts[bucket_index(ns)].fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotone histogram bucket; reporting reads tolerate staleness
+        self.total.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotone counter; cross-field tearing acceptable in reports
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed); // relaxed-ok: monotone sum; cross-field tearing acceptable in reports
     }
 
     fn snapshot(&self) -> Vec<u64> {
-        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect() // relaxed-ok: reporting-only snapshot; staleness acceptable
     }
 }
 
@@ -215,7 +215,7 @@ impl StageHist {
 fn thread_tag() -> u64 {
     static NEXT: AtomicU64 = AtomicU64::new(1);
     thread_local! {
-        static TAG: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+        static TAG: u64 = NEXT.fetch_add(1, Ordering::Relaxed); // relaxed-ok: unique tag allocation only; no data published through this counter
     }
     TAG.with(|t| *t)
 }
@@ -295,10 +295,10 @@ impl TraceSink {
         let mut ring = self.shards[shard].lock().unwrap();
         while ring.len() >= self.shard_cap {
             ring.pop_front();
-            self.dropped.fetch_add(1, Ordering::Relaxed);
+            self.dropped.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotone drop counter; ring contents are guarded by the shard mutex
         }
         ring.push_back(rec);
-        self.published.fetch_add(1, Ordering::Relaxed);
+        self.published.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotone publish counter; ring contents are guarded by the shard mutex
     }
 
     /// Record one controller decision.
@@ -325,18 +325,18 @@ impl TraceSink {
 
     /// Whole requests published so far (completed span sets).
     pub fn published(&self) -> u64 {
-        self.published.load(Ordering::Relaxed)
+        self.published.load(Ordering::Relaxed) // relaxed-ok: reporting-only counter load; staleness acceptable
     }
 
     /// Whole requests evicted from full rings (oldest first).
     pub fn dropped(&self) -> u64 {
-        self.dropped.load(Ordering::Relaxed)
+        self.dropped.load(Ordering::Relaxed) // relaxed-ok: reporting-only counter load; staleness acceptable
     }
 
     /// Spans recorded for `stage` (count across sampled requests,
     /// including ones later evicted from the rings).
     pub fn stage_count(&self, stage: Stage) -> u64 {
-        self.hist[stage.index()].total.load(Ordering::Relaxed)
+        self.hist[stage.index()].total.load(Ordering::Relaxed) // relaxed-ok: reporting-only counter load; staleness acceptable
     }
 
     /// Snapshot of the retained whole-request records, oldest first per
@@ -447,12 +447,12 @@ impl TraceSink {
             out.push_str(&format!(
                 "mpq_stage_latency_seconds_count{{stage=\"{}\"}} {}\n",
                 stage.name(),
-                h.total.load(Ordering::Relaxed)
+                h.total.load(Ordering::Relaxed) // relaxed-ok: render-time counter load; staleness acceptable
             ));
             out.push_str(&format!(
                 "mpq_stage_latency_seconds_sum{{stage=\"{}\"}} {}\n",
                 stage.name(),
-                h.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
+                h.sum_ns.load(Ordering::Relaxed) as f64 / 1e9 // relaxed-ok: render-time sum load; staleness acceptable
             ));
         }
     }
@@ -524,18 +524,18 @@ impl RequestSpans {
     /// Mark the admission end (= queue-wait start) and pin the serving
     /// epoch this request was admitted under.
     pub fn set_admitted(&self, t_ns: u64, epoch: u64) {
-        self.admitted_ns.store(t_ns, Ordering::Relaxed);
-        self.epoch.store(epoch, Ordering::Relaxed);
+        self.admitted_ns.store(t_ns, Ordering::Relaxed); // relaxed-ok: written at admission; the request handoff mutex orders it before reads
+        self.epoch.store(epoch, Ordering::Relaxed); // relaxed-ok: epoch pinned at admission; ordered by the request handoff mutex
     }
 
     /// Admission end timestamp (queue-wait spans start here).
     pub fn admitted_ns(&self) -> u64 {
-        self.admitted_ns.load(Ordering::Relaxed)
+        self.admitted_ns.load(Ordering::Relaxed) // relaxed-ok: read after request handoff; see set_admitted
     }
 
     /// The serving epoch pinned at admission (0 before then).
     pub fn epoch(&self) -> u64 {
-        self.epoch.load(Ordering::Relaxed)
+        self.epoch.load(Ordering::Relaxed) // relaxed-ok: read after request handoff; see set_admitted
     }
 }
 

@@ -1,0 +1,18 @@
+//! Lint fixture (never compiled): dispatch and validation agree, so
+//! `fail-closed-flags` stays quiet.
+fn validate_flags(args: &Args) -> Result<(), String> {
+    let Some(sub) = args.subcommand.as_deref() else {
+        return Ok(());
+    };
+    match sub {
+        "run" => args.ensure_known_flags(sub, &["seed"]),
+        _ => Ok(()),
+    }
+}
+
+fn run(args: &Args) -> Result<(), String> {
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(),
+        _ => Ok(()),
+    }
+}

@@ -1,0 +1,30 @@
+//! Lint fixture (never compiled): a clean serving module.  Every
+//! pattern the rules look for appears here only in a form the linter
+//! must NOT flag — literals, comments, poison-check receivers,
+//! justified orderings, stderr macros, and test-only panics.
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Mentions of Instant::now, println! and .unwrap() below live inside a
+/// string literal, which the lexer blanks before any rule runs.
+pub const DOC: &str = "Instant::now println! .unwrap() panic!";
+
+pub fn drain(q: &Mutex<VecDeque<u64>>, c: &AtomicU64) -> u64 {
+    c.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotone counter; snapshot tearing acceptable
+    let mut g = q.lock().unwrap();
+    eprintln!("draining {} entries", g.len());
+    g.pop_front().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn panics_are_fine_in_tests() {
+        let v: Option<u64> = Some(3);
+        assert_eq!(v.unwrap(), 3);
+        if v.is_none() {
+            panic!("unreachable");
+        }
+    }
+}

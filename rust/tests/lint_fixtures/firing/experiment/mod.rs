@@ -1,0 +1,5 @@
+//! Lint fixture (never compiled): progress chatter on stdout from a
+//! library module.  Trips `stdout-discipline`.
+pub fn report(n: usize) {
+    println!("done {n}");
+}

@@ -1,0 +1,5 @@
+//! Lint fixture (never compiled): an order-sensitive float reduction on
+//! a kernel decode path.  Trips `float-reassoc`.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum::<f32>()
+}

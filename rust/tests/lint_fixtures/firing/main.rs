@@ -1,0 +1,19 @@
+//! Lint fixture (never compiled): `run()` dispatches a subcommand that
+//! `validate_flags()` never validates.  Trips `fail-closed-flags`.
+fn validate_flags(args: &Args) -> Result<(), String> {
+    let Some(sub) = args.subcommand.as_deref() else {
+        return Ok(());
+    };
+    match sub {
+        "run" => args.ensure_known_flags(sub, &["seed"]),
+        _ => Ok(()),
+    }
+}
+
+fn run(args: &Args) -> Result<(), String> {
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(),
+        Some("ghost") => cmd_ghost(),
+        _ => Ok(()),
+    }
+}

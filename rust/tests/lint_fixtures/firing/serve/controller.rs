@@ -1,0 +1,8 @@
+//! Lint fixture (never compiled): a wall-clock read in a module whose
+//! outputs are contractually deterministic.  Trips `wall-clock`.
+use std::time::Instant;
+
+pub fn tick() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}

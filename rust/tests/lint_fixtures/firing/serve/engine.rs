@@ -1,0 +1,10 @@
+//! Lint fixture (never compiled): an unexplained `Ordering::Relaxed`
+//! and a request-reachable `.unwrap()`.  Trips `relaxed-audit` and
+//! `hot-path-panic`.
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn drain(q: &mut VecDeque<u64>, c: &AtomicU64) -> u64 {
+    c.fetch_add(1, Ordering::Relaxed);
+    q.pop_front().unwrap()
+}

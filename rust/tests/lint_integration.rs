@@ -1,0 +1,178 @@
+//! Integration tests for `mpq lint`: every rule fires on the seeded
+//! negative fixtures, the clean fixtures stay quiet, waivers suppress
+//! and fail closed, the `--json` report is byte-stable, the binary's
+//! exit codes are pinned (0 clean / 1 findings / 2 config error) — and
+//! the linter self-hosts: the shipped tree plus the shipped waiver file
+//! must come back finding-free.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn fixture(rel: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("lint_fixtures")
+        .join(rel)
+}
+
+#[test]
+fn firing_fixtures_trip_every_rule_exactly_once() {
+    let report = mpq::analysis::run_with(&fixture("firing"), None).unwrap();
+    assert_eq!(report.files_scanned, 5);
+    assert_eq!(report.waived, 0);
+    let mut rules: Vec<&str> = report.findings.iter().map(|f| f.rule).collect();
+    rules.sort_unstable();
+    assert_eq!(
+        rules,
+        vec![
+            "fail-closed-flags",
+            "float-reassoc",
+            "hot-path-panic",
+            "relaxed-audit",
+            "stdout-discipline",
+            "wall-clock",
+        ],
+        "each rule must fire exactly once on the firing tree: {:#?}",
+        report.findings
+    );
+    // Findings are sorted by (file, line, rule) for stable output.
+    let keys: Vec<(String, usize, &str)> = report
+        .findings
+        .iter()
+        .map(|f| (f.file.clone(), f.line, f.rule))
+        .collect();
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(keys, sorted);
+    // Spot-check anchors: the ghost subcommand and the bare unwrap.
+    assert!(report
+        .findings
+        .iter()
+        .any(|f| f.rule == "fail-closed-flags" && f.note.contains("ghost")));
+    assert!(report
+        .findings
+        .iter()
+        .any(|f| f.rule == "hot-path-panic"
+            && f.file == "serve/engine.rs"
+            && f.excerpt.contains("pop_front().unwrap()")));
+}
+
+#[test]
+fn clean_fixtures_produce_no_findings() {
+    let report = mpq::analysis::run_with(&fixture("clean"), None).unwrap();
+    assert_eq!(report.files_scanned, 2);
+    assert!(
+        report.findings.is_empty(),
+        "false positives on the clean tree: {:#?}",
+        report.findings
+    );
+}
+
+#[test]
+fn waiver_suppresses_its_finding_and_counts_it() {
+    let report =
+        mpq::analysis::run_with(&fixture("firing"), Some(&fixture("waive-wall-clock.json")))
+            .unwrap();
+    assert_eq!(report.waived, 1);
+    assert_eq!(report.findings.len(), 5);
+    assert!(report.findings.iter().all(|f| f.rule != "wall-clock"));
+}
+
+#[test]
+fn stale_waiver_is_a_config_error() {
+    let err = mpq::analysis::run_with(&fixture("firing"), Some(&fixture("waive-stale.json")))
+        .expect_err("a waiver matching nothing must fail closed");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("stale waiver"), "unexpected error: {msg}");
+    assert!(msg.contains("SystemTime::now"), "unexpected error: {msg}");
+}
+
+#[test]
+fn unknown_waiver_key_is_a_config_error() {
+    let err =
+        mpq::analysis::run_with(&fixture("firing"), Some(&fixture("waive-unknown-key.json")))
+            .expect_err("unknown waiver keys must fail closed");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unknown key"), "unexpected error: {msg}");
+    assert!(msg.contains("waivers[0].line"), "unexpected error: {msg}");
+}
+
+#[test]
+fn empty_root_is_a_config_error() {
+    let dir = std::env::temp_dir().join("mpq_lint_empty_root_fixture");
+    std::fs::create_dir_all(&dir).unwrap();
+    let err = mpq::analysis::run_with(&dir, None).expect_err("no .rs files must fail closed");
+    assert!(format!("{err:#}").contains("wrong --root?"));
+}
+
+/// The machine-readable report is part of the CLI contract: sorted
+/// keys, integer counts, the full rule list.  CI consumers parse this.
+#[test]
+fn json_report_format_is_pinned() {
+    let report = mpq::analysis::run_with(&fixture("clean"), None).unwrap();
+    assert_eq!(
+        report.to_json().to_string_compact(),
+        "{\"files_scanned\":2,\"findings\":[],\"rules\":[\"fail-closed-flags\",\
+         \"float-reassoc\",\"hot-path-panic\",\"relaxed-audit\",\"stdout-discipline\",\
+         \"wall-clock\"],\"version\":1,\"waived\":0}"
+    );
+    let report = mpq::analysis::run_with(&fixture("firing"), None).unwrap();
+    let js = report.to_json().to_string_compact();
+    assert!(js.contains("\"findings\":[{\""), "findings must serialize as objects: {js}");
+    assert!(js.contains("\"rule\":\"wall-clock\""));
+    assert!(js.contains("\"file\":\"serve/controller.rs\""));
+}
+
+/// Self-hosting gate: the shipped source tree plus the shipped waiver
+/// allowlist must be finding-free, and every shipped waiver must still
+/// be live (run_with fails closed on stale ones).
+#[test]
+fn shipped_tree_is_lint_clean_under_shipped_waivers() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let waivers = Path::new(env!("CARGO_MANIFEST_DIR")).join("lint-waivers.json");
+    let report = mpq::analysis::run_with(&src, Some(&waivers)).unwrap();
+    assert!(
+        report.findings.is_empty(),
+        "shipped tree has unwaived findings: {:#?}",
+        report.findings
+    );
+    assert!(report.waived > 0, "the shipped waiver file should be doing work");
+    assert!(report.files_scanned > 30, "suspiciously small scan: {}", report.files_scanned);
+}
+
+fn lint_cmd(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_mpq"))
+        .arg("lint")
+        .args(args)
+        .output()
+        .expect("spawn mpq lint")
+}
+
+#[test]
+fn binary_exit_codes_are_pinned() {
+    let firing = fixture("firing");
+    let clean = fixture("clean");
+    let firing = firing.to_str().unwrap();
+    let clean = clean.to_str().unwrap();
+
+    // 0: clean tree, human output ends with the OK line.
+    let out = lint_cmd(&["--root", clean]);
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("lint OK (2 files"));
+
+    // 1: findings present; --json puts the report on stdout.
+    let out = lint_cmd(&["--root", firing, "--json"]);
+    assert_eq!(out.status.code(), Some(1));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.starts_with("{\"files_scanned\":5,"), "stdout: {stdout}");
+
+    // 2: config error (stale waiver), reported on stderr.
+    let stale = fixture("waive-stale.json");
+    let out = lint_cmd(&["--root", firing, "--waivers", stale.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("lint: config error"));
+
+    // 2: unknown flags fail closed at the CLI layer too.
+    let out = lint_cmd(&["--root", clean, "--bogus-flag", "1"]);
+    assert_ne!(out.status.code(), Some(0));
+}

@@ -424,3 +424,69 @@ fn submit_validates_requests_and_rejects_after_fatal_shapes() {
     assert_eq!(r.samples, 2);
     eng.drain().unwrap();
 }
+
+/// A backend that mimics a buggy accelerator: it delegates everything to
+/// the sim backend but truncates `infer_step`'s logit tensor by one row,
+/// so the engine receives fewer logits than the batch has samples.
+struct TruncatingBackend(SimBackend);
+
+impl Backend for TruncatingBackend {
+    fn kind(&self) -> &'static str {
+        self.0.kind()
+    }
+
+    fn manifest(&self) -> &mpq::backend::Manifest {
+        self.0.manifest()
+    }
+
+    fn init_checkpoint(&self) -> mpq::Result<Checkpoint> {
+        self.0.init_checkpoint()
+    }
+
+    fn execute(&mut self, entry: &str, args: &[&Tensor]) -> mpq::Result<Vec<Tensor>> {
+        let mut out = self.0.execute(entry, args)?;
+        if entry == "infer_step" {
+            if let Some(logits) = out.pop() {
+                let classes = logits.shape.get(1).copied().unwrap_or(1);
+                let rows = logits.shape.first().copied().unwrap_or(0);
+                let keep = rows.saturating_sub(1);
+                let vals = logits.f32s()[..keep * classes].to_vec();
+                out.push(Tensor::from_f32(&[keep, classes], vals));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[test]
+fn short_logit_tensor_from_backend_fails_requests_instead_of_panicking() {
+    // Pre-fix, a wrong-sized logit tensor panicked the per-chunk slice in
+    // execute_fused on a worker thread, stranding every ticket in the
+    // batch behind a wait() that never resolves.  Now the whole batch
+    // fails cleanly and the engine keeps serving.
+    let (ck, bits, data) = setup();
+    let eng = Engine::start(
+        Arc::new(|| {
+            Ok(Box::new(TruncatingBackend(SimBackend::new(MODEL)?)) as Box<dyn Backend>)
+        }),
+        ck,
+        bits,
+        ServeConfig {
+            workers: 1,
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(1),
+            warmup: false,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let (x, y) = data.batch(Split::Eval, 700, 3);
+    let err = eng.submit(x, y).unwrap().wait().unwrap_err().to_string();
+    assert!(
+        err.contains("infer_step returned"),
+        "expected the short-logits error, got: {err}"
+    );
+    let snap = eng.drain().unwrap();
+    assert_eq!(snap.failed, 1);
+    assert_eq!(snap.completed, 0);
+}
